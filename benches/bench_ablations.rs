@@ -1,0 +1,104 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//! (a) activation policy: HyperOffload's pooled offload+recompute vs
+//!     classic √L checkpointing;
+//! (b) resharding: training→inference layout transitions and the RL
+//!     actor weight sync, supernode vs legacy fabric;
+//! (c) collective algorithm choice: full-mesh direct vs forcing ring.
+
+use hyperparallel::collectives;
+use hyperparallel::graph::CollectiveKind;
+use hyperparallel::hyperoffload::{plan_recompute, sqrt_checkpointing, LayerActs, RecomputeConfig};
+use hyperparallel::hypershard::{
+    actor_weight_sync_time, plan_reshard, reshard_time, Layout, MapDim,
+};
+use hyperparallel::supernode::{DeviceId, Topology};
+use hyperparallel::util::bench::section;
+use hyperparallel::util::stats::{fmt_bytes, fmt_secs, render_table};
+
+fn main() {
+    // --- (a) activation policy ablation ---------------------------------
+    section("ablation A: activation policy (llama-8b-like, 32 layers)");
+    let layers: Vec<LayerActs> = (0..32)
+        .map(|_| LayerActs {
+            bytes: 2 << 30,
+            recompute_flops: 30e12,
+        })
+        .collect();
+    println!(
+        "{:>14} {:>22} {:>22}",
+        "HBM budget", "hyperoffload overhead", "sqrt-ckpt overhead"
+    );
+    for budget_gib in [8u64, 16, 32, 48, 64] {
+        let cfg = RecomputeConfig {
+            hbm_budget: budget_gib << 30,
+            pool_bw: 200e9,
+            compute_flops: 150e12,
+            overlap: 0.9,
+        };
+        let ours = plan_recompute(&layers, &cfg);
+        let sqrt = sqrt_checkpointing(&layers, &cfg);
+        println!(
+            "{:>14} {:>22} {:>22}",
+            fmt_bytes(budget_gib << 30),
+            fmt_secs(ours.overhead_s),
+            fmt_secs(sqrt.overhead_s)
+        );
+    }
+
+    // --- (b) resharding ----------------------------------------------------
+    section("ablation B: resharding (train layout -> inference layout)");
+    let l = Layout::new(&[4, 8], &["dp", "tp"]).unwrap();
+    let train = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+    let infer_rep = l.apply(&[MapDim::None, MapDim::None]).unwrap();
+    let infer_dp = l.apply(&[MapDim::Axis("dp"), MapDim::None]).unwrap();
+    let group: Vec<DeviceId> = (0..32).map(DeviceId).collect();
+    let w = 16e9; // 8B params bf16
+    let cases = [
+        ("tp-shard -> replicated", plan_reshard(&train, &infer_rep)),
+        ("tp-shard -> dp-shard", plan_reshard(&train, &infer_dp)),
+        ("replicated -> dp-shard", plan_reshard(&infer_rep, &infer_dp)),
+    ];
+    let sn = Topology::matrix384();
+    let lg = Topology::legacy_cluster(8);
+    let mut rows = Vec::new();
+    for (name, plan) in &cases {
+        let steps: Vec<String> = plan.steps.iter().map(|s| s.kind.name().to_string()).collect();
+        rows.push(vec![
+            name.to_string(),
+            steps.join(" + "),
+            fmt_secs(reshard_time(plan, &sn, &group, w, 8)),
+            fmt_secs(reshard_time(plan, &lg, &group, w, 8)),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(&["transition", "collectives", "supernode", "legacy"], &rows)
+    );
+
+    section("ablation B2: RL actor weight sync (16-way learner, 3 actor groups)");
+    let learner: Vec<DeviceId> = (0..16).map(DeviceId).collect();
+    let actors: Vec<Vec<DeviceId>> = (1..4)
+        .map(|g| (g * 16..(g + 1) * 16).map(DeviceId).collect())
+        .collect();
+    for (name, topo) in [("supernode", &sn), ("legacy", &lg)] {
+        let t = actor_weight_sync_time(topo, &learner, &actors, w, 16);
+        println!("  {name:<12} {}", fmt_secs(t));
+    }
+
+    // --- (c) collective algorithm choice -----------------------------------
+    section("ablation C: algorithm choice on the supernode (64-rank, 128 MiB)");
+    let g64: Vec<DeviceId> = (0..64).map(DeviceId).collect();
+    for kind in [
+        CollectiveKind::AllReduce,
+        CollectiveKind::AllGather,
+        CollectiveKind::AllToAll,
+    ] {
+        let c = collectives::cost(&sn, kind, 128e6, &g64);
+        println!(
+            "  {:<14} chosen {:?}: {}",
+            kind.name(),
+            c.algorithm,
+            fmt_secs(c.time)
+        );
+    }
+}

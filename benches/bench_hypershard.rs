@@ -1,0 +1,133 @@
+//! E1 + E2 + E10 — HyperShard: Tables 1 and 2 plus the
+//! strategy-tuning-time claim (§3.4: new-algorithm parallelization
+//! < 1 day, tuning days → hours; here the search is a cost-model sweep
+//! measured in microseconds).
+
+use hyperparallel::config::{ModelDesc, ModelFamily};
+use hyperparallel::hypershard::{dimensions_for, plan, Layout, MapDim, PlannerConfig};
+use hyperparallel::supernode::{DeviceSpec, Fabric, Geometry, Topology};
+use hyperparallel::util::bench::{run, section};
+use hyperparallel::util::stats::render_table;
+
+fn main() {
+    // --- Table 1 ----------------------------------------------------------
+    section("E1 (Table 1): strategies by model");
+    let rows: Vec<Vec<String>> = [
+        (ModelFamily::DenseTransformer, "DP, PP, TP, SP"),
+        (ModelFamily::SparseMoe, "DP, PP, TP, SP, EP"),
+        (ModelFamily::Diffusion, "DP, FSDP"),
+        (ModelFamily::LongSequence, "SP, CP"),
+        (ModelFamily::Rl, "MPMD"),
+    ]
+    .iter()
+    .map(|(f, paper)| {
+        vec![
+            f.name().to_string(),
+            paper.to_string(),
+            dimensions_for(*f).join(", "),
+        ]
+    })
+    .collect();
+    print!(
+        "{}",
+        render_table(&["Model & Algorithm", "Paper strategy", "Ours"], &rows)
+    );
+
+    // --- Table 2 ----------------------------------------------------------
+    section("E2 (Table 2): strategies by cluster (auto-planned)");
+    let cfg = PlannerConfig {
+        allow_offload: true,
+        max_tp: 16, // the paper's Table 2 considers TP degrees up to 16
+        ..Default::default()
+    };
+    let mk = |racks, boards, dies, fabric: Fabric, spec: DeviceSpec| {
+        Topology::new(
+            Geometry {
+                racks,
+                boards_per_rack: boards,
+                dies_per_board: dies,
+            },
+            fabric,
+            spec,
+        )
+    };
+    let cases: Vec<(&str, &str, Topology, ModelDesc)> = vec![
+        (
+            "Single machine (8 die)",
+            "TP8, PP for the rest",
+            mk(1, 1, 8, Fabric::supernode(), DeviceSpec::ascend_910c()),
+            ModelDesc::dense_30b(),
+        ),
+        (
+            "Single machine (16 die)",
+            "TP16, reduced PP",
+            mk(1, 2, 8, Fabric::supernode(), DeviceSpec::ascend_910c()),
+            ModelDesc::dense_50b(),
+        ),
+        (
+            "Legacy 16-die (2 servers)",
+            "(TP must stay intra-board)",
+            mk(1, 2, 8, Fabric::legacy(), DeviceSpec::a100_80g()),
+            ModelDesc::dense_50b(),
+        ),
+        (
+            "8k-die hyperplane",
+            "topology-aware TP16, reduced PP",
+            mk_topo_8k(),
+            ModelDesc::dense_50b(),
+        ),
+        (
+            "Matrix384 (MoE)",
+            "(EP over the DP dimension)",
+            Topology::matrix384(),
+            ModelDesc::deepseek_v3_like(),
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (name, paper, topo, model) in &cases {
+        let best = plan(model, topo, &cfg).into_iter().next().unwrap();
+        rows.push(vec![
+            name.to_string(),
+            paper.to_string(),
+            best.strategy.describe(),
+            format!("{:.2}s", best.step_time),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(&["Cluster", "Paper", "Planned", "Est. step"], &rows)
+    );
+
+    // --- E10: tuning-time claim --------------------------------------------
+    section("E10: strategy derivation + search wall time (paper: days -> hours)");
+    let layout = Layout::new(&[2, 4, 8], &["dp", "pp", "tp"]).unwrap();
+    run("layout derivation (Fig 6, rank-3 tensor)", 10, 1000, || {
+        std::hint::black_box(
+            layout
+                .apply(&[MapDim::Axis("dp"), MapDim::None, MapDim::Axis("tp")])
+                .unwrap()
+                .num_shards,
+        );
+    });
+    let topo = Topology::matrix384();
+    let model = ModelDesc::deepseek_v3_like();
+    run("full strategy search (moe-671b on matrix384)", 3, 50, || {
+        std::hint::black_box(plan(&model, &topo, &cfg).len());
+    });
+    let t8 = mk_topo_8k();
+    run("full strategy search (moe-671b on 8k-die hyperplane)", 1, 10, || {
+        std::hint::black_box(plan(&model, &t8, &cfg).len());
+    });
+}
+
+fn mk_topo_8k() -> Topology {
+    Topology::new(
+        Geometry {
+            racks: 128,
+            boards_per_rack: 8,
+            dies_per_board: 8,
+        },
+        Fabric::supernode(),
+        DeviceSpec::ascend_910c(),
+    )
+}

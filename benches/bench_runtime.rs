@@ -1,0 +1,75 @@
+//! Runtime hot path — PJRT execute latency and the L3 inner loops.
+//!
+//! Not a paper table: this is the §Perf harness for the performance
+//! pass (EXPERIMENTS.md §Perf). Measures artifact execution latency,
+//! literal marshalling, the real all-reduce, and the simulator's
+//! event-loop throughput.
+
+use hyperparallel::collectives::real::{all_reduce_mean, all_reduce_mean_tree};
+use hyperparallel::runtime::{literal_f32, literal_i32, Runtime};
+use hyperparallel::sim::Engine;
+use hyperparallel::util::bench::{run, section};
+use hyperparallel::util::rng::Rng;
+
+fn main() {
+    section("PJRT hot path (requires `make artifacts`)");
+    match Runtime::cpu("artifacts") {
+        Ok(mut rt) => {
+            if rt.load("kernel_demo").is_ok() {
+                let mut rng = Rng::new(1);
+                let x: Vec<f32> = (0..64 * 32).map(|_| rng.normal() as f32).collect();
+                let w1: Vec<f32> = (0..4 * 32 * 64).map(|_| rng.normal() as f32 * 0.1).collect();
+                let w2: Vec<f32> = (0..4 * 64 * 32).map(|_| rng.normal() as f32 * 0.1).collect();
+                let assign: Vec<i32> = (0..64).map(|_| rng.below(4) as i32).collect();
+                run("kernel_demo execute (64x32 MoE FFN)", 3, 30, || {
+                    let inputs = [
+                        literal_f32(&[64, 32], &x).unwrap(),
+                        literal_f32(&[4, 32, 64], &w1).unwrap(),
+                        literal_f32(&[4, 64, 32], &w2).unwrap(),
+                        literal_i32(&[64], &assign).unwrap(),
+                    ];
+                    std::hint::black_box(rt.execute("kernel_demo", &inputs).unwrap());
+                });
+                run("literal marshalling only (same payload)", 3, 100, || {
+                    std::hint::black_box(literal_f32(&[4, 32, 64], &w1).unwrap());
+                });
+            }
+        }
+        Err(e) => println!("  pjrt unavailable: {e} (run `make artifacts`)"),
+    }
+
+    section("real all-reduce (DP gradient sync)");
+    let mk = |p: usize, n: usize| -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(7);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.next_f32()).collect())
+            .collect()
+    };
+    for (p, n) in [(4, 1 << 16), (4, 1 << 20), (8, 1 << 20)] {
+        let base = mk(p, n);
+        run(&format!("all_reduce_mean naive  p={p} n={n}"), 2, 20, || {
+            let mut ranks = base.clone();
+            all_reduce_mean(&mut ranks);
+            std::hint::black_box(ranks[0][0]);
+        });
+        run(&format!("all_reduce_mean tree   p={p} n={n}"), 2, 20, || {
+            let mut ranks = base.clone();
+            all_reduce_mean_tree(&mut ranks);
+            std::hint::black_box(ranks[0][0]);
+        });
+    }
+
+    section("simulator event-loop throughput");
+    for tasks in [1_000, 10_000, 100_000] {
+        run(&format!("sim run, {tasks} chained tasks on 16 resources"), 2, 10, || {
+            let mut e = Engine::new();
+            let rs: Vec<_> = (0..16).map(|i| e.add_resource(format!("r{i}"))).collect();
+            let mut prev = None;
+            for i in 0..tasks {
+                let deps: Vec<_> = prev.iter().copied().collect();
+                prev = Some(e.add_task(rs[i % 16], 1e-6, &deps, 0));
+            }
+            std::hint::black_box(e.run().makespan);
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! E13 (Fig 1) — growth of parameter + intermediate-state complexity
+//! across model eras.
+//!
+//! The paper's Figure 1 motivates HyperOffload: the bytes of weights,
+//! gradients, optimizer moments, activations, and KV caches that a
+//! framework must place and migrate keep growing. We regenerate the
+//! figure's series from the state-accounting model.
+
+use hyperparallel::config::ModelDesc;
+use hyperparallel::memory::{StateBudget, StateKind};
+use hyperparallel::supernode::DeviceSpec;
+use hyperparallel::util::bench::section;
+use hyperparallel::util::stats::{fmt_bytes, render_table};
+
+fn main() {
+    section("E13 (Fig 1): training-state growth across model eras");
+    let eras: Vec<(&str, StateBudget)> = vec![
+        (
+            "CV small (25M)",
+            StateBudget::training(25_000_000, 50, 2048, 64, 1, false),
+        ),
+        (
+            "NLP bert-large (340M)",
+            StateBudget::training(340_000_000, 24, 1024, 32, 512, false),
+        ),
+        (
+            "LLM llama-8b",
+            ModelDesc::llama_8b().train_state(),
+        ),
+        (
+            "LLM dense-50b",
+            ModelDesc::dense_50b().train_state(),
+        ),
+        (
+            "MoE deepseek-v3-like",
+            ModelDesc::deepseek_v3_like().train_state(),
+        ),
+    ];
+
+    let hbm = DeviceSpec::ascend_910c().hbm_bytes;
+    let mut rows = Vec::new();
+    for (name, b) in &eras {
+        rows.push(vec![
+            name.to_string(),
+            fmt_bytes(b.weights),
+            fmt_bytes(b.optimizer),
+            fmt_bytes(b.activations),
+            fmt_bytes(b.total()),
+            format!("{:.1}x", b.total() as f64 / hbm as f64),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &["era / model", "weights", "optimizer", "activations", "total", "x 64GiB HBM"],
+            &rows
+        )
+    );
+
+    section("inference KV-cache growth with context length (llama-8b)");
+    let m = ModelDesc::llama_8b();
+    println!("{:>10} {:>14} {:>12}", "context", "kv bytes", "x HBM");
+    for ctx in [4_096, 32_768, 71_000, 123_000, 262_144, 1_048_576] {
+        let b = m.infer_state(ctx);
+        println!(
+            "{ctx:>10} {:>14} {:>11.2}x",
+            fmt_bytes(b.kv_cache),
+            (b.kv_cache + b.weights) as f64 / hbm as f64
+        );
+    }
+
+    section("state classes managed per era (count of live classes)");
+    for (name, b) in &eras {
+        let live: Vec<&str> = StateKind::all()
+            .into_iter()
+            .filter(|k| b.get(*k) > 0)
+            .map(|k| k.name())
+            .collect();
+        println!("  {name:<24} {}", live.join(", "));
+    }
+}

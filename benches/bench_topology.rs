@@ -1,0 +1,98 @@
+//! E4 — supernode fabric characteristics (paper §2.3).
+//!
+//! Paper: the UB supernode delivers ~15× the cross-machine bandwidth of
+//! PCIe/Ethernet clusters and cuts single-hop latency 2 µs → 200 ns
+//! (10×). We regenerate the link table and a message-size sweep on both
+//! fabrics, plus collective-cost crossovers.
+
+use hyperparallel::collectives::{cost, Algorithm};
+use hyperparallel::graph::CollectiveKind;
+use hyperparallel::supernode::{DeviceId, Fabric, LinkTier, Topology};
+use hyperparallel::util::bench::section;
+use hyperparallel::util::stats::{fmt_secs, render_table};
+
+fn main() {
+    section("E4: link tiers — paper: 15x bandwidth, 10x lower hop latency");
+    let sn = Fabric::supernode();
+    let lg = Fabric::legacy();
+    let rows: Vec<Vec<String>> = [
+        ("board", sn.board, lg.board),
+        ("rack", sn.rack, lg.rack),
+        ("cross-rack", sn.cross_rack, lg.cross_rack),
+    ]
+    .iter()
+    .map(|(name, s, l)| {
+        vec![
+            name.to_string(),
+            format!("{:.0} GB/s / {}", s.bandwidth / 1e9, fmt_secs(s.hop_latency)),
+            format!("{:.1} GB/s / {}", l.bandwidth / 1e9, fmt_secs(l.hop_latency)),
+            format!("{:.1}x / {:.0}x", s.bandwidth / l.bandwidth, l.hop_latency / s.hop_latency),
+        ]
+    })
+    .collect();
+    print!(
+        "{}",
+        render_table(&["tier", "supernode (bw/hop)", "legacy (bw/hop)", "advantage"], &rows)
+    );
+
+    section("p2p message-size sweep (cross-rack)");
+    let topo_sn = Topology::matrix384();
+    let topo_lg = Topology::legacy_cluster(48);
+    let a = DeviceId(0);
+    let b = DeviceId(100);
+    println!("{:>12} {:>14} {:>14} {:>8}", "bytes", "supernode", "legacy", "ratio");
+    for exp in [10, 14, 18, 22, 26, 30] {
+        let bytes = (1u64 << exp) as f64;
+        let ts = topo_sn.p2p_time(a, b, bytes);
+        let tl = topo_lg.p2p_time(a, b, bytes);
+        println!(
+            "{:>12} {:>14} {:>14} {:>7.1}x",
+            1u64 << exp,
+            fmt_secs(ts),
+            fmt_secs(tl),
+            tl / ts
+        );
+    }
+
+    section("collective algorithm selection (64-rank all-to-all / all-reduce)");
+    let group: Vec<DeviceId> = (0..64).map(DeviceId).collect();
+    println!(
+        "{:>12} {:>12} {:>22} {:>22}",
+        "bytes", "collective", "supernode", "legacy"
+    );
+    for (kind, bytes) in [
+        (CollectiveKind::AllReduce, 1e4),
+        (CollectiveKind::AllReduce, 1e8),
+        (CollectiveKind::AllToAll, 1e6),
+        (CollectiveKind::AllToAll, 1e8),
+        (CollectiveKind::AllGather, 1e8),
+    ] {
+        let cs = cost(&topo_sn, kind, bytes, &group);
+        let cl = cost(&topo_lg, kind, bytes, &group);
+        let alg = |a: Algorithm| match a {
+            Algorithm::Ring => "ring",
+            Algorithm::Tree => "tree",
+            Algorithm::FullMeshDirect => "mesh",
+        };
+        println!(
+            "{bytes:>12.0} {:>12} {:>15} ({:>4}) {:>15} ({:>4})",
+            kind.name(),
+            fmt_secs(cs.time),
+            alg(cs.algorithm),
+            fmt_secs(cl.time),
+            alg(cl.algorithm),
+        );
+    }
+
+    section("tier resolution sanity (matrix384 geometry)");
+    let t = &topo_sn;
+    for (a, b, expect) in [
+        (0usize, 1usize, LinkTier::Board),
+        (0, 8, LinkTier::Rack),
+        (0, 48, LinkTier::CrossRack),
+    ] {
+        let tier = t.tier_between(DeviceId(a), DeviceId(b));
+        println!("  npu{a} <-> npu{b}: {tier:?} (expected {expect:?})");
+        assert_eq!(tier, expect);
+    }
+}

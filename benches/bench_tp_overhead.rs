@@ -1,0 +1,57 @@
+//! E3 — TP communication share (paper §2.2).
+//!
+//! Paper: "the data traffic overhead of TP accounts for 52.9% training
+//! time in a typical training setting" on PCIe/Ethernet clusters —
+//! the bottleneck the supernode removes. We regenerate the fraction on
+//! both fabrics and sweep TP degree.
+
+use hyperparallel::supernode::Topology;
+use hyperparallel::trainer::scenarios::TpOverheadScenario;
+use hyperparallel::util::bench::section;
+use hyperparallel::util::stats::{fmt_secs, render_table};
+
+fn main() {
+    section("E3: TP traffic share of step time — paper: 52.9% on legacy");
+    let s = TpOverheadScenario::paper_setting();
+    let legacy = TpOverheadScenario::legacy_4die_servers();
+    let supernode = Topology::matrix384();
+
+    let (c_l, x_l, f_l) = s.measure(&legacy);
+    let (c_s, x_s, f_s) = s.measure(&supernode);
+    let rows = vec![
+        vec![
+            "legacy (PCIe/Eth)".into(),
+            fmt_secs(c_l),
+            fmt_secs(x_l),
+            format!("{:.1}%", f_l * 100.0),
+            "52.9%".into(),
+        ],
+        vec![
+            "supernode (UB)".into(),
+            fmt_secs(c_s),
+            fmt_secs(x_s),
+            format!("{:.1}%", f_s * 100.0),
+            "(removed)".into(),
+        ],
+    ];
+    print!(
+        "{}",
+        render_table(
+            &["fabric", "TP comm", "compute", "TP share", "paper"],
+            &rows
+        )
+    );
+    println!("legacy/supernode TP-share ratio: {:.1}x", f_l / f_s);
+
+    section("TP-degree sweep (share of step time)");
+    println!("{:>6} {:>12} {:>12}", "tp", "legacy", "supernode");
+    for tp in [2, 4, 8, 16, 32] {
+        let s = TpOverheadScenario {
+            tp,
+            ..TpOverheadScenario::paper_setting()
+        };
+        let (_, _, fl) = s.measure(&legacy);
+        let (_, _, fs) = s.measure(&supernode);
+        println!("{tp:>6} {:>11.1}% {:>11.1}%", fl * 100.0, fs * 100.0);
+    }
+}

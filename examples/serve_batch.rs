@@ -1,0 +1,102 @@
+//! Serving driver: load the forward artifact, serve batched inference
+//! requests through the continuous batcher, report per-request latency
+//! and aggregate throughput — batch-1 vs continuous batching.
+//!
+//! Optionally warm-starts from a short training run (`--train-steps N`)
+//! so generations come from a model that has actually learned the
+//! corpus' bigram structure.
+//!
+//! Run: `cargo run --release --example serve_batch -- --requests 16`
+
+use hyperparallel::coordinator::{InferenceRequest, InferenceServer};
+use hyperparallel::runtime::{Runtime, TrainExecutor};
+use hyperparallel::trainer::Corpus;
+use hyperparallel::util::args::Args;
+use hyperparallel::util::stats::{fmt_secs, Percentiles};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize("requests", 16);
+    let max_new = args.usize("max-new", 24);
+    let train_steps = args.usize("train-steps", 0);
+
+    let mut rt = Runtime::cpu(args.get_or("artifacts", "artifacts"))?;
+    rt.load("forward")?;
+    let manifest = rt.manifest()?;
+
+    // optionally train first so the served model is non-random
+    let trained_params = if train_steps > 0 {
+        rt.load("train_step")?;
+        let mut exec = TrainExecutor::new(manifest.clone(), 42);
+        let mut corpus = Corpus::new(manifest.vocab, 42);
+        println!("warm-starting: {train_steps} train steps ...");
+        for _ in 0..train_steps {
+            let (t, y) = corpus.batch(manifest.batch, manifest.seq);
+            exec.step(&rt, &t, &y)?;
+        }
+        Some(exec.params()[..manifest.params.len() / 2].to_vec())
+    } else {
+        None
+    };
+
+    let mk_requests = |seed: u64| -> Vec<InferenceRequest> {
+        let mut corpus = Corpus::new(manifest.vocab, seed);
+        (0..n_requests as u64)
+            .map(|id| {
+                let (prompt, _) = corpus.batch(1, 8 + (id as usize % 24));
+                InferenceRequest {
+                    id,
+                    prompt,
+                    max_new_tokens: max_new,
+                }
+            })
+            .collect()
+    };
+
+    let serve = |label: &str, batch_limit: usize| -> anyhow::Result<()> {
+        let mut srv = InferenceServer::new(manifest.clone(), 42);
+        if let Some(p) = &trained_params {
+            srv.set_params(p.clone());
+        }
+        let reqs = mk_requests(7);
+        let t0 = Instant::now();
+        let mut total_tokens = 0usize;
+        if batch_limit == 1 {
+            // serial: one request at a time
+            for r in reqs {
+                srv.submit(r);
+                total_tokens += srv.run_to_completion(&rt)?;
+            }
+        } else {
+            for r in reqs {
+                srv.submit(r);
+            }
+            total_tokens = srv.run_to_completion(&rt)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut lat = Percentiles::new();
+        for c in &srv.completions {
+            lat.add(c.latency);
+        }
+        println!(
+            "{label:<22} {:>4} reqs  {:>6} tokens  wall {:>9}  {:>7.1} tok/s  p50 {:>9}  p95 {:>9}  occupancy {:>5.1}%",
+            srv.completions.len(),
+            total_tokens,
+            fmt_secs(wall),
+            total_tokens as f64 / wall,
+            fmt_secs(lat.pct(50.0)),
+            fmt_secs(lat.pct(95.0)),
+            srv.occupancy() * 100.0
+        );
+        Ok(())
+    };
+
+    println!(
+        "serving {n_requests} requests x {max_new} new tokens (model batch={} seq={})\n",
+        manifest.batch, manifest.seq
+    );
+    serve("serial (batch=1)", 1)?;
+    serve("continuous batching", manifest.batch)?;
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX -> HLO text artifacts + manifest.
+
+Emits (to --out-dir, default ../artifacts):
+  train_step.hlo.txt   f(*params, *momenta, tokens, targets)
+                         -> (*params', *momenta', loss[1])
+  forward.hlo.txt      f(*params, tokens) -> (logits,)
+  kernel_demo.hlo.txt  the bare Pallas MoE-FFN on demo shapes (quickstart)
+  meta.json            parameter schema + model dims for the Rust runtime
+
+HLO *text*, not `.serialize()`: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (behind the `xla` crate)
+rejects; the text parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: M.ModelConfig) -> str:
+    specs = M.param_specs(cfg)
+    param_args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in specs]
+    mom_args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    fn = M.make_train_step(cfg)
+    return to_hlo_text(jax.jit(fn).lower(*param_args, *mom_args, tok, tok))
+
+
+def lower_forward(cfg: M.ModelConfig) -> str:
+    specs = M.param_specs(cfg)
+    param_args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    fn = M.make_forward(cfg)
+    return to_hlo_text(jax.jit(fn).lower(*param_args, tok))
+
+
+def lower_kernel_demo() -> str:
+    """Bare Pallas MoE-FFN: (x[64,32], w1[4,32,64], w2[4,64,32],
+    assign[64]) -> (y[64,32],) — the quickstart round-trip artifact."""
+    from compile.kernels import moe_ffn as moe_k
+
+    def demo(x, w1, w2, assign):
+        return (moe_k.moe_ffn(x, w1, w2, assign, block_t=16),)
+
+    x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    a = jax.ShapeDtypeStruct((64,), jnp.int32)
+    return to_hlo_text(jax.jit(demo).lower(x, w1, w2, a))
+
+
+def manifest(cfg: M.ModelConfig) -> dict:
+    specs = M.param_specs(cfg)
+    params = [
+        {"name": n, "shape": list(s), "init_std": std} for n, s, std in specs
+    ]
+    # momenta follow the params in the artifact argument order, zero-init
+    params += [
+        {"name": f"mom.{n}", "shape": list(s), "init_std": 0.0}
+        for n, s, _ in specs
+    ]
+    return {
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "vocab": cfg.vocab,
+        "meta": {
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "experts": cfg.experts,
+            "top_k": cfg.top_k,
+        },
+        "params": params,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--experts", type=int, default=8)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="emit only forward + demo (faster)")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig(
+        batch=args.batch,
+        seq=args.seq,
+        layers=args.layers,
+        hidden=args.hidden,
+        experts=args.experts,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def emit(name, text):
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>12,} chars -> {path}")
+
+    emit("kernel_demo.hlo.txt", lower_kernel_demo())
+    emit("forward.hlo.txt", lower_forward(cfg))
+    if not args.skip_train:
+        emit("train_step.hlo.txt", lower_train_step(cfg))
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(manifest(cfg), f, indent=1)
+    print(f"wrote manifest -> {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

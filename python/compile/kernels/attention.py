@@ -1,0 +1,94 @@
+"""Pallas kernel: blocked causal attention (flash-style).
+
+Grid over (batch*heads, q-block); each instance streams k/v blocks with
+an online-softmax accumulator, so the VMEM working set is O(block_q *
+(d + block_k)) instead of O(S^2) — the HBM<->VMEM schedule the paper's
+GPU kernels express with threadblocks, restated via BlockSpec + fori.
+
+interpret=True (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, causal, q_block):
+    """One (bh, q-block) program instance with online softmax."""
+    q = q_ref[...]  # [Bq, D]
+    s = k_ref.shape[0]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    bq = q.shape[0]
+    qi = pl.program_id(1)
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(ki * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(ki * block_k, block_k), slice(None)))
+        logits = (q @ k.T).astype(jnp.float32) * scale  # [Bq, Bk]
+        if causal:
+            q_pos = qi * q_block + jax.lax.iota(jnp.int32, bq)[:, None]
+            k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+            logits = jnp.where(q_pos >= k_pos, logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(logits), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    n_k = s // block_k
+    m, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, acc0))
+    l_safe = jnp.where(l > 0.0, l, 1.0)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal"))
+def flash_attention(q, k, v, block_q=64, block_k=64, causal=True):
+    """Blocked attention.
+
+    q, k, v: [B, Hd, S, D]; returns [B, Hd, S, D].
+    """
+    b, hd, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    bh = b * hd
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    grid = (bh, s // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, causal=causal, q_block=block_q
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bi, qi: (bi, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda bi, qi: (bi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bi, qi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bi, qi: (bi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, hd, s, d)
+
+
+def vmem_bytes(block_q, block_k, s, d, dtype_bytes=4):
+    """VMEM working set per instance: q block + one k/v block + softmax
+    state + accumulator. (k/v full rows are HBM-resident; streamed.)"""
+    return dtype_bytes * (
+        block_q * d + 2 * block_k * d + block_q * block_k + block_q * d + 2 * block_q
+    )

@@ -1,0 +1,156 @@
+"""Pallas kernel: capacity-bucketed MoE expert FFN (the L1 hot spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's MoE
+FFN runs on Ascend's AICube systolic engine fed from explicit local
+buffers. On TPU-style Pallas that maps to:
+
+  * grid over (expert, token-block): each program instance computes one
+    expert's FFN over one block of its capacity bucket — a regular
+    dense GEMM the MXU can saturate;
+  * BlockSpecs stage x/w1/w2 HBM->VMEM per block, the analogue of the
+    Ascend L1/UB staging the paper's kernels do with DMA descriptors;
+  * the gather (token->bucket) and scatter (bucket->token) are cheap
+    vector-path ops done *outside* the kernel so the kernel stays a
+    clean matmul pipeline.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is estimated from VMEM footprint + MXU
+utilization in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One (expert, token-block): o = gelu(x @ w1) @ w2.
+
+    x_ref:  [Tb, H]   one token block of this expert's bucket (VMEM)
+    w1_ref: [H, F]    this expert's up-projection (VMEM)
+    w2_ref: [F, H]    this expert's down-projection (VMEM)
+    o_ref:  [Tb, H]
+    """
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h)
+    o_ref[...] = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def moe_ffn_bucketed(xb, w1, w2, block_t=64):
+    """Expert FFN over capacity buckets.
+
+    Args:
+      xb: [E, C, H]  bucketed tokens (expert-major, capacity C)
+      w1: [E, H, F]
+      w2: [E, F, H]
+      block_t: token-block size per program instance.
+
+    Returns [E, C, H].
+    """
+    e, c, h = xb.shape
+    f = w1.shape[-1]
+    assert c % block_t == 0, f"capacity {c} must divide block_t {block_t}"
+    grid = (e, c // block_t)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_t, h), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((None, h, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((None, f, h), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_t, h), lambda ei, ti: (ei, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, h), xb.dtype),
+        interpret=True,
+    )(xb, w1, w2)
+
+
+def bucket_by_expert(x, assign, num_experts, capacity):
+    """Scatter tokens into per-expert capacity buckets.
+
+    Tokens beyond an expert's capacity are dropped (standard Switch-
+    style capacity truncation); the inverse scatter restores order and
+    zero-fills dropped tokens.
+
+    Returns (buckets [E, C, H], slot [T] int32 position-in-bucket or -1).
+    """
+    t = x.shape[0]
+    # position of each token within its expert's arrival order
+    onehot = jax.nn.one_hot(assign, num_experts, dtype=jnp.int32)  # [T, E]
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot  # [T, E]
+    pos = jnp.take_along_axis(pos_in_expert, assign[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, -1)
+    buckets = jnp.zeros((num_experts, capacity) + x.shape[1:], x.dtype)
+    buckets = buckets.at[assign, jnp.where(keep, slot, 0)].add(
+        jnp.where(keep[:, None], x, 0.0)
+    )
+    del t
+    return buckets, slot
+
+
+def unbucket(buckets, assign, slot):
+    """Inverse of `bucket_by_expert`: gather bucket rows back to tokens."""
+    safe_slot = jnp.maximum(slot, 0)
+    out = buckets[assign, safe_slot]
+    return jnp.where((slot >= 0)[:, None], out, 0.0)
+
+
+def moe_ffn(x, w1, w2, assign, capacity=None, block_t=64):
+    """Full MoE FFN: bucket -> pallas expert GEMMs -> unbucket.
+
+    Matches `ref.moe_ffn_ref` exactly for tokens within capacity.
+    """
+    e = w1.shape[0]
+    t = x.shape[0]
+    if capacity is None:
+        capacity = t  # no drops
+    # round capacity up to the block size
+    capacity = ((capacity + block_t - 1) // block_t) * block_t
+    buckets, slot = bucket_by_expert(x, assign, e, capacity)
+    out_buckets = moe_ffn_bucketed(buckets, w1, w2, block_t=block_t)
+    return unbucket(out_buckets, assign, slot)
+
+
+def moe_ffn_dense(x, w1, w2, assign, capacity=None, block_t=64):
+    """Pure-jnp *bucketed* MoE FFN — bitwise-equivalent computation to
+    `moe_ffn` (same bucket/unbucket, dense einsum instead of the Pallas
+    grid), fully differentiable and memory-efficient.
+
+    Used as the backward path of the model's custom VJP: the per-token
+    gather oracle in ref.py materializes [T, H, F] weight copies, which
+    is correct but catastrophically slow at training shapes.
+    """
+    e = w1.shape[0]
+    t = x.shape[0]
+    if capacity is None:
+        capacity = t
+    capacity = ((capacity + block_t - 1) // block_t) * block_t
+    buckets, slot = bucket_by_expert(x, assign, e, capacity)
+    h = jnp.einsum("ech,ehf->ecf", buckets, w1)
+    h = jax.nn.gelu(h)
+    out_buckets = jnp.einsum("ecf,efh->ech", h, w2)
+    return unbucket(out_buckets, assign, slot)
+
+
+def vmem_bytes(block_t, h, f, dtype_bytes=4):
+    """Estimated VMEM working set of one program instance (DESIGN.md
+    §Perf): x block + w1 + w2 + h intermediate + output block."""
+    return dtype_bytes * (block_t * h + h * f + f * h + block_t * f + block_t * h)
+
+
+def mxu_utilization_estimate(block_t, h, f):
+    """Fraction of MXU-aligned work: how close the GEMM tiles are to
+    multiples of the 128x128 systolic tile."""
+    def eff(dim):
+        return dim / (((dim + 127) // 128) * 128)
+    # two GEMMs: [Tb,H]x[H,F] and [Tb,F]x[F,H]
+    g1 = eff(block_t) * eff(h) * eff(f)
+    g2 = eff(block_t) * eff(f) * eff(h)
+    return (g1 + g2) / 2.0

@@ -1,0 +1,280 @@
+"""L2: the JAX MoE-transformer forward/backward/train-step.
+
+Mirrors the Rust `ModelDesc::tiny_moe()` descriptor: a 4-layer pre-norm
+transformer with top-2 MoE FFN layers, small enough to train end to end
+on the CPU PJRT client while exercising the full three-layer stack
+(Pallas kernels -> JAX graph -> HLO artifact -> Rust runtime).
+
+The Pallas kernels carry custom VJPs whose backward is the vjp of the
+pure-jnp reference (`kernels/ref.py`): numerically identical (pytest
+asserts kernel == ref) and robust to AD limitations of interpret-mode
+pallas_call internals (fori_loop online softmax is not transposable).
+
+The optimizer is SGD with momentum — *linear in the gradient*, so
+averaging (params, momentum) across data-parallel replicas is exactly
+gradient averaging; the Rust `DataParallelTrainer` relies on this.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import attention as attn_k
+from compile.kernels import moe_ffn as moe_k
+from compile.kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    ffn_mult: int = 4
+    experts: int = 8
+    top_k: int = 2
+    seq: int = 128
+    batch: int = 8
+    lr: float = 0.03
+    momentum: float = 0.9
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+    @property
+    def ffn(self):
+        return self.hidden * self.ffn_mult
+
+
+# --- parameter schema (explicit order = artifact argument order) -------
+
+def param_specs(cfg: ModelConfig):
+    """[(name, shape, init_std)] in the exact artifact argument order."""
+    h, f, e, l, v = cfg.hidden, cfg.ffn, cfg.experts, cfg.layers, cfg.vocab
+    std = 0.02
+    return [
+        ("embed", (v, h), std),
+        ("qkv", (l, h, 3 * h), std),
+        ("attn_out", (l, h, h), std),
+        ("norm1", (l, h), 0.0),  # init 1 added at use: stored as delta
+        ("norm2", (l, h), 0.0),
+        ("gate", (l, h, e), std),
+        ("w1", (l, e, h, f), std),
+        ("w2", (l, e, f, h), std),
+        ("final_norm", (h,), 0.0),
+    ]
+
+
+def init_params(cfg: ModelConfig, key):
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    return [
+        jax.random.normal(k, shape, jnp.float32) * std
+        for k, (_, shape, std) in zip(keys, specs)
+    ]
+
+
+# --- kernel ops with reference-backward custom VJPs ---------------------
+
+# capacity factor 2: each expert's bucket holds 2x the mean load;
+# overflow tokens are dropped for that expert (Switch-style).
+CAPACITY_FACTOR = 2.0
+
+
+def _capacity(t, e):
+    return max(int(CAPACITY_FACTOR * t / e), 16)
+
+
+@jax.custom_vjp
+def moe_ffn_op(x, w1, w2, assign):
+    cap = _capacity(x.shape[0], w1.shape[0])
+    return moe_k.moe_ffn(x, w1, w2, assign, capacity=cap)
+
+
+def _moe_fwd(x, w1, w2, assign):
+    cap = _capacity(x.shape[0], w1.shape[0])
+    return moe_k.moe_ffn(x, w1, w2, assign, capacity=cap), (x, w1, w2, assign)
+
+
+def _moe_bwd(res, g):
+    x, w1, w2, assign = res
+    cap = _capacity(x.shape[0], w1.shape[0])
+    # backward through the dense-bucketed twin (bitwise-equivalent
+    # computation, efficient einsum gradients)
+    _, vjp = jax.vjp(
+        lambda x_, w1_, w2_: moe_k.moe_ffn_dense(x_, w1_, w2_, assign, capacity=cap),
+        x,
+        w1,
+        w2,
+    )
+    dx, dw1, dw2 = vjp(g)
+    zero = np.zeros(assign.shape, dtype=jax.dtypes.float0)
+    return dx, dw1, dw2, zero
+
+
+moe_ffn_op.defvjp(_moe_fwd, _moe_bwd)
+
+
+@jax.custom_vjp
+def attention_op(q, k, v):
+    return attn_k.flash_attention(q, k, v, causal=True)
+
+
+def _attn_fwd(q, k, v):
+    return attn_k.flash_attention(q, k, v, causal=True), (q, k, v)
+
+
+def _attn_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=True), q, k, v)
+    return vjp(g)
+
+
+attention_op.defvjp(_attn_fwd, _attn_bwd)
+
+
+# --- forward -------------------------------------------------------------
+
+def rmsnorm(x, gamma_delta):
+    return ref.rmsnorm_ref(x, 1.0 + gamma_delta)
+
+
+def topk_manual(logits, k):
+    """Iterated argmax top-k.
+
+    `jax.lax.top_k` lowers to an HLO `topk(..., largest=true)` op that
+    the xla_extension 0.5.1 text parser rejects; argmax + masking lowers
+    to plain reduce/select ops that round-trip cleanly.
+    """
+    vals, idxs = [], []
+    x = logits
+    e = logits.shape[-1]
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)
+        v = jnp.max(x, axis=-1)
+        idxs.append(i)
+        vals.append(v)
+        mask = jax.nn.one_hot(i, e, dtype=bool)
+        x = jnp.where(mask, -jnp.inf, x)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def block(cfg: ModelConfig, params, li, x):
+    """One transformer block: attn + top-k MoE FFN, pre-norm residual."""
+    _, qkv, attn_out, norm1, norm2, gate, w1, w2, _ = params
+    b, s, h = x.shape
+    hd, d = cfg.heads, cfg.head_dim
+
+    # attention
+    xn = rmsnorm(x, norm1[li])
+    proj = xn @ qkv[li]  # [B, S, 3H]
+    q, k, v = jnp.split(proj, 3, axis=-1)
+    q = q.reshape(b, s, hd, d).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hd, d).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hd, d).transpose(0, 2, 1, 3)
+    o = attention_op(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h)
+    x = x + o @ attn_out[li]
+
+    # MoE FFN (top-k routing, softmax combine over chosen experts)
+    xn = rmsnorm(x, norm2[li]).reshape(b * s, h)
+    logits = xn @ gate[li]  # [T, E]
+    topv, topi = topk_manual(logits, cfg.top_k)
+    weights = jax.nn.softmax(topv, axis=-1)  # [T, K]
+    out = jnp.zeros_like(xn)
+    for kk in range(cfg.top_k):
+        assign = jax.lax.stop_gradient(topi[:, kk])
+        yk = moe_ffn_op(xn, w1[li], w2[li], assign)
+        out = out + yk * weights[:, kk : kk + 1]
+    return x + out.reshape(b, s, h)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens [B, S] int32 -> logits [B, S, V]."""
+    embed, *_, final_norm = params[0], params[-1]
+    embed = params[0]
+    x = embed[tokens]  # [B, S, H]
+    for li in range(cfg.layers):
+        x = block(cfg, params, li, x)
+    x = rmsnorm(x, params[-1])
+    return x @ embed.T  # tied lm head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --- train step (flat signature for the artifact) ------------------------
+
+def make_train_step(cfg: ModelConfig):
+    """Returns f(*params, *momenta, tokens, targets) ->
+    (*new_params, *new_momenta, loss) with SGD+momentum."""
+    n = len(param_specs(cfg))
+
+    def train_step(*args):
+        params = list(args[:n])
+        moms = list(args[n : 2 * n])
+        tokens, targets = args[2 * n], args[2 * n + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens, targets)
+        )(params)
+        new_params, new_moms = [], []
+        for p, m, g in zip(params, moms, grads):
+            m_new = cfg.momentum * m + g
+            new_moms.append(m_new)
+            new_params.append(p - cfg.lr * m_new)
+        return tuple(new_params) + tuple(new_moms) + (loss.reshape(1),)
+
+    return train_step
+
+
+def make_forward(cfg: ModelConfig):
+    """Returns f(*params, tokens) -> (logits,) for the inference artifact."""
+    n = len(param_specs(cfg))
+
+    def fwd(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (forward(cfg, params, tokens),)
+
+    return fwd
+
+
+# --- pure-reference model (oracle for python tests) ----------------------
+
+def forward_ref(cfg: ModelConfig, params, tokens):
+    """Same model with reference (non-pallas) kernels throughout."""
+    embed = params[0]
+    _, qkv, attn_out, norm1, norm2, gate, w1, w2, final_norm = params
+    x = embed[tokens]
+    b, s, h = x.shape
+    hd, d = cfg.heads, cfg.head_dim
+    for li in range(cfg.layers):
+        xn = rmsnorm(x, norm1[li])
+        proj = xn @ qkv[li]
+        q, k, v = jnp.split(proj, 3, axis=-1)
+        q = q.reshape(b, s, hd, d).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, hd, d).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, hd, d).transpose(0, 2, 1, 3)
+        o = ref.attention_ref(q, k, v, causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, h)
+        x = x + o @ attn_out[li]
+        xn = rmsnorm(x, norm2[li]).reshape(b * s, h)
+        logits = xn @ gate[li]
+        topv, topi = topk_manual(logits, cfg.top_k)
+        weights = jax.nn.softmax(topv, axis=-1)
+        out = jnp.zeros_like(xn)
+        for kk in range(cfg.top_k):
+            assign = topi[:, kk]
+            yk = ref.moe_ffn_ref(xn, w1[li], w2[li], assign)
+            out = out + yk * weights[:, kk : kk + 1]
+        x = x + out.reshape(b, s, h)
+    x = rmsnorm(x, final_norm)
+    return x @ embed.T

@@ -1,0 +1,72 @@
+//! The paper's comparison points, implemented as explicit policies on
+//! the same substrate HyperParallel runs on.
+//!
+//! | Baseline | Stands in for | Used by |
+//! |---|---|---|
+//! | [`zero_offload_step`] | ZeRO-Offload-style synchronous CPU offload over PCIe | E5 |
+//! | [`nd_spmd_step`] | static ND-SPMD (Megatron-style TP+PP, no offload) | E5 |
+//! | [`static_spmd_omni`] | SPMD+PP omni-modal pipeline (re-export) | E8 |
+//! | [`gang_rl`] | gang-scheduled synchronous RL (re-export) | E9 |
+//! | [`coarse_masking`] | coarse SPMD comm overlap (re-export) | E7 |
+
+use crate::hypershard::{plan, PlannerConfig};
+use crate::memory::TransferEngine;
+use crate::trainer::scenarios::OffloadTrainingScenario;
+
+pub use crate::hypermpmd::cross::schedule_gang as gang_rl;
+pub use crate::hypermpmd::inter::schedule_static as static_spmd_omni;
+pub use crate::hypermpmd::intra::baseline_masking as coarse_masking;
+
+/// ZeRO-Offload-style step: synchronous swaps (lookahead 1) over the
+/// PCIe-class host link.
+pub fn zero_offload_step(s: &OffloadTrainingScenario) -> f64 {
+    s.step_time(1, TransferEngine::legacy_pcie())
+}
+
+/// Static ND-SPMD (no offload): the best TP·PP plan that fits HBM,
+/// costed by the planner. Returns the estimated step time; None if no
+/// plan fits.
+pub fn nd_spmd_step(s: &OffloadTrainingScenario) -> Option<f64> {
+    let cfg = PlannerConfig {
+        allow_offload: false,
+        cube_efficiency: s.cube_efficiency,
+        ..Default::default()
+    };
+    plan(&s.model, &s.topo, &cfg)
+        .into_iter()
+        .find(|c| c.fits_hbm)
+        .map(|c| c.step_time)
+}
+
+/// Non-overlapped collective execution: the cost of a step where comm
+/// strictly serializes with compute (what SPMD frameworks do without
+/// hand-tuned overlap). Used by the E7 comparison as the worst case.
+pub fn serialized_comm_step(compute: f64, comm: f64) -> f64 {
+    compute + comm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_offload_slower_than_hyperoffload() {
+        let s = OffloadTrainingScenario::llama8b();
+        let zero = zero_offload_step(&s);
+        let hyper = s.hyperoffload_step(2);
+        assert!(zero > hyper, "zero={zero} hyper={hyper}");
+    }
+
+    #[test]
+    fn nd_spmd_exists_on_big_enough_cluster() {
+        use crate::supernode::Topology;
+        let mut s = OffloadTrainingScenario::llama8b();
+        s.topo = Topology::matrix384();
+        assert!(nd_spmd_step(&s).is_some());
+    }
+
+    #[test]
+    fn serialized_is_sum() {
+        assert_eq!(serialized_comm_step(2.0, 1.0), 3.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Collective algorithm cost models over the supernode topology.
+//!
+//! Cost model: classic alpha-beta. `alpha` = per-step latency (hop
+//! latency of the group's bottleneck tier), `beta` = inverse bandwidth.
+//! Three algorithm families matter for the paper:
+//!
+//! - **Ring** — bandwidth-optimal on legacy fabrics: 2(p−1)/p · n bytes
+//!   per rank for all-reduce, p−1 latency steps.
+//! - **Tree/halving-doubling** — latency-optimal for small messages.
+//! - **Full-mesh direct** — the supernode special: with a peer-to-peer
+//!   all-to-all fabric every rank talks to every other directly, so
+//!   all-to-all and all-gather complete in one bandwidth phase. This is
+//!   the fabric-level reason MoE EP dispatch becomes cheap (§2.3/§3.3).
+
+use crate::graph::CollectiveKind;
+use crate::supernode::{DeviceId, LinkSpec, Topology};
+
+/// Which algorithm a collective uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Ring,
+    Tree,
+    FullMeshDirect,
+}
+
+/// Estimated cost of one collective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCost {
+    pub algorithm: Algorithm,
+    /// Wall time, seconds.
+    pub time: f64,
+    /// Bytes crossing the bottleneck link per rank.
+    pub bytes_on_wire: f64,
+}
+
+/// Pick the best algorithm for a collective on this topology and return
+/// its cost. `bytes` is the per-rank payload.
+pub fn cost(
+    topo: &Topology,
+    kind: CollectiveKind,
+    bytes: f64,
+    group: &[DeviceId],
+) -> CollectiveCost {
+    let p = group.len().max(1);
+    if p <= 1 {
+        return CollectiveCost {
+            algorithm: Algorithm::FullMeshDirect,
+            time: 0.0,
+            bytes_on_wire: 0.0,
+        };
+    }
+    let tier = topo.bottleneck_tier(group);
+    let link = topo.fabric.tier(tier);
+    // Full-mesh direct is only "real" on the supernode fabric, where
+    // every pair has a dedicated link; on legacy fabrics the NIC
+    // serializes flows, which ring already models.
+    let mesh_capable = topo.fabric.name.contains("supernode");
+
+    let candidates = [
+        (Algorithm::Ring, ring_time(kind, bytes, p, link)),
+        (Algorithm::Tree, tree_time(kind, bytes, p, link)),
+        (
+            Algorithm::FullMeshDirect,
+            if mesh_capable {
+                mesh_time(kind, bytes, p, link)
+            } else {
+                f64::INFINITY
+            },
+        ),
+    ];
+    let (algorithm, time) = candidates
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    CollectiveCost {
+        algorithm,
+        time,
+        bytes_on_wire: wire_bytes(kind, bytes, p),
+    }
+}
+
+/// Per-rank bytes crossing the wire for each pattern.
+pub fn wire_bytes(kind: CollectiveKind, bytes: f64, p: usize) -> f64 {
+    let pf = p as f64;
+    match kind {
+        CollectiveKind::AllReduce => 2.0 * (pf - 1.0) / pf * bytes,
+        CollectiveKind::AllGather | CollectiveKind::ReduceScatter => (pf - 1.0) / pf * bytes,
+        CollectiveKind::AllToAll => (pf - 1.0) / pf * bytes,
+        CollectiveKind::Broadcast => bytes,
+        CollectiveKind::P2p => bytes,
+    }
+}
+
+fn ring_time(kind: CollectiveKind, bytes: f64, p: usize, link: LinkSpec) -> f64 {
+    let pf = p as f64;
+    let alpha = link.hop_latency * link.hops as f64;
+    let beta = 1.0 / link.bandwidth;
+    match kind {
+        CollectiveKind::AllReduce => 2.0 * (pf - 1.0) * (alpha + bytes / pf * beta),
+        CollectiveKind::AllGather | CollectiveKind::ReduceScatter => {
+            (pf - 1.0) * (alpha + bytes / pf * beta)
+        }
+        // ring all-to-all: p−1 steps, each moving bytes/p
+        CollectiveKind::AllToAll => (pf - 1.0) * (alpha + bytes / pf * beta),
+        CollectiveKind::Broadcast => (pf - 1.0) * alpha + bytes * beta,
+        CollectiveKind::P2p => alpha + bytes * beta,
+    }
+}
+
+fn tree_time(kind: CollectiveKind, bytes: f64, p: usize, link: LinkSpec) -> f64 {
+    let steps = (p as f64).log2().ceil();
+    let alpha = link.hop_latency * link.hops as f64;
+    let beta = 1.0 / link.bandwidth;
+    match kind {
+        CollectiveKind::AllReduce => 2.0 * steps * (alpha + bytes * beta),
+        CollectiveKind::AllGather | CollectiveKind::ReduceScatter => {
+            steps * (alpha + bytes * beta / 2.0)
+        }
+        CollectiveKind::AllToAll => steps * (alpha + bytes * beta),
+        CollectiveKind::Broadcast => steps * (alpha + bytes * beta),
+        CollectiveKind::P2p => alpha + bytes * beta,
+    }
+}
+
+fn mesh_time(kind: CollectiveKind, bytes: f64, p: usize, link: LinkSpec) -> f64 {
+    let pf = p as f64;
+    let alpha = link.hop_latency * link.hops as f64;
+    let beta = 1.0 / link.bandwidth;
+    match kind {
+        // direct reduce-scatter + all-gather, each one phase where each
+        // rank simultaneously exchanges bytes/p with every peer
+        CollectiveKind::AllReduce => 2.0 * (alpha + (pf - 1.0) / pf * bytes * beta),
+        CollectiveKind::AllGather | CollectiveKind::ReduceScatter => {
+            alpha + (pf - 1.0) / pf * bytes * beta
+        }
+        // the supernode headline: single-phase direct all-to-all
+        CollectiveKind::AllToAll => alpha + (pf - 1.0) / pf * bytes * beta,
+        CollectiveKind::Broadcast => alpha + bytes * beta,
+        CollectiveKind::P2p => alpha + bytes * beta,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_group_is_free() {
+        let t = Topology::tiny();
+        let c = cost(&t, CollectiveKind::AllReduce, 1e9, &[DeviceId(0)]);
+        assert_eq!(c.time, 0.0);
+    }
+
+    #[test]
+    fn supernode_prefers_mesh_for_all_to_all() {
+        let t = Topology::matrix384();
+        let group: Vec<DeviceId> = (0..32).map(DeviceId).collect();
+        let c = cost(&t, CollectiveKind::AllToAll, 64e6, &group);
+        assert_eq!(c.algorithm, Algorithm::FullMeshDirect);
+    }
+
+    #[test]
+    fn legacy_never_uses_mesh() {
+        let t = Topology::legacy_cluster(8);
+        let group: Vec<DeviceId> = (0..32).map(DeviceId).collect();
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllToAll,
+            CollectiveKind::AllGather,
+        ] {
+            let c = cost(&t, kind, 64e6, &group);
+            assert_ne!(c.algorithm, Algorithm::FullMeshDirect, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn small_messages_prefer_tree_latency() {
+        let t = Topology::legacy_cluster(16);
+        let group: Vec<DeviceId> = (0..128).map(DeviceId).collect();
+        let c = cost(&t, CollectiveKind::AllReduce, 1024.0, &group);
+        assert_eq!(c.algorithm, Algorithm::Tree);
+    }
+
+    #[test]
+    fn large_messages_prefer_ring_on_legacy() {
+        let t = Topology::legacy_cluster(16);
+        let group: Vec<DeviceId> = (0..128).map(DeviceId).collect();
+        let c = cost(&t, CollectiveKind::AllReduce, 1e9, &group);
+        assert_eq!(c.algorithm, Algorithm::Ring);
+    }
+
+    #[test]
+    fn supernode_all_to_all_much_faster_than_legacy() {
+        let sn = Topology::matrix384();
+        let lg = Topology::legacy_cluster(48);
+        let group: Vec<DeviceId> = (0..64).map(DeviceId).collect();
+        let b = 128e6;
+        let t_sn = cost(&sn, CollectiveKind::AllToAll, b, &group).time;
+        let t_lg = cost(&lg, CollectiveKind::AllToAll, b, &group).time;
+        assert!(t_lg / t_sn > 5.0, "speedup={}", t_lg / t_sn);
+    }
+
+    #[test]
+    fn allreduce_wire_bytes_formula() {
+        assert!((wire_bytes(CollectiveKind::AllReduce, 100.0, 4) - 150.0).abs() < 1e-9);
+        assert!((wire_bytes(CollectiveKind::AllGather, 100.0, 4) - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_monotone_in_group_size_for_ring() {
+        let t = Topology::legacy_cluster(16);
+        let g8: Vec<DeviceId> = (0..8).map(DeviceId).collect();
+        let g64: Vec<DeviceId> = (0..64).map(DeviceId).collect();
+        let c8 = cost(&t, CollectiveKind::AllReduce, 1e8, &g8);
+        let c64 = cost(&t, CollectiveKind::AllReduce, 1e8, &g64);
+        assert!(c64.time > c8.time);
+    }
+}

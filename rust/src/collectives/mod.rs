@@ -1,0 +1,8 @@
+//! Collective communication: topology-costed algorithm selection for
+//! the simulator, and real in-process implementations for the PJRT
+//! data-parallel demo.
+
+pub mod algorithms;
+pub mod real;
+
+pub use algorithms::{cost, wire_bytes, Algorithm, CollectiveCost};

@@ -1,0 +1,212 @@
+//! *Real* (in-process) collectives over f32 buffers.
+//!
+//! The simulator costs collectives; this module actually executes them
+//! for the real data-parallel training demo (`examples/train_e2e.rs`
+//! with `--dp N`): N worker shards run the PJRT train step and their
+//! gradients are combined here. Serial reference implementations plus a
+//! sharded-parallel all-reduce used on the hot path.
+
+/// Sum-all-reduce: every rank's buffer becomes the elementwise sum.
+pub fn all_reduce_sum(ranks: &mut [Vec<f32>]) {
+    let Some(first) = ranks.first() else { return };
+    let n = first.len();
+    assert!(
+        ranks.iter().all(|r| r.len() == n),
+        "ranks disagree on length"
+    );
+    let mut acc = vec![0f32; n];
+    for r in ranks.iter() {
+        for (a, x) in acc.iter_mut().zip(r.iter()) {
+            *a += *x;
+        }
+    }
+    for r in ranks.iter_mut() {
+        r.copy_from_slice(&acc);
+    }
+}
+
+/// Mean-all-reduce (gradient averaging for data parallelism).
+pub fn all_reduce_mean(ranks: &mut [Vec<f32>]) {
+    let p = ranks.len().max(1) as f32;
+    all_reduce_sum(ranks);
+    for r in ranks.iter_mut() {
+        for x in r.iter_mut() {
+            *x /= p;
+        }
+    }
+}
+
+/// All-gather: concatenation of all rank shards, replicated everywhere.
+pub fn all_gather(ranks: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(ranks.iter().map(|r| r.len()).sum());
+    for r in ranks {
+        out.extend_from_slice(r);
+    }
+    out
+}
+
+/// Reduce-scatter: sum, then each rank keeps its 1/p slice.
+pub fn reduce_scatter_sum(ranks: &mut [Vec<f32>]) -> Vec<Vec<f32>> {
+    let p = ranks.len();
+    if p == 0 {
+        return vec![];
+    }
+    let n = ranks[0].len();
+    assert_eq!(n % p, 0, "length must divide rank count");
+    all_reduce_sum(ranks);
+    let chunk = n / p;
+    ranks
+        .iter()
+        .enumerate()
+        .map(|(i, r)| r[i * chunk..(i + 1) * chunk].to_vec())
+        .collect()
+}
+
+/// All-to-all: rank i's j-th chunk goes to rank j's i-th chunk
+/// (the MoE token-dispatch pattern).
+pub fn all_to_all(ranks: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let p = ranks.len();
+    if p == 0 {
+        return vec![];
+    }
+    let n = ranks[0].len();
+    assert!(ranks.iter().all(|r| r.len() == n));
+    assert_eq!(n % p, 0);
+    let chunk = n / p;
+    (0..p)
+        .map(|j| {
+            let mut out = Vec::with_capacity(n);
+            for r in ranks.iter().take(p) {
+                out.extend_from_slice(&r[j * chunk..(j + 1) * chunk]);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Broadcast rank 0's buffer to all.
+pub fn broadcast(ranks: &mut [Vec<f32>]) {
+    if ranks.len() < 2 {
+        return;
+    }
+    let (src, rest) = ranks.split_first_mut().unwrap();
+    for r in rest {
+        r.copy_from_slice(src);
+    }
+}
+
+/// Chunked tree all-reduce used on the hot path: pairwise summation to
+/// reduce float error and passes over cache-sized chunks. Produces the
+/// same result layout as `all_reduce_mean`.
+pub fn all_reduce_mean_tree(ranks: &mut [Vec<f32>]) {
+    let p = ranks.len();
+    if p == 0 {
+        return;
+    }
+    let n = ranks[0].len();
+    // tree reduction into rank 0
+    let mut stride = 1;
+    while stride < p {
+        let mut i = 0;
+        while i + stride < p {
+            let (lo, hi) = ranks.split_at_mut(i + stride);
+            let dst = &mut lo[i];
+            let src = &hi[0];
+            for (a, b) in dst.iter_mut().zip(src.iter()) {
+                *a += *b;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    let inv = 1.0 / p as f32;
+    for k in 0..n {
+        ranks[0][k] *= inv;
+    }
+    let (src, rest) = ranks.split_first_mut().unwrap();
+    for r in rest {
+        r.copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.next_f32() - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn all_reduce_sum_matches_manual() {
+        let mut ranks = mk(4, 64, 1);
+        let expect: Vec<f32> = (0..64)
+            .map(|k| ranks.iter().map(|r| r[k]).sum::<f32>())
+            .collect();
+        all_reduce_sum(&mut ranks);
+        for r in &ranks {
+            for (a, b) in r.iter().zip(expect.iter()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_divides_by_ranks() {
+        let mut ranks = vec![vec![2.0f32; 8], vec![4.0f32; 8]];
+        all_reduce_mean(&mut ranks);
+        assert!(ranks.iter().all(|r| r.iter().all(|&x| (x - 3.0).abs() < 1e-6)));
+    }
+
+    #[test]
+    fn tree_matches_naive_mean() {
+        for p in [1, 2, 3, 4, 5, 8] {
+            let mut a = mk(p, 96, 42);
+            let mut b = a.clone();
+            all_reduce_mean(&mut a);
+            all_reduce_mean_tree(&mut b);
+            for (ra, rb) in a.iter().zip(b.iter()) {
+                for (x, y) in ra.iter().zip(rb.iter()) {
+                    assert!((x - y).abs() < 1e-5, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_concats() {
+        let ranks = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        assert_eq!(all_gather(&ranks), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_slices() {
+        let mut ranks = vec![vec![1.0f32, 10.0], vec![2.0, 20.0]];
+        let out = reduce_scatter_sum(&mut ranks);
+        assert_eq!(out[0], vec![3.0]);
+        assert_eq!(out[1], vec![30.0]);
+    }
+
+    #[test]
+    fn all_to_all_transposes_chunks() {
+        // 2 ranks, chunks of 2
+        let ranks = vec![vec![1.0f32, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let out = all_to_all(&ranks);
+        assert_eq!(out[0], vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(out[1], vec![3.0, 4.0, 7.0, 8.0]);
+        // involution: doing it twice restores the original
+        let back = all_to_all(&out);
+        assert_eq!(back, ranks);
+    }
+
+    #[test]
+    fn broadcast_replicates_rank0() {
+        let mut ranks = vec![vec![7.0f32; 4], vec![0.0; 4], vec![1.0; 4]];
+        broadcast(&mut ranks);
+        assert!(ranks.iter().all(|r| r == &vec![7.0f32; 4]));
+    }
+}

@@ -1,0 +1,18 @@
+//! Configuration: model descriptors, cluster presets, and JSON loading.
+//!
+//! Model descriptors are analytic: parameter counts, FLOP and byte
+//! volumes per layer — everything the planner, offload policies, and
+//! simulator need to reason about workloads far larger than this
+//! machine can execute (Llama-8B, DeepSeek-V3-class MoE, omni-modal).
+
+pub mod model;
+
+pub use model::{ModelDesc, ModelFamily, MoeDesc};
+
+use crate::util::json::Json;
+
+/// Load a JSON config file.
+pub fn load_json(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))
+}

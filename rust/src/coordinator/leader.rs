@@ -1,0 +1,124 @@
+//! Leader orchestration (§3.1's operational workflow).
+//!
+//! Step 1 — algorithmic development: the model declares layouts
+//! (HyperShard). Step 2 — flexible parallelism: the planner picks the
+//! concrete strategy for the cluster; MPMD process groups are mapped.
+//! Step 3 — runtime orchestration: HyperOffload's pass rewrites the
+//! step graph, and the simulator (or the real PJRT runtime at
+//! CPU-feasible scale) executes it. The coordinator owns that pipeline
+//! plus metrics.
+
+use crate::config::ModelDesc;
+use crate::coordinator::metrics::Metrics;
+use crate::hypermpmd::ProcessGroupMap;
+use crate::hyperoffload::OffloadPolicy;
+use crate::hypershard::{best_plan, explain, PlanCandidate, PlannerConfig};
+use crate::supernode::Topology;
+use std::sync::Arc;
+
+/// Summary of planning one workload on one cluster.
+#[derive(Debug, Clone)]
+pub struct ExperimentSummary {
+    pub model: String,
+    pub cluster_devices: usize,
+    pub plan: Option<PlanCandidate>,
+    pub requires_offload: bool,
+    pub explanation: String,
+}
+
+/// The leader.
+pub struct Coordinator {
+    pub topo: Topology,
+    pub metrics: Arc<Metrics>,
+    pub planner_cfg: PlannerConfig,
+    pub process_groups: Option<ProcessGroupMap>,
+}
+
+impl Coordinator {
+    pub fn new(topo: Topology) -> Self {
+        Self {
+            topo,
+            metrics: Arc::new(Metrics::new()),
+            planner_cfg: PlannerConfig::default(),
+            process_groups: None,
+        }
+    }
+
+    pub fn with_offload(mut self, allow: bool) -> Self {
+        self.planner_cfg.allow_offload = allow;
+        self
+    }
+
+    /// Install an MPMD process-group mapping (Listing 1).
+    pub fn set_process_groups(&mut self, map: ProcessGroupMap) {
+        self.process_groups = Some(map);
+    }
+
+    /// Step 1+2: plan a model onto this cluster.
+    pub fn plan_model(&self, model: &ModelDesc) -> ExperimentSummary {
+        let plan = best_plan(model, &self.topo, &self.planner_cfg);
+        let policy = OffloadPolicy::new(self.topo.devices[0].spec.hbm_bytes);
+        let requires_offload = policy.requires_offload(&model.train_state());
+        let explanation = match &plan {
+            Some(p) => explain(p),
+            None => "no feasible strategy (enable HyperOffload)".to_string(),
+        };
+        self.metrics.incr("plans", 1);
+        if let Some(p) = &plan {
+            self.metrics.set_gauge("plan.step_time", p.step_time);
+        }
+        ExperimentSummary {
+            model: model.name.clone(),
+            cluster_devices: self.topo.device_count(),
+            plan,
+            requires_offload,
+            explanation,
+        }
+    }
+
+    /// Plan every model family preset — the Table 1/Table 2 sweep.
+    pub fn plan_all_presets(&self) -> Vec<ExperimentSummary> {
+        [
+            ModelDesc::llama_8b(),
+            ModelDesc::deepseek_v3_like(),
+            ModelDesc::diffusion(),
+            ModelDesc::long_sequence(),
+            ModelDesc::tiny_moe(),
+        ]
+        .iter()
+        .map(|m| self.plan_model(m))
+        .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_presets_on_matrix384() {
+        let c = Coordinator::new(Topology::matrix384()).with_offload(true);
+        let summaries = c.plan_all_presets();
+        assert_eq!(summaries.len(), 5);
+        for s in &summaries {
+            assert!(s.plan.is_some(), "{} got no plan", s.model);
+        }
+        assert_eq!(c.metrics.counter("plans"), 5);
+    }
+
+    #[test]
+    fn llama8b_requires_offload_flagged() {
+        let c = Coordinator::new(Topology::tiny()).with_offload(true);
+        let s = c.plan_model(&ModelDesc::llama_8b());
+        assert!(s.requires_offload); // 128GB+ of training state vs 64GB HBM
+    }
+
+    #[test]
+    fn process_groups_installable() {
+        use crate::hypermpmd::omni_modal_example;
+        let mut c = Coordinator::new(Topology::matrix384());
+        let map = ProcessGroupMap::from_json(omni_modal_example(), 384).unwrap();
+        c.set_process_groups(map);
+        assert_eq!(c.process_groups.as_ref().unwrap().groups.len(), 6);
+    }
+}

@@ -1,0 +1,111 @@
+//! Metrics registry: counters, gauges, and derived framework metrics
+//! (masking ratio, bubble ratio, MFU, utilization), dumpable as JSON.
+
+use crate::util::json::{Json, JsonObj};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Snapshot as JSON (counters + gauges).
+    pub fn to_json(&self) -> Json {
+        let mut root = JsonObj::new();
+        let mut counters = JsonObj::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Json::from(v.load(Ordering::Relaxed)));
+        }
+        let mut gauges = JsonObj::new();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(k.clone(), Json::from(*v));
+        }
+        root.insert("counters", Json::Obj(counters));
+        root.insert("gauges", Json::Obj(gauges));
+        Json::Obj(root)
+    }
+}
+
+/// Model FLOPs Utilization: achieved FLOPs/s over peak.
+pub fn mfu(flops_per_step: f64, step_seconds: f64, peak_flops: f64) -> f64 {
+    flops_per_step / step_seconds / peak_flops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.incr("steps", 1);
+        m.incr("steps", 2);
+        m.set_gauge("loss", 3.5);
+        assert_eq!(m.counter("steps"), 3);
+        assert_eq!(m.gauge("loss"), Some(3.5));
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn json_snapshot() {
+        let m = Metrics::new();
+        m.incr("a", 5);
+        m.set_gauge("b", 1.5);
+        let j = m.to_json();
+        assert_eq!(j.get_path("counters.a").unwrap().as_u64(), Some(5));
+        assert_eq!(j.get_path("gauges.b").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn mfu_formula() {
+        // 1e12 flops in 0.1s on a 100e12 peak = 10%
+        assert!((mfu(1e12, 0.1, 100e12) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_are_thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        crate::util::pool::scoped_indexed(8, |_| {
+            for _ in 0..1000 {
+                m.incr("x", 1);
+            }
+        });
+        assert_eq!(m.counter("x"), 8000);
+    }
+}

@@ -1,0 +1,11 @@
+//! The coordinator: the leader process gluing HyperShard planning,
+//! HyperOffload policies, HyperMPMD scheduling, and the PJRT runtime
+//! into the Step-1/2/3 workflow of §3.1.
+
+pub mod leader;
+pub mod metrics;
+pub mod server;
+
+pub use leader::{Coordinator, ExperimentSummary};
+pub use metrics::{mfu, Metrics};
+pub use server::{Completion, InferenceRequest, InferenceServer};

@@ -1,0 +1,255 @@
+//! Inference serving: request queue + continuous batcher over the AOT
+//! `forward` artifact.
+//!
+//! The paper positions HyperParallel for *training and inference*; this
+//! is the inference half at CPU-feasible scale: a vLLM-style continuous
+//! batcher that keeps the fixed-shape forward executable full, refilling
+//! slots as requests complete, with per-request latency and aggregate
+//! throughput metrics. The paged KV cache of `hyperoffload::kvcache`
+//! supplies the memory model; numerics run through PJRT.
+
+use crate::runtime::{to_f32, Manifest, Runtime};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A finished request with its metrics.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub output: Vec<i32>,
+    /// Wall seconds from admission to completion.
+    pub latency: f64,
+    pub prompt_len: usize,
+}
+
+#[derive(Debug)]
+struct Slot {
+    id: u64,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    max_new: usize,
+    admitted: Instant,
+}
+
+/// Continuous batcher: fixed `batch` slots over the forward artifact.
+pub struct InferenceServer {
+    manifest: Manifest,
+    params: Vec<Vec<f32>>,
+    queue: VecDeque<InferenceRequest>,
+    active: Vec<Option<Slot>>,
+    pub completions: Vec<Completion>,
+    /// Aggregate decode steps executed.
+    pub steps: u64,
+    /// Sum over steps of occupied slots (for occupancy metrics).
+    pub occupied_slot_steps: u64,
+}
+
+impl InferenceServer {
+    /// Build a server from the artifact manifest; parameters are
+    /// initialized from the manifest schema (or install trained ones
+    /// with [`set_params`](Self::set_params)).
+    pub fn new(manifest: Manifest, seed: u64) -> Self {
+        // only the true params (manifest lists params + momenta)
+        let n = manifest.params.len() / 2;
+        let mut m2 = manifest.clone();
+        m2.params.truncate(n);
+        let mut rng = Rng::new(seed);
+        let params = m2
+            .params
+            .iter()
+            .map(|spec| {
+                (0..spec.elements())
+                    .map(|_| (rng.normal() * spec.init_std) as f32)
+                    .collect()
+            })
+            .collect();
+        let batch = m2.batch;
+        Self {
+            manifest: m2,
+            params,
+            queue: VecDeque::new(),
+            active: (0..batch).map(|_| None).collect(),
+            completions: Vec::new(),
+            steps: 0,
+            occupied_slot_steps: 0,
+        }
+    }
+
+    /// Install trained parameters (e.g. from a `TrainExecutor`).
+    pub fn set_params(&mut self, params: Vec<Vec<f32>>) {
+        assert_eq!(params.len(), self.manifest.params.len());
+        self.params = params;
+    }
+
+    pub fn submit(&mut self, req: InferenceRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn refill(&mut self) {
+        for slot in self.active.iter_mut() {
+            if slot.is_none() {
+                if let Some(req) = self.queue.pop_front() {
+                    let prompt_len = req.prompt.len().min(self.manifest.seq - 1);
+                    *slot = Some(Slot {
+                        id: req.id,
+                        tokens: req.prompt[..prompt_len].to_vec(),
+                        prompt_len,
+                        max_new: req.max_new_tokens,
+                        admitted: Instant::now(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// One decode iteration: refill slots, run the forward executable
+    /// on the padded batch, append one greedy token per active slot,
+    /// retire finished requests. Returns the number of tokens decoded.
+    pub fn step(&mut self, rt: &Runtime) -> Result<usize> {
+        self.refill();
+        let occupied = self.active_count();
+        if occupied == 0 {
+            return Ok(0);
+        }
+        let (b, s, v) = (self.manifest.batch, self.manifest.seq, self.manifest.vocab);
+        // build the padded token matrix
+        let mut tokens = vec![0i32; b * s];
+        for (i, slot) in self.active.iter().enumerate() {
+            if let Some(slot) = slot {
+                for (j, &t) in slot.tokens.iter().enumerate().take(s) {
+                    tokens[i * s + j] = t;
+                }
+            }
+        }
+        // forward
+        let mut inputs = Vec::with_capacity(self.params.len() + 1);
+        for (spec, data) in self.manifest.params.iter().zip(&self.params) {
+            inputs.push(rt.buffer_f32(&spec.shape, data)?);
+        }
+        inputs.push(rt.buffer_i32(&[b, s], &tokens)?);
+        let out = rt.execute_buffers("forward", &inputs)?;
+        let logits = to_f32(&out[0])?; // [b, s, v]
+
+        // greedy next token at each slot's last position
+        let mut decoded = 0;
+        for (i, slot_opt) in self.active.iter_mut().enumerate() {
+            let Some(slot) = slot_opt else { continue };
+            let pos = slot.tokens.len() - 1;
+            let row = &logits[(i * s + pos) * v..(i * s + pos + 1) * v];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k as i32)
+                .unwrap_or(0);
+            slot.tokens.push(next);
+            decoded += 1;
+            let new_tokens = slot.tokens.len() - slot.prompt_len;
+            if new_tokens >= slot.max_new || slot.tokens.len() >= s {
+                self.completions.push(Completion {
+                    id: slot.id,
+                    output: slot.tokens[slot.prompt_len..].to_vec(),
+                    latency: slot.admitted.elapsed().as_secs_f64(),
+                    prompt_len: slot.prompt_len,
+                });
+                *slot_opt = None;
+            }
+        }
+        self.steps += 1;
+        self.occupied_slot_steps += occupied as u64;
+        Ok(decoded)
+    }
+
+    /// Drain queue + active slots to completion. Returns total decoded
+    /// tokens.
+    pub fn run_to_completion(&mut self, rt: &Runtime) -> Result<usize> {
+        let mut total = 0;
+        while self.pending() > 0 || self.active_count() > 0 {
+            total += self.step(rt)?;
+        }
+        Ok(total)
+    }
+
+    /// Mean batch occupancy across decode steps (1.0 = always full).
+    pub fn occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.occupied_slot_steps as f64 / (self.steps as f64 * self.manifest.batch as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+    use std::collections::BTreeMap;
+
+    fn manifest() -> Manifest {
+        Manifest {
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![4], init_std: 0.1 },
+                ParamSpec { name: "mom.w".into(), shape: vec![4], init_std: 0.0 },
+            ],
+            batch: 2,
+            seq: 8,
+            vocab: 16,
+            meta: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn refill_fills_slots_in_fifo_order() {
+        let mut srv = InferenceServer::new(manifest(), 1);
+        for id in 0..5 {
+            srv.submit(InferenceRequest {
+                id,
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 4,
+            });
+        }
+        srv.refill();
+        assert_eq!(srv.active_count(), 2);
+        assert_eq!(srv.pending(), 3);
+        let ids: Vec<u64> = srv.active.iter().flatten().map(|s| s.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn long_prompts_truncated_to_seq() {
+        let mut srv = InferenceServer::new(manifest(), 1);
+        srv.submit(InferenceRequest {
+            id: 0,
+            prompt: vec![1; 100],
+            max_new_tokens: 2,
+        });
+        srv.refill();
+        let slot = srv.active[0].as_ref().unwrap();
+        assert_eq!(slot.tokens.len(), 7); // seq-1
+    }
+
+    #[test]
+    fn occupancy_zero_before_steps() {
+        let srv = InferenceServer::new(manifest(), 1);
+        assert_eq!(srv.occupancy(), 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Fluent construction of execution graphs.
+//!
+//! Model code (and HyperOffload's orchestration pass) builds graphs
+//! through this builder, which tracks per-device "last node" so
+//! sequential program order on a device becomes explicit edges, while
+//! cross-device edges are added only where data actually flows.
+
+use super::ops::{CollectiveKind, ExecGraph, Node, NodeId, OpKind};
+use crate::memory::{RegionId, StateKind};
+use crate::supernode::DeviceId;
+use std::collections::BTreeMap;
+
+/// Builder with per-device program-order chaining.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    graph: ExecGraph,
+    /// Last node issued per device (program order).
+    last_on_device: BTreeMap<DeviceId, NodeId>,
+    phase: usize,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance the logical phase counter (e.g. per layer).
+    pub fn set_phase(&mut self, phase: usize) {
+        self.phase = phase;
+    }
+
+    pub fn phase(&self) -> usize {
+        self.phase
+    }
+
+    fn push(&mut self, device: DeviceId, op: OpKind, label: String, extra_deps: &[NodeId], reads: Vec<RegionId>, state_kind: Option<StateKind>, chain: bool) -> NodeId {
+        let mut deps: Vec<NodeId> = extra_deps.to_vec();
+        if chain {
+            if let Some(&last) = self.last_on_device.get(&device) {
+                if !deps.contains(&last) {
+                    deps.push(last);
+                }
+            }
+        }
+        let id = self.graph.add(Node {
+            id: NodeId(0),
+            op,
+            device,
+            deps,
+            label,
+            phase: self.phase,
+            reads,
+            state_kind,
+        });
+        self.last_on_device.insert(device, id);
+        id
+    }
+
+    /// Cube compute, chained in device program order.
+    pub fn compute(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        flops: f64,
+        bytes: f64,
+        deps: &[NodeId],
+    ) -> NodeId {
+        self.push(
+            device,
+            OpKind::Compute { flops, bytes },
+            label.into(),
+            deps,
+            vec![],
+            None,
+            true,
+        )
+    }
+
+    /// Cube compute that reads state regions (offload-managed).
+    pub fn compute_reading(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        flops: f64,
+        bytes: f64,
+        reads: Vec<RegionId>,
+        deps: &[NodeId],
+    ) -> NodeId {
+        self.push(
+            device,
+            OpKind::Compute { flops, bytes },
+            label.into(),
+            deps,
+            reads,
+            None,
+            true,
+        )
+    }
+
+    /// Vector-engine compute.
+    pub fn vector(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        flops: f64,
+        deps: &[NodeId],
+    ) -> NodeId {
+        self.push(
+            device,
+            OpKind::VectorCompute { flops },
+            label.into(),
+            deps,
+            vec![],
+            None,
+            true,
+        )
+    }
+
+    /// Collective over a group, initiated from `device`.
+    pub fn collective(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        kind: CollectiveKind,
+        bytes: f64,
+        group: Vec<DeviceId>,
+        deps: &[NodeId],
+    ) -> NodeId {
+        self.push(
+            device,
+            OpKind::Collective { kind, bytes, group },
+            label.into(),
+            deps,
+            vec![],
+            None,
+            true,
+        )
+    }
+
+    /// Collective issued *off the program-order chain* — this is what
+    /// allows comm/compute overlap; dependencies must be given
+    /// explicitly.
+    pub fn collective_async(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        kind: CollectiveKind,
+        bytes: f64,
+        group: Vec<DeviceId>,
+        deps: &[NodeId],
+    ) -> NodeId {
+        let id = self.graph.add(Node {
+            id: NodeId(0),
+            op: OpKind::Collective { kind, bytes, group },
+            device,
+            deps: deps.to_vec(),
+            label: label.into(),
+            phase: self.phase,
+            reads: vec![],
+            state_kind: None,
+        });
+        id
+    }
+
+    /// Prefetch op (HyperOffload inserts these; they run on the memcpy
+    /// stream, off the compute chain).
+    pub fn prefetch(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        region: RegionId,
+        bytes: u64,
+        deps: &[NodeId],
+    ) -> NodeId {
+        self.graph.add(Node {
+            id: NodeId(0),
+            op: OpKind::Prefetch { region, bytes },
+            device,
+            deps: deps.to_vec(),
+            label: label.into(),
+            phase: self.phase,
+            reads: vec![],
+            state_kind: None,
+        })
+    }
+
+    /// Offload op, also off-chain.
+    pub fn offload(
+        &mut self,
+        device: DeviceId,
+        label: impl Into<String>,
+        region: RegionId,
+        bytes: u64,
+        dirty: bool,
+        deps: &[NodeId],
+    ) -> NodeId {
+        self.graph.add(Node {
+            id: NodeId(0),
+            op: OpKind::Offload {
+                region,
+                bytes,
+                dirty,
+            },
+            device,
+            deps: deps.to_vec(),
+            label: label.into(),
+            phase: self.phase,
+            reads: vec![],
+            state_kind: None,
+        })
+    }
+
+    /// Barrier joining several nodes on a device.
+    pub fn barrier(&mut self, device: DeviceId, deps: &[NodeId]) -> NodeId {
+        self.push(
+            device,
+            OpKind::Barrier,
+            "barrier".into(),
+            deps,
+            vec![],
+            None,
+            true,
+        )
+    }
+
+    pub fn last_on(&self, device: DeviceId) -> Option<NodeId> {
+        self.last_on_device.get(&device).copied()
+    }
+
+    pub fn graph(&self) -> &ExecGraph {
+        &self.graph
+    }
+
+    pub fn finish(self) -> ExecGraph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_order_chains_per_device() {
+        let mut b = GraphBuilder::new();
+        let d0 = DeviceId(0);
+        let d1 = DeviceId(1);
+        let a = b.compute(d0, "a", 1.0, 0.0, &[]);
+        let c = b.compute(d0, "c", 1.0, 0.0, &[]);
+        let x = b.compute(d1, "x", 1.0, 0.0, &[]);
+        let g = b.finish();
+        assert_eq!(g.node(c).deps, vec![a]); // chained on d0
+        assert!(g.node(x).deps.is_empty()); // d1 independent
+    }
+
+    #[test]
+    fn async_collective_not_chained() {
+        let mut b = GraphBuilder::new();
+        let d = DeviceId(0);
+        let a = b.compute(d, "a", 1.0, 0.0, &[]);
+        let c = b.collective_async(d, "ar", CollectiveKind::AllReduce, 8.0, vec![d], &[a]);
+        let next = b.compute(d, "b", 1.0, 0.0, &[]);
+        let g = b.finish();
+        assert_eq!(g.node(c).deps, vec![a]);
+        // next chains to a (the last *chained* node), not to the async collective
+        assert_eq!(g.node(next).deps, vec![a]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Execution-graph IR.
+//!
+//! HyperOffload's "holistic graph orchestration" (§3.2) works by
+//! abstracting cache operations into *native operators* and letting a
+//! compiler pass reorganize the execution flow. This module is that
+//! graph: typed ops (compute / collective / prefetch / offload), edges,
+//! and lowering into the discrete-event simulator.
+
+pub mod builder;
+pub mod ops;
+pub mod schedule;
+
+pub use builder::GraphBuilder;
+pub use ops::{CollectiveKind, ExecGraph, Node, NodeId, OpKind};
+pub use schedule::{critical_path, lower_to_sim, node_duration, topo_order, LoweredGraph};

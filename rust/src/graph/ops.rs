@@ -1,0 +1,202 @@
+//! Graph node/op definitions.
+
+use crate::memory::{RegionId, StateKind};
+use crate::supernode::DeviceId;
+
+/// Node handle within an [`ExecGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Collective communication patterns the framework understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+    P2p,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "all-reduce",
+            CollectiveKind::AllGather => "all-gather",
+            CollectiveKind::ReduceScatter => "reduce-scatter",
+            CollectiveKind::AllToAll => "all-to-all",
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::P2p => "p2p",
+        }
+    }
+}
+
+/// Operator kinds. Prefetch/Offload being *first-class ops* is the core
+/// of HyperOffload's holistic orchestration: the same scheduler that
+/// orders matmuls orders cache migrations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Dense compute on the cube engine: `flops` at `efficiency`,
+    /// streaming `bytes` through HBM (roofline).
+    Compute { flops: f64, bytes: f64 },
+    /// Elementwise compute on the vector engine.
+    VectorCompute { flops: f64 },
+    /// Collective over `group` moving `bytes` per rank.
+    Collective {
+        kind: CollectiveKind,
+        bytes: f64,
+        group: Vec<DeviceId>,
+    },
+    /// DRAM→HBM migration of a state region.
+    Prefetch { region: RegionId, bytes: u64 },
+    /// HBM→DRAM migration (dirty = needs writeback).
+    Offload {
+        region: RegionId,
+        bytes: u64,
+        dirty: bool,
+    },
+    /// Pure ordering constraint.
+    Barrier,
+}
+
+impl OpKind {
+    pub fn is_comm(&self) -> bool {
+        matches!(self, OpKind::Collective { .. })
+    }
+
+    pub fn is_memory(&self) -> bool {
+        matches!(self, OpKind::Prefetch { .. } | OpKind::Offload { .. })
+    }
+}
+
+/// A graph node: op + placement + dependency edges + metadata.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: OpKind,
+    /// Which device executes this node (collectives use their group;
+    /// `device` is the initiating rank).
+    pub device: DeviceId,
+    pub deps: Vec<NodeId>,
+    /// Human-readable label ("layer3.ffn.matmul").
+    pub label: String,
+    /// Execution phase within a step (used by prefetch prediction).
+    pub phase: usize,
+    /// State regions this node reads — HyperOffload guarantees they are
+    /// HBM-resident before issue.
+    pub reads: Vec<RegionId>,
+    /// Optional state class for accounting.
+    pub state_kind: Option<StateKind>,
+}
+
+/// The execution graph: an append-only DAG (deps always point backward,
+/// enforced at insert).
+#[derive(Debug, Clone, Default)]
+pub struct ExecGraph {
+    pub nodes: Vec<Node>,
+}
+
+impl ExecGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, mut node: Node) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        node.id = id;
+        for d in &node.deps {
+            assert!(d.0 < id.0, "dependency must point to an earlier node");
+        }
+        self.nodes.push(node);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Count nodes matching a predicate.
+    pub fn count(&self, f: impl Fn(&Node) -> bool) -> usize {
+        self.nodes.iter().filter(|n| f(n)).count()
+    }
+
+    /// Verify DAG invariants (used in tests/passes): ids consecutive,
+    /// deps backward, no self-deps.
+    pub fn check(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id.0 != i {
+                return Err(format!("node {} has id {:?}", i, n.id));
+            }
+            for d in &n.deps {
+                if d.0 >= i {
+                    return Err(format!("node {i} depends on later node {}", d.0));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(op: OpKind, deps: Vec<NodeId>) -> Node {
+        Node {
+            id: NodeId(0),
+            op,
+            device: DeviceId(0),
+            deps,
+            label: String::new(),
+            phase: 0,
+            reads: vec![],
+            state_kind: None,
+        }
+    }
+
+    #[test]
+    fn append_only_dag() {
+        let mut g = ExecGraph::new();
+        let a = g.add(node(
+            OpKind::Compute {
+                flops: 1.0,
+                bytes: 0.0,
+            },
+            vec![],
+        ));
+        let b = g.add(node(OpKind::Barrier, vec![a]));
+        assert_eq!(b, NodeId(1));
+        g.check().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "earlier node")]
+    fn forward_dep_rejected() {
+        let mut g = ExecGraph::new();
+        g.add(node(OpKind::Barrier, vec![NodeId(5)]));
+    }
+
+    #[test]
+    fn op_classification() {
+        assert!(OpKind::Collective {
+            kind: CollectiveKind::AllReduce,
+            bytes: 1.0,
+            group: vec![]
+        }
+        .is_comm());
+        assert!(OpKind::Prefetch {
+            region: RegionId(0),
+            bytes: 1
+        }
+        .is_memory());
+        assert!(!OpKind::Barrier.is_comm());
+    }
+}

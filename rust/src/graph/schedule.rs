@@ -1,0 +1,236 @@
+//! Graph scheduling: topological order, critical path, and lowering to
+//! the discrete-event simulator.
+//!
+//! Lowering maps each op to a (resource, duration) pair:
+//! Compute→cube, VectorCompute→vector, Collective→comm-out (costed by
+//! `collectives::cost` over the topology), Prefetch/Offload→memcpy
+//! (costed by the device's transfer engine). Dependencies carry over
+//! 1:1, so overlap falls out of resource disjointness — exactly how the
+//! real MindSpore runtime extracts concurrency from stream assignment.
+
+use super::ops::{ExecGraph, NodeId, OpKind};
+use crate::collectives;
+use crate::memory::TransferEngine;
+use crate::sim::{tags, Engine, SimResult, Stream, StreamSet, TaskId};
+use crate::supernode::Topology;
+
+/// Kahn topological order (stable: ready nodes processed in id order).
+pub fn topo_order(g: &ExecGraph) -> Vec<NodeId> {
+    let n = g.len();
+    let mut indeg = vec![0usize; n];
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for node in &g.nodes {
+        indeg[node.id.0] = node.deps.len();
+        for d in &node.deps {
+            dependents[d.0].push(node.id.0);
+        }
+    }
+    let mut ready: std::collections::BinaryHeap<std::cmp::Reverse<usize>> = indeg
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d == 0)
+        .map(|(i, _)| std::cmp::Reverse(i))
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(std::cmp::Reverse(i)) = ready.pop() {
+        order.push(NodeId(i));
+        for &j in &dependents[i] {
+            indeg[j] -= 1;
+            if indeg[j] == 0 {
+                ready.push(std::cmp::Reverse(j));
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "cycle in graph");
+    order
+}
+
+/// Duration model for one node, given the environment.
+pub fn node_duration(
+    g: &ExecGraph,
+    id: NodeId,
+    topo: &Topology,
+    engine: &TransferEngine,
+    cube_efficiency: f64,
+) -> f64 {
+    let node = g.node(id);
+    let spec = &topo.device(node.device).spec;
+    match &node.op {
+        OpKind::Compute { flops, bytes } => spec.roofline_time(*flops, *bytes, cube_efficiency),
+        OpKind::VectorCompute { flops } => spec.vector_time(*flops, 0.8),
+        OpKind::Collective { kind, bytes, group } => {
+            collectives::cost(topo, *kind, *bytes, group).time
+        }
+        OpKind::Prefetch { bytes, .. } => engine.transfer_time(*bytes),
+        OpKind::Offload { bytes, dirty, .. } => {
+            if *dirty {
+                engine.transfer_time(*bytes)
+            } else {
+                engine.latency
+            }
+        }
+        OpKind::Barrier => 0.0,
+    }
+}
+
+/// Critical-path length (seconds) through the graph, ignoring resource
+/// contention — the lower bound any schedule can hit.
+pub fn critical_path(
+    g: &ExecGraph,
+    topo: &Topology,
+    engine: &TransferEngine,
+    cube_efficiency: f64,
+) -> f64 {
+    let order = topo_order(g);
+    let mut finish = vec![0.0f64; g.len()];
+    let mut best: f64 = 0.0;
+    for id in order {
+        let node = g.node(id);
+        let start = node
+            .deps
+            .iter()
+            .map(|d| finish[d.0])
+            .fold(0.0f64, f64::max);
+        let dur = node_duration(g, id, topo, engine, cube_efficiency);
+        finish[id.0] = start + dur;
+        best = best.max(finish[id.0]);
+    }
+    best
+}
+
+/// Result of lowering: the sim engine (already populated) plus the
+/// node→task mapping.
+pub struct LoweredGraph {
+    pub engine: Engine,
+    pub streams: StreamSet,
+    pub task_of_node: Vec<TaskId>,
+}
+
+impl LoweredGraph {
+    pub fn run(&mut self) -> SimResult {
+        self.engine.run()
+    }
+}
+
+/// Lower an execution graph onto per-device streams.
+pub fn lower_to_sim(
+    g: &ExecGraph,
+    topo: &Topology,
+    xfer: &TransferEngine,
+    cube_efficiency: f64,
+) -> LoweredGraph {
+    let mut engine = Engine::new();
+    let streams = StreamSet::new(&mut engine, topo.device_count());
+    let mut task_of_node: Vec<TaskId> = Vec::with_capacity(g.len());
+    // Engine::add_task requires deps to be earlier tasks; graph ids are
+    // already topologically valid (append-only DAG), so insert in id
+    // order.
+    for node in &g.nodes {
+        let dur = node_duration(g, node.id, topo, xfer, cube_efficiency);
+        let (stream, tag) = match &node.op {
+            OpKind::Compute { .. } => (Stream::Cube, tags::COMPUTE),
+            OpKind::VectorCompute { .. } => (Stream::Vector, tags::VECTOR),
+            OpKind::Collective { .. } => (Stream::CommOut, tags::COMM),
+            OpKind::Prefetch { .. } => (Stream::Memcpy, tags::PREFETCH),
+            OpKind::Offload { .. } => (Stream::Memcpy, tags::OFFLOAD),
+            OpKind::Barrier => (Stream::Cube, tags::COMPUTE),
+        };
+        let resource = streams.get(node.device, stream);
+        let deps: Vec<TaskId> = node.deps.iter().map(|d| task_of_node[d.0]).collect();
+        let t = engine.add_task(resource, dur, &deps, tag);
+        task_of_node.push(t);
+    }
+    LoweredGraph {
+        engine,
+        streams,
+        task_of_node,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CollectiveKind, GraphBuilder};
+    use crate::supernode::DeviceId;
+
+    fn env() -> (Topology, TransferEngine) {
+        (Topology::tiny(), TransferEngine::supernode())
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let mut b = GraphBuilder::new();
+        let d = DeviceId(0);
+        let a = b.compute(d, "a", 1e9, 0.0, &[]);
+        let c = b.compute(d, "c", 1e9, 0.0, &[a]);
+        let g = b.finish();
+        let order = topo_order(&g);
+        let pos = |id: NodeId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(a) < pos(c));
+    }
+
+    #[test]
+    fn critical_path_of_chain() {
+        let (topo, xfer) = env();
+        let mut b = GraphBuilder::new();
+        let d = DeviceId(0);
+        let a = b.compute(d, "a", 350e12, 0.0, &[]); // 1s at eff=1
+        b.compute(d, "c", 350e12, 0.0, &[a]);
+        let g = b.finish();
+        let cp = critical_path(&g, &topo, &xfer, 1.0);
+        assert!((cp - 2.0).abs() < 1e-9, "cp={cp}");
+    }
+
+    #[test]
+    fn lowering_overlaps_comm_and_compute() {
+        let (topo, xfer) = env();
+        let mut b = GraphBuilder::new();
+        let d = DeviceId(0);
+        let group: Vec<DeviceId> = (0..4).map(DeviceId).collect();
+        let a = b.compute(d, "a", 35e12, 0.0, &[]); // 0.1s
+        // async collective depending only on a
+        b.collective_async(d, "ar", CollectiveKind::AllReduce, 1e9, group, &[a]);
+        // next compute also only depends on a -> runs concurrently
+        b.compute(d, "c", 35e12, 0.0, &[]);
+        let g = b.finish();
+        let mut low = lower_to_sim(&g, &topo, &xfer, 1.0);
+        let res = low.run();
+        let cube = low.streams.get(d, crate::sim::Stream::Cube);
+        let comm = low.streams.get(d, crate::sim::Stream::CommOut);
+        assert!(res.busy_time(comm) > 0.0);
+        // makespan < serial sum because comm overlaps the second compute
+        let serial = res.busy_time(cube) + res.busy_time(comm);
+        assert!(res.makespan < serial);
+    }
+
+    #[test]
+    fn barrier_costs_nothing() {
+        let (topo, xfer) = env();
+        let mut b = GraphBuilder::new();
+        let d = DeviceId(0);
+        let a = b.compute(d, "a", 35e12, 0.0, &[]);
+        b.barrier(d, &[a]);
+        let g = b.finish();
+        let mut low = lower_to_sim(&g, &topo, &xfer, 1.0);
+        let res = low.run();
+        assert!((res.makespan - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn critical_path_lower_bounds_sim() {
+        let (topo, xfer) = env();
+        let mut b = GraphBuilder::new();
+        // two devices, cross dependencies
+        let d0 = DeviceId(0);
+        let d1 = DeviceId(1);
+        let a = b.compute(d0, "a", 35e12, 0.0, &[]);
+        let x = b.compute(d1, "x", 70e12, 0.0, &[]);
+        let c = b.compute(d0, "c", 35e12, 0.0, &[x]);
+        b.compute(d1, "y", 35e12, 0.0, &[a, c]);
+        let g = b.finish();
+        let cp = critical_path(&g, &topo, &xfer, 1.0);
+        let mut low = lower_to_sim(&g, &topo, &xfer, 1.0);
+        let res = low.run();
+        assert!(res.makespan >= cp - 1e-12);
+    }
+}

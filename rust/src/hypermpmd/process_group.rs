@@ -1,0 +1,269 @@
+//! MPMD process-group configuration — the paper's Listing 1.
+//!
+//! "HyperMPMD partitions independent MPMD process groups based on
+//! modalities or tasks (e.g., text, image, audio, fusion, and task
+//! scheduling groups). Each group executes specialized program logic...
+//! By encapsulating core logic into independent modules and defining
+//! node-to-module mappings via configuration files, the framework
+//! eliminates the need for rigid hard-coding."
+//!
+//! Config format (JSON):
+//! ```json
+//! {
+//!   "groups": [
+//!     {"name": "text_encoder",   "module": "text",   "ranks": [0, 8]},
+//!     {"name": "vision_encoder", "module": "vision", "ranks": [8, 24]},
+//!     {"name": "fusion",         "module": "fusion", "ranks": [24, 28]},
+//!     {"name": "decoder",        "module": "decoder","ranks": [28, 64]}
+//!   ]
+//! }
+//! ```
+//! `ranks` is a half-open [start, end) range of device ranks.
+
+use crate::supernode::DeviceId;
+use crate::util::json::Json;
+
+/// One MPMD process group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessGroup {
+    pub name: String,
+    pub module: String,
+    pub rank_start: usize,
+    pub rank_end: usize,
+}
+
+impl ProcessGroup {
+    pub fn len(&self) -> usize {
+        self.rank_end - self.rank_start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rank_start == self.rank_end
+    }
+
+    pub fn devices(&self) -> Vec<DeviceId> {
+        (self.rank_start..self.rank_end).map(DeviceId).collect()
+    }
+
+    pub fn contains(&self, d: DeviceId) -> bool {
+        (self.rank_start..self.rank_end).contains(&d.0)
+    }
+}
+
+/// A validated node-to-module mapping.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProcessGroupMap {
+    pub groups: Vec<ProcessGroup>,
+}
+
+/// Errors in the mapping config.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MappingError {
+    Parse(String),
+    MissingField(String),
+    BadRange { group: String },
+    Overlap { a: String, b: String },
+    BeyondCluster { group: String, end: usize, cluster: usize },
+}
+
+impl std::fmt::Display for MappingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MappingError::Parse(e) => write!(f, "config parse error: {e}"),
+            MappingError::MissingField(x) => write!(f, "missing field '{x}'"),
+            MappingError::BadRange { group } => {
+                write!(f, "group '{group}' has an empty/inverted rank range")
+            }
+            MappingError::Overlap { a, b } => write!(f, "groups '{a}' and '{b}' overlap"),
+            MappingError::BeyondCluster {
+                group,
+                end,
+                cluster,
+            } => write!(
+                f,
+                "group '{group}' ends at rank {end} but the cluster has {cluster} devices"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MappingError {}
+
+impl ProcessGroupMap {
+    /// Parse + validate a Listing-1-style JSON config.
+    pub fn from_json(src: &str, cluster_devices: usize) -> Result<Self, MappingError> {
+        let json = Json::parse(src).map_err(|e| MappingError::Parse(e.to_string()))?;
+        let groups_json = json
+            .get_path("groups")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| MappingError::MissingField("groups".into()))?;
+        let mut groups = Vec::with_capacity(groups_json.len());
+        for g in groups_json {
+            let name = g
+                .get_path("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| MappingError::MissingField("name".into()))?
+                .to_string();
+            let module = g
+                .get_path("module")
+                .and_then(Json::as_str)
+                .ok_or_else(|| MappingError::MissingField("module".into()))?
+                .to_string();
+            let ranks = g
+                .get_path("ranks")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| MappingError::MissingField("ranks".into()))?;
+            if ranks.len() != 2 {
+                return Err(MappingError::BadRange { group: name });
+            }
+            let start = ranks[0]
+                .as_usize()
+                .ok_or_else(|| MappingError::BadRange {
+                    group: name.clone(),
+                })?;
+            let end = ranks[1]
+                .as_usize()
+                .ok_or_else(|| MappingError::BadRange {
+                    group: name.clone(),
+                })?;
+            if end <= start {
+                return Err(MappingError::BadRange { group: name });
+            }
+            if end > cluster_devices {
+                return Err(MappingError::BeyondCluster {
+                    group: name,
+                    end,
+                    cluster: cluster_devices,
+                });
+            }
+            groups.push(ProcessGroup {
+                name,
+                module,
+                rank_start: start,
+                rank_end: end,
+            });
+        }
+        // overlap check
+        let mut sorted: Vec<&ProcessGroup> = groups.iter().collect();
+        sorted.sort_by_key(|g| g.rank_start);
+        for w in sorted.windows(2) {
+            if w[1].rank_start < w[0].rank_end {
+                return Err(MappingError::Overlap {
+                    a: w[0].name.clone(),
+                    b: w[1].name.clone(),
+                });
+            }
+        }
+        Ok(Self { groups })
+    }
+
+    /// The group owning a device, if any.
+    pub fn group_of(&self, d: DeviceId) -> Option<&ProcessGroup> {
+        self.groups.iter().find(|g| g.contains(d))
+    }
+
+    /// Group by module name.
+    pub fn by_module(&self, module: &str) -> Option<&ProcessGroup> {
+        self.groups.iter().find(|g| g.module == module)
+    }
+
+    /// Total devices covered.
+    pub fn covered(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Render back to JSON (round-trip).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::JsonObj;
+        let mut arr = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            let mut o = JsonObj::new();
+            o.insert("name", Json::from(g.name.as_str()));
+            o.insert("module", Json::from(g.module.as_str()));
+            o.insert(
+                "ranks",
+                Json::Arr(vec![Json::from(g.rank_start), Json::from(g.rank_end)]),
+            );
+            arr.push(Json::Obj(o));
+        }
+        let mut root = JsonObj::new();
+        root.insert("groups", Json::Arr(arr));
+        Json::Obj(root)
+    }
+}
+
+/// The paper's omni-modal example mapping on a 64-device slice.
+pub fn omni_modal_example() -> &'static str {
+    r#"{
+  "groups": [
+    {"name": "text_encoder",   "module": "text",    "ranks": [0, 8]},
+    {"name": "vision_encoder", "module": "vision",  "ranks": [8, 24]},
+    {"name": "audio_encoder",  "module": "audio",   "ranks": [24, 32]},
+    {"name": "fusion",         "module": "fusion",  "ranks": [32, 36]},
+    {"name": "decoder",        "module": "decoder", "ranks": [36, 60]},
+    {"name": "scheduler",      "module": "control", "ranks": [60, 64]}
+  ]
+}"#
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_omni_modal_example() {
+        let m = ProcessGroupMap::from_json(omni_modal_example(), 64).unwrap();
+        assert_eq!(m.groups.len(), 6);
+        assert_eq!(m.covered(), 64);
+        assert_eq!(m.by_module("vision").unwrap().len(), 16);
+        assert_eq!(m.group_of(DeviceId(33)).unwrap().name, "fusion");
+        assert!(m.group_of(DeviceId(63)).is_some());
+    }
+
+    #[test]
+    fn rejects_overlap() {
+        let src = r#"{"groups": [
+            {"name": "a", "module": "x", "ranks": [0, 10]},
+            {"name": "b", "module": "y", "ranks": [5, 15]}
+        ]}"#;
+        assert!(matches!(
+            ProcessGroupMap::from_json(src, 64),
+            Err(MappingError::Overlap { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_beyond_cluster() {
+        let src = r#"{"groups": [{"name": "a", "module": "x", "ranks": [0, 100]}]}"#;
+        assert!(matches!(
+            ProcessGroupMap::from_json(src, 64),
+            Err(MappingError::BeyondCluster { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_range_and_missing_fields() {
+        assert!(matches!(
+            ProcessGroupMap::from_json(
+                r#"{"groups": [{"name": "a", "module": "x", "ranks": [5, 5]}]}"#,
+                64
+            ),
+            Err(MappingError::BadRange { .. })
+        ));
+        assert!(matches!(
+            ProcessGroupMap::from_json(r#"{"groups": [{"name": "a", "ranks": [0, 1]}]}"#, 64),
+            Err(MappingError::MissingField(_))
+        ));
+        assert!(matches!(
+            ProcessGroupMap::from_json("{}", 64),
+            Err(MappingError::MissingField(_))
+        ));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ProcessGroupMap::from_json(omni_modal_example(), 64).unwrap();
+        let back = ProcessGroupMap::from_json(&m.to_json().dump(), 64).unwrap();
+        assert_eq!(m, back);
+    }
+}

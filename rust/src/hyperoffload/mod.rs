@@ -1,0 +1,24 @@
+//! HyperOffload (§3.2): automated hierarchical memory management.
+//!
+//! - [`policy`] — what to offload and when (watermarks, state classes).
+//! - [`prefetcher`] — access-pattern prediction + multi-level cache
+//!   pipeline scheduling.
+//! - [`orchestrator`] — the holistic graph pass that turns cache
+//!   migrations into first-class operators and overlaps them with
+//!   compute.
+//! - [`kvcache`] — paged KV cache with HBM↔DRAM swapping for the
+//!   inference claim (71K → 123K context).
+
+pub mod kvcache;
+pub mod orchestrator;
+pub mod policy;
+pub mod prefetcher;
+pub mod recompute;
+
+pub use kvcache::{KvCacheConfig, PagedKvCache};
+pub use recompute::{
+    plan_recompute, sqrt_checkpointing, ActDecision, LayerActs, RecomputeConfig, RecomputePlan,
+};
+pub use orchestrator::{orchestrate, OffloadPlan, OrchestratorConfig};
+pub use policy::{OffloadPolicy, PolicyDecision};
+pub use prefetcher::{AccessPredictor, PrefetchSchedule, Prefetcher};

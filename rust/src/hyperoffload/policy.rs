@@ -1,0 +1,187 @@
+//! Offload policy: which state classes live in the DRAM pool and which
+//! stay HBM-resident, driven by capacity watermarks.
+//!
+//! The paper's §3.2 insight: with the supernode's pooled DRAM, the
+//! framework can hold *all* persistent state (weights, optimizer
+//! moments) in the pool and stream it through HBM just-in-time, freeing
+//! HBM for activations — which in turn allows plain 1D data parallelism
+//! where ND-SPMD used to be mandatory.
+
+use crate::memory::{StateBudget, StateKind};
+
+/// Decision per state class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyDecision {
+    /// Keep permanently in HBM.
+    PinHbm,
+    /// Home in DRAM, prefetch through HBM just-in-time.
+    StreamThroughHbm,
+    /// Home in DRAM, access only at step boundaries (optimizer states).
+    DramResident,
+}
+
+/// Watermark-based policy.
+#[derive(Debug, Clone)]
+pub struct OffloadPolicy {
+    /// Fraction of HBM reserved for activations + working set.
+    pub hbm_reserve_frac: f64,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// Enable offloading at all (false = baseline behaviour).
+    pub enabled: bool,
+}
+
+impl OffloadPolicy {
+    pub fn new(hbm_bytes: u64) -> Self {
+        Self {
+            hbm_reserve_frac: 0.3,
+            hbm_bytes,
+            enabled: true,
+        }
+    }
+
+    pub fn disabled(hbm_bytes: u64) -> Self {
+        Self {
+            hbm_reserve_frac: 0.0,
+            hbm_bytes,
+            enabled: false,
+        }
+    }
+
+    /// Usable HBM for persistent state.
+    pub fn hbm_budget(&self) -> u64 {
+        (self.hbm_bytes as f64 * (1.0 - self.hbm_reserve_frac)) as u64
+    }
+
+    /// Decide placement for each state class given the per-device
+    /// budget. Greedy: activations always HBM; weights pinned if
+    /// everything fits; otherwise weights stream and optimizer moments
+    /// (touched once per step) go DRAM-resident.
+    pub fn decide(&self, budget: &StateBudget) -> Vec<(StateKind, PolicyDecision)> {
+        if !self.enabled {
+            // baseline: everything must sit in HBM
+            return StateKind::all()
+                .into_iter()
+                .map(|k| (k, PolicyDecision::PinHbm))
+                .collect();
+        }
+        let hbm = self.hbm_budget();
+        let persistent = budget.weights + budget.gradients + budget.optimizer;
+        let mut out = Vec::new();
+        if persistent + budget.kv_cache <= hbm {
+            for k in StateKind::all() {
+                out.push((k, PolicyDecision::PinHbm));
+            }
+            return out;
+        }
+        // optimizer moments are the coldest: DRAM-resident first
+        out.push((StateKind::OptimizerMoments, PolicyDecision::DramResident));
+        let hot = budget.weights + budget.gradients + budget.kv_cache;
+        if hot <= hbm {
+            out.push((StateKind::Weights, PolicyDecision::PinHbm));
+            out.push((StateKind::Gradients, PolicyDecision::PinHbm));
+            out.push((StateKind::KvCache, PolicyDecision::PinHbm));
+        } else {
+            out.push((StateKind::Weights, PolicyDecision::StreamThroughHbm));
+            out.push((StateKind::Gradients, PolicyDecision::StreamThroughHbm));
+            out.push((StateKind::KvCache, PolicyDecision::StreamThroughHbm));
+        }
+        out.push((StateKind::Activations, PolicyDecision::PinHbm));
+        out
+    }
+
+    /// Does this budget *require* offloading (i.e. exceed HBM)?
+    pub fn requires_offload(&self, budget: &StateBudget) -> bool {
+        budget.total() > self.hbm_bytes
+    }
+
+    /// The paper's headline consequence: with HyperOffload the model
+    /// state no longer constrains the parallel strategy, so 1D DP
+    /// suffices. Returns the minimum model-parallel degree (tp·pp)
+    /// needed *without* offload vs *with*.
+    pub fn min_model_parallel(&self, budget: &StateBudget) -> (usize, usize) {
+        let persistent = budget.weights + budget.gradients + budget.optimizer;
+        let act = budget.activations + budget.kv_cache;
+        // without offload: (persistent + act)/mp ≤ hbm
+        let mut without = 1usize;
+        while (persistent + act) / without as u64 > self.hbm_bytes {
+            without *= 2;
+        }
+        // with offload: only the activation reserve must fit
+        let mut with = 1usize;
+        while act / with as u64 > self.hbm_bytes {
+            with *= 2;
+        }
+        (without, with)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gib(n: u64) -> u64 {
+        n * (1 << 30)
+    }
+
+    #[test]
+    fn small_model_pins_everything() {
+        let p = OffloadPolicy::new(gib(64));
+        let b = StateBudget {
+            weights: gib(2),
+            gradients: gib(2),
+            optimizer: gib(12),
+            activations: gib(4),
+            kv_cache: 0,
+        };
+        let d = p.decide(&b);
+        assert!(d.iter().all(|(_, dec)| *dec == PolicyDecision::PinHbm));
+    }
+
+    #[test]
+    fn big_model_offloads_optimizer_first() {
+        let p = OffloadPolicy::new(gib(64));
+        // llama-8b-ish: 16 B/param ≈ 128 GiB persistent
+        let b = StateBudget {
+            weights: gib(16),
+            gradients: gib(16),
+            optimizer: gib(96),
+            activations: gib(8),
+            kv_cache: 0,
+        };
+        let d = p.decide(&b);
+        let opt = d
+            .iter()
+            .find(|(k, _)| *k == StateKind::OptimizerMoments)
+            .unwrap();
+        assert_eq!(opt.1, PolicyDecision::DramResident);
+    }
+
+    #[test]
+    fn disabled_policy_pins_all() {
+        let p = OffloadPolicy::disabled(gib(64));
+        let b = StateBudget {
+            weights: gib(100),
+            ..Default::default()
+        };
+        assert!(p
+            .decide(&b)
+            .iter()
+            .all(|(_, dec)| *dec == PolicyDecision::PinHbm));
+    }
+
+    #[test]
+    fn offload_reduces_required_model_parallelism() {
+        let p = OffloadPolicy::new(gib(64));
+        let b = StateBudget {
+            weights: gib(16),
+            gradients: gib(16),
+            optimizer: gib(96),
+            activations: gib(16),
+            kv_cache: 0,
+        };
+        let (without, with) = p.min_model_parallel(&b);
+        assert!(without >= 4, "without={without}");
+        assert_eq!(with, 1); // the paper's ND-SPMD → 1D-DP claim
+    }
+}

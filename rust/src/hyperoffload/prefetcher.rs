@@ -1,0 +1,234 @@
+//! Access-pattern prediction and multi-level cache pipeline scheduling.
+//!
+//! §3.2: "HyperOffload utilizes communication hiding techniques to
+//! asynchronously prefetch cache blocks required for the next execution
+//! phase into the high-speed storage layer before they are requested by
+//! computational operators. By integrating model structural
+//! characteristics with data access pattern prediction, the system
+//! dynamically adjusts prefetch paths."
+//!
+//! The predictor learns the phase-order access sequence (which for
+//! transformer training is layer-sequential fwd then reverse bwd, but
+//! the predictor does not assume that — it records observed orders and
+//! predicts next-phase regions), and the scheduler decides *when* to
+//! issue each prefetch so it completes just before use while fitting
+//! the HBM watermark (lookahead depth = pipeline depth).
+
+use crate::memory::{RegionId, StateRegion};
+use std::collections::BTreeMap;
+
+/// Learns region access order across steps and predicts upcoming
+/// accesses.
+#[derive(Debug, Default)]
+pub struct AccessPredictor {
+    /// region → observed phases (from registration or history).
+    first_use: BTreeMap<RegionId, usize>,
+    /// Observed access sequences from completed steps.
+    history: Vec<Vec<RegionId>>,
+    /// Current step's accesses being recorded.
+    current: Vec<RegionId>,
+}
+
+impl AccessPredictor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed from static model structure (the registry's phases).
+    pub fn seed_from_registry(&mut self, regions: &[(RegionId, &StateRegion)]) {
+        for (id, r) in regions {
+            self.first_use.insert(*id, r.first_use_phase);
+        }
+    }
+
+    /// Record an access (during execution).
+    pub fn record(&mut self, region: RegionId) {
+        self.current.push(region);
+    }
+
+    /// Close out a step; history feeds future predictions.
+    pub fn end_step(&mut self) {
+        if !self.current.is_empty() {
+            let seq = std::mem::take(&mut self.current);
+            self.history.push(seq);
+            if self.history.len() > 8 {
+                self.history.remove(0);
+            }
+        }
+    }
+
+    /// Predicted access order for the next step: last observed sequence
+    /// if available (steady-state training repeats), else static phase
+    /// order.
+    pub fn predict_order(&self) -> Vec<RegionId> {
+        if let Some(last) = self.history.last() {
+            return last.clone();
+        }
+        let mut v: Vec<(RegionId, usize)> =
+            self.first_use.iter().map(|(&r, &p)| (r, p)).collect();
+        v.sort_by_key(|&(_, p)| p);
+        v.into_iter().map(|(r, _)| r).collect()
+    }
+
+    /// Does the predictor have real history yet?
+    pub fn warmed_up(&self) -> bool {
+        !self.history.is_empty()
+    }
+}
+
+/// One scheduled prefetch: issue when `trigger_phase` starts so the
+/// region is resident by `needed_phase`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefetchSchedule {
+    pub region: RegionId,
+    pub trigger_phase: usize,
+    pub needed_phase: usize,
+}
+
+/// Multi-level cache pipeline scheduler.
+#[derive(Debug, Clone)]
+pub struct Prefetcher {
+    /// How many phases ahead to issue prefetches (pipeline depth).
+    pub lookahead: usize,
+}
+
+impl Default for Prefetcher {
+    fn default() -> Self {
+        Self { lookahead: 2 }
+    }
+}
+
+impl Prefetcher {
+    pub fn new(lookahead: usize) -> Self {
+        assert!(lookahead >= 1);
+        Self { lookahead }
+    }
+
+    /// Produce the prefetch schedule for an access order: region needed
+    /// at phase p is issued at phase p − lookahead (clamped to 0).
+    /// Duplicate accesses keep only the earliest need.
+    pub fn schedule(&self, order: &[(RegionId, usize)]) -> Vec<PrefetchSchedule> {
+        let mut seen = BTreeMap::new();
+        for &(r, phase) in order {
+            seen.entry(r).or_insert(phase);
+        }
+        let mut out: Vec<PrefetchSchedule> = seen
+            .into_iter()
+            .map(|(region, needed_phase)| PrefetchSchedule {
+                region,
+                trigger_phase: needed_phase.saturating_sub(self.lookahead),
+                needed_phase,
+            })
+            .collect();
+        out.sort_by_key(|s| (s.trigger_phase, s.needed_phase));
+        out
+    }
+
+    /// Given per-phase compute durations and a transfer time per
+    /// region, compute how much of the transfer time is hidden by
+    /// compute (the overlap metric the paper cites). Returns
+    /// (hidden_seconds, exposed_seconds).
+    pub fn overlap_estimate(
+        &self,
+        schedule: &[PrefetchSchedule],
+        phase_compute: &[f64],
+        transfer_time: impl Fn(RegionId) -> f64,
+    ) -> (f64, f64) {
+        let mut hidden = 0.0;
+        let mut exposed = 0.0;
+        for s in schedule {
+            let window: f64 = phase_compute
+                [s.trigger_phase..s.needed_phase.min(phase_compute.len())]
+                .iter()
+                .sum();
+            let t = transfer_time(s.region);
+            hidden += t.min(window);
+            exposed += (t - window).max(0.0);
+        }
+        (hidden, exposed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::{StateKind, StateRegion};
+
+    fn region(phase: usize) -> StateRegion {
+        StateRegion {
+            name: format!("r{phase}"),
+            kind: StateKind::Weights,
+            bytes: 1024,
+            first_use_phase: phase,
+            last_use_phase: phase,
+        }
+    }
+
+    #[test]
+    fn predicts_static_order_before_history() {
+        let mut p = AccessPredictor::new();
+        let r2 = region(2);
+        let r0 = region(0);
+        let r1 = region(1);
+        p.seed_from_registry(&[
+            (RegionId(2), &r2),
+            (RegionId(0), &r0),
+            (RegionId(1), &r1),
+        ]);
+        assert_eq!(
+            p.predict_order(),
+            vec![RegionId(0), RegionId(1), RegionId(2)]
+        );
+        assert!(!p.warmed_up());
+    }
+
+    #[test]
+    fn history_overrides_static_order() {
+        let mut p = AccessPredictor::new();
+        let r0 = region(0);
+        p.seed_from_registry(&[(RegionId(0), &r0)]);
+        p.record(RegionId(5));
+        p.record(RegionId(3));
+        p.end_step();
+        assert_eq!(p.predict_order(), vec![RegionId(5), RegionId(3)]);
+        assert!(p.warmed_up());
+    }
+
+    #[test]
+    fn schedule_issues_lookahead_early() {
+        let pf = Prefetcher::new(2);
+        let order = [(RegionId(0), 0), (RegionId(1), 1), (RegionId(2), 5)];
+        let s = pf.schedule(&order);
+        let by_region: BTreeMap<_, _> = s.iter().map(|x| (x.region, x)).collect();
+        assert_eq!(by_region[&RegionId(0)].trigger_phase, 0); // clamped
+        assert_eq!(by_region[&RegionId(2)].trigger_phase, 3);
+    }
+
+    #[test]
+    fn duplicate_access_keeps_earliest() {
+        let pf = Prefetcher::new(1);
+        let order = [(RegionId(0), 4), (RegionId(0), 1)];
+        let s = pf.schedule(&order);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].needed_phase, 4); // first occurrence in order wins
+    }
+
+    #[test]
+    fn overlap_accounts_hidden_vs_exposed() {
+        let pf = Prefetcher::new(2);
+        let sched = vec![PrefetchSchedule {
+            region: RegionId(0),
+            trigger_phase: 0,
+            needed_phase: 2,
+        }];
+        let compute = [1.0, 1.0, 1.0];
+        // transfer 1.5s fits in the 2s window: fully hidden
+        let (h, e) = pf.overlap_estimate(&sched, &compute, |_| 1.5);
+        assert!((h - 1.5).abs() < 1e-12);
+        assert_eq!(e, 0.0);
+        // transfer 3s exceeds the window: 1s exposed
+        let (h, e) = pf.overlap_estimate(&sched, &compute, |_| 3.0);
+        assert!((h - 2.0).abs() < 1e-12);
+        assert!((e - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,375 @@
+//! `Layout(device_matrix, alias_name, tensor_map)` — the paper's §3.4
+//! primary programming abstraction.
+//!
+//! A `Layout` describes the logical arrangement of accelerators
+//! (`device_matrix`), names each dimension (`alias_name`), and maps
+//! tensor dimensions onto device-matrix dimensions (`tensor_map`).
+//! Calling `layout.apply(tensor_map, shape)` performs the *formal
+//! derivation* of the shard strategy of Fig 6 — no physical slicing
+//! happens here; runtime placement consumes the derived spec.
+
+use std::collections::BTreeMap;
+
+/// How one tensor dimension is split.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DimSharding {
+    /// Replicated along this tensor dimension.
+    Replicated,
+    /// Split across the named device-matrix axes (outer→inner order;
+    /// multiple axes = multi-level split, e.g. ("x","y") splits one
+    /// tensor dim over both axes).
+    Split(Vec<String>),
+}
+
+/// The derived parallel partitioning strategy for one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSpec {
+    /// Per-tensor-dimension sharding.
+    pub dims: Vec<DimSharding>,
+    /// Number of shards along each tensor dimension.
+    pub shard_counts: Vec<usize>,
+    /// Device-matrix axes *not* used by any tensor dim — the tensor is
+    /// replicated across them (these become the DP axes for weights).
+    pub replicated_axes: Vec<String>,
+    /// Total number of distinct shards (product of shard_counts).
+    pub num_shards: usize,
+    /// Replication degree (product of replicated axis sizes).
+    pub replication: usize,
+}
+
+impl ShardSpec {
+    /// Shape of one shard given the global tensor shape.
+    pub fn shard_shape(&self, global: &[usize]) -> Vec<usize> {
+        assert_eq!(global.len(), self.shard_counts.len());
+        global
+            .iter()
+            .zip(&self.shard_counts)
+            .map(|(&g, &c)| {
+                assert!(g % c == 0, "dim {g} not divisible by {c} shards");
+                g / c
+            })
+            .collect()
+    }
+}
+
+/// Errors from layout construction/derivation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayoutError {
+    AliasCountMismatch { axes: usize, aliases: usize },
+    DuplicateAlias(String),
+    UnknownAlias(String),
+    AliasReused(String),
+    RankMismatch { tensor_rank: usize, map_len: usize },
+    ZeroAxis,
+}
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LayoutError::AliasCountMismatch { axes, aliases } => write!(
+                f,
+                "device_matrix has {axes} axes but {aliases} alias names given"
+            ),
+            LayoutError::DuplicateAlias(a) => write!(f, "duplicate alias '{a}'"),
+            LayoutError::UnknownAlias(a) => write!(f, "tensor_map references unknown alias '{a}'"),
+            LayoutError::AliasReused(a) => {
+                write!(f, "alias '{a}' used by more than one tensor dimension")
+            }
+            LayoutError::RankMismatch {
+                tensor_rank,
+                map_len,
+            } => write!(
+                f,
+                "tensor rank {tensor_rank} does not match tensor_map length {map_len}"
+            ),
+            LayoutError::ZeroAxis => write!(f, "device_matrix axes must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for LayoutError {}
+
+/// One entry of a tensor_map: which device axes shard this tensor dim.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MapDim {
+    /// "None" in the paper's notation — replicated.
+    None,
+    /// Shard along one named axis.
+    Axis(&'static str),
+    /// Shard along several axes jointly (multi-level).
+    Axes(Vec<&'static str>),
+}
+
+impl MapDim {
+    fn axis_names(&self) -> Vec<String> {
+        match self {
+            MapDim::None => vec![],
+            MapDim::Axis(a) => vec![a.to_string()],
+            MapDim::Axes(v) => v.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// The Layout object (paper Listing 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layout {
+    device_matrix: Vec<usize>,
+    alias_name: Vec<String>,
+    axis_size: BTreeMap<String, usize>,
+}
+
+impl Layout {
+    /// `Layout(device_matrix, alias_name)`.
+    pub fn new(device_matrix: &[usize], alias_name: &[&str]) -> Result<Self, LayoutError> {
+        if device_matrix.len() != alias_name.len() {
+            return Err(LayoutError::AliasCountMismatch {
+                axes: device_matrix.len(),
+                aliases: alias_name.len(),
+            });
+        }
+        if device_matrix.iter().any(|&a| a == 0) {
+            return Err(LayoutError::ZeroAxis);
+        }
+        let mut axis_size = BTreeMap::new();
+        for (&size, &name) in device_matrix.iter().zip(alias_name) {
+            if axis_size.insert(name.to_string(), size).is_some() {
+                return Err(LayoutError::DuplicateAlias(name.to_string()));
+            }
+        }
+        Ok(Self {
+            device_matrix: device_matrix.to_vec(),
+            alias_name: alias_name.iter().map(|s| s.to_string()).collect(),
+            axis_size,
+        })
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.device_matrix.iter().product()
+    }
+
+    pub fn axes(&self) -> &[String] {
+        &self.alias_name
+    }
+
+    pub fn axis_size(&self, name: &str) -> Option<usize> {
+        self.axis_size.get(name).copied()
+    }
+
+    /// `layout(tensor_map)` — derive the shard strategy for a tensor of
+    /// rank `tensor_map.len()`. This is the three-stage procedure of
+    /// Fig 6: start replicated, then shard dim k along its mapped axes.
+    pub fn apply(&self, tensor_map: &[MapDim]) -> Result<ShardSpec, LayoutError> {
+        let mut used: BTreeMap<String, usize> = BTreeMap::new();
+        let mut dims = Vec::with_capacity(tensor_map.len());
+        let mut shard_counts = Vec::with_capacity(tensor_map.len());
+        for (dim_idx, m) in tensor_map.iter().enumerate() {
+            let names = m.axis_names();
+            let mut count = 1usize;
+            for n in &names {
+                let size = self
+                    .axis_size
+                    .get(n)
+                    .copied()
+                    .ok_or_else(|| LayoutError::UnknownAlias(n.clone()))?;
+                if let Some(&prev) = used.get(n) {
+                    if prev != dim_idx {
+                        return Err(LayoutError::AliasReused(n.clone()));
+                    }
+                }
+                used.insert(n.clone(), dim_idx);
+                count *= size;
+            }
+            dims.push(if names.is_empty() {
+                DimSharding::Replicated
+            } else {
+                DimSharding::Split(names)
+            });
+            shard_counts.push(count);
+        }
+        let replicated_axes: Vec<String> = self
+            .alias_name
+            .iter()
+            .filter(|a| !used.contains_key(*a))
+            .cloned()
+            .collect();
+        let replication = replicated_axes
+            .iter()
+            .map(|a| self.axis_size[a])
+            .product();
+        let num_shards = shard_counts.iter().product();
+        Ok(ShardSpec {
+            dims,
+            shard_counts,
+            replicated_axes,
+            num_shards,
+            replication,
+        })
+    }
+
+    /// Validate a spec against a concrete tensor shape.
+    pub fn check_shape(
+        &self,
+        spec: &ShardSpec,
+        shape: &[usize],
+    ) -> Result<Vec<usize>, LayoutError> {
+        if shape.len() != spec.shard_counts.len() {
+            return Err(LayoutError::RankMismatch {
+                tensor_rank: shape.len(),
+                map_len: spec.shard_counts.len(),
+            });
+        }
+        Ok(spec.shard_shape(shape))
+    }
+
+    /// Which device (flat rank within the device matrix) holds the
+    /// shard at multi-index `coords` along the *device matrix* axes.
+    /// Row-major over device_matrix.
+    pub fn rank_of(&self, coords: &[usize]) -> usize {
+        assert_eq!(coords.len(), self.device_matrix.len());
+        let mut rank = 0;
+        for (c, &n) in coords.iter().zip(&self.device_matrix) {
+            assert!(*c < n);
+            rank = rank * n + c;
+        }
+        rank
+    }
+
+    /// Inverse of `rank_of`.
+    pub fn coords_of(&self, mut rank: usize) -> Vec<usize> {
+        let mut coords = vec![0; self.device_matrix.len()];
+        for i in (0..self.device_matrix.len()).rev() {
+            coords[i] = rank % self.device_matrix[i];
+            rank /= self.device_matrix[i];
+        }
+        coords
+    }
+
+    /// For every device rank, compute which tensor shard (multi-index
+    /// over tensor dims) it holds under `spec`. Devices along
+    /// replicated axes map to the same shard — this is the full
+    /// Fig 6 placement.
+    pub fn placement(&self, spec: &ShardSpec) -> Vec<Vec<usize>> {
+        let n = self.device_count();
+        let mut out = Vec::with_capacity(n);
+        for rank in 0..n {
+            let coords = self.coords_of(rank);
+            let mut shard_idx = Vec::with_capacity(spec.dims.len());
+            for dim in &spec.dims {
+                match dim {
+                    DimSharding::Replicated => shard_idx.push(0),
+                    DimSharding::Split(axes) => {
+                        // combine the coords of all axes, outer→inner
+                        let mut idx = 0;
+                        for a in axes {
+                            let ai = self.alias_name.iter().position(|x| x == a).unwrap();
+                            idx = idx * self.device_matrix[ai] + coords[ai];
+                        }
+                        shard_idx.push(idx);
+                    }
+                }
+            }
+            out.push(shard_idx);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Listing 2: 4 accelerators as a 2×2 device matrix,
+    /// tensor_map = ("x", "y") on a (2,2) tensor.
+    #[test]
+    fn listing2_example() {
+        let layout = Layout::new(&[2, 2], &["x", "y"]).unwrap();
+        let spec = layout
+            .apply(&[MapDim::Axis("x"), MapDim::Axis("y")])
+            .unwrap();
+        assert_eq!(spec.shard_counts, vec![2, 2]);
+        assert_eq!(spec.num_shards, 4);
+        assert_eq!(spec.replication, 1);
+        assert_eq!(layout.check_shape(&spec, &[2, 2]).unwrap(), vec![1, 1]);
+    }
+
+    /// Fig 6 staging: dim0 along "x" only — dim1 replicated; the "y"
+    /// axis replicates the tensor.
+    #[test]
+    fn partial_map_replicates_rest() {
+        let layout = Layout::new(&[2, 2], &["x", "y"]).unwrap();
+        let spec = layout.apply(&[MapDim::Axis("x"), MapDim::None]).unwrap();
+        assert_eq!(spec.shard_counts, vec![2, 1]);
+        assert_eq!(spec.replicated_axes, vec!["y".to_string()]);
+        assert_eq!(spec.replication, 2);
+        assert_eq!(spec.num_shards, 2);
+    }
+
+    #[test]
+    fn multi_axis_split() {
+        // 8 devices as (2,2,2); shard dim0 over both x and z: 4-way
+        let layout = Layout::new(&[2, 2, 2], &["x", "y", "z"]).unwrap();
+        let spec = layout
+            .apply(&[MapDim::Axes(vec!["x", "z"]), MapDim::Axis("y")])
+            .unwrap();
+        assert_eq!(spec.shard_counts, vec![4, 2]);
+        assert_eq!(spec.num_shards, 8);
+        assert_eq!(spec.replication, 1);
+    }
+
+    #[test]
+    fn placement_covers_all_shards() {
+        let layout = Layout::new(&[2, 2], &["x", "y"]).unwrap();
+        let spec = layout
+            .apply(&[MapDim::Axis("x"), MapDim::Axis("y")])
+            .unwrap();
+        let placement = layout.placement(&spec);
+        assert_eq!(placement.len(), 4);
+        let mut seen: Vec<_> = placement.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 4, "each device holds a distinct shard");
+    }
+
+    #[test]
+    fn placement_replication_groups() {
+        // dp axis "d" of size 2 replicates; tp axis "t" shards dim1
+        let layout = Layout::new(&[2, 4], &["d", "t"]).unwrap();
+        let spec = layout.apply(&[MapDim::None, MapDim::Axis("t")]).unwrap();
+        let placement = layout.placement(&spec);
+        // ranks 0..4 (d=0) and 4..8 (d=1) hold the same shard sequence
+        assert_eq!(&placement[0..4], &placement[4..8]);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(matches!(
+            Layout::new(&[2, 2], &["x"]),
+            Err(LayoutError::AliasCountMismatch { .. })
+        ));
+        assert!(matches!(
+            Layout::new(&[2, 2], &["x", "x"]),
+            Err(LayoutError::DuplicateAlias(_))
+        ));
+        assert!(matches!(
+            Layout::new(&[0, 2], &["x", "y"]),
+            Err(LayoutError::ZeroAxis)
+        ));
+        let layout = Layout::new(&[2, 2], &["x", "y"]).unwrap();
+        assert!(matches!(
+            layout.apply(&[MapDim::Axis("q"), MapDim::None]),
+            Err(LayoutError::UnknownAlias(_))
+        ));
+        assert!(matches!(
+            layout.apply(&[MapDim::Axis("x"), MapDim::Axis("x")]),
+            Err(LayoutError::AliasReused(_))
+        ));
+    }
+
+    #[test]
+    fn rank_coords_roundtrip() {
+        let layout = Layout::new(&[2, 3, 4], &["a", "b", "c"]).unwrap();
+        for rank in 0..24 {
+            assert_eq!(layout.rank_of(&layout.coords_of(rank)), rank);
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! HyperShard (§3.4): declarative parallel programming.
+//!
+//! - [`layout`] — the `Layout(device_matrix, alias_name, tensor_map)`
+//!   abstraction and formal shard-strategy derivation (Fig 6).
+//! - [`propagation`] — sharding propagation through ops with automatic
+//!   collective insertion (the Fig 5b decoupling).
+//! - [`strategies`] — named strategy dimensions per model family
+//!   (Table 1).
+//! - [`planner`] — topology-aware automatic strategy search (Table 2),
+//!   turning "days of manual tuning" into a cost-model sweep.
+
+pub mod layout;
+pub mod planner;
+pub mod propagation;
+pub mod resharding;
+pub mod strategies;
+
+pub use layout::{DimSharding, Layout, LayoutError, MapDim, ShardSpec};
+pub use planner::{
+    assign_ranks, best_plan, evaluate, explain, plan, PlanCandidate, PlannerConfig, RankGrid,
+};
+pub use propagation::{
+    elementwise, matmul, moe_dispatch, reduce, replicated_spec, CommRequirement, Propagated,
+};
+pub use resharding::{
+    actor_weight_sync_time, plan_reshard, reshard_time, ReshardPlan, ReshardStep,
+};
+pub use strategies::{dimensions_for, template_for, ParallelStrategy};

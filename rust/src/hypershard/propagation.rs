@@ -1,0 +1,309 @@
+//! Sharding propagation with automatic collective insertion.
+//!
+//! This is the machinery behind the paper's Fig 5(b): the researcher
+//! declares layouts for a few tensors and the framework derives the
+//! rest — including which communication operators must be inserted and
+//! where. The rules are the standard SPMD partitioning algebra
+//! (GSPMD-style) specialized to the ops the transformer workloads use.
+
+use super::layout::{DimSharding, ShardSpec};
+use crate::graph::CollectiveKind;
+
+/// A required communication op discovered during propagation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommRequirement {
+    pub kind: CollectiveKind,
+    /// Device axes the collective runs over.
+    pub axes: Vec<String>,
+    /// Why it was inserted (for the explain output).
+    pub reason: String,
+}
+
+/// Result of propagating through one op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Propagated {
+    pub output: ShardSpec,
+    pub comms: Vec<CommRequirement>,
+}
+
+fn replicated(rank: usize) -> ShardSpec {
+    ShardSpec {
+        dims: vec![DimSharding::Replicated; rank],
+        shard_counts: vec![1; rank],
+        replicated_axes: vec![],
+        num_shards: 1,
+        replication: 1,
+    }
+}
+
+fn split_axes(d: &DimSharding) -> Vec<String> {
+    match d {
+        DimSharding::Replicated => vec![],
+        DimSharding::Split(a) => a.clone(),
+    }
+}
+
+fn shard_count(d: &DimSharding, counts: usize) -> usize {
+    match d {
+        DimSharding::Replicated => 1,
+        DimSharding::Split(_) => counts,
+    }
+}
+
+/// Propagate through `C[m,n] = A[m,k] @ B[k,n]`.
+///
+/// Rules:
+/// - A.m split  → C.m split on the same axes (row parallel, no comm).
+/// - B.n split  → C.n split on the same axes (column parallel, no comm).
+/// - A.k and B.k split on the same axes → partial sums on every device
+///   → insert **AllReduce** over those axes (the Megatron TP pattern).
+/// - A.k split but B.k replicated (or mismatched) → insert **AllGather**
+///   on A's k axes first (resharding), no partial sums.
+pub fn matmul(a: &ShardSpec, b: &ShardSpec) -> Propagated {
+    assert_eq!(a.dims.len(), 2, "matmul lhs must be rank 2");
+    assert_eq!(b.dims.len(), 2, "matmul rhs must be rank 2");
+    let mut comms = Vec::new();
+
+    let a_k = split_axes(&a.dims[1]);
+    let b_k = split_axes(&b.dims[0]);
+
+    let contraction_axes: Vec<String>;
+    if !a_k.is_empty() && a_k == b_k {
+        // matched contraction sharding: partial sums -> all-reduce
+        contraction_axes = a_k.clone();
+        comms.push(CommRequirement {
+            kind: CollectiveKind::AllReduce,
+            axes: contraction_axes.clone(),
+            reason: format!(
+                "contraction dim sharded on {:?}: partial sums must be all-reduced",
+                contraction_axes
+            ),
+        });
+    } else {
+        // mismatched/unilateral sharding of k: gather the sharded side(s)
+        if !a_k.is_empty() {
+            comms.push(CommRequirement {
+                kind: CollectiveKind::AllGather,
+                axes: a_k.clone(),
+                reason: "lhs contraction dim sharded but rhs not matching: all-gather lhs".into(),
+            });
+        }
+        if !b_k.is_empty() {
+            comms.push(CommRequirement {
+                kind: CollectiveKind::AllGather,
+                axes: b_k.clone(),
+                reason: "rhs contraction dim sharded but lhs not matching: all-gather rhs".into(),
+            });
+        }
+    }
+
+    let m_axes = split_axes(&a.dims[0]);
+    let n_axes = split_axes(&b.dims[1]);
+    let out = ShardSpec {
+        dims: vec![
+            if m_axes.is_empty() {
+                DimSharding::Replicated
+            } else {
+                DimSharding::Split(m_axes)
+            },
+            if n_axes.is_empty() {
+                DimSharding::Replicated
+            } else {
+                DimSharding::Split(n_axes)
+            },
+        ],
+        shard_counts: vec![
+            shard_count(&a.dims[0], a.shard_counts[0]),
+            shard_count(&b.dims[1], b.shard_counts[1]),
+        ],
+        replicated_axes: vec![],
+        num_shards: shard_count(&a.dims[0], a.shard_counts[0])
+            * shard_count(&b.dims[1], b.shard_counts[1]),
+        replication: 1,
+    };
+    Propagated {
+        output: out,
+        comms,
+    }
+}
+
+/// Elementwise binary op: both inputs must agree; mismatches force an
+/// all-gather of the more-sharded operand to the lesser sharding.
+pub fn elementwise(a: &ShardSpec, b: &ShardSpec) -> Propagated {
+    assert_eq!(a.dims.len(), b.dims.len());
+    let mut comms = Vec::new();
+    let mut dims = Vec::with_capacity(a.dims.len());
+    let mut counts = Vec::with_capacity(a.dims.len());
+    for i in 0..a.dims.len() {
+        let ax = split_axes(&a.dims[i]);
+        let bx = split_axes(&b.dims[i]);
+        if ax == bx {
+            dims.push(a.dims[i].clone());
+            counts.push(a.shard_counts[i]);
+        } else {
+            // reshard to the intersection (here: replicate)
+            for (side, axes) in [("lhs", &ax), ("rhs", &bx)] {
+                if !axes.is_empty() {
+                    comms.push(CommRequirement {
+                        kind: CollectiveKind::AllGather,
+                        axes: axes.clone(),
+                        reason: format!("elementwise dim {i} sharding mismatch: gather {side}"),
+                    });
+                }
+            }
+            dims.push(DimSharding::Replicated);
+            counts.push(1);
+        }
+    }
+    let num = counts.iter().product();
+    Propagated {
+        output: ShardSpec {
+            dims,
+            shard_counts: counts,
+            replicated_axes: vec![],
+            num_shards: num,
+            replication: 1,
+        },
+        comms,
+    }
+}
+
+/// Reduction over one tensor dim: if that dim is sharded, partial
+/// results need an all-reduce over its axes.
+pub fn reduce(input: &ShardSpec, dim: usize) -> Propagated {
+    let mut comms = Vec::new();
+    let axes = split_axes(&input.dims[dim]);
+    if !axes.is_empty() {
+        comms.push(CommRequirement {
+            kind: CollectiveKind::AllReduce,
+            axes,
+            reason: format!("reduction over sharded dim {dim}"),
+        });
+    }
+    let mut dims = input.dims.clone();
+    let mut counts = input.shard_counts.clone();
+    dims.remove(dim);
+    counts.remove(dim);
+    let num = counts.iter().product();
+    Propagated {
+        output: ShardSpec {
+            dims,
+            shard_counts: counts,
+            replicated_axes: input.replicated_axes.clone(),
+            num_shards: num,
+            replication: input.replication,
+        },
+        comms,
+    }
+}
+
+/// MoE dispatch: tokens sharded on the batch dim must be re-routed to
+/// expert-parallel ranks — an all-to-all over the EP axes, and another
+/// one to return (combine). This is the §3.3 EP communication.
+pub fn moe_dispatch(tokens: &ShardSpec, ep_axes: &[String]) -> Propagated {
+    let mut comms = Vec::new();
+    if !ep_axes.is_empty() {
+        comms.push(CommRequirement {
+            kind: CollectiveKind::AllToAll,
+            axes: ep_axes.to_vec(),
+            reason: "MoE dispatch: route tokens to their experts".into(),
+        });
+        comms.push(CommRequirement {
+            kind: CollectiveKind::AllToAll,
+            axes: ep_axes.to_vec(),
+            reason: "MoE combine: return expert outputs to token owners".into(),
+        });
+    }
+    Propagated {
+        output: tokens.clone(),
+        comms,
+    }
+}
+
+/// Fully replicated spec of a given rank (for declared inputs).
+pub fn replicated_spec(rank: usize) -> ShardSpec {
+    replicated(rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypershard::layout::{Layout, MapDim};
+
+    fn tp_layout() -> Layout {
+        Layout::new(&[2, 4], &["dp", "tp"]).unwrap()
+    }
+
+    #[test]
+    fn column_parallel_no_comm() {
+        // A replicated, B sharded on n ("tp"): Megatron column-parallel
+        let l = tp_layout();
+        let a = replicated_spec(2);
+        let b = l.apply(&[MapDim::None, MapDim::Axis("tp")]).unwrap();
+        let p = matmul(&a, &b);
+        assert!(p.comms.is_empty());
+        assert_eq!(p.output.shard_counts, vec![1, 4]);
+    }
+
+    #[test]
+    fn row_parallel_inserts_allreduce() {
+        // A sharded on k, B sharded on k: row-parallel -> all-reduce
+        let l = tp_layout();
+        let a = l.apply(&[MapDim::None, MapDim::Axis("tp")]).unwrap();
+        let b = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+        let p = matmul(&a, &b);
+        assert_eq!(p.comms.len(), 1);
+        assert_eq!(p.comms[0].kind, CollectiveKind::AllReduce);
+        assert_eq!(p.comms[0].axes, vec!["tp".to_string()]);
+        assert_eq!(p.output.num_shards, 1); // output replicated
+    }
+
+    #[test]
+    fn mismatched_contraction_gathers() {
+        let l = tp_layout();
+        let a = l.apply(&[MapDim::None, MapDim::Axis("tp")]).unwrap();
+        let b = replicated_spec(2);
+        let p = matmul(&a, &b);
+        assert_eq!(p.comms.len(), 1);
+        assert_eq!(p.comms[0].kind, CollectiveKind::AllGather);
+    }
+
+    #[test]
+    fn elementwise_agreement_passes_through() {
+        let l = tp_layout();
+        let a = l.apply(&[MapDim::Axis("dp"), MapDim::Axis("tp")]).unwrap();
+        let b = l.apply(&[MapDim::Axis("dp"), MapDim::Axis("tp")]).unwrap();
+        let p = elementwise(&a, &b);
+        assert!(p.comms.is_empty());
+        assert_eq!(p.output.shard_counts, vec![2, 4]);
+    }
+
+    #[test]
+    fn elementwise_mismatch_reshards() {
+        let l = tp_layout();
+        let a = l.apply(&[MapDim::Axis("dp"), MapDim::None]).unwrap();
+        let b = l.apply(&[MapDim::None, MapDim::None]).unwrap();
+        let p = elementwise(&a, &b);
+        assert_eq!(p.comms.len(), 1);
+        assert_eq!(p.output.shard_counts, vec![1, 1]);
+    }
+
+    #[test]
+    fn reduce_over_sharded_dim() {
+        let l = tp_layout();
+        let a = l.apply(&[MapDim::Axis("dp"), MapDim::Axis("tp")]).unwrap();
+        let p = reduce(&a, 1);
+        assert_eq!(p.comms.len(), 1);
+        assert_eq!(p.comms[0].kind, CollectiveKind::AllReduce);
+        assert_eq!(p.output.dims.len(), 1);
+    }
+
+    #[test]
+    fn moe_dispatch_two_all_to_alls() {
+        let l = Layout::new(&[4, 8], &["dp", "ep"]).unwrap();
+        let tokens = l.apply(&[MapDim::Axis("dp"), MapDim::None]).unwrap();
+        let p = moe_dispatch(&tokens, &["ep".to_string()]);
+        assert_eq!(p.comms.len(), 2);
+        assert!(p.comms.iter().all(|c| c.kind == CollectiveKind::AllToAll));
+    }
+}

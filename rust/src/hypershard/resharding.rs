@@ -1,0 +1,225 @@
+//! Resharding: transitioning tensors between layouts.
+//!
+//! The paper's RL workflow (§3.3c) co-deploys training and inference of
+//! the same model under *different* parallel strategies; every
+//! actor-learner sync moves the weights from the training layout to the
+//! rollout layout. HyperShard derives the transition plan from the two
+//! `ShardSpec`s: which collectives are needed per tensor dimension, how
+//! many bytes cross the fabric, and what it costs on a given topology.
+
+use super::layout::{DimSharding, ShardSpec};
+use crate::collectives;
+use crate::graph::CollectiveKind;
+use crate::supernode::{DeviceId, Topology};
+
+/// One step of a resharding plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReshardStep {
+    pub kind: CollectiveKind,
+    /// Tensor dimension the step operates on.
+    pub dim: usize,
+    /// Device axes involved.
+    pub axes: Vec<String>,
+    pub reason: String,
+}
+
+/// The full transition plan for one tensor.
+#[derive(Debug, Clone, Default)]
+pub struct ReshardPlan {
+    pub steps: Vec<ReshardStep>,
+    /// Bytes each rank must move per collective, given the global
+    /// tensor byte size.
+    pub bytes_factor: f64,
+}
+
+fn axes_of(d: &DimSharding) -> Vec<String> {
+    match d {
+        DimSharding::Replicated => vec![],
+        DimSharding::Split(a) => a.clone(),
+    }
+}
+
+/// Derive the plan from a source and destination spec (same rank).
+///
+/// Per dimension:
+/// - sharded → replicated: **all-gather** over the source axes.
+/// - replicated → sharded: local **slice** (no comm; each rank keeps
+///   its part — modeled as a zero-cost step).
+/// - sharded → sharded on *different* axes: **all-to-all** over the
+///   union (the DP↔EP transition in MoE weight sync).
+/// - identical sharding: nothing.
+pub fn plan_reshard(src: &ShardSpec, dst: &ShardSpec) -> ReshardPlan {
+    assert_eq!(
+        src.dims.len(),
+        dst.dims.len(),
+        "reshard requires equal tensor rank"
+    );
+    let mut plan = ReshardPlan {
+        steps: Vec::new(),
+        bytes_factor: 0.0,
+    };
+    for (dim, (s, d)) in src.dims.iter().zip(&dst.dims).enumerate() {
+        let sa = axes_of(s);
+        let da = axes_of(d);
+        if sa == da {
+            continue;
+        }
+        if !sa.is_empty() && da.is_empty() {
+            plan.steps.push(ReshardStep {
+                kind: CollectiveKind::AllGather,
+                dim,
+                axes: sa.clone(),
+                reason: format!("dim {dim}: sharded {:?} -> replicated", sa),
+            });
+            // gather moves (p-1)/p of the tensor; approximate with 1.0
+            plan.bytes_factor += 1.0;
+        } else if sa.is_empty() && !da.is_empty() {
+            plan.steps.push(ReshardStep {
+                kind: CollectiveKind::P2p,
+                dim,
+                axes: da.clone(),
+                reason: format!("dim {dim}: replicated -> sharded {:?} (local slice)", da),
+            });
+        } else {
+            let mut union = sa.clone();
+            for a in &da {
+                if !union.contains(a) {
+                    union.push(a.clone());
+                }
+            }
+            plan.steps.push(ReshardStep {
+                kind: CollectiveKind::AllToAll,
+                dim,
+                axes: union,
+                reason: format!("dim {dim}: re-shard {:?} -> {:?}", sa, da),
+            });
+            plan.bytes_factor += 1.0;
+        }
+    }
+    plan
+}
+
+/// Estimated wall time of a plan on a topology: each comm step costed
+/// over `group`, moving `tensor_bytes / num_src_shards` per rank.
+pub fn reshard_time(
+    plan: &ReshardPlan,
+    topo: &Topology,
+    group: &[DeviceId],
+    tensor_bytes: f64,
+    src_shards: usize,
+) -> f64 {
+    let per_rank = tensor_bytes / src_shards.max(1) as f64;
+    plan.steps
+        .iter()
+        .filter(|s| s.kind != CollectiveKind::P2p)
+        .map(|s| collectives::cost(topo, s.kind, per_rank, group).time)
+        .sum()
+}
+
+/// The RL actor-learner weight-sync scenario (E9 companion): the
+/// learner trains with one spec; `actors` rollout replicas each need a
+/// full copy — an all-gather to the learner group plus a broadcast to
+/// every actor group. Returns (plan description, total seconds).
+pub fn actor_weight_sync_time(
+    topo: &Topology,
+    learner_group: &[DeviceId],
+    actor_groups: &[Vec<DeviceId>],
+    weight_bytes: f64,
+    learner_shards: usize,
+) -> f64 {
+    // gather the sharded weights inside the learner group
+    let gather =
+        collectives::cost(topo, CollectiveKind::AllGather, weight_bytes / learner_shards.max(1) as f64, learner_group)
+            .time;
+    // broadcast to each actor group (pipelined over groups: take max)
+    let bcast = actor_groups
+        .iter()
+        .map(|g| {
+            let mut group = g.clone();
+            group.push(learner_group[0]);
+            collectives::cost(topo, CollectiveKind::Broadcast, weight_bytes, &group).time
+        })
+        .fold(0.0f64, f64::max);
+    gather + bcast
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypershard::layout::{Layout, MapDim};
+    use crate::supernode::Topology;
+
+    fn layout() -> Layout {
+        Layout::new(&[4, 8], &["dp", "tp"]).unwrap()
+    }
+
+    #[test]
+    fn identical_specs_need_nothing() {
+        let l = layout();
+        let s = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+        let plan = plan_reshard(&s, &s.clone());
+        assert!(plan.steps.is_empty());
+    }
+
+    #[test]
+    fn shard_to_replicated_gathers() {
+        let l = layout();
+        let src = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+        let dst = l.apply(&[MapDim::None, MapDim::None]).unwrap();
+        let plan = plan_reshard(&src, &dst);
+        assert_eq!(plan.steps.len(), 1);
+        assert_eq!(plan.steps[0].kind, CollectiveKind::AllGather);
+        assert_eq!(plan.steps[0].axes, vec!["tp".to_string()]);
+    }
+
+    #[test]
+    fn replicated_to_shard_is_local() {
+        let l = layout();
+        let src = l.apply(&[MapDim::None, MapDim::None]).unwrap();
+        let dst = l.apply(&[MapDim::Axis("dp"), MapDim::None]).unwrap();
+        let plan = plan_reshard(&src, &dst);
+        assert_eq!(plan.steps.len(), 1);
+        assert_eq!(plan.steps[0].kind, CollectiveKind::P2p);
+        assert_eq!(plan.bytes_factor, 0.0); // no fabric traffic
+    }
+
+    #[test]
+    fn axis_swap_is_all_to_all() {
+        let l = layout();
+        let src = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+        let dst = l.apply(&[MapDim::Axis("dp"), MapDim::None]).unwrap();
+        let plan = plan_reshard(&src, &dst);
+        assert_eq!(plan.steps.len(), 1);
+        assert_eq!(plan.steps[0].kind, CollectiveKind::AllToAll);
+        assert!(plan.steps[0].axes.contains(&"tp".to_string()));
+        assert!(plan.steps[0].axes.contains(&"dp".to_string()));
+    }
+
+    #[test]
+    fn reshard_time_positive_and_scales() {
+        let l = layout();
+        let topo = Topology::matrix384();
+        let src = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+        let dst = l.apply(&[MapDim::None, MapDim::None]).unwrap();
+        let plan = plan_reshard(&src, &dst);
+        let group: Vec<_> = (0..8).map(crate::supernode::DeviceId).collect();
+        let t1 = reshard_time(&plan, &topo, &group, 1e9, 8);
+        let t2 = reshard_time(&plan, &topo, &group, 2e9, 8);
+        assert!(t1 > 0.0);
+        assert!(t2 > t1 * 1.5);
+    }
+
+    #[test]
+    fn weight_sync_faster_on_supernode() {
+        let sn = Topology::matrix384();
+        let lg = Topology::legacy_cluster(48);
+        let learner: Vec<_> = (0..16).map(crate::supernode::DeviceId).collect();
+        let actors: Vec<Vec<_>> = (1..4)
+            .map(|g| (g * 16..(g + 1) * 16).map(crate::supernode::DeviceId).collect())
+            .collect();
+        let w = 16e9; // 8B params bf16
+        let t_sn = actor_weight_sync_time(&sn, &learner, &actors, w, 16);
+        let t_lg = actor_weight_sync_time(&lg, &learner, &actors, w, 16);
+        assert!(t_lg / t_sn > 3.0, "sn={t_sn} lg={t_lg}");
+    }
+}

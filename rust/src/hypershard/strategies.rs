@@ -1,0 +1,175 @@
+//! Named parallel strategies and the model→strategy mapping of the
+//! paper's Table 1.
+
+use crate::config::ModelFamily;
+
+/// A concrete multi-dimensional parallel strategy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelStrategy {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub ep: usize,
+    pub cp: usize,
+    /// Sequence parallelism piggybacks on the TP group.
+    pub sp: bool,
+    /// ZeRO-3-style fully sharded data parallelism.
+    pub fsdp: bool,
+    /// MPMD (task-level) parallelism — the RL row of Table 1.
+    pub mpmd: bool,
+}
+
+impl Default for ParallelStrategy {
+    fn default() -> Self {
+        Self {
+            dp: 1,
+            tp: 1,
+            pp: 1,
+            ep: 1,
+            cp: 1,
+            sp: false,
+            fsdp: false,
+            mpmd: false,
+        }
+    }
+}
+
+impl ParallelStrategy {
+    pub fn device_count(&self) -> usize {
+        // EP reuses the DP×(CP) dimension for expert placement in this
+        // framework (DeepSeek-style), so it does not multiply.
+        self.dp * self.tp * self.pp * self.cp
+    }
+
+    /// Names of the dimensions in use (for Table 1 rendering).
+    pub fn dims_used(&self) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        if self.dp > 1 {
+            v.push("DP");
+        }
+        if self.pp > 1 {
+            v.push("PP");
+        }
+        if self.tp > 1 {
+            v.push("TP");
+        }
+        if self.sp {
+            v.push("SP");
+        }
+        if self.ep > 1 {
+            v.push("EP");
+        }
+        if self.cp > 1 {
+            v.push("CP");
+        }
+        if self.fsdp {
+            v.push("FSDP");
+        }
+        if self.mpmd {
+            v.push("MPMD");
+        }
+        v
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "dp{} tp{} pp{} ep{} cp{}{}{}{}",
+            self.dp,
+            self.tp,
+            self.pp,
+            self.ep,
+            self.cp,
+            if self.sp { " +sp" } else { "" },
+            if self.fsdp { " +fsdp" } else { "" },
+            if self.mpmd { " +mpmd" } else { "" },
+        )
+    }
+}
+
+/// The *dimensions* each model family needs — the paper's Table 1.
+/// (The planner later chooses concrete sizes per cluster — Table 2.)
+pub fn dimensions_for(family: ModelFamily) -> Vec<&'static str> {
+    match family {
+        ModelFamily::DenseTransformer => vec!["DP", "PP", "TP", "SP"],
+        ModelFamily::SparseMoe => vec!["DP", "PP", "TP", "SP", "EP"],
+        ModelFamily::Diffusion => vec!["DP", "FSDP"],
+        ModelFamily::LongSequence => vec!["SP", "CP"],
+        ModelFamily::Rl => vec!["MPMD"],
+        ModelFamily::OmniModal => vec!["DP", "PP", "TP", "MPMD"],
+    }
+}
+
+/// Seed strategy template for a family (sizes filled by the planner).
+pub fn template_for(family: ModelFamily) -> ParallelStrategy {
+    match family {
+        ModelFamily::DenseTransformer => ParallelStrategy {
+            sp: true,
+            ..Default::default()
+        },
+        ModelFamily::SparseMoe => ParallelStrategy {
+            sp: true,
+            ep: 2, // placeholder >1 so EP is considered
+            ..Default::default()
+        },
+        ModelFamily::Diffusion => ParallelStrategy {
+            fsdp: true,
+            ..Default::default()
+        },
+        ModelFamily::LongSequence => ParallelStrategy {
+            sp: true,
+            cp: 2,
+            ..Default::default()
+        },
+        ModelFamily::Rl => ParallelStrategy {
+            mpmd: true,
+            ..Default::default()
+        },
+        ModelFamily::OmniModal => ParallelStrategy {
+            mpmd: true,
+            sp: true,
+            ..Default::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows() {
+        assert_eq!(
+            dimensions_for(ModelFamily::DenseTransformer),
+            vec!["DP", "PP", "TP", "SP"]
+        );
+        assert_eq!(
+            dimensions_for(ModelFamily::SparseMoe),
+            vec!["DP", "PP", "TP", "SP", "EP"]
+        );
+        assert_eq!(dimensions_for(ModelFamily::Diffusion), vec!["DP", "FSDP"]);
+        assert_eq!(dimensions_for(ModelFamily::LongSequence), vec!["SP", "CP"]);
+        assert_eq!(dimensions_for(ModelFamily::Rl), vec!["MPMD"]);
+    }
+
+    #[test]
+    fn device_count_multiplies() {
+        let s = ParallelStrategy {
+            dp: 4,
+            tp: 8,
+            pp: 2,
+            ..Default::default()
+        };
+        assert_eq!(s.device_count(), 64);
+    }
+
+    #[test]
+    fn dims_used_reflects_sizes() {
+        let s = ParallelStrategy {
+            dp: 2,
+            tp: 8,
+            sp: true,
+            ..Default::default()
+        };
+        assert_eq!(s.dims_used(), vec!["DP", "TP", "SP"]);
+    }
+}

@@ -1,0 +1,42 @@
+//! # HyperParallel — a supernode-affinity AI framework
+//!
+//! Rust + JAX + Pallas reproduction of *"HyperParallel: A
+//! Supernode-Affinity AI Framework"* (Zhang et al., 2026). The paper's
+//! three contributions are first-class modules:
+//!
+//! - [`hypershard`] — declarative parallel strategy specification via
+//!   `Layout(device_matrix, alias_name, tensor_map)` with automatic
+//!   strategy derivation, sharding propagation and collective insertion.
+//! - [`hyperoffload`] — automated hierarchical HBM↔DRAM memory
+//!   management: multi-level cache pipeline scheduling + holistic graph
+//!   orchestration, plus a paged KV cache for inference.
+//! - [`hypermpmd`] — fine-grained MPMD at three granularities:
+//!   intra-card cube/vector comm masking, inter-sub-model concurrency
+//!   balancing, and cross-model single-controller scheduling.
+//!
+//! Everything they depend on is built here too: a parameterized
+//! supernode model ([`supernode`]), hierarchical memory pools
+//! ([`memory`]), a discrete-event execution simulator ([`sim`]), an
+//! execution-graph IR ([`graph`]), topology-costed collectives
+//! ([`collectives`]), a PJRT runtime that executes the AOT-compiled
+//! JAX/Pallas artifacts ([`runtime`]), a training/RL workload layer
+//! ([`trainer`]), the coordinator ([`coordinator`]), and the paper's
+//! baselines ([`baselines`]).
+//!
+//! See `DESIGN.md` for the substitution table (paper hardware → this
+//! repo's simulated substrate) and the per-experiment index.
+
+pub mod baselines;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod hypermpmd;
+pub mod hyperoffload;
+pub mod hypershard;
+pub mod memory;
+pub mod runtime;
+pub mod sim;
+pub mod supernode;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,323 @@
+//! First-fit free-list allocator with coalescing.
+//!
+//! Backs both the per-device HBM arena and the pooled DRAM partitions.
+//! The paper's Challenge 3 is about *fragmentation and manual
+//! management* of intermediate states; this allocator exposes exactly
+//! the statistics (fragmentation ratio, high-water mark) that
+//! HyperOffload's policies consume.
+
+/// An allocation handle: offset + size within the arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Block {
+    pub offset: u64,
+    pub size: u64,
+}
+
+/// Allocation failure reasons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough total free bytes.
+    OutOfMemory { requested: u64, free: u64 },
+    /// Enough free bytes but no contiguous run (fragmentation).
+    Fragmented { requested: u64, largest: u64 },
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::OutOfMemory { requested, free } => {
+                write!(f, "out of memory: requested {requested}, free {free}")
+            }
+            AllocError::Fragmented { requested, largest } => {
+                write!(f, "fragmented: requested {requested}, largest run {largest}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// First-fit allocator over a contiguous arena.
+#[derive(Debug, Clone)]
+pub struct Allocator {
+    capacity: u64,
+    align: u64,
+    /// Sorted, disjoint, coalesced free runs (offset, size).
+    free_list: Vec<(u64, u64)>,
+    used: u64,
+    high_water: u64,
+    alloc_count: u64,
+    fail_count: u64,
+}
+
+impl Allocator {
+    pub fn new(capacity: u64, align: u64) -> Self {
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        Self {
+            capacity,
+            align,
+            free_list: vec![(0, capacity)],
+            used: 0,
+            high_water: 0,
+            alloc_count: 0,
+            fail_count: 0,
+        }
+    }
+
+    fn round_up(&self, size: u64) -> u64 {
+        size.div_ceil(self.align) * self.align
+    }
+
+    /// Allocate `size` bytes (rounded up to alignment). First fit.
+    pub fn alloc(&mut self, size: u64) -> Result<Block, AllocError> {
+        assert!(size > 0, "zero-size allocation");
+        let size = self.round_up(size);
+        for i in 0..self.free_list.len() {
+            let (off, run) = self.free_list[i];
+            if run >= size {
+                if run == size {
+                    self.free_list.remove(i);
+                } else {
+                    self.free_list[i] = (off + size, run - size);
+                }
+                self.used += size;
+                self.high_water = self.high_water.max(self.used);
+                self.alloc_count += 1;
+                return Ok(Block { offset: off, size });
+            }
+        }
+        self.fail_count += 1;
+        let free = self.free();
+        if free >= size {
+            Err(AllocError::Fragmented {
+                requested: size,
+                largest: self.largest_free_run(),
+            })
+        } else {
+            Err(AllocError::OutOfMemory {
+                requested: size,
+                free,
+            })
+        }
+    }
+
+    /// Free a previously allocated block, coalescing neighbours.
+    pub fn free_block(&mut self, b: Block) {
+        debug_assert!(b.offset + b.size <= self.capacity);
+        self.used = self.used.checked_sub(b.size).expect("double free");
+        // insert sorted
+        let idx = self
+            .free_list
+            .partition_point(|&(off, _)| off < b.offset);
+        // guard against overlap with neighbours (double free / bad handle)
+        if idx > 0 {
+            let (poff, psize) = self.free_list[idx - 1];
+            assert!(poff + psize <= b.offset, "free overlaps previous free run");
+        }
+        if idx < self.free_list.len() {
+            assert!(
+                b.offset + b.size <= self.free_list[idx].0,
+                "free overlaps next free run"
+            );
+        }
+        self.free_list.insert(idx, (b.offset, b.size));
+        // coalesce with next
+        if idx + 1 < self.free_list.len() {
+            let (noff, nsize) = self.free_list[idx + 1];
+            if b.offset + b.size == noff {
+                self.free_list[idx].1 += nsize;
+                self.free_list.remove(idx + 1);
+            }
+        }
+        // coalesce with previous
+        if idx > 0 {
+            let (poff, psize) = self.free_list[idx - 1];
+            if poff + psize == self.free_list[idx].0 {
+                self.free_list[idx - 1].1 += self.free_list[idx].1;
+                self.free_list.remove(idx);
+            }
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.high_water
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.alloc_count
+    }
+
+    pub fn fail_count(&self) -> u64 {
+        self.fail_count
+    }
+
+    pub fn largest_free_run(&self) -> u64 {
+        self.free_list.iter().map(|&(_, s)| s).max().unwrap_or(0)
+    }
+
+    /// External fragmentation in [0,1]: 1 − largest_run / free.
+    pub fn fragmentation(&self) -> f64 {
+        let free = self.free();
+        if free == 0 {
+            0.0
+        } else {
+            1.0 - self.largest_free_run() as f64 / free as f64
+        }
+    }
+
+    /// Invariant check (used by property tests): free list sorted,
+    /// disjoint, coalesced, and accounting consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut total_free = 0;
+        let mut prev_end: Option<u64> = None;
+        for &(off, size) in &self.free_list {
+            if size == 0 {
+                return Err("zero-size free run".into());
+            }
+            if off + size > self.capacity {
+                return Err("free run exceeds capacity".into());
+            }
+            if let Some(end) = prev_end {
+                if off < end {
+                    return Err("overlapping free runs".into());
+                }
+                if off == end {
+                    return Err("uncoalesced adjacent free runs".into());
+                }
+            }
+            prev_end = Some(off + size);
+            total_free += size;
+        }
+        if total_free != self.free() {
+            return Err(format!(
+                "free accounting mismatch: list={} counter={}",
+                total_free,
+                self.free()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, usize_in, vec_of, Check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = Allocator::new(1024, 64);
+        let b1 = a.alloc(100).unwrap();
+        assert_eq!(b1.size, 128); // rounded
+        let b2 = a.alloc(64).unwrap();
+        assert_eq!(a.used(), 192);
+        a.free_block(b1);
+        a.free_block(b2);
+        assert_eq!(a.used(), 0);
+        assert_eq!(a.largest_free_run(), 1024);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn first_fit_reuses_hole() {
+        let mut a = Allocator::new(1024, 1);
+        let b1 = a.alloc(256).unwrap();
+        let _b2 = a.alloc(256).unwrap();
+        a.free_block(b1);
+        let b3 = a.alloc(128).unwrap();
+        assert_eq!(b3.offset, 0); // reuses the first hole
+    }
+
+    #[test]
+    fn oom_and_fragmentation_errors() {
+        let mut a = Allocator::new(1000, 1);
+        let blocks: Vec<Block> = (0..10).map(|_| a.alloc(100).unwrap()).collect();
+        assert!(matches!(
+            a.alloc(1),
+            Err(AllocError::OutOfMemory { .. })
+        ));
+        // free every other block: 500 free but largest run 100
+        for b in blocks.iter().step_by(2) {
+            a.free_block(*b);
+        }
+        assert_eq!(a.free(), 500);
+        assert!(matches!(
+            a.alloc(200),
+            Err(AllocError::Fragmented {
+                largest: 100,
+                ..
+            })
+        ));
+        assert!(a.fragmentation() > 0.7);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut a = Allocator::new(1024, 1);
+        let b = a.alloc(512).unwrap();
+        a.free_block(b);
+        let _ = a.alloc(128).unwrap();
+        assert_eq!(a.high_water(), 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = Allocator::new(1024, 1);
+        let b = a.alloc(1024).unwrap();
+        a.free_block(b);
+        a.free_block(b);
+    }
+
+    #[test]
+    fn prop_random_alloc_free_keeps_invariants() {
+        forall(
+            "allocator-invariants",
+            150,
+            vec_of(usize_in(1, 300), 1, 60),
+            |sizes| {
+                let mut a = Allocator::new(16 * 1024, 8);
+                let mut live: Vec<Block> = Vec::new();
+                let mut rng = Rng::new(sizes.len() as u64);
+                for &s in sizes {
+                    if !live.is_empty() && rng.chance(0.4) {
+                        let i = rng.range(0, live.len());
+                        a.free_block(live.swap_remove(i));
+                    } else if let Ok(b) = a.alloc(s as u64) {
+                        live.push(b);
+                    }
+                    if let Err(e) = a.check_invariants() {
+                        return Check::Fail(e);
+                    }
+                    // no two live blocks overlap
+                    for (i, x) in live.iter().enumerate() {
+                        for y in &live[i + 1..] {
+                            let overlap =
+                                x.offset < y.offset + y.size && y.offset < x.offset + x.size;
+                            if overlap {
+                                return Check::Fail(format!("overlap {x:?} {y:?}"));
+                            }
+                        }
+                    }
+                }
+                for b in live.drain(..) {
+                    a.free_block(b);
+                }
+                Check::from_bool(a.used() == 0, "leak after freeing everything")
+            },
+        );
+    }
+}

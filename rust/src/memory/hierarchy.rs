@@ -1,0 +1,391 @@
+//! Hierarchical memory: per-device HBM arena + pooled DRAM, with a
+//! transfer-cost model.
+//!
+//! The supernode exposes CPU DRAM as a memory-semantic pool (§2.3);
+//! HyperOffload treats HBM as a cache over it (§3.2). `MemoryHierarchy`
+//! owns both levels and accounts residency per state region; the
+//! simulator charges [`TransferEngine`] times for every migration.
+
+use super::allocator::{AllocError, Allocator, Block};
+use std::collections::BTreeMap;
+
+/// Where a region currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    Hbm,
+    Dram,
+    /// Mid-flight HBM→DRAM or DRAM→HBM (owns blocks in both).
+    Migrating,
+}
+
+/// Transfer-cost model between levels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferEngine {
+    /// HBM↔DRAM bandwidth over the memory-semantic fabric, bytes/s.
+    /// Matrix384 UB: ~200 GB/s per NPU. Legacy PCIe4 x16: ~25 GB/s.
+    pub bandwidth: f64,
+    /// Per-transfer setup latency, seconds.
+    pub latency: f64,
+    /// Independent DMA channels (transfers beyond this serialize).
+    pub channels: usize,
+}
+
+impl TransferEngine {
+    pub fn supernode() -> Self {
+        Self {
+            bandwidth: 200e9,
+            latency: 1e-6,
+            channels: 2,
+        }
+    }
+
+    pub fn legacy_pcie() -> Self {
+        Self {
+            bandwidth: 25e9,
+            latency: 10e-6,
+            channels: 1,
+        }
+    }
+
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Handle to a region tracked by the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RegionId(pub usize);
+
+#[derive(Debug, Clone)]
+struct RegionState {
+    bytes: u64,
+    residency: Residency,
+    hbm_block: Option<Block>,
+    dram_block: Option<Block>,
+    /// Monotone counter of last touch (for LRU eviction).
+    last_touch: u64,
+    pinned: bool,
+}
+
+/// Two-level memory for one device.
+#[derive(Debug, Clone)]
+pub struct MemoryHierarchy {
+    hbm: Allocator,
+    dram: Allocator,
+    engine: TransferEngine,
+    regions: BTreeMap<RegionId, RegionState>,
+    next_id: usize,
+    clock: u64,
+    /// Cumulative bytes moved in each direction (metrics).
+    pub bytes_offloaded: u64,
+    pub bytes_prefetched: u64,
+}
+
+impl MemoryHierarchy {
+    pub fn new(hbm_bytes: u64, dram_bytes: u64, engine: TransferEngine) -> Self {
+        Self {
+            hbm: Allocator::new(hbm_bytes, 512),
+            dram: Allocator::new(dram_bytes, 4096),
+            engine,
+            regions: BTreeMap::new(),
+            next_id: 0,
+            clock: 0,
+            bytes_offloaded: 0,
+            bytes_prefetched: 0,
+        }
+    }
+
+    pub fn engine(&self) -> TransferEngine {
+        self.engine
+    }
+
+    pub fn hbm_used(&self) -> u64 {
+        self.hbm.used()
+    }
+
+    pub fn hbm_free(&self) -> u64 {
+        self.hbm.free()
+    }
+
+    pub fn hbm_capacity(&self) -> u64 {
+        self.hbm.capacity()
+    }
+
+    pub fn dram_used(&self) -> u64 {
+        self.dram.used()
+    }
+
+    pub fn hbm_fragmentation(&self) -> f64 {
+        self.hbm.fragmentation()
+    }
+
+    fn touch(&mut self, id: RegionId) {
+        self.clock += 1;
+        let c = self.clock;
+        if let Some(r) = self.regions.get_mut(&id) {
+            r.last_touch = c;
+        }
+    }
+
+    /// Register a region, initially resident in DRAM (the pool is the
+    /// home location; HBM is the cache).
+    pub fn register_in_dram(&mut self, bytes: u64) -> Result<RegionId, AllocError> {
+        let block = self.dram.alloc(bytes)?;
+        let id = RegionId(self.next_id);
+        self.next_id += 1;
+        self.regions.insert(
+            id,
+            RegionState {
+                bytes,
+                residency: Residency::Dram,
+                hbm_block: None,
+                dram_block: Some(block),
+                last_touch: 0,
+                pinned: false,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Register a region directly in HBM (e.g. transient activations).
+    pub fn register_in_hbm(&mut self, bytes: u64) -> Result<RegionId, AllocError> {
+        let block = self.hbm.alloc(bytes)?;
+        let id = RegionId(self.next_id);
+        self.next_id += 1;
+        self.regions.insert(
+            id,
+            RegionState {
+                bytes,
+                residency: Residency::Hbm,
+                hbm_block: Some(block),
+                dram_block: None,
+                last_touch: 0,
+                pinned: false,
+            },
+        );
+        self.touch(id);
+        Ok(id)
+    }
+
+    pub fn residency(&self, id: RegionId) -> Option<Residency> {
+        self.regions.get(&id).map(|r| r.residency)
+    }
+
+    pub fn bytes(&self, id: RegionId) -> Option<u64> {
+        self.regions.get(&id).map(|r| r.bytes)
+    }
+
+    pub fn is_hbm_resident(&self, id: RegionId) -> bool {
+        matches!(self.residency(id), Some(Residency::Hbm))
+    }
+
+    /// Pin a region in HBM (never evicted): e.g. the current layer.
+    pub fn pin(&mut self, id: RegionId, pinned: bool) {
+        if let Some(r) = self.regions.get_mut(&id) {
+            r.pinned = pinned;
+        }
+    }
+
+    /// Bring a region into HBM. Returns simulated transfer seconds
+    /// (0.0 if already resident). Fails if HBM can't fit it even after
+    /// the caller evicts; eviction policy lives in hyperoffload.
+    pub fn prefetch(&mut self, id: RegionId) -> Result<f64, AllocError> {
+        let (bytes, residency) = {
+            let r = self.regions.get(&id).expect("unknown region");
+            (r.bytes, r.residency)
+        };
+        match residency {
+            Residency::Hbm => {
+                self.touch(id);
+                Ok(0.0)
+            }
+            Residency::Migrating => Ok(0.0),
+            Residency::Dram => {
+                let block = self.hbm.alloc(bytes)?;
+                let r = self.regions.get_mut(&id).unwrap();
+                r.hbm_block = Some(block);
+                r.residency = Residency::Hbm;
+                // DRAM home copy is kept (write-through for weights), so
+                // eviction of clean data is free.
+                self.bytes_prefetched += bytes;
+                self.touch(id);
+                Ok(self.engine.transfer_time(bytes))
+            }
+        }
+    }
+
+    /// Evict a region from HBM back to the DRAM pool. Returns simulated
+    /// seconds (0 if the DRAM copy is clean, i.e. region was registered
+    /// in DRAM; writeback time if `dirty`).
+    pub fn offload(&mut self, id: RegionId, dirty: bool) -> Result<f64, AllocError> {
+        let r = self.regions.get_mut(&id).expect("unknown region");
+        if r.residency != Residency::Hbm {
+            return Ok(0.0);
+        }
+        let bytes = r.bytes;
+        let hbm_block = r.hbm_block.take().expect("hbm-resident without block");
+        // ensure a DRAM home exists
+        if r.dram_block.is_none() {
+            let db = self.dram.alloc(bytes)?;
+            let r = self.regions.get_mut(&id).unwrap();
+            r.dram_block = Some(db);
+        }
+        let r = self.regions.get_mut(&id).unwrap();
+        r.residency = Residency::Dram;
+        self.hbm.free_block(hbm_block);
+        self.bytes_offloaded += bytes;
+        if dirty {
+            Ok(self.engine.transfer_time(bytes))
+        } else {
+            Ok(0.0)
+        }
+    }
+
+    /// Drop a region entirely (both levels).
+    pub fn release(&mut self, id: RegionId) {
+        if let Some(r) = self.regions.remove(&id) {
+            if let Some(b) = r.hbm_block {
+                self.hbm.free_block(b);
+            }
+            if let Some(b) = r.dram_block {
+                self.dram.free_block(b);
+            }
+        }
+    }
+
+    /// LRU candidates: HBM-resident, unpinned, oldest-touch first.
+    pub fn eviction_candidates(&self) -> Vec<(RegionId, u64)> {
+        let mut v: Vec<(RegionId, u64, u64)> = self
+            .regions
+            .iter()
+            .filter(|(_, r)| r.residency == Residency::Hbm && !r.pinned)
+            .map(|(id, r)| (*id, r.last_touch, r.bytes))
+            .collect();
+        v.sort_by_key(|&(_, touch, _)| touch);
+        v.into_iter().map(|(id, _, bytes)| (id, bytes)).collect()
+    }
+
+    /// Evict LRU regions until at least `needed` HBM bytes are free.
+    /// Returns total simulated writeback seconds. `dirty` marks whether
+    /// evicted data needs writeback (activations yes, clean weights no).
+    pub fn evict_until(&mut self, needed: u64, dirty: bool) -> Result<f64, AllocError> {
+        let mut total = 0.0;
+        while self.hbm.free() < needed || self.hbm.largest_free_run() < needed {
+            let candidates = self.eviction_candidates();
+            let Some(&(victim, _)) = candidates.first() else {
+                return Err(AllocError::OutOfMemory {
+                    requested: needed,
+                    free: self.hbm.free(),
+                });
+            };
+            total += self.offload(victim, dirty)?;
+        }
+        Ok(total)
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.hbm.check_invariants().map_err(|e| format!("hbm: {e}"))?;
+        self.dram
+            .check_invariants()
+            .map_err(|e| format!("dram: {e}"))?;
+        for (id, r) in &self.regions {
+            match r.residency {
+                Residency::Hbm if r.hbm_block.is_none() => {
+                    return Err(format!("{id:?} claims HBM residency without a block"))
+                }
+                Residency::Dram if r.dram_block.is_none() => {
+                    return Err(format!("{id:?} claims DRAM residency without a block"))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MemoryHierarchy {
+        MemoryHierarchy::new(8 * 4096, 64 * 4096, TransferEngine::supernode())
+    }
+
+    #[test]
+    fn prefetch_moves_to_hbm_and_costs_time() {
+        let mut m = small();
+        let id = m.register_in_dram(4096).unwrap();
+        assert_eq!(m.residency(id), Some(Residency::Dram));
+        let t = m.prefetch(id).unwrap();
+        assert!(t > 0.0);
+        assert_eq!(m.residency(id), Some(Residency::Hbm));
+        // second prefetch is free
+        assert_eq!(m.prefetch(id).unwrap(), 0.0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clean_offload_is_free_dirty_costs() {
+        let mut m = small();
+        let id = m.register_in_dram(4096).unwrap();
+        m.prefetch(id).unwrap();
+        assert_eq!(m.offload(id, false).unwrap(), 0.0);
+        m.prefetch(id).unwrap();
+        assert!(m.offload(id, true).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut m = small();
+        let a = m.register_in_dram(4096 * 2).unwrap();
+        let b = m.register_in_dram(4096 * 2).unwrap();
+        m.prefetch(a).unwrap();
+        m.prefetch(b).unwrap();
+        m.prefetch(a).unwrap(); // a is now more recent
+        let cands = m.eviction_candidates();
+        assert_eq!(cands[0].0, b);
+    }
+
+    #[test]
+    fn evict_until_frees_space() {
+        let mut m = small(); // HBM = 8 pages
+        let ids: Vec<_> = (0..4)
+            .map(|_| m.register_in_dram(2 * 4096).unwrap())
+            .collect();
+        for &id in &ids {
+            m.prefetch(id).unwrap();
+        }
+        assert_eq!(m.hbm_free(), 0);
+        m.evict_until(4 * 4096, false).unwrap();
+        assert!(m.hbm_free() >= 4 * 4096);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pinned_regions_never_evicted() {
+        let mut m = small();
+        let a = m.register_in_dram(4 * 4096).unwrap();
+        let b = m.register_in_dram(4 * 4096).unwrap();
+        m.prefetch(a).unwrap();
+        m.prefetch(b).unwrap();
+        m.pin(a, true);
+        m.pin(b, true);
+        assert!(m.evict_until(4096, false).is_err());
+        m.pin(b, false);
+        assert!(m.evict_until(4096, false).is_ok());
+        assert_eq!(m.residency(b), Some(Residency::Dram));
+        assert_eq!(m.residency(a), Some(Residency::Hbm));
+    }
+
+    #[test]
+    fn release_returns_all_bytes() {
+        let mut m = small();
+        let id = m.register_in_dram(4096).unwrap();
+        m.prefetch(id).unwrap();
+        let (hbm0, dram0) = (m.hbm_used(), m.dram_used());
+        assert!(hbm0 > 0 && dram0 > 0);
+        m.release(id);
+        assert_eq!(m.hbm_used(), 0);
+        assert_eq!(m.dram_used(), 0);
+    }
+}

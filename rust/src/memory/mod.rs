@@ -1,0 +1,11 @@
+//! Hierarchical memory subsystem: allocators, HBM/DRAM hierarchy, and
+//! model-state accounting. This is the substrate HyperOffload (§3.2)
+//! orchestrates.
+
+pub mod allocator;
+pub mod hierarchy;
+pub mod state;
+
+pub use allocator::{AllocError, Allocator, Block};
+pub use hierarchy::{MemoryHierarchy, RegionId, Residency, TransferEngine};
+pub use state::{StateBudget, StateKind, StateRegion, StateRegistry};

@@ -1,0 +1,245 @@
+//! Model-state accounting: weights, gradients, optimizer states,
+//! activations, KV caches.
+//!
+//! This is the quantitative backbone of the paper's Figure 1 ("the
+//! complexity of storing and managing parameters and intermediate
+//! states continues to increase") and the input HyperOffload's policies
+//! work from: which state classes exist, how big they are, and when in
+//! the step they are live.
+
+/// One class of model state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StateKind {
+    Weights,
+    Gradients,
+    OptimizerMoments,
+    Activations,
+    KvCache,
+}
+
+impl StateKind {
+    pub fn all() -> [StateKind; 5] {
+        [
+            StateKind::Weights,
+            StateKind::Gradients,
+            StateKind::OptimizerMoments,
+            StateKind::Activations,
+            StateKind::KvCache,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateKind::Weights => "weights",
+            StateKind::Gradients => "gradients",
+            StateKind::OptimizerMoments => "optimizer",
+            StateKind::Activations => "activations",
+            StateKind::KvCache => "kv-cache",
+        }
+    }
+}
+
+/// Byte sizes per state class for one model + workload configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StateBudget {
+    pub weights: u64,
+    pub gradients: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+    pub kv_cache: u64,
+}
+
+impl StateBudget {
+    pub fn total(&self) -> u64 {
+        self.weights + self.gradients + self.optimizer + self.activations + self.kv_cache
+    }
+
+    pub fn get(&self, kind: StateKind) -> u64 {
+        match kind {
+            StateKind::Weights => self.weights,
+            StateKind::Gradients => self.gradients,
+            StateKind::OptimizerMoments => self.optimizer,
+            StateKind::Activations => self.activations,
+            StateKind::KvCache => self.kv_cache,
+        }
+    }
+
+    /// Mixed-precision training budget for a dense transformer:
+    /// bf16 weights+grads, fp32 Adam moments + master weights
+    /// (the classic 16 bytes/param), activations from
+    /// batch·seq·hidden·layers with checkpointing factor.
+    pub fn training(
+        params: u64,
+        layers: u64,
+        hidden: u64,
+        batch: u64,
+        seq: u64,
+        act_checkpoint: bool,
+    ) -> Self {
+        let act_factor = if act_checkpoint { 2 } else { 16 };
+        Self {
+            weights: params * 2,
+            gradients: params * 2,
+            optimizer: params * 12, // fp32 master + m + v
+            activations: batch * seq * hidden * layers * act_factor,
+            kv_cache: 0,
+        }
+    }
+
+    /// Inference budget: bf16 weights + KV cache
+    /// (2 tensors · bf16 · layers · kv_heads · head_dim per token).
+    pub fn inference(
+        params: u64,
+        layers: u64,
+        kv_heads: u64,
+        head_dim: u64,
+        batch: u64,
+        seq: u64,
+    ) -> Self {
+        Self {
+            weights: params * 2,
+            gradients: 0,
+            optimizer: 0,
+            activations: 0,
+            kv_cache: 2 * 2 * layers * kv_heads * head_dim * batch * seq,
+        }
+    }
+}
+
+/// Named tensor region registered with the memory manager.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateRegion {
+    pub name: String,
+    pub kind: StateKind,
+    pub bytes: u64,
+    /// Execution-order index of first use within a step (for prefetch
+    /// scheduling). Layer i's weights have phase i, its backward
+    /// re-use has phase 2L−1−i, etc.
+    pub first_use_phase: usize,
+    /// Last phase that touches the region within a step.
+    pub last_use_phase: usize,
+}
+
+/// Registry of all state regions of a model instance.
+#[derive(Debug, Clone, Default)]
+pub struct StateRegistry {
+    regions: Vec<StateRegion>,
+}
+
+impl StateRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, region: StateRegion) -> usize {
+        self.regions.push(region);
+        self.regions.len() - 1
+    }
+
+    pub fn regions(&self) -> &[StateRegion] {
+        &self.regions
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.regions.iter().map(|r| r.bytes).sum()
+    }
+
+    pub fn bytes_of(&self, kind: StateKind) -> u64 {
+        self.regions
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.bytes)
+            .sum()
+    }
+
+    /// Build a per-layer registry for a transformer: layer weights,
+    /// (training) grads+optimizer, activations per layer. Phases are
+    /// fwd: 0..L, bwd: L..2L (reverse order).
+    pub fn for_transformer(layers: usize, bytes_per_layer: &StateBudget) -> Self {
+        let mut reg = Self::new();
+        let l = layers;
+        for i in 0..l {
+            reg.register(StateRegion {
+                name: format!("layer{i}.weights"),
+                kind: StateKind::Weights,
+                bytes: bytes_per_layer.weights,
+                first_use_phase: i,
+                last_use_phase: 2 * l - 1 - i, // reused in backward
+            });
+            if bytes_per_layer.gradients > 0 {
+                reg.register(StateRegion {
+                    name: format!("layer{i}.grads"),
+                    kind: StateKind::Gradients,
+                    bytes: bytes_per_layer.gradients,
+                    first_use_phase: 2 * l - 1 - i,
+                    last_use_phase: 2 * l, // consumed by optimizer step
+                });
+                reg.register(StateRegion {
+                    name: format!("layer{i}.adam"),
+                    kind: StateKind::OptimizerMoments,
+                    bytes: bytes_per_layer.optimizer,
+                    first_use_phase: 2 * l,
+                    last_use_phase: 2 * l,
+                });
+            }
+            if bytes_per_layer.activations > 0 {
+                reg.register(StateRegion {
+                    name: format!("layer{i}.acts"),
+                    kind: StateKind::Activations,
+                    bytes: bytes_per_layer.activations,
+                    first_use_phase: i,
+                    last_use_phase: 2 * l - 1 - i,
+                });
+            }
+            if bytes_per_layer.kv_cache > 0 {
+                reg.register(StateRegion {
+                    name: format!("layer{i}.kv"),
+                    kind: StateKind::KvCache,
+                    bytes: bytes_per_layer.kv_cache,
+                    first_use_phase: i,
+                    last_use_phase: i,
+                });
+            }
+        }
+        reg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_budget_is_16x_params_plus_acts() {
+        let b = StateBudget::training(1_000_000, 12, 768, 8, 512, true);
+        assert_eq!(b.weights + b.gradients + b.optimizer, 16_000_000);
+        assert!(b.activations > 0);
+    }
+
+    #[test]
+    fn inference_kv_formula() {
+        // llama-8b-ish: 32 layers, 8 kv heads, 128 head dim
+        let b = StateBudget::inference(8_000_000_000, 32, 8, 128, 1, 71_000);
+        // 2*2*32*8*128*71000 = ~9.3 GiB
+        assert_eq!(b.kv_cache, 2 * 2 * 32 * 8 * 128 * 71_000);
+        assert!(b.kv_cache > 8 * (1u64 << 30)); // ≈ 8.7 GiB
+    }
+
+    #[test]
+    fn transformer_registry_phases() {
+        let per_layer = StateBudget {
+            weights: 100,
+            gradients: 100,
+            optimizer: 600,
+            activations: 50,
+            kv_cache: 0,
+        };
+        let reg = StateRegistry::for_transformer(4, &per_layer);
+        // layer0 weights live from phase 0 to 7
+        let w0 = &reg.regions()[0];
+        assert_eq!(w0.first_use_phase, 0);
+        assert_eq!(w0.last_use_phase, 7);
+        assert_eq!(reg.bytes_of(StateKind::Weights), 400);
+        assert_eq!(reg.bytes_of(StateKind::OptimizerMoments), 2400);
+    }
+}

@@ -1,0 +1,281 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module
+//! is the entire request-path compute layer. HLO *text* is the
+//! interchange format (jax ≥ 0.5 serialized protos carry 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+pub mod executor;
+
+pub use executor::{DataParallelTrainer, TrainExecutor};
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Description of one named parameter tensor from the artifact
+/// manifest (`artifacts/meta.json`, written by `python/compile/aot.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Initialization stddev recorded by the compile path so Rust can
+    /// re-create the same init distribution without Python.
+    pub init_std: f64,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub params: Vec<ParamSpec>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// Extra named integers (layers, hidden, experts, ...).
+    pub meta: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let params_json = json
+            .get_path("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'params'"))?;
+        let mut params = Vec::with_capacity(params_json.len());
+        for p in params_json {
+            let name = p
+                .get_path("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string();
+            let shape = p
+                .get_path("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                .collect::<Result<Vec<_>>>()?;
+            let init_std = p
+                .get_path("init_std")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.02);
+            params.push(ParamSpec {
+                name,
+                shape,
+                init_std,
+            });
+        }
+        let get = |k: &str| json.get_path(k).and_then(Json::as_usize);
+        let mut meta = BTreeMap::new();
+        if let Some(obj) = json.get_path("meta").and_then(Json::as_obj) {
+            for (k, v) in obj.iter() {
+                if let Some(n) = v.as_usize() {
+                    meta.insert(k.clone(), n);
+                }
+            }
+        }
+        Ok(Self {
+            params,
+            batch: get("batch").unwrap_or(0),
+            seq: get("seq").unwrap_or(0),
+            vocab: get("vocab").unwrap_or(0),
+            meta,
+        })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+/// The PJRT runtime: one client + a registry of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            executables: BTreeMap::new(),
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load + compile an HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute a loaded artifact from literals. The artifact was
+    /// lowered with `return_tuple=True`; outputs are the flattened
+    /// tuple elements.
+    ///
+    /// NOTE: the upstream `xla` crate's C `execute` path leaks the
+    /// input *device buffers* it creates from the literals
+    /// (`buffer.release()` without a matching delete). Fine for
+    /// one-shot demo calls; anything called in a loop must use
+    /// [`execute_buffers`](Self::execute_buffers) with caller-owned
+    /// buffers, which are freed by `PjRtBuffer::drop`.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {name}: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Upload an f32 host array to a device buffer (caller-owned, so
+    /// it is released on drop — the leak-free input path).
+    pub fn buffer_f32(&self, shape: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("buffer_from_host f32: {e:?}"))
+    }
+
+    /// Upload an i32 host array to a device buffer.
+    pub fn buffer_i32(&self, shape: &[usize], data: &[i32]) -> Result<xla::PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("buffer_from_host i32: {e:?}"))
+    }
+
+    /// Execute a loaded artifact from device buffers (the hot path:
+    /// input and output buffers are all owned and dropped on the Rust
+    /// side, so repeated calls do not leak device memory).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {name}: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Load the manifest that accompanies the artifacts.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifact_dir.join("meta.json"))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch: {shape:?} vs {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("hp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("meta.json");
+        std::fs::write(
+            &path,
+            r#"{"batch": 8, "seq": 128, "vocab": 512,
+                "meta": {"layers": 4, "experts": 8},
+                "params": [
+                  {"name": "embed", "shape": [512, 256], "init_std": 0.02},
+                  {"name": "w1", "shape": [4, 8, 256, 512], "init_std": 0.05}
+                ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].elements(), 4 * 8 * 256 * 512);
+        assert_eq!(m.meta["experts"], 8);
+        assert_eq!(m.total_params(), 512 * 256 + 4 * 8 * 256 * 512);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let lit = literal_f32(&[3, 4], &data).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0, 2.0, 3.0]).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event execution simulator: engine, per-device streams, and
+//! trace export. Every time-domain claim in the paper is measured on
+//! this substrate (see DESIGN.md substitution table).
+
+pub mod engine;
+pub mod stream;
+pub mod trace;
+
+pub use engine::{Engine, Interval, ResourceId, SimResult, TaskId};
+pub use stream::{Stream, StreamSet};
+
+/// Task tags shared across modules (index into trace::TAG_NAMES).
+pub mod tags {
+    pub const COMPUTE: u64 = 0;
+    pub const COMM: u64 = 1;
+    pub const PREFETCH: u64 = 2;
+    pub const OFFLOAD: u64 = 3;
+    pub const VECTOR: u64 = 4;
+    pub const BUBBLE: u64 = 5;
+    pub const ROLLOUT: u64 = 6;
+    pub const UPDATE: u64 = 7;
+}

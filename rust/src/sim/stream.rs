@@ -1,0 +1,128 @@
+//! Per-device stream sets.
+//!
+//! Ascend NPUs issue matrix ("cube") and vector work on separate engines
+//! and have independent DMA + network queues. HyperMPMD's intra-card
+//! MPMD (Fig 4a) is exactly the exploitation of these concurrent
+//! streams. `StreamSet` materializes one engine resource per stream for
+//! a set of devices.
+
+use super::engine::{Engine, ResourceId};
+use crate::supernode::DeviceId;
+
+/// The concurrent execution streams of one NPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    /// Matrix/MXU engine (AICube).
+    Cube,
+    /// Elementwise engine (AIVector).
+    Vector,
+    /// Inbound collective/network queue.
+    CommIn,
+    /// Outbound collective/network queue.
+    CommOut,
+    /// HBM↔DRAM DMA engine (SDMA).
+    Memcpy,
+}
+
+impl Stream {
+    pub fn all() -> [Stream; 5] {
+        [
+            Stream::Cube,
+            Stream::Vector,
+            Stream::CommIn,
+            Stream::CommOut,
+            Stream::Memcpy,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stream::Cube => "cube",
+            Stream::Vector => "vector",
+            Stream::CommIn => "comm-in",
+            Stream::CommOut => "comm-out",
+            Stream::Memcpy => "memcpy",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Stream::Cube => 0,
+            Stream::Vector => 1,
+            Stream::CommIn => 2,
+            Stream::CommOut => 3,
+            Stream::Memcpy => 4,
+        }
+    }
+}
+
+/// Resource ids for every (device, stream) pair.
+#[derive(Debug, Clone)]
+pub struct StreamSet {
+    devices: usize,
+    resources: Vec<ResourceId>, // devices × 5
+}
+
+impl StreamSet {
+    /// Register streams for `devices` devices with the engine.
+    pub fn new(engine: &mut Engine, devices: usize) -> Self {
+        let mut resources = Vec::with_capacity(devices * 5);
+        for d in 0..devices {
+            for s in Stream::all() {
+                resources.push(engine.add_resource(format!("npu{d}.{}", s.name())));
+            }
+        }
+        Self { devices, resources }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices
+    }
+
+    pub fn get(&self, device: DeviceId, stream: Stream) -> ResourceId {
+        assert!(device.0 < self.devices, "device out of range");
+        self.resources[device.0 * 5 + stream.index()]
+    }
+
+    /// All resources of one stream kind across devices.
+    pub fn of_kind(&self, stream: Stream) -> Vec<ResourceId> {
+        (0..self.devices)
+            .map(|d| self.get(DeviceId(d), stream))
+            .collect()
+    }
+
+    /// All resources of one device.
+    pub fn of_device(&self, device: DeviceId) -> Vec<ResourceId> {
+        Stream::all()
+            .iter()
+            .map(|&s| self.get(device, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_resources_per_stream() {
+        let mut e = Engine::new();
+        let ss = StreamSet::new(&mut e, 3);
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..3 {
+            for s in Stream::all() {
+                assert!(seen.insert(ss.get(DeviceId(d), s)));
+            }
+        }
+        assert_eq!(seen.len(), 15);
+        assert_eq!(e.resource_count(), 15);
+    }
+
+    #[test]
+    fn names_are_descriptive() {
+        let mut e = Engine::new();
+        let ss = StreamSet::new(&mut e, 2);
+        let r = ss.get(DeviceId(1), Stream::CommOut);
+        assert_eq!(e.resource_name(r), "npu1.comm-out");
+    }
+}

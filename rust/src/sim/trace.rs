@@ -1,0 +1,79 @@
+//! Chrome-trace export for simulation results.
+//!
+//! `SimResult` intervals render to the `chrome://tracing` /
+//! Perfetto JSON array format, one track per resource, so scheduling
+//! decisions (masking, bubbles, stragglers) can be inspected visually.
+
+use super::engine::{Engine, SimResult};
+use crate::util::json::{Json, JsonObj};
+
+/// Tag names for trace events; index = tag value used in `add_task`.
+pub const TAG_NAMES: [&str; 8] = [
+    "compute",
+    "comm",
+    "prefetch",
+    "offload",
+    "vector",
+    "bubble",
+    "rollout",
+    "update",
+];
+
+/// Human-readable name for a task tag.
+pub fn tag_name(tag: u64) -> &'static str {
+    TAG_NAMES.get(tag as usize).copied().unwrap_or("other")
+}
+
+/// Convert a result to Chrome trace JSON (µs timebase).
+pub fn to_chrome_trace(engine: &Engine, result: &SimResult) -> Json {
+    let mut events = Vec::with_capacity(result.intervals.len());
+    for iv in &result.intervals {
+        let mut e = JsonObj::new();
+        e.insert("name", Json::from(tag_name(iv.tag)));
+        e.insert("cat", Json::from(tag_name(iv.tag)));
+        e.insert("ph", Json::from("X"));
+        e.insert("ts", Json::from(iv.start * 1e6));
+        e.insert("dur", Json::from((iv.finish - iv.start) * 1e6));
+        e.insert("pid", Json::from(0usize));
+        e.insert("tid", Json::from(iv.resource.0));
+        let mut args = JsonObj::new();
+        args.insert("task", Json::from(iv.task.0));
+        args.insert("resource", Json::from(engine.resource_name(iv.resource)));
+        e.insert("args", Json::Obj(args));
+        events.push(Json::Obj(e));
+    }
+    Json::Arr(events)
+}
+
+/// Write a trace file; returns the path.
+pub fn write_trace(
+    engine: &Engine,
+    result: &SimResult,
+    path: &str,
+) -> std::io::Result<String> {
+    let json = to_chrome_trace(engine, result);
+    std::fs::write(path, json.dump())?;
+    Ok(path.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::Engine;
+
+    #[test]
+    fn trace_shape() {
+        let mut e = Engine::new();
+        let r = e.add_resource("npu0.cube");
+        let a = e.add_task(r, 1.0, &[], 0);
+        e.add_task(r, 2.0, &[a], 1);
+        let res = e.run();
+        let j = to_chrome_trace(&e, &res);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get_path("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(arr[1].get_path("name").unwrap().as_str(), Some("comm"));
+        // ts of second event = 1s = 1e6 µs
+        assert_eq!(arr[1].get_path("ts").unwrap().as_f64(), Some(1e6));
+    }
+}

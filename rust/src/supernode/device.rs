@@ -1,0 +1,126 @@
+//! Accelerator (NPU) device model.
+//!
+//! Calibrated to the paper's testbed: Ascend 910C-class NPUs with a
+//! matrix ("cube") engine and a vector engine, local HBM, and a share of
+//! the supernode's pooled DRAM. All quantities are plain numbers the
+//! discrete-event simulator consumes; nothing here requires the real
+//! hardware.
+
+/// Identifies a device within a supernode (flat rank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub usize);
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "npu{}", self.0)
+    }
+}
+
+/// Static capability description of one accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Peak dense-matmul throughput of the cube/MXU engine (FLOP/s,
+    /// bf16). 910C-class ≈ 376 TFLOPs markets aside, we use 350e12.
+    pub cube_flops: f64,
+    /// Peak elementwise/vector throughput (FLOP/s, fp32).
+    pub vector_flops: f64,
+    /// HBM capacity in bytes (910C-class: 64 GiB).
+    pub hbm_bytes: u64,
+    /// HBM bandwidth (bytes/s). 910C-class ≈ 1.6 TB/s.
+    pub hbm_bw: f64,
+    /// This device's slice of the pooled DRAM (bytes). The Matrix384
+    /// supernode pools CPU DRAM; per-NPU share ≈ 1.5 TiB/384.
+    pub dram_bytes: u64,
+    /// Number of independent DMA engines usable for HBM↔DRAM transfers
+    /// concurrently with compute (SDMA on Ascend).
+    pub dma_engines: usize,
+}
+
+impl DeviceSpec {
+    /// Ascend-910C-class accelerator (the paper's hardware).
+    pub fn ascend_910c() -> Self {
+        Self {
+            cube_flops: 350e12,
+            vector_flops: 22e12,
+            hbm_bytes: 64 * (1 << 30),
+            hbm_bw: 1.6e12,
+            dram_bytes: 4 * (1 << 30) as u64 * 256, // 1 TiB pooled share
+            dma_engines: 2,
+        }
+    }
+
+    /// A100-80G-class GPU, used when modeling the paper's PCIe/Ethernet
+    /// baseline clusters.
+    pub fn a100_80g() -> Self {
+        Self {
+            cube_flops: 312e12,
+            vector_flops: 19.5e12,
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw: 2.0e12,
+            dram_bytes: 128 * (1 << 30),
+            dma_engines: 1,
+        }
+    }
+
+    /// Time for a dense matmul of `flops` on the cube engine at the
+    /// given achievable efficiency (MFU-style derating).
+    pub fn cube_time(&self, flops: f64, efficiency: f64) -> f64 {
+        flops / (self.cube_flops * efficiency.clamp(1e-3, 1.0))
+    }
+
+    /// Time for elementwise work on the vector engine.
+    pub fn vector_time(&self, flops: f64, efficiency: f64) -> f64 {
+        flops / (self.vector_flops * efficiency.clamp(1e-3, 1.0))
+    }
+
+    /// Time to stream `bytes` through HBM (roofline memory term).
+    pub fn hbm_time(&self, bytes: f64) -> f64 {
+        bytes / self.hbm_bw
+    }
+
+    /// Roofline estimate: max(compute term, memory term).
+    pub fn roofline_time(&self, flops: f64, bytes: f64, efficiency: f64) -> f64 {
+        self.cube_time(flops, efficiency).max(self.hbm_time(bytes))
+    }
+}
+
+/// A device instance: spec + its position in the supernode hierarchy.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: DeviceId,
+    pub rack: usize,
+    pub board: usize,
+    pub die: usize,
+    pub spec: DeviceSpec,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube_time_scales_linearly() {
+        let s = DeviceSpec::ascend_910c();
+        let t1 = s.cube_time(1e12, 0.5);
+        let t2 = s.cube_time(2e12, 0.5);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roofline_picks_binding_term() {
+        let s = DeviceSpec::ascend_910c();
+        // tiny compute, huge bytes -> memory bound
+        let t = s.roofline_time(1e6, 1e12, 1.0);
+        assert!((t - 1e12 / s.hbm_bw).abs() < 1e-9);
+        // huge compute, tiny bytes -> compute bound
+        let t = s.roofline_time(1e15, 1.0, 1.0);
+        assert!((t - 1e15 / s.cube_flops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_clamped() {
+        let s = DeviceSpec::ascend_910c();
+        assert!(s.cube_time(1e12, 0.0).is_finite());
+        assert_eq!(s.cube_time(1e12, 2.0), s.cube_time(1e12, 1.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! Supernode hardware model: devices, hierarchy, and interconnect.
+//!
+//! This is the simulated substitute for the paper's Atlas 900 /
+//! Matrix384 testbed (see DESIGN.md substitution table). Every
+//! experiment runs against a [`topology::Topology`], so flipping between
+//! the UB supernode fabric and a legacy PCIe/Ethernet fabric is a
+//! one-line change — exactly the comparison the paper draws.
+
+pub mod device;
+pub mod topology;
+
+pub use device::{Device, DeviceId, DeviceSpec};
+pub use topology::{Fabric, Geometry, LinkSpec, LinkTier, Topology};

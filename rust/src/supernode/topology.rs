@@ -1,0 +1,344 @@
+//! Supernode interconnect topology.
+//!
+//! The paper (§2.3) describes the Matrix384 supernode: a 2D full-mesh
+//! within each rack, extended by another 2D full-mesh across racks,
+//! forming a "4D all-to-all" — every pair of NPUs is reachable in at
+//! most a couple of UB hops with uniform high bandwidth. Legacy clusters
+//! (the paper's baseline) connect dies over NVLink/PCIe within a server
+//! and Ethernet/RoCE across servers.
+//!
+//! We model links as *tiers*: each device pair resolves to the tier of
+//! their lowest common ancestor in the (rack, board, die) hierarchy.
+//! Each tier has bandwidth, per-hop latency, and hop count; transfer
+//! time = latency·hops + bytes/bandwidth. This captures exactly the two
+//! knobs the paper claims the supernode changes (15× bandwidth, 10×
+//! lower hop latency) and lets every experiment flip between
+//! "supernode" and "legacy" fabrics by swapping link tables.
+
+use super::device::{Device, DeviceId, DeviceSpec};
+
+/// Which class of link connects a device pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkTier {
+    /// Same die (self transfer; HBM-internal).
+    Local,
+    /// Dies on the same board (intra-server NVLink / UB board mesh).
+    Board,
+    /// Boards in the same rack (rack-level mesh; PCIe+NIC on legacy).
+    Rack,
+    /// Across racks (UB cross-rack mesh; Ethernet/RoCE on legacy).
+    CrossRack,
+}
+
+/// Bandwidth/latency of one tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Unidirectional per-link bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-hop latency, seconds.
+    pub hop_latency: f64,
+    /// Hops for this tier.
+    pub hops: u32,
+}
+
+impl LinkSpec {
+    /// Time to move `bytes` across this link.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.hop_latency * self.hops as f64 + bytes / self.bandwidth
+    }
+}
+
+/// The fabric: a link table per tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fabric {
+    pub name: &'static str,
+    pub local: LinkSpec,
+    pub board: LinkSpec,
+    pub rack: LinkSpec,
+    pub cross_rack: LinkSpec,
+}
+
+impl Fabric {
+    /// UB/Lingqu supernode fabric (§2.3): near-uniform high bandwidth,
+    /// 200 ns single-hop latency, full-mesh so hop counts stay tiny.
+    pub fn supernode() -> Self {
+        Self {
+            name: "supernode-ub",
+            local: LinkSpec {
+                bandwidth: 1.6e12,
+                hop_latency: 0.0,
+                hops: 0,
+            },
+            board: LinkSpec {
+                bandwidth: 392e9,
+                hop_latency: 200e-9,
+                hops: 1,
+            },
+            rack: LinkSpec {
+                bandwidth: 392e9,
+                hop_latency: 200e-9,
+                hops: 1,
+            },
+            cross_rack: LinkSpec {
+                bandwidth: 196e9, // cross-rack mesh at half board bandwidth
+                hop_latency: 200e-9,
+                hops: 2,
+            },
+        }
+    }
+
+    /// Legacy PCIe/Ethernet cluster (the paper's baseline): NVLink-class
+    /// intra-board, PCIe rack hop, 2 µs Ethernet hops and ~1/15 of the
+    /// supernode's cross-machine bandwidth.
+    pub fn legacy() -> Self {
+        Self {
+            name: "legacy-pcie-eth",
+            local: LinkSpec {
+                bandwidth: 1.6e12,
+                hop_latency: 0.0,
+                hops: 0,
+            },
+            board: LinkSpec {
+                bandwidth: 200e9,
+                hop_latency: 500e-9,
+                hops: 1,
+            },
+            rack: LinkSpec {
+                bandwidth: 25e9,
+                hop_latency: 2e-6,
+                hops: 2,
+            },
+            cross_rack: LinkSpec {
+                bandwidth: 12.5e9,
+                hop_latency: 2e-6,
+                hops: 4,
+            },
+        }
+    }
+
+    pub fn tier(&self, t: LinkTier) -> LinkSpec {
+        match t {
+            LinkTier::Local => self.local,
+            LinkTier::Board => self.board,
+            LinkTier::Rack => self.rack,
+            LinkTier::CrossRack => self.cross_rack,
+        }
+    }
+}
+
+/// Geometry of the supernode: racks × boards/rack × dies/board.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub racks: usize,
+    pub boards_per_rack: usize,
+    pub dies_per_board: usize,
+}
+
+impl Geometry {
+    pub fn device_count(&self) -> usize {
+        self.racks * self.boards_per_rack * self.dies_per_board
+    }
+}
+
+/// The whole cluster: geometry + fabric + device specs.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub geometry: Geometry,
+    pub fabric: Fabric,
+    pub devices: Vec<Device>,
+}
+
+impl Topology {
+    pub fn new(geometry: Geometry, fabric: Fabric, spec: DeviceSpec) -> Self {
+        let mut devices = Vec::with_capacity(geometry.device_count());
+        for r in 0..geometry.racks {
+            for b in 0..geometry.boards_per_rack {
+                for d in 0..geometry.dies_per_board {
+                    let id = DeviceId(
+                        r * geometry.boards_per_rack * geometry.dies_per_board
+                            + b * geometry.dies_per_board
+                            + d,
+                    );
+                    devices.push(Device {
+                        id,
+                        rack: r,
+                        board: b,
+                        die: d,
+                        spec: spec.clone(),
+                    });
+                }
+            }
+        }
+        Self {
+            geometry,
+            fabric,
+            devices,
+        }
+    }
+
+    /// The paper's Matrix384: 8 racks × 6 boards × 8 dies = 384 NPUs on
+    /// the UB fabric.
+    pub fn matrix384() -> Self {
+        Self::new(
+            Geometry {
+                racks: 8,
+                boards_per_rack: 6,
+                dies_per_board: 8,
+            },
+            Fabric::supernode(),
+            DeviceSpec::ascend_910c(),
+        )
+    }
+
+    /// A legacy 8-GPU-server cluster of the same total size.
+    pub fn legacy_cluster(servers: usize) -> Self {
+        Self::new(
+            Geometry {
+                racks: servers.div_ceil(8).max(1),
+                boards_per_rack: 8.min(servers),
+                dies_per_board: 8,
+            },
+            Fabric::legacy(),
+            DeviceSpec::a100_80g(),
+        )
+    }
+
+    /// A small topology for tests: 1 rack × 2 boards × 4 dies.
+    pub fn tiny() -> Self {
+        Self::new(
+            Geometry {
+                racks: 1,
+                boards_per_rack: 2,
+                dies_per_board: 4,
+            },
+            Fabric::supernode(),
+            DeviceSpec::ascend_910c(),
+        )
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, id: DeviceId) -> &Device {
+        &self.devices[id.0]
+    }
+
+    /// Resolve the link tier between two devices.
+    pub fn tier_between(&self, a: DeviceId, b: DeviceId) -> LinkTier {
+        let (da, db) = (self.device(a), self.device(b));
+        if a == b {
+            LinkTier::Local
+        } else if da.rack == db.rack && da.board == db.board {
+            LinkTier::Board
+        } else if da.rack == db.rack {
+            LinkTier::Rack
+        } else {
+            LinkTier::CrossRack
+        }
+    }
+
+    /// Point-to-point transfer time for `bytes` between two devices.
+    pub fn p2p_time(&self, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
+        self.fabric.tier(self.tier_between(a, b)).transfer_time(bytes)
+    }
+
+    /// The *slowest* tier present within a device group — collective
+    /// algorithms are bound by it.
+    pub fn bottleneck_tier(&self, group: &[DeviceId]) -> LinkTier {
+        let mut worst = LinkTier::Local;
+        for (i, &a) in group.iter().enumerate() {
+            for &b in &group[i + 1..] {
+                let t = self.tier_between(a, b);
+                worst = match (worst, t) {
+                    (LinkTier::CrossRack, _) | (_, LinkTier::CrossRack) => LinkTier::CrossRack,
+                    (LinkTier::Rack, _) | (_, LinkTier::Rack) => LinkTier::Rack,
+                    (LinkTier::Board, _) | (_, LinkTier::Board) => LinkTier::Board,
+                    _ => LinkTier::Local,
+                };
+            }
+        }
+        worst
+    }
+
+    /// All device ids as a flat group.
+    pub fn all_devices(&self) -> Vec<DeviceId> {
+        self.devices.iter().map(|d| d.id).collect()
+    }
+
+    /// Device ids of one rack (used for topology-aware planning).
+    pub fn rack_devices(&self, rack: usize) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .filter(|d| d.rack == rack)
+            .map(|d| d.id)
+            .collect()
+    }
+
+    /// Device ids of one board.
+    pub fn board_devices(&self, rack: usize, board: usize) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .filter(|d| d.rack == rack && d.board == board)
+            .map(|d| d.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix384_has_384_devices() {
+        let t = Topology::matrix384();
+        assert_eq!(t.device_count(), 384);
+    }
+
+    #[test]
+    fn tier_resolution() {
+        let t = Topology::matrix384();
+        let d0 = DeviceId(0);
+        assert_eq!(t.tier_between(d0, d0), LinkTier::Local);
+        assert_eq!(t.tier_between(d0, DeviceId(1)), LinkTier::Board);
+        assert_eq!(t.tier_between(d0, DeviceId(8)), LinkTier::Rack);
+        assert_eq!(t.tier_between(d0, DeviceId(48)), LinkTier::CrossRack);
+        // symmetric
+        assert_eq!(
+            t.tier_between(DeviceId(48), d0),
+            t.tier_between(d0, DeviceId(48))
+        );
+    }
+
+    #[test]
+    fn supernode_beats_legacy_cross_machine() {
+        let sn = Fabric::supernode();
+        let lg = Fabric::legacy();
+        let bytes = 1e9;
+        let t_sn = sn.rack.transfer_time(bytes);
+        let t_lg = lg.rack.transfer_time(bytes);
+        // paper: ~15x bandwidth advantage cross-machine
+        assert!(t_lg / t_sn > 10.0, "ratio={}", t_lg / t_sn);
+        // paper: 2µs -> 200ns single-hop latency
+        assert!((lg.rack.hop_latency / sn.rack.hop_latency - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bottleneck_tier_of_groups() {
+        let t = Topology::matrix384();
+        let board = t.board_devices(0, 0);
+        assert_eq!(t.bottleneck_tier(&board), LinkTier::Board);
+        let rack = t.rack_devices(0);
+        assert_eq!(t.bottleneck_tier(&rack), LinkTier::Rack);
+        let all = t.all_devices();
+        assert_eq!(t.bottleneck_tier(&all[..64]), LinkTier::CrossRack);
+    }
+
+    #[test]
+    fn p2p_time_monotone_in_bytes() {
+        let t = Topology::matrix384();
+        let a = DeviceId(0);
+        let b = DeviceId(100);
+        assert!(t.p2p_time(a, b, 1e6) < t.p2p_time(a, b, 1e9));
+    }
+}

@@ -1,0 +1,158 @@
+//! Synthetic training data.
+//!
+//! A deterministic Markov-chain corpus: token t+1 is drawn from a
+//! Zipf-skewed distribution conditioned on a hash of token t. This
+//! gives the language model real structure to learn (bigram statistics)
+//! so the E14 end-to-end loss curve demonstrably drops below the
+//! uniform baseline entropy ln(vocab).
+
+use crate::util::rng::{draw_cdf, zipf_cdf, Rng};
+
+/// Deterministic synthetic corpus generator.
+pub struct Corpus {
+    vocab: usize,
+    rng: Rng,
+    cdf: Vec<f64>,
+    state: i32,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 4);
+        Self {
+            vocab,
+            rng: Rng::new(seed),
+            cdf: zipf_cdf(vocab, 1.1),
+            state: 0,
+        }
+    }
+
+    /// Next token: mixture of a deterministic bigram successor (70%)
+    /// and a Zipf draw (30%) — learnable but not trivial.
+    pub fn next_token(&mut self) -> i32 {
+        let succ = ((self.state as u64).wrapping_mul(2654435761) % self.vocab as u64) as i32;
+        let tok = if self.rng.chance(0.7) {
+            succ
+        } else {
+            draw_cdf(&mut self.rng, &self.cdf) as i32
+        };
+        self.state = tok;
+        tok
+    }
+
+    /// A (tokens, targets) batch: targets are tokens shifted by one.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut prev = self.next_token();
+            for _ in 0..seq {
+                let next = self.next_token();
+                tokens.push(prev);
+                targets.push(next);
+                prev = next;
+            }
+        }
+        (tokens, targets)
+    }
+
+    /// Shard a global batch into `ways` DP shards (each `batch/ways`
+    /// sequences).
+    pub fn dp_shards(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        ways: usize,
+    ) -> Vec<(Vec<i32>, Vec<i32>)> {
+        assert_eq!(batch % ways, 0, "batch must divide DP ways");
+        (0..ways).map(|_| self.batch(batch / ways, seq)).collect()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
+/// Empirical bigram entropy of a corpus sample (nats) — a lower bound
+/// reference for the achievable LM loss.
+pub fn bigram_entropy(vocab: usize, seed: u64, samples: usize) -> f64 {
+    let mut c = Corpus::new(vocab, seed);
+    let mut counts = vec![0f64; vocab * vocab];
+    let mut row = vec![0f64; vocab];
+    let mut prev = c.next_token() as usize;
+    for _ in 0..samples {
+        let next = c.next_token() as usize;
+        counts[prev * vocab + next] += 1.0;
+        row[prev] += 1.0;
+        prev = next;
+    }
+    let total: f64 = row.iter().sum();
+    let mut h = 0.0;
+    for p in 0..vocab {
+        if row[p] == 0.0 {
+            continue;
+        }
+        for n in 0..vocab {
+            let c = counts[p * vocab + n];
+            if c > 0.0 {
+                let p_joint = c / total;
+                let p_cond = c / row[p];
+                h -= p_joint * p_cond.ln();
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range_and_deterministic() {
+        let mut a = Corpus::new(64, 5);
+        let mut b = Corpus::new(64, 5);
+        for _ in 0..1000 {
+            let x = a.next_token();
+            assert_eq!(x, b.next_token());
+            assert!((0..64).contains(&x));
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut c = Corpus::new(128, 9);
+        let (t, y) = c.batch(4, 32);
+        assert_eq!(t.len(), 128);
+        assert_eq!(y.len(), 128);
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let mut c = Corpus::new(128, 9);
+        let (t, y) = c.batch(1, 16);
+        // within a sequence, target[i] == token[i+1]
+        for i in 0..15 {
+            assert_eq!(y[i], t[i + 1]);
+        }
+    }
+
+    #[test]
+    fn corpus_is_learnable_below_uniform() {
+        let vocab = 64;
+        let h = bigram_entropy(vocab, 5, 200_000);
+        let uniform = (vocab as f64).ln();
+        assert!(
+            h < uniform * 0.7,
+            "bigram entropy {h} should be well below uniform {uniform}"
+        );
+    }
+
+    #[test]
+    fn dp_shards_partition_batch() {
+        let mut c = Corpus::new(64, 1);
+        let shards = c.dp_shards(8, 16, 4);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(|(t, _)| t.len() == 2 * 16));
+    }
+}

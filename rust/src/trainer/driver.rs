@@ -1,0 +1,139 @@
+//! End-to-end training driver over the PJRT runtime (E14).
+
+use super::data::Corpus;
+use crate::runtime::{DataParallelTrainer, Runtime, TrainExecutor};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Options for a real training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub seed: u64,
+    pub dp: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            seed: 42,
+            dp: 1,
+            log_every: 10,
+        }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub step_seconds: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub curve: Vec<LossPoint>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub mean_step_seconds: f64,
+    pub tokens_per_second: f64,
+    pub total_params: usize,
+}
+
+/// Train single-replica for `opts.steps` steps, logging the loss curve.
+pub fn train(rt: &Runtime, opts: &TrainOptions) -> Result<TrainReport> {
+    let manifest = rt.manifest()?;
+    let total_params = manifest.total_params();
+    let (batch, seq, vocab) = (manifest.batch, manifest.seq, manifest.vocab);
+    let tokens_per_step = (batch * seq * opts.dp) as f64;
+
+    let mut corpus = Corpus::new(vocab, opts.seed);
+    let mut curve = Vec::new();
+    let mut first_loss = f32::NAN;
+    let mut final_loss = f32::NAN;
+    let mut total_time = 0.0;
+
+    if opts.dp <= 1 {
+        let mut exec = TrainExecutor::new(manifest, opts.seed);
+        for step in 0..opts.steps {
+            let (tokens, targets) = corpus.batch(batch, seq);
+            let t0 = Instant::now();
+            let loss = exec.step(rt, &tokens, &targets)?;
+            let dt = t0.elapsed().as_secs_f64();
+            total_time += dt;
+            if step == 0 {
+                first_loss = loss;
+            }
+            final_loss = loss;
+            if step % opts.log_every == 0 || step + 1 == opts.steps {
+                curve.push(LossPoint {
+                    step,
+                    loss,
+                    step_seconds: dt,
+                });
+            }
+        }
+    } else {
+        let mut dp = DataParallelTrainer::new(manifest, opts.dp, opts.seed);
+        for step in 0..opts.steps {
+            let shards = corpus.dp_shards(batch * opts.dp, seq, opts.dp);
+            let t0 = Instant::now();
+            let loss = dp.step(rt, &shards)?;
+            let dt = t0.elapsed().as_secs_f64();
+            total_time += dt;
+            if step == 0 {
+                first_loss = loss;
+            }
+            final_loss = loss;
+            if step % opts.log_every == 0 || step + 1 == opts.steps {
+                curve.push(LossPoint {
+                    step,
+                    loss,
+                    step_seconds: dt,
+                });
+            }
+        }
+        debug_assert!(dp.in_sync());
+    }
+
+    let mean_step = total_time / opts.steps as f64;
+    Ok(TrainReport {
+        curve,
+        first_loss,
+        final_loss,
+        mean_step_seconds: mean_step,
+        tokens_per_second: tokens_per_step / mean_step,
+        total_params,
+    })
+}
+
+/// Render the loss curve as a compact text plot.
+pub fn render_curve(report: &TrainReport, width: usize) -> String {
+    let max = report
+        .curve
+        .iter()
+        .map(|p| p.loss)
+        .fold(f32::MIN, f32::max);
+    let min = report
+        .curve
+        .iter()
+        .map(|p| p.loss)
+        .fold(f32::MAX, f32::min);
+    let span = (max - min).max(1e-6);
+    let mut out = String::new();
+    for p in &report.curve {
+        let frac = ((p.loss - min) / span * width as f32) as usize;
+        out.push_str(&format!(
+            "step {:>5}  loss {:>8.4}  |{}{}|\n",
+            p.step,
+            p.loss,
+            "#".repeat(frac.min(width)),
+            " ".repeat(width - frac.min(width)),
+        ));
+    }
+    out
+}

@@ -1,0 +1,15 @@
+//! Training workloads: synthetic data, the end-to-end PJRT driver,
+//! MoE routing statistics, pipeline schedules, and the scenario
+//! builders behind each paper experiment.
+
+pub mod data;
+pub mod driver;
+pub mod moe;
+pub mod pipeline;
+pub mod scenarios;
+
+pub use data::{bigram_entropy, Corpus};
+pub use driver::{render_curve, train, LossPoint, TrainOptions, TrainReport};
+pub use moe::RoutingStats;
+pub use pipeline::{gpipe, one_f_one_b_bubble, PipelineReport};
+pub use scenarios::{OffloadTrainingScenario, TpOverheadScenario};

@@ -1,0 +1,147 @@
+//! MoE routing statistics: the load-imbalance source HyperMPMD's
+//! schedulers react to.
+//!
+//! Real routers produce skewed expert loads (Zipf-like); this module
+//! generates token→expert assignments with controllable skew, computes
+//! the imbalance metrics the paper discusses, and derives the per-rank
+//! all-to-all payloads the EP communication model consumes.
+
+use crate::util::rng::{draw_cdf, zipf_cdf, Rng};
+
+/// Token→expert routing outcome for one MoE layer.
+#[derive(Debug, Clone)]
+pub struct RoutingStats {
+    pub experts: usize,
+    pub top_k: usize,
+    /// Assignments per expert (counts).
+    pub load: Vec<u64>,
+    pub tokens: usize,
+}
+
+impl RoutingStats {
+    /// Route `tokens` tokens to `top_k` of `experts` experts with Zipf
+    /// skew `s` (s=0 → uniform).
+    pub fn generate(tokens: usize, experts: usize, top_k: usize, s: f64, seed: u64) -> Self {
+        assert!(top_k <= experts);
+        let mut rng = Rng::new(seed);
+        let cdf = zipf_cdf(experts, s.max(1e-9));
+        // random expert *identity* permutation so the hot expert isn't
+        // always index 0
+        let mut perm: Vec<usize> = (0..experts).collect();
+        rng.shuffle(&mut perm);
+        let mut load = vec![0u64; experts];
+        for _ in 0..tokens {
+            // draw k distinct experts
+            let mut chosen = Vec::with_capacity(top_k);
+            while chosen.len() < top_k {
+                let e = perm[draw_cdf(&mut rng, &cdf)];
+                if !chosen.contains(&e) {
+                    chosen.push(e);
+                }
+            }
+            for e in chosen {
+                load[e] += 1;
+            }
+        }
+        Self {
+            experts,
+            top_k,
+            load,
+            tokens,
+        }
+    }
+
+    /// Max/mean load ratio — 1.0 means perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.load.iter().max().unwrap_or(&0) as f64;
+        let mean = self.load.iter().sum::<u64>() as f64 / self.experts as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Fraction of total assignments on the busiest 10% of experts.
+    pub fn hot_expert_share(&self) -> f64 {
+        let mut sorted = self.load.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top = (self.experts / 10).max(1);
+        let hot: u64 = sorted[..top].iter().sum();
+        let total: u64 = sorted.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            hot as f64 / total as f64
+        }
+    }
+
+    /// Per-EP-rank all-to-all send bytes when experts are spread over
+    /// `ep` ranks (contiguous blocks) and each token's hidden vector is
+    /// `hidden_bytes`. The busiest rank bounds the collective.
+    pub fn ep_rank_bytes(&self, ep: usize, hidden_bytes: u64) -> Vec<u64> {
+        assert!(ep >= 1 && self.experts % ep == 0);
+        let per = self.experts / ep;
+        (0..ep)
+            .map(|r| {
+                self.load[r * per..(r + 1) * per]
+                    .iter()
+                    .sum::<u64>()
+                    * hidden_bytes
+            })
+            .collect()
+    }
+
+    /// Straggler factor of the EP all-to-all: busiest rank bytes over
+    /// mean rank bytes. The collective finishes when the busiest rank
+    /// does, so this directly stretches EP comm time under skew.
+    pub fn ep_straggler_factor(&self, ep: usize) -> f64 {
+        let bytes = self.ep_rank_bytes(ep, 1);
+        let max = *bytes.iter().max().unwrap() as f64;
+        let mean = bytes.iter().sum::<u64>() as f64 / ep as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_routing_is_balanced() {
+        let r = RoutingStats::generate(100_000, 64, 8, 0.0, 3);
+        assert!(r.imbalance() < 1.15, "imbalance={}", r.imbalance());
+    }
+
+    #[test]
+    fn skewed_routing_is_imbalanced() {
+        let r = RoutingStats::generate(100_000, 64, 8, 1.2, 3);
+        assert!(r.imbalance() > 2.0, "imbalance={}", r.imbalance());
+        assert!(r.hot_expert_share() > 0.25);
+    }
+
+    #[test]
+    fn total_assignments_is_tokens_times_k() {
+        let r = RoutingStats::generate(10_000, 16, 2, 0.8, 1);
+        assert_eq!(r.load.iter().sum::<u64>(), 20_000);
+    }
+
+    #[test]
+    fn ep_rank_bytes_partition_total() {
+        let r = RoutingStats::generate(10_000, 16, 2, 0.8, 1);
+        let bytes = r.ep_rank_bytes(4, 2);
+        assert_eq!(bytes.len(), 4);
+        assert_eq!(bytes.iter().sum::<u64>(), 20_000 * 2);
+    }
+
+    #[test]
+    fn straggler_factor_grows_with_skew() {
+        let lo = RoutingStats::generate(50_000, 32, 4, 0.0, 2).ep_straggler_factor(8);
+        let hi = RoutingStats::generate(50_000, 32, 4, 1.5, 2).ep_straggler_factor(8);
+        assert!(hi > lo, "hi={hi} lo={lo}");
+    }
+}

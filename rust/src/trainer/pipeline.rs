@@ -1,0 +1,119 @@
+//! Pipeline-parallel schedules (GPipe and 1F1B) on the simulator.
+//!
+//! Used by the planner's bubble model validation and the E8 comparison:
+//! the paper attributes omni-modal bubbles to "SPMD combined with
+//! Pipeline Parallelism"; this module provides the reference pipeline
+//! schedules with their analytic bubble fractions.
+
+use crate::sim::{tags, Engine, TaskId};
+
+/// Result of simulating a pipeline schedule.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub makespan: f64,
+    /// Mean idle fraction across stages.
+    pub bubble_ratio: f64,
+}
+
+/// Simulate GPipe: all microbatch forwards flow through stages, then
+/// all backwards. `fwd[s]` is stage s's forward time per microbatch;
+/// backward costs 2×.
+pub fn gpipe(fwd: &[f64], microbatches: usize) -> PipelineReport {
+    let stages = fwd.len();
+    let mut engine = Engine::new();
+    let res: Vec<_> = (0..stages)
+        .map(|s| engine.add_resource(format!("stage{s}")))
+        .collect();
+    // forward waves
+    let mut fwd_ids: Vec<Vec<TaskId>> = vec![Vec::with_capacity(stages); microbatches];
+    for mb in 0..microbatches {
+        for s in 0..stages {
+            let mut deps = Vec::new();
+            if s > 0 {
+                deps.push(fwd_ids[mb][s - 1]);
+            }
+            if mb > 0 {
+                deps.push(fwd_ids[mb - 1][s]);
+            }
+            let t = engine.add_task(res[s], fwd[s], &deps, tags::COMPUTE);
+            fwd_ids[mb].push(t);
+        }
+    }
+    // backward waves (reverse stage order), gated on ALL forwards done
+    // (GPipe's flush)
+    let all_fwd: Vec<TaskId> = fwd_ids.iter().flatten().copied().collect();
+    let mut bwd_prev: Vec<Option<TaskId>> = vec![None; stages];
+    let mut last: Vec<Option<TaskId>> = vec![None; stages];
+    for mb in 0..microbatches {
+        for s in (0..stages).rev() {
+            let mut deps: Vec<TaskId> = if mb == 0 && s == stages - 1 {
+                all_fwd.clone()
+            } else {
+                Vec::new()
+            };
+            if s < stages - 1 {
+                if let Some(d) = bwd_prev[s + 1] {
+                    deps.push(d);
+                }
+            }
+            if let Some(d) = last[s] {
+                deps.push(d);
+            }
+            let t = engine.add_task(res[s], fwd[s] * 2.0, &deps, tags::COMPUTE);
+            bwd_prev[s] = Some(t);
+            last[s] = Some(t);
+        }
+    }
+    let sim = engine.run();
+    let bubble = 1.0 - sim.mean_utilization(&res);
+    PipelineReport {
+        makespan: sim.makespan,
+        bubble_ratio: bubble,
+    }
+}
+
+/// Analytic 1F1B bubble fraction: (p−1)/(m+p−1).
+pub fn one_f_one_b_bubble(stages: usize, microbatches: usize) -> f64 {
+    let p = stages as f64;
+    let m = microbatches as f64;
+    (p - 1.0) / (m + p - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_gpipe_bubble_matches_theory() {
+        // GPipe bubble ≈ (p−1)/(m+p−1) for balanced stages
+        let stages = 4;
+        let m = 8;
+        let r = gpipe(&vec![0.01; stages], m);
+        let theory = one_f_one_b_bubble(stages, m);
+        assert!(
+            (r.bubble_ratio - theory).abs() < 0.12,
+            "sim={} theory={}",
+            r.bubble_ratio,
+            theory
+        );
+    }
+
+    #[test]
+    fn imbalanced_stages_blow_up_bubbles() {
+        let balanced = gpipe(&[0.01, 0.01, 0.01, 0.01], 8);
+        let imbalanced = gpipe(&[0.002, 0.03, 0.005, 0.003], 8);
+        assert!(
+            imbalanced.bubble_ratio > balanced.bubble_ratio + 0.15,
+            "imb={} bal={}",
+            imbalanced.bubble_ratio,
+            balanced.bubble_ratio
+        );
+    }
+
+    #[test]
+    fn more_microbatches_shrink_bubbles() {
+        let few = gpipe(&[0.01; 4], 4);
+        let many = gpipe(&[0.01; 4], 32);
+        assert!(many.bubble_ratio < few.bubble_ratio);
+    }
+}

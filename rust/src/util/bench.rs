@@ -1,0 +1,96 @@
+//! Timing harness for `cargo bench` targets (criterion is unavailable
+//! offline; all `[[bench]]` targets use `harness = false` and this
+//! module).
+//!
+//! Methodology: warmup iterations, then N measured iterations, report
+//! trimmed mean + min + p50 + p95. Deterministic workloads mean tight
+//! distributions; the trimmed mean guards against scheduler noise on the
+//! single-core CI machine.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; trimmed mean drops the top and
+/// bottom 10%.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trim = iters / 10;
+    let kept = &samples[trim..iters - trim.min(iters - 1)];
+    let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: samples[0],
+        p50_s: samples[iters / 2],
+        p95_s: samples[(iters * 95 / 100).min(iters - 1)],
+    }
+}
+
+/// Print a result in a stable, greppable one-line format.
+pub fn report(r: &BenchResult) {
+    println!(
+        "bench {:<42} mean {:>12} min {:>12} p50 {:>12} p95 {:>12} ({} iters)",
+        r.name,
+        crate::util::stats::fmt_secs(r.mean_s),
+        crate::util::stats::fmt_secs(r.min_s),
+        crate::util::stats::fmt_secs(r.p50_s),
+        crate::util::stats::fmt_secs(r.p95_s),
+        r.iters
+    );
+}
+
+/// Convenience: bench + report in one call.
+pub fn run(name: &str, warmup: usize, iters: usize, f: impl FnMut()) -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    report(&r);
+    r
+}
+
+/// Section header for bench output, mirroring the paper's table/figure ids.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s * 1.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundational substrates built from scratch for the offline
+//! environment: RNG, JSON, property testing, thread pool, CLI parsing,
+//! timing/statistics.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

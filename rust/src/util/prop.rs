@@ -1,0 +1,218 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! A compact generator + shrinker: `Gen<T>` produces random values from a
+//! `Rng`, `forall` runs a property over many cases and, on failure,
+//! greedily shrinks the counterexample before panicking with a
+//! reproducible seed.
+
+use crate::util::rng::Rng;
+
+/// A generator: produces a value and a list of shrink candidates.
+pub struct Gen<T> {
+    #[allow(clippy::type_complexity)]
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    #[allow(clippy::type_complexity)]
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self {
+            gen: Box::new(gen),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (shrinking is lost across the map).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| f(self.sample(r)), |_| Vec::new())
+    }
+}
+
+/// usize in [lo, hi], shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(
+        move |r| r.range(lo, hi + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.sort();
+            out.dedup();
+            out.retain(|&x| x < v);
+            out
+        },
+    )
+}
+
+/// f64 in [lo, hi), shrinking toward lo.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |r| r.uniform(lo, hi),
+        move |&v| {
+            let mid = lo + (v - lo) / 2.0;
+            if (v - lo).abs() > 1e-9 {
+                vec![lo, mid]
+            } else {
+                vec![]
+            }
+        },
+    )
+}
+
+/// Vec of length in [min_len, max_len], elementwise generator.
+pub fn vec_of<T: Clone + 'static>(
+    elem: Gen<T>,
+    min_len: usize,
+    max_len: usize,
+) -> Gen<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let elem2 = elem.clone();
+    Gen::new(
+        move |r| {
+            let n = r.range(min_len, max_len + 1);
+            (0..n).map(|_| elem.sample(r)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            // shrink length: halves and minus-one
+            if v.len() > min_len {
+                out.push(v[..min_len.max(v.len() / 2)].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            // shrink one element at a time
+            for i in 0..v.len() {
+                for s in elem2.shrinks(&v[i]) {
+                    let mut w = v.clone();
+                    w[i] = s;
+                    out.push(w);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Pair of independent generators.
+pub fn pair_of<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let a = std::rc::Rc::new(a);
+    let b = std::rc::Rc::new(b);
+    let (a2, b2) = (a.clone(), b.clone());
+    Gen::new(
+        move |r| (a.sample(r), b.sample(r)),
+        move |(x, y)| {
+            let mut out: Vec<(A, B)> =
+                a2.shrinks(x).into_iter().map(|x2| (x2, y.clone())).collect();
+            out.extend(b2.shrinks(y).into_iter().map(|y2| (x.clone(), y2)));
+            out
+        },
+    )
+}
+
+/// Outcome of a single property check.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn from_bool(ok: bool, msg: &str) -> Check {
+        if ok {
+            Check::Pass
+        } else {
+            Check::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; shrink and panic on failure.
+///
+/// The seed is derived from the property name so failures are stable
+/// across runs, and printed so they can be replayed.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> Check,
+) {
+    let seed = name.bytes().fold(0xabcdef_u64, |h, b| {
+        h.wrapping_mul(31).wrapping_add(b as u64)
+    });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Check::Fail(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrinks(&best) {
+                    if let Check::Fail(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  \
+                 counterexample: {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", 200, pair_of(usize_in(0, 100), usize_in(0, 100)), |(a, b)| {
+            Check::from_bool(a + b == b + a, "addition should commute")
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall("find-big", 500, usize_in(0, 1000), |&x| {
+                Check::from_bool(x < 50, "x too big")
+            });
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // greedy shrink should land at exactly the boundary 50
+        assert!(msg.contains("counterexample: 50"), "msg={msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = vec_of(usize_in(0, 9), 2, 5);
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let v = g.sample(&mut r);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Failure injection: stragglers, degraded links, memory pressure.
+//! The framework must degrade gracefully, never deadlock or corrupt
+//! accounting.
+
+use hyperparallel::collectives;
+use hyperparallel::graph::CollectiveKind;
+use hyperparallel::hypermpmd::{
+    schedule_dynamic, schedule_static, OmniModalWorkload, SubModule,
+};
+use hyperparallel::memory::{AllocError, MemoryHierarchy, TransferEngine};
+use hyperparallel::supernode::{DeviceId, DeviceSpec, Fabric, Geometry, Topology};
+use hyperparallel::util::prop::{forall, usize_in, vec_of, Check};
+use hyperparallel::util::rng::Rng;
+
+/// A straggling sub-module (3x slower) hurts the static pipeline far
+/// more than the dynamic scheduler.
+#[test]
+fn straggler_submodule_hurts_static_more() {
+    let mk = |slow: f64| OmniModalWorkload {
+        modules: vec![
+            SubModule { name: "a".into(), time_per_microbatch: 30e-3, inputs: vec![] },
+            SubModule { name: "b".into(), time_per_microbatch: 30e-3 * slow, inputs: vec![] },
+            SubModule { name: "c".into(), time_per_microbatch: 30e-3, inputs: vec![] },
+            SubModule { name: "fuse".into(), time_per_microbatch: 20e-3, inputs: vec![0, 1, 2] },
+        ],
+        microbatches: 16,
+    };
+    let healthy_gain = {
+        let w = mk(1.0);
+        schedule_static(&w).makespan / schedule_dynamic(&w, 4).makespan
+    };
+    let degraded_gain = {
+        let w = mk(3.0);
+        schedule_static(&w).makespan / schedule_dynamic(&w, 4).makespan
+    };
+    assert!(
+        degraded_gain > healthy_gain,
+        "degraded {degraded_gain} <= healthy {healthy_gain}"
+    );
+}
+
+/// Link degradation: cutting cross-rack bandwidth must increase every
+/// collective's cost monotonically, and never panic.
+#[test]
+fn degraded_links_raise_collective_costs_monotonically() {
+    let group: Vec<DeviceId> = (0..96).map(DeviceId).collect();
+    let mut prev = 0.0;
+    for cut in [1.0, 0.5, 0.25, 0.1, 0.01] {
+        let mut fabric = Fabric::supernode();
+        fabric.cross_rack.bandwidth *= cut;
+        fabric.rack.bandwidth *= cut;
+        let topo = Topology::new(
+            Geometry { racks: 4, boards_per_rack: 4, dies_per_board: 8 },
+            fabric,
+            DeviceSpec::ascend_910c(),
+        );
+        let t = collectives::cost(&topo, CollectiveKind::AllReduce, 1e8, &group).time;
+        assert!(t >= prev, "cost decreased under degradation");
+        prev = t;
+    }
+}
+
+/// HBM pressure: pathological alloc patterns must end in typed errors,
+/// never panics or accounting drift.
+#[test]
+fn hbm_pressure_yields_errors_not_panics() {
+    let mut m = MemoryHierarchy::new(16 * 4096, 1 << 20, TransferEngine::supernode());
+    let mut live = Vec::new();
+    let mut rng = Rng::new(3);
+    for _ in 0..200 {
+        let bytes = 4096 * rng.range(1, 6) as u64;
+        match m.register_in_hbm(bytes) {
+            Ok(id) => live.push(id),
+            Err(AllocError::OutOfMemory { .. }) | Err(AllocError::Fragmented { .. }) => {
+                // evict by releasing a random region (simulates policy)
+                if !live.is_empty() {
+                    let i = rng.range(0, live.len());
+                    m.release(live.swap_remove(i));
+                }
+            }
+        }
+        m.check_invariants().unwrap();
+    }
+    for id in live {
+        m.release(id);
+    }
+    assert_eq!(m.hbm_used(), 0);
+}
+
+/// Offload under total HBM exhaustion with everything pinned: the
+/// eviction loop must return OutOfMemory, not spin.
+#[test]
+fn fully_pinned_hbm_reports_oom() {
+    let mut m = MemoryHierarchy::new(8 * 4096, 1 << 20, TransferEngine::supernode());
+    let a = m.register_in_dram(4 * 4096).unwrap();
+    let b = m.register_in_dram(4 * 4096).unwrap();
+    m.prefetch(a).unwrap();
+    m.prefetch(b).unwrap();
+    m.pin(a, true);
+    m.pin(b, true);
+    assert!(matches!(
+        m.evict_until(4096, false),
+        Err(AllocError::OutOfMemory { .. })
+    ));
+    m.check_invariants().unwrap();
+}
+
+/// Random DAGs through the simulator must always complete (no deadlock)
+/// and respect the critical-path lower bound.
+#[test]
+fn prop_random_dags_never_deadlock() {
+    forall(
+        "sim-no-deadlock",
+        60,
+        vec_of(usize_in(0, 4), 2, 80),
+        |durations| {
+            use hyperparallel::sim::Engine;
+            let mut e = Engine::new();
+            let rs: Vec<_> = (0..4).map(|i| e.add_resource(format!("r{i}"))).collect();
+            let mut rng = Rng::new(durations.len() as u64 * 31);
+            let mut tasks = Vec::new();
+            for (i, &d) in durations.iter().enumerate() {
+                // random backward deps (valid DAG by construction)
+                let mut deps = Vec::new();
+                if i > 0 {
+                    for _ in 0..rng.range(0, 3.min(i)) {
+                        deps.push(tasks[rng.range(0, i)]);
+                    }
+                    deps.dedup();
+                }
+                tasks.push(e.add_task(rs[i % 4], d as f64 * 0.001, &deps, 0));
+            }
+            let res = e.run();
+            let total: f64 = durations.iter().map(|&d| d as f64 * 0.001).sum();
+            Check::from_bool(
+                res.makespan <= total + 1e-9 && res.intervals.len() == durations.len(),
+                &format!("makespan {} vs serial {}", res.makespan, total),
+            )
+        },
+    );
+}
+
+/// Degenerate process-group configs: empty, reversed, out of range —
+/// rejected with typed errors.
+#[test]
+fn malformed_process_groups_rejected() {
+    use hyperparallel::hypermpmd::{MappingError, ProcessGroupMap};
+    let cases = [
+        (r#"{"groups": []}"#, true), // empty is fine
+        (r#"{"groups": [{"name":"a","module":"m","ranks":[8,4]}]}"#, false),
+        (r#"{"groups": [{"name":"a","module":"m","ranks":[0]}]}"#, false),
+        (r#"not json"#, false),
+    ];
+    for (src, ok) in cases {
+        let r = ProcessGroupMap::from_json(src, 16);
+        assert_eq!(r.is_ok(), ok, "{src}: {r:?}");
+        if let Err(e) = r {
+            // Display impl must not panic
+            let _ = format!("{e}");
+            let _: &dyn std::error::Error = &e;
+            match e {
+                MappingError::Parse(_)
+                | MappingError::BadRange { .. }
+                | MappingError::MissingField(_)
+                | MappingError::Overlap { .. }
+                | MappingError::BeyondCluster { .. } => {}
+            }
+        }
+    }
+}
+
+/// Planner on degenerate clusters (1 device, prime-sized) still
+/// produces sane answers.
+#[test]
+fn planner_handles_degenerate_clusters() {
+    use hyperparallel::config::ModelDesc;
+    use hyperparallel::hypershard::{plan, PlannerConfig};
+    let cfg = PlannerConfig {
+        allow_offload: true,
+        ..Default::default()
+    };
+    // 1-device "cluster"
+    let one = Topology::new(
+        Geometry { racks: 1, boards_per_rack: 1, dies_per_board: 1 },
+        Fabric::supernode(),
+        DeviceSpec::ascend_910c(),
+    );
+    let plans = plan(&ModelDesc::tiny_moe(), &one, &cfg);
+    assert_eq!(plans.len(), 1);
+    assert_eq!(plans[0].strategy.device_count(), 1);
+    // 7-device board (prime): only dp7 and tp7 factorizations exist
+    let prime = Topology::new(
+        Geometry { racks: 1, boards_per_rack: 1, dies_per_board: 7 },
+        Fabric::supernode(),
+        DeviceSpec::ascend_910c(),
+    );
+    for c in plan(&ModelDesc::tiny_moe(), &prime, &cfg) {
+        assert_eq!(c.strategy.device_count(), 7);
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration: the framework layers composed end to end on the
+//! simulated substrate — planner → offload orchestration → simulator,
+//! process groups → MPMD schedulers, and cross-module property tests.
+
+use hyperparallel::config::ModelDesc;
+use hyperparallel::coordinator::Coordinator;
+use hyperparallel::graph::{lower_to_sim, GraphBuilder};
+use hyperparallel::hypermpmd::{
+    omni_modal_example, schedule_dynamic, schedule_gang, schedule_single_controller,
+    schedule_static, OmniModalWorkload, ProcessGroupMap, RlWorkload,
+};
+use hyperparallel::hyperoffload::{orchestrate, OrchestratorConfig};
+use hyperparallel::hypershard::{best_plan, plan, PlannerConfig};
+use hyperparallel::memory::TransferEngine;
+use hyperparallel::supernode::Topology;
+use hyperparallel::trainer::scenarios::OffloadTrainingScenario;
+use hyperparallel::util::prop::{forall, pair_of, usize_in, Check};
+
+#[test]
+fn coordinator_plans_then_offload_executes() {
+    // Step 1+2: plan
+    let coord = Coordinator::new(Topology::tiny()).with_offload(true);
+    let summary = coord.plan_model(&ModelDesc::llama_8b());
+    assert!(summary.requires_offload);
+    // Step 3: orchestrate the step graph under HyperOffload and run it
+    let scenario = OffloadTrainingScenario::llama8b();
+    let (g, sizes) = scenario.build_graph();
+    let plan = orchestrate(&g, &sizes, &OrchestratorConfig::default());
+    let mut low = lower_to_sim(
+        &plan.graph,
+        &scenario.topo,
+        &TransferEngine::supernode(),
+        scenario.cube_efficiency,
+    );
+    let res = low.run();
+    assert!(res.makespan > 0.0);
+    hyperparallel::hyperoffload::orchestrator::verify_residency(
+        &plan,
+        &low.engine,
+        &low.task_of_node,
+    )
+    .unwrap();
+}
+
+#[test]
+fn process_groups_feed_mpmd_schedulers() {
+    let topo = Topology::matrix384();
+    let map = ProcessGroupMap::from_json(omni_modal_example(), topo.device_count()).unwrap();
+    // one scheduling group per mapped module (minus the control group)
+    let groups = map.groups.iter().filter(|g| g.module != "control").count();
+    let w = OmniModalWorkload::paper_shape(8);
+    assert_eq!(groups, w.modules.len());
+    let stat = schedule_static(&w);
+    let dyn_ = schedule_dynamic(&w, groups);
+    assert!(dyn_.makespan <= stat.makespan);
+}
+
+#[test]
+fn planner_offload_interaction() {
+    // without offload, llama-8b on one 8-die board needs tp*pp >= 4;
+    // with HyperOffload, dp-heavy plans become admissible.
+    let topo = Topology::tiny();
+    let model = ModelDesc::llama_8b();
+    let strict = PlannerConfig {
+        allow_offload: false,
+        ..Default::default()
+    };
+    let relaxed = PlannerConfig {
+        allow_offload: true,
+        ..Default::default()
+    };
+    let n_strict = plan(&model, &topo, &strict).len();
+    let n_relaxed = plan(&model, &topo, &relaxed).len();
+    assert!(n_relaxed > n_strict);
+    let best = best_plan(&model, &topo, &relaxed).unwrap();
+    assert!(best.step_time > 0.0);
+}
+
+#[test]
+fn rl_single_controller_never_loses_to_gang() {
+    forall(
+        "sc-beats-gang",
+        40,
+        pair_of(usize_in(2, 6), usize_in(8, 48)),
+        |&(models, rollouts)| {
+            let w = RlWorkload {
+                models,
+                rollouts_per_model: rollouts,
+                rollout_sigma: 0.7,
+                rollout_mean: 1.0,
+                eval_frac: 0.1,
+                update_duration: 4.0,
+            };
+            let tasks = w.generate((models * rollouts) as u64);
+            let devices = models * 8;
+            let gang = schedule_gang(&tasks, devices);
+            let sc = schedule_single_controller(&tasks, devices, 8);
+            Check::from_bool(
+                sc.makespan <= gang.makespan * 1.001,
+                &format!("sc {} > gang {}", sc.makespan, gang.makespan),
+            )
+        },
+    );
+}
+
+#[test]
+fn offload_gain_holds_across_models() {
+    for model in [ModelDesc::llama_8b(), ModelDesc::dense_30b()] {
+        let s = OffloadTrainingScenario {
+            model,
+            topo: Topology::tiny(),
+            cube_efficiency: 0.42,
+        };
+        let base = s.baseline_step();
+        let hyper = s.hyperoffload_step(2);
+        assert!(
+            hyper < base,
+            "{}: hyper {hyper} >= base {base}",
+            s.model.name
+        );
+    }
+}
+
+#[test]
+fn prop_dynamic_schedule_dominates_static() {
+    forall(
+        "dynamic-dominates",
+        30,
+        pair_of(usize_in(2, 24), usize_in(2, 6)),
+        |&(microbatches, modules)| {
+            let w = OmniModalWorkload {
+                modules: (0..modules)
+                    .map(|i| hyperparallel::hypermpmd::SubModule {
+                        name: format!("m{i}"),
+                        time_per_microbatch: 10e-3 * (1 + i % 3) as f64,
+                        inputs: if i == 0 { vec![] } else { vec![i - 1] },
+                    })
+                    .collect(),
+                microbatches,
+            };
+            let stat = schedule_static(&w);
+            let dyn_ = schedule_dynamic(&w, modules);
+            Check::from_bool(
+                dyn_.makespan <= stat.makespan * 1.001,
+                &format!("dyn {} > stat {}", dyn_.makespan, stat.makespan),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_orchestrated_graph_preserves_compute() {
+    // the offload pass must not drop or duplicate compute nodes
+    forall("pass-preserves-compute", 50, usize_in(1, 40), |&layers| {
+        let mut b = GraphBuilder::new();
+        let d = hyperparallel::supernode::DeviceId(0);
+        let mut sizes = hyperparallel::hyperoffload::orchestrator::RegionSizes::new();
+        for i in 0..layers {
+            let r = hyperparallel::memory::RegionId(i);
+            sizes.insert(r, 1024);
+            b.compute_reading(d, format!("l{i}"), 1e9, 0.0, vec![r], &[]);
+        }
+        let g = b.finish();
+        let plan = orchestrate(&g, &sizes, &OrchestratorConfig::default());
+        let compute_in = g.count(|n| matches!(n.op, hyperparallel::graph::OpKind::Compute { .. }));
+        let compute_out = plan
+            .graph
+            .count(|n| matches!(n.op, hyperparallel::graph::OpKind::Compute { .. }));
+        Check::from_bool(
+            compute_in == compute_out && plan.graph.check().is_ok(),
+            "compute nodes changed or graph invalid",
+        )
+    });
+}

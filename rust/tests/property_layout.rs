@@ -1,0 +1,127 @@
+//! Property tests on HyperShard layout derivation (Fig 6 semantics).
+
+use hyperparallel::hypershard::{Layout, MapDim};
+use hyperparallel::util::prop::{forall, vec_of, usize_in, Check};
+use hyperparallel::util::rng::Rng;
+
+const AXES: [&str; 4] = ["a", "b", "c", "d"];
+
+fn random_layout(dims: &[usize]) -> Layout {
+    Layout::new(dims, &AXES[..dims.len()]).unwrap()
+}
+
+/// num_shards · replication == device_count for every valid tensor_map.
+#[test]
+fn prop_shards_times_replication_is_device_count() {
+    forall(
+        "shards-x-replication",
+        200,
+        vec_of(usize_in(1, 4), 1, 4),
+        |dims| {
+            let layout = random_layout(dims);
+            let mut rng = Rng::new(dims.iter().sum::<usize>() as u64);
+            // random tensor_map: each axis used at most once
+            let mut available: Vec<usize> = (0..dims.len()).collect();
+            rng.shuffle(&mut available);
+            let rank = rng.range(1, 4);
+            let mut map = Vec::new();
+            for _ in 0..rank {
+                if !available.is_empty() && rng.chance(0.7) {
+                    let ax = available.pop().unwrap();
+                    map.push(MapDim::Axis(AXES[ax]));
+                } else {
+                    map.push(MapDim::None);
+                }
+            }
+            let spec = match layout.apply(&map) {
+                Ok(s) => s,
+                Err(e) => return Check::Fail(format!("apply failed: {e}")),
+            };
+            Check::from_bool(
+                spec.num_shards * spec.replication == layout.device_count(),
+                &format!(
+                    "{} shards x {} replication != {} devices",
+                    spec.num_shards,
+                    spec.replication,
+                    layout.device_count()
+                ),
+            )
+        },
+    );
+}
+
+/// Placement assigns every device a shard index within range, and each
+/// shard is held by exactly `replication` devices.
+#[test]
+fn prop_placement_is_balanced() {
+    forall(
+        "placement-balanced",
+        150,
+        vec_of(usize_in(1, 4), 2, 3),
+        |dims| {
+            let layout = random_layout(dims);
+            // shard dim0 on the first axis; replicate the rest
+            let spec = layout.apply(&[MapDim::Axis(AXES[0]), MapDim::None]).unwrap();
+            let placement = layout.placement(&spec);
+            let mut counts = std::collections::BTreeMap::new();
+            for shard in &placement {
+                if shard[0] >= spec.shard_counts[0] || shard[1] != 0 {
+                    return Check::Fail(format!("shard index out of range: {shard:?}"));
+                }
+                *counts.entry(shard.clone()).or_insert(0usize) += 1;
+            }
+            Check::from_bool(
+                counts.values().all(|&c| c == spec.replication),
+                &format!("unbalanced placement: {counts:?}"),
+            )
+        },
+    );
+}
+
+/// Shard shapes tile the global tensor exactly.
+#[test]
+fn prop_shard_shapes_tile_global() {
+    forall(
+        "shard-shapes-tile",
+        150,
+        vec_of(usize_in(1, 4), 2, 2),
+        |dims| {
+            let layout = random_layout(dims);
+            let spec = layout
+                .apply(&[MapDim::Axis(AXES[0]), MapDim::Axis(AXES[1])])
+                .unwrap();
+            // pick a global shape divisible by the shard counts
+            let global = [spec.shard_counts[0] * 6, spec.shard_counts[1] * 5];
+            let shard = spec.shard_shape(&global);
+            Check::from_bool(
+                shard[0] * spec.shard_counts[0] == global[0]
+                    && shard[1] * spec.shard_counts[1] == global[1],
+                &format!("{shard:?} x {:?} != {global:?}", spec.shard_counts),
+            )
+        },
+    );
+}
+
+/// rank_of and coords_of are inverse bijections for random matrices.
+#[test]
+fn prop_rank_coords_bijection() {
+    forall(
+        "rank-coords-bijection",
+        100,
+        vec_of(usize_in(1, 5), 1, 4),
+        |dims| {
+            let layout = random_layout(dims);
+            let n = layout.device_count();
+            let mut seen = vec![false; n];
+            for r in 0..n {
+                let c = layout.coords_of(r);
+                let back = layout.rank_of(&c);
+                if back != r {
+                    return Check::Fail(format!("rank {r} -> {c:?} -> {back}"));
+                }
+                seen[r] = true;
+            }
+            Check::from_bool(seen.iter().all(|&s| s), "not all ranks covered")
+        },
+    );
+}
