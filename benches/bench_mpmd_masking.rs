@@ -3,10 +3,14 @@
 //! Paper: HyperMPMD raises the MoE communication-masking ratio from the
 //! traditional ~60% to ~90% (DeepSeek-V3: EP comm = 17% of execution at
 //! 61% masking). We regenerate the baseline-vs-HyperMPMD comparison and
-//! sweep chunk granularity and comm:compute ratio.
+//! sweep chunk granularity and comm:compute ratio — both sweeps fanned
+//! across `sim::sweep` workers (set `HP_SWEEP_THREADS=1` to force the
+//! sequential path).
 
-use hyperparallel::hypermpmd::{baseline_masking, hypermpmd_masking, schedule_moe_stack, MoeLayerLoad};
-use hyperparallel::util::bench::{run, section};
+use hyperparallel::hypermpmd::{
+    baseline_masking, chunk_sweep, comm_ratio_sweep, hypermpmd_masking, MoeLayerLoad,
+};
+use hyperparallel::util::bench::{maybe_write_json, run, section};
 use hyperparallel::util::stats::{fmt_secs, render_table};
 
 fn main() {
@@ -39,10 +43,11 @@ fn main() {
         )
     );
 
-    section("chunk-granularity sweep (intra-card MPMD depth)");
+    section("chunk-granularity sweep (intra-card MPMD depth, parallel)");
+    let chunk_counts = [1usize, 2, 4, 8, 16, 32];
+    let reports = chunk_sweep(load, 8, &chunk_counts, true);
     println!("{:>8} {:>12} {:>12}", "chunks", "masking", "makespan");
-    for chunks in [1, 2, 4, 8, 16, 32] {
-        let r = schedule_moe_stack(load, 8, chunks, true);
+    for (&chunks, r) in chunk_counts.iter().zip(&reports) {
         println!(
             "{chunks:>8} {:>11.1}% {:>12}",
             r.masking_ratio * 100.0,
@@ -50,17 +55,16 @@ fn main() {
         );
     }
 
-    section("comm:compute ratio sweep (when can 90% masking survive?)");
+    section("comm:compute ratio sweep (when can 90% masking survive?, parallel)");
+    let fracs = [0.1, 0.2, 0.34, 0.5, 0.8, 1.2];
+    let base_shape = MoeLayerLoad {
+        expert_compute: 80e-3,
+        vector_compute: 20e-3,
+        dispatch_comm: 0.0,
+        combine_comm: 0.0,
+    };
     println!("{:>12} {:>12} {:>12}", "comm/compute", "baseline", "hypermpmd");
-    for frac in [0.1, 0.2, 0.34, 0.5, 0.8, 1.2] {
-        let l = MoeLayerLoad {
-            expert_compute: 80e-3,
-            vector_compute: 20e-3,
-            dispatch_comm: 50e-3 * frac,
-            combine_comm: 50e-3 * frac,
-        };
-        let b = baseline_masking(l, 8);
-        let h = hypermpmd_masking(l, 8, 16);
+    for (frac, b, h) in comm_ratio_sweep(base_shape, 50e-3, 8, &fracs) {
         println!(
             "{frac:>12.2} {:>11.1}% {:>11.1}%",
             b.masking_ratio * 100.0,
@@ -69,7 +73,12 @@ fn main() {
     }
 
     section("harness timing");
-    run("schedule 8-layer stack, 16 chunks", 2, 20, || {
+    let mut results = Vec::new();
+    results.push(run("schedule 8-layer stack, 16 chunks", 2, 20, || {
         std::hint::black_box(hypermpmd_masking(load, 8, 16).masking_ratio);
-    });
+    }));
+    results.push(run("chunk sweep x6 via sim::sweep", 1, 10, || {
+        std::hint::black_box(chunk_sweep(load, 8, &chunk_counts, true).len());
+    }));
+    maybe_write_json(&results);
 }

@@ -3,10 +3,11 @@
 //! Paper: the single controller eliminates stragglers and raises
 //! cluster-wide utilization by ~15% on multi-task RL. We regenerate the
 //! gang-vs-single-controller comparison and sweep straggler heaviness
-//! and cluster size.
+//! and cluster size, with the per-seed iterations fanned across
+//! `sim::sweep` workers (`hypermpmd::seed_sweep`).
 
-use hyperparallel::hypermpmd::{schedule_gang, schedule_single_controller, RlWorkload};
-use hyperparallel::util::bench::{run, section};
+use hyperparallel::hypermpmd::{schedule_single_controller, seed_sweep, RlWorkload};
+use hyperparallel::util::bench::{maybe_write_json, run, section};
 use hyperparallel::util::stats::{render_table, Summary};
 
 fn mean_over_seeds(
@@ -14,12 +15,10 @@ fn mean_over_seeds(
     devices: usize,
     seeds: std::ops::Range<u64>,
 ) -> (Summary, Summary, Summary, Summary) {
+    let seeds: Vec<u64> = seeds.collect();
     let (mut gu, mut su, mut gt, mut st) =
         (Summary::new(), Summary::new(), Summary::new(), Summary::new());
-    for seed in seeds {
-        let tasks = w.generate(seed);
-        let g = schedule_gang(&tasks, devices);
-        let s = schedule_single_controller(&tasks, devices, devices / w.models);
+    for (g, s) in seed_sweep(w, &seeds, devices, devices / w.models) {
         gu.add(g.utilization);
         su.add(s.utilization);
         gt.add(g.makespan);
@@ -83,8 +82,14 @@ fn main() {
     }
 
     section("harness timing");
+    let mut results = Vec::new();
     let tasks = w.generate(3);
-    run("single-controller schedule (256 rollouts, 64 dev)", 2, 50, || {
+    results.push(run("single-controller schedule (256 rollouts, 64 dev)", 2, 50, || {
         std::hint::black_box(schedule_single_controller(&tasks, 64, 16).makespan);
-    });
+    }));
+    let seeds: Vec<u64> = (0..16).collect();
+    results.push(run("16-seed gang+sc sweep via sim::sweep", 1, 10, || {
+        std::hint::black_box(seed_sweep(&w, &seeds, 64, 16).len());
+    }));
+    maybe_write_json(&results);
 }

@@ -4,7 +4,10 @@
 //! bubbles of heterogeneous omni-modal models, for ~15% overall
 //! training gain. We regenerate the comparison and sweep heterogeneity.
 
-use hyperparallel::hypermpmd::{schedule_dynamic, schedule_static, OmniModalWorkload, SubModule};
+use hyperparallel::hypermpmd::{
+    microbatch_sweep, schedule_dynamic, schedule_static, OmniModalWorkload, SubModule,
+};
+use hyperparallel::trainer::{gpipe_sweep, one_f_one_b_bubble};
 use hyperparallel::util::bench::{run, section};
 use hyperparallel::util::stats::{fmt_secs, render_table};
 
@@ -69,16 +72,25 @@ fn main() {
         );
     }
 
-    section("microbatch-count sweep");
+    section("microbatch-count sweep (parallel via sim::sweep)");
     println!("{:>6} {:>14} {:>8}", "mb", "static bubbles", "gain");
-    for mb in [4, 8, 16, 32, 64] {
-        let w = OmniModalWorkload::paper_shape(mb);
-        let s = schedule_static(&w);
-        let d = schedule_dynamic(&w, w.modules.len());
+    for (mb, s, d) in microbatch_sweep(OmniModalWorkload::paper_shape, &[4, 8, 16, 32, 64]) {
         println!(
             "{mb:>6} {:>13.1}% {:>7.1}%",
             s.bubble_ratio * 100.0,
             (s.makespan / d.makespan - 1.0) * 100.0
+        );
+    }
+
+    section("GPipe reference (the SPMD+PP bubble model E8 compares against)");
+    let stages = vec![60e-3f64, 75e-3, 65e-3, 80e-3];
+    let counts = [4usize, 8, 16, 32];
+    println!("{:>6} {:>12} {:>12}", "mb", "sim bubbles", "analytic");
+    for (&mb, r) in counts.iter().zip(&gpipe_sweep(&stages, &counts)) {
+        println!(
+            "{mb:>6} {:>11.1}% {:>11.1}%",
+            r.bubble_ratio * 100.0,
+            one_f_one_b_bubble(stages.len(), mb) * 100.0
         );
     }
 

@@ -5,7 +5,7 @@
 //! ND-SPMD to 1D-DP. We regenerate the comparison on the simulated
 //! substrate and additionally sweep prefetch lookahead and pool fabric.
 
-use hyperparallel::baselines::zero_offload_step;
+use hyperparallel::baselines::{offload_policy_comparison, zero_offload_step};
 use hyperparallel::hyperoffload::OffloadPolicy;
 use hyperparallel::memory::TransferEngine;
 use hyperparallel::trainer::scenarios::OffloadTrainingScenario;
@@ -45,10 +45,17 @@ fn main() {
         )
     );
 
-    section("lookahead sweep (pipeline depth of the multi-level cache)");
-    for k in 1..=4 {
-        let t = s.step_time(k, TransferEngine::supernode());
+    section("lookahead sweep (pipeline depth of the multi-level cache, parallel)");
+    for (k, t) in s.lookahead_sweep(&[1, 2, 3, 4]) {
         println!("  lookahead {k}: {}", fmt_secs(t));
+    }
+
+    section("policy comparison (all baselines, parallel via sim::sweep)");
+    for (name, t) in offload_policy_comparison(&s) {
+        match t {
+            Some(t) => println!("  {name:<32} {}", fmt_secs(t)),
+            None => println!("  {name:<32} (no memory-feasible plan)"),
+        }
     }
 
     section("fabric sweep (same schedule, different pool link)");

@@ -2,16 +2,68 @@
 //!
 //! Not a paper table: this is the §Perf harness for the performance
 //! pass (EXPERIMENTS.md §Perf). Measures artifact execution latency,
-//! literal marshalling, the real all-reduce, and the simulator's
-//! event-loop throughput.
+//! literal marshalling, the real all-reduce, the simulator's
+//! event-loop throughput, the indexed `SimResult` metric queries, and
+//! the parallel scenario sweep.
+//!
+//! Env hooks: `BENCH_SMOKE=1` shrinks workloads to CI size;
+//! `BENCH_JSON=<path>` dumps the result set as JSON (the cross-PR perf
+//! trajectory artifact).
 
 use hyperparallel::collectives::real::{all_reduce_mean, all_reduce_mean_tree};
+use hyperparallel::hypermpmd::{chunk_sweep, schedule_moe_stack, MoeLayerLoad};
 use hyperparallel::runtime::{literal_f32, literal_i32, Runtime};
-use hyperparallel::sim::Engine;
-use hyperparallel::util::bench::{run, section};
+use hyperparallel::sim::{Engine, ResourceId, TaskId};
+use hyperparallel::util::bench::{maybe_write_json, run, section, smoke, BenchResult};
 use hyperparallel::util::rng::Rng;
 
+/// The supernode-scale DES workload from the perf acceptance bar:
+/// `resources` stream resources × `tasks` tasks, per-resource FIFO
+/// chains with periodic cross-resource dependencies (comm-like edges).
+/// Fully deterministic.
+fn build_supernode_workload(resources: usize, tasks: usize) -> Engine {
+    let mut e = Engine::new();
+    let rs: Vec<_> = (0..resources)
+        .map(|i| e.add_resource(format!("r{i}")))
+        .collect();
+    let mut prev: Vec<Option<TaskId>> = vec![None; resources];
+    let mut deps: Vec<TaskId> = Vec::with_capacity(2);
+    for i in 0..tasks {
+        let r = i % resources;
+        deps.clear();
+        if let Some(p) = prev[r] {
+            deps.push(p);
+        }
+        // periodic cross-resource edge to an earlier task
+        if i >= resources && i % 7 == 0 {
+            deps.push(TaskId(i - resources + (i % 3)));
+        }
+        let dur = 1e-6 * (1.0 + (i % 13) as f64);
+        let tag = (i % 4) as u64;
+        prev[r] = Some(e.add_task(rs[r], dur, &deps, tag));
+    }
+    e
+}
+
+/// A masking-evaluation-style metric block: the ~12 busy/overlap
+/// queries `hypermpmd::intra` issues per evaluation, over several
+/// stream groups. O(1)/allocation-free on the indexed result.
+fn metric_block(res: &hyperparallel::sim::SimResult, resources: usize) -> f64 {
+    let mut acc = 0.0;
+    for g in 0..4 {
+        let a = ResourceId((g * 17) % resources);
+        let b = ResourceId((g * 17 + 1) % resources);
+        acc += res.busy_time(a) + res.busy_time(b);
+        acc += res.utilization(a) + res.bubble_ratio(b);
+        acc += res.overlap_time(a, b) + res.overlap_ratio(b, a);
+        acc += res.tagged_count(g as u64) as f64;
+    }
+    acc
+}
+
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
     section("PJRT hot path (requires `make artifacts`)");
     match Runtime::cpu("artifacts") {
         Ok(mut rt) => {
@@ -21,7 +73,7 @@ fn main() {
                 let w1: Vec<f32> = (0..4 * 32 * 64).map(|_| rng.normal() as f32 * 0.1).collect();
                 let w2: Vec<f32> = (0..4 * 64 * 32).map(|_| rng.normal() as f32 * 0.1).collect();
                 let assign: Vec<i32> = (0..64).map(|_| rng.below(4) as i32).collect();
-                run("kernel_demo execute (64x32 MoE FFN)", 3, 30, || {
+                results.push(run("kernel_demo execute (64x32 MoE FFN)", 3, 30, || {
                     let inputs = [
                         literal_f32(&[64, 32], &x).unwrap(),
                         literal_f32(&[4, 32, 64], &w1).unwrap(),
@@ -29,10 +81,10 @@ fn main() {
                         literal_i32(&[64], &assign).unwrap(),
                     ];
                     std::hint::black_box(rt.execute("kernel_demo", &inputs).unwrap());
-                });
-                run("literal marshalling only (same payload)", 3, 100, || {
+                }));
+                results.push(run("literal marshalling only (same payload)", 3, 100, || {
                     std::hint::black_box(literal_f32(&[4, 32, 64], &w1).unwrap());
-                });
+                }));
             }
         }
         Err(e) => println!("  pjrt unavailable: {e} (run `make artifacts`)"),
@@ -45,31 +97,108 @@ fn main() {
             .map(|_| (0..n).map(|_| rng.next_f32()).collect())
             .collect()
     };
-    for (p, n) in [(4, 1 << 16), (4, 1 << 20), (8, 1 << 20)] {
+    let ar_cases: &[(usize, usize)] = if smoke() {
+        &[(4, 1 << 16)]
+    } else {
+        &[(4, 1 << 16), (4, 1 << 20), (8, 1 << 20)]
+    };
+    for &(p, n) in ar_cases {
         let base = mk(p, n);
-        run(&format!("all_reduce_mean naive  p={p} n={n}"), 2, 20, || {
+        results.push(run(&format!("all_reduce_mean naive  p={p} n={n}"), 2, 20, || {
             let mut ranks = base.clone();
             all_reduce_mean(&mut ranks);
             std::hint::black_box(ranks[0][0]);
-        });
-        run(&format!("all_reduce_mean tree   p={p} n={n}"), 2, 20, || {
+        }));
+        results.push(run(&format!("all_reduce_mean tree   p={p} n={n}"), 2, 20, || {
             let mut ranks = base.clone();
             all_reduce_mean_tree(&mut ranks);
             std::hint::black_box(ranks[0][0]);
-        });
+        }));
     }
 
     section("simulator event-loop throughput");
-    for tasks in [1_000, 10_000, 100_000] {
-        run(&format!("sim run, {tasks} chained tasks on 16 resources"), 2, 10, || {
-            let mut e = Engine::new();
-            let rs: Vec<_> = (0..16).map(|i| e.add_resource(format!("r{i}"))).collect();
-            let mut prev = None;
-            for i in 0..tasks {
-                let deps: Vec<_> = prev.iter().copied().collect();
-                prev = Some(e.add_task(rs[i % 16], 1e-6, &deps, 0));
-            }
-            std::hint::black_box(e.run().makespan);
-        });
+    let chain_sizes: &[usize] = if smoke() {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    for &tasks in chain_sizes {
+        results.push(run(
+            &format!("sim run, {tasks} chained tasks on 16 resources"),
+            2,
+            10,
+            || {
+                let mut e = Engine::new();
+                let rs: Vec<_> = (0..16).map(|i| e.add_resource(format!("r{i}"))).collect();
+                let mut prev = None;
+                for i in 0..tasks {
+                    let deps: Vec<_> = prev.iter().copied().collect();
+                    prev = Some(e.add_task(rs[i % 16], 1e-6, &deps, 0));
+                }
+                std::hint::black_box(e.run().makespan);
+            },
+        ));
     }
+
+    section("indexed SimResult — supernode-scale workload (perf bar: ≥2x vs scan-based)");
+    let (n_res, n_tasks, iters) = if smoke() {
+        (128, 10_000, 3)
+    } else {
+        (1_000, 100_000, 10)
+    };
+    // (a) build + run + masking-style metric evaluation: the acceptance
+    // workload. The old SimResult re-scanned all N intervals (with a
+    // fresh Vec<&Interval> per overlap call) for every one of the ~28
+    // queries below; the index answers them in O(1)/two-pointer.
+    results.push(run(
+        &format!("sim run + metric eval, {n_tasks} tasks / {n_res} resources"),
+        1,
+        iters,
+        || {
+            let mut e = build_supernode_workload(n_res, n_tasks);
+            let res = e.run();
+            std::hint::black_box(metric_block(&res, n_res));
+        },
+    ));
+    // (b) metric queries alone on a prebuilt result — the per-query
+    // cost the masking scheduler pays ~12x per evaluation
+    let mut e = build_supernode_workload(n_res, n_tasks);
+    let res = e.run();
+    results.push(run(
+        &format!("metric eval alone, {n_tasks}-interval result"),
+        2,
+        iters.max(20),
+        || {
+            std::hint::black_box(metric_block(&res, n_res));
+        },
+    ));
+
+    section("parallel scenario sweep (sim::sweep over std::thread::scope)");
+    let load = MoeLayerLoad::deepseek_like();
+    let chunks: Vec<usize> = if smoke() {
+        vec![2, 4, 8, 16]
+    } else {
+        vec![1, 2, 4, 8, 12, 16, 24, 32]
+    };
+    let layers = if smoke() { 4 } else { 8 };
+    results.push(run(
+        &format!("chunk sweep x{} sequential", chunks.len()),
+        1,
+        5,
+        || {
+            for &c in &chunks {
+                std::hint::black_box(schedule_moe_stack(load, layers, c, true).masking_ratio);
+            }
+        },
+    ));
+    results.push(run(
+        &format!("chunk sweep x{} sim::sweep", chunks.len()),
+        1,
+        5,
+        || {
+            std::hint::black_box(chunk_sweep(load, layers, &chunks, true).len());
+        },
+    ));
+
+    maybe_write_json(&results);
 }

@@ -43,15 +43,19 @@ fn main() {
     );
     println!("legacy/supernode TP-share ratio: {:.1}x", f_l / f_s);
 
-    section("TP-degree sweep (share of step time)");
+    section("TP-degree sweep (share of step time, both fabrics in parallel)");
+    let fabrics = [("legacy", legacy), ("supernode", supernode)];
     println!("{:>6} {:>12} {:>12}", "tp", "legacy", "supernode");
     for tp in [2, 4, 8, 16, 32] {
         let s = TpOverheadScenario {
             tp,
             ..TpOverheadScenario::paper_setting()
         };
-        let (_, _, fl) = s.measure(&legacy);
-        let (_, _, fs) = s.measure(&supernode);
-        println!("{tp:>6} {:>11.1}% {:>11.1}%", fl * 100.0, fs * 100.0);
+        let fracs = s.fabric_sweep(&fabrics);
+        println!(
+            "{tp:>6} {:>11.1}% {:>11.1}%",
+            fracs[0].1 * 100.0,
+            fracs[1].1 * 100.0
+        );
     }
 }

@@ -45,6 +45,31 @@ pub fn serialized_comm_step(compute: f64, comm: f64) -> f64 {
     compute + comm
 }
 
+/// The full E5 policy comparison — every baseline plus HyperOffload at
+/// two lookahead depths — with the four independent simulations fanned
+/// across `sim::sweep` workers. `None` marks a policy that cannot run
+/// (ND-SPMD when no memory-feasible plan exists). Label order is
+/// stable for table rendering.
+pub fn offload_policy_comparison(
+    s: &OffloadTrainingScenario,
+) -> Vec<(&'static str, Option<f64>)> {
+    crate::sim::sweep::labeled::<Option<f64>>(vec![
+        (
+            "zero-offload (sync swap, PCIe)",
+            Box::new(|| Some(zero_offload_step(s))),
+        ),
+        ("nd-spmd (no offload)", Box::new(|| nd_spmd_step(s))),
+        (
+            "hyperoffload (lookahead 2)",
+            Box::new(|| Some(s.hyperoffload_step(2))),
+        ),
+        (
+            "hyperoffload (lookahead 4)",
+            Box::new(|| Some(s.hyperoffload_step(4))),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +93,19 @@ mod tests {
     #[test]
     fn serialized_is_sum() {
         assert_eq!(serialized_comm_step(2.0, 1.0), 3.0);
+    }
+
+    #[test]
+    fn policy_comparison_matches_direct_calls() {
+        let s = OffloadTrainingScenario::llama8b();
+        let rows = offload_policy_comparison(&s);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].1.unwrap().to_bits(), zero_offload_step(&s).to_bits());
+        assert_eq!(
+            rows[2].1.unwrap().to_bits(),
+            s.hyperoffload_step(2).to_bits()
+        );
+        // hyperoffload beats the sync baseline in the comparison itself
+        assert!(rows[2].1.unwrap() < rows[0].1.unwrap());
     }
 }

@@ -124,7 +124,9 @@ pub fn lower_to_sim(
     let mut task_of_node: Vec<TaskId> = Vec::with_capacity(g.len());
     // Engine::add_task requires deps to be earlier tasks; graph ids are
     // already topologically valid (append-only DAG), so insert in id
-    // order.
+    // order. One scratch dep buffer serves every node — no per-node
+    // Vec allocation on the lowering loop (§Perf).
+    let mut deps_scratch: Vec<TaskId> = Vec::new();
     for node in &g.nodes {
         let dur = node_duration(g, node.id, topo, xfer, cube_efficiency);
         let (stream, tag) = match &node.op {
@@ -136,8 +138,9 @@ pub fn lower_to_sim(
             OpKind::Barrier => (Stream::Cube, tags::COMPUTE),
         };
         let resource = streams.get(node.device, stream);
-        let deps: Vec<TaskId> = node.deps.iter().map(|d| task_of_node[d.0]).collect();
-        let t = engine.add_task(resource, dur, &deps, tag);
+        deps_scratch.clear();
+        deps_scratch.extend(node.deps.iter().map(|d| task_of_node[d.0]));
+        let t = engine.add_task(resource, dur, &deps_scratch, tag);
         task_of_node.push(t);
     }
     LoweredGraph {

@@ -233,12 +233,46 @@ pub fn schedule_single_controller(
     }
 }
 
+/// Gang vs single-controller over many iteration seeds, fanned across
+/// `sim::sweep` workers (each seed's workload generation + both
+/// schedules are independent). Returns `(gang, single_controller)`
+/// reports in seed order — identical to the sequential loop.
+pub fn seed_sweep(
+    w: &RlWorkload,
+    seeds: &[u64],
+    devices: usize,
+    update_width: usize,
+) -> Vec<(RlReport, RlReport)> {
+    crate::sim::sweep::parallel_map(seeds, |&seed| {
+        let tasks = w.generate(seed);
+        (
+            schedule_gang(&tasks, devices),
+            schedule_single_controller(&tasks, devices, update_width),
+        )
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn workload() -> Vec<ModelTasks> {
         RlWorkload::paper_shape().generate(7)
+    }
+
+    #[test]
+    fn seed_sweep_matches_sequential() {
+        let w = RlWorkload::paper_shape();
+        let seeds: Vec<u64> = (0..6).collect();
+        let swept = seed_sweep(&w, &seeds, 32, 8);
+        for (&seed, (gang, sc)) in seeds.iter().zip(&swept) {
+            let tasks = w.generate(seed);
+            assert_eq!(gang.makespan, schedule_gang(&tasks, 32).makespan);
+            assert_eq!(
+                sc.makespan,
+                schedule_single_controller(&tasks, 32, 8).makespan
+            );
+        }
     }
 
     #[test]

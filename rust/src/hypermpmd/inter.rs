@@ -197,12 +197,23 @@ pub fn schedule_dynamic(w: &OmniModalWorkload, n_groups: usize) -> ScheduleRepor
     ScheduleReport {
         makespan,
         bubble_ratio: bubble,
-        sim: SimResult {
-            makespan,
-            intervals,
-            resources: n_groups,
-        },
+        sim: SimResult::from_intervals(makespan, n_groups, intervals),
     }
+}
+
+/// Sweep microbatch counts for one workload shape, static vs dynamic,
+/// fanned across `sim::sweep` workers. Returns
+/// `(microbatches, static_report, dynamic_report)` in input order.
+pub fn microbatch_sweep(
+    shape: impl Fn(usize) -> OmniModalWorkload + Sync,
+    microbatch_counts: &[usize],
+) -> Vec<(usize, ScheduleReport, ScheduleReport)> {
+    crate::sim::sweep::parallel_map(microbatch_counts, |&mb| {
+        let w = shape(mb);
+        let stat = schedule_static(&w);
+        let dyn_ = schedule_dynamic(&w, w.modules.len());
+        (mb, stat, dyn_)
+    })
 }
 
 #[cfg(test)]
@@ -262,6 +273,17 @@ mod tests {
             }
             let dec = find(mb, 4);
             assert!(fusion.finish <= dec.start + 1e-12);
+        }
+    }
+
+    #[test]
+    fn microbatch_sweep_matches_direct_calls() {
+        let counts = [4, 8, 16];
+        let swept = microbatch_sweep(OmniModalWorkload::paper_shape, &counts);
+        for (mb, stat, dyn_) in swept {
+            let w = OmniModalWorkload::paper_shape(mb);
+            assert_eq!(stat.makespan, schedule_static(&w).makespan);
+            assert_eq!(dyn_.makespan, schedule_dynamic(&w, w.modules.len()).makespan);
         }
     }
 

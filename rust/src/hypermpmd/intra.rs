@@ -123,18 +123,20 @@ pub fn schedule_moe_stack(
     }
 
     let sim = engine.run();
-    let comm_busy = sim.busy_time(comm_in) + sim.busy_time(comm_out);
+    // O(1) busy lookups + allocation-free overlap merges on the indexed
+    // result — this block runs once per masking evaluation and used to
+    // cost ~12 full O(N) scans with per-call Vec allocations.
+    let in_busy = sim.busy_time(comm_in);
+    let out_busy = sim.busy_time(comm_out);
+    let comm_busy = in_busy + out_busy;
     let compute_busy = sim.busy_time(cube) + sim.busy_time(vector);
-    // masking: comm time overlapped with *any* compute stream
-    let masked_in =
-        sim.overlap_ratio(comm_in, cube).max(0.0) * sim.busy_time(comm_in);
-    let masked_in_v = sim.overlap_ratio(comm_in, vector) * sim.busy_time(comm_in);
-    let masked_out = sim.overlap_ratio(comm_out, cube) * sim.busy_time(comm_out);
-    let masked_out_v = sim.overlap_ratio(comm_out, vector) * sim.busy_time(comm_out);
-    // union bound per stream (cube and vector rarely both idle): take
-    // min(busy, masked_cube + masked_vector)
-    let masked = (masked_in + masked_in_v).min(sim.busy_time(comm_in))
-        + (masked_out + masked_out_v).min(sim.busy_time(comm_out));
+    // masking: comm time overlapped with *any* compute stream; union
+    // bound per stream (cube and vector rarely both idle): take
+    // min(busy, overlap_cube + overlap_vector)
+    let masked = (sim.overlap_time(comm_in, cube) + sim.overlap_time(comm_in, vector))
+        .min(in_busy)
+        + (sim.overlap_time(comm_out, cube) + sim.overlap_time(comm_out, vector))
+            .min(out_busy);
     let masking_ratio = if comm_busy > 0.0 {
         masked / comm_busy
     } else {
@@ -157,6 +159,38 @@ pub fn baseline_masking(load: MoeLayerLoad, layers: usize) -> MaskingReport {
 /// HyperMPMD intra-card schedule: fine chunks + vector co-issue.
 pub fn hypermpmd_masking(load: MoeLayerLoad, layers: usize, chunks: usize) -> MaskingReport {
     schedule_moe_stack(load, layers, chunks.max(8), true)
+}
+
+/// Sweep chunk granularities in parallel (`sim::sweep`); one schedule
+/// per chunk count, reports in input order.
+pub fn chunk_sweep(
+    load: MoeLayerLoad,
+    layers: usize,
+    chunk_counts: &[usize],
+    co_issue_vector: bool,
+) -> Vec<MaskingReport> {
+    crate::sim::sweep::parallel_map(chunk_counts, |&chunks| {
+        schedule_moe_stack(load, layers, chunks, co_issue_vector)
+    })
+}
+
+/// Sweep comm:compute ratios in parallel: for each `frac`, dispatch and
+/// combine comm are `base_comm * frac` seconds. Returns
+/// `(frac, baseline_report, hypermpmd_report)` in input order.
+pub fn comm_ratio_sweep(
+    base: MoeLayerLoad,
+    base_comm: f64,
+    layers: usize,
+    fracs: &[f64],
+) -> Vec<(f64, MaskingReport, MaskingReport)> {
+    crate::sim::sweep::parallel_map(fracs, |&frac| {
+        let l = MoeLayerLoad {
+            dispatch_comm: base_comm * frac,
+            combine_comm: base_comm * frac,
+            ..base
+        };
+        (frac, baseline_masking(l, layers), hypermpmd_masking(l, layers, 16))
+    })
 }
 
 #[cfg(test)]
@@ -205,6 +239,18 @@ mod tests {
         let m2 = schedule_moe_stack(load, 4, 2, true).masking_ratio;
         let m16 = schedule_moe_stack(load, 4, 16, true).masking_ratio;
         assert!(m16 >= m2 - 1e-9, "m2={m2} m16={m16}");
+    }
+
+    #[test]
+    fn chunk_sweep_matches_direct_schedules_bitwise() {
+        let load = MoeLayerLoad::deepseek_like();
+        let chunks = [1usize, 2, 4, 8];
+        let swept = chunk_sweep(load, 4, &chunks, true);
+        for (&c, report) in chunks.iter().zip(&swept) {
+            let direct = schedule_moe_stack(load, 4, c, true);
+            assert_eq!(report.masking_ratio.to_bits(), direct.masking_ratio.to_bits());
+            assert_eq!(report.makespan.to_bits(), direct.makespan.to_bits());
+        }
     }
 
     #[test]

@@ -19,12 +19,15 @@ pub mod intra;
 pub mod process_group;
 
 pub use cross::{
-    schedule_gang, schedule_single_controller, ModelTasks, RlReport, RlTask, RlWorkload,
+    schedule_gang, schedule_single_controller, seed_sweep, ModelTasks, RlReport, RlTask,
+    RlWorkload,
 };
 pub use inter::{
-    schedule_dynamic, schedule_static, OmniModalWorkload, ScheduleReport, SubModule,
+    microbatch_sweep, schedule_dynamic, schedule_static, OmniModalWorkload, ScheduleReport,
+    SubModule,
 };
 pub use intra::{
-    baseline_masking, hypermpmd_masking, schedule_moe_stack, MaskingReport, MoeLayerLoad,
+    baseline_masking, chunk_sweep, comm_ratio_sweep, hypermpmd_masking, schedule_moe_stack,
+    MaskingReport, MoeLayerLoad,
 };
 pub use process_group::{omni_modal_example, MappingError, ProcessGroup, ProcessGroupMap};

@@ -1,0 +1,155 @@
+//! Real PJRT backend (`--features pjrt`): load AOT-compiled HLO
+//! artifacts through the `xla` crate's CPU client and execute them.
+//!
+//! This module is the only place the external `xla` dependency is
+//! touched; without the feature, `runtime::stub` provides the same API
+//! surface host-side (see Cargo.toml for how to wire the dependency on
+//! a networked machine).
+
+use super::Manifest;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+pub use xla::{Literal, PjRtBuffer};
+
+/// The PJRT runtime: one client + a registry of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: std::collections::BTreeMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            executables: std::collections::BTreeMap::new(),
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load + compile an HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute a loaded artifact from literals. The artifact was
+    /// lowered with `return_tuple=True`; outputs are the flattened
+    /// tuple elements.
+    ///
+    /// NOTE: the upstream `xla` crate's C `execute` path leaks the
+    /// input *device buffers* it creates from the literals
+    /// (`buffer.release()` without a matching delete). Fine for
+    /// one-shot demo calls; anything called in a loop must use
+    /// [`execute_buffers`](Self::execute_buffers) with caller-owned
+    /// buffers, which are freed by `PjRtBuffer::drop`.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {name}: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Upload an f32 host array to a device buffer (caller-owned, so
+    /// it is released on drop — the leak-free input path).
+    pub fn buffer_f32(&self, shape: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("buffer_from_host f32: {e:?}"))
+    }
+
+    /// Upload an i32 host array to a device buffer.
+    pub fn buffer_i32(&self, shape: &[usize], data: &[i32]) -> Result<xla::PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("buffer_from_host i32: {e:?}"))
+    }
+
+    /// Execute a loaded artifact from device buffers (the hot path:
+    /// input and output buffers are all owned and dropped on the Rust
+    /// side, so repeated calls do not leak device memory).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {name}: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Load the manifest that accompanies the artifacts.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifact_dir.join("meta.json"))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch: {shape:?} vs {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))
+}

@@ -1,0 +1,135 @@
+//! Host-side stub of the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the offline build container cannot fetch the `xla`
+//! crate). The API surface mirrors `runtime::pjrt` exactly:
+//!
+//! - literals are real host arrays, so marshalling round-trips
+//!   (`literal_f32` → `to_f32`) behave identically to the PJRT path;
+//! - anything that would execute a compiled artifact returns a clear
+//!   `Err`, which every caller (CLI, benches, examples) already
+//!   handles as "artifacts unavailable".
+//!
+//! Simulation, planning, and scheduling — everything the paper's
+//! tables are generated from — never touch this module's error paths.
+
+use super::Manifest;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// Host literal: shape + typed data. Stands in for `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: LiteralData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Literal {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Opaque device-buffer stand-in. Never executable without `pjrt`.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _shape: Vec<usize>,
+}
+
+/// Stub runtime: construction always fails with an actionable message,
+/// so callers fall into their existing "pjrt unavailable" branches.
+pub struct Runtime {
+    artifact_dir: PathBuf,
+}
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow!(
+        "{what}: built without the `pjrt` cargo feature \
+         (add the `xla` dependency and build with `--features pjrt`)"
+    )
+}
+
+impl Runtime {
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let _ = Self {
+            artifact_dir: artifact_dir.into(),
+        };
+        Err(unavailable("pjrt cpu client"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        Err(unavailable(&format!("load '{name}'")))
+    }
+
+    pub fn loaded(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn execute(&self, name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(unavailable(&format!("execute '{name}'")))
+    }
+
+    pub fn buffer_f32(&self, shape: &[usize], data: &[f32]) -> Result<PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        Err(unavailable("buffer_from_host f32"))
+    }
+
+    pub fn buffer_i32(&self, shape: &[usize], data: &[i32]) -> Result<PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        Err(unavailable("buffer_from_host i32"))
+    }
+
+    pub fn execute_buffers(&self, name: &str, _inputs: &[PjRtBuffer]) -> Result<Vec<Literal>> {
+        Err(unavailable(&format!("execute_b '{name}'")))
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifact_dir.join("meta.json"))
+    }
+}
+
+/// Build an f32 literal of the given shape (host-side; round-trips).
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch: {shape:?} vs {}", data.len());
+    Ok(Literal {
+        shape: shape.to_vec(),
+        data: LiteralData::F32(data.to_vec()),
+    })
+}
+
+/// Build an i32 literal (host-side; round-trips).
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch");
+    Ok(Literal {
+        shape: shape.to_vec(),
+        data: LiteralData::I32(data.to_vec()),
+    })
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    match &lit.data {
+        LiteralData::F32(v) => Ok(v.clone()),
+        LiteralData::I32(_) => Err(anyhow!("literal holds i32 data, not f32")),
+    }
+}

@@ -6,6 +6,27 @@
 //! executing at most one task at a time; tasks have dependencies; the
 //! engine advances virtual time event by event and records per-resource
 //! busy intervals, from which every utilization/overlap metric derives.
+//!
+//! ## Performance design (§Perf, DESIGN.md complexity table)
+//!
+//! The engine and its metric queries are the hot path of the whole
+//! reproduction, so [`SimResult`] is an *index*, not a log:
+//!
+//! - intervals are stored CSR-style, bucketed by resource. Each bucket
+//!   is inherently start-sorted (a resource's free time is monotone),
+//!   so building the index is a counting sort — O(N + R), no
+//!   comparison sort at all;
+//! - per-bucket prefix sums make `busy_time`/`utilization`/
+//!   `bubble_ratio` O(1) and windowed busy queries O(log n);
+//! - `overlap_ratio` is an allocation-free two-pointer merge over two
+//!   CSR slices;
+//! - a tag→interval index makes `intervals_tagged` a lookup instead of
+//!   a full scan.
+//!
+//! The event loop itself orders the ready heap by the *bit pattern* of
+//! the (non-negative) event time — IEEE-754 non-negative doubles sort
+//! identically as unsigned integers — which gives a total order with
+//! no NaN panic path and cheaper comparisons than `partial_cmp`.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -45,6 +66,12 @@ pub struct Interval {
     pub tag: u64,
 }
 
+impl Interval {
+    pub fn duration(&self) -> f64 {
+        self.finish - self.start
+    }
+}
+
 /// Deterministic discrete-event engine.
 #[derive(Debug, Default)]
 pub struct Engine {
@@ -72,6 +99,10 @@ impl Engine {
         self.resources
     }
 
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
     /// Add a task on `resource` lasting `duration`, gated on `deps`.
     /// `tag` is a caller-defined label (op kind, layer id...) carried
     /// into the trace.
@@ -83,7 +114,15 @@ impl Engine {
         tag: u64,
     ) -> TaskId {
         assert!(resource.0 < self.resources, "unknown resource");
-        assert!(duration >= 0.0, "negative duration");
+        // `>= 0.0` is false for NaN, so this also rejects NaN durations
+        // — a prerequisite for the bit-pattern heap ordering in `run`.
+        assert!(
+            duration >= 0.0 && duration.is_finite(),
+            "duration must be finite and non-negative"
+        );
+        // normalize -0.0 (which passes the assert but whose bit
+        // pattern would mis-order as the largest u64 heap key)
+        let duration = duration + 0.0;
         let id = TaskId(self.tasks.len());
         self.tasks.push(Task {
             resource,
@@ -105,45 +144,40 @@ impl Engine {
 
     /// Set an absolute earliest-start time for a task.
     pub fn set_release(&mut self, t: TaskId, release: f64) {
-        self.tasks[t.0].release = release;
+        assert!(
+            release >= 0.0 && release.is_finite(),
+            "release must be finite and non-negative"
+        );
+        // normalize -0.0: its bit pattern (sign bit set) would sort as
+        // the LARGEST u64 key in `run`'s bit-ordered ready heap,
+        // scheduling a time-zero task after everything else
+        self.tasks[t.0].release = release + 0.0;
     }
 
     /// Run to completion. Returns the makespan and the interval trace.
     /// Per-resource FIFO among ready tasks, ties broken by task id —
     /// fully deterministic.
     pub fn run(&mut self) -> SimResult {
-        #[derive(PartialEq)]
-        struct Ev(f64, usize); // (time, task) — ready events
-        impl Eq for Ev {}
-        impl PartialOrd for Ev {
-            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-                Some(self.cmp(other))
-            }
-        }
-        impl Ord for Ev {
-            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-                self.0
-                    .partial_cmp(&other.0)
-                    .unwrap()
-                    .then(self.1.cmp(&other.1))
-            }
-        }
-
-        // ready queue per resource, plus a global event heap of
-        // "task becomes ready at time t".
-        let mut ready_heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        // Ready events ordered by (time, task id). Times are validated
+        // non-negative and non-NaN at insertion (`add_task`,
+        // `set_release`), and IEEE-754 orders non-negative doubles the
+        // same as their bit patterns — so `(u64, usize)` gives a total
+        // order with no `partial_cmp().unwrap()` panic path.
+        let mut ready_heap: BinaryHeap<Reverse<(u64, usize)>> =
+            BinaryHeap::with_capacity(self.tasks.len());
         let mut resource_free_at = vec![0.0f64; self.resources];
         let mut intervals = Vec::with_capacity(self.tasks.len());
         let mut completed = 0usize;
 
         for (i, t) in self.tasks.iter().enumerate() {
             if t.pending_deps == 0 {
-                ready_heap.push(Reverse(Ev(t.release, i)));
+                ready_heap.push(Reverse((t.release.to_bits(), i)));
             }
         }
 
         let mut makespan = 0.0f64;
-        while let Some(Reverse(Ev(ready_time, idx))) = ready_heap.pop() {
+        while let Some(Reverse((ready_bits, idx))) = ready_heap.pop() {
+            let ready_time = f64::from_bits(ready_bits);
             let resource = self.tasks[idx].resource;
             let start = ready_time.max(resource_free_at[resource.0]);
             let finish = start + self.tasks[idx].duration;
@@ -171,7 +205,7 @@ impl Engine {
                 dep.pending_deps -= 1;
                 if dep.pending_deps == 0 {
                     let at = dep.release.max(finish);
-                    ready_heap.push(Reverse(Ev(at, d.0)));
+                    ready_heap.push(Reverse((at.to_bits(), d.0)));
                 }
             }
         }
@@ -184,12 +218,11 @@ impl Engine {
             self.tasks.len()
         );
 
-        intervals.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
-        SimResult {
-            makespan,
-            intervals,
-            resources: self.resources,
-        }
+        // Intervals complete in per-resource start order (a resource's
+        // free time is monotone), so the CSR index needs only the
+        // counting sort inside `from_intervals` — the global
+        // O(N log N) start sort of the old engine is gone.
+        SimResult::from_intervals(makespan, self.resources, intervals)
     }
 
     pub fn task_finish(&self, t: TaskId) -> f64 {
@@ -201,25 +234,155 @@ impl Engine {
     }
 }
 
-/// Result of a simulation run.
+/// Result of a simulation run: the interval trace plus a CSR-style
+/// per-resource index with prefix-summed busy times and a tag index.
+///
+/// `intervals` is stored grouped by resource (bucket r is
+/// `intervals[offsets[r]..offsets[r+1]]`), start-sorted within each
+/// bucket. Construct via [`SimResult::from_intervals`]; the index
+/// fields are private so the storage invariant cannot be broken from
+/// outside.
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub makespan: f64,
+    /// Interval trace in CSR order (grouped by resource, start-sorted
+    /// within each group). Read-only from outside this module.
     pub intervals: Vec<Interval>,
     pub resources: usize,
+    /// CSR bucket boundaries: resource r owns `offsets[r]..offsets[r+1]`.
+    offsets: Vec<usize>,
+    /// Within-bucket running busy time: `prefix[i]` is the summed
+    /// duration of bucket entries up to and including `intervals[i]`.
+    /// The last entry of a bucket is that resource's total busy time,
+    /// bit-identical to a sequential scan.
+    prefix: Vec<f64>,
+    /// tag → positions into `intervals`, sorted by tag.
+    tags: Vec<(u64, Vec<u32>)>,
 }
 
 impl SimResult {
-    /// Total busy time on a resource.
-    pub fn busy_time(&self, r: ResourceId) -> f64 {
-        self.intervals
-            .iter()
-            .filter(|i| i.resource == r)
-            .map(|i| i.finish - i.start)
-            .sum()
+    /// Build the indexed result from a raw interval list. Intervals may
+    /// arrive in any order; they are counting-sorted into per-resource
+    /// buckets (O(N + R)), and a bucket is comparison-sorted only if it
+    /// is not already start-sorted — engine output always is.
+    ///
+    /// Contract: a resource's intervals must not overlap (each
+    /// resource executes one task at a time). Engine runs and list
+    /// schedulers satisfy this by construction; malformed external
+    /// traces trip a debug assertion rather than yielding silently
+    /// wrong prefix/window/overlap answers.
+    pub fn from_intervals(makespan: f64, resources: usize, intervals: Vec<Interval>) -> Self {
+        let n = intervals.len();
+        assert!(n <= u32::MAX as usize, "interval index exceeds u32");
+        // counting sort by resource, stable, O(N + R)
+        let mut offsets = vec![0usize; resources + 1];
+        for iv in &intervals {
+            assert!(iv.resource.0 < resources, "interval on unknown resource");
+            offsets[iv.resource.0 + 1] += 1;
+        }
+        for r in 0..resources {
+            offsets[r + 1] += offsets[r];
+        }
+        let placeholder = Interval {
+            task: TaskId(0),
+            resource: ResourceId(0),
+            start: 0.0,
+            finish: 0.0,
+            tag: 0,
+        };
+        let mut sorted = vec![placeholder; n];
+        let mut cursor = offsets.clone();
+        for iv in intervals {
+            let slot = cursor[iv.resource.0];
+            sorted[slot] = iv;
+            cursor[iv.resource.0] += 1;
+        }
+        // engine buckets are already start-sorted; sort defensively for
+        // externally built traces (e.g. the dynamic list scheduler)
+        for r in 0..resources {
+            let bucket = &mut sorted[offsets[r]..offsets[r + 1]];
+            if !bucket.windows(2).all(|w| w[0].start <= w[1].start) {
+                bucket.sort_by(|a, b| {
+                    a.start
+                        .total_cmp(&b.start)
+                        .then_with(|| a.task.0.cmp(&b.task.0))
+                });
+            }
+        }
+        // the index math (prefix differences, two-pointer merges,
+        // binary search on finishes) is only meaningful when a
+        // resource's intervals don't overlap — true for engine output
+        // and list schedulers; fail loudly on malformed external traces
+        for r in 0..resources {
+            let bucket = &sorted[offsets[r]..offsets[r + 1]];
+            debug_assert!(
+                bucket.windows(2).all(|w| w[0].finish <= w[1].start),
+                "overlapping intervals on resource {r}"
+            );
+        }
+        // within-bucket prefix busy sums
+        let mut prefix = vec![0.0f64; n];
+        for r in 0..resources {
+            let mut acc = 0.0f64;
+            for i in offsets[r]..offsets[r + 1] {
+                acc += sorted[i].duration();
+                prefix[i] = acc;
+            }
+        }
+        // tag index
+        let mut by_tag: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+        for (i, iv) in sorted.iter().enumerate() {
+            by_tag.entry(iv.tag).or_default().push(i as u32);
+        }
+        Self {
+            makespan,
+            intervals: sorted,
+            resources,
+            offsets,
+            prefix,
+            tags: by_tag.into_iter().collect(),
+        }
     }
 
-    /// Utilization of a resource over the makespan.
+    /// All intervals of one resource, start-sorted. O(1).
+    pub fn per_resource(&self, r: ResourceId) -> &[Interval] {
+        &self.intervals[self.offsets[r.0]..self.offsets[r.0 + 1]]
+    }
+
+    /// Total busy time on a resource. O(1) via the prefix index,
+    /// bit-identical to summing the resource's intervals in order.
+    pub fn busy_time(&self, r: ResourceId) -> f64 {
+        let (lo, hi) = (self.offsets[r.0], self.offsets[r.0 + 1]);
+        if lo == hi {
+            0.0
+        } else {
+            self.prefix[hi - 1]
+        }
+    }
+
+    /// Busy time of resource `r` inside the window `[t0, t1)`.
+    /// O(log n): two binary searches plus a prefix-sum difference, with
+    /// the two boundary intervals clipped.
+    pub fn busy_in_window(&self, r: ResourceId, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let base = self.offsets[r.0];
+        let bucket = self.per_resource(r);
+        // non-overlapping + start-sorted ⇒ finishes are sorted too
+        let lo = bucket.partition_point(|iv| iv.finish <= t0);
+        let hi = bucket.partition_point(|iv| iv.start < t1);
+        if lo >= hi {
+            return 0.0;
+        }
+        let below = if lo == 0 { 0.0 } else { self.prefix[base + lo - 1] };
+        let full = self.prefix[base + hi - 1] - below;
+        let head_clip = (t0 - bucket[lo].start).max(0.0);
+        let tail_clip = (bucket[hi - 1].finish - t1).max(0.0);
+        (full - head_clip - tail_clip).max(0.0)
+    }
+
+    /// Utilization of a resource over the makespan. O(1).
     pub fn utilization(&self, r: ResourceId) -> f64 {
         if self.makespan == 0.0 {
             0.0
@@ -228,7 +391,7 @@ impl SimResult {
         }
     }
 
-    /// Mean utilization over a set of resources.
+    /// Mean utilization over a set of resources. O(|rs|).
     pub fn mean_utilization(&self, rs: &[ResourceId]) -> f64 {
         if rs.is_empty() {
             return 0.0;
@@ -236,21 +399,15 @@ impl SimResult {
         rs.iter().map(|&r| self.utilization(r)).sum::<f64>() / rs.len() as f64
     }
 
-    /// Fraction of resource `a`'s busy time that overlaps resource
-    /// `b`'s busy time — the paper's *communication masking ratio* when
-    /// `a` = comm stream and `b` = compute stream.
-    pub fn overlap_ratio(&self, a: ResourceId, b: ResourceId) -> f64 {
-        let ia: Vec<&Interval> = self.intervals.iter().filter(|i| i.resource == a).collect();
-        let ib: Vec<&Interval> = self.intervals.iter().filter(|i| i.resource == b).collect();
-        let total_a: f64 = ia.iter().map(|i| i.finish - i.start).sum();
-        if total_a == 0.0 {
-            return 1.0;
-        }
-        // two-pointer sweep over the (start-sorted) interval lists:
-        // O(n + m + overlaps) instead of the naive O(n·m).
+    /// Seconds of resource `a`'s busy time that overlap resource `b`'s
+    /// busy time. Allocation-free two-pointer merge over the two CSR
+    /// buckets: O(n + m + overlaps).
+    pub fn overlap_time(&self, a: ResourceId, b: ResourceId) -> f64 {
+        let ia = self.per_resource(a);
+        let ib = self.per_resource(b);
         let mut overlap = 0.0;
         let mut j = 0usize;
-        for x in &ia {
+        for x in ia {
             while j < ib.len() && ib[j].finish <= x.start {
                 j += 1;
             }
@@ -264,17 +421,46 @@ impl SimResult {
                 k += 1;
             }
         }
-        overlap / total_a
+        overlap
     }
 
-    /// Idle ("bubble") fraction of a resource within [0, makespan].
+    /// Fraction of resource `a`'s busy time that overlaps resource
+    /// `b`'s busy time — the paper's *communication masking ratio* when
+    /// `a` = comm stream and `b` = compute stream.
+    pub fn overlap_ratio(&self, a: ResourceId, b: ResourceId) -> f64 {
+        let total_a = self.busy_time(a);
+        if total_a == 0.0 {
+            return 1.0;
+        }
+        self.overlap_time(a, b) / total_a
+    }
+
+    /// Idle ("bubble") fraction of a resource within [0, makespan]. O(1).
     pub fn bubble_ratio(&self, r: ResourceId) -> f64 {
         1.0 - self.utilization(r)
     }
 
-    /// Intervals filtered by tag.
-    pub fn intervals_tagged(&self, tag: u64) -> Vec<&Interval> {
-        self.intervals.iter().filter(|i| i.tag == tag).collect()
+    /// Intervals carrying `tag`, via the tag index — no scan, no
+    /// allocation. Iteration order is CSR order (grouped by resource).
+    pub fn intervals_tagged(&self, tag: u64) -> impl Iterator<Item = &Interval> + '_ {
+        let ids: &[u32] = match self.tags.binary_search_by_key(&tag, |e| e.0) {
+            Ok(i) => &self.tags[i].1,
+            Err(_) => &[],
+        };
+        ids.iter().map(move |&i| &self.intervals[i as usize])
+    }
+
+    /// Number of intervals carrying `tag`. O(log #tags).
+    pub fn tagged_count(&self, tag: u64) -> usize {
+        match self.tags.binary_search_by_key(&tag, |e| e.0) {
+            Ok(i) => self.tags[i].1.len(),
+            Err(_) => 0,
+        }
+    }
+
+    /// Distinct tags present in the trace, ascending.
+    pub fn tag_values(&self) -> impl Iterator<Item = u64> + '_ {
+        self.tags.iter().map(|e| e.0)
     }
 }
 
@@ -369,6 +555,144 @@ mod tests {
                 prev = cur;
             }
             e.run().makespan
+        };
+        assert_eq!(build(), build());
+    }
+
+    // ---- index-specific tests ---------------------------------------
+
+    #[test]
+    fn csr_buckets_group_and_sort_by_resource() {
+        let mut e = Engine::new();
+        let r0 = e.add_resource("r0");
+        let r1 = e.add_resource("r1");
+        // interleave work so completion order mixes resources
+        let a = e.add_task(r1, 3.0, &[], 0);
+        e.add_task(r0, 1.0, &[], 0);
+        e.add_task(r1, 1.0, &[a], 0);
+        e.add_task(r0, 2.0, &[], 0);
+        let res = e.run();
+        assert_eq!(res.per_resource(r0).len(), 2);
+        assert_eq!(res.per_resource(r1).len(), 2);
+        for r in [r0, r1] {
+            let bucket = res.per_resource(r);
+            assert!(bucket.iter().all(|iv| iv.resource == r));
+            assert!(bucket.windows(2).all(|w| w[0].start <= w[1].start));
+            // per-resource intervals never overlap
+            assert!(bucket.windows(2).all(|w| w[0].finish <= w[1].start));
+        }
+    }
+
+    #[test]
+    fn busy_time_matches_naive_scan_bitwise() {
+        let mut e = Engine::new();
+        let rs: Vec<_> = (0..3).map(|i| e.add_resource(format!("r{i}"))).collect();
+        let mut prev = None;
+        for i in 0..50 {
+            let deps: Vec<_> = prev.iter().copied().collect();
+            prev = Some(e.add_task(rs[i % 3], 0.1 + (i as f64) * 0.013, &deps, i as u64 % 4));
+        }
+        let res = e.run();
+        for &r in &rs {
+            let naive: f64 = res
+                .intervals
+                .iter()
+                .filter(|iv| iv.resource == r)
+                .map(|iv| iv.finish - iv.start)
+                .sum();
+            assert_eq!(res.busy_time(r).to_bits(), naive.to_bits());
+        }
+    }
+
+    #[test]
+    fn busy_in_window_clips_edges() {
+        let mut e = Engine::new();
+        let r = e.add_resource("r0");
+        let a = e.add_task(r, 2.0, &[], 0); // [0, 2)
+        let b = e.add_task(r, 2.0, &[a], 0); // [2, 4)
+        e.set_release(b, 3.0); // actually [3, 5)
+        let res = e.run();
+        assert!((res.busy_in_window(r, 0.0, 5.0) - 4.0).abs() < 1e-12);
+        assert!((res.busy_in_window(r, 1.0, 3.5) - 1.5).abs() < 1e-12);
+        assert!((res.busy_in_window(r, 2.0, 3.0) - 0.0).abs() < 1e-12);
+        assert!((res.busy_in_window(r, 4.0, 4.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tag_index_finds_all_and_only_tagged() {
+        let mut e = Engine::new();
+        let r = e.add_resource("r0");
+        let mut prev = None;
+        for i in 0..20u64 {
+            let deps: Vec<_> = prev.iter().copied().collect();
+            prev = Some(e.add_task(r, 1.0, &deps, i % 3));
+        }
+        let res = e.run();
+        for tag in 0..3u64 {
+            let via_index: Vec<_> = res.intervals_tagged(tag).map(|iv| iv.task).collect();
+            let via_scan: Vec<_> = res
+                .intervals
+                .iter()
+                .filter(|iv| iv.tag == tag)
+                .map(|iv| iv.task)
+                .collect();
+            assert_eq!(via_index, via_scan);
+            assert_eq!(res.tagged_count(tag), via_scan.len());
+        }
+        assert_eq!(res.tagged_count(99), 0);
+        assert_eq!(res.intervals_tagged(99).count(), 0);
+        assert_eq!(res.tag_values().collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn from_intervals_sorts_external_unsorted_buckets() {
+        // an externally built trace (e.g. a list scheduler) may push
+        // intervals out of start order; the index must repair it
+        let ivs = vec![
+            Interval { task: TaskId(1), resource: ResourceId(0), start: 2.0, finish: 3.0, tag: 0 },
+            Interval { task: TaskId(0), resource: ResourceId(0), start: 0.0, finish: 1.0, tag: 0 },
+            Interval { task: TaskId(2), resource: ResourceId(1), start: 0.5, finish: 2.5, tag: 1 },
+        ];
+        let res = SimResult::from_intervals(3.0, 2, ivs);
+        let b0 = res.per_resource(ResourceId(0));
+        assert_eq!(b0[0].task, TaskId(0));
+        assert_eq!(b0[1].task, TaskId(1));
+        assert!((res.busy_time(ResourceId(0)) - 2.0).abs() < 1e-12);
+        assert!((res.busy_time(ResourceId(1)) - 2.0).abs() < 1e-12);
+        assert!((res.overlap_time(ResourceId(0), ResourceId(1)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_zero_release_schedules_first_not_last() {
+        // -0.0 passes the non-negative assert; it must be normalized
+        // before becoming a heap bit key, or a time-zero task would
+        // sort after every other event
+        let mut e = Engine::new();
+        let r = e.add_resource("r0");
+        let a = e.add_task(r, 1.0, &[], 0);
+        let b = e.add_task(r, 1.0, &[], 0);
+        e.set_release(a, -0.0);
+        e.set_release(b, 0.5);
+        let res = e.run();
+        assert!(e.task_start(a) < e.task_start(b));
+        assert!((res.makespan - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_duration_and_equal_times_stay_deterministic() {
+        let build = || {
+            let mut e = Engine::new();
+            let r = e.add_resource("r0");
+            let ids: Vec<_> = (0..8).map(|_| e.add_task(r, 0.0, &[], 0)).collect();
+            let res = e.run();
+            (
+                res.makespan,
+                res.per_resource(r)
+                    .iter()
+                    .map(|iv| iv.task.0)
+                    .collect::<Vec<_>>(),
+                ids.len(),
+            )
         };
         assert_eq!(build(), build());
     }

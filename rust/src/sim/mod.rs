@@ -4,10 +4,12 @@
 
 pub mod engine;
 pub mod stream;
+pub mod sweep;
 pub mod trace;
 
 pub use engine::{Engine, Interval, ResourceId, SimResult, TaskId};
 pub use stream::{Stream, StreamSet};
+pub use sweep::{parallel_map, parallel_map_indexed};
 
 /// Task tags shared across modules (index into trace::TAG_NAMES).
 pub mod tags {

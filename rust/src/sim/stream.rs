@@ -45,6 +45,7 @@ impl Stream {
         }
     }
 
+    #[inline]
     fn index(&self) -> usize {
         match self {
             Stream::Cube => 0,
@@ -79,6 +80,9 @@ impl StreamSet {
         self.devices
     }
 
+    /// `(device, stream)` → engine resource. Called once per node on
+    /// the graph-lowering hot loop; inlined to a bounds check + load.
+    #[inline]
     pub fn get(&self, device: DeviceId, stream: Stream) -> ResourceId {
         assert!(device.0 < self.devices, "device out of range");
         self.resources[device.0 * 5 + stream.index()]

@@ -1,0 +1,165 @@
+//! Parallel scenario sweeps.
+//!
+//! The engine is deterministic and its runs are independent, so
+//! scenario/ablation sweeps (chunk granularities, lookaheads, seeds,
+//! cluster sizes) are embarrassingly parallel. This module fans a
+//! work list across `std::thread::scope` workers — no external deps,
+//! no unsafe — with an atomic cursor for load balancing (sweep cases
+//! are often wildly different in cost: a 2-chunk schedule is cheap, a
+//! 32-chunk one is not).
+//!
+//! Results come back **in input order**, so sweep output is identical
+//! to the sequential loop it replaces; `HP_SWEEP_THREADS=1` forces the
+//! sequential path (useful on contended CI machines where the bench
+//! harness itself must not be perturbed).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of workers a sweep over `n_items` would use: the
+/// `HP_SWEEP_THREADS` override if set, else available hardware
+/// parallelism, capped by the number of items.
+pub fn worker_count(n_items: usize) -> usize {
+    let env = std::env::var("HP_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok());
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    env.unwrap_or(hw).max(1).min(n_items.max(1))
+}
+
+/// Map `f` over `items` in parallel, preserving input order.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_indexed(items, |_, t| f(t))
+}
+
+/// [`parallel_map`] with the item index passed to the closure.
+pub fn parallel_map_indexed<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = worker_count(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                s.spawn(move || {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("sweep result missing"))
+        .collect()
+}
+
+/// Run a set of labeled scenario thunks in parallel; returns
+/// `(label, result)` pairs in input order. The ergonomic entry point
+/// for heterogeneous comparison sweeps (baseline vs. policy A vs.
+/// policy B), where each case is a different closure.
+pub fn labeled<'a, R: Send>(
+    cases: Vec<(&'static str, Box<dyn Fn() -> R + Send + Sync + 'a>)>,
+) -> Vec<(&'static str, R)> {
+    let results = parallel_map(&cases, |(_, thunk)| thunk());
+    cases
+        .iter()
+        .map(|(name, _)| *name)
+        .zip(results)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Engine;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..200).collect();
+        let out = parallel_map(&items, |&x| x * 3);
+        assert_eq!(out, (0..200).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn indexed_variant_sees_indices() {
+        let items = vec!["a", "b", "c"];
+        let out = parallel_map_indexed(&items, |i, s| format!("{i}{s}"));
+        assert_eq!(out, vec!["0a", "1b", "2c"]);
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        let out: Vec<u8> = parallel_map(&[] as &[u8], |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn matches_sequential_simulation_exactly() {
+        let run_chain = |len: usize| {
+            let mut e = Engine::new();
+            let r = e.add_resource("r");
+            let mut prev = None;
+            for i in 0..len {
+                let deps: Vec<_> = prev.iter().copied().collect();
+                prev = Some(e.add_task(r, (i + 1) as f64 * 0.01, &deps, 0));
+            }
+            e.run().makespan
+        };
+        let cases: Vec<usize> = (1..40).collect();
+        let par = parallel_map(&cases, |&n| run_chain(n));
+        let seq: Vec<f64> = cases.iter().map(|&n| run_chain(n)).collect();
+        // deterministic engine ⇒ bit-identical regardless of threading
+        assert_eq!(
+            par.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            seq.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn labeled_cases_keep_names() {
+        let out = labeled::<usize>(vec![
+            ("one", Box::new(|| 1)),
+            ("two", Box::new(|| 2)),
+        ]);
+        assert_eq!(out, vec![("one", 1), ("two", 2)]);
+    }
+
+    #[test]
+    fn worker_count_capped_by_items() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        assert!(worker_count(64) >= 1);
+    }
+}

@@ -56,6 +56,19 @@ pub fn write_trace(
     Ok(path.to_string())
 }
 
+/// Per-tag rollup of a trace: `(tag name, interval count, busy
+/// seconds)` for each tag present, ascending by tag value. Uses the
+/// result's tag index — no full-trace scan per tag.
+pub fn tag_summary(result: &SimResult) -> Vec<(&'static str, usize, f64)> {
+    result
+        .tag_values()
+        .map(|tag| {
+            let busy: f64 = result.intervals_tagged(tag).map(|iv| iv.duration()).sum();
+            (tag_name(tag), result.tagged_count(tag), busy)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +88,21 @@ mod tests {
         assert_eq!(arr[1].get_path("name").unwrap().as_str(), Some("comm"));
         // ts of second event = 1s = 1e6 µs
         assert_eq!(arr[1].get_path("ts").unwrap().as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn tag_summary_rolls_up_counts_and_busy() {
+        let mut e = Engine::new();
+        let r = e.add_resource("npu0.cube");
+        let a = e.add_task(r, 1.0, &[], 0); // compute
+        let b = e.add_task(r, 2.0, &[a], 1); // comm
+        e.add_task(r, 0.5, &[b], 1); // comm
+        let res = e.run();
+        let summary = tag_summary(&res);
+        assert_eq!(summary.len(), 2);
+        assert_eq!(summary[0], ("compute", 1, 1.0));
+        assert_eq!(summary[1].0, "comm");
+        assert_eq!(summary[1].1, 2);
+        assert!((summary[1].2 - 2.5).abs() < 1e-12);
     }
 }

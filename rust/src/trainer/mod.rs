@@ -11,5 +11,5 @@ pub mod scenarios;
 pub use data::{bigram_entropy, Corpus};
 pub use driver::{render_curve, train, LossPoint, TrainOptions, TrainReport};
 pub use moe::RoutingStats;
-pub use pipeline::{gpipe, one_f_one_b_bubble, PipelineReport};
+pub use pipeline::{gpipe, gpipe_sweep, one_f_one_b_bubble, PipelineReport};
 pub use scenarios::{OffloadTrainingScenario, TpOverheadScenario};

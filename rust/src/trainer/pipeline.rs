@@ -79,6 +79,12 @@ pub fn one_f_one_b_bubble(stages: usize, microbatches: usize) -> f64 {
     (p - 1.0) / (m + p - 1.0)
 }
 
+/// Simulate GPipe for several microbatch counts in parallel
+/// (`sim::sweep`); reports come back in input order.
+pub fn gpipe_sweep(fwd: &[f64], microbatch_counts: &[usize]) -> Vec<PipelineReport> {
+    crate::sim::sweep::parallel_map(microbatch_counts, |&m| gpipe(fwd, m))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +121,15 @@ mod tests {
         let few = gpipe(&[0.01; 4], 4);
         let many = gpipe(&[0.01; 4], 32);
         assert!(many.bubble_ratio < few.bubble_ratio);
+    }
+
+    #[test]
+    fn gpipe_sweep_matches_direct_simulation() {
+        let fwd = [0.01, 0.02, 0.01, 0.015];
+        let counts = [2usize, 4, 8];
+        let swept = gpipe_sweep(&fwd, &counts);
+        for (&m, r) in counts.iter().zip(&swept) {
+            assert_eq!(r.makespan.to_bits(), gpipe(&fwd, m).makespan.to_bits());
+        }
     }
 }

@@ -112,6 +112,16 @@ impl OffloadTrainingScenario {
     pub fn hyperoffload_step(&self, lookahead: usize) -> f64 {
         self.step_time(lookahead.max(2), TransferEngine::supernode())
     }
+
+    /// Step time on the supernode fabric for each prefetch lookahead
+    /// depth (1 = synchronous swaps, ≥2 = pipelined HyperOffload),
+    /// with the independent simulations fanned across `sim::sweep`
+    /// workers. Returns `(lookahead, step_seconds)` in input order.
+    pub fn lookahead_sweep(&self, lookaheads: &[usize]) -> Vec<(usize, f64)> {
+        crate::sim::sweep::parallel_map(lookaheads, |&la| {
+            (la, self.step_time(la.max(1), TransferEngine::supernode()))
+        })
+    }
 }
 
 /// E3 — TP traffic share on legacy vs supernode fabrics (§2.2: 52.9%).
@@ -147,6 +157,15 @@ impl TpOverheadScenario {
             Fabric::legacy(),
             DeviceSpec::a100_80g(),
         )
+    }
+
+    /// Measure the TP-comm fraction on several fabrics in parallel.
+    /// Returns `(label, fraction_of_step)` in input order.
+    pub fn fabric_sweep<'a>(&self, topos: &'a [(&'a str, Topology)]) -> Vec<(&'a str, f64)> {
+        crate::sim::sweep::parallel_map(topos, |(name, topo)| {
+            let (_, _, frac) = self.measure(topo);
+            (*name, frac)
+        })
     }
 
     /// (tp_comm_seconds, compute_seconds, fraction_of_step).
@@ -213,6 +232,30 @@ mod tests {
         );
         assert!(f_super < 0.20, "supernode TP fraction {f_super}");
         assert!(f_legacy / f_super > 3.0);
+    }
+
+    #[test]
+    fn lookahead_sweep_matches_direct_calls() {
+        let s = OffloadTrainingScenario::llama8b();
+        let lookaheads = [2usize, 3, 4];
+        for (la, t) in s.lookahead_sweep(&lookaheads) {
+            assert_eq!(t.to_bits(), s.hyperoffload_step(la).to_bits());
+        }
+    }
+
+    #[test]
+    fn fabric_sweep_orders_match_measure() {
+        let s = TpOverheadScenario::paper_setting();
+        let topos = [
+            ("legacy", TpOverheadScenario::legacy_4die_servers()),
+            ("supernode", Topology::matrix384()),
+        ];
+        let out = s.fabric_sweep(&topos);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, "legacy");
+        let (_, _, f_legacy) = s.measure(&topos[0].1);
+        assert_eq!(out[0].1.to_bits(), f_legacy.to_bits());
+        assert!(out[0].1 > out[1].1);
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //! Methodology: warmup iterations, then N measured iterations, report
 //! trimmed mean + min + p50 + p95. Deterministic workloads mean tight
 //! distributions; the trimmed mean guards against scheduler noise on the
-//! single-core CI machine.
+//! single-core CI machine. Results can additionally be dumped as JSON
+//! (`BENCH_JSON=<path>`), the hook CI uses to track the performance
+//! trajectory across PRs.
 
+use crate::util::json::{Json, JsonObj};
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -26,9 +29,12 @@ impl BenchResult {
     }
 }
 
-/// Time `f` with `warmup` + `iters` runs; trimmed mean drops the top and
-/// bottom 10%.
+/// Time `f` with `warmup` + `iters` runs. The mean drops the top and
+/// bottom 10% of samples — but only when `iters >= 10`, so small
+/// iteration counts keep every sample instead of trimming the set
+/// empty or asymmetrically skewing the percentiles.
 pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters > 0, "bench '{name}' needs at least one measured iteration");
     for _ in 0..warmup {
         f();
     }
@@ -38,17 +44,18 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let trim = iters / 10;
-    let kept = &samples[trim..iters - trim.min(iters - 1)];
+    samples.sort_by(f64::total_cmp);
+    let trim = if iters >= 10 { iters / 10 } else { 0 };
+    let kept = &samples[trim..iters - trim];
+    debug_assert!(!kept.is_empty());
     let mean = kept.iter().sum::<f64>() / kept.len() as f64;
     BenchResult {
         name: name.to_string(),
         iters,
         mean_s: mean,
         min_s: samples[0],
-        p50_s: samples[iters / 2],
-        p95_s: samples[(iters * 95 / 100).min(iters - 1)],
+        p50_s: samples[(iters - 1) / 2],
+        p95_s: samples[((iters - 1) as f64 * 0.95).ceil() as usize],
     }
 }
 
@@ -77,6 +84,47 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable form of a result set.
+pub fn to_json(results: &[BenchResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                let mut o = JsonObj::new();
+                o.insert("name", Json::from(r.name.as_str()));
+                o.insert("iters", Json::from(r.iters));
+                o.insert("mean_s", Json::from(r.mean_s));
+                o.insert("min_s", Json::from(r.min_s));
+                o.insert("p50_s", Json::from(r.p50_s));
+                o.insert("p95_s", Json::from(r.p95_s));
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// Write results as JSON; returns the path.
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<String> {
+    std::fs::write(path, to_json(results).dump())?;
+    Ok(path.to_string())
+}
+
+/// Honor the `BENCH_JSON=<path>` env hook: write the result set there
+/// if requested (used by CI to archive a perf point per commit).
+pub fn maybe_write_json(results: &[BenchResult]) {
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        match write_json(&path, results) {
+            Ok(p) => println!("\nbench json written to {p}"),
+            Err(e) => eprintln!("\nbench json write to {path} failed: {e}"),
+        }
+    }
+}
+
+/// True when the `BENCH_SMOKE` env var asks for a fast CI-sized run.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +140,55 @@ mod tests {
         });
         assert!(r.mean_s > 0.0);
         assert!(r.min_s <= r.mean_s * 1.5);
+    }
+
+    #[test]
+    fn tiny_iteration_counts_keep_all_samples() {
+        // iters < 10: no trimming, percentile indices stay in bounds
+        for iters in 1..10 {
+            let r = bench("tiny", 0, iters, || {
+                std::hint::black_box(1 + 1);
+            });
+            assert!(r.mean_s >= 0.0);
+            assert!(r.min_s <= r.p50_s);
+            assert!(r.p50_s <= r.p95_s);
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers_at_ten_plus() {
+        // a synthetic workload with one huge outlier among 20 samples:
+        // the trimmed mean must sit near the typical sample, not the max
+        let mut call = 0usize;
+        let r = bench("outlier", 0, 20, || {
+            call += 1;
+            if call == 7 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        });
+        assert!(
+            r.mean_s < 5e-3,
+            "outlier leaked into trimmed mean: {}",
+            r.mean_s
+        );
+        assert!(r.p95_s <= 25e-3);
+    }
+
+    #[test]
+    fn json_roundtrip_has_all_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            mean_s: 1.0,
+            min_s: 0.5,
+            p50_s: 0.9,
+            p95_s: 1.4,
+        };
+        let j = to_json(&[r]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get_path("name").unwrap().as_str(), Some("x"));
+        assert_eq!(arr[0].get_path("mean_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[0].get_path("iters").unwrap().as_usize(), Some(5));
     }
 }

@@ -5,6 +5,10 @@ use hyperparallel::runtime::Runtime;
 use hyperparallel::trainer::{train, Corpus, TrainOptions};
 
 fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     if !std::path::Path::new("artifacts/meta.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;

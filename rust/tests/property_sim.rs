@@ -1,0 +1,228 @@
+//! Property tests for the discrete-event engine and the indexed
+//! `SimResult` (ISSUE 1 satellite): per-resource intervals never
+//! overlap, the makespan equals the max finish time, and every indexed
+//! metric agrees **bit-identically** with a naive reference
+//! implementation that re-scans the raw interval trace.
+
+use hyperparallel::sim::{Engine, Interval, ResourceId, SimResult, TaskId};
+use hyperparallel::util::prop::{f64_in, forall, pair_of, usize_in, vec_of, Check};
+
+/// A generated workload: resource count + per-task
+/// (raw selector, (duration, dependency count)).
+type Spec = (usize, Vec<(usize, (f64, usize))>);
+
+fn spec_gen() -> hyperparallel::util::prop::Gen<Spec> {
+    pair_of(
+        usize_in(1, 5),
+        vec_of(
+            pair_of(usize_in(0, 97), pair_of(f64_in(0.0, 2.0), usize_in(0, 3))),
+            0,
+            120,
+        ),
+    )
+}
+
+/// Deterministically materialize a workload spec into an engine.
+fn build(spec: &Spec) -> Engine {
+    let (nres, tasks) = spec;
+    let mut e = Engine::new();
+    let rs: Vec<_> = (0..*nres).map(|i| e.add_resource(format!("r{i}"))).collect();
+    let mut ids: Vec<TaskId> = Vec::with_capacity(tasks.len());
+    let mut deps: Vec<TaskId> = Vec::new();
+    for (j, (raw, (dur, ndeps))) in tasks.iter().enumerate() {
+        deps.clear();
+        if j > 0 {
+            for k in 0..*ndeps {
+                deps.push(ids[(raw + 7 * k + j) % j]);
+            }
+            deps.sort();
+            deps.dedup();
+        }
+        let t = e.add_task(rs[raw % nres], *dur, &deps, (raw % 5) as u64);
+        if raw % 4 == 0 {
+            e.set_release(t, (raw % 11) as f64 * 0.1);
+        }
+        ids.push(t);
+    }
+    e
+}
+
+// ---- naive reference implementations (full scans over the trace) ----
+
+fn naive_busy(res: &SimResult, r: ResourceId) -> f64 {
+    res.intervals
+        .iter()
+        .filter(|iv| iv.resource == r)
+        .map(|iv| iv.finish - iv.start)
+        .sum()
+}
+
+fn naive_overlap(res: &SimResult, a: ResourceId, b: ResourceId) -> f64 {
+    let ia: Vec<&Interval> = res.intervals.iter().filter(|iv| iv.resource == a).collect();
+    let ib: Vec<&Interval> = res.intervals.iter().filter(|iv| iv.resource == b).collect();
+    let mut overlap = 0.0;
+    for x in &ia {
+        for y in &ib {
+            let lo = x.start.max(y.start);
+            let hi = x.finish.min(y.finish);
+            if hi > lo {
+                overlap += hi - lo;
+            }
+        }
+    }
+    overlap
+}
+
+fn naive_tagged(res: &SimResult, tag: u64) -> Vec<TaskId> {
+    res.intervals
+        .iter()
+        .filter(|iv| iv.tag == tag)
+        .map(|iv| iv.task)
+        .collect()
+}
+
+// ---- properties -----------------------------------------------------
+
+#[test]
+fn per_resource_intervals_never_overlap_and_are_sorted() {
+    forall("sim-no-overlap", 120, spec_gen(), |spec| {
+        let res = build(spec).run();
+        for r in 0..spec.0 {
+            let bucket = res.per_resource(ResourceId(r));
+            for w in bucket.windows(2) {
+                if w[0].start > w[1].start {
+                    return Check::Fail(format!("bucket {r} not start-sorted"));
+                }
+                if w[0].finish > w[1].start {
+                    return Check::Fail(format!(
+                        "overlap on resource {r}: [{}, {}) then [{}, {})",
+                        w[0].start, w[0].finish, w[1].start, w[1].finish
+                    ));
+                }
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn makespan_equals_max_finish() {
+    forall("sim-makespan", 120, spec_gen(), |spec| {
+        let res = build(spec).run();
+        let max_finish = res
+            .intervals
+            .iter()
+            .map(|iv| iv.finish)
+            .fold(0.0f64, f64::max);
+        Check::from_bool(
+            res.makespan.to_bits() == max_finish.to_bits(),
+            &format!("makespan {} != max finish {}", res.makespan, max_finish),
+        )
+    });
+}
+
+#[test]
+fn indexed_metrics_bit_identical_to_naive_scans() {
+    forall("sim-indexed-vs-naive", 100, spec_gen(), |spec| {
+        let res = build(spec).run();
+        for r in 0..spec.0 {
+            let rid = ResourceId(r);
+            let (fast, slow) = (res.busy_time(rid), naive_busy(&res, rid));
+            if fast.to_bits() != slow.to_bits() {
+                return Check::Fail(format!("busy_time({r}): {fast} != naive {slow}"));
+            }
+            for r2 in 0..spec.0 {
+                let rid2 = ResourceId(r2);
+                let (fast, slow) = (res.overlap_time(rid, rid2), naive_overlap(&res, rid, rid2));
+                if fast.to_bits() != slow.to_bits() {
+                    return Check::Fail(format!(
+                        "overlap_time({r},{r2}): {fast} != naive {slow}"
+                    ));
+                }
+            }
+        }
+        for tag in 0..5u64 {
+            let via_index: Vec<TaskId> = res.intervals_tagged(tag).map(|iv| iv.task).collect();
+            if via_index != naive_tagged(&res, tag) {
+                return Check::Fail(format!("tag index mismatch for tag {tag}"));
+            }
+            if res.tagged_count(tag) != via_index.len() {
+                return Check::Fail(format!("tagged_count mismatch for tag {tag}"));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn windowed_busy_is_consistent_with_totals() {
+    forall("sim-busy-window", 100, spec_gen(), |spec| {
+        let res = build(spec).run();
+        for r in 0..spec.0 {
+            let rid = ResourceId(r);
+            let whole = res.busy_in_window(rid, 0.0, res.makespan + 1.0);
+            if (whole - res.busy_time(rid)).abs() > 1e-9 {
+                return Check::Fail(format!(
+                    "full window {} != busy_time {}",
+                    whole,
+                    res.busy_time(rid)
+                ));
+            }
+            // split at an arbitrary interior point: halves must sum back
+            let mid = res.makespan * 0.37;
+            let sum = res.busy_in_window(rid, 0.0, mid) + res.busy_in_window(rid, mid, res.makespan + 1.0);
+            if (sum - res.busy_time(rid)).abs() > 1e-9 {
+                return Check::Fail(format!("window split {sum} != {}", res.busy_time(rid)));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn utilization_bounded_and_conserved() {
+    forall("sim-utilization", 100, spec_gen(), |spec| {
+        let res = build(spec).run();
+        let mut total_busy = 0.0;
+        for r in 0..spec.0 {
+            let u = res.utilization(ResourceId(r));
+            if !(0.0..=1.0 + 1e-12).contains(&u) {
+                return Check::Fail(format!("utilization({r}) = {u} out of [0,1]"));
+            }
+            total_busy += res.busy_time(ResourceId(r));
+        }
+        Check::from_bool(
+            total_busy <= spec.0 as f64 * res.makespan + 1e-9,
+            &format!(
+                "busy {} exceeds resources x makespan {}",
+                total_busy,
+                spec.0 as f64 * res.makespan
+            ),
+        )
+    });
+}
+
+#[test]
+fn reruns_are_bit_identical() {
+    forall("sim-determinism", 60, spec_gen(), |spec| {
+        let a = build(spec).run();
+        let b = build(spec).run();
+        if a.makespan.to_bits() != b.makespan.to_bits() {
+            return Check::Fail("makespan differs across reruns".into());
+        }
+        if a.intervals.len() != b.intervals.len() {
+            return Check::Fail("interval count differs".into());
+        }
+        for (x, y) in a.intervals.iter().zip(&b.intervals) {
+            let same = x.task == y.task
+                && x.resource == y.resource
+                && x.start.to_bits() == y.start.to_bits()
+                && x.finish.to_bits() == y.finish.to_bits()
+                && x.tag == y.tag;
+            if !same {
+                return Check::Fail(format!("interval differs: {x:?} vs {y:?}"));
+            }
+        }
+        Check::Pass
+    });
+}

@@ -1,0 +1,176 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build container has no registry access, so this path crate
+//! provides the slice of `anyhow`'s API the framework actually uses:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros,
+//! and the [`Context`] extension trait. Error values are rendered
+//! strings with a context chain — enough for CLI diagnostics, without
+//! backtraces or downcasting.
+
+use std::fmt;
+
+/// A rendered error: the root cause plus any context frames added via
+/// [`Context`]. Frame 0 is the outermost (most recently added) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Push an outer context frame (what [`Context`] does).
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Context frames, outermost first.
+    pub fn frames(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, outermost first, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error. `Error` deliberately does NOT
+// implement `std::error::Error` (same as real anyhow) so this blanket
+// impl cannot conflict with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible values.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("root cause {}", 42))
+    }
+
+    #[test]
+    fn chain_renders_outermost_first() {
+        let e = fails().with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn ensure_formats() {
+        fn check(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(format!("{}", check(11).unwrap_err()), "x too big: 11");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+    }
+}
