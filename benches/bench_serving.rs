@@ -1,0 +1,135 @@
+//! Serving simulator smoke bench — wall-clock throughput of the DES
+//! itself, plus the deterministic virtual-time SLO metrics CI gates on.
+//!
+//! Two result classes go into `BENCH_serving.json`
+//! (`BENCH_JSON=<path>`):
+//!
+//! - `"benches"` — wall-clock timings of the simulator (machine
+//!   dependent, archived for the cross-PR perf trajectory, **not**
+//!   gated: shared CI runners are too noisy);
+//! - `"metrics"` — virtual-time serving metrics from the fixed smoke
+//!   sweep (max QPS under SLO with/without pool offload, the gains,
+//!   p99 TTFT). The simulator is deterministic, so these are
+//!   bit-identical on every machine — `tools/bench_regression.py`
+//!   fails CI when one regresses >15% vs `BENCH_baseline.json`. The
+//!   same presets are asserted (more tightly) by
+//!   `rust/tests/serving_scenarios.rs`, so a green test suite implies
+//!   a green gate.
+//!
+//! Env hooks: `BENCH_SMOKE=1` shrinks the wall-clock workloads; the
+//! gated metric sweep always runs the full fixed grid.
+
+use hyperparallel::serving::{
+    max_qps_under_slo, rate_sweep, run_scenario, smoke_scenario, smoke_slo, ArrivalProcess,
+    OperatingPoint, SMOKE_RATES,
+};
+use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
+use hyperparallel::util::json::{Json, JsonObj};
+use hyperparallel::util::stats::fmt_secs;
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    section("serving DES wall-clock (requests through batcher + KV pages)");
+    let (rate, fleet, iters) = if smoke() { (40.0, 2, 3) } else { (80.0, 4, 10) };
+    let poisson = smoke_scenario(rate, 0.2, fleet);
+    let n_reqs = poisson.workload.generate(poisson.horizon).len();
+    results.push(run(
+        &format!("serve sim poisson {n_reqs} reqs fleet={fleet}"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_scenario(&poisson).completed());
+        },
+    ));
+    let mut bursty = smoke_scenario(rate, 0.2, fleet);
+    bursty.workload.arrival = ArrivalProcess::Bursty {
+        rate_on: rate * 3.0,
+        rate_off: rate * 0.2,
+        mean_on: 0.5,
+        mean_off: 1.5,
+    };
+    results.push(run(
+        &format!("serve sim bursty mmpp fleet={fleet}"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_scenario(&bursty).completed());
+        },
+    ));
+
+    section("SLO operating points (virtual time — deterministic, CI-gated)");
+    let slo = smoke_slo();
+    let sweep = |frac: f64| -> Vec<OperatingPoint> {
+        rate_sweep(&smoke_scenario(SMOKE_RATES[0], frac, 2), &SMOKE_RATES, &slo)
+    };
+    let base_points = sweep(0.0);
+    let off_points = sweep(0.2);
+    for (name, points) in [("no-offload", &base_points), ("pool-offload", &off_points)] {
+        for p in points.iter() {
+            println!(
+                "  {name:<12} rate {:>5.0}  qps {:>6.1}  p99 ttft {:>10}  p99 tpot {:>10}  \
+                 peak ctx {:>6}  slo {}",
+                p.rate,
+                p.admitted_qps,
+                fmt_secs(p.p99_ttft),
+                fmt_secs(p.p99_tpot),
+                p.peak_context_tokens,
+                if p.attains_slo { "yes" } else { "no" }
+            );
+        }
+    }
+    let base_op = max_qps_under_slo(&base_points).expect("baseline attains at the lowest rate");
+    let off_op = max_qps_under_slo(&off_points).expect("offload attains at the lowest rate");
+    let qps_gain = off_op.rate / base_op.rate;
+    let ctx_gain = off_op.peak_context_tokens as f64 / base_op.peak_context_tokens as f64;
+    println!(
+        "\n  max QPS under SLO: pool-offload {:.0} vs no-offload {:.0} ({qps_gain:.2}x QPS, \
+         {ctx_gain:.2}x peak context)",
+        off_op.rate, base_op.rate
+    );
+
+    let mut metrics = JsonObj::new();
+    metrics.insert("serving.no_offload.max_qps_under_slo", Json::from(base_op.rate));
+    metrics.insert("serving.pool_offload.max_qps_under_slo", Json::from(off_op.rate));
+    metrics.insert("serving.offload_qps_gain", Json::from(qps_gain));
+    metrics.insert("serving.offload_context_gain", Json::from(ctx_gain));
+    metrics.insert("serving.pool_offload.p99_ttft_s", Json::from(off_op.p99_ttft));
+    // p99 TTFT at a FIXED mid-grid rate: unlike the operating point's
+    // p99 (which is <= the SLO by construction), this one can actually
+    // regress, so it is the TTFT metric the baseline gates.
+    metrics.insert(
+        "serving.pool_offload.p99_ttft_at_fixed_rate_s",
+        Json::from(off_points[4].p99_ttft),
+    );
+    metrics.insert(
+        "serving.fixed_rate_qps",
+        Json::from(off_points[4].rate),
+    );
+    metrics.insert("serving.pool_offload.goodput_qps", Json::from(off_op.goodput));
+    metrics.insert(
+        "serving.no_offload.peak_context_tokens",
+        Json::from(base_op.peak_context_tokens),
+    );
+    metrics.insert(
+        "serving.pool_offload.peak_context_tokens",
+        Json::from(off_op.peak_context_tokens),
+    );
+
+    // Combined artifact: wall-clock benches + gated virtual-time
+    // metrics. Written directly (not via util::bench::maybe_write_json)
+    // because the gate needs the "metrics" object alongside the bench
+    // array.
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = JsonObj::new();
+        root.insert("benches", to_json(&results));
+        root.insert("metrics", Json::Obj(metrics));
+        match std::fs::write(&path, Json::Obj(root).pretty()) {
+            Ok(()) => println!("\nbench json written to {path}"),
+            Err(e) => {
+                eprintln!("\nbench json write to {path} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

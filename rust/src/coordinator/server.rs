@@ -9,6 +9,7 @@
 //! supplies the memory model; numerics run through PJRT.
 
 use crate::runtime::{to_f32, Manifest, Runtime};
+use crate::serving::batcher::plan_refill;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -103,20 +104,25 @@ impl InferenceServer {
         self.active.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Refill empty slots through the shared admission core
+    /// (`serving::batcher::plan_refill`) — the same code path the
+    /// serving simulator gates on KV pages; the live server admits
+    /// whenever a slot is free.
     fn refill(&mut self) {
-        for slot in self.active.iter_mut() {
-            if slot.is_none() {
-                if let Some(req) = self.queue.pop_front() {
-                    let prompt_len = req.prompt.len().min(self.manifest.seq - 1);
-                    *slot = Some(Slot {
-                        id: req.id,
-                        tokens: req.prompt[..prompt_len].to_vec(),
-                        prompt_len,
-                        max_new: req.max_new_tokens,
-                        admitted: Instant::now(),
-                    });
-                }
-            }
+        let occupied: Vec<bool> = self.active.iter().map(Option::is_some).collect();
+        // at most one admission per empty slot — never scan the whole
+        // backlog on the decode hot path
+        let empty = occupied.iter().filter(|o| !**o).count();
+        let lens: Vec<usize> = self.queue.iter().take(empty).map(|r| r.prompt.len()).collect();
+        for adm in plan_refill(&occupied, self.manifest.seq, &lens, |_, _| true) {
+            let req = self.queue.pop_front().expect("refill plan exceeds queue");
+            self.active[adm.slot] = Some(Slot {
+                id: req.id,
+                tokens: req.prompt[..adm.prompt_len].to_vec(),
+                prompt_len: adm.prompt_len,
+                max_new: req.max_new_tokens,
+                admitted: Instant::now(),
+            });
         }
     }
 

@@ -20,7 +20,8 @@
 //! execution-graph IR ([`graph`]), topology-costed collectives
 //! ([`collectives`]), a PJRT runtime that executes the AOT-compiled
 //! JAX/Pallas artifacts ([`runtime`]), a training/RL workload layer
-//! ([`trainer`]), the coordinator ([`coordinator`]), and the paper's
+//! ([`trainer`]), the coordinator ([`coordinator`]), a request-level
+//! inference serving simulator ([`serving`]), and the paper's
 //! baselines ([`baselines`]).
 //!
 //! See `DESIGN.md` for the substitution table (paper hardware → this
@@ -36,6 +37,7 @@ pub mod hyperoffload;
 pub mod hypershard;
 pub mod memory;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod supernode;
 pub mod trainer;

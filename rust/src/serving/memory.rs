@@ -1,0 +1,351 @@
+//! KV-page pressure for the serving simulator: a two-tier page pool
+//! (HBM + pooled DRAM) with per-sequence accounting, plus the policy
+//! layer deciding what happens when HBM pages run out.
+//!
+//! This is the multi-sequence, pool-level counterpart of
+//! `hyperoffload::kvcache::PagedKvCache` (which tracks one sequence):
+//! the simulated batcher allocates prompt pages at admission, grows
+//! sequences page by page during decode, demotes cold pages to the
+//! DRAM pool under the offload policy, and releases everything at
+//! completion or preemption. Every transition keeps the conservation
+//! invariant `free + Σ per-sequence used = capacity` per tier —
+//! enforced by `rust/tests/property_kvcache.rs` over random op
+//! sequences.
+
+use crate::hyperoffload::kvcache::KvCacheConfig;
+use crate::hyperoffload::policy::OffloadPolicy;
+use std::collections::BTreeMap;
+
+/// What to do when HBM pages run out (the serving-side projection of
+/// `hyperoffload::policy::OffloadPolicy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryPolicy {
+    /// Baseline: KV lives in HBM only; pressure preempts sequences
+    /// (recompute-style, like vLLM's recompute preemption).
+    NoOffload,
+    /// HyperOffload: cold pages demote to the pooled DRAM and stream
+    /// back over the UB fabric during decode; preemption is the last
+    /// resort when the pool is full too.
+    PoolOffload,
+}
+
+impl MemoryPolicy {
+    /// Project the training-side offload policy onto serving: an
+    /// enabled policy means the DRAM pool is available for KV pages.
+    pub fn from_offload_policy(p: &OffloadPolicy) -> Self {
+        if p.enabled {
+            MemoryPolicy::PoolOffload
+        } else {
+            MemoryPolicy::NoOffload
+        }
+    }
+}
+
+/// Pages one sequence holds in each tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SeqPages {
+    pub hbm: usize,
+    pub pool: usize,
+}
+
+impl SeqPages {
+    pub fn total(&self) -> usize {
+        self.hbm + self.pool
+    }
+}
+
+/// Two-tier page pool with a per-sequence ledger.
+///
+/// All operations are total: allocation is all-or-nothing, demotion
+/// moves at most what exists and fits, and release is idempotent (a
+/// double release frees nothing — the ledger is the single source of
+/// truth, so pages can never be freed twice or leak).
+#[derive(Debug, Clone)]
+pub struct PagePool {
+    hbm_capacity: usize,
+    pool_capacity: usize,
+    hbm_free: usize,
+    pool_free: usize,
+    ledger: BTreeMap<u64, SeqPages>,
+    /// Cumulative HBM→pool page demotions.
+    pub demotions: u64,
+}
+
+impl PagePool {
+    pub fn new(hbm_capacity: usize, pool_capacity: usize) -> Self {
+        Self {
+            hbm_capacity,
+            pool_capacity,
+            hbm_free: hbm_capacity,
+            pool_free: pool_capacity,
+            ledger: BTreeMap::new(),
+            demotions: 0,
+        }
+    }
+
+    pub fn hbm_capacity(&self) -> usize {
+        self.hbm_capacity
+    }
+
+    pub fn pool_capacity(&self) -> usize {
+        self.pool_capacity
+    }
+
+    pub fn hbm_free(&self) -> usize {
+        self.hbm_free
+    }
+
+    pub fn pool_free(&self) -> usize {
+        self.pool_free
+    }
+
+    pub fn hbm_used(&self) -> usize {
+        self.hbm_capacity - self.hbm_free
+    }
+
+    pub fn pool_used(&self) -> usize {
+        self.pool_capacity - self.pool_free
+    }
+
+    /// Pages held by one sequence (zero if unknown).
+    pub fn seq_pages(&self, seq: u64) -> SeqPages {
+        self.ledger.get(&seq).copied().unwrap_or_default()
+    }
+
+    /// Number of sequences holding pages.
+    pub fn sequences(&self) -> usize {
+        self.ledger.len()
+    }
+
+    /// Allocate `pages` HBM pages to `seq`, all or nothing.
+    pub fn try_alloc_hbm(&mut self, seq: u64, pages: usize) -> bool {
+        if pages > self.hbm_free {
+            return false;
+        }
+        self.hbm_free -= pages;
+        self.ledger.entry(seq).or_default().hbm += pages;
+        true
+    }
+
+    /// Demote up to `pages` of `seq`'s HBM pages to the pool; returns
+    /// how many actually moved (bounded by what the sequence holds in
+    /// HBM and by free pool pages).
+    pub fn demote(&mut self, seq: u64, pages: usize) -> usize {
+        let entry = match self.ledger.get_mut(&seq) {
+            Some(e) => e,
+            None => return 0,
+        };
+        let moved = pages.min(entry.hbm).min(self.pool_free);
+        entry.hbm -= moved;
+        entry.pool += moved;
+        self.hbm_free += moved;
+        self.pool_free -= moved;
+        self.demotions += moved as u64;
+        moved
+    }
+
+    /// Release everything `seq` holds; returns what was freed.
+    /// Idempotent: releasing an unknown (or already released) sequence
+    /// frees nothing.
+    pub fn release(&mut self, seq: u64) -> SeqPages {
+        let freed = self.ledger.remove(&seq).unwrap_or_default();
+        self.hbm_free += freed.hbm;
+        self.pool_free += freed.pool;
+        freed
+    }
+
+    /// Conservation check: per tier, `free + Σ ledger = capacity`.
+    /// Used by the property tests after every operation.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let mut sum = SeqPages::default();
+        for p in self.ledger.values() {
+            sum.hbm += p.hbm;
+            sum.pool += p.pool;
+        }
+        if self.hbm_free + sum.hbm != self.hbm_capacity {
+            return Err(format!(
+                "hbm leak: free {} + used {} != capacity {}",
+                self.hbm_free, sum.hbm, self.hbm_capacity
+            ));
+        }
+        if self.pool_free + sum.pool != self.pool_capacity {
+            return Err(format!(
+                "pool leak: free {} + used {} != capacity {}",
+                self.pool_free, sum.pool, self.pool_capacity
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The serving-side memory manager for one replica: a [`PagePool`]
+/// sized from the device's `KvCacheConfig` (HBM pages left after the
+/// resident weight fraction) plus the policy applied under pressure.
+#[derive(Debug, Clone)]
+pub struct ServingMemory {
+    pub pool: PagePool,
+    pub policy: MemoryPolicy,
+    tokens_per_page: usize,
+}
+
+impl ServingMemory {
+    /// `offload_frac` of the weights live in the DRAM pool, so the HBM
+    /// page budget follows `KvCacheConfig::kv_token_capacity` — the
+    /// same bandwidth/capacity math as the closed-form planner.
+    pub fn new(
+        kv: &KvCacheConfig,
+        offload_frac: f64,
+        policy: MemoryPolicy,
+        pool_pages: usize,
+    ) -> Self {
+        let hbm_pages = kv.kv_token_capacity(offload_frac) / kv.tokens_per_page;
+        let pool_pages = match policy {
+            MemoryPolicy::NoOffload => 0,
+            MemoryPolicy::PoolOffload => pool_pages,
+        };
+        Self {
+            pool: PagePool::new(hbm_pages, pool_pages),
+            policy,
+            tokens_per_page: kv.tokens_per_page,
+        }
+    }
+
+    pub fn tokens_per_page(&self) -> usize {
+        self.tokens_per_page
+    }
+
+    /// Pages needed to hold `tokens` KV entries.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.tokens_per_page).max(1)
+    }
+
+    /// Make at least `need` HBM pages free, demoting cold pages from
+    /// `demote_order` (coldest sequence first) under the pool-offload
+    /// policy. Returns whether `need` pages are now free. `NoOffload`
+    /// never demotes — pressure is the caller's (preemption) problem.
+    pub fn ensure_hbm_free(&mut self, need: usize, demote_order: &[u64]) -> bool {
+        if self.pool.hbm_free() >= need {
+            return true;
+        }
+        if self.policy == MemoryPolicy::NoOffload {
+            return false;
+        }
+        for &seq in demote_order {
+            let want = need - self.pool.hbm_free();
+            if want == 0 {
+                break;
+            }
+            self.pool.demote(seq, want);
+            if self.pool.hbm_free() >= need {
+                return true;
+            }
+        }
+        self.pool.hbm_free() >= need
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_conserve() {
+        let mut p = PagePool::new(10, 4);
+        assert!(p.try_alloc_hbm(1, 6));
+        assert!(p.try_alloc_hbm(2, 4));
+        assert!(!p.try_alloc_hbm(3, 1), "all-or-nothing when full");
+        assert_eq!(p.hbm_free(), 0);
+        p.check_conservation().unwrap();
+        let freed = p.release(1);
+        assert_eq!(freed, SeqPages { hbm: 6, pool: 0 });
+        assert_eq!(p.hbm_free(), 6);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn release_is_idempotent() {
+        let mut p = PagePool::new(8, 0);
+        assert!(p.try_alloc_hbm(7, 5));
+        assert_eq!(p.release(7).total(), 5);
+        assert_eq!(p.release(7).total(), 0, "double release frees nothing");
+        assert_eq!(p.release(99).total(), 0);
+        assert_eq!(p.hbm_free(), 8);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn demote_moves_bounded_by_pool_space() {
+        let mut p = PagePool::new(10, 3);
+        assert!(p.try_alloc_hbm(1, 8));
+        assert_eq!(p.demote(1, 5), 3, "bounded by pool capacity");
+        assert_eq!(p.seq_pages(1), SeqPages { hbm: 5, pool: 3 });
+        assert_eq!(p.hbm_free(), 5);
+        assert_eq!(p.pool_free(), 0);
+        assert_eq!(p.demotions, 3);
+        p.check_conservation().unwrap();
+        // releasing returns both tiers
+        let freed = p.release(1);
+        assert_eq!(freed, SeqPages { hbm: 5, pool: 3 });
+        assert_eq!(p.pool_free(), 3);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn demote_unknown_sequence_is_noop() {
+        let mut p = PagePool::new(4, 4);
+        assert_eq!(p.demote(42, 2), 0);
+        p.check_conservation().unwrap();
+    }
+
+    fn tiny_cfg() -> KvCacheConfig {
+        KvCacheConfig {
+            kv_bytes_per_token: 1024,
+            tokens_per_page: 16,
+            weight_bytes: 1 << 20,
+            hbm_usable: (1 << 20) + 64 * 16 * 1024, // 64 pages at f=0
+            hbm_bw: 1e12,
+            pool_bw: 100e9,
+            attn_tokens_per_s: 40e6,
+        }
+    }
+
+    #[test]
+    fn serving_memory_sized_from_kvcache_math() {
+        let cfg = tiny_cfg();
+        let m0 = ServingMemory::new(&cfg, 0.0, MemoryPolicy::NoOffload, 128);
+        assert_eq!(m0.pool.hbm_capacity(), 64);
+        assert_eq!(m0.pool.pool_capacity(), 0, "no pool without offload");
+        let m1 = ServingMemory::new(&cfg, 0.5, MemoryPolicy::PoolOffload, 128);
+        assert!(m1.pool.hbm_capacity() > 64, "freed weights become pages");
+        assert_eq!(m1.pool.pool_capacity(), 128);
+        assert_eq!(m1.pages_for(1), 1);
+        assert_eq!(m1.pages_for(16), 1);
+        assert_eq!(m1.pages_for(17), 2);
+    }
+
+    #[test]
+    fn ensure_free_demotes_cold_first_under_pool_policy() {
+        let cfg = tiny_cfg();
+        let mut m = ServingMemory::new(&cfg, 0.0, MemoryPolicy::PoolOffload, 32);
+        let cap = m.pool.hbm_capacity();
+        assert!(m.pool.try_alloc_hbm(1, cap / 2));
+        assert!(m.pool.try_alloc_hbm(2, cap - cap / 2));
+        assert_eq!(m.pool.hbm_free(), 0);
+        assert!(m.ensure_hbm_free(4, &[1, 2]));
+        assert_eq!(m.pool.seq_pages(1).pool, 4, "coldest (first) demoted");
+        assert_eq!(m.pool.seq_pages(2).pool, 0);
+        assert!(m.pool.try_alloc_hbm(3, 4));
+        m.pool.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn no_offload_never_demotes() {
+        let cfg = tiny_cfg();
+        let mut m = ServingMemory::new(&cfg, 0.0, MemoryPolicy::NoOffload, 32);
+        let cap = m.pool.hbm_capacity();
+        assert!(m.pool.try_alloc_hbm(1, cap));
+        assert!(!m.ensure_hbm_free(1, &[1]));
+        assert_eq!(m.pool.demotions, 0);
+        assert_eq!(m.pool.seq_pages(1).pool, 0);
+    }
+}

@@ -1,0 +1,402 @@
+//! SLO metrics and operating-point sweeps for the serving simulator.
+//!
+//! Definitions (all in virtual seconds):
+//!
+//! - **TTFT** — time to first token, `first_token - arrival` (queue
+//!   wait + prefill). Preserved across recompute-preemption: the
+//!   client saw the stream start once.
+//! - **TPOT** — time per output token after the first,
+//!   `(finish - first_token) / (output - 1)`.
+//! - **Goodput** — completed requests that individually met the SLO,
+//!   per second of makespan.
+//! - A configuration **attains** an SLO when it rejected nothing and
+//!   its p99 TTFT/TPOT are within bounds; the **max-QPS-under-SLO
+//!   operating point** is the highest offered rate that attains.
+//!
+//! Sweeps over arrival rate (and fleet size / offload fraction in the
+//! `serve_sweep` example) fan out through `sim::sweep::parallel_map` —
+//! the simulator is deterministic, so sweep results are bit-identical
+//! to sequential runs and comparable across machines, which is what
+//! lets CI gate on them (`tools/bench_regression.py`).
+
+use crate::hyperoffload::kvcache::KvCacheConfig;
+use crate::serving::batcher::{simulate, CostModel, ServingConfig};
+use crate::serving::memory::MemoryPolicy;
+use crate::serving::workload::{ArrivalProcess, LengthDist, WorkloadConfig};
+use crate::sim::{parallel_map, ResourceId, SimResult};
+use crate::util::stats::Percentiles;
+
+/// One completed request with its timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub tenant: usize,
+    pub arrival: f64,
+    pub first_token: f64,
+    pub finish: f64,
+    /// Prompt length after clamping to the sequence budget.
+    pub prompt_tokens: usize,
+    /// Tokens actually produced.
+    pub output_tokens: usize,
+    pub preemptions: u32,
+}
+
+impl RequestOutcome {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens > 1 {
+            (self.finish - self.first_token) / (self.output_tokens - 1) as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn e2e(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// Latency service-level objective on the p99s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    pub ttft_p99: f64,
+    pub tpot_p99: f64,
+}
+
+impl Slo {
+    /// Did this single request meet the per-request bounds?
+    pub fn met_by(&self, o: &RequestOutcome) -> bool {
+        o.ttft() <= self.ttft_p99 && o.tpot() <= self.tpot_p99
+    }
+}
+
+/// Everything a serving run produced.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub outcomes: Vec<RequestOutcome>,
+    /// Requests dropped (prompt could never fit, or preemption budget
+    /// exhausted).
+    pub rejected: u64,
+    pub preemptions: u64,
+    /// HBM→pool page demotions across the fleet.
+    pub demotions: u64,
+    pub decoded_tokens: u64,
+    pub prefill_tokens: u64,
+    /// High-water mark of concurrently admitted context tokens across
+    /// the fleet — the serving-side "supported context" axis.
+    pub peak_context_tokens: usize,
+    pub makespan: f64,
+    /// Per-replica busy intervals as a standard indexed trace.
+    pub trace: SimResult,
+}
+
+impl ServingReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Completed requests per second of makespan.
+    pub fn admitted_qps(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.completed() as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    fn percentile(&self, p: f64, f: impl Fn(&RequestOutcome) -> f64) -> f64 {
+        let mut pct = Percentiles::new();
+        for o in &self.outcomes {
+            pct.add(f(o));
+        }
+        pct.pct(p)
+    }
+
+    pub fn ttft_pct(&self, p: f64) -> f64 {
+        self.percentile(p, RequestOutcome::ttft)
+    }
+
+    pub fn tpot_pct(&self, p: f64) -> f64 {
+        self.percentile(p, RequestOutcome::tpot)
+    }
+
+    pub fn e2e_pct(&self, p: f64) -> f64 {
+        self.percentile(p, RequestOutcome::e2e)
+    }
+
+    /// SLO-meeting completions per second of makespan.
+    pub fn goodput(&self, slo: &Slo) -> f64 {
+        if self.makespan > 0.0 {
+            self.outcomes.iter().filter(|o| slo.met_by(o)).count() as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Whole-run SLO attainment: nothing rejected, p99s in bounds.
+    pub fn attains(&self, slo: &Slo) -> bool {
+        !self.outcomes.is_empty()
+            && self.rejected == 0
+            && self.ttft_pct(99.0) <= slo.ttft_p99
+            && self.tpot_pct(99.0) <= slo.tpot_p99
+    }
+
+    /// Mean replica utilization over the makespan.
+    pub fn mean_utilization(&self) -> f64 {
+        let rs: Vec<ResourceId> = (0..self.trace.resources).map(ResourceId).collect();
+        self.trace.mean_utilization(&rs)
+    }
+
+    /// Condense the run into a sweep row. Builds each latency
+    /// distribution once and reads every percentile (and the SLO
+    /// verdict) from it, instead of re-sorting per query.
+    pub fn operating_point(&self, rate: f64, slo: &Slo) -> OperatingPoint {
+        let mut ttft = Percentiles::new();
+        let mut tpot = Percentiles::new();
+        for o in &self.outcomes {
+            ttft.add(o.ttft());
+            tpot.add(o.tpot());
+        }
+        let p99_ttft = ttft.pct(99.0);
+        let p99_tpot = tpot.pct(99.0);
+        let attains_slo = !self.outcomes.is_empty()
+            && self.rejected == 0
+            && p99_ttft <= slo.ttft_p99
+            && p99_tpot <= slo.tpot_p99;
+        OperatingPoint {
+            rate,
+            completed: self.completed(),
+            rejected: self.rejected,
+            admitted_qps: self.admitted_qps(),
+            goodput: self.goodput(slo),
+            p50_ttft: ttft.pct(50.0),
+            p99_ttft,
+            p99_tpot,
+            mean_utilization: self.mean_utilization(),
+            peak_context_tokens: self.peak_context_tokens,
+            preemptions: self.preemptions,
+            demotions: self.demotions,
+            attains_slo,
+        }
+    }
+}
+
+/// One row of a rate sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    /// Offered cluster-wide arrival rate, requests/second.
+    pub rate: f64,
+    pub completed: usize,
+    pub rejected: u64,
+    pub admitted_qps: f64,
+    pub goodput: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    pub p99_tpot: f64,
+    pub mean_utilization: f64,
+    pub peak_context_tokens: usize,
+    pub preemptions: u64,
+    pub demotions: u64,
+    pub attains_slo: bool,
+}
+
+/// A full scenario: deployment + workload + how long arrivals flow.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub serving: ServingConfig,
+    pub workload: WorkloadConfig,
+    /// Arrival window, virtual seconds (the run drains afterwards).
+    pub horizon: f64,
+}
+
+/// Generate the workload and run the simulator.
+pub fn run_scenario(sc: &Scenario) -> ServingReport {
+    simulate(&sc.serving, &sc.workload.generate(sc.horizon))
+}
+
+/// Sweep offered load: rescale the scenario's arrival process to each
+/// rate and simulate, fanned across `sim::sweep` workers. Results are
+/// in input order and bit-identical to a sequential loop.
+pub fn rate_sweep(base: &Scenario, rates: &[f64], slo: &Slo) -> Vec<OperatingPoint> {
+    parallel_map(rates, |&rate| {
+        let mut sc = base.clone();
+        sc.workload.arrival = sc.workload.arrival.with_mean_rate(rate);
+        run_scenario(&sc).operating_point(rate, slo)
+    })
+}
+
+/// The max-QPS-under-SLO operating point of a sweep, if any rate
+/// attained the SLO.
+pub fn max_qps_under_slo(points: &[OperatingPoint]) -> Option<OperatingPoint> {
+    points
+        .iter()
+        .filter(|p| p.attains_slo)
+        .max_by(|a, b| a.rate.total_cmp(&b.rate))
+        .copied()
+}
+
+// ---- shared scenario presets (tests, bench, example) -----------------
+
+/// Scaled-down Llama-8B-class device for CI-sized serving scenarios:
+/// the bandwidth ratios of `KvCacheConfig::llama8b_910c`, but an HBM
+/// that fits only 4K KV tokens beyond the weights, so multi-tenant
+/// memory pressure appears at toy request counts.
+pub fn smoke_device() -> KvCacheConfig {
+    KvCacheConfig {
+        kv_bytes_per_token: 131_072,
+        tokens_per_page: 64,
+        weight_bytes: 8 * (1u64 << 30),
+        hbm_usable: 8 * (1u64 << 30) + 4096 * 131_072,
+        hbm_bw: 1.6e12,
+        pool_bw: 392e9,
+        attn_tokens_per_s: 40e6,
+    }
+}
+
+/// Reference smoke scenario: Poisson arrivals, log-normal prompts,
+/// `offload_frac > 0` enables the pool policy. Used identically by the
+/// scenario tests, `bench_serving` (whose deterministic metrics CI
+/// gates on), and the `serve_sweep` example — one definition, three
+/// consumers, so the gate can never drift from what the tests assert.
+pub fn smoke_scenario(rate: f64, offload_frac: f64, fleet: usize) -> Scenario {
+    let policy = if offload_frac > 0.0 {
+        MemoryPolicy::PoolOffload
+    } else {
+        MemoryPolicy::NoOffload
+    };
+    Scenario {
+        serving: ServingConfig {
+            fleet,
+            slots: 16,
+            max_seq: 2048,
+            cost: CostModel::new(smoke_device(), offload_frac),
+            policy,
+            pool_pages: 4096,
+            max_preemptions: 4,
+        },
+        workload: WorkloadConfig {
+            arrival: ArrivalProcess::Poisson { rate },
+            prompt: LengthDist::LogNormal {
+                mu: 6.2,
+                sigma: 0.35,
+                cap: 1200,
+            },
+            output: LengthDist::Uniform { lo: 24, hi: 40 },
+            seed: 42,
+        },
+        horizon: 8.0,
+    }
+}
+
+/// The smoke scenarios' SLO: 300 ms to first token, 15 ms/token after.
+pub fn smoke_slo() -> Slo {
+    Slo {
+        ttft_p99: 0.3,
+        tpot_p99: 0.015,
+    }
+}
+
+/// The rate grid the smoke comparison runs on (cluster-wide QPS for a
+/// 2-replica fleet). Fixed so the CI regression gate compares the same
+/// deterministic sweep on every machine.
+pub const SMOKE_RATES: [f64; 8] = [15.0, 30.0, 45.0, 60.0, 75.0, 90.0, 105.0, 120.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_latency_definitions() {
+        let o = RequestOutcome {
+            id: 0,
+            tenant: 0,
+            arrival: 1.0,
+            first_token: 1.25,
+            finish: 2.25,
+            prompt_tokens: 100,
+            output_tokens: 11,
+            preemptions: 0,
+        };
+        assert!((o.ttft() - 0.25).abs() < 1e-12);
+        assert!((o.tpot() - 0.1).abs() < 1e-12);
+        assert!((o.e2e() - 1.25).abs() < 1e-12);
+        let slo = Slo {
+            ttft_p99: 0.3,
+            tpot_p99: 0.15,
+        };
+        assert!(slo.met_by(&o));
+        assert!(!Slo {
+            ttft_p99: 0.2,
+            tpot_p99: 0.15
+        }
+        .met_by(&o));
+    }
+
+    #[test]
+    fn single_token_output_has_zero_tpot() {
+        let o = RequestOutcome {
+            id: 0,
+            tenant: 0,
+            arrival: 0.0,
+            first_token: 0.1,
+            finish: 0.1,
+            prompt_tokens: 8,
+            output_tokens: 1,
+            preemptions: 0,
+        };
+        assert_eq!(o.tpot(), 0.0);
+    }
+
+    #[test]
+    fn smoke_scenario_runs_and_reports() {
+        let rep = run_scenario(&smoke_scenario(20.0, 0.0, 2));
+        assert!(rep.completed() > 50, "completed={}", rep.completed());
+        assert!(rep.makespan > 0.0);
+        assert!(rep.ttft_pct(50.0) > 0.0);
+        assert!(rep.ttft_pct(99.0) >= rep.ttft_pct(50.0));
+        assert!(rep.mean_utilization() > 0.0);
+        assert!(rep.peak_context_tokens > 0);
+    }
+
+    #[test]
+    fn rate_sweep_is_parallel_safe_and_ordered() {
+        let sc = smoke_scenario(15.0, 0.0, 1);
+        let rates = [5.0, 10.0];
+        let slo = smoke_slo();
+        let par = rate_sweep(&sc, &rates, &slo);
+        assert_eq!(par.len(), 2);
+        assert_eq!(par[0].rate, 5.0);
+        assert_eq!(par[1].rate, 10.0);
+        // deterministic: rerunning one point reproduces the sweep row
+        let mut one = sc.clone();
+        one.workload.arrival = one.workload.arrival.with_mean_rate(10.0);
+        let rep = run_scenario(&one).operating_point(10.0, &slo);
+        assert_eq!(rep, par[1]);
+    }
+
+    #[test]
+    fn max_qps_picks_highest_attaining() {
+        let mk = |rate: f64, ok: bool| OperatingPoint {
+            rate,
+            completed: 1,
+            rejected: 0,
+            admitted_qps: rate,
+            goodput: rate,
+            p50_ttft: 0.01,
+            p99_ttft: 0.02,
+            p99_tpot: 0.005,
+            mean_utilization: 0.5,
+            peak_context_tokens: 100,
+            preemptions: 0,
+            demotions: 0,
+            attains_slo: ok,
+        };
+        let pts = [mk(10.0, true), mk(20.0, true), mk(30.0, false)];
+        assert_eq!(max_qps_under_slo(&pts).unwrap().rate, 20.0);
+        let none = [mk(10.0, false)];
+        assert!(max_qps_under_slo(&none).is_none());
+    }
+}

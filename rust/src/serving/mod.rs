@@ -1,0 +1,35 @@
+//! Serving at scale: a request-level discrete-event inference serving
+//! simulator — traffic → continuous batcher → KV pages → SLOs.
+//!
+//! The paper positions HyperParallel for training *and inference*, and
+//! its headline inference claim (HyperOffload §3.2: 71K → 123K context
+//! at identical latency) only matters under real serving load. This
+//! subsystem provides that load:
+//!
+//! - [`workload`] — Poisson / bursty (MMPP) / diurnal multi-tenant
+//!   arrival processes with configurable prompt/output distributions;
+//! - [`batcher`] — the continuous batcher in virtual time, sharing its
+//!   admission/refill core ([`plan_refill`]) with the real runtime
+//!   path in `coordinator::server`, costed from `KvCacheConfig`
+//!   bandwidth math;
+//! - [`memory`] — per-sequence KV page accounting over a two-tier
+//!   HBM/DRAM-pool [`PagePool`], with HyperOffload-style demotion and
+//!   recompute-style preemption;
+//! - [`metrics`] — TTFT/TPOT/goodput percentiles, SLO attainment, and
+//!   parallel sweeps locating the max-QPS-under-SLO operating point.
+//!
+//! Everything is deterministic, so CI gates on the sweeps' virtual-time
+//! metrics (`BENCH_serving.json` vs the committed baseline).
+
+pub mod batcher;
+pub mod memory;
+pub mod metrics;
+pub mod workload;
+
+pub use batcher::{plan_refill, simulate, Admission, CostModel, ServingConfig};
+pub use memory::{MemoryPolicy, PagePool, SeqPages, ServingMemory};
+pub use metrics::{
+    max_qps_under_slo, rate_sweep, run_scenario, smoke_device, smoke_scenario, smoke_slo,
+    OperatingPoint, RequestOutcome, Scenario, ServingReport, Slo, SMOKE_RATES,
+};
+pub use workload::{ArrivalProcess, LengthDist, Request, TenantProfile, WorkloadConfig};

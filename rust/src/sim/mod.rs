@@ -21,4 +21,8 @@ pub mod tags {
     pub const BUBBLE: u64 = 5;
     pub const ROLLOUT: u64 = 6;
     pub const UPDATE: u64 = 7;
+    /// Serving: batcher iteration that includes prompt prefill.
+    pub const PREFILL: u64 = 8;
+    /// Serving: decode-only batcher iteration.
+    pub const DECODE: u64 = 9;
 }

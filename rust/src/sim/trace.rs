@@ -8,7 +8,7 @@ use super::engine::{Engine, SimResult};
 use crate::util::json::{Json, JsonObj};
 
 /// Tag names for trace events; index = tag value used in `add_task`.
-pub const TAG_NAMES: [&str; 8] = [
+pub const TAG_NAMES: [&str; 10] = [
     "compute",
     "comm",
     "prefetch",
@@ -17,6 +17,8 @@ pub const TAG_NAMES: [&str; 8] = [
     "bubble",
     "rollout",
     "update",
+    "prefill",
+    "decode",
 ];
 
 /// Human-readable name for a task tag.

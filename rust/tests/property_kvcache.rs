@@ -1,0 +1,234 @@
+//! Property tests for KV page accounting (ISSUE 2 satellite): random
+//! alloc/demote/release sequences against `serving::memory::PagePool`
+//! never leak or double-free pages — per tier, `free + Σ per-sequence
+//! used` always equals capacity — and the single-sequence
+//! `hyperoffload::kvcache::PagedKvCache` keeps its page/budget/swap
+//! invariants under arbitrary append streams.
+
+use hyperparallel::hyperoffload::kvcache::{KvCacheConfig, PagedKvCache};
+use hyperparallel::serving::PagePool;
+use hyperparallel::util::prop::{forall, pair_of, usize_in, vec_of, Check};
+use std::collections::BTreeMap;
+
+/// One random pool operation: (op selector, sequence selector, count).
+type Op = (usize, (usize, usize));
+
+fn ops_gen() -> hyperparallel::util::prop::Gen<Vec<Op>> {
+    vec_of(
+        pair_of(usize_in(0, 2), pair_of(usize_in(0, 5), usize_in(1, 8))),
+        0,
+        120,
+    )
+}
+
+/// Reference model: explicit per-sequence maps plus free counters,
+/// with the documented semantics (all-or-nothing alloc, bounded
+/// demote, idempotent release).
+#[derive(Debug, Default)]
+struct Model {
+    hbm: BTreeMap<u64, usize>,
+    pool: BTreeMap<u64, usize>,
+    hbm_free: usize,
+    pool_free: usize,
+}
+
+impl Model {
+    fn new(hbm: usize, pool: usize) -> Self {
+        Self {
+            hbm_free: hbm,
+            pool_free: pool,
+            ..Default::default()
+        }
+    }
+
+    fn alloc(&mut self, seq: u64, n: usize) -> bool {
+        if n > self.hbm_free {
+            return false;
+        }
+        self.hbm_free -= n;
+        *self.hbm.entry(seq).or_default() += n;
+        true
+    }
+
+    fn demote(&mut self, seq: u64, n: usize) -> usize {
+        let have = self.hbm.get(&seq).copied().unwrap_or(0);
+        let moved = n.min(have).min(self.pool_free);
+        if moved > 0 {
+            *self.hbm.get_mut(&seq).unwrap() -= moved;
+            *self.pool.entry(seq).or_default() += moved;
+            self.hbm_free += moved;
+            self.pool_free -= moved;
+        }
+        moved
+    }
+
+    fn release(&mut self, seq: u64) -> (usize, usize) {
+        let h = self.hbm.remove(&seq).unwrap_or(0);
+        let p = self.pool.remove(&seq).unwrap_or(0);
+        self.hbm_free += h;
+        self.pool_free += p;
+        (h, p)
+    }
+}
+
+const HBM_CAP: usize = 20;
+const POOL_CAP: usize = 12;
+
+#[test]
+fn page_pool_never_leaks_or_double_frees() {
+    forall("pagepool-conservation", 250, ops_gen(), |ops| {
+        let mut pool = PagePool::new(HBM_CAP, POOL_CAP);
+        let mut model = Model::new(HBM_CAP, POOL_CAP);
+        for (step, &(op, (seq, n))) in ops.iter().enumerate() {
+            let seq = seq as u64;
+            match op {
+                0 => {
+                    let got = pool.try_alloc_hbm(seq, n);
+                    let want = model.alloc(seq, n);
+                    if got != want {
+                        return Check::Fail(format!(
+                            "step {step}: alloc({seq}, {n}) = {got}, model says {want}"
+                        ));
+                    }
+                }
+                1 => {
+                    let got = pool.demote(seq, n);
+                    let want = model.demote(seq, n);
+                    if got != want {
+                        return Check::Fail(format!(
+                            "step {step}: demote({seq}, {n}) = {got}, model says {want}"
+                        ));
+                    }
+                }
+                _ => {
+                    let got = pool.release(seq);
+                    let want = model.release(seq);
+                    if (got.hbm, got.pool) != want {
+                        return Check::Fail(format!(
+                            "step {step}: release({seq}) = {got:?}, model says {want:?}"
+                        ));
+                    }
+                }
+            }
+            if let Err(e) = pool.check_conservation() {
+                return Check::Fail(format!("step {step}: {e}"));
+            }
+            if pool.hbm_free() != model.hbm_free || pool.pool_free() != model.pool_free {
+                return Check::Fail(format!(
+                    "step {step}: free counters diverge: ({}, {}) vs ({}, {})",
+                    pool.hbm_free(),
+                    pool.pool_free(),
+                    model.hbm_free,
+                    model.pool_free
+                ));
+            }
+        }
+        // drain everything: a full release cycle restores both tiers
+        for seq in 0..6u64 {
+            pool.release(seq);
+        }
+        if pool.hbm_free() != HBM_CAP || pool.pool_free() != POOL_CAP {
+            return Check::Fail(format!(
+                "leak after full drain: hbm {}/{HBM_CAP}, pool {}/{POOL_CAP}",
+                pool.hbm_free(),
+                pool.pool_free()
+            ));
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn double_release_frees_nothing() {
+    forall(
+        "pagepool-double-free",
+        150,
+        pair_of(usize_in(1, HBM_CAP), usize_in(0, 5)),
+        |&(n, seq)| {
+            let seq = seq as u64;
+            let mut pool = PagePool::new(HBM_CAP, POOL_CAP);
+            assert!(pool.try_alloc_hbm(seq, n));
+            pool.demote(seq, n / 2);
+            let first = pool.release(seq);
+            if first.total() != n {
+                return Check::Fail(format!("first release freed {} of {n}", first.total()));
+            }
+            let second = pool.release(seq);
+            if second.total() != 0 {
+                return Check::Fail(format!(
+                    "double release freed {} pages",
+                    second.total()
+                ));
+            }
+            if pool.hbm_free() != HBM_CAP || pool.pool_free() != POOL_CAP {
+                return Check::Fail("double release corrupted the free counters".into());
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Spec for the single-sequence cache: (hbm token capacity beyond the
+/// weights, offload frac selector, tokens to append).
+type CacheSpec = (usize, (usize, usize));
+
+fn cache_gen() -> hyperparallel::util::prop::Gen<CacheSpec> {
+    pair_of(usize_in(0, 400), pair_of(usize_in(0, 2), usize_in(0, 800)))
+}
+
+#[test]
+fn paged_kvcache_pages_budget_and_swaps_consistent() {
+    forall("kvcache-invariants", 120, cache_gen(), |&(cap_tokens, (frac_sel, appends))| {
+        let cfg = KvCacheConfig {
+            kv_bytes_per_token: 1024,
+            tokens_per_page: 16,
+            weight_bytes: 1 << 20,
+            hbm_usable: (1 << 20) + cap_tokens as u64 * 1024,
+            hbm_bw: 1e12,
+            pool_bw: 100e9,
+            attn_tokens_per_s: 40e6,
+        };
+        let frac = [0.0, 0.25, 0.5][frac_sel];
+        let budget = cfg.kv_token_capacity(frac) / cfg.tokens_per_page;
+        let mut cache = PagedKvCache::new(cfg.clone(), frac);
+        if cache.hbm_page_budget() != budget {
+            return Check::Fail("budget mismatch with planner math".into());
+        }
+        for step in 1..=appends {
+            cache.append_token();
+            if cache.tokens() != step {
+                return Check::Fail(format!("token count {} != {step}", cache.tokens()));
+            }
+            let want_pages = step.div_ceil(cfg.tokens_per_page);
+            if cache.pages() != want_pages {
+                return Check::Fail(format!(
+                    "pages {} != ceil({step}/{}) = {want_pages}",
+                    cache.pages(),
+                    cfg.tokens_per_page
+                ));
+            }
+            // the HBM residency never exceeds the budget (one page of
+            // slack when the budget is zero: the hot tail stays HBM)
+            if cache.hbm_pages() > budget.max(1) {
+                return Check::Fail(format!(
+                    "hbm pages {} exceed budget {budget}",
+                    cache.hbm_pages()
+                ));
+            }
+            // conservation: every page is in exactly one tier, and the
+            // swap counter accounts for every pool-resident page
+            let pool_pages = cache.pages() - cache.hbm_pages();
+            if cache.pages_swapped_out != pool_pages as u64 {
+                return Check::Fail(format!(
+                    "swap counter {} != pool pages {pool_pages}",
+                    cache.pages_swapped_out
+                ));
+            }
+            let (hbm_bytes, pool_bytes) = cache.bytes_by_home();
+            if hbm_bytes + pool_bytes != cache.pages() as u64 * cfg.page_bytes() {
+                return Check::Fail("bytes_by_home loses pages".into());
+            }
+        }
+        Check::Pass
+    });
+}

@@ -1,0 +1,239 @@
+//! Offline compile-time stub of the `xla` crate.
+//!
+//! Mirrors the slice of xla-rs that `runtime::pjrt` touches:
+//! [`PjRtClient`], [`PjRtLoadedExecutable`], [`PjRtBuffer`],
+//! [`Literal`], [`HloModuleProto`], and [`XlaComputation`]. Literals
+//! are real host arrays (so `Literal::vec1 → reshape → to_vec`
+//! round-trips work and the runtime's marshalling tests pass under
+//! `--features pjrt`); everything that would need a real PJRT client
+//! errors with a clear "unavailable offline" message. Types that can
+//! only be produced *by* a client carry an uninhabited field, so their
+//! methods are statically unreachable — the stub cannot silently
+//! pretend to execute.
+
+use std::fmt;
+
+/// Rendered error, formatted like xla-rs errors are consumed (`{e:?}`).
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: xla stub (offline build) — wire the real `xla` crate to execute artifacts"
+        ))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Statically uninhabited: values of client-produced types cannot
+/// exist in the stub, making their methods unreachable by construction.
+#[derive(Debug, Clone, Copy)]
+enum Never {}
+
+/// Typed literal payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types the stub marshals (mirrors xla-rs native types).
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::F32(_) => None,
+        }
+    }
+}
+
+/// Host literal: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            shape: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    pub fn elements(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret under a new shape with the same element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if dims.iter().any(|&d| d < 0) || n as usize != self.elements() {
+            return Err(Error(format!(
+                "reshape: {dims:?} does not hold {} elements",
+                self.elements()
+            )));
+        }
+        Ok(Literal {
+            shape: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Extract typed host data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Flatten a tuple literal. Tuple literals only come out of
+    /// execution, which the stub cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module — only producible by parsing, which needs xla.
+pub struct HloModuleProto(Never);
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<std::path::Path>) -> Result<Self, Error> {
+        Err(Error(format!(
+            "HloModuleProto::from_text_file({}): xla stub (offline build)",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation(Never);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.0 {}
+    }
+}
+
+/// Device buffer — only producible by a client.
+pub struct PjRtBuffer(Never);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        match self.0 {}
+    }
+}
+
+/// Compiled executable — only producible by a client.
+pub struct PjRtLoadedExecutable(Never);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        match self.0 {}
+    }
+
+    pub fn execute_b<B>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        match self.0 {}
+    }
+}
+
+/// PJRT client. `cpu()` always fails offline, so every downstream
+/// method is unreachable.
+pub struct PjRtClient(Never);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        match self.0 {}
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        match self.0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let lit = Literal::vec1(&data).reshape(&[3, 4]).unwrap();
+        assert_eq!(lit.shape(), &[3, 4]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_rejects_wrong_count() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+        assert!(lit.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn client_is_unavailable_offline() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err:?}").contains("offline"));
+    }
+
+    #[test]
+    fn hlo_parse_is_unavailable_offline() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a smoke-bench JSON against the
+committed baseline and fail when a gated metric regresses more than
+its allowed fraction (default 15%).
+
+The gate compares the *deterministic virtual-time metrics* emitted by
+`cargo bench --bench bench_serving` (the `"metrics"` object in
+BENCH_serving.json): max QPS under SLO, offload gains, p99 TTFT. The
+serving simulator is deterministic, so these values are bit-identical
+on every machine — unlike the wall-clock `"benches"` array, which is
+archived for the perf trajectory but deliberately not gated (shared CI
+runners are far noisier than any 15% threshold).
+
+Baseline schema (BENCH_baseline.json):
+
+    {
+      "metrics": {
+        "<name>": {
+          "value": <number>,            # the guaranteed-good level
+          "direction": "higher"|"lower",# which way is better
+          "max_regression_frac": 0.15   # optional, default --default-frac
+        }
+      }
+    }
+
+A "higher" metric fails below value*(1-frac); a "lower" metric fails
+above value*(1+frac). Baseline values are set at (or below) the bounds
+`rust/tests/serving_scenarios.rs` asserts on the same presets and
+seed, so a green test suite implies a green gate; the gate's job is to
+catch silent erosion of the serving operating point between PRs.
+
+Usage:
+    python3 tools/bench_regression.py \
+        --current BENCH_serving.json --baseline BENCH_baseline.json
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        sys.exit(f"bench_regression: cannot read {path}: {exc}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="bench output JSON (with a 'metrics' object)")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument(
+        "--default-frac",
+        type=float,
+        default=0.15,
+        help="allowed regression fraction when the baseline entry has none",
+    )
+    args = ap.parse_args()
+
+    current = load(args.current).get("metrics", {})
+    baseline = load(args.baseline).get("metrics", {})
+    if not baseline:
+        sys.exit(f"bench_regression: {args.baseline} has no gated metrics")
+
+    failures = []
+    width = max(len(name) for name in baseline)
+    print(f"{'metric':<{width}}  {'baseline':>12}  {'current':>12}  {'threshold':>12}  verdict")
+    for name, spec in sorted(baseline.items()):
+        want = float(spec["value"])
+        direction = spec.get("direction", "higher")
+        frac = float(spec.get("max_regression_frac", args.default_frac))
+        got = current.get(name)
+        if got is None:
+            print(f"{name:<{width}}  {want:>12.4g}  {'missing':>12}  {'-':>12}  FAIL")
+            failures.append(f"{name}: missing from {args.current}")
+            continue
+        got = float(got)
+        if direction == "higher":
+            threshold = want * (1.0 - frac)
+            ok = got >= threshold
+        elif direction == "lower":
+            threshold = want * (1.0 + frac)
+            ok = got <= threshold
+        else:
+            print(f"{name:<{width}}  {want:>12.4g}  {got:>12.4g}  {'-':>12}  FAIL")
+            failures.append(f"{name}: bad direction '{direction}'")
+            continue
+        verdict = "ok" if ok else "FAIL"
+        print(f"{name:<{width}}  {want:>12.4g}  {got:>12.4g}  {threshold:>12.4g}  {verdict}")
+        if not ok:
+            failures.append(
+                f"{name}: {got:.6g} regresses past {threshold:.6g} "
+                f"({direction} is better, baseline {want:.6g}, frac {frac})"
+            )
+
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed >"
+              f" allowed fraction vs {args.baseline}:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall {len(baseline)} gated metrics within bounds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+#!/usr/bin/env python3
+"""Faithful Python mirror of rust/src/serving (same RNG, same event
+loop, same cost model) to validate the deterministic operating points
+the scenario tests and the bench-regression baseline rely on — usable
+in build containers that ship no Rust toolchain (see
+.claude/skills/verify/SKILL.md). Keep in sync with
+rust/src/serving/{workload,memory,batcher}.rs when semantics change."""
+import math
+from collections import deque
+
+M64 = (1 << 64) - 1
+
+class Rng:
+    def __init__(self, seed):
+        # SplitMix64 expansion
+        s = seed & M64
+        self.s = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & M64
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            self.s.append(z ^ (z >> 31))
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & M64
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        x = self.next_u64()
+        m = x * n
+        l = m & M64
+        if l < n:
+            t = (M64 + 1 - n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & M64
+        return m >> 64
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo)
+
+    def normal(self):
+        u1 = max(self.next_f64(), 1e-300)
+        u2 = self.next_f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(math.tau * u2)
+
+    def lognormal(self, mu, sigma):
+        return math.exp(mu + sigma * self.normal())
+
+    def exponential(self, lam):
+        return -math.log(max(self.next_f64(), 1e-300)) / lam
+
+
+# ---- workload --------------------------------------------------------
+def sample_lognormal_len(rng, mu, sigma, cap):
+    v = int(round(rng.lognormal(mu, sigma)))  # Rust .round() rounds half away from zero; sizes never land on .5 risk is negligible
+    return max(1, min(v, cap))
+
+def gen_poisson(rate, horizon, seed, mu, sigma, cap, out_lo, out_hi):
+    rng = Rng(seed)
+    ts = []
+    if rate > 0:
+        t = rng.exponential(rate)
+        while t < horizon:
+            ts.append(t)
+            t += rng.exponential(rate)
+    reqs = []
+    for i, t in enumerate(ts):
+        p = sample_lognormal_len(rng, mu, sigma, cap)
+        o = rng.range(max(1, out_lo), max(out_hi, max(1, out_lo)) + 1)
+        reqs.append(dict(id=i, arrival=t, prompt=p, output=max(1, o)))
+    return reqs
+
+
+# ---- memory ----------------------------------------------------------
+class PagePool:
+    def __init__(self, hbm_cap, pool_cap):
+        self.hbm_cap, self.pool_cap = hbm_cap, pool_cap
+        self.hbm_free, self.pool_free = hbm_cap, pool_cap
+        self.ledger = {}  # id -> [hbm, pool]
+        self.demotions = 0
+
+    def seq(self, sid):
+        return self.ledger.get(sid, [0, 0])
+
+    def try_alloc(self, sid, n):
+        if n > self.hbm_free:
+            return False
+        self.hbm_free -= n
+        e = self.ledger.setdefault(sid, [0, 0])
+        e[0] += n
+        return True
+
+    def demote(self, sid, n):
+        e = self.ledger.get(sid)
+        if not e:
+            return 0
+        moved = min(n, e[0], self.pool_free)
+        e[0] -= moved
+        e[1] += moved
+        self.hbm_free += moved
+        self.pool_free -= moved
+        self.demotions += moved
+        return moved
+
+    def release(self, sid):
+        e = self.ledger.pop(sid, [0, 0])
+        self.hbm_free += e[0]
+        self.pool_free += e[1]
+        return e
+
+
+class Mem:
+    def __init__(self, kv, frac, pool_offload, pool_pages):
+        resident = int(kv['weight_bytes'] * (1.0 - frac))
+        cap_tokens = (kv['hbm_usable'] - min(resident, kv['hbm_usable'])) // kv['kv_bytes']
+        hbm_pages = cap_tokens // kv['tpp']
+        self.pool = PagePool(hbm_pages, pool_pages if pool_offload else 0)
+        self.pool_offload = pool_offload
+        self.tpp = kv['tpp']
+
+    def pages_for(self, tokens):
+        return max(-(-tokens // self.tpp), 1)
+
+    def ensure_free(self, need, order):
+        if self.pool.hbm_free >= need:
+            return True
+        if not self.pool_offload:
+            return False
+        for sid in order:
+            want = need - self.pool.hbm_free
+            if want == 0:
+                break
+            self.pool.demote(sid, want)
+            if self.pool.hbm_free >= need:
+                return True
+        return self.pool.hbm_free >= need
+
+
+# ---- simulator -------------------------------------------------------
+def iteration_latency(kv, frac, prefill_tps, overhead, hbm_ctx, pool_ctx, prefill):
+    w = float(kv['weight_bytes'])
+    kvb = float(kv['kv_bytes'])
+    hbm_side = ((1.0 - frac) * w + hbm_ctx * kvb) / kv['hbm_bw'] \
+        + (hbm_ctx + pool_ctx) / kv['attn_tps'] + prefill / prefill_tps
+    pool_side = (frac * w + pool_ctx * kvb) / kv['pool_bw']
+    return overhead + max(hbm_side, pool_side)
+
+
+class Replica:
+    def __init__(self, cfg):
+        self.mem = Mem(cfg['kv'], cfg['frac'], cfg['pool_offload'], cfg['pool_pages'])
+        self.queue = deque()  # (req, preemptions, first_token)
+        self.active = [None] * cfg['slots']  # dict or None
+        self.iter_end = None
+        self.cur_ctx = 0
+
+    def active_count(self):
+        return sum(1 for s in self.active if s)
+
+    def load(self):
+        return self.active_count() + len(self.queue)
+
+    def cold_order(self):
+        v = [(s['admitted'], s['req']['id']) for s in self.active if s]
+        v.sort()
+        return [i for _, i in v]
+
+    def youngest(self):
+        best = None
+        for i, s in enumerate(self.active):
+            if s:
+                key = (s['admitted'], i)
+                if best is None or key > best:
+                    best = key
+        return best[1] if best else None
+
+
+def simulate(cfg, reqs):
+    fleet = [Replica(cfg) for _ in range(cfg['fleet'])]
+    stats = dict(outcomes=[], rejected=0, preempt=0, decoded=0, intervals=[], makespan=0.0)
+    peak_ctx = 0
+    ni = 0
+
+    def preempt(rep, slot):
+        s = rep.active[slot]
+        rep.active[slot] = None
+        rep.mem.pool.release(s['req']['id'])
+        stats['preempt'] += 1
+        p = s['preempt'] + 1
+        if p > cfg['max_preemptions']:
+            stats['rejected'] += 1
+            return
+        rep.queue.appendleft((s['req'], p, s['first']))
+
+    def grow(rep):
+        i = 0
+        while i < len(rep.active):
+            s = rep.active[i]
+            if not s:
+                i += 1
+                continue
+            sid = s['req']['id']
+            need = rep.mem.pages_for(s['prompt'] + s['produced'])
+            have = sum(rep.mem.pool.seq(sid))
+            if need <= have:
+                i += 1
+                continue
+            delta = need - have
+            if rep.mem.ensure_free(delta, rep.cold_order()) and rep.mem.pool.try_alloc(sid, delta):
+                i += 1
+                continue
+            preempt(rep, rep.youngest())
+
+    def start_iter(rep, ridx, t):
+        grow(rep)
+        total_prefill = 0
+        while True:
+            lens = [q[0]['prompt'] for q in rep.queue]
+            qids = [q[0]['id'] for q in rep.queue]
+            cold = rep.cold_order()
+            plan = []
+            qi = 0
+            for slot, s in enumerate(rep.active):
+                if s:
+                    continue
+                if qi >= len(lens):
+                    break
+                plen = min(lens[qi], cfg['max_seq'] - 1)
+                pages = rep.mem.pages_for(plen)
+                if pages > rep.mem.pool.hbm_cap or not (
+                        rep.mem.ensure_free(pages, cold) and rep.mem.pool.try_alloc(qids[qi], pages)):
+                    break
+                plan.append((slot, qi, plen))
+                qi += 1
+            for slot, _, plen in plan:
+                req, p, first = rep.queue.popleft()
+                total_prefill += plen
+                rep.active[slot] = dict(req=req, prompt=plen, produced=0, admitted=t,
+                                        first=first, preempt=p)
+            if plan or rep.active_count() > 0:
+                break
+            if rep.queue:
+                rep.queue.popleft()
+                stats['rejected'] += 1
+            else:
+                break
+        hbm_ctx = pool_ctx = 0
+        for s in rep.active:
+            if not s:
+                continue
+            ctx = s['prompt'] + s['produced']
+            in_pool = min(rep.mem.pool.seq(s['req']['id'])[1] * rep.mem.tpp, ctx)
+            pool_ctx += in_pool
+            hbm_ctx += ctx - in_pool
+        rep.cur_ctx = hbm_ctx + pool_ctx
+        if rep.active_count() == 0:
+            return
+        dt = iteration_latency(cfg['kv'], cfg['frac'], cfg['prefill_tps'], cfg['overhead'],
+                               hbm_ctx, pool_ctx, total_prefill)
+        rep.iter_end = t + dt
+        stats['makespan'] = max(stats['makespan'], t + dt)
+
+    def finish_iter(rep, t):
+        rep.iter_end = None
+        for i, s in enumerate(rep.active):
+            if not s:
+                continue
+            s['produced'] += 1
+            stats['decoded'] += 1
+            if s['first'] is None:
+                s['first'] = t
+            target = min(s['req']['output'], cfg['max_seq'] - s['prompt'])
+            if s['produced'] >= target or s['prompt'] + s['produced'] >= cfg['max_seq']:
+                stats['outcomes'].append(dict(
+                    id=s['req']['id'], arrival=s['req']['arrival'], first=s['first'],
+                    finish=t, output=s['produced'], preempt=s['preempt']))
+                rep.mem.pool.release(s['req']['id'])
+                rep.active[i] = None
+
+    while True:
+        ta = reqs[ni]['arrival'] if ni < len(reqs) else None
+        te = None
+        for i, rep in enumerate(fleet):
+            if rep.iter_end is not None and (te is None or (rep.iter_end, i) < te):
+                te = (rep.iter_end, i)
+        if ta is None and te is None:
+            break
+        if ta is not None and (te is None or ta <= te[0]):
+            req = reqs[ni]
+            ni += 1
+            tgt = min(range(len(fleet)), key=lambda i: (fleet[i].load(), i))
+            fleet[tgt].queue.append((req, 0, None))
+            if fleet[tgt].iter_end is None:
+                start_iter(fleet[tgt], tgt, req['arrival'])
+        else:
+            t, i = te
+            finish_iter(fleet[i], t)
+            start_iter(fleet[i], i, t)
+        total = sum(r.cur_ctx for r in fleet)
+        peak_ctx = max(peak_ctx, total)
+
+    demotions = sum(r.mem.pool.demotions for r in fleet)
+    return dict(stats=stats, peak_ctx=peak_ctx, demotions=demotions)
+
+
+def pct(xs, p):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    rank = p / 100.0 * (len(xs) - 1)
+    lo, hi = int(math.floor(rank)), int(math.ceil(rank))
+    if lo == hi:
+        return xs[lo]
+    w = rank - lo
+    return xs[lo] * (1 - w) + xs[hi] * w
+
+
+def run_point(rate, frac, fleet=2):
+    kv = dict(kv_bytes=131072, tpp=64, weight_bytes=8 * (1 << 30),
+              hbm_usable=8 * (1 << 30) + 4096 * 131072,
+              hbm_bw=1.6e12, pool_bw=392e9, attn_tps=40e6)
+    cfg = dict(kv=kv, frac=frac, pool_offload=frac > 0.0, fleet=fleet, slots=16,
+               max_seq=2048, pool_pages=4096, max_preemptions=4,
+               prefill_tps=100e3, overhead=100e-6)
+    reqs = gen_poisson(rate, 8.0, 42, 6.2, 0.35, 1200, 24, 40)
+    r = simulate(cfg, reqs)
+    st = r['stats']
+    outs = st['outcomes']
+    ttft = [o['first'] - o['arrival'] for o in outs]
+    tpot = [(o['finish'] - o['first']) / (o['output'] - 1) if o['output'] > 1 else 0.0 for o in outs]
+    p99t, p99p = pct(ttft, 99.0), pct(tpot, 99.0)
+    attains = bool(outs) and st['rejected'] == 0 and p99t <= 0.3 and p99p <= 0.015
+    return dict(rate=rate, n=len(reqs), done=len(outs), rej=st['rejected'],
+                preempt=st['preempt'], demote=r['demotions'], peak=r['peak_ctx'],
+                p50t=pct(ttft, 50.0), p99t=p99t, p99p=p99p, attains=attains,
+                makespan=st['makespan'])
+
+
+if __name__ == '__main__':
+    rates = [15.0, 30.0, 45.0, 60.0, 75.0, 90.0, 105.0, 120.0]
+    for frac, name in [(0.0, 'no-offload'), (0.2, 'pool-offload')]:
+        best = None
+        for rate in rates:
+            p = run_point(rate, frac)
+            print(f"{name:<12} rate {rate:5.0f}  n {p['n']:4d} done {p['done']:4d} rej {p['rej']:3d} "
+                  f"pre {p['preempt']:4d} dem {p['demote']:4d} peak {p['peak']:6d} "
+                  f"p50ttft {p['p50t']*1e3:8.1f}ms p99ttft {p['p99t']*1e3:9.1f}ms "
+                  f"p99tpot {p['p99p']*1e3:7.2f}ms slo {'Y' if p['attains'] else 'n'}")
+            if p['attains']:
+                best = p
+        print(f"==> {name} max-QPS-under-SLO: {best['rate'] if best else None}, peak ctx {best['peak'] if best else '-'}\n")
