@@ -20,8 +20,8 @@
 //! gated metric sweep always runs the full fixed grid.
 
 use hyperparallel::serving::{
-    max_qps_under_slo, rate_sweep, run_scenario, smoke_scenario, smoke_slo, ArrivalProcess,
-    OperatingPoint, SMOKE_RATES,
+    crossover_comparison, max_qps_under_slo, rate_sweep, run_scenario, smoke_scenario, smoke_slo,
+    ArrivalProcess, OperatingPoint, SMOKE_RATES,
 };
 use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
 use hyperparallel::util::json::{Json, JsonObj};
@@ -114,6 +114,41 @@ fn main() {
     metrics.insert(
         "serving.pool_offload.peak_context_tokens",
         Json::from(off_op.peak_context_tokens),
+    );
+
+    section("cluster crossover (virtual time — deterministic, CI-gated)");
+    let x = crossover_comparison();
+    println!(
+        "  supernode: disaggregated {:.0} vs colocated {:.0} req/s ({:.2}x)",
+        x.disagg_supernode.rate,
+        x.colocated_supernode.rate,
+        x.supernode_disagg_gain()
+    );
+    println!(
+        "  legacy:    disaggregated {:.0} vs colocated {:.0} req/s (colocated {:.2}x ahead)",
+        x.disagg_legacy.rate,
+        x.colocated_legacy.rate,
+        x.legacy_colocated_gain()
+    );
+    metrics.insert(
+        "serving.cluster.colocated.max_qps_under_slo",
+        Json::from(x.colocated_supernode.rate),
+    );
+    metrics.insert(
+        "serving.cluster.supernode_disagg.max_qps_under_slo",
+        Json::from(x.disagg_supernode.rate),
+    );
+    metrics.insert(
+        "serving.cluster.legacy_disagg.max_qps_under_slo",
+        Json::from(x.disagg_legacy.rate),
+    );
+    metrics.insert(
+        "serving.cluster.supernode.disagg_qps_gain",
+        Json::from(x.supernode_disagg_gain()),
+    );
+    metrics.insert(
+        "serving.cluster.legacy.colocated_qps_gain",
+        Json::from(x.legacy_colocated_gain()),
     );
 
     // Combined artifact: wall-clock benches + gated virtual-time

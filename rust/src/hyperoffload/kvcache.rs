@@ -30,6 +30,19 @@ pub struct KvCacheConfig {
     pub attn_tokens_per_s: f64,
 }
 
+/// Clamp an offload fraction into [0, 1]. Non-finite values (a NaN
+/// from an upstream 0/0) degrade to 0.0 — the conservative "nothing
+/// offloaded" reading. Without this, `(w * (1.0 - NaN)) as u64`
+/// saturates to 0 and a NaN fraction silently reports the *full*
+/// f=1.0 capacity — over-promising KV space instead of refusing it.
+fn sane_frac(f: f64) -> f64 {
+    if f.is_finite() {
+        f.clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
 impl KvCacheConfig {
     /// Llama-8B-class decode on an Ascend-910C-class device, calibrated
     /// so the *baseline* (no offload) operating point is the paper's
@@ -53,21 +66,35 @@ impl KvCacheConfig {
         self.kv_bytes_per_token * self.tokens_per_page as u64
     }
 
-    /// KV capacity (tokens) when a fraction `f` of weights is offloaded.
+    /// KV capacity (tokens) when a fraction `f` of weights is
+    /// offloaded. Degenerate inputs are guarded: the fraction is
+    /// clamped into [0, 1] (NaN → 0), and a zero `kv_bytes_per_token`
+    /// counts as 1 instead of dividing by zero.
     pub fn kv_token_capacity(&self, offload_frac: f64) -> usize {
-        let resident_w = (self.weight_bytes as f64 * (1.0 - offload_frac)) as u64;
-        ((self.hbm_usable - resident_w.min(self.hbm_usable)) / self.kv_bytes_per_token) as usize
+        let f = sane_frac(offload_frac);
+        let resident_w = (self.weight_bytes as f64 * (1.0 - f)) as u64;
+        ((self.hbm_usable - resident_w.min(self.hbm_usable)) / self.kv_bytes_per_token.max(1))
+            as usize
     }
 
     /// Decode-step latency at context `n` with weight fraction `f`
     /// offloaded: max of the HBM pipeline (resident weights + all KV +
-    /// compute) and the pool pipeline (streamed weights), which overlap.
+    /// compute) and the pool pipeline (streamed weights), which
+    /// overlap. The fraction is clamped like [`Self::kv_token_capacity`],
+    /// and a pool pipeline with nothing to stream costs exactly zero
+    /// (no 0/0 when `pool_bw` is irrelevant and unset).
     pub fn decode_latency(&self, n: usize, offload_frac: f64) -> f64 {
+        let f = sane_frac(offload_frac);
         let w = self.weight_bytes as f64;
         let kv = n as f64 * self.kv_bytes_per_token as f64;
-        let hbm_side = ((1.0 - offload_frac) * w + kv) / self.hbm_bw
-            + n as f64 / self.attn_tokens_per_s;
-        let pool_side = offload_frac * w / self.pool_bw;
+        let hbm_side =
+            ((1.0 - f) * w + kv) / self.hbm_bw + n as f64 / self.attn_tokens_per_s;
+        let pool_bytes = f * w;
+        let pool_side = if pool_bytes == 0.0 {
+            0.0
+        } else {
+            pool_bytes / self.pool_bw
+        };
         hbm_side.max(pool_side)
     }
 }
@@ -151,6 +178,11 @@ pub struct PagedKvCache {
 
 impl PagedKvCache {
     pub fn new(cfg: KvCacheConfig, offload_frac: f64) -> Self {
+        // a degenerate zero tokens-per-page would divide by zero in
+        // every page computation; one token per page is the smallest
+        // meaningful granularity
+        let mut cfg = cfg;
+        cfg.tokens_per_page = cfg.tokens_per_page.max(1);
         let budget = cfg.kv_token_capacity(offload_frac) / cfg.tokens_per_page;
         Self {
             cfg,
@@ -245,6 +277,78 @@ mod tests {
         assert!(cfg.decode_latency(50_000, 0.0) < cfg.decode_latency(100_000, 0.0));
         // offloading weights reduces the HBM side at fixed n
         assert!(cfg.decode_latency(71_000, 0.3) <= cfg.decode_latency(71_000, 0.0));
+    }
+
+    #[test]
+    fn degenerate_offload_fracs_are_clamped() {
+        let cfg = KvCacheConfig::llama8b_910c();
+        // regression: a NaN fraction used to saturate the cast and
+        // report the f=1.0 capacity — the most optimistic answer for
+        // the most broken input
+        assert_eq!(cfg.kv_token_capacity(f64::NAN), cfg.kv_token_capacity(0.0));
+        assert_eq!(
+            cfg.kv_token_capacity(f64::INFINITY),
+            cfg.kv_token_capacity(0.0)
+        );
+        assert_eq!(cfg.kv_token_capacity(-0.5), cfg.kv_token_capacity(0.0));
+        assert_eq!(cfg.kv_token_capacity(1.5), cfg.kv_token_capacity(1.0));
+        // the exact endpoints stay exact
+        assert_eq!(
+            cfg.kv_token_capacity(1.0),
+            (cfg.hbm_usable / cfg.kv_bytes_per_token) as usize
+        );
+        assert!(cfg.decode_latency(1000, f64::NAN).is_finite());
+        assert!(cfg.decode_latency(1000, 0.0).is_finite());
+        assert!(cfg.decode_latency(1000, 1.0).is_finite());
+        assert_eq!(
+            cfg.decode_latency(1000, f64::NAN).to_bits(),
+            cfg.decode_latency(1000, 0.0).to_bits()
+        );
+    }
+
+    #[test]
+    fn zero_pool_bandwidth_is_fine_without_offload() {
+        let mut cfg = KvCacheConfig::llama8b_910c();
+        cfg.pool_bw = 0.0;
+        // nothing streams from the pool at f=0, so the pool pipeline
+        // costs exactly zero instead of 0/0
+        assert!(cfg.decode_latency(10_000, 0.0).is_finite());
+    }
+
+    #[test]
+    fn zero_tokens_per_page_does_not_divide_by_zero() {
+        // regression: PagedKvCache::new / append_token divided by the
+        // raw tokens_per_page and panicked on 0
+        let mut cfg = KvCacheConfig::llama8b_910c();
+        cfg.tokens_per_page = 0;
+        let mut c = PagedKvCache::new(cfg, 0.0);
+        for _ in 0..10 {
+            c.append_token();
+        }
+        assert_eq!(c.tokens(), 10);
+        assert_eq!(c.pages(), 10, "zero clamps to one token per page");
+    }
+
+    #[test]
+    fn zero_capacity_config_reports_zero_not_panic() {
+        // weights alone overflow the usable HBM: capacity is 0 at f=0
+        let cfg = KvCacheConfig {
+            kv_bytes_per_token: 1024,
+            tokens_per_page: 16,
+            weight_bytes: 1 << 22,
+            hbm_usable: 1 << 20,
+            hbm_bw: 1e12,
+            pool_bw: 100e9,
+            attn_tokens_per_s: 40e6,
+        };
+        assert_eq!(cfg.kv_token_capacity(0.0), 0);
+        let mut c = PagedKvCache::new(cfg, 0.0);
+        assert_eq!(c.hbm_page_budget(), 0);
+        // appending still works: the hot tail keeps its one-page slack
+        for _ in 0..40 {
+            c.append_token();
+        }
+        assert_eq!(c.hbm_pages(), 1);
     }
 
     #[test]

@@ -124,7 +124,10 @@ impl CostModel {
 
     /// Latency of one iteration over a batch holding `hbm_ctx_tokens`
     /// KV entries in HBM and `pool_ctx_tokens` in the DRAM pool, with
-    /// `prefill_tokens` of newly admitted prompt work.
+    /// `prefill_tokens` of newly admitted prompt work. A pool pipeline
+    /// with nothing to stream costs exactly zero — the degenerate
+    /// `offload_frac == 0` configuration stays finite even when
+    /// `pool_bw` is irrelevant and left at zero.
     pub fn iteration_latency(
         &self,
         hbm_ctx_tokens: usize,
@@ -137,8 +140,12 @@ impl CostModel {
             / self.kv.hbm_bw
             + (hbm_ctx_tokens + pool_ctx_tokens) as f64 / self.kv.attn_tokens_per_s
             + prefill_tokens as f64 / self.prefill_tokens_per_s;
-        let pool_side =
-            (self.offload_frac * w + pool_ctx_tokens as f64 * kvb) / self.kv.pool_bw;
+        let pool_bytes = self.offload_frac * w + pool_ctx_tokens as f64 * kvb;
+        let pool_side = if pool_bytes == 0.0 {
+            0.0
+        } else {
+            pool_bytes / self.kv.pool_bw
+        };
         self.iteration_overhead + hbm_side.max(pool_side)
     }
 }
@@ -655,6 +662,45 @@ mod tests {
             rep.outcomes.len() >= no.outcomes.len(),
             "offload must not complete fewer requests"
         );
+    }
+
+    #[test]
+    fn degenerate_cost_model_endpoints_stay_finite() {
+        let kv = tiny_kv(16);
+        for frac in [0.0, 1.0] {
+            let cm = CostModel::new(kv.clone(), frac);
+            for (h, p, f) in [(0, 0, 0), (100, 0, 32), (0, 50, 0), (64, 64, 64)] {
+                let lat = cm.iteration_latency(h, p, f);
+                assert!(lat.is_finite() && lat > 0.0, "frac={frac} lat={lat}");
+            }
+        }
+        // pool_bw = 0 with no pool traffic: finite, not 0/0 = NaN
+        let mut kv0 = tiny_kv(16);
+        kv0.pool_bw = 0.0;
+        let cm = CostModel::new(kv0, 0.0);
+        assert!(cm.iteration_latency(64, 0, 8).is_finite());
+    }
+
+    #[test]
+    fn zero_capacity_config_rejects_everything_and_terminates() {
+        // weights alone overflow the usable HBM: kv_token_capacity is
+        // 0, the page pool is empty, and every prompt is rejected up
+        // front — the admission loop must not spin
+        let kv = KvCacheConfig {
+            kv_bytes_per_token: 1024,
+            tokens_per_page: 16,
+            weight_bytes: 1 << 22,
+            hbm_usable: 1 << 20,
+            hbm_bw: 1e12,
+            pool_bw: 100e9,
+            attn_tokens_per_s: 40e6,
+        };
+        assert_eq!(kv.kv_token_capacity(0.0), 0);
+        let c = cfg(kv, 0.0, MemoryPolicy::NoOffload, 4);
+        let reqs = fixed_requests(10, 32, 4, 0.01);
+        let rep = simulate(&c, &reqs);
+        assert_eq!(rep.rejected, 10);
+        assert!(rep.outcomes.is_empty());
     }
 
     #[test]

@@ -1,0 +1,1214 @@
+//! Topology-routed multi-instance serving with prefill/decode
+//! disaggregation.
+//!
+//! PR 2's batcher simulates one isolated instance; this module scales
+//! it to a cluster whose *shape* the fabric decides — the paper's
+//! claim at serving level. N batcher instances are placed on
+//! [`Topology`] devices, a front-end [`Router`] assigns arrivals under
+//! a pluggable [`RoutePolicy`], and the cluster runs in one of two
+//! modes:
+//!
+//! - **Colocated** — every instance is a full continuous batcher
+//!   (prefill + decode interleaved), the classic deployment. Long
+//!   prompts stall decode: the iteration that admits a prompt pays
+//!   its prefill inline, so every in-flight sequence on that instance
+//!   sees the stall in its TPOT.
+//! - **Disaggregated** — a prefill pool and a decode pool
+//!   (DistServe/Splitwise-style). Prefill instances emit the first
+//!   token, then the sequence's KV pages migrate to a decode instance
+//!   chosen by least-outstanding-KV. The migration is costed from
+//!   [`collectives::cost`] (`CollectiveKind::P2p`) over the *actual*
+//!   fabric tier between the two devices — `LinkSpec::transfer_time`
+//!   on the bottleneck link — and the pages land in the destination's
+//!   two-tier `PagePool`. The transfer is staged through the decode
+//!   engine (a `kv_xfer` interval on its resource): on a legacy
+//!   RoCE-class fabric the copy steals decode iterations, on the
+//!   supernode's pooled-memory UB fabric it is near-free. That single
+//!   term decides which architecture wins — exactly the knob the
+//!   paper says the supernode flips.
+//!
+//! ## Page custody during migration
+//!
+//! A migrating sequence's pages stay **parked** in the prefill
+//! instance's pool until the decode instance admits it (allocates its
+//! pages there); only then does the source release. Parked pages are
+//! real backpressure: a clogged decode pool keeps prefill pools full,
+//! which stalls prefill admission instead of silently dropping
+//! requests. No page is ever freed twice or leaked across the move —
+//! `rust/tests/property_kvcache.rs` model-checks the invariant and
+//! [`simulate_cluster`] asserts every pool drains at the end of a run.
+//!
+//! ## Reuse
+//!
+//! Admission goes through the shared [`plan_refill`] core, iteration
+//! latency through the shared [`CostModel`], and per-instance busy
+//! intervals (prefill / decode / `kv_xfer`) compose into one indexed
+//! `SimResult`, so the whole cluster report answers every fleet-wide
+//! question (TTFT/TPOT/goodput percentiles, utilization, windowed
+//! busy) through the standard `ServingReport` machinery, and
+//! [`cluster_rate_sweep`] fans the max-QPS-under-SLO search across
+//! `sim::sweep` workers.
+
+use crate::collectives;
+use crate::graph::CollectiveKind;
+use crate::hyperoffload::kvcache::KvCacheConfig;
+use crate::serving::batcher::{plan_refill, CostModel};
+use crate::serving::memory::{MemoryPolicy, ServingMemory};
+use crate::serving::metrics::{
+    max_qps_under_slo, OperatingPoint, RequestOutcome, ServingReport, Slo,
+};
+use crate::serving::router::{CandidateLoad, RoutePolicy, Router};
+use crate::serving::workload::{ArrivalProcess, LengthDist, Request, WorkloadConfig};
+use crate::sim::{parallel_map, tags, Interval, ResourceId, SimResult, TaskId};
+use crate::supernode::{DeviceId, Topology};
+use std::collections::{BTreeSet, VecDeque};
+
+/// What one placed instance does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceRole {
+    /// Full continuous batcher: prefill + decode interleaved.
+    Colocated,
+    /// Prefill pool member: admits prompts, emits the first token,
+    /// hands the KV pages to a decode instance.
+    Prefill,
+    /// Decode pool member: receives migrated KV, decodes to completion.
+    Decode,
+}
+
+/// One instance of the cluster: a role on a device with a slot count.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub device: DeviceId,
+    pub role: InstanceRole,
+    /// Concurrent sequences this instance batches.
+    pub slots: usize,
+}
+
+/// A multi-instance serving deployment on a topology.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub topology: Topology,
+    pub instances: Vec<InstanceSpec>,
+    /// Max tokens per sequence, prompt + output.
+    pub max_seq: usize,
+    /// Per-instance iteration cost model (all instances identical).
+    pub cost: CostModel,
+    pub policy: MemoryPolicy,
+    /// DRAM-pool page capacity per instance (ignored under `NoOffload`).
+    pub pool_pages: usize,
+    pub max_preemptions: u32,
+    /// Front-end arrival routing policy.
+    pub route: RoutePolicy,
+}
+
+/// Everything a cluster run produced: the standard serving report
+/// (fleet-wide outcomes + the composed per-instance trace) plus the
+/// migration ledger.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub serving: ServingReport,
+    /// Prefill → decode KV handoffs.
+    pub kv_migrations: u64,
+    /// KV bytes moved across the fabric.
+    pub kv_bytes_migrated: f64,
+    /// Total fabric time spent on KV migrations, seconds.
+    pub kv_xfer_time: f64,
+    /// Completions per instance (index = instance = trace resource).
+    pub per_instance_completed: Vec<usize>,
+}
+
+impl ClusterReport {
+    pub fn completed(&self) -> usize {
+        self.serving.completed()
+    }
+
+    /// Condense the run into a sweep row (fleet-wide percentiles).
+    pub fn operating_point(&self, rate: f64, slo: &Slo) -> OperatingPoint {
+        self.serving.operating_point(rate, slo)
+    }
+}
+
+// ---- internal state ---------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Queued {
+    req: Request,
+    /// Raw prompt for fresh requests; clamped prompt for migrated and
+    /// preempted re-queues (admission clamps via `plan_refill`).
+    prompt_len: usize,
+    /// Tokens already produced (1 for a migrated sequence: prefill
+    /// emitted the first token before the handoff).
+    produced: usize,
+    first_token: Option<f64>,
+    preemptions: u32,
+    /// Instance still parking this sequence's KV pages, if migrating.
+    kv_src: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+struct ActiveSeq {
+    req: Request,
+    prompt_len: usize,
+    produced: usize,
+    admitted_at: f64,
+    first_token: Option<f64>,
+    preemptions: u32,
+}
+
+impl ActiveSeq {
+    fn ctx(&self) -> usize {
+        self.prompt_len + self.produced
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Work {
+    Iteration,
+    Ingest,
+}
+
+#[derive(Debug)]
+struct IngestJob {
+    entry: Queued,
+    /// Fabric transfer time, fixed when the migration was issued.
+    xfer: f64,
+}
+
+#[derive(Debug)]
+struct Instance {
+    role: InstanceRole,
+    device: DeviceId,
+    mem: ServingMemory,
+    queue: VecDeque<Queued>,
+    /// Pending KV ingests (decode role only); the transfer occupies
+    /// this engine, serialized with its iterations.
+    ingest: VecDeque<IngestJob>,
+    active: Vec<Option<ActiveSeq>>,
+    work_end: Option<(f64, Work)>,
+    cur_ctx_tokens: usize,
+}
+
+impl Instance {
+    fn new(spec: &InstanceSpec, cfg: &ClusterConfig) -> Self {
+        assert!(spec.slots >= 1, "instance needs at least one slot");
+        Self {
+            role: spec.role,
+            device: spec.device,
+            mem: ServingMemory::new(
+                &cfg.cost.kv,
+                cfg.cost.offload_frac,
+                cfg.policy,
+                cfg.pool_pages,
+            ),
+            queue: VecDeque::new(),
+            ingest: VecDeque::new(),
+            active: (0..spec.slots).map(|_| None).collect(),
+            work_end: None,
+            cur_ctx_tokens: 0,
+        }
+    }
+
+    fn active_count(&self) -> usize {
+        self.active.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Routing load signal: KV pages held (incl. parked) plus pages
+    /// the queued requests will need at admission plus pages riding
+    /// in-flight ingests. Without the inbound term, simultaneous
+    /// migrations from one prefill iteration would all see identical
+    /// loads and pile onto the lowest-index decode instance.
+    fn outstanding_kv(&self) -> usize {
+        let pages = |prompt_len: usize, produced: usize| {
+            self.mem.pages_for(prompt_len + produced.max(1))
+        };
+        let queued: usize = self
+            .queue
+            .iter()
+            .map(|q| pages(q.prompt_len, q.produced))
+            .sum();
+        let inbound: usize = self
+            .ingest
+            .iter()
+            .map(|j| pages(j.entry.prompt_len, j.entry.produced))
+            .sum();
+        self.mem.pool.hbm_used() + self.mem.pool.pool_used() + queued + inbound
+    }
+}
+
+#[derive(Debug, Default)]
+struct Stats {
+    outcomes: Vec<RequestOutcome>,
+    rejected: u64,
+    preemptions: u64,
+    decoded_tokens: u64,
+    prefill_tokens: u64,
+    intervals: Vec<Interval>,
+    tasks: usize,
+    makespan: f64,
+    kv_migrations: u64,
+    kv_bytes: f64,
+    kv_xfer_time: f64,
+    per_instance_completed: Vec<usize>,
+    /// (sequence, source instance) page handoffs pending release —
+    /// drained at the cluster level after every event.
+    handoffs: Vec<(u64, usize)>,
+    /// Instances to wake after releases/migrations.
+    kick: BTreeSet<usize>,
+}
+
+fn cold_order(inst: &Instance) -> Vec<u64> {
+    let mut v: Vec<(f64, u64)> = inst
+        .active
+        .iter()
+        .flatten()
+        .map(|s| (s.admitted_at, s.req.id))
+        .collect();
+    v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    v.into_iter().map(|(_, id)| id).collect()
+}
+
+fn youngest_slot(inst: &Instance) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for (i, s) in inst.active.iter().enumerate() {
+        if let Some(seq) = s {
+            let better = match best {
+                None => true,
+                Some(b) => seq.admitted_at > b.0 || (seq.admitted_at == b.0 && i > b.1),
+            };
+            if better {
+                best = Some((seq.admitted_at, i));
+            }
+        }
+    }
+    best.map(|b| b.1)
+}
+
+/// Evict one sequence, recompute-style: pages released, restart from
+/// the queue head (it re-prefills wherever it now sits — decode
+/// instances are the same hardware, specialization is scheduling).
+fn preempt(inst: &mut Instance, slot: usize, max_preemptions: u32, stats: &mut Stats) {
+    let seq = inst.active[slot].take().expect("preempting an empty slot");
+    inst.mem.pool.release(seq.req.id);
+    stats.preemptions += 1;
+    let preemptions = seq.preemptions + 1;
+    if preemptions > max_preemptions {
+        stats.rejected += 1;
+        return;
+    }
+    inst.queue.push_front(Queued {
+        req: seq.req,
+        prompt_len: seq.prompt_len,
+        produced: 0,
+        first_token: seq.first_token,
+        preemptions,
+        kv_src: None,
+    });
+}
+
+fn grow_active(inst: &mut Instance, cfg: &ClusterConfig, stats: &mut Stats) {
+    let mut i = 0usize;
+    while i < inst.active.len() {
+        let (id, need) = match &inst.active[i] {
+            Some(s) => (s.req.id, inst.mem.pages_for(s.ctx())),
+            None => {
+                i += 1;
+                continue;
+            }
+        };
+        let have = inst.mem.pool.seq_pages(id).total();
+        if need <= have {
+            i += 1;
+            continue;
+        }
+        let delta = need - have;
+        let cold = cold_order(inst);
+        if inst.mem.ensure_hbm_free(delta, &cold) && inst.mem.pool.try_alloc_hbm(id, delta) {
+            i += 1;
+            continue;
+        }
+        let victim = youngest_slot(inst).expect("growth requires an active sequence");
+        preempt(inst, victim, cfg.max_preemptions, stats);
+    }
+}
+
+/// The decode instance with the fewest outstanding KV pages — page
+/// headroom is the only signal that matters for a KV handoff.
+fn pick_decode(insts: &[Instance], decode_ids: &[usize]) -> usize {
+    decode_ids
+        .iter()
+        .copied()
+        .min_by_key(|&i| (insts[i].outstanding_kv(), i))
+        .expect("disaggregated cluster needs a decode instance")
+}
+
+/// An iteration completed at `t` on instance `k`: every active
+/// sequence produced one token; finished sequences retire, finished
+/// *prefills* migrate to a decode instance.
+fn finish_iteration(
+    insts: &mut [Instance],
+    decode_ids: &[usize],
+    k: usize,
+    t: f64,
+    cfg: &ClusterConfig,
+    stats: &mut Stats,
+) {
+    insts[k].work_end = None;
+    for slot in 0..insts[k].active.len() {
+        let (done, migrate) = {
+            let inst = &mut insts[k];
+            let Some(seq) = inst.active[slot].as_mut() else {
+                continue;
+            };
+            seq.produced += 1;
+            stats.decoded_tokens += 1;
+            if seq.first_token.is_none() {
+                seq.first_token = Some(t);
+            }
+            let target = seq.req.output_tokens.min(cfg.max_seq - seq.prompt_len);
+            let done = seq.produced >= target || seq.ctx() >= cfg.max_seq;
+            (done, inst.role == InstanceRole::Prefill && !done)
+        };
+        if migrate {
+            // Prefill finished (first token out): hand the KV pages to
+            // a decode instance. Pages stay parked here until the
+            // destination admits the sequence.
+            let seq = insts[k].active[slot].take().expect("slot checked above");
+            let dst = pick_decode(insts, decode_ids);
+            let bytes = seq.ctx() as f64 * cfg.cost.kv.kv_bytes_per_token as f64;
+            let xfer = collectives::cost(
+                &cfg.topology,
+                CollectiveKind::P2p,
+                bytes,
+                &[insts[k].device, insts[dst].device],
+            )
+            .time;
+            stats.kv_migrations += 1;
+            stats.kv_bytes += bytes;
+            stats.kv_xfer_time += xfer;
+            insts[dst].ingest.push_back(IngestJob {
+                entry: Queued {
+                    req: seq.req,
+                    prompt_len: seq.prompt_len,
+                    produced: seq.produced,
+                    first_token: seq.first_token,
+                    preemptions: seq.preemptions,
+                    kv_src: Some(k),
+                },
+                xfer,
+            });
+            stats.kick.insert(dst);
+        } else if done {
+            let seq = insts[k].active[slot].take().expect("slot checked above");
+            stats.outcomes.push(RequestOutcome {
+                id: seq.req.id,
+                tenant: seq.req.tenant,
+                arrival: seq.req.arrival,
+                first_token: seq.first_token.unwrap_or(t),
+                finish: t,
+                prompt_tokens: seq.prompt_len,
+                output_tokens: seq.produced,
+                preemptions: seq.preemptions,
+            });
+            stats.per_instance_completed[k] += 1;
+            insts[k].mem.pool.release(seq.req.id);
+        }
+    }
+}
+
+/// A KV ingest finished: the migrated sequence joins the decode queue
+/// (its pages move at admission, through the standard refill gate).
+fn finish_ingest(inst: &mut Instance) {
+    inst.work_end = None;
+    let job = inst.ingest.pop_front().expect("ingest completion without a job");
+    inst.queue.push_back(job.entry);
+}
+
+/// Schedule the instance's next unit of work at `t`: a pending KV
+/// ingest if any (the transfer occupies the engine), else a batcher
+/// iteration through the shared `plan_refill` admission core.
+fn start_work(inst: &mut Instance, k: usize, t: f64, cfg: &ClusterConfig, stats: &mut Stats) {
+    debug_assert!(inst.work_end.is_none(), "work already in flight");
+    if let Some(job) = inst.ingest.front() {
+        let finish = t + job.xfer;
+        stats.intervals.push(Interval {
+            task: TaskId(stats.tasks),
+            resource: ResourceId(k),
+            start: t,
+            finish,
+            tag: tags::KV_XFER,
+        });
+        stats.tasks += 1;
+        stats.makespan = stats.makespan.max(finish);
+        inst.work_end = Some((finish, Work::Ingest));
+        return;
+    }
+    grow_active(inst, cfg, stats);
+    let mut total_prefill = 0usize;
+    loop {
+        let occupied: Vec<bool> = inst.active.iter().map(Option::is_some).collect();
+        let empty = occupied.iter().filter(|o| !**o).count();
+        // (id, prompt_len, produced) of the admissible queue prefix
+        let heads: Vec<(u64, usize, usize)> = inst
+            .queue
+            .iter()
+            .take(empty)
+            .map(|q| (q.req.id, q.prompt_len, q.produced))
+            .collect();
+        let lens: Vec<usize> = heads.iter().map(|h| h.1).collect();
+        let cold = cold_order(inst);
+        let mem = &mut inst.mem;
+        let plan = plan_refill(&occupied, cfg.max_seq, &lens, |qi, prompt_len| {
+            // migrated sequences carry their produced tokens: the gate
+            // reserves pages for the full context at this instance
+            let pages = mem.pages_for(prompt_len + heads[qi].2);
+            pages <= mem.pool.hbm_capacity()
+                && mem.ensure_hbm_free(pages, &cold)
+                && mem.pool.try_alloc_hbm(heads[qi].0, pages)
+        });
+        for adm in &plan {
+            let q = inst.queue.pop_front().expect("refill plan exceeds queue");
+            if q.produced == 0 {
+                total_prefill += adm.prompt_len;
+            }
+            if let Some(src) = q.kv_src {
+                // pages now live here; the parked copy at the source
+                // is released in the cluster-level drain
+                stats.handoffs.push((q.req.id, src));
+            }
+            inst.active[adm.slot] = Some(ActiveSeq {
+                req: q.req,
+                prompt_len: adm.prompt_len,
+                produced: q.produced,
+                admitted_at: t,
+                first_token: q.first_token,
+                preemptions: q.preemptions,
+            });
+        }
+        if !plan.is_empty() || inst.active_count() > 0 {
+            break;
+        }
+        // Empty instance, nothing admitted. Reject the head only if it
+        // can NEVER fit; a head blocked on pages parked elsewhere (or
+        // an in-flight ingest) waits — the release re-kicks us.
+        match inst.queue.front() {
+            Some(head) => {
+                let pages = inst
+                    .mem
+                    .pages_for(head.prompt_len.min(cfg.max_seq - 1) + head.produced);
+                if pages > inst.mem.pool.hbm_capacity() {
+                    let q = inst.queue.pop_front().expect("head exists");
+                    if let Some(src) = q.kv_src {
+                        stats.handoffs.push((q.req.id, src));
+                    }
+                    stats.rejected += 1;
+                } else {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+
+    // Cost the iteration from the tiered KV footprint (same split as
+    // the single-instance batcher).
+    let tpp = inst.mem.tokens_per_page();
+    let mut hbm_tokens = 0usize;
+    let mut pool_tokens = 0usize;
+    for seq in inst.active.iter().flatten() {
+        let ctx = seq.ctx();
+        let in_pool = (inst.mem.pool.seq_pages(seq.req.id).pool * tpp).min(ctx);
+        pool_tokens += in_pool;
+        hbm_tokens += ctx - in_pool;
+    }
+    inst.cur_ctx_tokens = hbm_tokens + pool_tokens;
+    if inst.active_count() == 0 {
+        return;
+    }
+    stats.prefill_tokens += total_prefill as u64;
+    let finish = t + cfg
+        .cost
+        .iteration_latency(hbm_tokens, pool_tokens, total_prefill);
+    stats.intervals.push(Interval {
+        task: TaskId(stats.tasks),
+        resource: ResourceId(k),
+        start: t,
+        finish,
+        tag: if total_prefill > 0 {
+            tags::PREFILL
+        } else {
+            tags::DECODE
+        },
+    });
+    stats.tasks += 1;
+    stats.makespan = stats.makespan.max(finish);
+    inst.work_end = Some((finish, Work::Iteration));
+}
+
+/// Run the cluster simulation to completion: every request is either
+/// completed or rejected when this returns, and every instance's page
+/// pool has drained. Deterministic: identical inputs produce a
+/// bit-identical report.
+pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterReport {
+    assert!(!cfg.instances.is_empty(), "cluster needs at least one instance");
+    assert!(cfg.max_seq >= 2, "need room for a prompt and one decode position");
+    debug_assert!(
+        requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+        "requests must be sorted by arrival time"
+    );
+    let has_prefill = cfg
+        .instances
+        .iter()
+        .any(|i| i.role == InstanceRole::Prefill);
+    let has_decode = cfg.instances.iter().any(|i| i.role == InstanceRole::Decode);
+    let has_colocated = cfg
+        .instances
+        .iter()
+        .any(|i| i.role == InstanceRole::Colocated);
+    assert!(
+        !(has_colocated && (has_prefill || has_decode)),
+        "mixing colocated with disaggregated roles is not supported"
+    );
+    assert!(
+        has_prefill == has_decode,
+        "disaggregation needs both a prefill pool and a decode pool"
+    );
+
+    let mut insts: Vec<Instance> = cfg
+        .instances
+        .iter()
+        .map(|spec| Instance::new(spec, cfg))
+        .collect();
+    let entry_role = if has_prefill {
+        InstanceRole::Prefill
+    } else {
+        InstanceRole::Colocated
+    };
+    let entry_ids: Vec<usize> = cfg
+        .instances
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.role == entry_role)
+        .map(|(i, _)| i)
+        .collect();
+    let decode_ids: Vec<usize> = cfg
+        .instances
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.role == InstanceRole::Decode)
+        .map(|(i, _)| i)
+        .collect();
+
+    let mut router = Router::new(cfg.route);
+    let mut stats = Stats {
+        per_instance_completed: vec![0; insts.len()],
+        ..Default::default()
+    };
+    let mut peak_context = 0usize;
+    let mut next_arrival = 0usize;
+
+    loop {
+        let ta = requests.get(next_arrival).map(|r| r.arrival);
+        let te = insts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, ins)| ins.work_end.as_ref().map(|(t, _)| (*t, i)))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let arrival_first = match (ta, te) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(t), Some((e, _))) => t <= e,
+        };
+        let now;
+        if arrival_first {
+            let req = requests[next_arrival];
+            next_arrival += 1;
+            now = req.arrival;
+            let candidates: Vec<CandidateLoad> = entry_ids
+                .iter()
+                .map(|&i| CandidateLoad {
+                    instance: i,
+                    outstanding_kv_pages: insts[i].outstanding_kv(),
+                })
+                .collect();
+            let k = router.route(&req, &candidates);
+            insts[k].queue.push_back(Queued {
+                req,
+                prompt_len: req.prompt_tokens,
+                produced: 0,
+                first_token: None,
+                preemptions: 0,
+                kv_src: None,
+            });
+            if insts[k].work_end.is_none() {
+                start_work(&mut insts[k], k, now, cfg, &mut stats);
+            }
+        } else {
+            let (t, k) = te.expect("work end exists");
+            now = t;
+            let kind = insts[k].work_end.expect("work in flight").1;
+            match kind {
+                Work::Iteration => finish_iteration(&mut insts, &decode_ids, k, t, cfg, &mut stats),
+                Work::Ingest => finish_ingest(&mut insts[k]),
+            }
+            start_work(&mut insts[k], k, t, cfg, &mut stats);
+        }
+        // Drain cross-instance effects until quiescent: page handoffs
+        // wake the source instance, migrations wake the target.
+        while !stats.handoffs.is_empty() || !stats.kick.is_empty() {
+            let handoffs = std::mem::take(&mut stats.handoffs);
+            for (seq, src) in handoffs {
+                insts[src].mem.pool.release(seq);
+                stats.kick.insert(src);
+            }
+            let kicks: Vec<usize> = std::mem::take(&mut stats.kick).into_iter().collect();
+            for k in kicks {
+                if insts[k].work_end.is_none() {
+                    start_work(&mut insts[k], k, now, cfg, &mut stats);
+                }
+            }
+        }
+        let total_ctx: usize = insts.iter().map(|i| i.cur_ctx_tokens).sum();
+        peak_context = peak_context.max(total_ctx);
+    }
+
+    // Conservation: every pool fully drained — no page leaked across
+    // completions, preemptions, or migrations.
+    for (i, inst) in insts.iter().enumerate() {
+        assert_eq!(
+            inst.mem.pool.sequences(),
+            0,
+            "instance {i} leaked pages for {} sequences",
+            inst.mem.pool.sequences()
+        );
+        inst.mem
+            .pool
+            .check_conservation()
+            .unwrap_or_else(|e| panic!("instance {i}: {e}"));
+    }
+
+    let demotions = insts.iter().map(|i| i.mem.pool.demotions).sum();
+    let n = insts.len();
+    let Stats {
+        outcomes,
+        rejected,
+        preemptions,
+        decoded_tokens,
+        prefill_tokens,
+        intervals,
+        makespan,
+        kv_migrations,
+        kv_bytes,
+        kv_xfer_time,
+        per_instance_completed,
+        ..
+    } = stats;
+    ClusterReport {
+        serving: ServingReport {
+            outcomes,
+            rejected,
+            preemptions,
+            demotions,
+            decoded_tokens,
+            prefill_tokens,
+            peak_context_tokens: peak_context,
+            makespan,
+            trace: SimResult::from_intervals(makespan, n, intervals),
+        },
+        kv_migrations,
+        kv_bytes_migrated: kv_bytes,
+        kv_xfer_time,
+        per_instance_completed,
+    }
+}
+
+// ---- scenarios and sweeps ---------------------------------------------
+
+/// Cluster deployment + workload + arrival window.
+#[derive(Debug, Clone)]
+pub struct ClusterScenario {
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    /// Arrival window, virtual seconds (the run drains afterwards).
+    pub horizon: f64,
+}
+
+/// Generate the workload and run the cluster simulator.
+pub fn run_cluster_scenario(sc: &ClusterScenario) -> ClusterReport {
+    simulate_cluster(&sc.cluster, &sc.workload.generate(sc.horizon))
+}
+
+/// Sweep offered load over the cluster, fanned across `sim::sweep`
+/// workers. Results are in input order and bit-identical to a
+/// sequential loop.
+pub fn cluster_rate_sweep(
+    base: &ClusterScenario,
+    rates: &[f64],
+    slo: &Slo,
+) -> Vec<OperatingPoint> {
+    parallel_map(rates, |&rate| {
+        let mut sc = base.clone();
+        sc.workload.arrival = sc.workload.arrival.with_mean_rate(rate);
+        run_cluster_scenario(&sc).operating_point(rate, slo)
+    })
+}
+
+/// Place `n` instances spread across the topology's racks (one per
+/// rack, wrapping onto successive boards), die 0 of each board — the
+/// placement that exposes the cross-rack fabric tier to migrations.
+pub fn spread_placement(topo: &Topology, n: usize) -> Vec<DeviceId> {
+    let g = topo.geometry;
+    (0..n)
+        .map(|i| {
+            let rack = i % g.racks;
+            let board = (i / g.racks) % g.boards_per_rack;
+            DeviceId(rack * g.boards_per_rack * g.dies_per_board + board * g.dies_per_board)
+        })
+        .collect()
+}
+
+// ---- the checked-in crossover presets ---------------------------------
+
+/// Which fabric the crossover scenario runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterFabric {
+    /// Matrix384 UB supernode (pooled memory, ~15x cross-machine bw).
+    Supernode,
+    /// Legacy PCIe/RoCE cluster of comparable scale.
+    Legacy,
+}
+
+impl ClusterFabric {
+    pub fn topology(self) -> Topology {
+        match self {
+            ClusterFabric::Supernode => Topology::matrix384(),
+            ClusterFabric::Legacy => Topology::legacy_cluster(32),
+        }
+    }
+}
+
+/// Serving architecture under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    Colocated,
+    Disaggregated,
+}
+
+/// Llama-8B-class device scaled so the crossover runs at CI size: the
+/// bandwidth ratios of `KvCacheConfig::llama8b_910c`, with HBM for 40K
+/// KV tokens beyond the weights — room for a decode pool batching long
+/// prompts, small enough that runs stay fast.
+pub fn cluster_device() -> KvCacheConfig {
+    KvCacheConfig {
+        kv_bytes_per_token: 131_072,
+        tokens_per_page: 64,
+        weight_bytes: 8 * (1u64 << 30),
+        hbm_usable: 8 * (1u64 << 30) + 40_960 * 131_072,
+        hbm_bw: 1.6e12,
+        pool_bw: 392e9,
+        attn_tokens_per_s: 40e6,
+    }
+}
+
+/// The long-prompt mix where disaggregation matters: ~2K-token
+/// prompts (a 20 ms inline prefill stall per admission for colocated
+/// batchers, ~260 MB of KV per migration for disaggregated ones),
+/// short chat-style outputs.
+pub fn long_prompt_workload(rate: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        arrival: ArrivalProcess::Poisson { rate },
+        prompt: LengthDist::Uniform { lo: 1600, hi: 2400 },
+        output: LengthDist::Uniform { lo: 16, hi: 32 },
+        seed: 42,
+    }
+}
+
+/// The crossover scenarios' SLO: 500 ms to first token, 13 ms/token
+/// after — the TPOT bound sits between a clean decode iteration
+/// (~9 ms) and one contaminated by inline prefill or staged KV copies.
+pub fn cluster_slo() -> Slo {
+    Slo {
+        ttft_p99: 0.5,
+        tpot_p99: 0.013,
+    }
+}
+
+/// The fixed rate grid of the crossover comparison (cluster-wide QPS).
+pub const CLUSTER_RATES: [f64; 8] = [10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0];
+
+/// Four instances on the fabric, spread across racks. Colocated: four
+/// full batchers. Disaggregated: two prefill instances (small slot
+/// count — prompts churn fast) feeding two decode instances (large
+/// batches — decode is memory-bound, batching is cheap).
+pub fn crossover_cluster(fabric: ClusterFabric, mode: ClusterMode) -> ClusterConfig {
+    let topology = fabric.topology();
+    let places = spread_placement(&topology, 4);
+    let instances = match mode {
+        ClusterMode::Colocated => places
+            .iter()
+            .map(|&device| InstanceSpec {
+                device,
+                role: InstanceRole::Colocated,
+                slots: 12,
+            })
+            .collect(),
+        ClusterMode::Disaggregated => vec![
+            InstanceSpec {
+                device: places[0],
+                role: InstanceRole::Prefill,
+                slots: 4,
+            },
+            InstanceSpec {
+                device: places[1],
+                role: InstanceRole::Prefill,
+                slots: 4,
+            },
+            InstanceSpec {
+                device: places[2],
+                role: InstanceRole::Decode,
+                slots: 16,
+            },
+            InstanceSpec {
+                device: places[3],
+                role: InstanceRole::Decode,
+                slots: 16,
+            },
+        ],
+    };
+    ClusterConfig {
+        topology,
+        instances,
+        max_seq: 4096,
+        cost: CostModel::new(cluster_device(), 0.0),
+        policy: MemoryPolicy::NoOffload,
+        pool_pages: 0,
+        max_preemptions: 4,
+        route: RoutePolicy::LeastOutstandingKv,
+    }
+}
+
+/// The checked-in crossover scenario for one (fabric, mode) cell.
+pub fn crossover_scenario(fabric: ClusterFabric, mode: ClusterMode) -> ClusterScenario {
+    ClusterScenario {
+        cluster: crossover_cluster(fabric, mode),
+        workload: long_prompt_workload(CLUSTER_RATES[0]),
+        horizon: 8.0,
+    }
+}
+
+/// Max-QPS-under-SLO operating points of the four (fabric × mode)
+/// cells — the paper-shaped result: disaggregation wins on the
+/// supernode fabric and loses on the legacy fabric, because KV
+/// migration cost is the deciding term.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossoverSummary {
+    pub colocated_supernode: OperatingPoint,
+    pub disagg_supernode: OperatingPoint,
+    pub colocated_legacy: OperatingPoint,
+    pub disagg_legacy: OperatingPoint,
+}
+
+impl CrossoverSummary {
+    /// Disaggregation speedup on the supernode fabric.
+    pub fn supernode_disagg_gain(&self) -> f64 {
+        self.disagg_supernode.rate / self.colocated_supernode.rate
+    }
+
+    /// Colocation advantage on the legacy fabric.
+    pub fn legacy_colocated_gain(&self) -> f64 {
+        self.colocated_legacy.rate / self.disagg_legacy.rate
+    }
+}
+
+/// Run the full crossover comparison on the fixed grid (each cell's
+/// rate sweep fans out through `sim::sweep`).
+pub fn crossover_comparison() -> CrossoverSummary {
+    let cell = |fabric, mode| {
+        let points = cluster_rate_sweep(
+            &crossover_scenario(fabric, mode),
+            &CLUSTER_RATES,
+            &cluster_slo(),
+        );
+        max_qps_under_slo(&points)
+            .unwrap_or_else(|| panic!("{fabric:?}/{mode:?} must attain at the lowest rate"))
+    };
+    CrossoverSummary {
+        colocated_supernode: cell(ClusterFabric::Supernode, ClusterMode::Colocated),
+        disagg_supernode: cell(ClusterFabric::Supernode, ClusterMode::Disaggregated),
+        colocated_legacy: cell(ClusterFabric::Legacy, ClusterMode::Colocated),
+        disagg_legacy: cell(ClusterFabric::Legacy, ClusterMode::Disaggregated),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::batcher::{simulate, ServingConfig};
+    use crate::supernode::{DeviceSpec, Fabric, Geometry};
+
+    fn tiny_kv(pages_at_f0: u64) -> KvCacheConfig {
+        KvCacheConfig {
+            kv_bytes_per_token: 1024,
+            tokens_per_page: 16,
+            weight_bytes: 1 << 20,
+            hbm_usable: (1 << 20) + pages_at_f0 * 16 * 1024,
+            hbm_bw: 1e12,
+            pool_bw: 100e9,
+            attn_tokens_per_s: 40e6,
+        }
+    }
+
+    fn fixed_requests(n: u64, prompt: usize, output: usize, spacing: f64) -> Vec<Request> {
+        (0..n)
+            .map(|id| Request {
+                id,
+                tenant: (id % 3) as usize,
+                arrival: id as f64 * spacing,
+                prompt_tokens: prompt,
+                output_tokens: output,
+            })
+            .collect()
+    }
+
+    fn tiny_topology(fabric: Fabric) -> Topology {
+        Topology::new(
+            Geometry {
+                racks: 1,
+                boards_per_rack: 2,
+                dies_per_board: 4,
+            },
+            fabric,
+            DeviceSpec::ascend_910c(),
+        )
+    }
+
+    fn tiny_cluster(instances: Vec<InstanceSpec>, pages: u64) -> ClusterConfig {
+        ClusterConfig {
+            topology: tiny_topology(Fabric::supernode()),
+            instances,
+            max_seq: 512,
+            cost: CostModel::new(tiny_kv(pages), 0.0),
+            policy: MemoryPolicy::NoOffload,
+            pool_pages: 0,
+            max_preemptions: 4,
+            route: RoutePolicy::LeastOutstandingKv,
+        }
+    }
+
+    fn colocated_spec(slots: usize) -> Vec<InstanceSpec> {
+        vec![InstanceSpec {
+            device: DeviceId(0),
+            role: InstanceRole::Colocated,
+            slots,
+        }]
+    }
+
+    fn disagg_spec() -> Vec<InstanceSpec> {
+        vec![
+            InstanceSpec {
+                device: DeviceId(0),
+                role: InstanceRole::Prefill,
+                slots: 2,
+            },
+            InstanceSpec {
+                device: DeviceId(4),
+                role: InstanceRole::Decode,
+                slots: 4,
+            },
+        ]
+    }
+
+    #[test]
+    fn single_colocated_instance_matches_the_batcher_bit_for_bit() {
+        // tight arrivals exercise the preemption path in both
+        let reqs = fixed_requests(30, 48, 12, 1e-5);
+        let cluster = tiny_cluster(colocated_spec(6), 16);
+        let crep = simulate_cluster(&cluster, &reqs);
+        let brep = simulate(
+            &ServingConfig {
+                fleet: 1,
+                slots: 6,
+                max_seq: 512,
+                cost: CostModel::new(tiny_kv(16), 0.0),
+                policy: MemoryPolicy::NoOffload,
+                pool_pages: 0,
+                max_preemptions: 4,
+            },
+            &reqs,
+        );
+        assert_eq!(crep.serving.makespan.to_bits(), brep.makespan.to_bits());
+        assert_eq!(crep.serving.rejected, brep.rejected);
+        assert_eq!(crep.serving.preemptions, brep.preemptions);
+        assert_eq!(crep.serving.outcomes.len(), brep.outcomes.len());
+        for (a, b) in crep.serving.outcomes.iter().zip(&brep.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.first_token.to_bits(), b.first_token.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+        assert_eq!(crep.kv_migrations, 0, "colocated never migrates");
+    }
+
+    #[test]
+    fn disaggregated_migrates_every_multi_token_request_once() {
+        let reqs = fixed_requests(12, 40, 8, 0.02);
+        let rep = simulate_cluster(&tiny_cluster(disagg_spec(), 64), &reqs);
+        assert_eq!(rep.serving.rejected, 0);
+        assert_eq!(rep.completed(), 12);
+        assert_eq!(rep.kv_migrations, 12);
+        assert!(rep.kv_bytes_migrated > 0.0);
+        assert!(rep.kv_xfer_time > 0.0);
+        // trace: prefill work on instance 0, decode + kv_xfer on 1
+        let trace = &rep.serving.trace;
+        assert_eq!(trace.resources, 2);
+        assert!(trace.tagged_count(tags::KV_XFER) >= 12);
+        assert!(trace.tagged_count(tags::PREFILL) > 0);
+        assert!(trace.tagged_count(tags::DECODE) > 0);
+        for iv in trace.intervals_tagged(tags::KV_XFER) {
+            assert_eq!(iv.resource, ResourceId(1), "xfer staged on the decode engine");
+        }
+        // outcomes carry full token counts and a prefill-side TTFT
+        for o in &rep.serving.outcomes {
+            assert_eq!(o.output_tokens, 8);
+            assert!(o.first_token > o.arrival);
+            assert!(o.finish > o.first_token);
+        }
+        assert_eq!(rep.per_instance_completed, vec![0, 12]);
+    }
+
+    #[test]
+    fn single_token_outputs_complete_at_prefill_without_migrating() {
+        let reqs = fixed_requests(6, 32, 1, 0.05);
+        let rep = simulate_cluster(&tiny_cluster(disagg_spec(), 64), &reqs);
+        assert_eq!(rep.completed(), 6);
+        assert_eq!(rep.kv_migrations, 0);
+        assert_eq!(rep.per_instance_completed, vec![6, 0]);
+        for o in &rep.serving.outcomes {
+            assert_eq!(o.output_tokens, 1);
+        }
+    }
+
+    #[test]
+    fn oversized_prompt_rejected_not_deadlocked() {
+        // 4 HBM pages = 64 tokens; a 100-token prompt can never fit
+        let mut reqs = fixed_requests(3, 16, 4, 0.01);
+        reqs[1].prompt_tokens = 100;
+        let rep = simulate_cluster(&tiny_cluster(disagg_spec(), 4), &reqs);
+        assert_eq!(rep.serving.rejected, 1);
+        assert_eq!(rep.completed(), 2);
+    }
+
+    #[test]
+    fn deterministic_bit_identical_reruns() {
+        let reqs = fixed_requests(25, 48, 10, 1e-4);
+        let cfg = tiny_cluster(disagg_spec(), 24);
+        let a = simulate_cluster(&cfg, &reqs);
+        let b = simulate_cluster(&cfg, &reqs);
+        assert_eq!(a.serving.makespan.to_bits(), b.serving.makespan.to_bits());
+        assert_eq!(a.kv_migrations, b.kv_migrations);
+        assert_eq!(a.serving.outcomes.len(), b.serving.outcomes.len());
+        for (x, y) in a.serving.outcomes.iter().zip(&b.serving.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+    }
+
+    #[test]
+    fn migration_cost_follows_the_fabric() {
+        // prefill on rack 0, decode on rack 1: migrations pay the
+        // cross-rack tier, where the fabrics differ most
+        let two_rack = |fabric| {
+            Topology::new(
+                Geometry {
+                    racks: 2,
+                    boards_per_rack: 1,
+                    dies_per_board: 4,
+                },
+                fabric,
+                DeviceSpec::ascend_910c(),
+            )
+        };
+        let reqs = fixed_requests(12, 40, 8, 0.02);
+        let mut cfg = tiny_cluster(disagg_spec(), 64);
+        cfg.topology = two_rack(Fabric::supernode());
+        let sn = simulate_cluster(&cfg, &reqs);
+        cfg.topology = two_rack(Fabric::legacy());
+        let lg = simulate_cluster(&cfg, &reqs);
+        assert_eq!(sn.kv_migrations, lg.kv_migrations);
+        assert!(
+            lg.kv_xfer_time > 5.0 * sn.kv_xfer_time,
+            "legacy cross-rack tier must be far slower: {} vs {}",
+            lg.kv_xfer_time,
+            sn.kv_xfer_time
+        );
+    }
+
+    #[test]
+    fn accounting_adds_up_under_pressure() {
+        // undersized decode pool: preemptions + backpressure exercised
+        let reqs = fixed_requests(40, 48, 12, 1e-4);
+        let rep = simulate_cluster(&tiny_cluster(disagg_spec(), 16), &reqs);
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 40);
+        let produced: u64 = rep
+            .serving
+            .outcomes
+            .iter()
+            .map(|o| o.output_tokens as u64)
+            .sum();
+        assert!(rep.serving.decoded_tokens >= produced);
+        // per-resource intervals never overlap (engine serializes
+        // iterations and staged ingests)
+        for r in 0..rep.serving.trace.resources {
+            let bucket = rep.serving.trace.per_resource(ResourceId(r));
+            assert!(bucket.windows(2).all(|w| w[0].finish <= w[1].start + 1e-12));
+        }
+    }
+
+    #[test]
+    fn round_robin_routing_spreads_colocated_arrivals() {
+        let mut cfg = tiny_cluster(
+            vec![
+                InstanceSpec {
+                    device: DeviceId(0),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+                InstanceSpec {
+                    device: DeviceId(1),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+            ],
+            64,
+        );
+        cfg.route = RoutePolicy::RoundRobin;
+        let reqs = fixed_requests(20, 32, 6, 0.01);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.completed(), 20);
+        assert_eq!(rep.per_instance_completed, vec![10, 10]);
+    }
+
+    #[test]
+    fn spread_placement_crosses_racks() {
+        let topo = Topology::matrix384();
+        let places = spread_placement(&topo, 4);
+        assert_eq!(places.len(), 4);
+        for (i, &a) in places.iter().enumerate() {
+            for &b in &places[i + 1..] {
+                assert_ne!(a, b);
+                assert_eq!(
+                    topo.tier_between(a, b),
+                    crate::supernode::LinkTier::CrossRack
+                );
+            }
+        }
+        let legacy = Topology::legacy_cluster(32);
+        for (i, &a) in spread_placement(&legacy, 4).iter().enumerate() {
+            for &b in &spread_placement(&legacy, 4)[i + 1..] {
+                assert_eq!(
+                    legacy.tier_between(a, b),
+                    crate::supernode::LinkTier::CrossRack
+                );
+            }
+        }
+    }
+}

@@ -178,6 +178,25 @@ impl PagePool {
     }
 }
 
+/// Move every page a sequence holds in `src` into `dst`'s HBM tier —
+/// the KV handoff of prefill/decode disaggregation. All-or-nothing:
+/// the destination allocation happens first and the source release
+/// only after it succeeds, so a failed migration changes nothing and
+/// a successful one can neither leak pages (the source ledger entry
+/// is removed exactly once) nor double-free them (release is
+/// idempotent). The cluster simulator follows the same
+/// allocate-at-destination-then-release-at-source protocol, with the
+/// two halves separated by the fabric transfer; this helper is the
+/// atomic form the conservation property test model-checks.
+pub fn migrate_pages(src: &mut PagePool, dst: &mut PagePool, seq: u64) -> bool {
+    let held = src.seq_pages(seq).total();
+    if held == 0 || !dst.try_alloc_hbm(seq, held) {
+        return false;
+    }
+    src.release(seq);
+    true
+}
+
 /// The serving-side memory manager for one replica: a [`PagePool`]
 /// sized from the device's `KvCacheConfig` (HBM pages left after the
 /// resident weight fraction) plus the policy applied under pressure.
@@ -198,7 +217,11 @@ impl ServingMemory {
         policy: MemoryPolicy,
         pool_pages: usize,
     ) -> Self {
-        let hbm_pages = kv.kv_token_capacity(offload_frac) / kv.tokens_per_page;
+        // a degenerate zero tokens-per-page clamps to one (the page
+        // math would divide by zero); a zero-capacity config yields an
+        // empty pool, and admission rejects instead of looping
+        let tokens_per_page = kv.tokens_per_page.max(1);
+        let hbm_pages = kv.kv_token_capacity(offload_frac) / tokens_per_page;
         let pool_pages = match policy {
             MemoryPolicy::NoOffload => 0,
             MemoryPolicy::PoolOffload => pool_pages,
@@ -206,7 +229,7 @@ impl ServingMemory {
         Self {
             pool: PagePool::new(hbm_pages, pool_pages),
             policy,
-            tokens_per_page: kv.tokens_per_page,
+            tokens_per_page,
         }
     }
 
@@ -288,6 +311,27 @@ mod tests {
         assert_eq!(freed, SeqPages { hbm: 5, pool: 3 });
         assert_eq!(p.pool_free(), 3);
         p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn migrate_moves_whole_sequence_or_nothing() {
+        let mut src = PagePool::new(10, 4);
+        let mut dst = PagePool::new(6, 0);
+        assert!(src.try_alloc_hbm(1, 5));
+        src.demote(1, 2);
+        assert!(migrate_pages(&mut src, &mut dst, 1));
+        assert_eq!(src.seq_pages(1).total(), 0, "source fully released");
+        assert_eq!(dst.seq_pages(1), SeqPages { hbm: 5, pool: 0 });
+        src.check_conservation().unwrap();
+        dst.check_conservation().unwrap();
+        // second migration of the same sequence moves nothing
+        assert!(!migrate_pages(&mut src, &mut dst, 1));
+        // a destination without room rejects and nothing changes
+        assert!(src.try_alloc_hbm(2, 3));
+        assert!(!migrate_pages(&mut src, &mut dst, 2), "dst has 1 free page");
+        assert_eq!(src.seq_pages(2).total(), 3);
+        src.check_conservation().unwrap();
+        dst.check_conservation().unwrap();
     }
 
     #[test]

@@ -16,20 +16,36 @@
 //!   HBM/DRAM-pool [`PagePool`], with HyperOffload-style demotion and
 //!   recompute-style preemption;
 //! - [`metrics`] — TTFT/TPOT/goodput percentiles, SLO attainment, and
-//!   parallel sweeps locating the max-QPS-under-SLO operating point.
+//!   parallel sweeps locating the max-QPS-under-SLO operating point;
+//! - [`router`] — the front-end request router (round-robin /
+//!   least-outstanding-KV / session-affinity policies);
+//! - [`cluster`] — N instances placed on a `supernode::Topology`,
+//!   colocated or prefill/decode-disaggregated, with KV-cache
+//!   migration costed over the actual fabric tiers — the checked-in
+//!   crossover shows disaggregation winning on the supernode fabric
+//!   and losing on the legacy fabric.
 //!
 //! Everything is deterministic, so CI gates on the sweeps' virtual-time
 //! metrics (`BENCH_serving.json` vs the committed baseline).
 
 pub mod batcher;
+pub mod cluster;
 pub mod memory;
 pub mod metrics;
+pub mod router;
 pub mod workload;
 
 pub use batcher::{plan_refill, simulate, Admission, CostModel, ServingConfig};
-pub use memory::{MemoryPolicy, PagePool, SeqPages, ServingMemory};
+pub use cluster::{
+    cluster_device, cluster_rate_sweep, cluster_slo, crossover_cluster, crossover_comparison,
+    crossover_scenario, long_prompt_workload, run_cluster_scenario, simulate_cluster,
+    spread_placement, ClusterConfig, ClusterFabric, ClusterMode, ClusterReport, ClusterScenario,
+    CrossoverSummary, InstanceRole, InstanceSpec, CLUSTER_RATES,
+};
+pub use memory::{migrate_pages, MemoryPolicy, PagePool, SeqPages, ServingMemory};
 pub use metrics::{
     max_qps_under_slo, rate_sweep, run_scenario, smoke_device, smoke_scenario, smoke_slo,
     OperatingPoint, RequestOutcome, Scenario, ServingReport, Slo, SMOKE_RATES,
 };
+pub use router::{least_outstanding, CandidateLoad, RoutePolicy, Router};
 pub use workload::{ArrivalProcess, LengthDist, Request, TenantProfile, WorkloadConfig};

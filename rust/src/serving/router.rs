@@ -1,0 +1,160 @@
+//! Front-end request router for multi-instance serving.
+//!
+//! The cluster simulator places N batcher instances on
+//! `supernode::Topology` devices; arrivals enter through a router that
+//! assigns each request to an instance under a pluggable policy:
+//!
+//! - **RoundRobin** — stateless baseline, ignores load entirely;
+//! - **LeastOutstandingKv** — the KV-aware policy: pick the instance
+//!   with the fewest outstanding KV pages (pages held in its
+//!   `PagePool` plus pages the queued requests will need). Serving
+//!   load is KV-page pressure, not request count, so this beats
+//!   least-requests when prompt lengths are heavy-tailed;
+//! - **SessionAffinity** — hash the session (tenant) to a fixed
+//!   instance, the prefix-cache-friendly policy: all turns of one
+//!   session land where its KV prefix already lives. Only sensible
+//!   for many-tenant workloads — a single hot session saturates its
+//!   pinned instance by design.
+//!
+//! The same `Router` is reused for decode-target selection in
+//! disaggregated mode (there the policy is always
+//! least-outstanding-KV: the KV pages are about to move to that
+//! instance, so page headroom is the only signal that matters).
+
+use crate::serving::workload::Request;
+
+/// Request-assignment policy of the front-end router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through instances in order.
+    RoundRobin,
+    /// Fewest outstanding KV pages (held + queued demand).
+    LeastOutstandingKv,
+    /// Pin each session (tenant) to one instance by hash.
+    SessionAffinity,
+}
+
+/// One routing candidate as the router sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateLoad {
+    /// Instance index in the cluster.
+    pub instance: usize,
+    /// KV pages held in the instance's pool plus pages its queued
+    /// requests will need at admission.
+    pub outstanding_kv_pages: usize,
+}
+
+/// Deterministic router: identical call sequences produce identical
+/// assignments, so cluster runs replay bit-identically.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    rr: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy, rr: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick an instance for `req` among `candidates` (non-empty).
+    pub fn route(&mut self, req: &Request, candidates: &[CandidateLoad]) -> usize {
+        assert!(!candidates.is_empty(), "router needs at least one candidate");
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let c = candidates[self.rr % candidates.len()].instance;
+                self.rr += 1;
+                c
+            }
+            RoutePolicy::LeastOutstandingKv => least_outstanding(candidates),
+            RoutePolicy::SessionAffinity => {
+                let h = (req.tenant as u64)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(0x1234);
+                candidates[(h % candidates.len() as u64) as usize].instance
+            }
+        }
+    }
+}
+
+/// The candidate with the fewest outstanding KV pages, ties toward the
+/// lowest instance index.
+pub fn least_outstanding(candidates: &[CandidateLoad]) -> usize {
+    candidates
+        .iter()
+        .min_by_key(|c| (c.outstanding_kv_pages, c.instance))
+        .expect("non-empty candidate set")
+        .instance
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tenant: usize) -> Request {
+        Request {
+            id,
+            tenant,
+            arrival: 0.0,
+            prompt_tokens: 8,
+            output_tokens: 4,
+        }
+    }
+
+    fn cands(loads: &[usize]) -> Vec<CandidateLoad> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(instance, &outstanding_kv_pages)| CandidateLoad {
+                instance,
+                outstanding_kv_pages,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let c = cands(&[100, 0, 50]);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 0), &c)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2], "load-oblivious cycle");
+    }
+
+    #[test]
+    fn least_kv_picks_minimum_ties_to_lowest_index() {
+        let mut r = Router::new(RoutePolicy::LeastOutstandingKv);
+        assert_eq!(r.route(&req(0, 0), &cands(&[30, 10, 20])), 1);
+        assert_eq!(r.route(&req(1, 0), &cands(&[10, 10, 20])), 0);
+    }
+
+    #[test]
+    fn session_affinity_is_sticky_and_spreads_tenants() {
+        let mut r = Router::new(RoutePolicy::SessionAffinity);
+        let c = cands(&[0, 0, 0, 0]);
+        for tenant in 0..16 {
+            let first = r.route(&req(0, tenant), &c);
+            for id in 1..8 {
+                assert_eq!(
+                    r.route(&req(id, tenant), &c),
+                    first,
+                    "tenant {tenant} must stay pinned"
+                );
+            }
+        }
+        let assigned: std::collections::BTreeSet<usize> =
+            (0..64).map(|tenant| r.route(&req(0, tenant), &c)).collect();
+        assert!(assigned.len() > 1, "many tenants must spread out");
+    }
+
+    #[test]
+    fn routing_ignores_load_only_for_oblivious_policies() {
+        // least-kv reacts to a load change, round-robin does not
+        let mut lk = Router::new(RoutePolicy::LeastOutstandingKv);
+        assert_eq!(lk.route(&req(0, 0), &cands(&[5, 9])), 0);
+        assert_eq!(lk.route(&req(1, 0), &cands(&[12, 9])), 1);
+    }
+}

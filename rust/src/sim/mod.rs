@@ -25,4 +25,7 @@ pub mod tags {
     pub const PREFILL: u64 = 8;
     /// Serving: decode-only batcher iteration.
     pub const DECODE: u64 = 9;
+    /// Serving: KV-cache page migration between instances (prefill →
+    /// decode handoff over the fabric).
+    pub const KV_XFER: u64 = 10;
 }

@@ -17,11 +17,17 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of workers a sweep over `n_items` would use: the
 /// `HP_SWEEP_THREADS` override if set, else available hardware
-/// parallelism, capped by the number of items.
+/// parallelism, capped by the number of items. Always at least 1.
+///
+/// The override is forgiving: surrounding whitespace is trimmed
+/// (`HP_SWEEP_THREADS=" 4 "` from a shell script works), `0` clamps
+/// to the sequential path instead of producing a zero-worker sweep,
+/// and an unparsable value falls back to hardware parallelism rather
+/// than failing the run.
 pub fn worker_count(n_items: usize) -> usize {
     let env = std::env::var("HP_SWEEP_THREADS")
         .ok()
-        .and_then(|v| v.parse::<usize>().ok());
+        .and_then(|v| v.trim().parse::<usize>().ok());
     let hw = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -162,4 +168,9 @@ mod tests {
         assert_eq!(worker_count(1), 1);
         assert!(worker_count(64) >= 1);
     }
+
+    // HP_SWEEP_THREADS override behavior is covered by
+    // `rust/tests/sweep_env.rs`: mutating a process-global env var
+    // here would race with every concurrently running test that calls
+    // `parallel_map`, so the env tests own a dedicated test binary.
 }

@@ -8,7 +8,7 @@ use super::engine::{Engine, SimResult};
 use crate::util::json::{Json, JsonObj};
 
 /// Tag names for trace events; index = tag value used in `add_task`.
-pub const TAG_NAMES: [&str; 10] = [
+pub const TAG_NAMES: [&str; 11] = [
     "compute",
     "comm",
     "prefetch",
@@ -19,6 +19,7 @@ pub const TAG_NAMES: [&str; 10] = [
     "update",
     "prefill",
     "decode",
+    "kv_xfer",
 ];
 
 /// Human-readable name for a task tag.

@@ -158,7 +158,14 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/Infinity literals; emitting Rust's
+                // "NaN"/"inf" debug forms would produce an unparsable
+                // document. Serialize non-finite numbers as null, the
+                // convention JSON consumers (and our own parser)
+                // round-trip safely.
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -541,6 +548,42 @@ mod tests {
         let v = Json::parse(src).unwrap();
         assert_eq!(Json::parse(&v.dump()).unwrap(), v);
         assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // regression: NaN/inf (e.g. percentiles of an empty outcome
+        // set) rendered as bare `NaN`, producing invalid JSON
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "null");
+
+        // a BENCH_serving.json-shaped metrics object with a poisoned
+        // entry still round-trips through our own parser
+        let mut metrics = JsonObj::new();
+        metrics.insert("serving.pool_offload.max_qps_under_slo", Json::from(60.0));
+        metrics.insert("serving.offload_qps_gain", Json::Num(f64::NAN));
+        metrics.insert("serving.p99_ttft_s", Json::Num(f64::INFINITY));
+        let mut root = JsonObj::new();
+        root.insert("metrics", Json::Obj(metrics));
+        let doc = Json::Obj(root);
+        for dump in [doc.dump(), doc.pretty()] {
+            let back = Json::parse(&dump).expect("emitted JSON must be valid");
+            // metric names contain dots, so index the object directly
+            let metrics = back
+                .as_obj()
+                .and_then(|o| o.get("metrics"))
+                .and_then(Json::as_obj)
+                .expect("metrics object survives");
+            assert_eq!(metrics.get("serving.offload_qps_gain"), Some(&Json::Null));
+            assert_eq!(metrics.get("serving.p99_ttft_s"), Some(&Json::Null));
+            assert_eq!(
+                metrics
+                    .get("serving.pool_offload.max_qps_under_slo")
+                    .and_then(Json::as_f64),
+                Some(60.0)
+            );
+        }
     }
 
     #[test]

@@ -84,12 +84,22 @@ impl Percentiles {
     }
 
     /// p in [0, 100]. Linear interpolation between closest ranks.
+    /// NaN samples of either sign order past +inf (IEEE total_cmp
+    /// alone would put negative-sign NaNs — what x86 0/0 actually
+    /// produces — *below* every finite sample), so they cannot panic
+    /// the sort and only surface at the top percentiles: a
+    /// NaN-polluted p100 is visible, a clean p50 is not perturbed.
     pub fn pct(&mut self, p: f64) -> f64 {
         if self.xs.is_empty() {
             return 0.0;
         }
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.xs.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
+                (false, false) => a.total_cmp(b),
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+            });
             self.sorted = true;
         }
         let rank = (p / 100.0) * (self.xs.len() - 1) as f64;
@@ -219,6 +229,28 @@ mod tests {
         assert!((p.pct(99.0) - 99.01).abs() < 0.02);
         assert_eq!(p.pct(0.0), 1.0);
         assert_eq!(p.pct(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentiles_survive_nan_samples() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked on NaN
+        let mut p = Percentiles::new();
+        p.add(3.0);
+        p.add(f64::NAN);
+        p.add(1.0);
+        p.add(2.0);
+        assert_eq!(p.pct(0.0), 1.0);
+        assert_eq!(p.median(), 2.5, "NaN sorts last, finite ranks unchanged");
+        assert!(p.pct(100.0).is_nan(), "pollution visible at the top");
+        // the NaN x86 actually produces for 0.0/0.0 has its sign bit
+        // set; it must ALSO sort last, not below every finite sample
+        let mut q = Percentiles::new();
+        q.add(-f64::NAN);
+        q.add(0.5);
+        q.add(1.5);
+        assert_eq!(q.pct(0.0), 0.5, "negative-sign NaN must not displace p0");
+        assert_eq!(q.median(), 1.5, "finite samples keep their ranks");
+        assert!(q.pct(100.0).is_nan());
     }
 
     #[test]

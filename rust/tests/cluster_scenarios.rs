@@ -1,0 +1,143 @@
+//! Cluster serving scenario tests (ISSUE 3 acceptance): the
+//! paper-shaped fabric crossover. On the long-prompt preset,
+//! prefill/decode disaggregation sustains a strictly higher
+//! max-QPS-under-p99-SLO operating point than colocation on the
+//! supernode fabric (KV migration is near-free over pooled memory) and
+//! a strictly lower one on the legacy RoCE-class fabric (the staged KV
+//! copy steals decode iterations). Colocation never touches the
+//! fabric, so its operating point is bit-identical across fabrics —
+//! migration cost is provably the deciding term.
+//!
+//! The bounds asserted here are mirrored (more loosely) by the CI
+//! regression gate: `benches/bench_serving.rs` emits the same
+//! deterministic virtual-time metrics into `BENCH_serving.json`, and
+//! `tools/bench_regression.py` compares them against
+//! `BENCH_baseline.json`. Green tests imply a green gate.
+
+use hyperparallel::serving::{
+    cluster_rate_sweep, cluster_slo, crossover_comparison, crossover_scenario,
+    run_cluster_scenario, ClusterFabric, ClusterMode, CLUSTER_RATES,
+};
+use hyperparallel::sim::tags;
+
+#[test]
+fn fabric_decides_the_disaggregation_crossover() {
+    let s = crossover_comparison();
+
+    // Supernode: disaggregation wins (acceptance bound 1.10x; the
+    // preset lands ~1.33x — colocated 60 vs disaggregated 80).
+    assert!(
+        s.disagg_supernode.rate >= 1.10 * s.colocated_supernode.rate,
+        "disaggregation must win on the supernode fabric: {} vs {}",
+        s.disagg_supernode.rate,
+        s.colocated_supernode.rate
+    );
+    assert!(
+        s.disagg_supernode.rate >= 70.0,
+        "supernode disaggregated operating point too low: {}",
+        s.disagg_supernode.rate
+    );
+    assert!(
+        s.colocated_supernode.rate >= 40.0,
+        "colocated operating point too low: {}",
+        s.colocated_supernode.rate
+    );
+
+    // Legacy: colocation wins (acceptance bound: colocated >=
+    // disaggregated; the preset lands ~3x — 60 vs 20).
+    assert!(
+        s.colocated_legacy.rate >= s.disagg_legacy.rate,
+        "colocation must win on the legacy fabric: {} vs {}",
+        s.colocated_legacy.rate,
+        s.disagg_legacy.rate
+    );
+    assert!(
+        s.colocated_legacy.rate >= 1.5 * s.disagg_legacy.rate,
+        "the legacy gap should be decisive: {} vs {}",
+        s.colocated_legacy.rate,
+        s.disagg_legacy.rate
+    );
+
+    // Colocation never migrates, so the fabric cannot move its
+    // operating point: the crossover is entirely the migration term.
+    assert_eq!(
+        s.colocated_supernode.rate, s.colocated_legacy.rate,
+        "colocated operating point must be fabric-independent"
+    );
+    assert_eq!(
+        s.colocated_supernode.p99_ttft.to_bits(),
+        s.colocated_legacy.p99_ttft.to_bits(),
+        "colocated runs must be bit-identical across fabrics"
+    );
+
+    // Every winning operating point actually met the SLO cleanly.
+    let slo = cluster_slo();
+    for op in [
+        &s.colocated_supernode,
+        &s.disagg_supernode,
+        &s.colocated_legacy,
+        &s.disagg_legacy,
+    ] {
+        assert!(op.attains_slo);
+        assert_eq!(op.rejected, 0);
+        assert!(op.p99_ttft <= slo.ttft_p99);
+        assert!(op.p99_tpot <= slo.tpot_p99);
+    }
+}
+
+#[test]
+fn crossover_sweep_is_deterministic_and_composed() {
+    let sc = crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated);
+    let slo = cluster_slo();
+    let a = cluster_rate_sweep(&sc, &CLUSTER_RATES[..3], &slo);
+    let b = cluster_rate_sweep(&sc, &CLUSTER_RATES[..3], &slo);
+    assert_eq!(a.len(), 3);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.rate, y.rate);
+        assert_eq!(x.completed, y.completed);
+        assert_eq!(x.p99_ttft.to_bits(), y.p99_ttft.to_bits());
+        assert_eq!(x.p99_tpot.to_bits(), y.p99_tpot.to_bits());
+    }
+
+    // the cluster trace is a first-class indexed SimResult: four
+    // instance resources, prefill work disjoint from decode work, and
+    // kv_xfer staged on the decode engines only
+    let rep = run_cluster_scenario(&sc);
+    let trace = &rep.serving.trace;
+    assert_eq!(trace.resources, 4);
+    assert!(trace.tagged_count(tags::KV_XFER) > 0);
+    assert!(trace.tagged_count(tags::PREFILL) > 0);
+    assert!(trace.tagged_count(tags::DECODE) > 0);
+    for iv in trace.intervals_tagged(tags::KV_XFER) {
+        assert!(
+            iv.resource.0 >= 2,
+            "instances 0/1 are the prefill pool; xfer lands on decode engines"
+        );
+    }
+    for iv in trace.intervals_tagged(tags::PREFILL) {
+        assert!(iv.resource.0 < 2, "prefill work stays in the prefill pool");
+    }
+    assert_eq!(rep.kv_migrations as usize, rep.completed());
+    assert!(rep.kv_bytes_migrated > 0.0);
+}
+
+#[test]
+fn disaggregated_overload_backpressures_instead_of_dropping() {
+    // far past the legacy operating point: parked pages throttle the
+    // prefill pool, nothing is dropped, and every request still
+    // completes — the SLO failure mode is latency, not loss
+    let mut sc = crossover_scenario(ClusterFabric::Legacy, ClusterMode::Disaggregated);
+    sc.workload.arrival = sc.workload.arrival.with_mean_rate(80.0);
+    let submitted = sc.workload.generate(sc.horizon).len();
+    let rep = run_cluster_scenario(&sc);
+    assert_eq!(rep.completed() + rep.serving.rejected as usize, submitted);
+    assert_eq!(rep.serving.rejected, 0, "backpressure, not loss");
+    assert_eq!(rep.kv_migrations as usize, rep.completed());
+    let slo = cluster_slo();
+    let op = rep.operating_point(80.0, &slo);
+    assert!(!op.attains_slo, "80 req/s must blow the SLO on legacy");
+    assert!(
+        op.p99_ttft > slo.ttft_p99 || op.p99_tpot > slo.tpot_p99,
+        "failure shows up as latency"
+    );
+}

@@ -1,12 +1,13 @@
-//! Property tests for KV page accounting (ISSUE 2 satellite): random
-//! alloc/demote/release sequences against `serving::memory::PagePool`
-//! never leak or double-free pages — per tier, `free + Σ per-sequence
-//! used` always equals capacity — and the single-sequence
-//! `hyperoffload::kvcache::PagedKvCache` keeps its page/budget/swap
-//! invariants under arbitrary append streams.
+//! Property tests for KV page accounting: random alloc/demote/release
+//! sequences against `serving::memory::PagePool` never leak or
+//! double-free pages — per tier, `free + Σ per-sequence used` always
+//! equals capacity (ISSUE 2 satellite); cluster-level conservation
+//! holds across inter-instance KV migrations (ISSUE 3 satellite); and
+//! the single-sequence `hyperoffload::kvcache::PagedKvCache` keeps its
+//! page/budget/swap invariants under arbitrary append streams.
 
 use hyperparallel::hyperoffload::kvcache::{KvCacheConfig, PagedKvCache};
-use hyperparallel::serving::PagePool;
+use hyperparallel::serving::{migrate_pages, PagePool};
 use hyperparallel::util::prop::{forall, pair_of, usize_in, vec_of, Check};
 use std::collections::BTreeMap;
 
@@ -166,6 +167,168 @@ fn double_release_frees_nothing() {
             Check::Pass
         },
     );
+}
+
+/// One random cluster op over a fleet of instance pools:
+/// (op selector, (sequence selector, (page count, target pool))).
+type ClusterOp = (usize, (usize, (usize, usize)));
+
+const FLEET: usize = 3;
+const INST_CAP: usize = 16;
+
+fn cluster_ops_gen() -> hyperparallel::util::prop::Gen<Vec<ClusterOp>> {
+    vec_of(
+        pair_of(
+            usize_in(0, 3),
+            pair_of(usize_in(0, 7), pair_of(usize_in(1, 6), usize_in(0, FLEET - 1))),
+        ),
+        0,
+        160,
+    )
+}
+
+/// Cluster-level conservation (ISSUE 3 satellite): random
+/// alloc/grow/release/**migrate** sequences over a fleet of instance
+/// pools never leak or double-free a page. A sequence's pages live in
+/// exactly one instance at a time (the cluster's custody rule:
+/// allocate at the destination, then release the source), every pool
+/// individually conserves `free + Σ ledger = capacity`, and the
+/// fleet-wide used total always equals the model's.
+#[test]
+fn kv_pages_conserved_across_instance_migrations() {
+    forall("cluster-migration-conservation", 250, cluster_ops_gen(), |ops| {
+        let mut pools: Vec<PagePool> = (0..FLEET).map(|_| PagePool::new(INST_CAP, 0)).collect();
+        // model: seq -> (owner instance, pages held)
+        let mut owner: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+        for (step, &(op, (seq, (n, target)))) in ops.iter().enumerate() {
+            let seq = seq as u64;
+            match op {
+                // allocate/grow n pages wherever the sequence lives
+                // (fresh sequences are admitted at `target`)
+                0 => {
+                    let at = owner.get(&seq).map(|&(o, _)| o).unwrap_or(target);
+                    let fits = n <= pools[at].hbm_free();
+                    let got = pools[at].try_alloc_hbm(seq, n);
+                    if got != fits {
+                        return Check::Fail(format!(
+                            "step {step}: alloc({seq}, {n}) = {got}, space says {fits}"
+                        ));
+                    }
+                    if got {
+                        owner.entry(seq).or_insert((at, 0)).1 += n;
+                    }
+                }
+                // release everything the sequence holds
+                1 => match owner.remove(&seq) {
+                    Some((o, pages)) => {
+                        let f = pools[o].release(seq);
+                        if f.total() != pages {
+                            return Check::Fail(format!(
+                                "step {step}: release({seq}) freed {} of {pages}",
+                                f.total()
+                            ));
+                        }
+                    }
+                    None => {
+                        if pools[target].release(seq).total() != 0 {
+                            return Check::Fail(format!(
+                                "step {step}: released pages for an unknown sequence"
+                            ));
+                        }
+                    }
+                },
+                // migrate the whole sequence to `target`
+                _ => {
+                    let (src, pages) = match owner.get(&seq) {
+                        Some(&(o, p)) => (o, p),
+                        None => {
+                            // migrating an unknown sequence moves nothing
+                            let (a, b) = split_pair(&mut pools, target, (target + 1) % FLEET);
+                            if migrate_pages(a, b, seq) {
+                                return Check::Fail(format!(
+                                    "step {step}: migrated a sequence that holds nothing"
+                                ));
+                            }
+                            continue;
+                        }
+                    };
+                    if src == target {
+                        continue;
+                    }
+                    let expect = pools[target].hbm_free() >= pages;
+                    let (a, b) = split_pair(&mut pools, src, target);
+                    let moved = migrate_pages(a, b, seq);
+                    if moved != expect {
+                        return Check::Fail(format!(
+                            "step {step}: migrate({seq}) = {moved}, space says {expect}"
+                        ));
+                    }
+                    if moved {
+                        owner.insert(seq, (target, pages));
+                        if pools[src].seq_pages(seq).total() != 0 {
+                            return Check::Fail(format!(
+                                "step {step}: source still holds pages after migration"
+                            ));
+                        }
+                        if pools[target].seq_pages(seq).total() != pages {
+                            return Check::Fail(format!(
+                                "step {step}: destination holds {} of {pages}",
+                                pools[target].seq_pages(seq).total()
+                            ));
+                        }
+                    }
+                }
+            }
+            // fleet-wide invariants after every op
+            for (i, p) in pools.iter().enumerate() {
+                if let Err(e) = p.check_conservation() {
+                    return Check::Fail(format!("step {step}: pool {i}: {e}"));
+                }
+            }
+            let model_used: usize = owner.values().map(|&(_, p)| p).sum();
+            let pool_used: usize = pools.iter().map(|p| p.hbm_used()).sum();
+            if model_used != pool_used {
+                return Check::Fail(format!(
+                    "step {step}: fleet used {pool_used} != model {model_used}"
+                ));
+            }
+            for (&seq, &(o, pages)) in &owner {
+                for (i, p) in pools.iter().enumerate() {
+                    let held = p.seq_pages(seq).total();
+                    let want = if i == o { pages } else { 0 };
+                    if held != want {
+                        return Check::Fail(format!(
+                            "step {step}: seq {seq} holds {held} in pool {i}, want {want}"
+                        ));
+                    }
+                }
+            }
+        }
+        // drain: releasing every sequence restores every pool
+        for seq in 0..7u64 {
+            if let Some((o, _)) = owner.remove(&seq) {
+                pools[o].release(seq);
+            }
+        }
+        for (i, p) in pools.iter().enumerate() {
+            if p.hbm_free() != INST_CAP {
+                return Check::Fail(format!("pool {i} leaked: free {}", p.hbm_free()));
+            }
+        }
+        Check::Pass
+    });
+}
+
+/// Two distinct mutable pool references out of the fleet.
+fn split_pair(pools: &mut [PagePool], a: usize, b: usize) -> (&mut PagePool, &mut PagePool) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = pools.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = pools.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
 }
 
 /// Spec for the single-sequence cache: (hbm token capacity beyond the

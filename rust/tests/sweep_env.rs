@@ -1,0 +1,38 @@
+//! `HP_SWEEP_THREADS` override behavior (ISSUE 3 satellite).
+//!
+//! These assertions mutate a process-global environment variable, and
+//! `sim::sweep::worker_count` reads it on every `parallel_map` call —
+//! so they cannot live in the library's unit-test binary, where other
+//! tests sweep concurrently (concurrent setenv/getenv is undefined
+//! behavior in glibc). This integration binary holds exactly one
+//! test, so nothing else can observe the transient values.
+
+use hyperparallel::sim::parallel_map;
+use hyperparallel::sim::sweep::worker_count;
+
+#[test]
+fn env_override_clamps_and_trims() {
+    let cases: [(&str, usize); 6] = [
+        ("7", 7),     // plain value honored
+        (" 7 ", 7),   // regression: untrimmed values fell back to hw
+        ("7\n", 7),   // trailing newline from `export X=$(...)`
+        ("0", 1),     // zero clamps to the sequential path
+        ("1", 1),
+        ("9999", 64), // capped by the item count
+    ];
+    for (val, want) in cases {
+        std::env::set_var("HP_SWEEP_THREADS", val);
+        assert_eq!(worker_count(64), want, "HP_SWEEP_THREADS={val:?}");
+    }
+    // unparsable values fall back to hardware parallelism, >= 1
+    for junk in ["", "zero", "-3", "1.5"] {
+        std::env::set_var("HP_SWEEP_THREADS", junk);
+        assert!(worker_count(64) >= 1, "HP_SWEEP_THREADS={junk:?}");
+    }
+    // a sweep under an override still produces ordered results
+    std::env::set_var("HP_SWEEP_THREADS", "2");
+    let items: Vec<usize> = (0..50).collect();
+    let out = parallel_map(&items, |&x| x + 1);
+    std::env::remove_var("HP_SWEEP_THREADS");
+    assert_eq!(out, (1..=50).collect::<Vec<_>>());
+}

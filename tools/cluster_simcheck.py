@@ -1,0 +1,549 @@
+#!/usr/bin/env python3
+"""Faithful Python mirror of rust/src/serving/{router,cluster}.rs
+(same RNG, same cost formulas, same event ordering) to validate the
+deterministic cluster-crossover operating points the scenario tests
+and the bench-regression baseline rely on — usable in build containers
+that ship no Rust toolchain (see .claude/skills/verify/SKILL.md, and
+tools/serving_simcheck.py for the single-instance batcher mirror).
+Keep in sync with rust/src/serving/cluster.rs when semantics change.
+
+Expected output on the checked-in presets (seed 42):
+  colocated  (both fabrics): max-QPS-under-SLO 60
+  disagg     on supernode:   max-QPS-under-SLO 80   (>= 1.10x colocated)
+  disagg     on legacy:      max-QPS-under-SLO 20   (colocated >= 1.5x)
+"""
+import math
+from collections import deque
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """xoshiro256++ seeded via SplitMix64 — port of util/rng.rs."""
+
+    def __init__(self, seed):
+        s = []
+        state = seed & MASK
+        for _ in range(4):
+            state = (state + 0x9E3779B97F4A7C15) & MASK
+            z = state
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        x = self.next_u64()
+        m = x * n
+        l = m & MASK
+        if l < n:
+            t = ((-n) & MASK) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & MASK
+        return m >> 64
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo)
+
+    def exponential(self, lam):
+        return -math.log(max(self.next_f64(), 1e-300)) / lam
+
+
+def gen_requests(rate, horizon, seed, plo, phi, olo, ohi):
+    """Poisson arrivals, Uniform prompt [plo,phi], Uniform output [olo,ohi].
+    Mirrors WorkloadConfig::generate ordering: arrival times first, then
+    per-request prompt+output samples."""
+    rng = Rng(seed)
+    ts = []
+    t = rng.exponential(rate)
+    while t < horizon:
+        ts.append(t)
+        t += rng.exponential(rate)
+    reqs = []
+    for i, at in enumerate(ts):
+        prompt = rng.range(max(plo, 1), max(phi, plo) + 1)
+        output = rng.range(max(olo, 1), max(ohi, olo) + 1)
+        reqs.append(dict(id=i, tenant=0, arrival=at, prompt=prompt, output=output))
+    return reqs
+
+
+# ---- fabric / placement ------------------------------------------------
+
+FABRICS = {
+    "supernode": dict(cross_rack=(196e9, 200e-9, 2), rack=(392e9, 200e-9, 1),
+                      board=(392e9, 200e-9, 1)),
+    "legacy": dict(cross_rack=(12.5e9, 2e-6, 4), rack=(25e9, 2e-6, 2),
+                   board=(200e9, 500e-9, 1)),
+}
+
+
+def p2p_time(fabric, tier, nbytes):
+    bw, lat, hops = FABRICS[fabric][tier]
+    return lat * hops + nbytes / bw
+
+
+# ---- cost model --------------------------------------------------------
+
+class Cost:
+    def __init__(self, kvb, tpp, weight, hbm_tokens, hbm_bw=1.6e12,
+                 pool_bw=392e9, attn=40e6, frac=0.0,
+                 prefill_rate=100e3, overhead=100e-6):
+        self.kvb = kvb
+        self.tpp = tpp
+        self.weight = weight
+        self.hbm_usable = weight + hbm_tokens * kvb
+        self.hbm_bw = hbm_bw
+        self.pool_bw = pool_bw
+        self.attn = attn
+        self.frac = frac
+        self.prefill_rate = prefill_rate
+        self.overhead = overhead
+
+    def kv_token_capacity(self):
+        resident = int(self.weight * (1.0 - self.frac))
+        return (self.hbm_usable - min(resident, self.hbm_usable)) // self.kvb
+
+    def hbm_pages(self):
+        return self.kv_token_capacity() // self.tpp
+
+    def iteration_latency(self, hbm_ctx, pool_ctx, prefill_tokens):
+        w = float(self.weight)
+        hbm_side = ((1.0 - self.frac) * w + hbm_ctx * self.kvb) / self.hbm_bw \
+            + (hbm_ctx + pool_ctx) / self.attn \
+            + prefill_tokens / self.prefill_rate
+        pool_num = self.frac * w + pool_ctx * self.kvb
+        pool_side = 0.0 if pool_num == 0.0 else pool_num / self.pool_bw
+        return self.overhead + max(hbm_side, pool_side)
+
+
+# ---- cluster DES -------------------------------------------------------
+
+COLOCATED, PREFILL, DECODE = 0, 1, 2
+
+
+class Instance:
+    def __init__(self, role, slots, pages):
+        self.role = role
+        self.slots = slots
+        self.hbm_capacity = pages
+        self.hbm_free = pages
+        self.ledger = {}  # seq -> pages
+        self.queue = deque()   # dicts: req fields + produced/first/preempt/kv_src
+        self.ingest = deque()  # (entry, xfer_duration)
+        self.active = [None] * slots
+        self.work_end = None   # (t, kind) kind in {"iter","ingest"}
+        self.cur_ctx = 0
+
+    def alloc(self, seq, pages):
+        if pages > self.hbm_free:
+            return False
+        self.hbm_free -= pages
+        self.ledger[seq] = self.ledger.get(seq, 0) + pages
+        return True
+
+    def release(self, seq):
+        p = self.ledger.pop(seq, 0)
+        self.hbm_free += p
+        return p
+
+    def active_count(self):
+        return sum(1 for s in self.active if s is not None)
+
+    def outstanding_kv(self, tpp):
+        used = self.hbm_capacity - self.hbm_free
+        queued = sum(pages_for(q["prompt_len"] + max(q["produced"], 1), tpp)
+                     for q in self.queue)
+        inbound = sum(pages_for(e["prompt_len"] + max(e["produced"], 1), tpp)
+                      for e, _ in self.ingest)
+        return used + queued + inbound
+
+
+def pages_for(tokens, tpp):
+    return max((tokens + tpp - 1) // tpp, 1)
+
+
+def plan_refill(occupied, max_seq, lens, gate):
+    plan = []
+    qi = 0
+    for slot, occ in enumerate(occupied):
+        if occ:
+            continue
+        if qi >= len(lens):
+            break
+        plen = min(lens[qi], max_seq - 1)
+        if not gate(qi, plen):
+            break
+        plan.append((slot, qi, plen))
+        qi += 1
+    return plan
+
+
+class Cluster:
+    def __init__(self, cost, insts, max_seq, fabric, tier, route="least_kv",
+                 max_preemptions=4):
+        self.cost = cost
+        self.insts = insts
+        self.max_seq = max_seq
+        self.fabric = fabric
+        self.tier = tier  # tier between instance pairs (uniform placement)
+        self.route = route
+        self.max_preemptions = max_preemptions
+        self.rr = 0
+        # stats
+        self.outcomes = []
+        self.rejected = 0
+        self.preemptions = 0
+        self.migrations = 0
+        self.xfer_time = 0.0
+        self.intervals = []  # (inst, start, finish, tag)
+        self.makespan = 0.0
+        self.peak_ctx = 0
+        self.handoffs = []  # (seq id, src instance) pending release
+        self.kick = set()   # instances to wake after releases
+
+    def entry_instances(self):
+        roles = {i.role for i in self.insts}
+        want = PREFILL if PREFILL in roles else COLOCATED
+        return [k for k, i in enumerate(self.insts) if i.role == want]
+
+    def decode_instances(self):
+        return [k for k, i in enumerate(self.insts) if i.role == DECODE]
+
+    def route_arrival(self, req):
+        cands = self.entry_instances()
+        if self.route == "round_robin":
+            k = cands[self.rr % len(cands)]
+            self.rr += 1
+            return k
+        if self.route == "session":
+            h = (req["tenant"] * 0x9E3779B97F4A7C15 + 0x1234) & MASK
+            return cands[h % len(cands)]
+        # least outstanding kv
+        return min(cands, key=lambda k: (self.insts[k].outstanding_kv(self.cost.tpp), k))
+
+    def pick_decode(self):
+        cands = self.decode_instances()
+        return min(cands, key=lambda k: (self.insts[k].outstanding_kv(self.cost.tpp), k))
+
+    # -- per-instance mechanics ------------------------------------------
+
+    def cold_order(self, inst):
+        v = sorted((s["admitted_at"], s["id"]) for s in inst.active if s)
+        return [sid for _, sid in v]
+
+    def youngest_slot(self, inst):
+        best = None
+        for i, s in enumerate(inst.active):
+            if s is None:
+                continue
+            if best is None or s["admitted_at"] > best[0] or \
+                    (s["admitted_at"] == best[0] and i > best[1]):
+                best = (s["admitted_at"], i)
+        return None if best is None else best[1]
+
+    def preempt(self, k, slot):
+        inst = self.insts[k]
+        seq = inst.active[slot]
+        inst.active[slot] = None
+        inst.release(seq["id"])
+        self.preemptions += 1
+        pre = seq["preemptions"] + 1
+        if pre > self.max_preemptions:
+            self.rejected += 1
+            return
+        inst.queue.appendleft(dict(
+            id=seq["id"], tenant=seq["tenant"], arrival=seq["arrival"],
+            prompt_len=seq["prompt_len"], output=seq["output"],
+            produced=0, first=seq["first"], preemptions=pre, kv_src=None))
+
+    def grow_active(self, k):
+        inst = self.insts[k]
+        i = 0
+        while i < len(inst.active):
+            s = inst.active[i]
+            if s is None:
+                i += 1
+                continue
+            need = pages_for(s["prompt_len"] + s["produced"], self.cost.tpp)
+            have = inst.ledger.get(s["id"], 0)
+            if need <= have:
+                i += 1
+                continue
+            if inst.alloc(s["id"], need - have):
+                i += 1
+                continue
+            victim = self.youngest_slot(inst)
+            self.preempt(k, victim)
+
+    def finish_iteration(self, k, t):
+        inst = self.insts[k]
+        inst.work_end = None
+        for slot in range(len(inst.active)):
+            s = inst.active[slot]
+            if s is None:
+                continue
+            s["produced"] += 1
+            if s["first"] is None:
+                s["first"] = t
+            target = min(s["output"], self.max_seq - s["prompt_len"])
+            done = s["produced"] >= target or \
+                s["prompt_len"] + s["produced"] >= self.max_seq
+            if inst.role == PREFILL and not done:
+                # prefill complete after the first token: migrate
+                inst.active[slot] = None
+                dst = self.pick_decode()
+                ctx = s["prompt_len"] + s["produced"]
+                nbytes = ctx * self.cost.kvb
+                xfer = p2p_time(self.fabric, self.tier, nbytes)
+                self.migrations += 1
+                self.xfer_time += xfer
+                entry = dict(id=s["id"], tenant=s["tenant"], arrival=s["arrival"],
+                             prompt_len=s["prompt_len"], output=s["output"],
+                             produced=s["produced"], first=s["first"],
+                             preemptions=s["preemptions"], kv_src=k)
+                self.insts[dst].ingest.append((entry, xfer))
+                self.kick.add(dst)
+                continue
+            if done:
+                self.outcomes.append(dict(
+                    arrival=s["arrival"], first=s["first"], finish=t,
+                    prompt=s["prompt_len"], output=s["produced"]))
+                inst.release(s["id"])
+                inst.active[slot] = None
+
+    def start_work(self, k, t):
+        inst = self.insts[k]
+        assert inst.work_end is None
+        if inst.ingest:
+            entry, xfer = inst.ingest[0]
+            finish = t + xfer
+            self.intervals.append((k, t, finish, "kv_xfer"))
+            self.makespan = max(self.makespan, finish)
+            inst.work_end = (finish, "ingest")
+            return
+        self.grow_active(k)
+        total_prefill = 0
+        while True:
+            occupied = [s is not None for s in inst.active]
+            empty = occupied.count(False)
+            heads = list(inst.queue)[:empty]
+            lens = [q["prompt_len"] for q in heads]
+
+            def gate(qi, plen):
+                q = heads[qi]
+                # ctx at admission: prompt (+ already-produced for migrated)
+                pages = pages_for(plen + q["produced"], self.cost.tpp)
+                if pages > inst.hbm_capacity:
+                    return False
+                return inst.alloc(q["id"], pages)
+
+            plan = plan_refill(occupied, self.max_seq, lens, gate)
+            for slot, qi, plen in plan:
+                q = inst.queue.popleft()
+                if q["produced"] == 0:
+                    total_prefill += plen
+                if q["kv_src"] is not None:
+                    self.handoffs.append((q["id"], q["kv_src"]))
+                inst.active[slot] = dict(
+                    id=q["id"], tenant=q["tenant"], arrival=q["arrival"],
+                    prompt_len=plen, output=q["output"], produced=q["produced"],
+                    admitted_at=t, first=q["first"], preemptions=q["preemptions"])
+            if plan or inst.active_count() > 0:
+                break
+            if inst.queue:
+                head = inst.queue[0]
+                pages = pages_for(min(head["prompt_len"], self.max_seq - 1)
+                                  + head["produced"], self.cost.tpp)
+                if pages > inst.hbm_capacity:
+                    q = inst.queue.popleft()
+                    if q["kv_src"] is not None:
+                        self.handoffs.append((q["id"], q["kv_src"]))
+                    self.rejected += 1
+                else:
+                    # head blocked on pages parked elsewhere or in-flight
+                    # ingest: wait for a release/ingest to re-kick us
+                    break
+            else:
+                break
+        inst.cur_ctx = sum(s["prompt_len"] + s["produced"]
+                           for s in inst.active if s)
+        if inst.active_count() == 0:
+            return
+        finish = t + self.cost.iteration_latency(inst.cur_ctx, 0, total_prefill)
+        self.intervals.append((k, t, finish,
+                               "prefill" if total_prefill else "decode"))
+        self.makespan = max(self.makespan, finish)
+        inst.work_end = (finish, "iter")
+
+    def finish_ingest(self, k, t):
+        inst = self.insts[k]
+        inst.work_end = None
+        entry, _ = inst.ingest.popleft()
+        inst.queue.append(entry)
+
+    def run(self, requests):
+        ni = 0
+        while True:
+            ta = requests[ni]["arrival"] if ni < len(requests) else None
+            te = None
+            for k, inst in enumerate(self.insts):
+                if inst.work_end is not None:
+                    cand = (inst.work_end[0], k)
+                    if te is None or cand < te:
+                        te = cand
+            if ta is None and te is None:
+                break
+            arrival_first = te is None or (ta is not None and ta <= te[0])
+            if arrival_first:
+                req = requests[ni]
+                ni += 1
+                t = req["arrival"]
+                k = self.route_arrival(req)
+                self.insts[k].queue.append(dict(
+                    id=req["id"], tenant=req["tenant"], arrival=req["arrival"],
+                    prompt_len=req["prompt"], output=req["output"],
+                    produced=0, first=None, preemptions=0, kv_src=None))
+                if self.insts[k].work_end is None:
+                    self.start_work(k, t)
+            else:
+                t, k = te
+                kind = self.insts[k].work_end[1]
+                if kind == "iter":
+                    self.finish_iteration(k, t)
+                else:
+                    self.finish_ingest(k, t)
+                self.start_work(k, t)
+            # drain cross-instance effects: page handoffs wake the
+            # source instance; migrations wake the target instance
+            while self.handoffs or self.kick:
+                hs, self.handoffs = self.handoffs, []
+                for sid, src in hs:
+                    self.insts[src].release(sid)
+                    self.kick.add(src)
+                ks, self.kick = sorted(self.kick), set()
+                for k2 in ks:
+                    if self.insts[k2].work_end is None:
+                        self.start_work(k2, t)
+            total = sum(i.cur_ctx for i in self.insts)
+            self.peak_ctx = max(self.peak_ctx, total)
+        # conservation: all pools drained
+        for k, inst in enumerate(self.insts):
+            assert not inst.ledger, f"inst {k} leaked {inst.ledger}"
+            assert inst.hbm_free == inst.hbm_capacity
+
+
+# ---- metrics -----------------------------------------------------------
+
+def pct(xs, p):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo, hi = int(math.floor(rank)), int(math.ceil(rank))
+    if lo == hi:
+        return xs[lo]
+    w = rank - lo
+    return xs[lo] * (1 - w) + xs[hi] * w
+
+
+def operating_point(c, rate, slo_ttft, slo_tpot):
+    ttft = [o["first"] - o["arrival"] for o in c.outcomes]
+    # mirror RequestOutcome::tpot exactly: single-token outputs count as 0.0
+    tpot = [(o["finish"] - o["first"]) / (o["output"] - 1) if o["output"] > 1 else 0.0
+            for o in c.outcomes]
+    p99_ttft, p99_tpot = pct(ttft, 99), pct(tpot, 99)
+    attains = bool(c.outcomes) and c.rejected == 0 and \
+        p99_ttft <= slo_ttft and p99_tpot <= slo_tpot
+    return dict(rate=rate, completed=len(c.outcomes), rejected=c.rejected,
+                preempt=c.preemptions, migrations=c.migrations,
+                p50_ttft=pct(ttft, 50), p99_ttft=p99_ttft, p99_tpot=p99_tpot,
+                peak_ctx=c.peak_ctx, attains=attains,
+                makespan=c.makespan)
+
+
+# ---- presets -----------------------------------------------------------
+
+def make_cluster(mode, fabric, cost, max_seq, colo_slots, pre_slots, dec_slots,
+                 n_colo=4, n_pre=2, n_dec=2):
+    pages = cost.hbm_pages()
+    if mode == "colocated":
+        insts = [Instance(COLOCATED, colo_slots, pages) for _ in range(n_colo)]
+    else:
+        insts = [Instance(PREFILL, pre_slots, pages) for _ in range(n_pre)] + \
+                [Instance(DECODE, dec_slots, pages) for _ in range(n_dec)]
+    return Cluster(cost, insts, max_seq, fabric, "cross_rack")
+
+
+def sweep(mode, fabric, rates, cfg):
+    slo_ttft, slo_tpot = cfg["slo"]
+    pts = []
+    for r in rates:
+        reqs = gen_requests(r, cfg["horizon"], cfg["seed"],
+                            cfg["plo"], cfg["phi"], cfg["olo"], cfg["ohi"])
+        cost = Cost(cfg["kvb"], cfg["tpp"], cfg["weight"], cfg["hbm_tokens"])
+        c = make_cluster(mode, fabric, cost, cfg["max_seq"],
+                         cfg["colo_slots"], cfg["pre_slots"], cfg["dec_slots"])
+        c.run(reqs)
+        pts.append(operating_point(c, r, slo_ttft, slo_tpot))
+    return pts
+
+
+def max_qps(pts):
+    best = None
+    for p in pts:
+        if p["attains"] and (best is None or p["rate"] > best["rate"]):
+            best = p
+    return best
+
+
+CFG = dict(
+    kvb=131072, tpp=64, weight=8 * (1 << 30), hbm_tokens=40960,
+    max_seq=4096, colo_slots=12, pre_slots=4, dec_slots=16,
+    plo=1600, phi=2400, olo=16, ohi=32, seed=42, horizon=8.0,
+    slo=(0.5, 0.013),
+)
+
+if __name__ == "__main__":
+    rates = [10, 20, 30, 40, 50, 60, 70, 80]
+    best = {}
+    for fabric in ["supernode", "legacy"]:
+        for mode in ["colocated", "disagg"]:
+            pts = sweep(mode, fabric, rates, CFG)
+            print(f"=== {mode} on {fabric} ===")
+            for p in pts:
+                print("  rate {rate:>5.0f} done {completed:>4} rej {rejected:>3} "
+                      "pre {preempt:>3} mig {migrations:>4} p50ttft {p50_ttft:7.4f} "
+                      "p99ttft {p99_ttft:7.4f} p99tpot {p99_tpot:8.5f} "
+                      "peak {peak_ctx:>6} slo {attains}".format(**p))
+            op = max_qps(pts)
+            best[(mode, fabric)] = None if op is None else op["rate"]
+            print("  max-QPS-under-SLO:", best[(mode, fabric)])
+    cs, ds = best[("colocated", "supernode")], best[("disagg", "supernode")]
+    cl, dl = best[("colocated", "legacy")], best[("disagg", "legacy")]
+    print(f"\nheadline: supernode disagg/colo = {ds / cs:.2f}x (gate >= 1.10), "
+          f"legacy colo/disagg = {cl / dl:.2f}x (gate >= 1.5)")
+    assert ds >= 1.10 * cs, "supernode crossover violated"
+    assert cl >= 1.5 * dl, "legacy crossover violated"
+    assert cs == cl, "colocation must be fabric-independent"
+    print("crossover bounds hold")
