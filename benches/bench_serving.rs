@@ -20,8 +20,9 @@
 //! gated metric sweep always runs the full fixed grid.
 
 use hyperparallel::serving::{
-    crossover_comparison, max_qps_under_slo, rate_sweep, run_scenario, smoke_scenario, smoke_slo,
-    ArrivalProcess, OperatingPoint, SMOKE_RATES,
+    autoscale_comparison, autoscale_crash_scenario, autoscale_slo, crossover_comparison,
+    max_qps_under_slo, rate_sweep, run_cluster_scenario, run_scenario, smoke_scenario, smoke_slo,
+    ArrivalProcess, ClusterFabric, OperatingPoint, AUTOSCALE_MEAN_RATE, SMOKE_RATES,
 };
 use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
 use hyperparallel::util::json::{Json, JsonObj};
@@ -55,6 +56,16 @@ fn main() {
         iters,
         || {
             std::hint::black_box(run_scenario(&bursty).completed());
+        },
+    ));
+    let elastic = hyperparallel::serving::autoscale_scenario(ClusterFabric::Supernode, true);
+    let n_elastic = elastic.workload.generate(elastic.horizon).len();
+    results.push(run(
+        &format!("serve sim elastic diurnal {n_elastic} reqs (warmup/drain/limbo)"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_cluster_scenario(&elastic).completed());
         },
     ));
 
@@ -149,6 +160,60 @@ fn main() {
     metrics.insert(
         "serving.cluster.legacy.colocated_qps_gain",
         Json::from(x.legacy_colocated_gain()),
+    );
+
+    section("elastic autoscaling (virtual time — deterministic, CI-gated)");
+    let aslo = autoscale_slo();
+    let cmp = autoscale_comparison(ClusterFabric::Supernode);
+    let static_op = cmp.static_report.operating_point(AUTOSCALE_MEAN_RATE, &aslo);
+    let elastic_op = cmp.elastic_report.operating_point(AUTOSCALE_MEAN_RATE, &aslo);
+    let saved = cmp.instance_seconds_saved();
+    println!(
+        "  static  peak: p99 ttft {:>10}  inst-sec {:>7.1}  slo {}",
+        fmt_secs(static_op.p99_ttft),
+        cmp.static_report.instance_seconds,
+        if static_op.attains_slo { "yes" } else { "no" }
+    );
+    println!(
+        "  elastic:      p99 ttft {:>10}  inst-sec {:>7.1}  ups {} downs {}  slo {}",
+        fmt_secs(elastic_op.p99_ttft),
+        cmp.elastic_report.instance_seconds,
+        cmp.elastic_report.scale_ups,
+        cmp.elastic_report.scale_downs,
+        if elastic_op.attains_slo { "yes" } else { "no" }
+    );
+    println!("  instance-seconds saved: {:.1}% (gate >= 25%)", saved * 100.0);
+    let crash_sc = autoscale_crash_scenario(ClusterFabric::Supernode);
+    let submitted = crash_sc.workload.generate(crash_sc.horizon).len();
+    let crash = run_cluster_scenario(&crash_sc);
+    let crash_completed_frac = crash.completed() as f64 / submitted as f64;
+    println!(
+        "  crash run: {}/{} completed ({} requeued, {} rejected), p99 ttft {}",
+        crash.completed(),
+        submitted,
+        crash.crash_requeues,
+        crash.serving.rejected,
+        fmt_secs(crash.serving.ttft_pct(99.0))
+    );
+    metrics.insert(
+        "serving.autoscale.instance_hours_saved_frac",
+        Json::from(saved),
+    );
+    metrics.insert(
+        "serving.autoscale.elastic.p99_ttft_s",
+        Json::from(elastic_op.p99_ttft),
+    );
+    metrics.insert(
+        "serving.autoscale.static.p99_ttft_s",
+        Json::from(static_op.p99_ttft),
+    );
+    metrics.insert(
+        "serving.autoscale.crash_completed_frac",
+        Json::from(crash_completed_frac),
+    );
+    metrics.insert(
+        "serving.autoscale.crash.p99_ttft_s",
+        Json::from(crash.serving.ttft_pct(99.0)),
     );
 
     // Combined artifact: wall-clock benches + gated virtual-time

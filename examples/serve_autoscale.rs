@@ -1,0 +1,118 @@
+//! Elastic autoscaling on the diurnal swing: static peak provisioning
+//! vs an SLO-driven autoscaler, on both fabrics, plus an injected
+//! instance crash.
+//!
+//! The checked-in scenario (seed 42) offers a two-tenant diurnal mix
+//! whose rate swings ≥4x between trough and peak. Static peak
+//! provisioning keeps 9 instances on all day; the elastic cluster
+//! starts at 4 and lets a queue-depth policy track the swing, paying a
+//! model-load warm-up (16 GiB over the actual fabric tier) per
+//! scale-up and draining KV out with the custody protocol per
+//! scale-down. The headline: on the supernode fabric elastic scaling
+//! holds the p99 TTFT SLO with ≥25% fewer instance-seconds; on the
+//! legacy fabric the ~1.4 s RoCE warm-up lag blows the SLO. A crash
+//! run shows zero requests lost and TTFT re-converging after the
+//! autoscaler replaces the dead instance.
+//!
+//! Run: `cargo run --release --example serve_autoscale`
+//!      `cargo run --release --example serve_autoscale -- --rate 30`
+
+use hyperparallel::serving::{
+    autoscale_crash_scenario, autoscale_scenario, autoscale_slo, autoscale_workload,
+    run_cluster_scenario, ClusterFabric, ClusterReport, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
+};
+use hyperparallel::util::args::Args;
+use hyperparallel::util::stats::{fmt_secs, render_table};
+
+fn row(label: &str, rep: &ClusterReport, rate: f64) -> Vec<String> {
+    let slo = autoscale_slo();
+    let op = rep.operating_point(rate, &slo);
+    vec![
+        label.to_string(),
+        format!("{}", op.completed),
+        format!("{}", op.rejected),
+        fmt_secs(op.p99_ttft),
+        fmt_secs(op.p99_tpot),
+        format!("{:.1}", rep.instance_seconds),
+        format!("{}", rep.scale_ups),
+        format!("{}", rep.scale_downs),
+        format!("{}", rep.crashes),
+        (if op.attains_slo { "yes" } else { "NO" }).to_string(),
+    ]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rate: f64 = args
+        .get("rate")
+        .map(|r| r.parse().expect("bad --rate"))
+        .unwrap_or(AUTOSCALE_MEAN_RATE);
+    let slo = autoscale_slo();
+    let wl = autoscale_workload(rate);
+    let swing = wl.arrival.swing_ratio(AUTOSCALE_PERIOD, 4800);
+    let n = wl.generate(AUTOSCALE_PERIOD).len();
+    println!(
+        "diurnal autoscale scenario: mean {rate:.0} req/s, {swing:.1}x swing, {n} requests \
+         over {AUTOSCALE_PERIOD:.0}s, SLO p99 TTFT {} / TPOT {}\n",
+        fmt_secs(slo.ttft_p99),
+        fmt_secs(slo.tpot_p99)
+    );
+
+    let mut rows = Vec::new();
+    let mut saved = None;
+    for fabric in [ClusterFabric::Supernode, ClusterFabric::Legacy] {
+        let mut static_sc = autoscale_scenario(fabric, false);
+        let mut elastic_sc = autoscale_scenario(fabric, true);
+        static_sc.workload = wl.clone();
+        elastic_sc.workload = wl.clone();
+        let st = run_cluster_scenario(&static_sc);
+        let el = run_cluster_scenario(&elastic_sc);
+        if fabric == ClusterFabric::Supernode {
+            saved = Some(1.0 - el.instance_seconds / st.instance_seconds);
+        }
+        rows.push(row(&format!("{fabric:?} static"), &st, rate));
+        rows.push(row(&format!("{fabric:?} elastic"), &el, rate));
+    }
+    let mut crash_sc = autoscale_crash_scenario(ClusterFabric::Supernode);
+    crash_sc.workload = wl.clone();
+    let crash = run_cluster_scenario(&crash_sc);
+    let crash_t = AUTOSCALE_PERIOD * 0.5;
+    rows.push(row("Supernode elastic+crash", &crash, rate));
+    print!(
+        "{}",
+        render_table(
+            &[
+                "deployment",
+                "done",
+                "rej",
+                "p99 ttft",
+                "p99 tpot",
+                "inst-sec",
+                "ups",
+                "downs",
+                "crashes",
+                "slo"
+            ],
+            &rows
+        )
+    );
+
+    if let Some(saved) = saved {
+        println!(
+            "\nheadline: elastic scaling saves {:.1}% instance-seconds vs static peak \
+             provisioning on the supernode fabric (gate >= 25%)",
+            saved * 100.0
+        );
+    }
+    println!(
+        "crash recovery: {} requeued, {} rejected; post-crash p99 TTFT (arrivals after \
+         t+2s): {}",
+        crash.crash_requeues,
+        crash.serving.rejected,
+        fmt_secs(
+            crash
+                .serving
+                .ttft_pct_arriving_in(99.0, crash_t + 2.0, AUTOSCALE_PERIOD)
+        )
+    );
+}

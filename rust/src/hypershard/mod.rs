@@ -17,7 +17,8 @@ pub mod strategies;
 
 pub use layout::{DimSharding, Layout, LayoutError, MapDim, ShardSpec};
 pub use planner::{
-    assign_ranks, best_plan, evaluate, explain, plan, PlanCandidate, PlannerConfig, RankGrid,
+    assign_ranks, best_plan, evaluate, explain, plan, try_assign_ranks, try_evaluate,
+    PlanCandidate, PlannerConfig, RankGrid,
 };
 pub use propagation::{
     elementwise, matmul, moe_dispatch, reduce, replicated_spec, CommRequirement, Propagated,

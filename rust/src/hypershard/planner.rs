@@ -65,13 +65,30 @@ impl Default for PlannerConfig {
 /// are contiguous ranks — i.e. land within a board whenever tp ≤
 /// dies_per_board. This *is* the topology awareness: the same strategy
 /// costed with scattered TP groups would be far slower.
+///
+/// Panics on a strategy that does not cover `n` devices; use
+/// [`try_assign_ranks`] to handle untrusted strategies.
 pub fn assign_ranks(strategy: &ParallelStrategy, n: usize) -> RankGrid {
+    try_assign_ranks(strategy, n).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible form of [`assign_ranks`]: errors (instead of panicking)
+/// when `tp·dp·pp·cp` does not exactly cover the `n` available
+/// devices — the guard that keeps a hand-built strategy from indexing
+/// past the device table deeper in the cost model.
+pub fn try_assign_ranks(strategy: &ParallelStrategy, n: usize) -> Result<RankGrid, String> {
     let tp = strategy.tp;
     let dp = strategy.dp;
     let pp = strategy.pp;
     let cp = strategy.cp;
-    assert_eq!(tp * dp * pp * cp, n, "strategy does not cover cluster");
-    RankGrid { tp, dp, pp, cp }
+    let covered = tp * dp * pp * cp;
+    if covered != n {
+        return Err(format!(
+            "strategy covers {covered} devices (tp {tp} x dp {dp} x pp {pp} x cp {cp}) \
+             but the cluster has {n}"
+        ));
+    }
+    Ok(RankGrid { tp, dp, pp, cp })
 }
 
 /// Rank bookkeeping for a 4D (pp, dp, cp, tp) grid, tp innermost.
@@ -110,15 +127,37 @@ fn divisors_up_to(n: usize, cap: usize) -> Vec<usize> {
     (1..=n.min(cap)).filter(|d| n % d == 0).collect()
 }
 
-/// Cost one concrete strategy.
+/// Cost one concrete strategy. Panics on a strategy that needs more
+/// devices than the topology has; use [`try_evaluate`] for untrusted
+/// strategies.
 pub fn evaluate(
     model: &ModelDesc,
     topo: &Topology,
     strategy: &ParallelStrategy,
     cfg: &PlannerConfig,
 ) -> PlanCandidate {
+    try_evaluate(model, topo, strategy, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible form of [`evaluate`]: errors when the strategy's device
+/// count exceeds the topology (the old behavior indexed past the
+/// device table inside `collectives::cost` and panicked there) or
+/// does not exactly cover the cluster (the invariant `plan()`'s
+/// enumeration maintains and `plans_cover_cluster_exactly` asserts).
+pub fn try_evaluate(
+    model: &ModelDesc,
+    topo: &Topology,
+    strategy: &ParallelStrategy,
+    cfg: &PlannerConfig,
+) -> Result<PlanCandidate, String> {
     let n = strategy.device_count();
-    let grid = assign_ranks(strategy, n);
+    let available = topo.device_count();
+    if n > available {
+        return Err(format!(
+            "strategy needs {n} devices but the topology has only {available}"
+        ));
+    }
+    let grid = try_assign_ranks(strategy, available)?;
     let spec = &topo.devices[0].spec;
 
     // --- compute: model FLOPs split over all devices --------------------
@@ -187,7 +226,7 @@ pub fn evaluate(
     let fits_hbm = state_bytes_per_device <= spec.hbm_bytes;
 
     let step_time = compute_time + tp_comm_time + dp_comm_time + ep_comm_time + pp_bubble_time;
-    PlanCandidate {
+    Ok(PlanCandidate {
         strategy: strategy.clone(),
         step_time,
         compute_time,
@@ -197,7 +236,7 @@ pub fn evaluate(
         pp_bubble_time,
         state_bytes_per_device,
         fits_hbm,
-    }
+    })
 }
 
 /// Search all feasible strategies for `model` on `topo`; return
@@ -236,7 +275,12 @@ pub fn plan(model: &ModelDesc, topo: &Topology, cfg: &PlannerConfig) -> Vec<Plan
                     fsdp: model.family == ModelFamily::Diffusion,
                     mpmd: matches!(model.family, ModelFamily::Rl | ModelFamily::OmniModal),
                 };
-                let cand = evaluate(model, topo, &strategy, cfg);
+                // enumeration only emits covering strategies, but stay
+                // on the checked path: a malformed one is skipped, not
+                // a panic deep inside the cost model
+                let Ok(cand) = try_evaluate(model, topo, &strategy, cfg) else {
+                    continue;
+                };
                 if cand.fits_hbm || cfg.allow_offload {
                     out.push(cand);
                 }
@@ -377,6 +421,50 @@ mod tests {
             assert!(c.fits_hbm);
             assert!(c.strategy.tp * c.strategy.pp >= 2, "{}", explain(&c));
         }
+    }
+
+    #[test]
+    fn oversized_strategy_is_an_error_not_a_panic() {
+        // regression: a strategy needing more devices than the topology
+        // has used to index past the device table inside the collective
+        // cost model (devices[id] panic); now it reports cleanly
+        let topo = Topology::tiny(); // 8 devices
+        let s = ParallelStrategy {
+            dp: 4,
+            tp: 8,
+            pp: 1,
+            ..Default::default()
+        };
+        assert_eq!(s.device_count(), 32);
+        let err = try_evaluate(&ModelDesc::dense_30b(), &topo, &s, &cfg_offload()).unwrap_err();
+        assert!(err.contains("32 devices"), "err: {err}");
+        assert!(err.contains("only 8"), "err: {err}");
+    }
+
+    #[test]
+    fn non_covering_strategy_is_an_error_not_a_panic() {
+        let s = ParallelStrategy {
+            dp: 3,
+            tp: 2,
+            pp: 1,
+            ..Default::default()
+        };
+        // 6 devices claimed, 8 available: the rank grid cannot cover
+        let err = try_assign_ranks(&s, 8).unwrap_err();
+        assert!(err.contains("covers 6"), "err: {err}");
+        assert!(err.contains("has 8"), "err: {err}");
+        // and the checked evaluate path surfaces the same error
+        let topo = Topology::tiny();
+        assert!(try_evaluate(&ModelDesc::dense_30b(), &topo, &s, &cfg_offload()).is_err());
+        // a covering strategy still round-trips through the same path
+        let ok = ParallelStrategy {
+            dp: 4,
+            tp: 2,
+            pp: 1,
+            ..Default::default()
+        };
+        assert!(try_assign_ranks(&ok, 8).is_ok());
+        assert!(try_evaluate(&ModelDesc::dense_30b(), &topo, &ok, &cfg_offload()).is_ok());
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! SLO-driven elastic autoscaling policies for the serving cluster.
+//!
+//! The paper's single-logical-computer claim means the *framework*
+//! absorbs diurnal traffic swings, not the operator: the cluster adds
+//! instances when demand rises — paying a model-load warm-up computed
+//! from `LinkSpec::transfer_time` for the weight bytes over the actual
+//! fabric tier — and drains them when demand falls, migrating resident
+//! KV pages out with the prefill/decode custody protocol before
+//! releasing the device. This module holds the *policy* layer: what a
+//! policy may observe at an evaluation tick ([`ScaleObservation`]),
+//! the decision interface ([`ScalingPolicy`]), and the three built-in
+//! policies ([`AutoscalePolicy`]). The *mechanism* — instance
+//! lifecycle (warm-up → serving → draining → released), drain
+//! migration, crash replacement — lives in `serving::cluster`, so any
+//! policy drives the same state machine.
+//!
+//! Policies are deliberately stateless (`decide(&self, ..)`): all
+//! hysteresis state (cooldowns, lookback windows) is owned by the
+//! simulator, which keeps `ClusterConfig` plain `Clone` data and makes
+//! every decision a pure function of the observation — the property
+//! the determinism regression test leans on.
+
+use crate::supernode::DeviceId;
+
+/// What a scaling policy may observe at one evaluation tick. All
+/// counts cover the *scaled role only* (colocated instances in a
+/// colocated cluster, the decode pool in a disaggregated one).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleObservation {
+    /// Evaluation time, virtual seconds.
+    pub now: f64,
+    /// Instances currently admitting work.
+    pub serving: usize,
+    /// Instances still loading weights (committed capacity: counting
+    /// them stops the policy re-firing every tick of a warm-up).
+    pub warming: usize,
+    /// Batching slots across serving + warming instances.
+    pub total_slots: usize,
+    /// Slots one scale-up would add (the spawn slot count).
+    pub spawn_slots: usize,
+    /// Requests queued (instance queues + pending ingests + limbo).
+    pub queued: usize,
+    /// Sequences currently decoding.
+    pub active: usize,
+    /// p99 TTFT of completions inside the lookback window, if any.
+    pub recent_ttft_p99: Option<f64>,
+    /// Arrivals per second over the lookback window.
+    pub recent_arrival_rate: f64,
+}
+
+/// A scaling decision: desired change to the instance count. The
+/// cluster clamps it to `[min_instances, max_instances]`, applies the
+/// up/down cooldowns, and picks drain victims.
+pub trait ScalingPolicy {
+    fn decide(&self, obs: &ScaleObservation) -> i64;
+}
+
+/// The built-in policy variants (each implements [`ScalingPolicy`];
+/// external policies can implement the trait directly).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AutoscalePolicy {
+    /// Reactive: scale on backlog per committed slot. Scale up when
+    /// `queued + active > scale_up_backlog · slots`; scale down when
+    /// the backlog would still fit under `scale_down_backlog` of the
+    /// capacity remaining after removing one instance. The gap between
+    /// the two thresholds is the hysteresis band.
+    QueueDepth {
+        scale_up_backlog: f64,
+        scale_down_backlog: f64,
+    },
+    /// SLO-headroom: scale up when the recent p99 TTFT eats more than
+    /// `up_frac` of the SLO budget, down when it uses less than
+    /// `down_frac`. Reacts later than queue depth (TTFT is measured on
+    /// completions) but needs no capacity model at all.
+    TtftHeadroom {
+        slo_ttft: f64,
+        up_frac: f64,
+        down_frac: f64,
+    },
+    /// Predictive: a target instance count per time window — the
+    /// operator (or a forecast) knows the diurnal curve. Steps are
+    /// `(from_time, target)`; the last step whose time has passed
+    /// wins.
+    Scheduled { steps: Vec<(f64, usize)> },
+}
+
+impl ScalingPolicy for AutoscalePolicy {
+    fn decide(&self, obs: &ScaleObservation) -> i64 {
+        match self {
+            AutoscalePolicy::QueueDepth {
+                scale_up_backlog,
+                scale_down_backlog,
+            } => {
+                if obs.total_slots == 0 {
+                    return 1;
+                }
+                let cap = obs.total_slots as f64;
+                let backlog = (obs.queued + obs.active) as f64;
+                if backlog > scale_up_backlog * cap {
+                    return 1;
+                }
+                let remaining = cap - obs.spawn_slots as f64;
+                if remaining > 0.0 && backlog < scale_down_backlog * remaining {
+                    return -1;
+                }
+                0
+            }
+            AutoscalePolicy::TtftHeadroom {
+                slo_ttft,
+                up_frac,
+                down_frac,
+            } => {
+                if obs.total_slots == 0 {
+                    return 1;
+                }
+                match obs.recent_ttft_p99 {
+                    None => 0,
+                    Some(p99) if p99 > up_frac * slo_ttft => 1,
+                    Some(p99) if p99 < down_frac * slo_ttft => -1,
+                    Some(_) => 0,
+                }
+            }
+            AutoscalePolicy::Scheduled { steps } => {
+                let current = (obs.serving + obs.warming) as i64;
+                let mut target = match steps.first() {
+                    Some(&(_, n)) => n as i64,
+                    None => current,
+                };
+                for &(t0, n) in steps {
+                    if t0 <= obs.now {
+                        target = n as i64;
+                    }
+                }
+                target - current
+            }
+        }
+    }
+}
+
+/// Elastic-cluster configuration: the policy plus the knobs of the
+/// scaling mechanism.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    pub policy: AutoscalePolicy,
+    /// Policy evaluation cadence, virtual seconds.
+    pub eval_interval: f64,
+    /// Never drain below this many scaled-role instances.
+    pub min_instances: usize,
+    /// Never scale above this many (serving + warming).
+    pub max_instances: usize,
+    /// Slot count of instances the autoscaler spawns.
+    pub slots: usize,
+    /// Min time after any voluntary action before scaling up again.
+    /// Crash replacement is exempt — failure recovery never waits.
+    pub up_cooldown: f64,
+    /// Min time before scaling down again (longer than `up_cooldown`
+    /// in practice: scale up fast, scale down slowly).
+    pub down_cooldown: f64,
+    /// Window for the observation's recent-TTFT / arrival-rate fields.
+    pub lookback: f64,
+    /// Devices new instances may land on, taken front-first; devices
+    /// of cleanly drained instances return to the back of the pool,
+    /// crashed devices do not.
+    pub device_pool: Vec<DeviceId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(serving: usize, queued: usize, active: usize) -> ScaleObservation {
+        ScaleObservation {
+            now: 10.0,
+            serving,
+            warming: 0,
+            total_slots: serving * 4,
+            spawn_slots: 4,
+            queued,
+            active,
+            recent_ttft_p99: None,
+            recent_arrival_rate: 0.0,
+        }
+    }
+
+    #[test]
+    fn queue_depth_scales_on_backlog_with_hysteresis() {
+        let p = AutoscalePolicy::QueueDepth {
+            scale_up_backlog: 0.9,
+            scale_down_backlog: 0.75,
+        };
+        // 2 instances, 8 slots: up above 7.2, down below 0.75*4 = 3
+        assert_eq!(p.decide(&obs(2, 6, 2)), 1, "backlog 8 > 7.2");
+        assert_eq!(p.decide(&obs(2, 0, 2)), -1, "backlog 2 < 3");
+        assert_eq!(p.decide(&obs(2, 1, 4)), 0, "hysteresis band holds");
+        // an empty deployment always asks for capacity
+        let mut o = obs(0, 3, 0);
+        o.total_slots = 0;
+        assert_eq!(p.decide(&o), 1);
+        // a single instance never sees a down signal (remaining <= 0)
+        assert_eq!(p.decide(&obs(1, 0, 0)), 0);
+    }
+
+    #[test]
+    fn ttft_headroom_tracks_the_slo_budget() {
+        let p = AutoscalePolicy::TtftHeadroom {
+            slo_ttft: 0.5,
+            up_frac: 0.6,
+            down_frac: 0.2,
+        };
+        let with = |p99: Option<f64>| ScaleObservation {
+            recent_ttft_p99: p99,
+            ..obs(2, 0, 4)
+        };
+        assert_eq!(p.decide(&with(Some(0.4))), 1, "0.4 > 0.6*0.5");
+        assert_eq!(p.decide(&with(Some(0.05))), -1, "0.05 < 0.2*0.5");
+        assert_eq!(p.decide(&with(Some(0.2))), 0);
+        assert_eq!(p.decide(&with(None)), 0, "no completions yet: hold");
+    }
+
+    #[test]
+    fn scheduled_steps_to_the_latest_passed_target() {
+        let p = AutoscalePolicy::Scheduled {
+            steps: vec![(0.0, 2), (5.0, 6), (20.0, 3)],
+        };
+        let at = |now: f64, n: usize| ScaleObservation {
+            now,
+            ..obs(n, 0, 0)
+        };
+        assert_eq!(p.decide(&at(1.0, 2)), 0);
+        assert_eq!(p.decide(&at(6.0, 2)), 4, "ramp to 6");
+        assert_eq!(p.decide(&at(25.0, 6)), -3, "ramp back down to 3");
+        let empty = AutoscalePolicy::Scheduled { steps: vec![] };
+        assert_eq!(empty.decide(&at(1.0, 2)), 0, "no schedule: hold");
+    }
+}

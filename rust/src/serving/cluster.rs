@@ -1,5 +1,5 @@
 //! Topology-routed multi-instance serving with prefill/decode
-//! disaggregation.
+//! disaggregation, elastic autoscaling, and instance-failure recovery.
 //!
 //! PR 2's batcher simulates one isolated instance; this module scales
 //! it to a cluster whose *shape* the fabric decides — the paper's
@@ -27,40 +27,85 @@
 //!   term decides which architecture wins — exactly the knob the
 //!   paper says the supernode flips.
 //!
+//! ## Elasticity and failure (ISSUE 4)
+//!
+//! The cluster is no longer statically sized or fault-free. Each
+//! instance walks a lifecycle `warm-up → serving → draining →
+//! released` (or `→ crashed`):
+//!
+//! - **Scale up** — an [`AutoscaleConfig`] policy (queue-depth,
+//!   TTFT-headroom, or scheduled; see `serving::autoscale`) asks for
+//!   capacity at a fixed evaluation cadence. A new instance takes the
+//!   next device from the pool and pays a *model-load warm-up*: the
+//!   weight bytes crossing the fabric tier between the weight source
+//!   (the lowest-index serving instance's device) and the new device,
+//!   recorded as a `warmup` interval on the new engine. On the
+//!   supernode fabric a 16 GiB load costs ~88 ms; on legacy RoCE it
+//!   costs ~1.4 s — which is why elastic scaling holds the TTFT SLO on
+//!   one fabric and not the other.
+//! - **Scale down** — the least-loaded serving instance stops
+//!   admission (Draining), re-dispatches its queued work through the
+//!   router, migrates its resident sequences' KV pages out with the
+//!   PR 3 custody protocol at the next iteration boundary (pages stay
+//!   parked until the destination admits), and releases its device
+//!   back to the pool once its page pool drains (a zero-length `drain`
+//!   marker in the trace).
+//! - **Crash** — an [`InstanceCrash`] event kills an instance
+//!   mid-decode: its in-flight interval is truncated and re-tagged
+//!   `crash` (lost work), every request it held is re-queued through
+//!   the router with the prefix-recompute cost charged (KV on the dead
+//!   device is gone, so they re-prefill), sequences that had parked KV
+//!   on it restart from scratch wherever they now queue, and the
+//!   autoscaler spawns a replacement immediately — crash replacement
+//!   never waits for cooldowns. No request is ever lost: everything is
+//!   completed or rejected exactly once (the conservation property
+//!   tests inject crashes and scale-downs across the full
+//!   policy × mode × seed grid).
+//!
+//! Crash targeting is *ordinal*: `InstanceCrash::instance` selects the
+//! n-th (mod size) member of the serving set at crash time, because an
+//! absolute index races against elastic churn — the named instance may
+//! long since have been drained and released.
+//!
 //! ## Page custody during migration
 //!
-//! A migrating sequence's pages stay **parked** in the prefill
-//! instance's pool until the decode instance admits it (allocates its
+//! A migrating sequence's pages stay **parked** in the source
+//! instance's pool until the destination admits it (allocates its
 //! pages there); only then does the source release. Parked pages are
 //! real backpressure: a clogged decode pool keeps prefill pools full,
 //! which stalls prefill admission instead of silently dropping
 //! requests. No page is ever freed twice or leaked across the move —
 //! `rust/tests/property_kvcache.rs` model-checks the invariant and
-//! [`simulate_cluster`] asserts every pool drains at the end of a run.
+//! [`simulate_cluster`] asserts every non-crashed pool drains at the
+//! end of a run.
 //!
 //! ## Reuse
 //!
 //! Admission goes through the shared [`plan_refill`] core, iteration
 //! latency through the shared [`CostModel`], and per-instance busy
-//! intervals (prefill / decode / `kv_xfer`) compose into one indexed
-//! `SimResult`, so the whole cluster report answers every fleet-wide
-//! question (TTFT/TPOT/goodput percentiles, utilization, windowed
-//! busy) through the standard `ServingReport` machinery, and
-//! [`cluster_rate_sweep`] fans the max-QPS-under-SLO search across
-//! `sim::sweep` workers.
+//! intervals (prefill / decode / `kv_xfer` / `warmup` / `crash` /
+//! `drain`) compose into one indexed `SimResult`, so the whole cluster
+//! report answers every fleet-wide question (TTFT/TPOT/goodput
+//! percentiles, utilization, windowed busy) through the standard
+//! `ServingReport` machinery, and [`cluster_rate_sweep`] fans the
+//! max-QPS-under-SLO search across `sim::sweep` workers.
 
 use crate::collectives;
 use crate::graph::CollectiveKind;
 use crate::hyperoffload::kvcache::KvCacheConfig;
+use crate::serving::autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleObservation, ScalingPolicy};
 use crate::serving::batcher::{plan_refill, CostModel};
 use crate::serving::memory::{MemoryPolicy, ServingMemory};
 use crate::serving::metrics::{
     max_qps_under_slo, OperatingPoint, RequestOutcome, ServingReport, Slo,
 };
 use crate::serving::router::{CandidateLoad, RoutePolicy, Router};
-use crate::serving::workload::{ArrivalProcess, LengthDist, Request, WorkloadConfig};
+use crate::serving::workload::{
+    diurnal_two_tenant, ArrivalProcess, LengthDist, Request, WorkloadConfig,
+};
 use crate::sim::{parallel_map, tags, Interval, ResourceId, SimResult, TaskId};
 use crate::supernode::{DeviceId, Topology};
+use crate::util::stats::Percentiles;
 use std::collections::{BTreeSet, VecDeque};
 
 /// What one placed instance does.
@@ -84,6 +129,35 @@ pub struct InstanceSpec {
     pub slots: usize,
 }
 
+/// Lifecycle of an instance under elasticity and failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum InstanceState {
+    /// Loading weights over the fabric; not yet admitting.
+    WarmingUp,
+    /// Admitting and serving work.
+    Serving,
+    /// Scale-down in progress: admission stopped, resident KV
+    /// migrating out under the custody protocol.
+    Draining,
+    /// Cleanly drained; device returned to the pool.
+    Released,
+    /// Killed by an [`InstanceCrash`]; its KV pages are gone.
+    Crashed,
+}
+
+/// Failure injection: kill one live instance at `time`.
+///
+/// `instance` is *ordinal*, not absolute: it selects the
+/// `instance mod |serving|`-th member of the serving set at crash time
+/// (falling back to warming/draining instances if nothing is serving).
+/// Absolute indices would race against elastic churn — the instance
+/// they name may already have been drained and released.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceCrash {
+    pub time: f64,
+    pub instance: usize,
+}
+
 /// A multi-instance serving deployment on a topology.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -99,15 +173,20 @@ pub struct ClusterConfig {
     pub max_preemptions: u32,
     /// Front-end arrival routing policy.
     pub route: RoutePolicy,
+    /// Elastic autoscaling of the scaled role (colocated instances, or
+    /// the decode pool in disaggregated mode). `None` = static cluster.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Crash events to inject, any order (sorted by time internally).
+    pub failures: Vec<InstanceCrash>,
 }
 
 /// Everything a cluster run produced: the standard serving report
 /// (fleet-wide outcomes + the composed per-instance trace) plus the
-/// migration ledger.
+/// migration ledger and the elasticity/failure ledger.
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub serving: ServingReport,
-    /// Prefill → decode KV handoffs.
+    /// Prefill → decode KV handoffs plus drain/crash re-dispatches.
     pub kv_migrations: u64,
     /// KV bytes moved across the fabric.
     pub kv_bytes_migrated: f64,
@@ -115,6 +194,23 @@ pub struct ClusterReport {
     pub kv_xfer_time: f64,
     /// Completions per instance (index = instance = trace resource).
     pub per_instance_completed: Vec<usize>,
+    /// Instances killed by failure injection.
+    pub crashes: u64,
+    /// Requests re-queued out of crashed instances (re-prefilled).
+    pub crash_requeues: u64,
+    /// Voluntary scale-up actions (crash replacements included).
+    pub scale_ups: u64,
+    /// Voluntary scale-down (drain) actions.
+    pub scale_downs: u64,
+    /// KV handoffs specifically caused by drains.
+    pub drain_migrations: u64,
+    /// Total model-load transfer time paid by scale-ups, seconds.
+    pub warmup_time: f64,
+    /// Σ over instances of (death-or-makespan − birth): the
+    /// provisioning cost the autoscaler is minimizing.
+    pub instance_seconds: f64,
+    /// High-water mark of simultaneously held devices.
+    pub peak_instances: usize,
 }
 
 impl ClusterReport {
@@ -136,8 +232,8 @@ struct Queued {
     /// Raw prompt for fresh requests; clamped prompt for migrated and
     /// preempted re-queues (admission clamps via `plan_refill`).
     prompt_len: usize,
-    /// Tokens already produced (1 for a migrated sequence: prefill
-    /// emitted the first token before the handoff).
+    /// Tokens already produced (≥1 for a migrated sequence; reset to 0
+    /// when a crash destroys the KV and forces a re-prefill).
     produced: usize,
     first_token: Option<f64>,
     preemptions: u32,
@@ -165,6 +261,8 @@ impl ActiveSeq {
 enum Work {
     Iteration,
     Ingest,
+    /// Model-load transfer of a warming-up instance.
+    Warmup,
 }
 
 #[derive(Debug)]
@@ -180,12 +278,20 @@ struct Instance {
     device: DeviceId,
     mem: ServingMemory,
     queue: VecDeque<Queued>,
-    /// Pending KV ingests (decode role only); the transfer occupies
-    /// this engine, serialized with its iterations.
+    /// Pending KV ingests; the transfer occupies this engine,
+    /// serialized with its iterations.
     ingest: VecDeque<IngestJob>,
     active: Vec<Option<ActiveSeq>>,
     work_end: Option<(f64, Work)>,
     cur_ctx_tokens: usize,
+    state: InstanceState,
+    /// When this instance started holding its device.
+    born: f64,
+    /// When it stopped (released or crashed); `None` = held to the end.
+    died: Option<f64>,
+    /// Index into the interval trace of the in-flight work, so a crash
+    /// can truncate it at the instant of death.
+    cur_iv: Option<usize>,
 }
 
 impl Instance {
@@ -205,6 +311,10 @@ impl Instance {
             active: (0..spec.slots).map(|_| None).collect(),
             work_end: None,
             cur_ctx_tokens: 0,
+            state: InstanceState::Serving,
+            born: 0.0,
+            died: None,
+            cur_iv: None,
         }
     }
 
@@ -244,15 +354,20 @@ struct Stats {
     prefill_tokens: u64,
     intervals: Vec<Interval>,
     tasks: usize,
-    makespan: f64,
     kv_migrations: u64,
     kv_bytes: f64,
     kv_xfer_time: f64,
     per_instance_completed: Vec<usize>,
+    crashes: u64,
+    crash_requeues: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    drain_migrations: u64,
+    warmup_time: f64,
     /// (sequence, source instance) page handoffs pending release —
     /// drained at the cluster level after every event.
     handoffs: Vec<(u64, usize)>,
-    /// Instances to wake after releases/migrations.
+    /// Instances to wake after releases/migrations/requeues.
     kick: BTreeSet<usize>,
 }
 
@@ -331,223 +446,811 @@ fn grow_active(inst: &mut Instance, cfg: &ClusterConfig, stats: &mut Stats) {
     }
 }
 
-/// The decode instance with the fewest outstanding KV pages — page
-/// headroom is the only signal that matters for a KV handoff.
-fn pick_decode(insts: &[Instance], decode_ids: &[usize]) -> usize {
-    decode_ids
-        .iter()
-        .copied()
-        .min_by_key(|&i| (insts[i].outstanding_kv(), i))
-        .expect("disaggregated cluster needs a decode instance")
+/// Strict less-than over (time, event-class, index) — the total event
+/// order: arrival < work-end < crash < autoscale tick at equal times,
+/// lowest instance index first among simultaneous work-ends.
+fn event_lt(a: (f64, u8, usize), b: (f64, u8, usize)) -> bool {
+    a.0.total_cmp(&b.0)
+        .then(a.1.cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+        .is_lt()
 }
 
-/// An iteration completed at `t` on instance `k`: every active
-/// sequence produced one token; finished sequences retire, finished
-/// *prefills* migrate to a decode instance.
-fn finish_iteration(
-    insts: &mut [Instance],
-    decode_ids: &[usize],
-    k: usize,
-    t: f64,
-    cfg: &ClusterConfig,
-    stats: &mut Stats,
-) {
-    insts[k].work_end = None;
-    for slot in 0..insts[k].active.len() {
-        let (done, migrate) = {
-            let inst = &mut insts[k];
-            let Some(seq) = inst.active[slot].as_mut() else {
-                continue;
-            };
-            seq.produced += 1;
-            stats.decoded_tokens += 1;
-            if seq.first_token.is_none() {
-                seq.first_token = Some(t);
+// ---- the elastic cluster simulator ------------------------------------
+
+struct Sim<'a> {
+    cfg: &'a ClusterConfig,
+    insts: Vec<Instance>,
+    router: Router,
+    stats: Stats,
+    /// Entries with no routable instance yet (capacity is warming up).
+    limbo: VecDeque<Queued>,
+    /// Devices available for scale-ups; released devices return here.
+    pool_devices: VecDeque<DeviceId>,
+    entry_role: InstanceRole,
+    scaled_role: InstanceRole,
+    /// Time of the last voluntary scaling action (cooldown anchor).
+    last_action: f64,
+    recent_arrivals: VecDeque<f64>,
+    /// First outcome still inside the policy lookback window.
+    outcome_ptr: usize,
+    peak_context: usize,
+    peak_alive: usize,
+}
+
+impl<'a> Sim<'a> {
+    fn serving_ids(&self, role: InstanceRole) -> Vec<usize> {
+        self.insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.role == role && i.state == InstanceState::Serving)
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    fn warming_count(&self, role: InstanceRole) -> usize {
+        self.insts
+            .iter()
+            .filter(|i| i.role == role && i.state == InstanceState::WarmingUp)
+            .count()
+    }
+
+    fn alive_count(&self, role: InstanceRole) -> usize {
+        self.insts
+            .iter()
+            .filter(|i| {
+                i.role == role
+                    && matches!(i.state, InstanceState::Serving | InstanceState::WarmingUp)
+            })
+            .count()
+    }
+
+    fn candidate_loads(&self, ids: &[usize]) -> Vec<CandidateLoad> {
+        ids.iter()
+            .map(|&i| CandidateLoad {
+                instance: i,
+                outstanding_kv_pages: self.insts[i].outstanding_kv(),
+            })
+            .collect()
+    }
+
+    /// The serving scaled-role instance with the fewest outstanding KV
+    /// pages — page headroom is the only signal that matters for a KV
+    /// handoff.
+    fn pick_dst(&self, cands: &[usize]) -> usize {
+        cands
+            .iter()
+            .copied()
+            .min_by_key(|&i| (self.insts[i].outstanding_kv(), i))
+            .expect("non-empty candidate set")
+    }
+
+    /// Send a migrating entry (pages parked at `entry.kv_src`) to a
+    /// serving scaled-role instance; limbo it if capacity is warming
+    /// up; reject it (releasing the parked pages) if it can never be
+    /// served.
+    fn dispatch_migration(&mut self, entry: Queued, drain: bool) {
+        let cands = self.serving_ids(self.scaled_role);
+        if cands.is_empty() {
+            if self.warming_count(self.scaled_role) > 0 {
+                self.limbo.push_back(entry);
+            } else {
+                if let Some(src) = entry.kv_src {
+                    self.stats.handoffs.push((entry.req.id, src));
+                }
+                self.stats.rejected += 1;
             }
-            let target = seq.req.output_tokens.min(cfg.max_seq - seq.prompt_len);
-            let done = seq.produced >= target || seq.ctx() >= cfg.max_seq;
-            (done, inst.role == InstanceRole::Prefill && !done)
-        };
-        if migrate {
-            // Prefill finished (first token out): hand the KV pages to
-            // a decode instance. Pages stay parked here until the
-            // destination admits the sequence.
-            let seq = insts[k].active[slot].take().expect("slot checked above");
-            let dst = pick_decode(insts, decode_ids);
-            let bytes = seq.ctx() as f64 * cfg.cost.kv.kv_bytes_per_token as f64;
-            let xfer = collectives::cost(
-                &cfg.topology,
-                CollectiveKind::P2p,
-                bytes,
-                &[insts[k].device, insts[dst].device],
-            )
-            .time;
-            stats.kv_migrations += 1;
-            stats.kv_bytes += bytes;
-            stats.kv_xfer_time += xfer;
-            insts[dst].ingest.push_back(IngestJob {
-                entry: Queued {
-                    req: seq.req,
-                    prompt_len: seq.prompt_len,
-                    produced: seq.produced,
-                    first_token: seq.first_token,
-                    preemptions: seq.preemptions,
-                    kv_src: Some(k),
-                },
-                xfer,
-            });
-            stats.kick.insert(dst);
-        } else if done {
-            let seq = insts[k].active[slot].take().expect("slot checked above");
-            stats.outcomes.push(RequestOutcome {
-                id: seq.req.id,
-                tenant: seq.req.tenant,
-                arrival: seq.req.arrival,
-                first_token: seq.first_token.unwrap_or(t),
-                finish: t,
-                prompt_tokens: seq.prompt_len,
-                output_tokens: seq.produced,
-                preemptions: seq.preemptions,
-            });
-            stats.per_instance_completed[k] += 1;
-            insts[k].mem.pool.release(seq.req.id);
+            return;
+        }
+        let dst = self.pick_dst(&cands);
+        let src = entry.kv_src.expect("migration entry must have a source");
+        let ctx = entry.prompt_len + entry.produced;
+        let bytes = ctx as f64 * self.cfg.cost.kv.kv_bytes_per_token as f64;
+        let xfer = collectives::cost(
+            &self.cfg.topology,
+            CollectiveKind::P2p,
+            bytes,
+            &[self.insts[src].device, self.insts[dst].device],
+        )
+        .time;
+        self.stats.kv_migrations += 1;
+        self.stats.kv_bytes += bytes;
+        self.stats.kv_xfer_time += xfer;
+        if drain {
+            self.stats.drain_migrations += 1;
+        }
+        self.insts[dst].ingest.push_back(IngestJob { entry, xfer });
+        self.stats.kick.insert(dst);
+    }
+
+    /// Put a pageless entry back through the front-end router.
+    fn route_requeue(&mut self, entry: Queued) {
+        let cands = self.serving_ids(self.entry_role);
+        if cands.is_empty() {
+            if self.warming_count(self.entry_role) > 0 {
+                self.limbo.push_back(entry);
+            } else {
+                self.stats.rejected += 1;
+            }
+            return;
+        }
+        let loads = self.candidate_loads(&cands);
+        let k = self.router.route(&entry.req, &loads);
+        self.insts[k].queue.push_back(entry);
+        self.stats.kick.insert(k);
+    }
+
+    fn redispatch(&mut self, entry: Queued, drain: bool) {
+        if entry.kv_src.is_some() {
+            self.dispatch_migration(entry, drain);
+        } else {
+            self.route_requeue(entry);
         }
     }
-}
 
-/// A KV ingest finished: the migrated sequence joins the decode queue
-/// (its pages move at admission, through the standard refill gate).
-fn finish_ingest(inst: &mut Instance) {
-    inst.work_end = None;
-    let job = inst.ingest.pop_front().expect("ingest completion without a job");
-    inst.queue.push_back(job.entry);
-}
+    /// Retry limbo entries after capacity changed (a warm-up finished,
+    /// or a crash removed the last warming instance).
+    fn resolve_limbo(&mut self) {
+        let pending: Vec<Queued> = self.limbo.drain(..).collect();
+        for entry in pending {
+            self.redispatch(entry, false);
+        }
+    }
 
-/// Schedule the instance's next unit of work at `t`: a pending KV
-/// ingest if any (the transfer occupies the engine), else a batcher
-/// iteration through the shared `plan_refill` admission core.
-fn start_work(inst: &mut Instance, k: usize, t: f64, cfg: &ClusterConfig, stats: &mut Stats) {
-    debug_assert!(inst.work_end.is_none(), "work already in flight");
-    if let Some(job) = inst.ingest.front() {
-        let finish = t + job.xfer;
+    /// Scale up by one instance of the scaled role, paying the
+    /// model-load warm-up transfer over the actual fabric tier.
+    fn spawn_instance(&mut self, t: f64) -> bool {
+        let cfg = self.cfg;
+        let aus = cfg.autoscale.as_ref().expect("spawn requires autoscale");
+        let Some(dev) = self.pool_devices.pop_front() else {
+            return false;
+        };
+        let src_dev = self
+            .insts
+            .iter()
+            .find(|i| i.state == InstanceState::Serving)
+            .map(|i| i.device)
+            .unwrap_or(dev);
+        let xfer = collectives::cost(
+            &cfg.topology,
+            CollectiveKind::P2p,
+            cfg.cost.kv.weight_bytes as f64,
+            &[src_dev, dev],
+        )
+        .time;
+        let k = self.insts.len();
+        self.stats.intervals.push(Interval {
+            task: TaskId(self.stats.tasks),
+            resource: ResourceId(k),
+            start: t,
+            finish: t + xfer,
+            tag: tags::WARMUP,
+        });
+        self.stats.tasks += 1;
+        self.stats.per_instance_completed.push(0);
+        self.stats.warmup_time += xfer;
+        self.stats.scale_ups += 1;
+        self.insts.push(Instance {
+            role: self.scaled_role,
+            device: dev,
+            mem: ServingMemory::new(
+                &cfg.cost.kv,
+                cfg.cost.offload_frac,
+                cfg.policy,
+                cfg.pool_pages,
+            ),
+            queue: VecDeque::new(),
+            ingest: VecDeque::new(),
+            active: (0..aus.slots).map(|_| None).collect(),
+            work_end: Some((t + xfer, Work::Warmup)),
+            cur_ctx_tokens: 0,
+            state: InstanceState::WarmingUp,
+            born: t,
+            died: None,
+            cur_iv: Some(self.stats.intervals.len() - 1),
+        });
+        true
+    }
+
+    /// Scale down: stop admission, re-dispatch queued work, and (at
+    /// the next iteration boundary) migrate resident KV out with the
+    /// custody protocol. The device is released when the pool drains.
+    fn drain_instance(&mut self, k: usize, _t: f64) {
+        self.insts[k].state = InstanceState::Draining;
+        self.stats.scale_downs += 1;
+        let q: Vec<Queued> = self.insts[k].queue.drain(..).collect();
+        for e in q {
+            self.redispatch(e, true);
+        }
+        // an in-flight ingest transfer finishes (sunk cost) and is
+        // re-dispatched at completion; pending ones re-dispatch now
+        let inflight = matches!(self.insts[k].work_end, Some((_, Work::Ingest)));
+        let keep = usize::from(inflight).min(self.insts[k].ingest.len());
+        let jobs: Vec<IngestJob> = self.insts[k].ingest.split_off(keep).into_iter().collect();
+        for job in jobs {
+            self.redispatch(job.entry, true);
+        }
+    }
+
+    fn autoscale_tick(&mut self, t: f64) {
+        let cfg = self.cfg;
+        let aus = cfg.autoscale.as_ref().expect("tick requires autoscale");
+        let serving = self.serving_ids(self.scaled_role);
+        let warming = self.warming_count(self.scaled_role);
+        let total_slots: usize = serving
+            .iter()
+            .map(|&k| self.insts[k].active.len())
+            .sum::<usize>()
+            + warming * aus.slots;
+        let queued: usize = serving
+            .iter()
+            .map(|&k| self.insts[k].queue.len() + self.insts[k].ingest.len())
+            .sum::<usize>()
+            + self.limbo.len();
+        let active: usize = serving.iter().map(|&k| self.insts[k].active_count()).sum();
+        while self.outcome_ptr < self.stats.outcomes.len()
+            && self.stats.outcomes[self.outcome_ptr].finish < t - aus.lookback
+        {
+            self.outcome_ptr += 1;
+        }
+        let recent_ttft_p99 = {
+            let mut pct = Percentiles::new();
+            for o in &self.stats.outcomes[self.outcome_ptr..] {
+                pct.add(o.ttft());
+            }
+            if pct.is_empty() {
+                None
+            } else {
+                Some(pct.pct(99.0))
+            }
+        };
+        while self
+            .recent_arrivals
+            .front()
+            .is_some_and(|&a| a < t - aus.lookback)
+        {
+            self.recent_arrivals.pop_front();
+        }
+        let obs = ScaleObservation {
+            now: t,
+            serving: serving.len(),
+            warming,
+            total_slots,
+            spawn_slots: aus.slots,
+            queued,
+            active,
+            recent_ttft_p99,
+            recent_arrival_rate: self.recent_arrivals.len() as f64 / aus.lookback,
+        };
+        let delta = aus.policy.decide(&obs);
+        let mut n = serving.len() + warming;
+        match delta.cmp(&0) {
+            std::cmp::Ordering::Greater => {
+                if t - self.last_action < aus.up_cooldown {
+                    return;
+                }
+                let mut spawned = false;
+                for _ in 0..delta {
+                    if n >= aus.max_instances || !self.spawn_instance(t) {
+                        break;
+                    }
+                    spawned = true;
+                    n += 1;
+                }
+                if spawned {
+                    self.last_action = t;
+                }
+            }
+            std::cmp::Ordering::Less => {
+                if t - self.last_action < aus.down_cooldown {
+                    return;
+                }
+                let mut serving = serving;
+                let mut drained = false;
+                for _ in 0..(-delta) {
+                    if n <= aus.min_instances || serving.is_empty() {
+                        break;
+                    }
+                    // cheapest drain first: fewest outstanding KV pages,
+                    // ties toward the newest instance
+                    let victim = *serving
+                        .iter()
+                        .min_by_key(|&&k| (self.insts[k].outstanding_kv(), std::cmp::Reverse(k)))
+                        .expect("non-empty serving set");
+                    serving.retain(|&x| x != victim);
+                    self.drain_instance(victim, t);
+                    drained = true;
+                    n -= 1;
+                }
+                if drained {
+                    self.last_action = t;
+                }
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+
+    /// Kill the `sel`-th (mod size) member of the serving set:
+    /// truncate in-flight work, requeue everything the victim held
+    /// (prefix recompute charged), drop its KV pages, and let the
+    /// autoscaler spawn a replacement.
+    fn crash_instance(&mut self, sel: usize, t: f64) {
+        let mut alive: Vec<usize> = (0..self.insts.len())
+            .filter(|&k| self.insts[k].state == InstanceState::Serving)
+            .collect();
+        if alive.is_empty() {
+            alive = (0..self.insts.len())
+                .filter(|&k| {
+                    matches!(
+                        self.insts[k].state,
+                        InstanceState::WarmingUp | InstanceState::Draining
+                    )
+                })
+                .collect();
+        }
+        if alive.is_empty() {
+            return;
+        }
+        let k = alive[sel % alive.len()];
+        self.stats.crashes += 1;
+        if self.insts[k].work_end.is_some() {
+            if let Some(iv) = self.insts[k].cur_iv {
+                // the in-flight work never finishes: truncate it at the
+                // instant of death and re-tag it as lost
+                self.stats.intervals[iv].finish = t;
+                self.stats.intervals[iv].tag = tags::CRASH;
+            }
+        } else {
+            self.stats.intervals.push(Interval {
+                task: TaskId(self.stats.tasks),
+                resource: ResourceId(k),
+                start: t,
+                finish: t,
+                tag: tags::CRASH,
+            });
+            self.stats.tasks += 1;
+        }
+        let was_scaled = self.insts[k].role == self.scaled_role
+            && self.insts[k].state != InstanceState::WarmingUp;
+        // mark dead FIRST: no requeue below may route back onto the
+        // dying instance
+        self.insts[k].state = InstanceState::Crashed;
+        self.insts[k].died = Some(t);
+        let slots = self.insts[k].active.len();
+        for slot in 0..slots {
+            let Some(seq) = self.insts[k].active[slot].take() else {
+                continue;
+            };
+            self.stats.crash_requeues += 1;
+            self.route_requeue(Queued {
+                req: seq.req,
+                prompt_len: seq.prompt_len,
+                produced: 0,
+                first_token: seq.first_token,
+                preemptions: seq.preemptions,
+                kv_src: None,
+            });
+        }
+        let q: Vec<Queued> = self.insts[k].queue.drain(..).collect();
+        for e in q {
+            self.stats.crash_requeues += 1;
+            self.redispatch(e, false);
+        }
+        let jobs: Vec<IngestJob> = self.insts[k].ingest.drain(..).collect();
+        for job in jobs {
+            self.stats.crash_requeues += 1;
+            self.redispatch(job.entry, false);
+        }
+        // sequences whose pages were parked here lost their KV: they
+        // restart (re-prefill) wherever they are queued now
+        for i in 0..self.insts.len() {
+            if i == k {
+                continue;
+            }
+            for e in self.insts[i].queue.iter_mut() {
+                if e.kv_src == Some(k) {
+                    e.kv_src = None;
+                    e.produced = 0;
+                }
+            }
+            for j in self.insts[i].ingest.iter_mut() {
+                if j.entry.kv_src == Some(k) {
+                    j.entry.kv_src = None;
+                    j.entry.produced = 0;
+                }
+            }
+        }
+        for e in self.limbo.iter_mut() {
+            if e.kv_src == Some(k) {
+                e.kv_src = None;
+                e.produced = 0;
+            }
+        }
+        self.insts[k].mem.pool.release_all();
+        self.insts[k].work_end = None;
+        self.insts[k].cur_iv = None;
+        self.insts[k].cur_ctx_tokens = 0;
+        // the autoscaler replaces a crashed serving instance right away
+        // (no cooldown: failure replacement is not a voluntary action)
+        if let Some(aus) = self.cfg.autoscale.as_ref() {
+            if was_scaled && self.alive_count(self.scaled_role) < aus.max_instances {
+                self.spawn_instance(t);
+            }
+        }
+        self.resolve_limbo();
+    }
+
+    /// An iteration completed at `t` on instance `k`: every active
+    /// sequence produced one token; finished sequences retire, finished
+    /// *prefills* (and survivors on a draining instance) migrate to a
+    /// serving scaled-role instance.
+    fn finish_iteration(&mut self, k: usize, t: f64) {
+        self.insts[k].work_end = None;
+        self.insts[k].cur_iv = None;
+        let draining = self.insts[k].state == InstanceState::Draining;
+        let slots = self.insts[k].active.len();
+        for slot in 0..slots {
+            let (done, migrate) = {
+                let inst = &mut self.insts[k];
+                let Some(seq) = inst.active[slot].as_mut() else {
+                    continue;
+                };
+                seq.produced += 1;
+                self.stats.decoded_tokens += 1;
+                if seq.first_token.is_none() {
+                    seq.first_token = Some(t);
+                }
+                let target = seq.req.output_tokens.min(self.cfg.max_seq - seq.prompt_len);
+                let done = seq.produced >= target || seq.ctx() >= self.cfg.max_seq;
+                (
+                    done,
+                    (inst.role == InstanceRole::Prefill || draining) && !done,
+                )
+            };
+            if migrate {
+                // hand the KV pages to a serving instance; pages stay
+                // parked here until the destination admits the sequence
+                let seq = self.insts[k].active[slot].take().expect("slot checked above");
+                self.dispatch_migration(
+                    Queued {
+                        req: seq.req,
+                        prompt_len: seq.prompt_len,
+                        produced: seq.produced,
+                        first_token: seq.first_token,
+                        preemptions: seq.preemptions,
+                        kv_src: Some(k),
+                    },
+                    draining,
+                );
+            } else if done {
+                let seq = self.insts[k].active[slot].take().expect("slot checked above");
+                self.stats.outcomes.push(RequestOutcome {
+                    id: seq.req.id,
+                    tenant: seq.req.tenant,
+                    arrival: seq.req.arrival,
+                    first_token: seq.first_token.unwrap_or(t),
+                    finish: t,
+                    prompt_tokens: seq.prompt_len,
+                    output_tokens: seq.produced,
+                    preemptions: seq.preemptions,
+                });
+                self.stats.per_instance_completed[k] += 1;
+                self.insts[k].mem.pool.release(seq.req.id);
+            }
+        }
+    }
+
+    /// A KV ingest finished: the migrated sequence joins the queue
+    /// (its pages move at admission, through the standard refill
+    /// gate) — unless the instance started draining meanwhile, in
+    /// which case the entry bounces to another serving instance.
+    fn finish_ingest(&mut self, k: usize, _t: f64) {
+        self.insts[k].work_end = None;
+        self.insts[k].cur_iv = None;
+        let job = self.insts[k]
+            .ingest
+            .pop_front()
+            .expect("ingest completion without a job");
+        if self.insts[k].state == InstanceState::Draining {
+            self.redispatch(job.entry, true);
+        } else {
+            self.insts[k].queue.push_back(job.entry);
+        }
+    }
+
+    /// Model load finished: the instance starts admitting, and limbo
+    /// entries that were waiting for capacity get routed.
+    fn finish_warmup(&mut self, k: usize, _t: f64) {
+        self.insts[k].work_end = None;
+        self.insts[k].cur_iv = None;
+        self.insts[k].state = InstanceState::Serving;
+        self.resolve_limbo();
+        self.stats.kick.insert(k);
+    }
+
+    /// Schedule the instance's next unit of work at `t`: a pending KV
+    /// ingest if any (the transfer occupies the engine), else a batcher
+    /// iteration through the shared `plan_refill` admission core. Only
+    /// serving instances start work.
+    fn start_work(&mut self, k: usize, t: f64) {
+        let cfg = self.cfg;
+        let stats = &mut self.stats;
+        let inst = &mut self.insts[k];
+        debug_assert!(inst.work_end.is_none(), "work already in flight");
+        if inst.state != InstanceState::Serving {
+            return;
+        }
+        if let Some(job) = inst.ingest.front() {
+            let finish = t + job.xfer;
+            inst.cur_iv = Some(stats.intervals.len());
+            stats.intervals.push(Interval {
+                task: TaskId(stats.tasks),
+                resource: ResourceId(k),
+                start: t,
+                finish,
+                tag: tags::KV_XFER,
+            });
+            stats.tasks += 1;
+            inst.work_end = Some((finish, Work::Ingest));
+            return;
+        }
+        grow_active(inst, cfg, stats);
+        let mut total_prefill = 0usize;
+        loop {
+            let occupied: Vec<bool> = inst.active.iter().map(Option::is_some).collect();
+            let empty = occupied.iter().filter(|o| !**o).count();
+            // (id, prompt_len, produced) of the admissible queue prefix
+            let heads: Vec<(u64, usize, usize)> = inst
+                .queue
+                .iter()
+                .take(empty)
+                .map(|q| (q.req.id, q.prompt_len, q.produced))
+                .collect();
+            let lens: Vec<usize> = heads.iter().map(|h| h.1).collect();
+            let cold = cold_order(inst);
+            let mem = &mut inst.mem;
+            let plan = plan_refill(&occupied, cfg.max_seq, &lens, |qi, prompt_len| {
+                // migrated sequences carry their produced tokens: the gate
+                // reserves pages for the full context at this instance
+                let pages = mem.pages_for(prompt_len + heads[qi].2);
+                pages <= mem.pool.hbm_capacity()
+                    && mem.ensure_hbm_free(pages, &cold)
+                    && mem.pool.try_alloc_hbm(heads[qi].0, pages)
+            });
+            for adm in &plan {
+                let q = inst.queue.pop_front().expect("refill plan exceeds queue");
+                if q.produced == 0 {
+                    total_prefill += adm.prompt_len;
+                }
+                if let Some(src) = q.kv_src {
+                    // pages now live here; the parked copy at the source
+                    // is released in the cluster-level drain
+                    stats.handoffs.push((q.req.id, src));
+                }
+                inst.active[adm.slot] = Some(ActiveSeq {
+                    req: q.req,
+                    prompt_len: adm.prompt_len,
+                    produced: q.produced,
+                    admitted_at: t,
+                    first_token: q.first_token,
+                    preemptions: q.preemptions,
+                });
+            }
+            if !plan.is_empty() || inst.active_count() > 0 {
+                break;
+            }
+            // Empty instance, nothing admitted. Reject the head only if it
+            // can NEVER fit; a head blocked on pages parked elsewhere (or
+            // an in-flight ingest) waits — the release re-kicks us.
+            match inst.queue.front() {
+                Some(head) => {
+                    let pages = inst
+                        .mem
+                        .pages_for(head.prompt_len.min(cfg.max_seq - 1) + head.produced);
+                    if pages > inst.mem.pool.hbm_capacity() {
+                        let q = inst.queue.pop_front().expect("head exists");
+                        if let Some(src) = q.kv_src {
+                            stats.handoffs.push((q.req.id, src));
+                        }
+                        stats.rejected += 1;
+                    } else {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+
+        // Cost the iteration from the tiered KV footprint (same split as
+        // the single-instance batcher).
+        let tpp = inst.mem.tokens_per_page();
+        let mut hbm_tokens = 0usize;
+        let mut pool_tokens = 0usize;
+        for seq in inst.active.iter().flatten() {
+            let ctx = seq.ctx();
+            let in_pool = (inst.mem.pool.seq_pages(seq.req.id).pool * tpp).min(ctx);
+            pool_tokens += in_pool;
+            hbm_tokens += ctx - in_pool;
+        }
+        inst.cur_ctx_tokens = hbm_tokens + pool_tokens;
+        if inst.active_count() == 0 {
+            return;
+        }
+        stats.prefill_tokens += total_prefill as u64;
+        let finish = t + cfg
+            .cost
+            .iteration_latency(hbm_tokens, pool_tokens, total_prefill);
+        inst.cur_iv = Some(stats.intervals.len());
         stats.intervals.push(Interval {
             task: TaskId(stats.tasks),
             resource: ResourceId(k),
             start: t,
             finish,
-            tag: tags::KV_XFER,
+            tag: if total_prefill > 0 {
+                tags::PREFILL
+            } else {
+                tags::DECODE
+            },
         });
         stats.tasks += 1;
-        stats.makespan = stats.makespan.max(finish);
-        inst.work_end = Some((finish, Work::Ingest));
-        return;
-    }
-    grow_active(inst, cfg, stats);
-    let mut total_prefill = 0usize;
-    loop {
-        let occupied: Vec<bool> = inst.active.iter().map(Option::is_some).collect();
-        let empty = occupied.iter().filter(|o| !**o).count();
-        // (id, prompt_len, produced) of the admissible queue prefix
-        let heads: Vec<(u64, usize, usize)> = inst
-            .queue
-            .iter()
-            .take(empty)
-            .map(|q| (q.req.id, q.prompt_len, q.produced))
-            .collect();
-        let lens: Vec<usize> = heads.iter().map(|h| h.1).collect();
-        let cold = cold_order(inst);
-        let mem = &mut inst.mem;
-        let plan = plan_refill(&occupied, cfg.max_seq, &lens, |qi, prompt_len| {
-            // migrated sequences carry their produced tokens: the gate
-            // reserves pages for the full context at this instance
-            let pages = mem.pages_for(prompt_len + heads[qi].2);
-            pages <= mem.pool.hbm_capacity()
-                && mem.ensure_hbm_free(pages, &cold)
-                && mem.pool.try_alloc_hbm(heads[qi].0, pages)
-        });
-        for adm in &plan {
-            let q = inst.queue.pop_front().expect("refill plan exceeds queue");
-            if q.produced == 0 {
-                total_prefill += adm.prompt_len;
-            }
-            if let Some(src) = q.kv_src {
-                // pages now live here; the parked copy at the source
-                // is released in the cluster-level drain
-                stats.handoffs.push((q.req.id, src));
-            }
-            inst.active[adm.slot] = Some(ActiveSeq {
-                req: q.req,
-                prompt_len: adm.prompt_len,
-                produced: q.produced,
-                admitted_at: t,
-                first_token: q.first_token,
-                preemptions: q.preemptions,
-            });
-        }
-        if !plan.is_empty() || inst.active_count() > 0 {
-            break;
-        }
-        // Empty instance, nothing admitted. Reject the head only if it
-        // can NEVER fit; a head blocked on pages parked elsewhere (or
-        // an in-flight ingest) waits — the release re-kicks us.
-        match inst.queue.front() {
-            Some(head) => {
-                let pages = inst
-                    .mem
-                    .pages_for(head.prompt_len.min(cfg.max_seq - 1) + head.produced);
-                if pages > inst.mem.pool.hbm_capacity() {
-                    let q = inst.queue.pop_front().expect("head exists");
-                    if let Some(src) = q.kv_src {
-                        stats.handoffs.push((q.req.id, src));
-                    }
-                    stats.rejected += 1;
-                } else {
-                    break;
-                }
-            }
-            None => break,
-        }
+        inst.work_end = Some((finish, Work::Iteration));
     }
 
-    // Cost the iteration from the tiered KV footprint (same split as
-    // the single-instance batcher).
-    let tpp = inst.mem.tokens_per_page();
-    let mut hbm_tokens = 0usize;
-    let mut pool_tokens = 0usize;
-    for seq in inst.active.iter().flatten() {
-        let ctx = seq.ctx();
-        let in_pool = (inst.mem.pool.seq_pages(seq.req.id).pool * tpp).min(ctx);
-        pool_tokens += in_pool;
-        hbm_tokens += ctx - in_pool;
+    fn run(&mut self, requests: &[Request]) {
+        let cfg = self.cfg;
+        let mut failures = cfg.failures.clone();
+        failures.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.instance.cmp(&b.instance)));
+        let track_arrivals = cfg.autoscale.is_some();
+        let mut next_arrival = 0usize;
+        let mut next_failure = 0usize;
+        let mut next_tick: Option<f64> = cfg.autoscale.as_ref().map(|a| a.eval_interval);
+
+        loop {
+            // candidate events: (time, class, idx); the class breaks
+            // ties — arrival < work-end < crash < autoscale tick
+            let mut best: Option<(f64, u8, usize)> = None;
+            if let Some(r) = requests.get(next_arrival) {
+                best = Some((r.arrival, 0, 0));
+            }
+            for (k, inst) in self.insts.iter().enumerate() {
+                if let Some((wt, _)) = inst.work_end {
+                    let cand = (wt, 1u8, k);
+                    if best.map_or(true, |b| event_lt(cand, b)) {
+                        best = Some(cand);
+                    }
+                }
+            }
+            if let Some(f) = failures.get(next_failure) {
+                let cand = (f.time, 2u8, next_failure);
+                if best.map_or(true, |b| event_lt(cand, b)) {
+                    best = Some(cand);
+                }
+            }
+            let Some(mut ev) = best else {
+                break;
+            };
+            if let Some(tk) = next_tick {
+                let cand = (tk, 3u8, 0usize);
+                if event_lt(cand, ev) {
+                    ev = cand;
+                }
+            }
+            let (t, cls, idx) = ev;
+            match cls {
+                0 => {
+                    let req = requests[next_arrival];
+                    next_arrival += 1;
+                    if track_arrivals {
+                        self.recent_arrivals.push_back(t);
+                    }
+                    // fresh arrivals take the same admission path as
+                    // crash/drain re-queues: route to a serving
+                    // instance (the kick-drain below wakes it), wait
+                    // in limbo while capacity warms, or reject if no
+                    // capacity can ever come
+                    self.route_requeue(Queued {
+                        req,
+                        prompt_len: req.prompt_tokens,
+                        produced: 0,
+                        first_token: None,
+                        preemptions: 0,
+                        kv_src: None,
+                    });
+                }
+                1 => {
+                    let k = idx;
+                    let kind = self.insts[k].work_end.expect("work in flight").1;
+                    match kind {
+                        Work::Iteration => self.finish_iteration(k, t),
+                        Work::Ingest => self.finish_ingest(k, t),
+                        Work::Warmup => self.finish_warmup(k, t),
+                    }
+                    if self.insts[k].work_end.is_none() {
+                        self.start_work(k, t);
+                    }
+                }
+                2 => {
+                    next_failure += 1;
+                    self.crash_instance(failures[idx].instance, t);
+                }
+                _ => {
+                    self.autoscale_tick(t);
+                    let aus = cfg.autoscale.as_ref().expect("tick requires autoscale");
+                    next_tick = Some(t + aus.eval_interval);
+                }
+            }
+            // Drain cross-instance effects until quiescent: page handoffs
+            // wake the source instance, migrations/requeues wake targets.
+            while !self.stats.handoffs.is_empty() || !self.stats.kick.is_empty() {
+                let handoffs = std::mem::take(&mut self.stats.handoffs);
+                for (seq, src) in handoffs {
+                    self.insts[src].mem.pool.release(seq);
+                    self.stats.kick.insert(src);
+                }
+                let kicks: Vec<usize> = std::mem::take(&mut self.stats.kick).into_iter().collect();
+                for k in kicks {
+                    if self.insts[k].work_end.is_none() {
+                        self.start_work(k, t);
+                    }
+                }
+            }
+            // a drained instance releases its device once its parked
+            // pages are gone and nothing is in flight
+            for k2 in 0..self.insts.len() {
+                let inst = &self.insts[k2];
+                if inst.state == InstanceState::Draining
+                    && inst.work_end.is_none()
+                    && inst.queue.is_empty()
+                    && inst.ingest.is_empty()
+                    && inst.active_count() == 0
+                    && inst.mem.pool.sequences() == 0
+                {
+                    self.insts[k2].state = InstanceState::Released;
+                    self.insts[k2].died = Some(t);
+                    self.stats.intervals.push(Interval {
+                        task: TaskId(self.stats.tasks),
+                        resource: ResourceId(k2),
+                        start: t,
+                        finish: t,
+                        tag: tags::DRAIN,
+                    });
+                    self.stats.tasks += 1;
+                    let dev = self.insts[k2].device;
+                    self.pool_devices.push_back(dev);
+                }
+            }
+            let total_ctx: usize = self.insts.iter().map(|i| i.cur_ctx_tokens).sum();
+            self.peak_context = self.peak_context.max(total_ctx);
+            let alive = self
+                .insts
+                .iter()
+                .filter(|i| {
+                    matches!(
+                        i.state,
+                        InstanceState::Serving
+                            | InstanceState::WarmingUp
+                            | InstanceState::Draining
+                    )
+                })
+                .count();
+            self.peak_alive = self.peak_alive.max(alive);
+            // ticks stop once nothing can generate further work
+            if next_tick.is_some()
+                && next_arrival >= requests.len()
+                && next_failure >= failures.len()
+                && self.insts.iter().all(|i| i.work_end.is_none())
+            {
+                next_tick = None;
+            }
+        }
     }
-    inst.cur_ctx_tokens = hbm_tokens + pool_tokens;
-    if inst.active_count() == 0 {
-        return;
-    }
-    stats.prefill_tokens += total_prefill as u64;
-    let finish = t + cfg
-        .cost
-        .iteration_latency(hbm_tokens, pool_tokens, total_prefill);
-    stats.intervals.push(Interval {
-        task: TaskId(stats.tasks),
-        resource: ResourceId(k),
-        start: t,
-        finish,
-        tag: if total_prefill > 0 {
-            tags::PREFILL
-        } else {
-            tags::DECODE
-        },
-    });
-    stats.tasks += 1;
-    stats.makespan = stats.makespan.max(finish);
-    inst.work_end = Some((finish, Work::Iteration));
 }
 
 /// Run the cluster simulation to completion: every request is either
-/// completed or rejected when this returns, and every instance's page
-/// pool has drained. Deterministic: identical inputs produce a
-/// bit-identical report.
+/// completed or rejected exactly once when this returns — including
+/// under injected crashes and elastic scale-downs — and every
+/// non-crashed instance's page pool has drained. Deterministic:
+/// identical inputs produce a bit-identical report.
 pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterReport {
     assert!(!cfg.instances.is_empty(), "cluster needs at least one instance");
     assert!(cfg.max_seq >= 2, "need room for a prompt and one decode position");
@@ -572,8 +1275,17 @@ pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterRep
         has_prefill == has_decode,
         "disaggregation needs both a prefill pool and a decode pool"
     );
+    if let Some(aus) = &cfg.autoscale {
+        assert!(aus.slots >= 1, "autoscaled instances need at least one slot");
+        assert!(aus.eval_interval > 0.0, "evaluation cadence must be positive");
+        assert!(aus.lookback > 0.0, "lookback window must be positive");
+        assert!(
+            aus.min_instances >= 1 && aus.max_instances >= aus.min_instances,
+            "need 1 <= min_instances <= max_instances"
+        );
+    }
 
-    let mut insts: Vec<Instance> = cfg
+    let insts: Vec<Instance> = cfg
         .instances
         .iter()
         .map(|spec| Instance::new(spec, cfg))
@@ -583,98 +1295,52 @@ pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterRep
     } else {
         InstanceRole::Colocated
     };
-    let entry_ids: Vec<usize> = cfg
-        .instances
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| s.role == entry_role)
-        .map(|(i, _)| i)
-        .collect();
-    let decode_ids: Vec<usize> = cfg
-        .instances
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| s.role == InstanceRole::Decode)
-        .map(|(i, _)| i)
-        .collect();
-
-    let mut router = Router::new(cfg.route);
-    let mut stats = Stats {
-        per_instance_completed: vec![0; insts.len()],
-        ..Default::default()
+    let scaled_role = if has_decode {
+        InstanceRole::Decode
+    } else {
+        InstanceRole::Colocated
     };
-    let mut peak_context = 0usize;
-    let mut next_arrival = 0usize;
+    let n0 = insts.len();
+    let mut sim = Sim {
+        cfg,
+        insts,
+        router: Router::new(cfg.route),
+        stats: Stats {
+            per_instance_completed: vec![0; n0],
+            ..Default::default()
+        },
+        limbo: VecDeque::new(),
+        pool_devices: cfg
+            .autoscale
+            .as_ref()
+            .map(|a| a.device_pool.iter().copied().collect())
+            .unwrap_or_default(),
+        entry_role,
+        scaled_role,
+        last_action: f64::NEG_INFINITY,
+        recent_arrivals: VecDeque::new(),
+        outcome_ptr: 0,
+        peak_context: 0,
+        peak_alive: n0,
+    };
+    sim.run(requests);
 
-    loop {
-        let ta = requests.get(next_arrival).map(|r| r.arrival);
-        let te = insts
-            .iter()
-            .enumerate()
-            .filter_map(|(i, ins)| ins.work_end.as_ref().map(|(t, _)| (*t, i)))
-            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        let arrival_first = match (ta, te) {
-            (None, None) => break,
-            (Some(_), None) => true,
-            (None, Some(_)) => false,
-            (Some(t), Some((e, _))) => t <= e,
-        };
-        let now;
-        if arrival_first {
-            let req = requests[next_arrival];
-            next_arrival += 1;
-            now = req.arrival;
-            let candidates: Vec<CandidateLoad> = entry_ids
-                .iter()
-                .map(|&i| CandidateLoad {
-                    instance: i,
-                    outstanding_kv_pages: insts[i].outstanding_kv(),
-                })
-                .collect();
-            let k = router.route(&req, &candidates);
-            insts[k].queue.push_back(Queued {
-                req,
-                prompt_len: req.prompt_tokens,
-                produced: 0,
-                first_token: None,
-                preemptions: 0,
-                kv_src: None,
-            });
-            if insts[k].work_end.is_none() {
-                start_work(&mut insts[k], k, now, cfg, &mut stats);
-            }
-        } else {
-            let (t, k) = te.expect("work end exists");
-            now = t;
-            let kind = insts[k].work_end.expect("work in flight").1;
-            match kind {
-                Work::Iteration => finish_iteration(&mut insts, &decode_ids, k, t, cfg, &mut stats),
-                Work::Ingest => finish_ingest(&mut insts[k]),
-            }
-            start_work(&mut insts[k], k, t, cfg, &mut stats);
+    // makespan: latest finish of real work (zero-length markers from
+    // crash/drain events don't extend the served timeline)
+    let mut makespan = 0.0f64;
+    for iv in &sim.stats.intervals {
+        if iv.finish > iv.start {
+            makespan = makespan.max(iv.finish);
         }
-        // Drain cross-instance effects until quiescent: page handoffs
-        // wake the source instance, migrations wake the target.
-        while !stats.handoffs.is_empty() || !stats.kick.is_empty() {
-            let handoffs = std::mem::take(&mut stats.handoffs);
-            for (seq, src) in handoffs {
-                insts[src].mem.pool.release(seq);
-                stats.kick.insert(src);
-            }
-            let kicks: Vec<usize> = std::mem::take(&mut stats.kick).into_iter().collect();
-            for k in kicks {
-                if insts[k].work_end.is_none() {
-                    start_work(&mut insts[k], k, now, cfg, &mut stats);
-                }
-            }
-        }
-        let total_ctx: usize = insts.iter().map(|i| i.cur_ctx_tokens).sum();
-        peak_context = peak_context.max(total_ctx);
     }
 
-    // Conservation: every pool fully drained — no page leaked across
-    // completions, preemptions, or migrations.
-    for (i, inst) in insts.iter().enumerate() {
+    // Conservation: every live pool fully drained — no page leaked
+    // across completions, preemptions, migrations, drains, or crashes
+    // (a crashed pool was wiped at the instant of death).
+    for (i, inst) in sim.insts.iter().enumerate() {
+        if inst.state == InstanceState::Crashed {
+            continue;
+        }
         assert_eq!(
             inst.mem.pool.sequences(),
             0,
@@ -686,9 +1352,17 @@ pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterRep
             .check_conservation()
             .unwrap_or_else(|e| panic!("instance {i}: {e}"));
     }
+    assert!(sim.limbo.is_empty(), "limbo entries leaked");
 
-    let demotions = insts.iter().map(|i| i.mem.pool.demotions).sum();
-    let n = insts.len();
+    let demotions = sim.insts.iter().map(|i| i.mem.pool.demotions).sum();
+    let instance_seconds: f64 = sim
+        .insts
+        .iter()
+        .map(|i| (i.died.unwrap_or(makespan) - i.born).max(0.0))
+        .sum();
+    let n = sim.insts.len();
+    let peak_instances = sim.peak_alive;
+    let peak_context = sim.peak_context;
     let Stats {
         outcomes,
         rejected,
@@ -696,13 +1370,18 @@ pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterRep
         decoded_tokens,
         prefill_tokens,
         intervals,
-        makespan,
         kv_migrations,
         kv_bytes,
         kv_xfer_time,
         per_instance_completed,
+        crashes,
+        crash_requeues,
+        scale_ups,
+        scale_downs,
+        drain_migrations,
+        warmup_time,
         ..
-    } = stats;
+    } = sim.stats;
     ClusterReport {
         serving: ServingReport {
             outcomes,
@@ -719,6 +1398,14 @@ pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterRep
         kv_bytes_migrated: kv_bytes,
         kv_xfer_time,
         per_instance_completed,
+        crashes,
+        crash_requeues,
+        scale_ups,
+        scale_downs,
+        drain_migrations,
+        warmup_time,
+        instance_seconds,
+        peak_instances,
     }
 }
 
@@ -754,17 +1441,36 @@ pub fn cluster_rate_sweep(
 }
 
 /// Place `n` instances spread across the topology's racks (one per
-/// rack, wrapping onto successive boards), die 0 of each board — the
-/// placement that exposes the cross-rack fabric tier to migrations.
+/// rack, wrapping onto successive boards, then onto successive dies) —
+/// the placement that exposes the cross-rack fabric tier to
+/// migrations. `n` is clamped to the device count, so the returned
+/// devices are always distinct; use [`try_spread_placement`] to treat
+/// an oversized `n` as an error instead.
 pub fn spread_placement(topo: &Topology, n: usize) -> Vec<DeviceId> {
+    try_spread_placement(topo, n.min(topo.geometry.device_count()))
+        .expect("clamped placement always fits")
+}
+
+/// Fallible spread placement: errors when `n` exceeds the device
+/// count. (The old behavior silently wrapped onto already-used
+/// devices, handing several instances the same chip.)
+pub fn try_spread_placement(topo: &Topology, n: usize) -> Result<Vec<DeviceId>, String> {
     let g = topo.geometry;
-    (0..n)
+    let total = g.device_count();
+    if n > total {
+        return Err(format!(
+            "cannot place {n} instances on {total} devices ({} racks x {} boards x {} dies)",
+            g.racks, g.boards_per_rack, g.dies_per_board
+        ));
+    }
+    Ok((0..n)
         .map(|i| {
             let rack = i % g.racks;
             let board = (i / g.racks) % g.boards_per_rack;
-            DeviceId(rack * g.boards_per_rack * g.dies_per_board + board * g.dies_per_board)
+            let die = (i / (g.racks * g.boards_per_rack)) % g.dies_per_board;
+            DeviceId(rack * g.boards_per_rack * g.dies_per_board + board * g.dies_per_board + die)
         })
-        .collect()
+        .collect())
 }
 
 // ---- the checked-in crossover presets ---------------------------------
@@ -884,6 +1590,8 @@ pub fn crossover_cluster(fabric: ClusterFabric, mode: ClusterMode) -> ClusterCon
         pool_pages: 0,
         max_preemptions: 4,
         route: RoutePolicy::LeastOutstandingKv,
+        autoscale: None,
+        failures: vec![],
     }
 }
 
@@ -940,6 +1648,168 @@ pub fn crossover_comparison() -> CrossoverSummary {
     }
 }
 
+// ---- the checked-in elastic-autoscaling presets (ISSUE 4) -------------
+
+/// Mean offered rate of the diurnal autoscale scenario, requests/s.
+pub const AUTOSCALE_MEAN_RATE: f64 = 24.0;
+/// Day length (and arrival horizon) of the scenario, virtual seconds.
+pub const AUTOSCALE_PERIOD: f64 = 48.0;
+/// Static peak provisioning: instances sized to hold the SLO at the
+/// diurnal peak with ~20% headroom.
+pub const AUTOSCALE_STATIC_INSTANCES: usize = 9;
+/// Elastic bounds and starting size.
+pub const AUTOSCALE_MAX_INSTANCES: usize = 10;
+pub const AUTOSCALE_INITIAL_INSTANCES: usize = 4;
+/// Batching slots per instance (small slots = fine-grained capacity).
+pub const AUTOSCALE_SLOTS: usize = 4;
+
+/// 8B-class device at bf16 for the elastic scenario: twice the
+/// crossover device's weights (16 GiB), which is what makes the
+/// model-load warm-up decisively fabric-dependent — ~88 ms over the
+/// supernode's pooled-memory fabric vs ~1.4 s over legacy RoCE.
+pub fn autoscale_device() -> KvCacheConfig {
+    KvCacheConfig {
+        kv_bytes_per_token: 131_072,
+        tokens_per_page: 64,
+        weight_bytes: 16 * (1u64 << 30),
+        hbm_usable: 16 * (1u64 << 30) + 40_960 * 131_072,
+        hbm_bw: 1.6e12,
+        pool_bw: 392e9,
+        attn_tokens_per_s: 40e6,
+    }
+}
+
+/// The diurnal multi-tenant workload of the autoscale scenario: a
+/// ≥4x peak-to-trough swing (two staggered tenants), mid-length
+/// prompts, short chat outputs, fixed seed.
+pub fn autoscale_workload(mean_rate: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        arrival: diurnal_two_tenant(mean_rate, AUTOSCALE_PERIOD),
+        prompt: LengthDist::Uniform { lo: 600, hi: 1000 },
+        output: LengthDist::Uniform { lo: 48, hi: 80 },
+        seed: 42,
+    }
+}
+
+/// The autoscale scenario's SLO: 500 ms to first token, 20 ms/token.
+pub fn autoscale_slo() -> Slo {
+    Slo {
+        ttft_p99: 0.5,
+        tpot_p99: 0.02,
+    }
+}
+
+/// The scenario's scaling policy: queue-depth with a hysteresis band —
+/// scale up above 0.9 backlog per committed slot, down when the
+/// backlog would still fit under 0.75 of the remaining capacity.
+pub fn autoscale_policy() -> AutoscalePolicy {
+    AutoscalePolicy::QueueDepth {
+        scale_up_backlog: 0.9,
+        scale_down_backlog: 0.75,
+    }
+}
+
+/// Cluster config of the autoscale comparison. `elastic = false` is
+/// the static-peak-provisioning baseline ([`AUTOSCALE_STATIC_INSTANCES`]
+/// always-on instances); `elastic = true` starts at
+/// [`AUTOSCALE_INITIAL_INSTANCES`] and lets the queue-depth policy
+/// track the diurnal swing. `spare_devices` extends the device pool
+/// beyond [`AUTOSCALE_MAX_INSTANCES`] so crash replacements have a
+/// chip to land on after a device dies.
+pub fn autoscale_cluster(
+    fabric: ClusterFabric,
+    elastic: bool,
+    spare_devices: usize,
+) -> ClusterConfig {
+    let topology = fabric.topology();
+    let n0 = if elastic {
+        AUTOSCALE_INITIAL_INSTANCES
+    } else {
+        AUTOSCALE_STATIC_INSTANCES
+    };
+    let places = spread_placement(&topology, AUTOSCALE_MAX_INSTANCES + spare_devices);
+    let instances = places[..n0]
+        .iter()
+        .map(|&device| InstanceSpec {
+            device,
+            role: InstanceRole::Colocated,
+            slots: AUTOSCALE_SLOTS,
+        })
+        .collect();
+    let autoscale = elastic.then(|| AutoscaleConfig {
+        policy: autoscale_policy(),
+        eval_interval: 0.25,
+        min_instances: 1,
+        max_instances: AUTOSCALE_MAX_INSTANCES,
+        slots: AUTOSCALE_SLOTS,
+        up_cooldown: 0.2,
+        down_cooldown: 0.5,
+        lookback: 2.0,
+        device_pool: places[n0..].to_vec(),
+    });
+    ClusterConfig {
+        topology,
+        instances,
+        max_seq: 4096,
+        cost: CostModel::new(autoscale_device(), 0.0),
+        policy: MemoryPolicy::NoOffload,
+        pool_pages: 0,
+        max_preemptions: 4,
+        route: RoutePolicy::LeastOutstandingKv,
+        autoscale,
+        failures: vec![],
+    }
+}
+
+/// The checked-in diurnal scenario for one (fabric, elastic) cell.
+pub fn autoscale_scenario(fabric: ClusterFabric, elastic: bool) -> ClusterScenario {
+    ClusterScenario {
+        cluster: autoscale_cluster(fabric, elastic, 0),
+        workload: autoscale_workload(AUTOSCALE_MEAN_RATE),
+        horizon: AUTOSCALE_PERIOD,
+    }
+}
+
+/// The crash-recovery scenario: the elastic cluster with one serving
+/// instance killed at mid-day (peak traffic), and a spare device for
+/// the replacement.
+pub fn autoscale_crash_scenario(fabric: ClusterFabric) -> ClusterScenario {
+    let mut cluster = autoscale_cluster(fabric, true, 1);
+    cluster.failures = vec![InstanceCrash {
+        time: AUTOSCALE_PERIOD * 0.5,
+        instance: 0,
+    }];
+    ClusterScenario {
+        cluster,
+        workload: autoscale_workload(AUTOSCALE_MEAN_RATE),
+        horizon: AUTOSCALE_PERIOD,
+    }
+}
+
+/// Static-vs-elastic comparison on one fabric: the headline numbers
+/// the scenario test, bench gate, and example all read.
+#[derive(Debug, Clone)]
+pub struct AutoscaleSummary {
+    pub static_report: ClusterReport,
+    pub elastic_report: ClusterReport,
+}
+
+impl AutoscaleSummary {
+    /// Fraction of instance-seconds elastic scaling saves vs static
+    /// peak provisioning.
+    pub fn instance_seconds_saved(&self) -> f64 {
+        1.0 - self.elastic_report.instance_seconds / self.static_report.instance_seconds
+    }
+}
+
+/// Run the static and elastic diurnal scenarios on one fabric.
+pub fn autoscale_comparison(fabric: ClusterFabric) -> AutoscaleSummary {
+    AutoscaleSummary {
+        static_report: run_cluster_scenario(&autoscale_scenario(fabric, false)),
+        elastic_report: run_cluster_scenario(&autoscale_scenario(fabric, true)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -992,6 +1862,8 @@ mod tests {
             pool_pages: 0,
             max_preemptions: 4,
             route: RoutePolicy::LeastOutstandingKv,
+            autoscale: None,
+            failures: vec![],
         }
     }
 
@@ -1046,6 +1918,13 @@ mod tests {
             assert_eq!(a.finish.to_bits(), b.finish.to_bits());
         }
         assert_eq!(crep.kv_migrations, 0, "colocated never migrates");
+        assert_eq!(crep.crashes, 0);
+        assert_eq!(crep.scale_ups, 0);
+        // a static cluster holds its device for the whole run
+        assert_eq!(
+            crep.instance_seconds.to_bits(),
+            crep.serving.makespan.to_bits()
+        );
     }
 
     #[test]
@@ -1210,5 +2089,338 @@ mod tests {
                 );
             }
         }
+    }
+
+    // ---- ISSUE 4 satellite: placement guards ---------------------------
+
+    #[test]
+    fn spread_placement_never_duplicates_devices() {
+        // regression: on a 1-rack/2-board/4-die topology the old
+        // formula wrapped back to device 0 at the third instance,
+        // silently co-locating instances on one chip
+        let topo = tiny_topology(Fabric::supernode());
+        for n in 1..=topo.device_count() {
+            let places = spread_placement(&topo, n);
+            assert_eq!(places.len(), n);
+            let distinct: BTreeSet<DeviceId> = places.iter().copied().collect();
+            assert_eq!(distinct.len(), n, "duplicate device at n={n}: {places:?}");
+            for &d in &places {
+                assert!(d.0 < topo.device_count());
+            }
+        }
+    }
+
+    #[test]
+    fn spread_placement_clamps_and_try_variant_errors() {
+        let topo = tiny_topology(Fabric::supernode());
+        let total = topo.device_count();
+        // asking for more instances than chips clamps to the chip count
+        let places = spread_placement(&topo, total + 5);
+        assert_eq!(places.len(), total);
+        let distinct: BTreeSet<DeviceId> = places.iter().copied().collect();
+        assert_eq!(distinct.len(), total);
+        // the fallible form reports the overflow instead
+        assert!(try_spread_placement(&topo, total).is_ok());
+        let err = try_spread_placement(&topo, total + 1).unwrap_err();
+        assert!(err.contains("8 devices"), "err: {err}");
+        assert!(try_spread_placement(&topo, 0).unwrap().is_empty());
+    }
+
+    // ---- ISSUE 4: elasticity and failure -------------------------------
+
+    fn elastic_cluster(
+        instances: Vec<InstanceSpec>,
+        pages: u64,
+        policy: AutoscalePolicy,
+        pool: Vec<DeviceId>,
+        max: usize,
+    ) -> ClusterConfig {
+        let mut cfg = tiny_cluster(instances, pages);
+        cfg.autoscale = Some(AutoscaleConfig {
+            policy,
+            eval_interval: 0.005,
+            min_instances: 1,
+            max_instances: max,
+            slots: 4,
+            up_cooldown: 0.0,
+            down_cooldown: 0.01,
+            lookback: 0.5,
+            device_pool: pool,
+        });
+        cfg
+    }
+
+    #[test]
+    fn scheduled_scale_up_pays_warmup_then_serves() {
+        // one overloaded instance, schedule demands three from t=0.02:
+        // two spawns, each paying the weight transfer before admitting
+        // anything; the backlog then spreads onto the new engines
+        let cfg = elastic_cluster(
+            colocated_spec(4),
+            64,
+            AutoscalePolicy::Scheduled {
+                steps: vec![(0.0, 1), (0.02, 3)],
+            },
+            vec![DeviceId(1), DeviceId(2)],
+            4,
+        );
+        let reqs = fixed_requests(200, 32, 8, 2e-4);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 200);
+        assert_eq!(rep.scale_ups, 2);
+        assert_eq!(rep.crashes, 0);
+        assert!(rep.warmup_time > 0.0);
+        let trace = &rep.serving.trace;
+        assert_eq!(trace.resources, 3);
+        assert_eq!(trace.tagged_count(tags::WARMUP), 2);
+        // warmup occupies the new engines before any of their work
+        for iv in trace.intervals_tagged(tags::WARMUP) {
+            assert!(iv.resource.0 >= 1);
+            assert!(iv.finish > iv.start);
+            for other in trace.per_resource(iv.resource) {
+                assert!(other.start >= iv.start);
+            }
+        }
+        // the spawned instances actually served requests
+        assert!(rep.per_instance_completed[1] + rep.per_instance_completed[2] > 0);
+        assert_eq!(rep.peak_instances, 3);
+        assert!(rep.instance_seconds < 3.0 * rep.serving.makespan);
+    }
+
+    #[test]
+    fn scheduled_scale_down_drains_migrates_and_releases() {
+        // start with three instances, drop to one at t=0.02 while work
+        // is still in flight: queued + resident sequences must migrate
+        // out under the custody protocol, then the devices release
+        let cfg = elastic_cluster(
+            vec![
+                InstanceSpec {
+                    device: DeviceId(0),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+                InstanceSpec {
+                    device: DeviceId(1),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+                InstanceSpec {
+                    device: DeviceId(2),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+            ],
+            64,
+            AutoscalePolicy::Scheduled {
+                steps: vec![(0.0, 3), (0.02, 1)],
+            },
+            vec![],
+            3,
+        );
+        let reqs = fixed_requests(200, 32, 8, 2e-4);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 200);
+        assert_eq!(rep.scale_downs, 2);
+        assert!(rep.drain_migrations > 0, "resident KV must migrate out");
+        assert!(rep.kv_migrations >= rep.drain_migrations);
+        let trace = &rep.serving.trace;
+        assert_eq!(trace.tagged_count(tags::DRAIN), 2, "both devices released");
+        // released instances stop accruing instance-seconds
+        assert!(rep.instance_seconds < 3.0 * rep.serving.makespan);
+        // conservation held (simulate_cluster asserts pools drained)
+        let ids: BTreeSet<u64> = rep.serving.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids.len(), rep.completed(), "no duplicate completions");
+    }
+
+    #[test]
+    fn crash_requeues_in_flight_work_and_loses_nothing() {
+        // two colocated instances, no autoscaler: kill one mid-run;
+        // its in-flight and queued requests re-prefill on the survivor
+        let mut cfg = tiny_cluster(
+            vec![
+                InstanceSpec {
+                    device: DeviceId(0),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+                InstanceSpec {
+                    device: DeviceId(1),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+            ],
+            64,
+        );
+        cfg.failures = vec![InstanceCrash {
+            time: 0.03,
+            instance: 0,
+        }];
+        let reqs = fixed_requests(40, 32, 10, 0.002);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.crashes, 1);
+        assert!(rep.crash_requeues > 0, "victim held in-flight work");
+        assert_eq!(
+            rep.completed() as u64 + rep.serving.rejected,
+            40,
+            "crash must not lose requests"
+        );
+        assert_eq!(rep.serving.rejected, 0, "survivor has room for everything");
+        let trace = &rep.serving.trace;
+        assert_eq!(trace.tagged_count(tags::CRASH), 1);
+        for iv in trace.intervals_tagged(tags::CRASH) {
+            assert!(iv.finish <= 0.03 + 1e-12, "lost work truncated at death");
+        }
+        // the dead engine does no work after the crash
+        for iv in rep.serving.trace.per_resource(ResourceId(0)) {
+            assert!(iv.start <= 0.03 + 1e-12);
+        }
+        // requeued requests kept their first-token continuity: TTFT of
+        // every outcome is still well-defined and positive
+        for o in &rep.serving.outcomes {
+            assert!(o.first_token > o.arrival);
+        }
+    }
+
+    #[test]
+    fn crash_of_sole_instance_with_autoscaler_recovers_via_replacement() {
+        // the only instance dies; the autoscaler spawns a replacement
+        // immediately and arrivals during the warm-up wait in limbo
+        let cfg = {
+            let mut c = elastic_cluster(
+                colocated_spec(4),
+                64,
+                // schedule holds the size at 1: only crash replacement spawns
+                AutoscalePolicy::Scheduled {
+                    steps: vec![(0.0, 1)],
+                },
+                vec![DeviceId(1)],
+                2,
+            );
+            c.failures = vec![InstanceCrash {
+                time: 0.02,
+                instance: 0,
+            }];
+            c
+        };
+        let reqs = fixed_requests(30, 32, 8, 0.003);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.crashes, 1);
+        assert_eq!(rep.scale_ups, 1, "replacement spawned at the crash");
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 30);
+        assert_eq!(rep.serving.rejected, 0, "limbo holds arrivals, not drops");
+        assert!(rep.per_instance_completed[1] > 0, "replacement served");
+        assert_eq!(rep.serving.trace.tagged_count(tags::WARMUP), 1);
+    }
+
+    #[test]
+    fn crash_without_capacity_rejects_instead_of_hanging() {
+        // no autoscaler, single instance: a crash strands everything
+        // still in flight — requests must be rejected, never lost
+        let mut cfg = tiny_cluster(colocated_spec(4), 64);
+        cfg.failures = vec![InstanceCrash {
+            time: 0.02,
+            instance: 0,
+        }];
+        let reqs = fixed_requests(30, 32, 8, 0.003);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.crashes, 1);
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 30);
+        assert!(rep.serving.rejected > 0, "no capacity left: must reject");
+    }
+
+    #[test]
+    fn ordinal_crash_targeting_hits_a_live_instance() {
+        // crash ordinal 5 of a 2-instance cluster: 5 mod 2 = instance 1
+        let mut cfg = tiny_cluster(
+            vec![
+                InstanceSpec {
+                    device: DeviceId(0),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+                InstanceSpec {
+                    device: DeviceId(1),
+                    role: InstanceRole::Colocated,
+                    slots: 4,
+                },
+            ],
+            64,
+        );
+        cfg.failures = vec![InstanceCrash {
+            time: 0.02,
+            instance: 5,
+        }];
+        let reqs = fixed_requests(30, 32, 8, 0.002);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.crashes, 1);
+        for iv in rep.serving.trace.intervals_tagged(tags::CRASH) {
+            assert_eq!(iv.resource, ResourceId(1), "5 mod 2 targets instance 1");
+        }
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 30);
+    }
+
+    #[test]
+    fn queue_depth_policy_tracks_a_load_step_end_to_end() {
+        // a burst of tight arrivals followed by a lull: the queue-depth
+        // policy scales up into the burst and back down after it
+        let cfg = elastic_cluster(
+            colocated_spec(4),
+            64,
+            AutoscalePolicy::QueueDepth {
+                scale_up_backlog: 0.8,
+                scale_down_backlog: 0.7,
+            },
+            vec![DeviceId(1), DeviceId(2), DeviceId(3)],
+            4,
+        );
+        let mut reqs = fixed_requests(80, 32, 8, 0.0005);
+        // a late straggler keeps the run alive through the lull so the
+        // scale-down has time to trigger
+        reqs.push(Request {
+            id: 80,
+            tenant: 0,
+            arrival: 0.5,
+            prompt_tokens: 32,
+            output_tokens: 8,
+        });
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 81);
+        assert!(rep.scale_ups >= 1, "burst must trigger a scale-up");
+        assert!(rep.scale_downs >= 1, "lull must trigger a scale-down");
+        assert!(rep.serving.trace.tagged_count(tags::WARMUP) >= 1);
+        assert!(rep.serving.trace.tagged_count(tags::DRAIN) >= 1);
+    }
+
+    #[test]
+    fn disaggregated_autoscaler_scales_the_decode_pool() {
+        // disagg cluster under decode pressure: the scaled role is the
+        // decode pool, prefill instances are left alone
+        let mut cfg = tiny_cluster(disagg_spec(), 64);
+        cfg.autoscale = Some(AutoscaleConfig {
+            policy: AutoscalePolicy::Scheduled {
+                steps: vec![(0.0, 1), (0.01, 2)],
+            },
+            eval_interval: 0.005,
+            min_instances: 1,
+            max_instances: 2,
+            slots: 4,
+            up_cooldown: 0.0,
+            down_cooldown: 0.01,
+            lookback: 0.5,
+            device_pool: vec![DeviceId(5)],
+        });
+        // long outputs keep the decode pool saturated, so migrations
+        // spill onto the new member once it is up
+        let reqs = fixed_requests(40, 40, 64, 8e-4);
+        let rep = simulate_cluster(&cfg, &reqs);
+        assert_eq!(rep.completed() as u64 + rep.serving.rejected, 40);
+        assert_eq!(rep.scale_ups, 1);
+        assert_eq!(rep.serving.trace.resources, 3);
+        // the new decode instance received migrations and completed work
+        assert!(rep.per_instance_completed[2] > 0, "new decode member served");
+        assert_eq!(
+            rep.per_instance_completed[0], 0,
+            "prefill pool still completes nothing"
+        );
     }
 }

@@ -154,6 +154,17 @@ impl PagePool {
         freed
     }
 
+    /// Drop every ledger entry and return both tiers to fully free —
+    /// the pool-side effect of an instance crash: the device's HBM is
+    /// gone, so its pages simply cease to exist (sequences that parked
+    /// KV here must re-prefill elsewhere). Conservation holds trivially
+    /// afterwards; `demotions` is a cumulative counter and is kept.
+    pub fn release_all(&mut self) {
+        self.ledger.clear();
+        self.hbm_free = self.hbm_capacity;
+        self.pool_free = self.pool_capacity;
+    }
+
     /// Conservation check: per tier, `free + Σ ledger = capacity`.
     /// Used by the property tests after every operation.
     pub fn check_conservation(&self) -> Result<(), String> {
@@ -332,6 +343,22 @@ mod tests {
         assert_eq!(src.seq_pages(2).total(), 3);
         src.check_conservation().unwrap();
         dst.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn release_all_clears_ledger_and_frees_both_tiers() {
+        let mut p = PagePool::new(10, 4);
+        assert!(p.try_alloc_hbm(1, 6));
+        assert!(p.try_alloc_hbm(2, 4));
+        p.demote(1, 3);
+        p.release_all();
+        assert_eq!(p.sequences(), 0);
+        assert_eq!(p.hbm_free(), 10);
+        assert_eq!(p.pool_free(), 4);
+        assert_eq!(p.demotions, 3, "cumulative counter survives");
+        p.check_conservation().unwrap();
+        // releasing a sequence the wipe already dropped is a no-op
+        assert_eq!(p.release(1).total(), 0);
     }
 
     #[test]

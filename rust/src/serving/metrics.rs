@@ -144,6 +144,21 @@ impl ServingReport {
             && self.tpot_pct(99.0) <= slo.tpot_p99
     }
 
+    /// p99 TTFT over only the requests that *arrived* in `[lo, hi)` —
+    /// the windowed view the crash-recovery scenario asserts on: after
+    /// an instance crash, requests arriving once the replacement is up
+    /// must meet the SLO again even though the crash-window requests
+    /// dragged the whole-run percentile up.
+    pub fn ttft_pct_arriving_in(&self, p: f64, lo: f64, hi: f64) -> f64 {
+        let mut pct = Percentiles::new();
+        for o in &self.outcomes {
+            if o.arrival >= lo && o.arrival < hi {
+                pct.add(o.ttft());
+            }
+        }
+        pct.pct(p)
+    }
+
     /// Mean replica utilization over the makespan.
     pub fn mean_utilization(&self) -> f64 {
         let rs: Vec<ResourceId> = (0..self.trace.resources).map(ResourceId).collect();

@@ -20,6 +20,17 @@
 //! disaggregated mode (there the policy is always
 //! least-outstanding-KV: the KV pages are about to move to that
 //! instance, so page headroom is the only signal that matters).
+//!
+//! Under elasticity the candidate set is *dynamic*: the cluster passes
+//! only instances currently in the Serving state, so warming-up,
+//! draining, released, and crashed instances never receive work. The
+//! router is deliberately stateless about membership — `RoundRobin`
+//! cycles over whatever set it is handed (its counter survives set
+//! changes), and `SessionAffinity` hashes into the current set, which
+//! means a scale event re-pins sessions the way consistent-hashing
+//! front-ends rebalance on membership change. Crash recovery re-routes
+//! a victim's in-flight requests through this same interface, so
+//! requeues obey the configured policy too.
 
 use crate::serving::workload::Request;
 

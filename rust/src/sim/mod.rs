@@ -28,4 +28,13 @@ pub mod tags {
     /// Serving: KV-cache page migration between instances (prefill →
     /// decode handoff over the fabric).
     pub const KV_XFER: u64 = 10;
+    /// Serving: model-load transfer of a scaling-up instance (weight
+    /// bytes over the fabric tier to the new device).
+    pub const WARMUP: u64 = 11;
+    /// Serving: work lost to an instance crash (the truncated in-flight
+    /// interval; a zero-length marker if the instance was idle).
+    pub const CRASH: u64 = 12;
+    /// Serving: zero-length marker at the instant a drained instance
+    /// releases its device.
+    pub const DRAIN: u64 = 13;
 }

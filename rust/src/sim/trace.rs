@@ -8,7 +8,7 @@ use super::engine::{Engine, SimResult};
 use crate::util::json::{Json, JsonObj};
 
 /// Tag names for trace events; index = tag value used in `add_task`.
-pub const TAG_NAMES: [&str; 11] = [
+pub const TAG_NAMES: [&str; 14] = [
     "compute",
     "comm",
     "prefetch",
@@ -20,6 +20,9 @@ pub const TAG_NAMES: [&str; 11] = [
     "prefill",
     "decode",
     "kv_xfer",
+    "warmup",
+    "crash",
+    "drain",
 ];
 
 /// Human-readable name for a task tag.

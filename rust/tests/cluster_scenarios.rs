@@ -141,3 +141,259 @@ fn disaggregated_overload_backpressures_instead_of_dropping() {
         "failure shows up as latency"
     );
 }
+
+// ---- ISSUE 4: elastic autoscaling + instance-failure recovery ---------
+
+use hyperparallel::serving::{
+    autoscale_comparison, autoscale_crash_scenario, autoscale_scenario, autoscale_slo,
+    autoscale_workload, simulate_cluster, AutoscaleConfig, AutoscalePolicy, ClusterConfig,
+    CostModel, InstanceCrash, InstanceRole, InstanceSpec, LengthDist, MemoryPolicy, RoutePolicy,
+    WorkloadConfig, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
+};
+use hyperparallel::serving::{spread_placement, ArrivalProcess};
+use hyperparallel::hyperoffload::kvcache::KvCacheConfig;
+use hyperparallel::supernode::Topology;
+use std::collections::BTreeSet;
+
+/// The ISSUE 4 acceptance scenario: across a ≥4x diurnal swing, the
+/// elastic cluster holds the p99 TTFT SLO with ≥25% fewer
+/// instance-seconds than static peak provisioning on the supernode
+/// fabric — and the *same* policy blows the SLO on the legacy fabric,
+/// because the model-load warm-up (16 GiB over the fabric) is ~88 ms
+/// on pooled UB memory and ~1.4 s over RoCE. Expected values (seed
+/// 42, mirrored by tools/cluster_simcheck.py): static p99 ≈ 0.156 s,
+/// elastic p99 ≈ 0.251 s, saving ≈ 32.9%, legacy elastic ≈ 1.08 s.
+#[test]
+fn elastic_scaling_meets_slo_with_fewer_instance_hours_on_supernode_only() {
+    let wl = autoscale_workload(AUTOSCALE_MEAN_RATE);
+    assert!(
+        wl.arrival.swing_ratio(AUTOSCALE_PERIOD, 4800) >= 4.0,
+        "the diurnal preset must swing at least 4x"
+    );
+    let submitted = wl.generate(AUTOSCALE_PERIOD).len();
+    let slo = autoscale_slo();
+
+    let sn = autoscale_comparison(ClusterFabric::Supernode);
+    let sop = sn.static_report.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    assert!(
+        sop.attains_slo,
+        "static peak provisioning must attain: p99 ttft {}",
+        sop.p99_ttft
+    );
+    assert_eq!(sn.static_report.scale_ups, 0);
+    assert_eq!(sn.static_report.crashes, 0);
+
+    let eop = sn.elastic_report.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    assert_eq!(eop.rejected, 0, "elastic scaling must not shed load");
+    assert!(
+        eop.p99_ttft <= slo.ttft_p99,
+        "elastic must hold the TTFT SLO on the supernode fabric: {}",
+        eop.p99_ttft
+    );
+    assert!(eop.attains_slo);
+    assert_eq!(
+        sn.elastic_report.completed() + sn.elastic_report.serving.rejected as usize,
+        submitted
+    );
+    // the policy really tracked the swing, in both directions
+    assert!(sn.elastic_report.scale_ups >= 5, "{}", sn.elastic_report.scale_ups);
+    assert!(sn.elastic_report.scale_downs >= 5);
+    assert_eq!(
+        sn.elastic_report.serving.trace.tagged_count(tags::WARMUP) as u64,
+        sn.elastic_report.scale_ups,
+        "every scale-up pays a model-load warm-up interval"
+    );
+    assert!(sn.elastic_report.serving.trace.tagged_count(tags::DRAIN) >= 1);
+    assert!(sn.elastic_report.warmup_time > 0.0);
+
+    // the headline: ≥25% fewer instance-seconds than static peak
+    let saved = sn.instance_seconds_saved();
+    assert!(
+        saved >= 0.25,
+        "instance-second saving {saved:.3} below the 25% gate \
+         (elastic {:.1} vs static {:.1})",
+        sn.elastic_report.instance_seconds,
+        sn.static_report.instance_seconds
+    );
+
+    // same policy, legacy fabric: the 1.4 s warm-up lag blows the SLO
+    let lg = run_cluster_scenario(&autoscale_scenario(ClusterFabric::Legacy, true));
+    let lop = lg.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    assert_eq!(lop.rejected, 0);
+    assert!(
+        lop.p99_ttft > slo.ttft_p99,
+        "legacy warm-up lag must blow the TTFT SLO: {}",
+        lop.p99_ttft
+    );
+}
+
+/// An injected crash at peak traffic loses zero requests — every
+/// request is completed (nothing is even rejected: the survivors and
+/// the instant replacement absorb the requeues) — and the cluster
+/// re-converges to SLO attainment for requests arriving after the
+/// recovery window. Mirror values: whole-run p99 ≈ 0.37 s, post-crash
+/// window p99 ≈ 0.27 s.
+#[test]
+fn instance_crash_loses_zero_requests_and_reconverges_to_slo() {
+    let sc = autoscale_crash_scenario(ClusterFabric::Supernode);
+    let submitted = sc.workload.generate(sc.horizon).len();
+    let rep = run_cluster_scenario(&sc);
+    let slo = autoscale_slo();
+
+    assert_eq!(rep.crashes, 1);
+    assert!(rep.crash_requeues > 0, "the victim held in-flight work");
+    assert_eq!(
+        rep.completed() + rep.serving.rejected as usize,
+        submitted,
+        "conservation: completed + rejected must cover every request"
+    );
+    assert_eq!(rep.serving.rejected, 0, "zero requests lost to the crash");
+    let ids: BTreeSet<u64> = rep.serving.outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(ids.len(), rep.completed(), "no duplicate completions");
+
+    // the crash is visible in the indexed trace, and the autoscaler
+    // replaced the dead instance
+    assert_eq!(rep.serving.trace.tagged_count(tags::CRASH), 1);
+    assert!(rep.scale_ups >= 1);
+
+    // even with the crash inside the run, the whole-run p99 holds...
+    assert!(
+        rep.serving.ttft_pct(99.0) <= slo.ttft_p99,
+        "whole-run p99 {}",
+        rep.serving.ttft_pct(99.0)
+    );
+    // ...and requests arriving 2 s after the crash meet the SLO again
+    let crash_t = AUTOSCALE_PERIOD * 0.5;
+    let reconv = rep
+        .serving
+        .ttft_pct_arriving_in(99.0, crash_t + 2.0, AUTOSCALE_PERIOD);
+    assert!(
+        reconv <= slo.ttft_p99,
+        "post-crash arrivals must re-converge to the SLO: {reconv}"
+    );
+}
+
+// ---- ISSUE 4 satellite: request conservation across the grid ----------
+
+fn grid_device() -> KvCacheConfig {
+    KvCacheConfig {
+        kv_bytes_per_token: 1024,
+        tokens_per_page: 16,
+        weight_bytes: 1 << 20,
+        hbm_usable: (1 << 20) + 64 * 16 * 1024,
+        hbm_bw: 1.6e12,
+        pool_bw: 392e9,
+        attn_tokens_per_s: 40e6,
+    }
+}
+
+fn grid_cluster(disagg: bool, route: RoutePolicy, inject: bool) -> ClusterConfig {
+    let topology = Topology::matrix384();
+    let places = spread_placement(&topology, 8);
+    let instances = if disagg {
+        vec![
+            InstanceSpec { device: places[0], role: InstanceRole::Prefill, slots: 2 },
+            InstanceSpec { device: places[1], role: InstanceRole::Prefill, slots: 2 },
+            InstanceSpec { device: places[2], role: InstanceRole::Decode, slots: 4 },
+            InstanceSpec { device: places[3], role: InstanceRole::Decode, slots: 4 },
+        ]
+    } else {
+        places[..3]
+            .iter()
+            .map(|&device| InstanceSpec {
+                device,
+                role: InstanceRole::Colocated,
+                slots: 3,
+            })
+            .collect()
+    };
+    let autoscale = inject.then(|| AutoscaleConfig {
+        policy: AutoscalePolicy::QueueDepth {
+            scale_up_backlog: 0.8,
+            scale_down_backlog: 0.7,
+        },
+        eval_interval: 0.02,
+        min_instances: 1,
+        max_instances: 5,
+        slots: 3,
+        up_cooldown: 0.0,
+        down_cooldown: 0.05,
+        lookback: 0.5,
+        device_pool: places[4..8].to_vec(),
+    });
+    let failures = if inject {
+        vec![
+            InstanceCrash { time: 0.08, instance: 0 },
+            InstanceCrash { time: 0.2, instance: 1 },
+        ]
+    } else {
+        vec![]
+    };
+    ClusterConfig {
+        topology,
+        instances,
+        max_seq: 512,
+        cost: CostModel::new(grid_device(), 0.0),
+        policy: MemoryPolicy::NoOffload,
+        pool_pages: 0,
+        max_preemptions: 4,
+        route,
+        autoscale,
+        failures,
+    }
+}
+
+/// Property: across the full router-policy × cluster-mode × seed grid
+/// — with and without crashes and elastic scale-downs injected — every
+/// generated request is completed or rejected exactly once, never lost
+/// or duplicated.
+#[test]
+fn request_conservation_across_policy_mode_seed_grid() {
+    let policies = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstandingKv,
+        RoutePolicy::SessionAffinity,
+    ];
+    for disagg in [false, true] {
+        for &route in &policies {
+            for seed in [1u64, 2, 3] {
+                for inject in [false, true] {
+                    let wl = WorkloadConfig {
+                        arrival: ArrivalProcess::Poisson { rate: 400.0 },
+                        prompt: LengthDist::Uniform { lo: 24, hi: 72 },
+                        output: LengthDist::Uniform { lo: 6, hi: 18 },
+                        seed,
+                    };
+                    let reqs = wl.generate(0.5);
+                    let cfg = grid_cluster(disagg, route, inject);
+                    let rep = simulate_cluster(&cfg, &reqs);
+                    let cell = format!(
+                        "disagg={disagg} route={route:?} seed={seed} inject={inject}"
+                    );
+                    let ids: BTreeSet<u64> =
+                        rep.serving.outcomes.iter().map(|o| o.id).collect();
+                    assert_eq!(
+                        ids.len(),
+                        rep.completed(),
+                        "{cell}: duplicate completions"
+                    );
+                    assert!(
+                        ids.iter().all(|&id| id < reqs.len() as u64),
+                        "{cell}: unknown request id completed"
+                    );
+                    assert_eq!(
+                        rep.completed() as u64 + rep.serving.rejected,
+                        reqs.len() as u64,
+                        "{cell}: requests lost or double-counted"
+                    );
+                    if inject {
+                        assert_eq!(rep.crashes, 2, "{cell}: both crashes must land");
+                    } else {
+                        assert_eq!(rep.crashes, 0);
+                        assert_eq!(rep.scale_ups, 0);
+                    }
+                }
+            }
+        }
+    }
+}

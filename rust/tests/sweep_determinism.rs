@@ -1,0 +1,73 @@
+//! Determinism regression (ISSUE 4 satellite): `cluster_rate_sweep`
+//! over the crossover scenario AND the new elastic-autoscale scenario
+//! produce bit-identical reports whether the sweep runs sequentially
+//! (`HP_SWEEP_THREADS=1`) or fanned across 8 workers.
+//!
+//! Like `sweep_env.rs`, this binary holds exactly one test: the
+//! assertions mutate a process-global environment variable, and
+//! concurrent setenv/getenv from parallel tests is undefined behavior
+//! in glibc — an isolated binary is the only safe home.
+
+use hyperparallel::serving::{
+    autoscale_scenario, autoscale_slo, cluster_rate_sweep, cluster_slo, crossover_scenario,
+    ClusterFabric, ClusterMode, ClusterScenario, OperatingPoint, Slo, CLUSTER_RATES,
+};
+
+fn assert_bit_identical(label: &str, a: &[OperatingPoint], b: &[OperatingPoint]) {
+    assert_eq!(a.len(), b.len(), "{label}: row count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let row = format!("{label} row {i}");
+        assert_eq!(x.rate.to_bits(), y.rate.to_bits(), "{row}: rate");
+        assert_eq!(x.completed, y.completed, "{row}: completed");
+        assert_eq!(x.rejected, y.rejected, "{row}: rejected");
+        assert_eq!(x.preemptions, y.preemptions, "{row}: preemptions");
+        assert_eq!(x.demotions, y.demotions, "{row}: demotions");
+        assert_eq!(
+            x.peak_context_tokens, y.peak_context_tokens,
+            "{row}: peak context"
+        );
+        assert_eq!(x.attains_slo, y.attains_slo, "{row}: attains");
+        assert_eq!(
+            x.admitted_qps.to_bits(),
+            y.admitted_qps.to_bits(),
+            "{row}: qps"
+        );
+        assert_eq!(x.goodput.to_bits(), y.goodput.to_bits(), "{row}: goodput");
+        assert_eq!(x.p50_ttft.to_bits(), y.p50_ttft.to_bits(), "{row}: p50 ttft");
+        assert_eq!(x.p99_ttft.to_bits(), y.p99_ttft.to_bits(), "{row}: p99 ttft");
+        assert_eq!(x.p99_tpot.to_bits(), y.p99_tpot.to_bits(), "{row}: p99 tpot");
+        assert_eq!(
+            x.mean_utilization.to_bits(),
+            y.mean_utilization.to_bits(),
+            "{row}: utilization"
+        );
+    }
+}
+
+fn both_thread_counts(label: &str, sc: &ClusterScenario, rates: &[f64], slo: &Slo) {
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let sequential = cluster_rate_sweep(sc, rates, slo);
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let parallel = cluster_rate_sweep(sc, rates, slo);
+    assert_bit_identical(label, &sequential, &parallel);
+}
+
+#[test]
+fn cluster_sweeps_bit_identical_across_worker_counts() {
+    // the PR 3 crossover path (static disaggregated cluster)...
+    both_thread_counts(
+        "crossover disagg/supernode",
+        &crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated),
+        &CLUSTER_RATES[..4],
+        &cluster_slo(),
+    );
+    // ...and the elastic path: warm-ups, drains, and limbo handling
+    // must replay identically no matter how the sweep is scheduled
+    both_thread_counts(
+        "autoscale elastic/supernode",
+        &autoscale_scenario(ClusterFabric::Supernode, true),
+        &[18.0, 24.0],
+        &autoscale_slo(),
+    );
+    std::env::remove_var("HP_SWEEP_THREADS");
+}

@@ -1,16 +1,22 @@
 #!/usr/bin/env python3
-"""Faithful Python mirror of rust/src/serving/{router,cluster}.rs
+"""Faithful Python mirror of rust/src/serving/{router,cluster,autoscale}.rs
 (same RNG, same cost formulas, same event ordering) to validate the
-deterministic cluster-crossover operating points the scenario tests
-and the bench-regression baseline rely on — usable in build containers
-that ship no Rust toolchain (see .claude/skills/verify/SKILL.md, and
+deterministic cluster operating points the scenario tests and the
+bench-regression baseline rely on — usable in build containers that
+ship no Rust toolchain (see .claude/skills/verify/SKILL.md, and
 tools/serving_simcheck.py for the single-instance batcher mirror).
 Keep in sync with rust/src/serving/cluster.rs when semantics change.
 
 Expected output on the checked-in presets (seed 42):
-  colocated  (both fabrics): max-QPS-under-SLO 60
-  disagg     on supernode:   max-QPS-under-SLO 80   (>= 1.10x colocated)
-  disagg     on legacy:      max-QPS-under-SLO 20   (colocated >= 1.5x)
+  crossover (ISSUE 3):
+    colocated  (both fabrics): max-QPS-under-SLO 60
+    disagg     on supernode:   max-QPS-under-SLO 80   (>= 1.10x colocated)
+    disagg     on legacy:      max-QPS-under-SLO 20   (colocated >= 1.5x)
+  autoscale (ISSUE 4, diurnal 4x swing):
+    supernode elastic: p99 TTFT under SLO, >= 25% fewer instance-seconds
+                       than static peak provisioning
+    legacy elastic:    p99 TTFT blows the SLO (warm-up lag over RoCE)
+    crash run:         zero requests lost, TTFT re-converges under SLO
 """
 import math
 from collections import deque
@@ -69,6 +75,9 @@ class Rng:
     def exponential(self, lam):
         return -math.log(max(self.next_f64(), 1e-300)) / lam
 
+    def chance(self, p):
+        return self.next_f64() < p
+
 
 def gen_requests(rate, horizon, seed, plo, phi, olo, ohi):
     """Poisson arrivals, Uniform prompt [plo,phi], Uniform output [olo,ohi].
@@ -78,13 +87,53 @@ def gen_requests(rate, horizon, seed, plo, phi, olo, ohi):
     ts = []
     t = rng.exponential(rate)
     while t < horizon:
-        ts.append(t)
+        ts.append((t, 0))
         t += rng.exponential(rate)
+    return _attach_lengths(ts, rng, plo, phi, olo, ohi)
+
+
+def tenant_rate_at(tp, t):
+    """TenantProfile::rate_at: base*(1 + amp*sin(TAU*t/period + phase)), >= 0."""
+    base, amp, period, phase = tp
+    swing = math.sin(math.tau * t / period + phase)
+    return max(base * (1.0 + amp * swing), 0.0)
+
+
+def gen_requests_diurnal(tenants, horizon, seed, plo, phi, olo, ohi):
+    """Mirror of WorkloadConfig::generate for ArrivalProcess::Diurnal:
+    Lewis thinning against the summed peak rate, then per-request
+    prompt/output samples from the same RNG stream."""
+    rng = Rng(seed)
+    peak = sum(base * (1.0 + abs(amp)) for base, amp, _, _ in tenants)
+    ts = []
+    if peak > 0.0:
+        rates = [0.0] * len(tenants)
+        t = rng.exponential(peak)
+        while t < horizon:
+            total = 0.0
+            for i, tp in enumerate(tenants):
+                rates[i] = tenant_rate_at(tp, t)
+                total += rates[i]
+            if rng.chance(total / peak):
+                u = rng.next_f64() * total
+                tenant = len(tenants) - 1
+                for i, r in enumerate(rates):
+                    if u < r:
+                        tenant = i
+                        break
+                    u -= r
+                ts.append((t, tenant))
+            t += rng.exponential(peak)
+    return _attach_lengths(ts, rng, plo, phi, olo, ohi)
+
+
+def _attach_lengths(ts, rng, plo, phi, olo, ohi):
     reqs = []
-    for i, at in enumerate(ts):
+    for i, (at, tenant) in enumerate(ts):
         prompt = rng.range(max(plo, 1), max(phi, plo) + 1)
         output = rng.range(max(olo, 1), max(ohi, olo) + 1)
-        reqs.append(dict(id=i, tenant=0, arrival=at, prompt=prompt, output=output))
+        reqs.append(dict(id=i, tenant=tenant, arrival=at, prompt=prompt,
+                         output=output))
     return reqs
 
 
@@ -92,10 +141,30 @@ def gen_requests(rate, horizon, seed, plo, phi, olo, ohi):
 
 FABRICS = {
     "supernode": dict(cross_rack=(196e9, 200e-9, 2), rack=(392e9, 200e-9, 1),
-                      board=(392e9, 200e-9, 1)),
+                      board=(392e9, 200e-9, 1), local=(1.6e12, 0.0, 0)),
     "legacy": dict(cross_rack=(12.5e9, 2e-6, 4), rack=(25e9, 2e-6, 2),
-                   board=(200e9, 500e-9, 1)),
+                   board=(200e9, 500e-9, 1), local=(1.6e12, 0.0, 0)),
 }
+
+# geometry (racks, boards_per_rack) of the two preset topologies
+GEOMETRY = {"supernode": (8, 6), "legacy": (4, 8)}
+
+
+def spread_device(fabric, i):
+    """Mirror of spread_placement: instance i -> (rack, board)."""
+    racks, boards = GEOMETRY[fabric]
+    return (i % racks, (i // racks) % boards)
+
+
+def tier_between(a, b):
+    """Mirror of Topology::tier_between on (rack, board) coordinates."""
+    if a == b:
+        return "local"
+    if a[0] == b[0] and a[1] == b[1]:
+        return "board"
+    if a[0] == b[0]:
+        return "rack"
+    return "cross_rack"
 
 
 def p2p_time(fabric, tier, nbytes):
@@ -140,10 +209,12 @@ class Cost:
 # ---- cluster DES -------------------------------------------------------
 
 COLOCATED, PREFILL, DECODE = 0, 1, 2
+SERVING, WARMING, DRAINING, RELEASED, CRASHED = \
+    "serving", "warming", "draining", "released", "crashed"
 
 
 class Instance:
-    def __init__(self, role, slots, pages):
+    def __init__(self, role, slots, pages, device, state=SERVING, born=0.0):
         self.role = role
         self.slots = slots
         self.hbm_capacity = pages
@@ -152,8 +223,13 @@ class Instance:
         self.queue = deque()   # dicts: req fields + produced/first/preempt/kv_src
         self.ingest = deque()  # (entry, xfer_duration)
         self.active = [None] * slots
-        self.work_end = None   # (t, kind) kind in {"iter","ingest"}
+        self.work_end = None   # (t, kind) kind in {"iter","ingest","warmup"}
         self.cur_ctx = 0
+        self.device = device   # (rack, board)
+        self.state = state
+        self.born = born
+        self.died = None
+        self.cur_iv = None     # index into Cluster.intervals of in-flight work
 
     def alloc(self, seq, pages):
         if pages > self.hbm_free:
@@ -166,6 +242,10 @@ class Instance:
         p = self.ledger.pop(seq, 0)
         self.hbm_free += p
         return p
+
+    def release_all(self):
+        self.ledger.clear()
+        self.hbm_free = self.hbm_capacity
 
     def active_count(self):
         return sum(1 for s in self.active if s is not None)
@@ -199,39 +279,100 @@ def plan_refill(occupied, max_seq, lens, gate):
     return plan
 
 
+# ---- autoscaling policies (mirror of serving/autoscale.rs) -------------
+
+def policy_decide(policy, obs):
+    """Returns +k / -k / 0 desired instance delta. `obs` mirrors
+    ScaleObservation."""
+    kind = policy[0]
+    n = obs["serving"] + obs["warming"]
+    if kind == "queue_depth":
+        _, up_thr, down_thr = policy
+        cap = obs["total_slots"]
+        if cap == 0:
+            return 1
+        backlog = obs["queued"] + obs["active"]
+        if backlog > up_thr * cap:
+            return 1
+        remaining = cap - obs["spawn_slots"]
+        if remaining > 0 and backlog < down_thr * remaining:
+            return -1
+        return 0
+    if kind == "ttft":
+        _, slo_ttft, up_frac, down_frac = policy
+        if obs["total_slots"] == 0:
+            return 1
+        p99 = obs["recent_ttft_p99"]
+        if p99 is None:
+            return 0
+        if p99 > up_frac * slo_ttft:
+            return 1
+        if p99 < down_frac * slo_ttft:
+            return -1
+        return 0
+    if kind == "sched":
+        _, steps = policy
+        target = steps[0][1]
+        for t0, cnt in steps:
+            if t0 <= obs["now"]:
+                target = cnt
+        return target - n
+    raise ValueError(f"unknown policy {kind}")
+
+
 class Cluster:
-    def __init__(self, cost, insts, max_seq, fabric, tier, route="least_kv",
-                 max_preemptions=4):
+    def __init__(self, cost, insts, max_seq, fabric, route="least_kv",
+                 max_preemptions=4, autoscale=None, failures=()):
         self.cost = cost
         self.insts = insts
         self.max_seq = max_seq
         self.fabric = fabric
-        self.tier = tier  # tier between instance pairs (uniform placement)
         self.route = route
         self.max_preemptions = max_preemptions
         self.rr = 0
+        # autoscale: None or dict(policy, eval_interval, min, max, slots,
+        #                         cooldown, lookback, pool=[device..])
+        self.autoscale = autoscale
+        self.pool_devices = deque(autoscale["pool"]) if autoscale else deque()
+        self.failures = sorted(failures)  # (time, instance)
+        roles = {i.role for i in insts}
+        self.scaled_role = DECODE if DECODE in roles else COLOCATED
+        self.entry_role = PREFILL if PREFILL in roles else COLOCATED
         # stats
         self.outcomes = []
         self.rejected = 0
         self.preemptions = 0
         self.migrations = 0
         self.xfer_time = 0.0
-        self.intervals = []  # (inst, start, finish, tag)
+        self.intervals = []  # [inst, start, finish, tag] (mutable lists)
         self.makespan = 0.0
         self.peak_ctx = 0
         self.handoffs = []  # (seq id, src instance) pending release
         self.kick = set()   # instances to wake after releases
+        self.limbo = deque()  # entries with no routable instance yet
+        self.crashes = 0
+        self.crash_requeues = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.drain_migrations = 0
+        self.warmup_time = 0.0
+        self.peak_alive = sum(1 for i in insts
+                              if i.state in (SERVING, WARMING, DRAINING))
+        self.last_action = -1e18
+        self.recent_arrivals = deque()
+        self.outcome_ptr = 0
 
-    def entry_instances(self):
-        roles = {i.role for i in self.insts}
-        want = PREFILL if PREFILL in roles else COLOCATED
-        return [k for k, i in enumerate(self.insts) if i.role == want]
+    # -- candidate sets ---------------------------------------------------
 
-    def decode_instances(self):
-        return [k for k, i in enumerate(self.insts) if i.role == DECODE]
+    def serving_ids(self, role):
+        return [k for k, i in enumerate(self.insts)
+                if i.role == role and i.state == SERVING]
 
-    def route_arrival(self, req):
-        cands = self.entry_instances()
+    def warming_count(self, role):
+        return sum(1 for i in self.insts
+                   if i.role == role and i.state == WARMING)
+
+    def route_arrival(self, req, cands):
         if self.route == "round_robin":
             k = cands[self.rr % len(cands)]
             self.rr += 1
@@ -242,8 +383,7 @@ class Cluster:
         # least outstanding kv
         return min(cands, key=lambda k: (self.insts[k].outstanding_kv(self.cost.tpp), k))
 
-    def pick_decode(self):
-        cands = self.decode_instances()
+    def pick_dst(self, cands):
         return min(cands, key=lambda k: (self.insts[k].outstanding_kv(self.cost.tpp), k))
 
     # -- per-instance mechanics ------------------------------------------
@@ -296,9 +436,238 @@ class Cluster:
             victim = self.youngest_slot(inst)
             self.preempt(k, victim)
 
+    # -- migration / requeue machinery -----------------------------------
+
+    def dispatch_migration(self, entry, drain):
+        """Send `entry` (whose pages are parked at entry.kv_src) to a
+        serving scaled-role instance; limbo if capacity is on the way;
+        reject if it can never be served."""
+        cands = self.serving_ids(self.scaled_role)
+        if not cands:
+            if self.warming_count(self.scaled_role) > 0:
+                self.limbo.append(entry)
+            else:
+                if entry["kv_src"] is not None:
+                    self.handoffs.append((entry["id"], entry["kv_src"]))
+                self.rejected += 1
+            return
+        dst = self.pick_dst(cands)
+        src = self.insts[entry["kv_src"]]
+        ctx = entry["prompt_len"] + entry["produced"]
+        nbytes = ctx * self.cost.kvb
+        xfer = p2p_time(self.fabric,
+                        tier_between(src.device, self.insts[dst].device),
+                        nbytes)
+        self.migrations += 1
+        self.xfer_time += xfer
+        if drain:
+            self.drain_migrations += 1
+        self.insts[dst].ingest.append((entry, xfer))
+        self.kick.add(dst)
+
+    def route_requeue(self, entry):
+        """Put a pageless entry back through the front-end router."""
+        cands = self.serving_ids(self.entry_role)
+        if not cands:
+            if self.warming_count(self.entry_role) > 0:
+                self.limbo.append(entry)
+            else:
+                self.rejected += 1
+            return
+        req = dict(id=entry["id"], tenant=entry["tenant"])
+        k = self.route_arrival(req, cands)
+        self.insts[k].queue.append(entry)
+        self.kick.add(k)
+
+    def redispatch(self, entry, drain=False):
+        if entry["kv_src"] is not None:
+            self.dispatch_migration(entry, drain)
+        else:
+            self.route_requeue(entry)
+
+    def resolve_limbo(self):
+        """Retry limbo entries after capacity changed (warm-up done or
+        crash removed the last warming instance)."""
+        pending = list(self.limbo)
+        self.limbo.clear()
+        for entry in pending:
+            self.redispatch(entry)
+
+    # -- autoscaling actions ---------------------------------------------
+
+    def alive_count(self, role):
+        return sum(1 for i in self.insts
+                   if i.role == role and i.state in (SERVING, WARMING))
+
+    def spawn_instance(self, t):
+        """Scale up by one instance of the scaled role, paying the
+        model-load warm-up transfer over the actual fabric tier."""
+        if not self.pool_devices:
+            return False
+        dev = self.pool_devices.popleft()
+        aus = self.autoscale
+        serving_any = [i for i in self.insts if i.state == SERVING]
+        src_dev = serving_any[0].device if serving_any else dev
+        xfer = p2p_time(self.fabric, tier_between(src_dev, dev),
+                        float(self.cost.weight))
+        k = len(self.insts)
+        inst = Instance(self.scaled_role, aus["slots"], self.cost.hbm_pages(),
+                        dev, state=WARMING, born=t)
+        inst.cur_iv = len(self.intervals)
+        self.intervals.append([k, t, t + xfer, "warmup"])
+        inst.work_end = (t + xfer, "warmup")
+        self.insts.append(inst)
+        self.warmup_time += xfer
+        self.scale_ups += 1
+        return True
+
+    def drain_instance(self, k, t):
+        """Scale down: stop admission, re-dispatch queued work, and (at
+        the next iteration boundary) migrate resident KV out with the
+        custody protocol. The device is released when the pool drains."""
+        inst = self.insts[k]
+        inst.state = DRAINING
+        self.scale_downs += 1
+        q = list(inst.queue)
+        inst.queue.clear()
+        for e in q:
+            self.redispatch(e, drain=True)
+        inflight_ingest = inst.work_end is not None and inst.work_end[1] == "ingest"
+        jobs = list(inst.ingest)
+        keep = jobs[:1] if inflight_ingest else []
+        inst.ingest = deque(keep)
+        for e, _ in jobs[len(keep):]:
+            self.redispatch(e, drain=True)
+
+    def autoscale_tick(self, t):
+        aus = self.autoscale
+        serving = self.serving_ids(self.scaled_role)
+        warming = self.warming_count(self.scaled_role)
+        total_slots = sum(self.insts[k].slots for k in serving) \
+            + warming * aus["slots"]
+        queued = sum(len(self.insts[k].queue) for k in serving) \
+            + sum(len(self.insts[k].ingest) for k in serving) + len(self.limbo)
+        active = sum(self.insts[k].active_count() for k in serving)
+        while self.outcome_ptr < len(self.outcomes) and \
+                self.outcomes[self.outcome_ptr]["finish"] < t - aus["lookback"]:
+            self.outcome_ptr += 1
+        recent = [o["first"] - o["arrival"]
+                  for o in self.outcomes[self.outcome_ptr:]]
+        while self.recent_arrivals and \
+                self.recent_arrivals[0] < t - aus["lookback"]:
+            self.recent_arrivals.popleft()
+        obs = dict(now=t, serving=len(serving), warming=warming,
+                   total_slots=total_slots, spawn_slots=aus["slots"],
+                   queued=queued, active=active,
+                   recent_ttft_p99=pct(recent, 99) if recent else None,
+                   recent_arrival_rate=len(self.recent_arrivals) / aus["lookback"])
+        delta = policy_decide(aus["policy"], obs)
+        n = len(serving) + warming
+        if delta > 0:
+            if t - self.last_action < aus["up_cooldown"]:
+                return
+            spawned = False
+            for _ in range(delta):
+                if n >= aus["max"]:
+                    break
+                if not self.spawn_instance(t):
+                    break
+                spawned = True
+                n += 1
+            if spawned:
+                self.last_action = t
+        elif delta < 0:
+            if t - self.last_action < aus["down_cooldown"]:
+                return
+            drained = False
+            for _ in range(-delta):
+                if n <= aus["min"] or not serving:
+                    break
+                victim = min(serving,
+                             key=lambda k: (self.insts[k].outstanding_kv(self.cost.tpp), -k))
+                serving.remove(victim)
+                self.drain_instance(victim, t)
+                drained = True
+                n -= 1
+            if drained:
+                self.last_action = t
+
+    def crash_instance(self, sel, t):
+        """Kill the sel-th (mod size) member of the currently-serving
+        set — ordinal targeting, because absolute indices race against
+        elastic churn (the named instance may already be drained).
+        Truncates in-flight work, requeues everything the victim held
+        (prefix recompute charged), drops its KV pages, and lets the
+        autoscaler spawn a replacement."""
+        alive = [k for k, i in enumerate(self.insts) if i.state == SERVING]
+        if not alive:
+            alive = [k for k, i in enumerate(self.insts)
+                     if i.state in (WARMING, DRAINING)]
+        if not alive:
+            return
+        k = alive[sel % len(alive)]
+        inst = self.insts[k]
+        self.crashes += 1
+        if inst.work_end is not None and inst.cur_iv is not None:
+            iv = self.intervals[inst.cur_iv]
+            iv[2] = t
+            iv[3] = "crash"
+        else:
+            self.intervals.append([k, t, t, "crash"])
+        was_scaled = inst.role == self.scaled_role and inst.state != WARMING
+        # mark dead FIRST: no requeue below may route back onto the
+        # dying instance (its queues are cleared at the end)
+        inst.state = CRASHED
+        inst.died = t
+        # requeue in-flight requests: actives re-prefill from scratch
+        for s in inst.active:
+            if s is None:
+                continue
+            self.crash_requeues += 1
+            self.route_requeue(dict(
+                id=s["id"], tenant=s["tenant"], arrival=s["arrival"],
+                prompt_len=s["prompt_len"], output=s["output"],
+                produced=0, first=s["first"], preemptions=s["preemptions"],
+                kv_src=None))
+        for e in list(inst.queue):
+            self.crash_requeues += 1
+            self.redispatch(e)
+        for e, _ in list(inst.ingest):
+            self.crash_requeues += 1
+            self.redispatch(e)
+        # sequences whose pages were parked here lost their KV: they
+        # restart (re-prefill) wherever they are queued now
+        for other in self.insts:
+            if other is inst:
+                continue
+            for e in list(other.queue) + [j[0] for j in other.ingest]:
+                if e["kv_src"] == k:
+                    e["kv_src"] = None
+                    e["produced"] = 0
+        for e in self.limbo:
+            if e["kv_src"] == k:
+                e["kv_src"] = None
+                e["produced"] = 0
+        inst.release_all()
+        inst.active = [None] * inst.slots
+        inst.queue.clear()
+        inst.ingest.clear()
+        inst.work_end = None
+        inst.cur_iv = None
+        inst.cur_ctx = 0
+        # the autoscaler replaces a crashed serving instance immediately
+        # (no cooldown: failure replacement is not a voluntary action)
+        if self.autoscale is not None and was_scaled and \
+                self.alive_count(self.scaled_role) < self.autoscale["max"]:
+            self.spawn_instance(t)
+        self.resolve_limbo()
+
+    # -- event handlers ---------------------------------------------------
+
     def finish_iteration(self, k, t):
         inst = self.insts[k]
         inst.work_end = None
+        inst.cur_iv = None
         for slot in range(len(inst.active)):
             s = inst.active[slot]
             if s is None:
@@ -309,37 +678,53 @@ class Cluster:
             target = min(s["output"], self.max_seq - s["prompt_len"])
             done = s["produced"] >= target or \
                 s["prompt_len"] + s["produced"] >= self.max_seq
-            if inst.role == PREFILL and not done:
-                # prefill complete after the first token: migrate
+            migrate = (inst.role == PREFILL or inst.state == DRAINING) and not done
+            if migrate:
+                # hand the KV pages to a serving instance; pages stay
+                # parked here until the destination admits the sequence
                 inst.active[slot] = None
-                dst = self.pick_decode()
-                ctx = s["prompt_len"] + s["produced"]
-                nbytes = ctx * self.cost.kvb
-                xfer = p2p_time(self.fabric, self.tier, nbytes)
-                self.migrations += 1
-                self.xfer_time += xfer
                 entry = dict(id=s["id"], tenant=s["tenant"], arrival=s["arrival"],
                              prompt_len=s["prompt_len"], output=s["output"],
                              produced=s["produced"], first=s["first"],
                              preemptions=s["preemptions"], kv_src=k)
-                self.insts[dst].ingest.append((entry, xfer))
-                self.kick.add(dst)
+                self.dispatch_migration(entry, drain=inst.state == DRAINING)
                 continue
             if done:
                 self.outcomes.append(dict(
-                    arrival=s["arrival"], first=s["first"], finish=t,
-                    prompt=s["prompt_len"], output=s["produced"]))
+                    id=s["id"], arrival=s["arrival"], first=s["first"],
+                    finish=t, prompt=s["prompt_len"], output=s["produced"],
+                    inst=k))
                 inst.release(s["id"])
                 inst.active[slot] = None
+
+    def finish_ingest(self, k, t):
+        inst = self.insts[k]
+        inst.work_end = None
+        inst.cur_iv = None
+        entry, _ = inst.ingest.popleft()
+        if inst.state == DRAINING:
+            self.redispatch(entry, drain=True)
+        else:
+            inst.queue.append(entry)
+
+    def finish_warmup(self, k, t):
+        inst = self.insts[k]
+        inst.work_end = None
+        inst.cur_iv = None
+        inst.state = SERVING
+        self.resolve_limbo()
+        self.kick.add(k)
 
     def start_work(self, k, t):
         inst = self.insts[k]
         assert inst.work_end is None
+        if inst.state != SERVING:
+            return
         if inst.ingest:
             entry, xfer = inst.ingest[0]
             finish = t + xfer
-            self.intervals.append((k, t, finish, "kv_xfer"))
-            self.makespan = max(self.makespan, finish)
+            inst.cur_iv = len(self.intervals)
+            self.intervals.append([k, t, finish, "kv_xfer"])
             inst.work_end = (finish, "ingest")
             return
         self.grow_active(k)
@@ -391,51 +776,69 @@ class Cluster:
         if inst.active_count() == 0:
             return
         finish = t + self.cost.iteration_latency(inst.cur_ctx, 0, total_prefill)
-        self.intervals.append((k, t, finish,
-                               "prefill" if total_prefill else "decode"))
-        self.makespan = max(self.makespan, finish)
+        inst.cur_iv = len(self.intervals)
+        self.intervals.append([k, t, finish,
+                               "prefill" if total_prefill else "decode"])
         inst.work_end = (finish, "iter")
 
-    def finish_ingest(self, k, t):
-        inst = self.insts[k]
-        inst.work_end = None
-        entry, _ = inst.ingest.popleft()
-        inst.queue.append(entry)
+    # -- main loop ---------------------------------------------------------
 
     def run(self, requests):
         ni = 0
+        fi = 0
+        aus = self.autoscale
+        next_tick = aus["eval_interval"] if aus else None
         while True:
-            ta = requests[ni]["arrival"] if ni < len(requests) else None
-            te = None
+            # candidate events: (time, class, idx); class order breaks
+            # ties — arrival < work-end < crash < autoscale tick
+            best = None
+            if ni < len(requests):
+                best = (requests[ni]["arrival"], 0, 0)
             for k, inst in enumerate(self.insts):
                 if inst.work_end is not None:
-                    cand = (inst.work_end[0], k)
-                    if te is None or cand < te:
-                        te = cand
-            if ta is None and te is None:
+                    cand = (inst.work_end[0], 1, k)
+                    if best is None or cand < best:
+                        best = cand
+            if fi < len(self.failures):
+                cand = (self.failures[fi][0], 2, fi)
+                if best is None or cand < best:
+                    best = cand
+            if best is None:
                 break
-            arrival_first = te is None or (ta is not None and ta <= te[0])
-            if arrival_first:
+            if next_tick is not None and (next_tick, 3, 0) < best:
+                best = (next_tick, 3, 0)
+            t, cls, idx = best
+            if cls == 0:
                 req = requests[ni]
                 ni += 1
-                t = req["arrival"]
-                k = self.route_arrival(req)
-                self.insts[k].queue.append(dict(
+                self.recent_arrivals.append(t)
+                # fresh arrivals take the same admission path as
+                # crash/drain re-queues: route to a serving instance
+                # (the kick-drain below wakes it), wait in limbo while
+                # capacity warms, or reject if no capacity can ever come
+                self.route_requeue(dict(
                     id=req["id"], tenant=req["tenant"], arrival=req["arrival"],
                     prompt_len=req["prompt"], output=req["output"],
                     produced=0, first=None, preemptions=0, kv_src=None))
-                if self.insts[k].work_end is None:
-                    self.start_work(k, t)
-            else:
-                t, k = te
+            elif cls == 1:
+                k = idx
                 kind = self.insts[k].work_end[1]
                 if kind == "iter":
                     self.finish_iteration(k, t)
-                else:
+                elif kind == "ingest":
                     self.finish_ingest(k, t)
-                self.start_work(k, t)
+                else:
+                    self.finish_warmup(k, t)
+                if self.insts[k].work_end is None:
+                    self.start_work(k, t)
+            elif cls == 2:
+                fi += 1
+                self.crash_instance(self.failures[idx][1], t)
+            else:
+                self.autoscale_tick(t)
+                next_tick += aus["eval_interval"]
             # drain cross-instance effects: page handoffs wake the
-            # source instance; migrations wake the target instance
+            # source instance; migrations/requeues wake the target
             while self.handoffs or self.kick:
                 hs, self.handoffs = self.handoffs, []
                 for sid, src in hs:
@@ -445,12 +848,46 @@ class Cluster:
                 for k2 in ks:
                     if self.insts[k2].work_end is None:
                         self.start_work(k2, t)
+            # a drained instance releases its device once its parked
+            # pages are gone and nothing is in flight
+            for k2, inst in enumerate(self.insts):
+                if inst.state == DRAINING and inst.work_end is None and \
+                        not inst.queue and not inst.ingest and \
+                        inst.active_count() == 0 and not inst.ledger:
+                    inst.state = RELEASED
+                    inst.died = t
+                    self.intervals.append([k2, t, t, "drain"])
+                    self.pool_devices.append(inst.device)
             total = sum(i.cur_ctx for i in self.insts)
             self.peak_ctx = max(self.peak_ctx, total)
-        # conservation: all pools drained
+            alive = sum(1 for i in self.insts
+                        if i.state in (SERVING, WARMING, DRAINING))
+            self.peak_alive = max(self.peak_alive, alive)
+            # ticks stop once nothing can generate further work
+            if next_tick is not None and ni >= len(requests) and \
+                    fi >= len(self.failures) and \
+                    all(i.work_end is None for i in self.insts):
+                next_tick = None
+        # makespan: latest finish of real work (zero-length markers from
+        # crash/drain events don't extend the served timeline)
+        self.makespan = 0.0
+        for _, s, f, _ in self.intervals:
+            if f > s:
+                self.makespan = max(self.makespan, f)
+        # conservation: all pools of live instances drained
         for k, inst in enumerate(self.insts):
+            if inst.state == CRASHED:
+                continue
             assert not inst.ledger, f"inst {k} leaked {inst.ledger}"
             assert inst.hbm_free == inst.hbm_capacity
+        assert not self.limbo, "limbo entries leaked"
+
+    def instance_seconds(self):
+        total = 0.0
+        for inst in self.insts:
+            end = inst.died if inst.died is not None else self.makespan
+            total += max(end - inst.born, 0.0)
+        return total
 
 
 # ---- metrics -----------------------------------------------------------
@@ -482,17 +919,28 @@ def operating_point(c, rate, slo_ttft, slo_tpot):
                 makespan=c.makespan)
 
 
-# ---- presets -----------------------------------------------------------
+def ttft_p99_arriving_in(c, lo, hi):
+    """p99 TTFT of requests that ARRIVED in [lo, hi) — the
+    re-convergence window after a crash."""
+    ttft = [o["first"] - o["arrival"] for o in c.outcomes
+            if lo <= o["arrival"] < hi]
+    return pct(ttft, 99)
+
+
+# ---- crossover presets (ISSUE 3, unchanged semantics) ------------------
 
 def make_cluster(mode, fabric, cost, max_seq, colo_slots, pre_slots, dec_slots,
-                 n_colo=4, n_pre=2, n_dec=2):
+                 n_colo=4, n_pre=2, n_dec=2, **kw):
     pages = cost.hbm_pages()
     if mode == "colocated":
-        insts = [Instance(COLOCATED, colo_slots, pages) for _ in range(n_colo)]
+        insts = [Instance(COLOCATED, colo_slots, pages, spread_device(fabric, i))
+                 for i in range(n_colo)]
     else:
-        insts = [Instance(PREFILL, pre_slots, pages) for _ in range(n_pre)] + \
-                [Instance(DECODE, dec_slots, pages) for _ in range(n_dec)]
-    return Cluster(cost, insts, max_seq, fabric, "cross_rack")
+        insts = [Instance(PREFILL, pre_slots, pages, spread_device(fabric, i))
+                 for i in range(n_pre)] + \
+                [Instance(DECODE, dec_slots, pages, spread_device(fabric, n_pre + i))
+                 for i in range(n_dec)]
+    return Cluster(cost, insts, max_seq, fabric, **kw)
 
 
 def sweep(mode, fabric, rates, cfg):
@@ -524,6 +972,90 @@ CFG = dict(
     slo=(0.5, 0.013),
 )
 
+
+# ---- autoscale presets (ISSUE 4) ---------------------------------------
+# Mirror of serving::cluster autoscale_* presets. A two-tenant diurnal
+# mix whose summed rate swings ~4x peak-to-trough; colocated instances;
+# the elastic cluster starts at the trough size and the queue-depth
+# policy tracks the swing.
+
+AUTOSCALE_CFG = dict(
+    # 8B-class device at bf16: the 16 GiB weight transfer is what makes
+    # warm-up fabric-dependent (~88 ms supernode vs ~1.4 s legacy RoCE)
+    kvb=131072, tpp=64, weight=16 * (1 << 30), hbm_tokens=40960,
+    max_seq=4096, slots=4,
+    plo=600, phi=1000, olo=48, ohi=80, seed=42,
+    period=48.0, horizon=48.0,
+    mean_rate=24.0, base_frac=0.65, amp_slow=0.6, amp_fast=0.9,
+    static_instances=9,
+    slo=(0.5, 0.02),
+    eval_interval=0.25, min_i=1, max_i=10, init_i=4,
+    up_cooldown=0.2, down_cooldown=0.5, lookback=2.0,
+    policy=("queue_depth", 0.9, 0.75),
+)
+
+
+def autoscale_tenants(cfg):
+    """Two staggered tenants: a slow day curve plus a faster overlay —
+    summed rate swings ~4x between trough and peak."""
+    mean = cfg["mean_rate"]
+    p = cfg["period"]
+    return [
+        (mean * cfg["base_frac"], cfg["amp_slow"], p, -math.pi / 2.0),
+        (mean * (1.0 - cfg["base_frac"]), cfg["amp_fast"], p / 4.0,
+         math.pi / 2.0),
+    ]
+
+
+def autoscale_requests(cfg):
+    return gen_requests_diurnal(autoscale_tenants(cfg), cfg["horizon"],
+                                cfg["seed"], cfg["plo"], cfg["phi"],
+                                cfg["olo"], cfg["ohi"])
+
+
+def swing_ratio(cfg, samples=4800):
+    tenants = autoscale_tenants(cfg)
+    rates = [sum(tenant_rate_at(tp, i * cfg["horizon"] / samples)
+                 for tp in tenants) for i in range(samples)]
+    return max(rates) / max(min(rates), 1e-9)
+
+
+def autoscale_cluster(fabric, cfg, elastic, failures=()):
+    cost = Cost(cfg["kvb"], cfg["tpp"], cfg["weight"], cfg["hbm_tokens"])
+    pages = cost.hbm_pages()
+    n0 = cfg["init_i"] if elastic else cfg["static_instances"]
+    insts = [Instance(COLOCATED, cfg["slots"], pages, spread_device(fabric, i))
+             for i in range(n0)]
+    autoscale = None
+    if elastic:
+        pool = [spread_device(fabric, i)
+                for i in range(n0, cfg["max_i"] + len(failures))]
+        autoscale = dict(policy=cfg["policy"],
+                         eval_interval=cfg["eval_interval"],
+                         min=cfg["min_i"], max=cfg["max_i"],
+                         slots=cfg["slots"], up_cooldown=cfg["up_cooldown"],
+                         down_cooldown=cfg["down_cooldown"],
+                         lookback=cfg["lookback"], pool=pool)
+    return Cluster(cost, insts, cfg["max_seq"], fabric,
+                   autoscale=autoscale, failures=failures)
+
+
+def run_autoscale(fabric, elastic, failures=(), cfg=AUTOSCALE_CFG):
+    c = autoscale_cluster(fabric, cfg, elastic, failures)
+    c.run(autoscale_requests(cfg))
+    return c
+
+
+def describe(c, cfg, label):
+    op = operating_point(c, cfg["mean_rate"], *cfg["slo"])
+    print(f"  {label:<22} done {op['completed']:>4} rej {op['rejected']:>3} "
+          f"p99ttft {op['p99_ttft']:7.4f} p99tpot {op['p99_tpot']:8.5f} "
+          f"inst-sec {c.instance_seconds():7.1f} ups {c.scale_ups} "
+          f"downs {c.scale_downs} crashes {c.crashes} "
+          f"requeues {c.crash_requeues} slo {op['attains']}")
+    return op
+
+
 if __name__ == "__main__":
     rates = [10, 20, 30, 40, 50, 60, 70, 80]
     best = {}
@@ -547,3 +1079,43 @@ if __name__ == "__main__":
     assert cl >= 1.5 * dl, "legacy crossover violated"
     assert cs == cl, "colocation must be fabric-independent"
     print("crossover bounds hold")
+
+    # ---- ISSUE 4: elastic autoscaling on the diurnal swing -------------
+    cfg = AUTOSCALE_CFG
+    n = len(autoscale_requests(cfg))
+    print(f"\n=== autoscale: diurnal swing {swing_ratio(cfg):.1f}x, "
+          f"{n} requests over {cfg['horizon']:.0f}s ===")
+    assert swing_ratio(cfg) >= 4.0, "diurnal swing must reach 4x"
+    runs = {}
+    for fabric in ["supernode", "legacy"]:
+        for elastic in [False, True]:
+            label = f"{fabric} {'elastic' if elastic else 'static'}"
+            c = run_autoscale(fabric, elastic)
+            runs[(fabric, elastic)] = (c, describe(c, cfg, label))
+    sn_static, sn_elastic = runs[("supernode", False)], runs[("supernode", True)]
+    lg_elastic = runs[("legacy", True)]
+    slo_ttft = cfg["slo"][0]
+    saved = 1.0 - sn_elastic[0].instance_seconds() / sn_static[0].instance_seconds()
+    print(f"\n  supernode elastic saves {saved * 100:.1f}% instance-seconds "
+          f"(gate >= 25%)")
+    assert sn_static[1]["attains"], "static peak provisioning must attain"
+    assert sn_elastic[1]["p99_ttft"] <= slo_ttft, \
+        "supernode elastic must hold the TTFT SLO"
+    assert sn_elastic[1]["rejected"] == 0
+    assert saved >= 0.25, f"instance-second saving {saved:.3f} < 0.25"
+    assert lg_elastic[1]["p99_ttft"] > slo_ttft, \
+        "legacy elastic must blow the TTFT SLO (warm-up lag)"
+
+    # ---- ISSUE 4: crash recovery ---------------------------------------
+    crash_t = cfg["horizon"] * 0.5
+    c = run_autoscale("supernode", True, failures=[(crash_t, 0)])
+    op = describe(c, cfg, "supernode elastic+crash")
+    assert c.crashes == 1
+    assert c.crash_requeues > 0
+    assert op["completed"] + op["rejected"] == n, "requests lost in crash"
+    assert op["rejected"] == 0, "crash must requeue, not reject"
+    assert op["p99_ttft"] <= slo_ttft, "SLO must hold even across the crash"
+    reconv = ttft_p99_arriving_in(c, crash_t + 2.0, cfg["horizon"])
+    print(f"  post-crash p99 TTFT (arrivals after t+2s): {reconv:.4f}s")
+    assert reconv <= slo_ttft, "cluster must re-converge to SLO after crash"
+    print("autoscale + crash-recovery bounds hold")
