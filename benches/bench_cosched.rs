@@ -1,0 +1,107 @@
+//! Co-scheduling smoke bench — wall-clock throughput of the
+//! broker-mediated two-tenant DES, plus the deterministic virtual-time
+//! crossover metrics CI gates on.
+//!
+//! Like `bench_serving`, two result classes go into
+//! `BENCH_cosched.json` (`BENCH_JSON=<path>`): `"benches"` (wall-clock
+//! timings, archived, not gated) and `"metrics"` — the ISSUE 5
+//! crossover numbers (training-step gain vs the static half/half
+//! partition per fabric, serving p99 TTFT under co-scheduling). The
+//! simulators are deterministic, so the metrics are bit-identical on
+//! every machine; `tools/bench_regression.py` gates them against
+//! `BENCH_baseline.json` alongside the serving metrics. The same
+//! presets are asserted (more tightly) by
+//! `rust/tests/cosched_scenarios.rs`, so a green test suite implies a
+//! green gate.
+
+use hyperparallel::hypermpmd::coschedule::{
+    cosched_comparison, cosched_scenario, cosched_slo, run_cosched, CoschedMode,
+};
+use hyperparallel::serving::{ClusterFabric, AUTOSCALE_MEAN_RATE};
+use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
+use hyperparallel::util::json::{Json, JsonObj};
+use hyperparallel::util::stats::fmt_secs;
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    section("co-scheduled DES wall-clock (serving + trainer + broker)");
+    let iters = if smoke() { 2 } else { 5 };
+    let sc = cosched_scenario(ClusterFabric::Supernode, CoschedMode::Cosched);
+    let n_reqs = sc.workload.generate(sc.horizon).len();
+    results.push(run(
+        &format!("cosched sim diurnal {n_reqs} reqs + elastic trainer"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_cosched(&sc).train.steps);
+        },
+    ));
+    let st = cosched_scenario(ClusterFabric::Supernode, CoschedMode::StaticPartition);
+    results.push(run(
+        &format!("static-partition sim diurnal {n_reqs} reqs"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_cosched(&st).train.steps);
+        },
+    ));
+
+    section("co-scheduling crossover (virtual time — deterministic, CI-gated)");
+    let slo = cosched_slo();
+    let mut metrics = JsonObj::new();
+    let mut gains = Vec::new();
+    for (name, fabric) in [
+        ("supernode", ClusterFabric::Supernode),
+        ("legacy", ClusterFabric::Legacy),
+    ] {
+        let cmp = cosched_comparison(fabric);
+        let cop = cmp.cosched.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+        let gain = cmp.step_gain();
+        println!(
+            "  {name:<10} co-sched {:>3} vs static {:>3} steps ({gain:.2}x)  \
+             serving p99 ttft {:>10}  reshards {:>3} ({:>8} on fabric)  slo {}",
+            cmp.cosched.train.steps_by_deadline,
+            cmp.static_partition.train.steps_by_deadline,
+            fmt_secs(cop.p99_ttft),
+            cmp.cosched.train.reshards,
+            fmt_secs(cmp.cosched.train.reshard_seconds),
+            if cop.attains_slo { "yes" } else { "no" }
+        );
+        metrics.insert(
+            format!("cosched.{name}.steps_gain"),
+            Json::from(gain),
+        );
+        metrics.insert(
+            format!("cosched.{name}.steps_by_deadline"),
+            Json::from(cmp.cosched.train.steps_by_deadline as f64),
+        );
+        metrics.insert(
+            format!("cosched.{name}.serving_p99_ttft_s"),
+            Json::from(cop.p99_ttft),
+        );
+        metrics.insert(
+            format!("cosched.{name}.reshard_seconds"),
+            Json::from(cmp.cosched.train.reshard_seconds),
+        );
+        gains.push(gain);
+    }
+    println!(
+        "\n  step-gain crossover: supernode {:.2}x vs legacy {:.2}x \
+         (gates: >= 1.40 / <= 1.10)",
+        gains[0], gains[1]
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = JsonObj::new();
+        root.insert("benches", to_json(&results));
+        root.insert("metrics", Json::Obj(metrics));
+        match std::fs::write(&path, Json::Obj(root).pretty()) {
+            Ok(()) => println!("\nbench json written to {path}"),
+            Err(e) => {
+                eprintln!("\nbench json write to {path} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

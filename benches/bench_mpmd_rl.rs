@@ -18,7 +18,7 @@ fn mean_over_seeds(
     let seeds: Vec<u64> = seeds.collect();
     let (mut gu, mut su, mut gt, mut st) =
         (Summary::new(), Summary::new(), Summary::new(), Summary::new());
-    for (g, s) in seed_sweep(w, &seeds, devices, devices / w.models) {
+    for (g, s) in seed_sweep(w, &seeds, devices, devices / w.models).expect("valid device count") {
         gu.add(g.utilization);
         su.add(s.utilization);
         gt.add(g.makespan);
@@ -85,11 +85,15 @@ fn main() {
     let mut results = Vec::new();
     let tasks = w.generate(3);
     results.push(run("single-controller schedule (256 rollouts, 64 dev)", 2, 50, || {
-        std::hint::black_box(schedule_single_controller(&tasks, 64, 16).makespan);
+        std::hint::black_box(
+            schedule_single_controller(&tasks, 64, 16)
+                .expect("valid device count")
+                .makespan,
+        );
     }));
     let seeds: Vec<u64> = (0..16).collect();
     results.push(run("16-seed gang+sc sweep via sim::sweep", 1, 10, || {
-        std::hint::black_box(seed_sweep(&w, &seeds, 64, 16).len());
+        std::hint::black_box(seed_sweep(&w, &seeds, 64, 16).expect("valid device count").len());
     }));
     maybe_write_json(&results);
 }

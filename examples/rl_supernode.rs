@@ -29,8 +29,9 @@ fn main() {
     let mut sc_t = Summary::new();
     for it in 0..iterations {
         let tasks = w.generate(1000 + it as u64);
-        let g = schedule_gang(&tasks, devices);
-        let s = schedule_single_controller(&tasks, devices, devices / w.models);
+        let g = schedule_gang(&tasks, devices).expect("--devices must cover the models");
+        let s = schedule_single_controller(&tasks, devices, devices / w.models)
+            .expect("--devices must cover the models");
         gang_util.add(g.utilization);
         sc_util.add(s.utilization);
         gang_t.add(g.makespan);
@@ -64,8 +65,9 @@ fn main() {
         let mut ww = w.clone();
         ww.rollout_sigma = sigma;
         let tasks = ww.generate(7);
-        let g = schedule_gang(&tasks, devices);
-        let s = schedule_single_controller(&tasks, devices, devices / ww.models);
+        let g = schedule_gang(&tasks, devices).expect("--devices must cover the models");
+        let s = schedule_single_controller(&tasks, devices, devices / ww.models)
+            .expect("--devices must cover the models");
         println!(
             "  sigma {sigma:>4}: gang {:>9} vs sc {:>9}  ({:.2}x)",
             fmt_secs(g.makespan),

@@ -1,0 +1,98 @@
+//! Co-scheduled training + serving on one supernode (ISSUE 5): the
+//! device-lease broker arbitrating a 32-device pool between PR 4's
+//! elastic serving cluster and an elastic training job, vs the static
+//! half/half partition baseline.
+//!
+//! The checked-in scenario (seed 42): the diurnal serving swing leaves
+//! deep troughs; the broker lets the trainer harvest them — paying a
+//! real resharding cost over the actual fabric on every lease change.
+//! On the supernode fabric co-scheduling holds the 0.5 s p99 TTFT
+//! serving SLO while completing ≥1.4× the static partition's training
+//! steps; on legacy RoCE the reshards (96 GiB of optimizer state over
+//! ~1/15 the bandwidth) eat the harvest and the warm-up lag blows the
+//! serving SLO — the fabric decides whether the supernode is one
+//! logical computer or two.
+//!
+//! Run: `cargo run --release --example train_and_serve`
+//!      `cargo run --release --example train_and_serve -- --fabric both --rate 30`
+
+use hyperparallel::hypermpmd::coschedule::{
+    cosched_scenario, cosched_slo, run_cosched, CoschedMode, CoschedReport,
+    COSCHED_POOL_DEVICES, COSCHED_STATIC_SERVING,
+};
+use hyperparallel::serving::{ClusterFabric, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD};
+use hyperparallel::util::args::Args;
+use hyperparallel::util::stats::{fmt_secs, render_table};
+
+fn row(label: &str, rep: &CoschedReport, rate: f64) -> Vec<String> {
+    let slo = cosched_slo();
+    let op = rep.serving.operating_point(rate, &slo);
+    vec![
+        label.to_string(),
+        format!("{}", op.completed),
+        fmt_secs(op.p99_ttft),
+        (if op.attains_slo { "yes" } else { "NO" }).to_string(),
+        format!("{}", rep.train.steps_by_deadline),
+        format!("{}", rep.train.reshards),
+        fmt_secs(rep.train.reshard_seconds),
+        format!("{}", rep.train.peak_devices),
+        format!("{}", rep.broker.lease_misses),
+    ]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rate = args.f64("rate", AUTOSCALE_MEAN_RATE);
+    let fabric_arg = args.get_or("fabric", "both");
+    let fabrics: Vec<(&str, ClusterFabric)> = match fabric_arg {
+        "supernode" => vec![("supernode", ClusterFabric::Supernode)],
+        "legacy" => vec![("legacy", ClusterFabric::Legacy)],
+        _ => vec![
+            ("supernode", ClusterFabric::Supernode),
+            ("legacy", ClusterFabric::Legacy),
+        ],
+    };
+    println!(
+        "co-scheduled training + serving: {COSCHED_POOL_DEVICES}-device pool, diurnal \
+         serving at {rate:.0} req/s mean over {AUTOSCALE_PERIOD:.0}s, static baseline \
+         {COSCHED_STATIC_SERVING}/{COSCHED_STATIC_SERVING} split, SLO p99 TTFT {}\n",
+        fmt_secs(cosched_slo().ttft_p99)
+    );
+
+    let mut rows = Vec::new();
+    let mut gains = Vec::new();
+    for (name, fabric) in &fabrics {
+        let mut co = cosched_scenario(*fabric, CoschedMode::Cosched);
+        let mut st = cosched_scenario(*fabric, CoschedMode::StaticPartition);
+        co.workload.arrival = co.workload.arrival.with_mean_rate(rate);
+        st.workload.arrival = st.workload.arrival.with_mean_rate(rate);
+        let co_rep = run_cosched(&co);
+        let st_rep = run_cosched(&st);
+        let gain = co_rep.train.steps_by_deadline as f64
+            / st_rep.train.steps_by_deadline.max(1) as f64;
+        rows.push(row(&format!("{name} co-sched"), &co_rep, rate));
+        rows.push(row(&format!("{name} static"), &st_rep, rate));
+        gains.push((name.to_string(), gain));
+    }
+    print!(
+        "{}",
+        render_table(
+            &[
+                "scenario", "served", "p99 ttft", "slo", "train steps", "reshards",
+                "reshard time", "peak devs", "lease misses",
+            ],
+            &rows
+        )
+    );
+    println!();
+    for (name, gain) in &gains {
+        println!("  {name}: co-scheduling harvests {gain:.2}x the static partition's steps");
+    }
+    if gains.len() == 2 {
+        println!(
+            "\n  the fabric decides: supernode {:.2}x vs legacy {:.2}x — resharding over \
+             RoCE eats the harvested troughs",
+            gains[0].1, gains[1].1
+        );
+    }
+}

@@ -128,7 +128,21 @@ pub struct RlReport {
 /// *statically pre-assigned* round-robin to the partition's devices
 /// (how sync PPO pins environment workers), then a synchronous barrier
 /// across *all* models gates every update (gang-scheduled sync RL).
-pub fn schedule_gang(tasks: &[ModelTasks], devices: usize) -> RlReport {
+///
+/// Errors on `devices == 0` or an empty task set instead of indexing
+/// out of bounds — the co-scheduling broker (ISSUE 5) can legitimately
+/// shrink a tenant to zero devices, so callers must get a diagnosable
+/// error, not a panic.
+pub fn schedule_gang(tasks: &[ModelTasks], devices: usize) -> Result<RlReport, String> {
+    if tasks.is_empty() {
+        return Err("schedule_gang: no model tasks to schedule".into());
+    }
+    if devices < tasks.len() {
+        return Err(format!(
+            "schedule_gang: {} models need at least one device each, got {devices}",
+            tasks.len()
+        ));
+    }
     let models = tasks.len();
     let per = (devices / models).max(1);
     let mut busy = vec![0.0f64; devices];
@@ -161,21 +175,34 @@ pub fn schedule_gang(tasks: &[ModelTasks], devices: usize) -> RlReport {
     let utilization = busy.iter().sum::<f64>() / (devices as f64 * makespan);
     let spread = model_finish.iter().cloned().fold(0.0f64, f64::max)
         - model_finish.iter().cloned().fold(f64::INFINITY, f64::min);
-    RlReport {
+    Ok(RlReport {
         makespan,
         utilization,
         update_spread: spread,
-    }
+    })
 }
 
 /// HyperMPMD single controller: one global pool; any device takes any
 /// ready task; a model's update is admitted once *its own* evals are
 /// done (no cross-model barrier). Updates occupy `update_width` devices.
+///
+/// Errors on an empty task set, `devices == 0`, or `update_width == 0`
+/// instead of panicking on an empty device pool (see [`schedule_gang`]
+/// — the lease broker can shrink a tenant to zero devices).
 pub fn schedule_single_controller(
     tasks: &[ModelTasks],
     devices: usize,
     update_width: usize,
-) -> RlReport {
+) -> Result<RlReport, String> {
+    if tasks.is_empty() {
+        return Err("schedule_single_controller: no model tasks to schedule".into());
+    }
+    if devices == 0 {
+        return Err("schedule_single_controller: device pool is empty".into());
+    }
+    if update_width == 0 {
+        return Err("schedule_single_controller: update_width must be >= 1".into());
+    }
     // Build the global task list: (duration, kind) with per-model join.
     // Greedy LPT over rollout+eval pairs across ALL models.
     let mut all: Vec<(usize, f64)> = Vec::new(); // (model, duration)
@@ -226,30 +253,45 @@ pub fn schedule_single_controller(
     let utilization = busy.iter().sum::<f64>() / (devices as f64 * makespan);
     let spread = model_ready.iter().cloned().fold(0.0f64, f64::max)
         - model_ready.iter().cloned().fold(f64::INFINITY, f64::min);
-    RlReport {
+    Ok(RlReport {
         makespan,
         utilization,
         update_spread: spread,
-    }
+    })
 }
 
 /// Gang vs single-controller over many iteration seeds, fanned across
 /// `sim::sweep` workers (each seed's workload generation + both
 /// schedules are independent). Returns `(gang, single_controller)`
-/// reports in seed order — identical to the sequential loop.
+/// reports in seed order — identical to the sequential loop. Validates
+/// the device/width arguments once up front (same errors as the two
+/// schedulers).
 pub fn seed_sweep(
     w: &RlWorkload,
     seeds: &[u64],
     devices: usize,
     update_width: usize,
-) -> Vec<(RlReport, RlReport)> {
-    crate::sim::sweep::parallel_map(seeds, |&seed| {
+) -> Result<Vec<(RlReport, RlReport)>, String> {
+    if w.models == 0 {
+        return Err("seed_sweep: workload has no models".into());
+    }
+    if devices < w.models {
+        return Err(format!(
+            "seed_sweep: {} models need at least one device each, got {devices}",
+            w.models
+        ));
+    }
+    if update_width == 0 {
+        return Err("seed_sweep: update_width must be >= 1".into());
+    }
+    Ok(crate::sim::sweep::parallel_map(seeds, |&seed| {
         let tasks = w.generate(seed);
         (
-            schedule_gang(&tasks, devices),
-            schedule_single_controller(&tasks, devices, update_width),
+            schedule_gang(&tasks, devices).expect("arguments validated above"),
+            schedule_single_controller(&tasks, devices, update_width)
+                .expect("arguments validated above"),
         )
-    })
+    }))
 }
 
 #[cfg(test)]
@@ -264,13 +306,13 @@ mod tests {
     fn seed_sweep_matches_sequential() {
         let w = RlWorkload::paper_shape();
         let seeds: Vec<u64> = (0..6).collect();
-        let swept = seed_sweep(&w, &seeds, 32, 8);
+        let swept = seed_sweep(&w, &seeds, 32, 8).unwrap();
         for (&seed, (gang, sc)) in seeds.iter().zip(&swept) {
             let tasks = w.generate(seed);
-            assert_eq!(gang.makespan, schedule_gang(&tasks, 32).makespan);
+            assert_eq!(gang.makespan, schedule_gang(&tasks, 32).unwrap().makespan);
             assert_eq!(
                 sc.makespan,
-                schedule_single_controller(&tasks, 32, 8).makespan
+                schedule_single_controller(&tasks, 32, 8).unwrap().makespan
             );
         }
     }
@@ -279,8 +321,8 @@ mod tests {
     fn single_controller_beats_gang_utilization() {
         let tasks = workload();
         let devices = 32;
-        let gang = schedule_gang(&tasks, devices);
-        let sc = schedule_single_controller(&tasks, devices, 8);
+        let gang = schedule_gang(&tasks, devices).unwrap();
+        let sc = schedule_single_controller(&tasks, devices, 8).unwrap();
         assert!(
             sc.utilization > gang.utilization + 0.08,
             "sc={} gang={}",
@@ -292,8 +334,8 @@ mod tests {
     #[test]
     fn single_controller_shortens_iteration() {
         let tasks = workload();
-        let gang = schedule_gang(&tasks, 32);
-        let sc = schedule_single_controller(&tasks, 32, 8);
+        let gang = schedule_gang(&tasks, 32).unwrap();
+        let sc = schedule_single_controller(&tasks, 32, 8).unwrap();
         assert!(
             sc.makespan < gang.makespan,
             "sc={} gang={}",
@@ -308,15 +350,15 @@ mod tests {
         w.rollout_sigma = 0.2;
         let light = {
             let t = w.generate(3);
-            let g = schedule_gang(&t, 32);
-            let s = schedule_single_controller(&t, 32, 8);
+            let g = schedule_gang(&t, 32).unwrap();
+            let s = schedule_single_controller(&t, 32, 8).unwrap();
             g.makespan / s.makespan
         };
         w.rollout_sigma = 1.2;
         let heavy = {
             let t = w.generate(3);
-            let g = schedule_gang(&t, 32);
-            let s = schedule_single_controller(&t, 32, 8);
+            let g = schedule_gang(&t, 32).unwrap();
+            let s = schedule_single_controller(&t, 32, 8).unwrap();
             g.makespan / s.makespan
         };
         assert!(heavy > light, "heavy={heavy} light={light}");
@@ -337,10 +379,37 @@ mod tests {
     fn utilization_bounded() {
         let tasks = workload();
         for r in [
-            schedule_gang(&tasks, 32),
-            schedule_single_controller(&tasks, 32, 8),
+            schedule_gang(&tasks, 32).unwrap(),
+            schedule_single_controller(&tasks, 32, 8).unwrap(),
         ] {
             assert!(r.utilization > 0.0 && r.utilization <= 1.0 + 1e-9);
         }
+    }
+
+    // ---- ISSUE 5 satellite: degenerate device pools are errors ---------
+
+    #[test]
+    fn zero_devices_is_an_error_not_a_panic() {
+        // regression: both schedulers used to index/unwrap their way
+        // into a panic on an empty device pool — which the lease
+        // broker can legitimately produce by shrinking a tenant to
+        // zero devices
+        let tasks = workload();
+        let err = schedule_gang(&tasks, 0).unwrap_err();
+        assert!(err.contains("device"), "{err}");
+        let err = schedule_single_controller(&tasks, 0, 8).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+        // fewer devices than models would index past the gang's
+        // partition table
+        assert!(schedule_gang(&tasks, tasks.len() - 1).is_err());
+        // degenerate update width would schedule updates on no devices
+        assert!(schedule_single_controller(&tasks, 32, 0).is_err());
+        // empty task sets divide by zero in the gang partitioner
+        assert!(schedule_gang(&[], 32).is_err());
+        assert!(schedule_single_controller(&[], 32, 8).is_err());
+        // the sweep validates once up front
+        let w = RlWorkload::paper_shape();
+        assert!(seed_sweep(&w, &[1, 2], 0, 8).is_err());
+        assert!(seed_sweep(&w, &[1, 2], 32, 0).is_err());
     }
 }

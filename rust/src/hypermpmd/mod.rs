@@ -10,14 +10,25 @@
 //! - [`cross`] — cross-model concurrent scheduling: the single
 //!   controller that pools the supernode for RL actor-learner
 //!   workloads, eliminating stragglers (+15% utilization, Fig 4c).
+//! - [`coschedule`] — the supernode-scope MPMD claim (ISSUE 5): a
+//!   device-lease broker co-scheduling the elastic serving cluster
+//!   with an elastic training job on one shared pool, preempting and
+//!   resharding the trainer around diurnal serving demand.
 //! - [`process_group`] — node-to-module mapping configuration
 //!   (Listing 1).
 
+pub mod coschedule;
 pub mod cross;
 pub mod inter;
 pub mod intra;
 pub mod process_group;
 
+pub use coschedule::{
+    assert_tenant_isolation, cosched_comparison, cosched_rate_sweep, cosched_scenario,
+    cosched_slo, cosched_train_job, run_cosched, BrokerReport, CoschedComparison, CoschedConfig,
+    CoschedMode, CoschedReport, LeaseBroker, TrainTenantConfig, TrainTenantReport,
+    COSCHED_MICROBATCHES, COSCHED_POOL_DEVICES, COSCHED_RESERVE, COSCHED_STATIC_SERVING,
+};
 pub use cross::{
     schedule_gang, schedule_single_controller, seed_sweep, ModelTasks, RlReport, RlTask,
     RlWorkload,

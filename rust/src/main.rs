@@ -136,8 +136,9 @@ fn cmd_simulate(args: &Args) {
         }
         "rl" => {
             let tasks = RlWorkload::paper_shape().generate(args.u64("seed", 7));
-            let gang = hypermpmd::schedule_gang(&tasks, 32);
-            let sc = hypermpmd::schedule_single_controller(&tasks, 32, 8);
+            let gang = hypermpmd::schedule_gang(&tasks, 32).expect("32 devices, 4 models");
+            let sc = hypermpmd::schedule_single_controller(&tasks, 32, 8)
+                .expect("32 devices, width 8");
             println!("E9 RL cross-model scheduling (32 devices, 4 models):");
             println!(
                 "  gang-scheduled utilization:    {:.1}%",

@@ -158,6 +158,37 @@ pub struct InstanceCrash {
     pub instance: usize,
 }
 
+/// External device supplier for co-scheduled runs (ISSUE 5): when the
+/// serving cluster shares its supernode with another tenant, scale-ups
+/// lease devices from a broker instead of a private pool, and cleanly
+/// drained devices go back to it. `hypermpmd::coschedule::LeaseBroker`
+/// implements this; standalone runs use [`NullLessor`], which keeps
+/// the PR 4 `AutoscaleConfig::device_pool` semantics bit-identical.
+pub trait DeviceLessor {
+    /// Try to obtain one device for a scale-up. Implementations record
+    /// unmet demand on failure — that signal is what triggers a
+    /// preemption of the co-tenant.
+    fn lease(&mut self) -> Option<DeviceId>;
+    /// Offer a cleanly released device back. Returns `false` when the
+    /// lessor does not manage devices (the cluster then returns it to
+    /// its private `device_pool`).
+    fn give_back(&mut self, dev: DeviceId) -> bool;
+}
+
+/// The no-op lessor of a standalone cluster: never supplies a device,
+/// never accepts one back.
+pub struct NullLessor;
+
+impl DeviceLessor for NullLessor {
+    fn lease(&mut self) -> Option<DeviceId> {
+        None
+    }
+
+    fn give_back(&mut self, _dev: DeviceId) -> bool {
+        false
+    }
+}
+
 /// A multi-instance serving deployment on a topology.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -211,6 +242,16 @@ pub struct ClusterReport {
     pub instance_seconds: f64,
     /// High-water mark of simultaneously held devices.
     pub peak_instances: usize,
+    /// Device of each trace resource (index = instance = resource), so
+    /// per-instance intervals can be mapped back onto physical devices
+    /// — the co-scheduling conservation tests overlay these with the
+    /// training tenant's intervals.
+    pub instance_devices: Vec<DeviceId>,
+    /// Devices still held by live (serving/warming/draining) instances
+    /// when the run ended.
+    pub held_devices_at_end: Vec<DeviceId>,
+    /// Devices lost to crashes (never returned to any pool or broker).
+    pub crashed_devices: Vec<DeviceId>,
 }
 
 impl ClusterReport {
@@ -458,8 +499,16 @@ fn event_lt(a: (f64, u8, usize), b: (f64, u8, usize)) -> bool {
 
 // ---- the elastic cluster simulator ------------------------------------
 
-struct Sim<'a> {
+/// The cluster DES as a *steppable process*: `next_event` peeks the
+/// time of the next internal event, `process` executes exactly one
+/// event (including its cross-instance quiescence drain). Standalone
+/// runs ([`simulate_cluster`]) just loop; the co-scheduler
+/// (`hypermpmd::coschedule`) interleaves these steps with a training
+/// tenant on the shared virtual clock, mediating devices through a
+/// [`DeviceLessor`] between events.
+pub(crate) struct ClusterSim<'a> {
     cfg: &'a ClusterConfig,
+    requests: &'a [Request],
     insts: Vec<Instance>,
     router: Router,
     stats: Stats,
@@ -476,9 +525,14 @@ struct Sim<'a> {
     outcome_ptr: usize,
     peak_context: usize,
     peak_alive: usize,
+    /// Failure injections sorted by (time, instance).
+    failures: Vec<InstanceCrash>,
+    next_arrival: usize,
+    next_failure: usize,
+    next_tick: Option<f64>,
 }
 
-impl<'a> Sim<'a> {
+impl<'a> ClusterSim<'a> {
     fn serving_ids(&self, role: InstanceRole) -> Vec<usize> {
         self.insts
             .iter()
@@ -598,11 +652,13 @@ impl<'a> Sim<'a> {
     }
 
     /// Scale up by one instance of the scaled role, paying the
-    /// model-load warm-up transfer over the actual fabric tier.
-    fn spawn_instance(&mut self, t: f64) -> bool {
+    /// model-load warm-up transfer over the actual fabric tier. The
+    /// private pool is tried first, then the lessor (which records
+    /// unmet demand — the broker's preemption signal — on failure).
+    fn spawn_instance(&mut self, t: f64, lessor: &mut dyn DeviceLessor) -> bool {
         let cfg = self.cfg;
         let aus = cfg.autoscale.as_ref().expect("spawn requires autoscale");
-        let Some(dev) = self.pool_devices.pop_front() else {
+        let Some(dev) = self.pool_devices.pop_front().or_else(|| lessor.lease()) else {
             return false;
         };
         let src_dev = self
@@ -672,7 +728,7 @@ impl<'a> Sim<'a> {
         }
     }
 
-    fn autoscale_tick(&mut self, t: f64) {
+    fn autoscale_tick(&mut self, t: f64, lessor: &mut dyn DeviceLessor) {
         let cfg = self.cfg;
         let aus = cfg.autoscale.as_ref().expect("tick requires autoscale");
         let serving = self.serving_ids(self.scaled_role);
@@ -731,7 +787,7 @@ impl<'a> Sim<'a> {
                 }
                 let mut spawned = false;
                 for _ in 0..delta {
-                    if n >= aus.max_instances || !self.spawn_instance(t) {
+                    if n >= aus.max_instances || !self.spawn_instance(t, lessor) {
                         break;
                     }
                     spawned = true;
@@ -774,7 +830,7 @@ impl<'a> Sim<'a> {
     /// truncate in-flight work, requeue everything the victim held
     /// (prefix recompute charged), drop its KV pages, and let the
     /// autoscaler spawn a replacement.
-    fn crash_instance(&mut self, sel: usize, t: f64) {
+    fn crash_instance(&mut self, sel: usize, t: f64, lessor: &mut dyn DeviceLessor) {
         let mut alive: Vec<usize> = (0..self.insts.len())
             .filter(|&k| self.insts[k].state == InstanceState::Serving)
             .collect();
@@ -874,7 +930,7 @@ impl<'a> Sim<'a> {
         // (no cooldown: failure replacement is not a voluntary action)
         if let Some(aus) = self.cfg.autoscale.as_ref() {
             if was_scaled && self.alive_count(self.scaled_role) < aus.max_instances {
-                self.spawn_instance(t);
+                self.spawn_instance(t, lessor);
             }
         }
         self.resolve_limbo();
@@ -1096,152 +1152,349 @@ impl<'a> Sim<'a> {
         inst.work_end = Some((finish, Work::Iteration));
     }
 
-    fn run(&mut self, requests: &[Request]) {
-        let cfg = self.cfg;
-        let mut failures = cfg.failures.clone();
-        failures.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.instance.cmp(&b.instance)));
-        let track_arrivals = cfg.autoscale.is_some();
-        let mut next_arrival = 0usize;
-        let mut next_failure = 0usize;
-        let mut next_tick: Option<f64> = cfg.autoscale.as_ref().map(|a| a.eval_interval);
-
-        loop {
-            // candidate events: (time, class, idx); the class breaks
-            // ties — arrival < work-end < crash < autoscale tick
-            let mut best: Option<(f64, u8, usize)> = None;
-            if let Some(r) = requests.get(next_arrival) {
-                best = Some((r.arrival, 0, 0));
-            }
-            for (k, inst) in self.insts.iter().enumerate() {
-                if let Some((wt, _)) = inst.work_end {
-                    let cand = (wt, 1u8, k);
-                    if best.map_or(true, |b| event_lt(cand, b)) {
-                        best = Some(cand);
-                    }
-                }
-            }
-            if let Some(f) = failures.get(next_failure) {
-                let cand = (f.time, 2u8, next_failure);
+    /// Time/class/index of the next internal event, or `None` when the
+    /// run is complete. Class breaks ties at equal times — arrival <
+    /// work-end < crash < autoscale tick, lowest instance index first
+    /// among simultaneous work-ends. A pending tick alone never keeps
+    /// the sim alive (ticks are cancelled once nothing can generate
+    /// further work).
+    pub(crate) fn next_event(&self) -> Option<(f64, u8, usize)> {
+        let mut best: Option<(f64, u8, usize)> = None;
+        if let Some(r) = self.requests.get(self.next_arrival) {
+            best = Some((r.arrival, 0, 0));
+        }
+        for (k, inst) in self.insts.iter().enumerate() {
+            if let Some((wt, _)) = inst.work_end {
+                let cand = (wt, 1u8, k);
                 if best.map_or(true, |b| event_lt(cand, b)) {
                     best = Some(cand);
                 }
             }
-            let Some(mut ev) = best else {
-                break;
-            };
-            if let Some(tk) = next_tick {
-                let cand = (tk, 3u8, 0usize);
-                if event_lt(cand, ev) {
-                    ev = cand;
+        }
+        if let Some(f) = self.failures.get(self.next_failure) {
+            let cand = (f.time, 2u8, self.next_failure);
+            if best.map_or(true, |b| event_lt(cand, b)) {
+                best = Some(cand);
+            }
+        }
+        let mut ev = best?;
+        if let Some(tk) = self.next_tick {
+            let cand = (tk, 3u8, 0usize);
+            if event_lt(cand, ev) {
+                ev = cand;
+            }
+        }
+        Some(ev)
+    }
+
+    /// Execute one event returned by [`next_event`], then drain its
+    /// cross-instance effects to quiescence. Device acquisitions and
+    /// clean releases go through `lessor` (the private `device_pool`
+    /// is tried/used first — standalone runs pass [`NullLessor`] and
+    /// behave exactly as before).
+    pub(crate) fn process(&mut self, ev: (f64, u8, usize), lessor: &mut dyn DeviceLessor) {
+        let cfg = self.cfg;
+        let (t, cls, idx) = ev;
+        match cls {
+            0 => {
+                let req = self.requests[self.next_arrival];
+                self.next_arrival += 1;
+                if cfg.autoscale.is_some() {
+                    self.recent_arrivals.push_back(t);
+                }
+                // fresh arrivals take the same admission path as
+                // crash/drain re-queues: route to a serving
+                // instance (the kick-drain below wakes it), wait
+                // in limbo while capacity warms, or reject if no
+                // capacity can ever come
+                self.route_requeue(Queued {
+                    req,
+                    prompt_len: req.prompt_tokens,
+                    produced: 0,
+                    first_token: None,
+                    preemptions: 0,
+                    kv_src: None,
+                });
+            }
+            1 => {
+                let k = idx;
+                let kind = self.insts[k].work_end.expect("work in flight").1;
+                match kind {
+                    Work::Iteration => self.finish_iteration(k, t),
+                    Work::Ingest => self.finish_ingest(k, t),
+                    Work::Warmup => self.finish_warmup(k, t),
+                }
+                if self.insts[k].work_end.is_none() {
+                    self.start_work(k, t);
                 }
             }
-            let (t, cls, idx) = ev;
-            match cls {
-                0 => {
-                    let req = requests[next_arrival];
-                    next_arrival += 1;
-                    if track_arrivals {
-                        self.recent_arrivals.push_back(t);
-                    }
-                    // fresh arrivals take the same admission path as
-                    // crash/drain re-queues: route to a serving
-                    // instance (the kick-drain below wakes it), wait
-                    // in limbo while capacity warms, or reject if no
-                    // capacity can ever come
-                    self.route_requeue(Queued {
-                        req,
-                        prompt_len: req.prompt_tokens,
-                        produced: 0,
-                        first_token: None,
-                        preemptions: 0,
-                        kv_src: None,
-                    });
-                }
-                1 => {
-                    let k = idx;
-                    let kind = self.insts[k].work_end.expect("work in flight").1;
-                    match kind {
-                        Work::Iteration => self.finish_iteration(k, t),
-                        Work::Ingest => self.finish_ingest(k, t),
-                        Work::Warmup => self.finish_warmup(k, t),
-                    }
-                    if self.insts[k].work_end.is_none() {
-                        self.start_work(k, t);
-                    }
-                }
-                2 => {
-                    next_failure += 1;
-                    self.crash_instance(failures[idx].instance, t);
-                }
-                _ => {
-                    self.autoscale_tick(t);
-                    let aus = cfg.autoscale.as_ref().expect("tick requires autoscale");
-                    next_tick = Some(t + aus.eval_interval);
+            2 => {
+                self.next_failure += 1;
+                let sel = self.failures[idx].instance;
+                self.crash_instance(sel, t, lessor);
+            }
+            _ => {
+                self.autoscale_tick(t, lessor);
+                let aus = cfg.autoscale.as_ref().expect("tick requires autoscale");
+                self.next_tick = Some(t + aus.eval_interval);
+            }
+        }
+        // Drain cross-instance effects until quiescent: page handoffs
+        // wake the source instance, migrations/requeues wake targets.
+        while !self.stats.handoffs.is_empty() || !self.stats.kick.is_empty() {
+            let handoffs = std::mem::take(&mut self.stats.handoffs);
+            for (seq, src) in handoffs {
+                self.insts[src].mem.pool.release(seq);
+                self.stats.kick.insert(src);
+            }
+            let kicks: Vec<usize> = std::mem::take(&mut self.stats.kick).into_iter().collect();
+            for k in kicks {
+                if self.insts[k].work_end.is_none() {
+                    self.start_work(k, t);
                 }
             }
-            // Drain cross-instance effects until quiescent: page handoffs
-            // wake the source instance, migrations/requeues wake targets.
-            while !self.stats.handoffs.is_empty() || !self.stats.kick.is_empty() {
-                let handoffs = std::mem::take(&mut self.stats.handoffs);
-                for (seq, src) in handoffs {
-                    self.insts[src].mem.pool.release(seq);
-                    self.stats.kick.insert(src);
-                }
-                let kicks: Vec<usize> = std::mem::take(&mut self.stats.kick).into_iter().collect();
-                for k in kicks {
-                    if self.insts[k].work_end.is_none() {
-                        self.start_work(k, t);
-                    }
-                }
-            }
-            // a drained instance releases its device once its parked
-            // pages are gone and nothing is in flight
-            for k2 in 0..self.insts.len() {
-                let inst = &self.insts[k2];
-                if inst.state == InstanceState::Draining
-                    && inst.work_end.is_none()
-                    && inst.queue.is_empty()
-                    && inst.ingest.is_empty()
-                    && inst.active_count() == 0
-                    && inst.mem.pool.sequences() == 0
-                {
-                    self.insts[k2].state = InstanceState::Released;
-                    self.insts[k2].died = Some(t);
-                    self.stats.intervals.push(Interval {
-                        task: TaskId(self.stats.tasks),
-                        resource: ResourceId(k2),
-                        start: t,
-                        finish: t,
-                        tag: tags::DRAIN,
-                    });
-                    self.stats.tasks += 1;
-                    let dev = self.insts[k2].device;
+        }
+        // a drained instance releases its device once its parked
+        // pages are gone and nothing is in flight
+        for k2 in 0..self.insts.len() {
+            let inst = &self.insts[k2];
+            if inst.state == InstanceState::Draining
+                && inst.work_end.is_none()
+                && inst.queue.is_empty()
+                && inst.ingest.is_empty()
+                && inst.active_count() == 0
+                && inst.mem.pool.sequences() == 0
+            {
+                self.insts[k2].state = InstanceState::Released;
+                self.insts[k2].died = Some(t);
+                self.stats.intervals.push(Interval {
+                    task: TaskId(self.stats.tasks),
+                    resource: ResourceId(k2),
+                    start: t,
+                    finish: t,
+                    tag: tags::DRAIN,
+                });
+                self.stats.tasks += 1;
+                let dev = self.insts[k2].device;
+                if !lessor.give_back(dev) {
                     self.pool_devices.push_back(dev);
                 }
             }
-            let total_ctx: usize = self.insts.iter().map(|i| i.cur_ctx_tokens).sum();
-            self.peak_context = self.peak_context.max(total_ctx);
-            let alive = self
-                .insts
-                .iter()
-                .filter(|i| {
-                    matches!(
-                        i.state,
-                        InstanceState::Serving
-                            | InstanceState::WarmingUp
-                            | InstanceState::Draining
-                    )
-                })
-                .count();
-            self.peak_alive = self.peak_alive.max(alive);
-            // ticks stop once nothing can generate further work
-            if next_tick.is_some()
-                && next_arrival >= requests.len()
-                && next_failure >= failures.len()
-                && self.insts.iter().all(|i| i.work_end.is_none())
-            {
-                next_tick = None;
+        }
+        let total_ctx: usize = self.insts.iter().map(|i| i.cur_ctx_tokens).sum();
+        self.peak_context = self.peak_context.max(total_ctx);
+        let alive = self
+            .insts
+            .iter()
+            .filter(|i| {
+                matches!(
+                    i.state,
+                    InstanceState::Serving | InstanceState::WarmingUp | InstanceState::Draining
+                )
+            })
+            .count();
+        self.peak_alive = self.peak_alive.max(alive);
+        // ticks stop once nothing can generate further work
+        if self.next_tick.is_some()
+            && self.next_arrival >= self.requests.len()
+            && self.next_failure >= self.failures.len()
+            && self.insts.iter().all(|i| i.work_end.is_none())
+        {
+            self.next_tick = None;
+        }
+    }
+}
+
+impl<'a> ClusterSim<'a> {
+    /// Validate the configuration and build the initial state. Panics
+    /// on malformed configs (same checks [`simulate_cluster`] always
+    /// applied).
+    pub(crate) fn new(cfg: &'a ClusterConfig, requests: &'a [Request]) -> Self {
+        assert!(!cfg.instances.is_empty(), "cluster needs at least one instance");
+        assert!(cfg.max_seq >= 2, "need room for a prompt and one decode position");
+        debug_assert!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "requests must be sorted by arrival time"
+        );
+        let has_prefill = cfg
+            .instances
+            .iter()
+            .any(|i| i.role == InstanceRole::Prefill);
+        let has_decode = cfg.instances.iter().any(|i| i.role == InstanceRole::Decode);
+        let has_colocated = cfg
+            .instances
+            .iter()
+            .any(|i| i.role == InstanceRole::Colocated);
+        assert!(
+            !(has_colocated && (has_prefill || has_decode)),
+            "mixing colocated with disaggregated roles is not supported"
+        );
+        assert!(
+            has_prefill == has_decode,
+            "disaggregation needs both a prefill pool and a decode pool"
+        );
+        if let Some(aus) = &cfg.autoscale {
+            assert!(aus.slots >= 1, "autoscaled instances need at least one slot");
+            assert!(aus.eval_interval > 0.0, "evaluation cadence must be positive");
+            assert!(aus.lookback > 0.0, "lookback window must be positive");
+            assert!(
+                aus.min_instances >= 1 && aus.max_instances >= aus.min_instances,
+                "need 1 <= min_instances <= max_instances"
+            );
+        }
+
+        let insts: Vec<Instance> = cfg
+            .instances
+            .iter()
+            .map(|spec| Instance::new(spec, cfg))
+            .collect();
+        let entry_role = if has_prefill {
+            InstanceRole::Prefill
+        } else {
+            InstanceRole::Colocated
+        };
+        let scaled_role = if has_decode {
+            InstanceRole::Decode
+        } else {
+            InstanceRole::Colocated
+        };
+        let mut failures = cfg.failures.clone();
+        failures.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.instance.cmp(&b.instance)));
+        let n0 = insts.len();
+        Self {
+            cfg,
+            requests,
+            insts,
+            router: Router::new(cfg.route),
+            stats: Stats {
+                per_instance_completed: vec![0; n0],
+                ..Default::default()
+            },
+            limbo: VecDeque::new(),
+            pool_devices: cfg
+                .autoscale
+                .as_ref()
+                .map(|a| a.device_pool.iter().copied().collect())
+                .unwrap_or_default(),
+            entry_role,
+            scaled_role,
+            last_action: f64::NEG_INFINITY,
+            recent_arrivals: VecDeque::new(),
+            outcome_ptr: 0,
+            peak_context: 0,
+            peak_alive: n0,
+            failures,
+            next_arrival: 0,
+            next_failure: 0,
+            next_tick: cfg.autoscale.as_ref().map(|a| a.eval_interval),
+        }
+    }
+
+    /// Finalize a completed run into the report, asserting the page
+    /// conservation invariants.
+    pub(crate) fn into_report(self) -> ClusterReport {
+        // makespan: latest finish of real work (zero-length markers from
+        // crash/drain events don't extend the served timeline)
+        let mut makespan = 0.0f64;
+        for iv in &self.stats.intervals {
+            if iv.finish > iv.start {
+                makespan = makespan.max(iv.finish);
             }
+        }
+
+        // Conservation: every live pool fully drained — no page leaked
+        // across completions, preemptions, migrations, drains, or crashes
+        // (a crashed pool was wiped at the instant of death).
+        for (i, inst) in self.insts.iter().enumerate() {
+            if inst.state == InstanceState::Crashed {
+                continue;
+            }
+            assert_eq!(
+                inst.mem.pool.sequences(),
+                0,
+                "instance {i} leaked pages for {} sequences",
+                inst.mem.pool.sequences()
+            );
+            inst.mem
+                .pool
+                .check_conservation()
+                .unwrap_or_else(|e| panic!("instance {i}: {e}"));
+        }
+        assert!(self.limbo.is_empty(), "limbo entries leaked");
+
+        let demotions = self.insts.iter().map(|i| i.mem.pool.demotions).sum();
+        let instance_seconds: f64 = self
+            .insts
+            .iter()
+            .map(|i| (i.died.unwrap_or(makespan) - i.born).max(0.0))
+            .sum();
+        let n = self.insts.len();
+        let instance_devices: Vec<DeviceId> = self.insts.iter().map(|i| i.device).collect();
+        let held_devices_at_end: Vec<DeviceId> = self
+            .insts
+            .iter()
+            .filter(|i| {
+                matches!(
+                    i.state,
+                    InstanceState::Serving | InstanceState::WarmingUp | InstanceState::Draining
+                )
+            })
+            .map(|i| i.device)
+            .collect();
+        let crashed_devices: Vec<DeviceId> = self
+            .insts
+            .iter()
+            .filter(|i| i.state == InstanceState::Crashed)
+            .map(|i| i.device)
+            .collect();
+        let peak_instances = self.peak_alive;
+        let peak_context = self.peak_context;
+        let Stats {
+            outcomes,
+            rejected,
+            preemptions,
+            decoded_tokens,
+            prefill_tokens,
+            intervals,
+            kv_migrations,
+            kv_bytes,
+            kv_xfer_time,
+            per_instance_completed,
+            crashes,
+            crash_requeues,
+            scale_ups,
+            scale_downs,
+            drain_migrations,
+            warmup_time,
+            ..
+        } = self.stats;
+        ClusterReport {
+            serving: ServingReport {
+                outcomes,
+                rejected,
+                preemptions,
+                demotions,
+                decoded_tokens,
+                prefill_tokens,
+                peak_context_tokens: peak_context,
+                makespan,
+                trace: SimResult::from_intervals(makespan, n, intervals),
+            },
+            kv_migrations,
+            kv_bytes_migrated: kv_bytes,
+            kv_xfer_time,
+            per_instance_completed,
+            crashes,
+            crash_requeues,
+            scale_ups,
+            scale_downs,
+            drain_migrations,
+            warmup_time,
+            instance_seconds,
+            peak_instances,
+            instance_devices,
+            held_devices_at_end,
+            crashed_devices,
         }
     }
 }
@@ -1252,161 +1505,12 @@ impl<'a> Sim<'a> {
 /// non-crashed instance's page pool has drained. Deterministic:
 /// identical inputs produce a bit-identical report.
 pub fn simulate_cluster(cfg: &ClusterConfig, requests: &[Request]) -> ClusterReport {
-    assert!(!cfg.instances.is_empty(), "cluster needs at least one instance");
-    assert!(cfg.max_seq >= 2, "need room for a prompt and one decode position");
-    debug_assert!(
-        requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
-        "requests must be sorted by arrival time"
-    );
-    let has_prefill = cfg
-        .instances
-        .iter()
-        .any(|i| i.role == InstanceRole::Prefill);
-    let has_decode = cfg.instances.iter().any(|i| i.role == InstanceRole::Decode);
-    let has_colocated = cfg
-        .instances
-        .iter()
-        .any(|i| i.role == InstanceRole::Colocated);
-    assert!(
-        !(has_colocated && (has_prefill || has_decode)),
-        "mixing colocated with disaggregated roles is not supported"
-    );
-    assert!(
-        has_prefill == has_decode,
-        "disaggregation needs both a prefill pool and a decode pool"
-    );
-    if let Some(aus) = &cfg.autoscale {
-        assert!(aus.slots >= 1, "autoscaled instances need at least one slot");
-        assert!(aus.eval_interval > 0.0, "evaluation cadence must be positive");
-        assert!(aus.lookback > 0.0, "lookback window must be positive");
-        assert!(
-            aus.min_instances >= 1 && aus.max_instances >= aus.min_instances,
-            "need 1 <= min_instances <= max_instances"
-        );
+    let mut sim = ClusterSim::new(cfg, requests);
+    let mut lessor = NullLessor;
+    while let Some(ev) = sim.next_event() {
+        sim.process(ev, &mut lessor);
     }
-
-    let insts: Vec<Instance> = cfg
-        .instances
-        .iter()
-        .map(|spec| Instance::new(spec, cfg))
-        .collect();
-    let entry_role = if has_prefill {
-        InstanceRole::Prefill
-    } else {
-        InstanceRole::Colocated
-    };
-    let scaled_role = if has_decode {
-        InstanceRole::Decode
-    } else {
-        InstanceRole::Colocated
-    };
-    let n0 = insts.len();
-    let mut sim = Sim {
-        cfg,
-        insts,
-        router: Router::new(cfg.route),
-        stats: Stats {
-            per_instance_completed: vec![0; n0],
-            ..Default::default()
-        },
-        limbo: VecDeque::new(),
-        pool_devices: cfg
-            .autoscale
-            .as_ref()
-            .map(|a| a.device_pool.iter().copied().collect())
-            .unwrap_or_default(),
-        entry_role,
-        scaled_role,
-        last_action: f64::NEG_INFINITY,
-        recent_arrivals: VecDeque::new(),
-        outcome_ptr: 0,
-        peak_context: 0,
-        peak_alive: n0,
-    };
-    sim.run(requests);
-
-    // makespan: latest finish of real work (zero-length markers from
-    // crash/drain events don't extend the served timeline)
-    let mut makespan = 0.0f64;
-    for iv in &sim.stats.intervals {
-        if iv.finish > iv.start {
-            makespan = makespan.max(iv.finish);
-        }
-    }
-
-    // Conservation: every live pool fully drained — no page leaked
-    // across completions, preemptions, migrations, drains, or crashes
-    // (a crashed pool was wiped at the instant of death).
-    for (i, inst) in sim.insts.iter().enumerate() {
-        if inst.state == InstanceState::Crashed {
-            continue;
-        }
-        assert_eq!(
-            inst.mem.pool.sequences(),
-            0,
-            "instance {i} leaked pages for {} sequences",
-            inst.mem.pool.sequences()
-        );
-        inst.mem
-            .pool
-            .check_conservation()
-            .unwrap_or_else(|e| panic!("instance {i}: {e}"));
-    }
-    assert!(sim.limbo.is_empty(), "limbo entries leaked");
-
-    let demotions = sim.insts.iter().map(|i| i.mem.pool.demotions).sum();
-    let instance_seconds: f64 = sim
-        .insts
-        .iter()
-        .map(|i| (i.died.unwrap_or(makespan) - i.born).max(0.0))
-        .sum();
-    let n = sim.insts.len();
-    let peak_instances = sim.peak_alive;
-    let peak_context = sim.peak_context;
-    let Stats {
-        outcomes,
-        rejected,
-        preemptions,
-        decoded_tokens,
-        prefill_tokens,
-        intervals,
-        kv_migrations,
-        kv_bytes,
-        kv_xfer_time,
-        per_instance_completed,
-        crashes,
-        crash_requeues,
-        scale_ups,
-        scale_downs,
-        drain_migrations,
-        warmup_time,
-        ..
-    } = sim.stats;
-    ClusterReport {
-        serving: ServingReport {
-            outcomes,
-            rejected,
-            preemptions,
-            demotions,
-            decoded_tokens,
-            prefill_tokens,
-            peak_context_tokens: peak_context,
-            makespan,
-            trace: SimResult::from_intervals(makespan, n, intervals),
-        },
-        kv_migrations,
-        kv_bytes_migrated: kv_bytes,
-        kv_xfer_time,
-        per_instance_completed,
-        crashes,
-        crash_requeues,
-        scale_ups,
-        scale_downs,
-        drain_migrations,
-        warmup_time,
-        instance_seconds,
-        peak_instances,
-    }
+    sim.into_report()
 }
 
 // ---- scenarios and sweeps ---------------------------------------------
@@ -1709,6 +1813,26 @@ pub fn autoscale_policy() -> AutoscalePolicy {
     }
 }
 
+/// The full autoscaler preset of the diurnal scenarios (policy +
+/// cadence + cooldowns + bounds), shared by [`autoscale_cluster`] and
+/// the co-scheduled scenario (`hypermpmd::coschedule`) so the two can
+/// never drift apart. `device_pool` is the only per-scenario knob:
+/// spare devices for a standalone cluster, empty for a broker-backed
+/// one.
+pub fn autoscale_preset(device_pool: Vec<DeviceId>) -> AutoscaleConfig {
+    AutoscaleConfig {
+        policy: autoscale_policy(),
+        eval_interval: 0.25,
+        min_instances: 1,
+        max_instances: AUTOSCALE_MAX_INSTANCES,
+        slots: AUTOSCALE_SLOTS,
+        up_cooldown: 0.2,
+        down_cooldown: 0.5,
+        lookback: 2.0,
+        device_pool,
+    }
+}
+
 /// Cluster config of the autoscale comparison. `elastic = false` is
 /// the static-peak-provisioning baseline ([`AUTOSCALE_STATIC_INSTANCES`]
 /// always-on instances); `elastic = true` starts at
@@ -1736,17 +1860,7 @@ pub fn autoscale_cluster(
             slots: AUTOSCALE_SLOTS,
         })
         .collect();
-    let autoscale = elastic.then(|| AutoscaleConfig {
-        policy: autoscale_policy(),
-        eval_interval: 0.25,
-        min_instances: 1,
-        max_instances: AUTOSCALE_MAX_INSTANCES,
-        slots: AUTOSCALE_SLOTS,
-        up_cooldown: 0.2,
-        down_cooldown: 0.5,
-        lookback: 2.0,
-        device_pool: places[n0..].to_vec(),
-    });
+    let autoscale = elastic.then(|| autoscale_preset(places[n0..].to_vec()));
     ClusterConfig {
         topology,
         instances,

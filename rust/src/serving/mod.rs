@@ -48,13 +48,15 @@ pub use autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleObservation, ScalingP
 pub use batcher::{plan_refill, simulate, Admission, CostModel, ServingConfig};
 pub use cluster::{
     autoscale_cluster, autoscale_comparison, autoscale_crash_scenario, autoscale_device,
-    autoscale_policy, autoscale_scenario, autoscale_slo, autoscale_workload, cluster_device,
+    autoscale_policy, autoscale_preset, autoscale_scenario, autoscale_slo, autoscale_workload,
+    cluster_device,
     cluster_rate_sweep, cluster_slo, crossover_cluster, crossover_comparison, crossover_scenario,
     long_prompt_workload, run_cluster_scenario, simulate_cluster, spread_placement,
     try_spread_placement, AutoscaleSummary, ClusterConfig, ClusterFabric, ClusterMode,
-    ClusterReport, ClusterScenario, CrossoverSummary, InstanceCrash, InstanceRole, InstanceSpec,
-    AUTOSCALE_INITIAL_INSTANCES, AUTOSCALE_MAX_INSTANCES, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
-    AUTOSCALE_SLOTS, AUTOSCALE_STATIC_INSTANCES, CLUSTER_RATES,
+    ClusterReport, ClusterScenario, CrossoverSummary, DeviceLessor, InstanceCrash, InstanceRole,
+    InstanceSpec, NullLessor, AUTOSCALE_INITIAL_INSTANCES, AUTOSCALE_MAX_INSTANCES,
+    AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD, AUTOSCALE_SLOTS, AUTOSCALE_STATIC_INSTANCES,
+    CLUSTER_RATES,
 };
 pub use memory::{migrate_pages, MemoryPolicy, PagePool, SeqPages, ServingMemory};
 pub use metrics::{

@@ -37,4 +37,10 @@ pub mod tags {
     /// Serving: zero-length marker at the instant a drained instance
     /// releases its device.
     pub const DRAIN: u64 = 13;
+    /// Co-scheduling: one elastic-training step on a leased device
+    /// (every device the trainer holds carries the interval).
+    pub const TRAIN_STEP: u64 = 14;
+    /// Co-scheduling: the trainer redistributing its sharded state
+    /// after a lease change (devices in the union group are busy).
+    pub const RESHARD: u64 = 15;
 }

@@ -8,7 +8,7 @@ use super::engine::{Engine, SimResult};
 use crate::util::json::{Json, JsonObj};
 
 /// Tag names for trace events; index = tag value used in `add_task`.
-pub const TAG_NAMES: [&str; 14] = [
+pub const TAG_NAMES: [&str; 16] = [
     "compute",
     "comm",
     "prefetch",
@@ -23,6 +23,8 @@ pub const TAG_NAMES: [&str; 14] = [
     "warmup",
     "crash",
     "drain",
+    "train_step",
+    "reshard",
 ];
 
 /// Human-readable name for a task tag.

@@ -1,0 +1,183 @@
+//! Elastic training job: the cost model of a trainer that runs on
+//! whatever device lease it currently holds (ISSUE 5).
+//!
+//! The co-scheduler (`hypermpmd::coschedule`) runs training as a
+//! second tenant on the serving supernode, harvesting diurnal serving
+//! troughs. This module prices the three things such a job does:
+//!
+//! - **a step** — one omni-modal/MoE training step scheduled over the
+//!   held devices with `hypermpmd::schedule_dynamic` (the Fig 4b
+//!   dynamic list scheduler: more devices → shorter step, up to the
+//!   workload's critical path), plus a gradient all-reduce over the
+//!   actual device group priced by `collectives::cost` — the fabric
+//!   term of a step;
+//! - **a reconfiguration** — when the lease grows or shrinks, the
+//!   sharded training state (weights + master copy + optimizer
+//!   moments) redistributes from the old DP layout to the new one.
+//!   The plan comes from `hypershard::resharding::plan_reshard` (an
+//!   all-to-all between the two `dp` partitionings) and is priced by
+//!   `reshard_time` over the *union* device group — on the supernode
+//!   fabric this is milliseconds, on legacy RoCE it is the term that
+//!   eats the harvest;
+//! - **a checkpoint** — shrinking to zero devices gathers the state
+//!   into a single-shard checkpoint layout; resuming later reshards
+//!   from that checkpoint to the new lease.
+
+use crate::collectives;
+use crate::graph::CollectiveKind;
+use crate::hypermpmd::{schedule_dynamic, OmniModalWorkload};
+use crate::hypershard::layout::{DimSharding, ShardSpec};
+use crate::hypershard::resharding::{plan_reshard, reshard_time};
+use crate::supernode::{DeviceId, Topology};
+
+/// The scaled-down training job the co-scheduled scenarios run: an
+/// omni-modal step shape plus the two byte counts that touch the
+/// fabric.
+#[derive(Debug, Clone)]
+pub struct ElasticTrainJob {
+    /// Per-step task graph; each held device is one scheduling group.
+    pub workload: OmniModalWorkload,
+    /// Bytes each rank all-reduces per step (gradient sync).
+    pub grad_bytes: f64,
+    /// Bytes of sharded training state (weights + fp32 master +
+    /// optimizer moments) redistributed on every lease change.
+    pub state_bytes: f64,
+}
+
+/// The pure-DP partitioning of the training state over `shards`
+/// devices. Axis names encode the shard count so two different counts
+/// compare as different axes — exactly the re-shard (all-to-all) case
+/// of [`plan_reshard`].
+fn dp_spec(shards: usize) -> ShardSpec {
+    ShardSpec {
+        dims: vec![
+            DimSharding::Split(vec![format!("dp{shards}")]),
+            DimSharding::Replicated,
+        ],
+        shard_counts: vec![shards, 1],
+        replicated_axes: vec![],
+        num_shards: shards,
+        replication: 1,
+    }
+}
+
+impl ElasticTrainJob {
+    /// Compute time of one step on `devices` scheduling groups (no
+    /// fabric term). Strictly the `schedule_dynamic` makespan, so the
+    /// Python mirror can reproduce it bit-for-bit.
+    pub fn compute_time(&self, devices: usize) -> f64 {
+        assert!(devices >= 1, "a training step needs at least one device");
+        schedule_dynamic(&self.workload, devices).makespan
+    }
+
+    /// Gradient-sync time of one step over the actual device group.
+    pub fn sync_time(&self, topo: &Topology, group: &[DeviceId]) -> f64 {
+        collectives::cost(topo, CollectiveKind::AllReduce, self.grad_bytes, group).time
+    }
+
+    /// Wall time of one training step on the held lease.
+    pub fn step_time(&self, topo: &Topology, group: &[DeviceId]) -> f64 {
+        self.compute_time(group.len()) + self.sync_time(topo, group)
+    }
+
+    /// Time to redistribute the training state when the lease changes
+    /// from `old` to `new` devices. `checkpoint_shards` is the layout
+    /// the state was left in when the job last ran (used when resuming
+    /// from zero devices); shrinking to zero gathers into a one-shard
+    /// checkpoint. Identical shard counts (including the first-ever
+    /// configuration) cost nothing.
+    pub fn reconfig_time(
+        &self,
+        topo: &Topology,
+        old: &[DeviceId],
+        new: &[DeviceId],
+        checkpoint_shards: usize,
+    ) -> f64 {
+        let src_shards = if old.is_empty() {
+            checkpoint_shards
+        } else {
+            old.len()
+        };
+        let dst_shards = if new.is_empty() { 1 } else { new.len() };
+        if src_shards == 0 || src_shards == dst_shards {
+            return 0.0;
+        }
+        let plan = plan_reshard(&dp_spec(src_shards), &dp_spec(dst_shards));
+        let mut group: Vec<DeviceId> = old.to_vec();
+        for &d in new {
+            if !group.contains(&d) {
+                group.push(d);
+            }
+        }
+        reshard_time(&plan, topo, &group, self.state_bytes, src_shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> ElasticTrainJob {
+        ElasticTrainJob {
+            workload: OmniModalWorkload::paper_shape(16),
+            grad_bytes: 1e9,
+            state_bytes: 64e9,
+        }
+    }
+
+    fn group(topo: &Topology, n: usize) -> Vec<DeviceId> {
+        crate::serving::cluster::spread_placement(topo, n)
+    }
+
+    #[test]
+    fn more_devices_shorten_the_step() {
+        let j = job();
+        let t4 = j.compute_time(4);
+        let t8 = j.compute_time(8);
+        assert!(t8 < t4, "t8={t8} t4={t4}");
+        // but never below the workload's critical path
+        assert!(j.compute_time(64) > 0.0);
+    }
+
+    #[test]
+    fn step_time_adds_a_fabric_term() {
+        let j = job();
+        let sn = Topology::matrix384();
+        let g = group(&sn, 8);
+        assert!(j.step_time(&sn, &g) > j.compute_time(8));
+        // the sync term is what legacy fabrics pay more for
+        let lg = Topology::legacy_cluster(32);
+        let gl = group(&lg, 8);
+        assert!(j.sync_time(&lg, &gl) > 3.0 * j.sync_time(&sn, &g));
+    }
+
+    #[test]
+    fn reconfig_prices_the_fabric_and_degenerates_to_zero() {
+        let j = job();
+        let sn = Topology::matrix384();
+        let lg = Topology::legacy_cluster(32);
+        let old_sn = group(&sn, 8);
+        let new_sn = group(&sn, 12);
+        let t_sn = j.reconfig_time(&sn, &old_sn, &new_sn, 0);
+        let t_lg = j.reconfig_time(&lg, &group(&lg, 8), &group(&lg, 12), 0);
+        assert!(t_sn > 0.0);
+        assert!(t_lg > 5.0 * t_sn, "legacy {t_lg} vs supernode {t_sn}");
+        // same shard count: nothing moves
+        assert_eq!(j.reconfig_time(&sn, &old_sn, &old_sn, 0), 0.0);
+        // first-ever configuration: nothing to move yet
+        assert_eq!(j.reconfig_time(&sn, &[], &new_sn, 0), 0.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_costs_both_ways() {
+        let j = job();
+        let sn = Topology::matrix384();
+        let held = group(&sn, 8);
+        // shrink to zero: gather into the 1-shard checkpoint
+        let down = j.reconfig_time(&sn, &held, &[], 0);
+        assert!(down > 0.0);
+        // resume from that checkpoint onto a fresh lease
+        let up = j.reconfig_time(&sn, &[], &held, 1);
+        assert!(up > 0.0);
+    }
+}

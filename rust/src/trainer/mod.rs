@@ -4,12 +4,14 @@
 
 pub mod data;
 pub mod driver;
+pub mod elastic;
 pub mod moe;
 pub mod pipeline;
 pub mod scenarios;
 
 pub use data::{bigram_entropy, Corpus};
 pub use driver::{render_curve, train, LossPoint, TrainOptions, TrainReport};
+pub use elastic::ElasticTrainJob;
 pub use moe::RoutingStats;
 pub use pipeline::{gpipe, gpipe_sweep, one_f_one_b_bubble, PipelineReport};
 pub use scenarios::{OffloadTrainingScenario, TpOverheadScenario};

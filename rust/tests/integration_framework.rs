@@ -93,8 +93,8 @@ fn rl_single_controller_never_loses_to_gang() {
             };
             let tasks = w.generate((models * rollouts) as u64);
             let devices = models * 8;
-            let gang = schedule_gang(&tasks, devices);
-            let sc = schedule_single_controller(&tasks, devices, 8);
+            let gang = schedule_gang(&tasks, devices).expect("one device per model");
+            let sc = schedule_single_controller(&tasks, devices, 8).expect("one device per model");
             Check::from_bool(
                 sc.makespan <= gang.makespan * 1.001,
                 &format!("sc {} > gang {}", sc.makespan, gang.makespan),

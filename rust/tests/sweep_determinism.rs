@@ -1,13 +1,16 @@
-//! Determinism regression (ISSUE 4 satellite): `cluster_rate_sweep`
-//! over the crossover scenario AND the new elastic-autoscale scenario
-//! produce bit-identical reports whether the sweep runs sequentially
-//! (`HP_SWEEP_THREADS=1`) or fanned across 8 workers.
+//! Determinism regression (ISSUE 4 satellite, extended by ISSUE 5):
+//! `cluster_rate_sweep` over the crossover scenario AND the
+//! elastic-autoscale scenario AND `cosched_rate_sweep` over the
+//! co-scheduled scenario produce bit-identical reports whether the
+//! sweep runs sequentially (`HP_SWEEP_THREADS=1`) or fanned across 8
+//! workers.
 //!
 //! Like `sweep_env.rs`, this binary holds exactly one test: the
 //! assertions mutate a process-global environment variable, and
 //! concurrent setenv/getenv from parallel tests is undefined behavior
 //! in glibc — an isolated binary is the only safe home.
 
+use hyperparallel::hypermpmd::coschedule::{cosched_rate_sweep, cosched_scenario, CoschedMode};
 use hyperparallel::serving::{
     autoscale_scenario, autoscale_slo, cluster_rate_sweep, cluster_slo, crossover_scenario,
     ClusterFabric, ClusterMode, ClusterScenario, OperatingPoint, Slo, CLUSTER_RATES,
@@ -69,5 +72,18 @@ fn cluster_sweeps_bit_identical_across_worker_counts() {
         &[18.0, 24.0],
         &autoscale_slo(),
     );
+    // ...and the ISSUE 5 co-scheduled path: broker mediation, trainer
+    // preemption/resharding, and the serving events must interleave
+    // identically regardless of sweep parallelism
+    let cosched = cosched_scenario(ClusterFabric::Supernode, CoschedMode::Cosched);
+    let slo = autoscale_slo();
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let seq = cosched_rate_sweep(&cosched, &[18.0, 24.0], &slo);
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let par = cosched_rate_sweep(&cosched, &[18.0, 24.0], &slo);
+    let (seq_ops, seq_steps): (Vec<OperatingPoint>, Vec<u64>) = seq.into_iter().unzip();
+    let (par_ops, par_steps): (Vec<OperatingPoint>, Vec<u64>) = par.into_iter().unzip();
+    assert_bit_identical("cosched supernode", &seq_ops, &par_ops);
+    assert_eq!(seq_steps, par_steps, "cosched: training step counts");
     std::env::remove_var("HP_SWEEP_THREADS");
 }

@@ -29,9 +29,14 @@ above value*(1+frac). Baseline values are set at (or below) the bounds
 seed, so a green test suite implies a green gate; the gate's job is to
 catch silent erosion of the serving operating point between PRs.
 
+`--current` may repeat: the metric objects of all given files are
+merged (later files win on duplicate names) before gating, so one
+baseline can gate several bench binaries (serving + cosched).
+
 Usage:
     python3 tools/bench_regression.py \
-        --current BENCH_serving.json --baseline BENCH_baseline.json
+        --current BENCH_serving.json --current BENCH_cosched.json \
+        --baseline BENCH_baseline.json
 """
 
 import argparse
@@ -49,7 +54,12 @@ def load(path):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--current", required=True, help="bench output JSON (with a 'metrics' object)")
+    ap.add_argument(
+        "--current",
+        required=True,
+        action="append",
+        help="bench output JSON (with a 'metrics' object); may repeat — metrics are merged",
+    )
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
     ap.add_argument(
         "--default-frac",
@@ -59,7 +69,9 @@ def main():
     )
     args = ap.parse_args()
 
-    current = load(args.current).get("metrics", {})
+    current = {}
+    for path in args.current:
+        current.update(load(path).get("metrics", {}))
     baseline = load(args.baseline).get("metrics", {})
     if not baseline:
         sys.exit(f"bench_regression: {args.baseline} has no gated metrics")

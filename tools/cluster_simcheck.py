@@ -499,12 +499,17 @@ class Cluster:
         return sum(1 for i in self.insts
                    if i.role == role and i.state in (SERVING, WARMING))
 
-    def spawn_instance(self, t):
+    def spawn_instance(self, t, lessor=None):
         """Scale up by one instance of the scaled role, paying the
-        model-load warm-up transfer over the actual fabric tier."""
-        if not self.pool_devices:
-            return False
-        dev = self.pool_devices.popleft()
+        model-load warm-up transfer over the actual fabric tier. The
+        private pool is tried first, then the lessor (ISSUE 5 broker),
+        which records unmet demand on failure."""
+        if self.pool_devices:
+            dev = self.pool_devices.popleft()
+        else:
+            dev = lessor.lease() if lessor is not None else None
+            if dev is None:
+                return False
         aus = self.autoscale
         serving_any = [i for i in self.insts if i.state == SERVING]
         src_dev = serving_any[0].device if serving_any else dev
@@ -539,7 +544,7 @@ class Cluster:
         for e, _ in jobs[len(keep):]:
             self.redispatch(e, drain=True)
 
-    def autoscale_tick(self, t):
+    def autoscale_tick(self, t, lessor=None):
         aus = self.autoscale
         serving = self.serving_ids(self.scaled_role)
         warming = self.warming_count(self.scaled_role)
@@ -570,7 +575,7 @@ class Cluster:
             for _ in range(delta):
                 if n >= aus["max"]:
                     break
-                if not self.spawn_instance(t):
+                if not self.spawn_instance(t, lessor):
                     break
                 spawned = True
                 n += 1
@@ -592,7 +597,7 @@ class Cluster:
             if drained:
                 self.last_action = t
 
-    def crash_instance(self, sel, t):
+    def crash_instance(self, sel, t, lessor=None):
         """Kill the sel-th (mod size) member of the currently-serving
         set — ordinal targeting, because absolute indices race against
         elastic churn (the named instance may already be drained).
@@ -659,7 +664,7 @@ class Cluster:
         # (no cooldown: failure replacement is not a voluntary action)
         if self.autoscale is not None and was_scaled and \
                 self.alive_count(self.scaled_role) < self.autoscale["max"]:
-            self.spawn_instance(t)
+            self.spawn_instance(t, lessor)
         self.resolve_limbo()
 
     # -- event handlers ---------------------------------------------------
@@ -783,91 +788,96 @@ class Cluster:
 
     # -- main loop ---------------------------------------------------------
 
-    def run(self, requests):
-        ni = 0
-        fi = 0
-        aus = self.autoscale
-        next_tick = aus["eval_interval"] if aus else None
-        while True:
-            # candidate events: (time, class, idx); class order breaks
-            # ties — arrival < work-end < crash < autoscale tick
-            best = None
-            if ni < len(requests):
-                best = (requests[ni]["arrival"], 0, 0)
-            for k, inst in enumerate(self.insts):
-                if inst.work_end is not None:
-                    cand = (inst.work_end[0], 1, k)
-                    if best is None or cand < best:
-                        best = cand
-            if fi < len(self.failures):
-                cand = (self.failures[fi][0], 2, fi)
+    # Steppable form (mirror of ClusterSim::{next_event,process}): the
+    # co-scheduler interleaves these with the training tenant.
+
+    def next_event(self):
+        """(time, class, idx) of the next internal event, or None. A
+        pending tick alone never keeps the sim alive."""
+        best = None
+        if self.ni < len(self.requests):
+            best = (self.requests[self.ni]["arrival"], 0, 0)
+        for k, inst in enumerate(self.insts):
+            if inst.work_end is not None:
+                cand = (inst.work_end[0], 1, k)
                 if best is None or cand < best:
                     best = cand
-            if best is None:
-                break
-            if next_tick is not None and (next_tick, 3, 0) < best:
-                best = (next_tick, 3, 0)
-            t, cls, idx = best
-            if cls == 0:
-                req = requests[ni]
-                ni += 1
-                self.recent_arrivals.append(t)
-                # fresh arrivals take the same admission path as
-                # crash/drain re-queues: route to a serving instance
-                # (the kick-drain below wakes it), wait in limbo while
-                # capacity warms, or reject if no capacity can ever come
-                self.route_requeue(dict(
-                    id=req["id"], tenant=req["tenant"], arrival=req["arrival"],
-                    prompt_len=req["prompt"], output=req["output"],
-                    produced=0, first=None, preemptions=0, kv_src=None))
-            elif cls == 1:
-                k = idx
-                kind = self.insts[k].work_end[1]
-                if kind == "iter":
-                    self.finish_iteration(k, t)
-                elif kind == "ingest":
-                    self.finish_ingest(k, t)
-                else:
-                    self.finish_warmup(k, t)
-                if self.insts[k].work_end is None:
-                    self.start_work(k, t)
-            elif cls == 2:
-                fi += 1
-                self.crash_instance(self.failures[idx][1], t)
+        if self.fi < len(self.failures):
+            cand = (self.failures[self.fi][0], 2, self.fi)
+            if best is None or cand < best:
+                best = cand
+        if best is None:
+            return None
+        if self.next_tick is not None and (self.next_tick, 3, 0) < best:
+            best = (self.next_tick, 3, 0)
+        return best
+
+    def process_event(self, ev, lessor=None):
+        aus = self.autoscale
+        t, cls, idx = ev
+        if cls == 0:
+            req = self.requests[self.ni]
+            self.ni += 1
+            self.recent_arrivals.append(t)
+            # fresh arrivals take the same admission path as
+            # crash/drain re-queues: route to a serving instance
+            # (the kick-drain below wakes it), wait in limbo while
+            # capacity warms, or reject if no capacity can ever come
+            self.route_requeue(dict(
+                id=req["id"], tenant=req["tenant"], arrival=req["arrival"],
+                prompt_len=req["prompt"], output=req["output"],
+                produced=0, first=None, preemptions=0, kv_src=None))
+        elif cls == 1:
+            k = idx
+            kind = self.insts[k].work_end[1]
+            if kind == "iter":
+                self.finish_iteration(k, t)
+            elif kind == "ingest":
+                self.finish_ingest(k, t)
             else:
-                self.autoscale_tick(t)
-                next_tick += aus["eval_interval"]
-            # drain cross-instance effects: page handoffs wake the
-            # source instance; migrations/requeues wake the target
-            while self.handoffs or self.kick:
-                hs, self.handoffs = self.handoffs, []
-                for sid, src in hs:
-                    self.insts[src].release(sid)
-                    self.kick.add(src)
-                ks, self.kick = sorted(self.kick), set()
-                for k2 in ks:
-                    if self.insts[k2].work_end is None:
-                        self.start_work(k2, t)
-            # a drained instance releases its device once its parked
-            # pages are gone and nothing is in flight
-            for k2, inst in enumerate(self.insts):
-                if inst.state == DRAINING and inst.work_end is None and \
-                        not inst.queue and not inst.ingest and \
-                        inst.active_count() == 0 and not inst.ledger:
-                    inst.state = RELEASED
-                    inst.died = t
-                    self.intervals.append([k2, t, t, "drain"])
+                self.finish_warmup(k, t)
+            if self.insts[k].work_end is None:
+                self.start_work(k, t)
+        elif cls == 2:
+            self.fi += 1
+            self.crash_instance(self.failures[idx][1], t, lessor)
+        else:
+            self.autoscale_tick(t, lessor)
+            self.next_tick = t + aus["eval_interval"]
+        # drain cross-instance effects: page handoffs wake the
+        # source instance; migrations/requeues wake the target
+        while self.handoffs or self.kick:
+            hs, self.handoffs = self.handoffs, []
+            for sid, src in hs:
+                self.insts[src].release(sid)
+                self.kick.add(src)
+            ks, self.kick = sorted(self.kick), set()
+            for k2 in ks:
+                if self.insts[k2].work_end is None:
+                    self.start_work(k2, t)
+        # a drained instance releases its device once its parked
+        # pages are gone and nothing is in flight
+        for k2, inst in enumerate(self.insts):
+            if inst.state == DRAINING and inst.work_end is None and \
+                    not inst.queue and not inst.ingest and \
+                    inst.active_count() == 0 and not inst.ledger:
+                inst.state = RELEASED
+                inst.died = t
+                self.intervals.append([k2, t, t, "drain"])
+                if lessor is None or not lessor.give_back(inst.device):
                     self.pool_devices.append(inst.device)
-            total = sum(i.cur_ctx for i in self.insts)
-            self.peak_ctx = max(self.peak_ctx, total)
-            alive = sum(1 for i in self.insts
-                        if i.state in (SERVING, WARMING, DRAINING))
-            self.peak_alive = max(self.peak_alive, alive)
-            # ticks stop once nothing can generate further work
-            if next_tick is not None and ni >= len(requests) and \
-                    fi >= len(self.failures) and \
-                    all(i.work_end is None for i in self.insts):
-                next_tick = None
+        total = sum(i.cur_ctx for i in self.insts)
+        self.peak_ctx = max(self.peak_ctx, total)
+        alive = sum(1 for i in self.insts
+                    if i.state in (SERVING, WARMING, DRAINING))
+        self.peak_alive = max(self.peak_alive, alive)
+        # ticks stop once nothing can generate further work
+        if self.next_tick is not None and self.ni >= len(self.requests) and \
+                self.fi >= len(self.failures) and \
+                all(i.work_end is None for i in self.insts):
+            self.next_tick = None
+
+    def finalize(self):
         # makespan: latest finish of real work (zero-length markers from
         # crash/drain events don't extend the served timeline)
         self.makespan = 0.0
@@ -881,6 +891,23 @@ class Cluster:
             assert not inst.ledger, f"inst {k} leaked {inst.ledger}"
             assert inst.hbm_free == inst.hbm_capacity
         assert not self.limbo, "limbo entries leaked"
+
+    def run(self, requests):
+        self.bind(requests)
+        while True:
+            ev = self.next_event()
+            if ev is None:
+                break
+            self.process_event(ev)
+        self.finalize()
+
+    def bind(self, requests):
+        """Attach the request stream and reset the event cursors."""
+        self.requests = requests
+        self.ni = 0
+        self.fi = 0
+        self.next_tick = \
+            self.autoscale["eval_interval"] if self.autoscale else None
 
     def instance_seconds(self):
         total = 0.0

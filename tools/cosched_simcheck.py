@@ -1,0 +1,484 @@
+#!/usr/bin/env python3
+"""Faithful Python mirror of rust/src/hypermpmd/coschedule.rs +
+rust/src/trainer/elastic.rs (same event ordering, same cost formulas,
+same RNG via cluster_simcheck) — validates the ISSUE 5 co-scheduling
+crossover in containers without a Rust toolchain, and calibrates the
+checked-in bounds. Keep in sync with the Rust side when semantics
+change.
+
+Expected output on the checked-in presets (seed 42, 32-device pool):
+  supernode: co-scheduling holds the 0.5 s p99 TTFT serving SLO and
+             completes >= 1.4x the training steps of the static
+             half/half partition (16 serving / 16 training)
+  legacy:    the advantage collapses (reshards move 96 GiB of state
+             over ~1/15 the bandwidth) — gate: step gain <= 1.1x and
+             at least 0.25 below the supernode gain
+"""
+import math
+from collections import deque
+
+from cluster_simcheck import (
+    AUTOSCALE_CFG, Cluster, Cost, FABRICS, Instance, COLOCATED,
+    autoscale_requests, operating_point, spread_device, tier_between,
+)
+
+# ---- presets (mirror of coschedule.rs constants) -----------------------
+
+COSCHED_POOL = 32
+COSCHED_STATIC_SERVING = COSCHED_POOL // 2
+COSCHED_RESERVE = 1
+COSCHED_MICROBATCHES = 40
+
+# cosched_train_job's expert-parallel MoE step: independent expert
+# groups, (time_per_microbatch, inputs). Independence keeps the list
+# scheduler near-perfectly packed at every lease size the pool allows,
+# so step time stays ~1/devices.
+MODULES = [
+    (60e-3, []),   # text experts
+    (75e-3, []),   # vision experts
+    (65e-3, []),   # audio experts
+    (55e-3, []),   # router + shared ffn
+    (80e-3, []),   # decoder experts
+]
+
+TRAIN_JOB = dict(
+    grad=1.0 * (1 << 30),     # per-step gradient all-reduce bytes
+    state=96.0 * (1 << 30),   # resharded on every lease change
+)
+
+TRAIN_MIN_DEVICES = 2
+TRAIN_GROW_COOLDOWN = 1.0
+
+
+# ---- hypermpmd::schedule_dynamic mirror --------------------------------
+
+def schedule_dynamic_makespan(n_groups, microbatches=None):
+    """Greedy list scheduler of inter.rs: ready tasks longest-first
+    onto the earliest-free group. Returns the makespan only."""
+    if microbatches is None:
+        microbatches = COSCHED_MICROBATCHES
+    nm = len(MODULES)
+    total = microbatches * nm
+    done = [None] * total
+
+    def idx(mb, mi):
+        return mb * nm + mi
+
+    group_free = [0.0] * n_groups
+    scheduled = 0
+    while scheduled < total:
+        ready = []
+        for mb in range(microbatches):
+            for mi, (_, inputs) in enumerate(MODULES):
+                if done[idx(mb, mi)] is not None:
+                    continue
+                if all(done[idx(mb, i)] is not None for i in inputs):
+                    ready.append((mb, mi))
+        assert ready, "deadlock in dynamic schedule"
+        ready.sort(key=lambda x: (-MODULES[x[1]][0], x[0], x[1]))
+        for mb, mi in ready:
+            t, inputs = MODULES[mi]
+            dep_ready = 0.0
+            for i in inputs:
+                dep_ready = max(dep_ready, done[idx(mb, i)])
+            g = min(range(n_groups), key=lambda k: group_free[k])
+            start = max(group_free[g], dep_ready)
+            finish = start + t
+            group_free[g] = finish
+            done[idx(mb, mi)] = finish
+            scheduled += 1
+    return max(group_free)
+
+
+# ---- collectives::cost mirror ------------------------------------------
+
+TIER_RANK = {"local": 0, "board": 1, "rack": 2, "cross_rack": 3}
+
+
+def bottleneck_tier(group):
+    worst = "local"
+    for i in range(len(group)):
+        for j in range(i + 1, len(group)):
+            t = tier_between(group[i], group[j])
+            if TIER_RANK[t] > TIER_RANK[worst]:
+                worst = t
+    return worst
+
+
+def _ring(kind, b, p, bw, lat, hops):
+    pf = float(p)
+    alpha = lat * hops
+    beta = 1.0 / bw
+    if kind == "all_reduce":
+        return 2.0 * (pf - 1.0) * (alpha + b / pf * beta)
+    if kind in ("all_gather", "reduce_scatter", "all_to_all"):
+        return (pf - 1.0) * (alpha + b / pf * beta)
+    if kind == "broadcast":
+        return (pf - 1.0) * alpha + b * beta
+    return alpha + b * beta
+
+
+def _tree(kind, b, p, bw, lat, hops):
+    steps = math.ceil(math.log2(p))
+    alpha = lat * hops
+    beta = 1.0 / bw
+    if kind == "all_reduce":
+        return 2.0 * steps * (alpha + b * beta)
+    if kind in ("all_gather", "reduce_scatter"):
+        return steps * (alpha + b * beta / 2.0)
+    if kind in ("all_to_all", "broadcast"):
+        return steps * (alpha + b * beta)
+    return alpha + b * beta
+
+
+def _mesh(kind, b, p, bw, lat, hops):
+    pf = float(p)
+    alpha = lat * hops
+    beta = 1.0 / bw
+    if kind == "all_reduce":
+        return 2.0 * (alpha + (pf - 1.0) / pf * b * beta)
+    if kind in ("all_gather", "reduce_scatter", "all_to_all"):
+        return alpha + (pf - 1.0) / pf * b * beta
+    return alpha + b * beta
+
+
+def coll_cost(fabric, kind, b, group):
+    p = max(len(group), 1)
+    if p <= 1:
+        return 0.0
+    tier = bottleneck_tier(group)
+    bw, lat, hops = FABRICS[fabric][tier]
+    cands = [_ring(kind, b, p, bw, lat, hops), _tree(kind, b, p, bw, lat, hops)]
+    if fabric == "supernode":
+        cands.append(_mesh(kind, b, p, bw, lat, hops))
+    else:
+        cands.append(float("inf"))
+    best = cands[0]
+    for c in cands[1:]:
+        if c < best:
+            best = c
+    return best
+
+
+def reconfig_time(fabric, job, old, new, checkpoint_shards):
+    """ElasticTrainJob::reconfig_time: all-to-all of the sharded state
+    over the union group when the shard count changes."""
+    src = checkpoint_shards if not old else len(old)
+    dst = 1 if not new else len(new)
+    if src == 0 or src == dst:
+        return 0.0
+    union = list(old)
+    for d in new:
+        if d not in union:
+            union.append(d)
+    return coll_cost(fabric, "all_to_all", job["state"] / max(src, 1), union)
+
+
+# ---- the device-lease broker -------------------------------------------
+
+class Broker:
+    def __init__(self, devices, reserve):
+        self.free = deque(devices)
+        self.reserve = reserve
+        self.misses = 0
+        self.granted = 0
+        self.returned = 0
+        # a lease failed since the last mediation: serving wants a
+        # device now (raises the free target even with reserve == 0)
+        self.demand = False
+
+    def lease(self):
+        if self.free:
+            self.granted += 1
+            return self.free.popleft()
+        self.misses += 1
+        self.demand = True
+        return None
+
+    def give_back(self, dev):
+        self.free.append(dev)
+        self.returned += 1
+        return True
+
+    def harvestable(self):
+        return max(len(self.free) - self.reserve, 0)
+
+    def take(self, n):
+        n = min(n, len(self.free))
+        return [self.free.popleft() for _ in range(n)]
+
+
+# ---- the elastic training tenant ---------------------------------------
+
+IDLE, STEPPING, RESHARDING, FINISHED = "idle", "step", "reshard", "fin"
+
+
+class Trainer:
+    def __init__(self, fabric, job, min_devices, grow_cooldown, train_until):
+        self.fabric = fabric
+        self.job = job
+        self.min_devices = min_devices
+        self.grow_cooldown = grow_cooldown
+        self.train_until = train_until
+        self.devices = []
+        self.last_shards = 0
+        self.phase = IDLE
+        self.phase_start = None
+        self.phase_end = None
+        self.leaving = []
+        self.union = []
+        self.pending = 0
+        self.released = []
+        self.last_grow = float("-inf")
+        self.steps = 0
+        self.steps_dl = 0
+        self.reshards = 0
+        self.reshard_sec = 0.0
+        self.dev_step_sec = 0.0
+        self.peak = 0
+        self.cache = {}
+        self.intervals = []   # (device, start, end, tag)
+
+    def next_time(self):
+        if self.phase in (STEPPING, RESHARDING):
+            return self.phase_end
+        return None
+
+    def step_time(self):
+        d = len(self.devices)
+        if d not in self.cache:
+            self.cache[d] = schedule_dynamic_makespan(d)
+        return self.cache[d] + coll_cost(self.fabric, "all_reduce",
+                                         self.job["grad"], self.devices)
+
+    def advance(self, t):
+        if self.phase == STEPPING:
+            self.steps += 1
+            if self.phase_end <= self.train_until:
+                self.steps_dl += 1
+            self.dev_step_sec += len(self.devices) * (self.phase_end - self.phase_start)
+            for d in self.devices:
+                self.intervals.append((d, self.phase_start, self.phase_end,
+                                       "train_step"))
+            self.phase = IDLE
+        elif self.phase == RESHARDING:
+            for d in self.union:
+                self.intervals.append((d, self.phase_start, self.phase_end,
+                                       "reshard"))
+            self.last_shards = 1 if not self.devices else len(self.devices)
+            self.released.extend(self.leaving)
+            self.leaving = []
+            self.union = []
+            self.phase = IDLE
+        else:
+            raise AssertionError("no trainer event was due")
+
+    def begin_reconfig(self, now, nxt, leaving):
+        old = list(self.devices)
+        rt = reconfig_time(self.fabric, self.job, old, nxt, self.last_shards)
+        union = list(old)
+        for d in nxt:
+            if d not in union:
+                union.append(d)
+        self.devices = nxt
+        self.peak = max(self.peak, len(self.devices))
+        if rt > 0.0:
+            self.reshards += 1
+            self.reshard_sec += rt
+            self.phase = RESHARDING
+            self.phase_start = now
+            self.phase_end = now + rt
+            self.leaving = leaving
+            self.union = union
+        else:
+            if self.devices:
+                self.last_shards = len(self.devices)
+            elif self.last_shards > 0:
+                self.last_shards = 1
+            self.released.extend(leaving)
+
+
+def mediate(now, broker, trainer):
+    """Mirror of coschedule::mediate: settle releases, convert reserve
+    deficits into preemptions, and let an idle trainer act."""
+    for d in trainer.released:
+        broker.give_back(d)
+    trainer.released = []
+    # free-device target: the reserve, raised to one by a lease miss;
+    # requests persist until a boundary applies them, and a free or
+    # in-flight device covering the target cancels stale requests
+    missed = broker.demand
+    broker.demand = False
+    in_flight = len(trainer.leaving) if trainer.phase == RESHARDING else 0
+    covered = len(broker.free) + in_flight
+    want_free = max(broker.reserve, 1 if missed else 0)
+    trainer.pending = min(max(trainer.pending, max(want_free - covered, 0)),
+                          len(trainer.devices))
+    if covered >= max(want_free, 1):
+        trainer.pending = 0
+
+    while True:
+        if trainer.phase != IDLE:
+            break
+        if now >= trainer.train_until:
+            for d in trainer.devices:
+                broker.give_back(d)
+            trainer.devices = []
+            trainer.phase = FINISHED
+            break
+        if trainer.pending > 0 and trainer.devices:
+            k = min(trainer.pending, len(trainer.devices))
+            nxt = list(trainer.devices[:len(trainer.devices) - k])
+            leaving = list(trainer.devices[len(trainer.devices) - k:])
+            trainer.pending = 0
+            trainer.begin_reconfig(now, nxt, leaving)
+            continue
+        min_run = max(trainer.min_devices, 1)
+        harvest = broker.harvestable()
+        cooled = now - trainer.last_grow >= trainer.grow_cooldown
+        if harvest > 0 and cooled and len(trainer.devices) + harvest >= min_run:
+            taken = broker.take(harvest)
+            nxt = list(trainer.devices) + taken
+            trainer.last_grow = now
+            trainer.begin_reconfig(now, nxt, [])
+            continue
+        if len(trainer.devices) >= min_run:
+            st = trainer.step_time()
+            trainer.phase = STEPPING
+            trainer.phase_start = now
+            trainer.phase_end = now + st
+            break
+        if trainer.devices:
+            leaving = list(trainer.devices)
+            trainer.begin_reconfig(now, [], leaving)
+            continue
+        break
+
+
+# ---- the co-scheduled run ----------------------------------------------
+
+def cosched_cluster(fabric, elastic, cfg=AUTOSCALE_CFG):
+    """Serving tenant of the co-scheduled scenario: PR 4's elastic
+    diurnal cluster leasing from the broker (no private pool), or the
+    static half of the half/half partition baseline."""
+    cost = Cost(cfg["kvb"], cfg["tpp"], cfg["weight"], cfg["hbm_tokens"])
+    pages = cost.hbm_pages()
+    n0 = cfg["init_i"] if elastic else COSCHED_STATIC_SERVING
+    insts = [Instance(COLOCATED, cfg["slots"], pages, spread_device(fabric, i))
+             for i in range(n0)]
+    autoscale = None
+    if elastic:
+        autoscale = dict(policy=cfg["policy"],
+                         eval_interval=cfg["eval_interval"],
+                         min=cfg["min_i"], max=cfg["max_i"],
+                         slots=cfg["slots"], up_cooldown=cfg["up_cooldown"],
+                         down_cooldown=cfg["down_cooldown"],
+                         lookback=cfg["lookback"], pool=[])
+    return Cluster(cost, insts, cfg["max_seq"], fabric, autoscale=autoscale), n0
+
+
+def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG):
+    cluster, n0 = cosched_cluster(fabric, elastic, cfg)
+    reqs = autoscale_requests(cfg)
+    cluster.bind(reqs)
+    pool = [spread_device(fabric, i) for i in range(n0, COSCHED_POOL)]
+    reserve = COSCHED_RESERVE if elastic else 0
+    broker = Broker(pool, reserve)
+    trainer = Trainer(fabric, TRAIN_JOB, TRAIN_MIN_DEVICES,
+                      TRAIN_GROW_COOLDOWN if elastic else 0.0,
+                      cfg["horizon"])
+    now = 0.0
+    while True:
+        mediate(now, broker, trainer)
+        se = cluster.next_event()
+        tt = trainer.next_time()
+        if se is None and tt is None:
+            break
+        if tt is None or (se is not None and se[0] <= tt):
+            now = se[0]
+            cluster.process_event(se, broker)
+        else:
+            now = tt
+            trainer.advance(tt)
+    mediate(now, broker, trainer)
+    cluster.finalize()
+    assert not trainer.devices, "trainer must return its lease at drain"
+
+    # lease conservation: every pool device is exactly one of
+    # broker-free / serving-held / crashed at drain
+    from cluster_simcheck import CRASHED, DRAINING, RELEASED, SERVING, WARMING
+    held = [i.device for i in cluster.insts
+            if i.state in (SERVING, WARMING, DRAINING)]
+    crashed = [i.device for i in cluster.insts if i.state == CRASHED]
+    accounted = list(broker.free) + held + crashed
+    assert len(accounted) == len(set(accounted)) == COSCHED_POOL, \
+        f"lease conservation violated: {len(accounted)} accounted"
+
+    # no device serves and trains at once: overlay both tenants'
+    # intervals per device, comparing each interval against the other
+    # tenant's running max finish (an overlap cannot hide behind a
+    # same-tenant interval that sorts between the two)
+    by_dev = {}
+    for k, inst in enumerate(cluster.insts):
+        for r, s, f, _tag in cluster.intervals:
+            if r == k:
+                by_dev.setdefault(inst.device, []).append((s, f, "serve"))
+    for d, s, f, _tag in trainer.intervals:
+        by_dev.setdefault(d, []).append((s, f, "train"))
+    for dev, ivs in by_dev.items():
+        ivs.sort()
+        max_fin = {"serve": float("-inf"), "train": float("-inf")}
+        for s, f, tenant in ivs:
+            other = "train" if tenant == "serve" else "serve"
+            assert max_fin[other] <= s + 1e-12, \
+                f"device {dev}: {other} overlaps {tenant} ({max_fin[other]} > {s})"
+            max_fin[tenant] = max(max_fin[tenant], f)
+    return cluster, trainer, broker
+
+
+def describe(fabric, elastic, cfg=AUTOSCALE_CFG):
+    cluster, trainer, broker = run_cosched(fabric, elastic, cfg)
+    op = operating_point(cluster, cfg["mean_rate"], *cfg["slo"])
+    label = f"{fabric} {'cosched' if elastic else 'static-half'}"
+    print(f"  {label:<22} done {op['completed']:>4} rej {op['rejected']:>3} "
+          f"p99ttft {op['p99_ttft']:7.4f} slo {op['attains']!s:<5} | "
+          f"steps {trainer.steps_dl:>4} reshards {trainer.reshards:>3} "
+          f"({trainer.reshard_sec:6.2f}s) peak-dev {trainer.peak:>2} "
+          f"misses {broker.misses}")
+    return op, trainer, broker
+
+
+if __name__ == "__main__":
+    cfg = AUTOSCALE_CFG
+    print(f"=== co-scheduled training + serving ({COSCHED_POOL}-device pool, "
+          f"static half/half = {COSCHED_STATIC_SERVING}/{COSCHED_STATIC_SERVING}) ===")
+    results = {}
+    for fabric in ["supernode", "legacy"]:
+        for elastic in [True, False]:
+            results[(fabric, elastic)] = describe(fabric, elastic)
+
+    slo_ttft = cfg["slo"][0]
+    sn_co, sn_st = results[("supernode", True)], results[("supernode", False)]
+    lg_co, lg_st = results[("legacy", True)], results[("legacy", False)]
+    gain_sn = sn_co[1].steps_dl / sn_st[1].steps_dl
+    gain_lg = lg_co[1].steps_dl / lg_st[1].steps_dl
+    print(f"\nheadline: supernode co-sched/static steps = {gain_sn:.2f}x "
+          f"(gate >= 1.40), legacy = {gain_lg:.2f}x (gate <= 1.10)")
+
+    # supernode: co-scheduling holds the serving SLO *and* out-trains
+    # the static partition
+    assert sn_co[0]["attains"], "co-scheduled serving must hold the SLO"
+    assert sn_co[0]["rejected"] == 0
+    assert sn_st[0]["attains"], "static half must hold the SLO"
+    assert gain_sn >= 1.40, f"supernode step gain {gain_sn:.3f} < 1.40"
+    # the static halves never touch the fabric: identical across
+    # fabrics, and the static trainer never reshards
+    assert sn_st[1].reshards == 0 and lg_st[1].reshards == 0
+    assert sn_st[1].steps_dl > 0 and lg_st[1].steps_dl > 0
+    # legacy: reshard cost eats the harvest
+    assert gain_lg <= 1.10, f"legacy step gain {gain_lg:.3f} > 1.10"
+    assert gain_sn - gain_lg >= 0.25, \
+        f"fabric gap too small: {gain_sn:.3f} vs {gain_lg:.3f}"
+    assert lg_co[1].reshard_sec > 10.0 * sn_co[1].reshard_sec, \
+        "legacy resharding must dwarf supernode resharding"
+    print("co-scheduling crossover bounds hold")
