@@ -15,7 +15,8 @@
 //! green gate.
 
 use hyperparallel::hypermpmd::coschedule::{
-    cosched_comparison, cosched_scenario, cosched_slo, run_cosched, CoschedMode,
+    cosched_comparison, cosched_scenario, cosched_slo, fault_cosched_scenario, run_cosched,
+    CoschedMode,
 };
 use hyperparallel::serving::{ClusterFabric, AUTOSCALE_MEAN_RATE};
 use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
@@ -90,6 +91,75 @@ fn main() {
         "\n  step-gain crossover: supernode {:.2}x vs legacy {:.2}x \
          (gates: >= 1.40 / <= 1.10)",
         gains[0], gains[1]
+    );
+
+    section("fault injection + recovery (virtual time — deterministic, CI-gated)");
+    // The ISSUE 6 seed-42 scenario: one training DeviceFail at t=18 s
+    // plus a 10x rack-tier degrade window over [20, 26) s, layered on
+    // the supernode co-schedule. Same preset as
+    // rust/tests/fault_scenarios.rs, which asserts the gated bounds
+    // more tightly — green tests imply a green gate.
+    let clean = run_cosched(&sc);
+    let fsc = fault_cosched_scenario();
+    let submitted = fsc.workload.generate(fsc.horizon).len();
+    let faulted = run_cosched(&fsc);
+    let fop = faulted.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    let cop = clean.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    let completed_frac = fop.completed as f64 / submitted as f64;
+    let p99_ratio = fop.p99_ttft / cop.p99_ttft;
+    println!(
+        "  faulted   {:>4}/{submitted} reqs  p99 ttft {:>10} ({p99_ratio:.2}x fault-free)  \
+         retries {} hedged {}",
+        fop.completed,
+        fmt_secs(fop.p99_ttft),
+        faulted.serving.retries_scheduled,
+        faulted.serving.hedged,
+    );
+    println!(
+        "  trainer   {} device fail(s), {} step(s) lost, {} restore(s) ({} on fabric), \
+         mttr {}  steps {} vs fault-free {}",
+        faulted.train.device_fails,
+        faulted.train.steps_lost,
+        faulted.train.restores,
+        fmt_secs(faulted.train.restore_seconds),
+        fmt_secs(faulted.train.mttr_seconds),
+        faulted.train.steps_by_deadline,
+        clean.train.steps_by_deadline,
+    );
+    metrics.insert("faults.cosched.completed_frac", Json::from(completed_frac));
+    metrics.insert("faults.cosched.p99_ttft_ratio", Json::from(p99_ratio));
+    metrics.insert(
+        "faults.cosched.steps_lost",
+        Json::from(faulted.train.steps_lost as f64),
+    );
+    metrics.insert(
+        "faults.cosched.mttr_s",
+        Json::from(faulted.train.mttr_seconds),
+    );
+    // Archived (not gated): the raw recovery ledger for the trajectory.
+    metrics.insert(
+        "faults.cosched.device_fails",
+        Json::from(faulted.train.device_fails as f64),
+    );
+    metrics.insert(
+        "faults.cosched.restores",
+        Json::from(faulted.train.restores as f64),
+    );
+    metrics.insert(
+        "faults.cosched.restore_seconds",
+        Json::from(faulted.train.restore_seconds),
+    );
+    metrics.insert(
+        "faults.cosched.retries",
+        Json::from(faulted.serving.retries_scheduled as f64),
+    );
+    metrics.insert(
+        "faults.cosched.hedged",
+        Json::from(faulted.serving.hedged as f64),
+    );
+    metrics.insert(
+        "faults.cosched.steps_by_deadline",
+        Json::from(faulted.train.steps_by_deadline as f64),
     );
 
     if let Ok(path) = std::env::var("BENCH_JSON") {

@@ -19,11 +19,14 @@
 //! Env hooks: `BENCH_SMOKE=1` shrinks the wall-clock workloads; the
 //! gated metric sweep always runs the full fixed grid.
 
+use hyperparallel::faults::{LinkDegrade, RetryPolicy};
 use hyperparallel::serving::{
-    autoscale_comparison, autoscale_crash_scenario, autoscale_slo, crossover_comparison,
-    max_qps_under_slo, rate_sweep, run_cluster_scenario, run_scenario, smoke_scenario, smoke_slo,
-    ArrivalProcess, ClusterFabric, OperatingPoint, AUTOSCALE_MEAN_RATE, SMOKE_RATES,
+    autoscale_comparison, autoscale_crash_scenario, autoscale_slo, cluster_slo,
+    crossover_comparison, crossover_scenario, max_qps_under_slo, rate_sweep, run_cluster_scenario,
+    run_scenario, smoke_scenario, smoke_slo, ArrivalProcess, ClusterFabric, ClusterMode,
+    OperatingPoint, AUTOSCALE_MEAN_RATE, CLUSTER_RATES, SMOKE_RATES,
 };
+use hyperparallel::supernode::LinkTier;
 use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
 use hyperparallel::util::json::{Json, JsonObj};
 use hyperparallel::util::stats::fmt_secs;
@@ -214,6 +217,67 @@ fn main() {
     metrics.insert(
         "serving.autoscale.crash.p99_ttft_s",
         Json::from(crash.serving.ttft_pct(99.0)),
+    );
+
+    section("goodput under fabric degradation (virtual time — deterministic, CI-gated)");
+    // ISSUE 6: the disaggregated crossover preset with every non-local
+    // tier degraded to 10% bandwidth / 10x latency over the middle half
+    // of the arrival window, retry/hedging armed. The gate is coarse —
+    // degradation must never *lose* requests (retries fall back to the
+    // slow path, they never shed) — while the goodput ratio is archived
+    // for the trajectory.
+    let clean_sc = crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated);
+    let mut degr_sc = clean_sc.clone();
+    for tier in [LinkTier::Board, LinkTier::Rack, LinkTier::CrossRack] {
+        degr_sc.cluster.faults.link_windows.push(LinkDegrade {
+            tier,
+            start: 2.0,
+            end: 6.0,
+            bandwidth_scale: 0.1,
+            latency_scale: 10.0,
+        });
+    }
+    degr_sc.cluster.retry = Some(RetryPolicy::degraded_fabric());
+    let degraded_submitted = degr_sc.workload.generate(degr_sc.horizon).len();
+    let cslo = cluster_slo();
+    let clean_rep = run_cluster_scenario(&clean_sc);
+    let degr_rep = run_cluster_scenario(&degr_sc);
+    let clean_op = clean_rep.operating_point(CLUSTER_RATES[0], &cslo);
+    let degr_op = degr_rep.operating_point(CLUSTER_RATES[0], &cslo);
+    let degraded_completed_frac = degr_rep.completed() as f64 / degraded_submitted as f64;
+    let goodput_ratio = if clean_op.goodput > 0.0 {
+        degr_op.goodput / clean_op.goodput
+    } else {
+        1.0
+    };
+    println!(
+        "  degraded  {:>4}/{degraded_submitted} reqs  goodput {:>6.1} vs clean {:>6.1} \
+         ({goodput_ratio:.2}x)  p99 ttft {:>10} vs {:>10}  retries {} hedged {}",
+        degr_rep.completed(),
+        degr_op.goodput,
+        clean_op.goodput,
+        fmt_secs(degr_op.p99_ttft),
+        fmt_secs(clean_op.p99_ttft),
+        degr_rep.retries_scheduled,
+        degr_rep.hedged,
+    );
+    metrics.insert(
+        "faults.degraded.completed_frac",
+        Json::from(degraded_completed_frac),
+    );
+    metrics.insert("faults.degraded.goodput_qps", Json::from(degr_op.goodput));
+    metrics.insert("faults.degraded.goodput_ratio", Json::from(goodput_ratio));
+    metrics.insert(
+        "faults.degraded.p99_ttft_s",
+        Json::from(degr_op.p99_ttft),
+    );
+    metrics.insert(
+        "faults.degraded.retries",
+        Json::from(degr_rep.retries_scheduled as f64),
+    );
+    metrics.insert(
+        "faults.degraded.hedged",
+        Json::from(degr_rep.hedged as f64),
     );
 
     // Combined artifact: wall-clock benches + gated virtual-time

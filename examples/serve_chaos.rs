@@ -1,0 +1,136 @@
+//! Fleet-wide fault injection + recovery (ISSUE 6): the co-scheduled
+//! training + serving pool riding out link degradation, a training
+//! device failure, and random chaos schedules.
+//!
+//! Part 1 replays the checked-in seed-42 scenario — one `DeviceFail`
+//! at t=18 s into the training tenant plus a 10× rack-tier
+//! `LinkDegrade` window over [20, 26) s — against the fault-free run.
+//! The router's retry/hedging keeps serving p99 TTFT within 2× of
+//! fault-free with zero lost requests, and the trainer
+//! checkpoint-restores losing at most one step (MTTR ≈ 40 ms).
+//!
+//! Part 2 sweeps `faults::chaos::random_plan` schedules (random link
+//! windows + device fails + instance crashes) over seeds and checks
+//! the global invariants on every one: request conservation, the
+//! lease-ledger partition (free + serving-held + crashed + failed =
+//! pool), page custody at drain, and tenant overlap-freedom.
+//!
+//! Run: `cargo run --release --example serve_chaos`
+//!      `cargo run --release --example serve_chaos -- --seeds 4`
+
+use hyperparallel::faults::chaos::CHAOS_SEEDS;
+use hyperparallel::hypermpmd::coschedule::{
+    assert_tenant_isolation, chaos_cosched_scenario, cosched_scenario, cosched_slo,
+    fault_cosched_scenario, run_cosched, CoschedMode, CoschedReport, COSCHED_POOL_DEVICES,
+};
+use hyperparallel::serving::{ClusterFabric, AUTOSCALE_MEAN_RATE};
+use hyperparallel::util::args::Args;
+use hyperparallel::util::stats::{fmt_secs, render_table};
+
+fn ledger(rep: &CoschedReport) -> usize {
+    rep.broker.free_at_end.len()
+        + rep.serving.held_devices_at_end.len()
+        + rep.serving.crashed_devices.len()
+        + rep.broker.failed_at_end.len()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let seeds = args.u64("seeds", CHAOS_SEEDS);
+
+    println!(
+        "part 1 — checked-in seed-42 scenario: DeviceFail at t=18s + 10x rack \
+         degrade over [20s, 26s) on the {COSCHED_POOL_DEVICES}-device co-schedule\n"
+    );
+    let slo = cosched_slo();
+    let clean = run_cosched(&cosched_scenario(
+        ClusterFabric::Supernode,
+        CoschedMode::Cosched,
+    ));
+    let fsc = fault_cosched_scenario();
+    let submitted = fsc.workload.generate(fsc.horizon).len();
+    let faulted = run_cosched(&fsc);
+    let rows: Vec<Vec<String>> = [("fault-free", &clean), ("faulted", &faulted)]
+        .iter()
+        .map(|(label, rep)| {
+            let op = rep.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+            vec![
+                label.to_string(),
+                format!("{}/{}", op.completed, submitted),
+                fmt_secs(op.p99_ttft),
+                format!("{}", rep.train.steps_by_deadline),
+                format!("{}", rep.train.device_fails),
+                format!("{}", rep.train.steps_lost),
+                format!("{}", rep.train.restores),
+                fmt_secs(rep.train.mttr_seconds),
+                format!("{}", rep.serving.retries_scheduled),
+                format!("{}", rep.serving.hedged),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render_table(
+            &[
+                "run", "served", "p99 ttft", "steps", "fails", "lost", "restores", "mttr",
+                "retries", "hedged",
+            ],
+            &rows
+        )
+    );
+    let fop = faulted.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    let cop = clean.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+    println!(
+        "\n  p99 TTFT under faults: {:.2}x fault-free (gate <= 2.0x), {} request(s) lost, \
+         {} step(s) lost to the fail (gate <= 1)\n",
+        fop.p99_ttft / cop.p99_ttft,
+        submitted - fop.completed,
+        faulted.train.steps_lost,
+    );
+
+    println!("part 2 — chaos sweep: {seeds} random fault schedule(s), invariants asserted\n");
+    let mut rows = Vec::new();
+    for seed in 0..seeds {
+        let cfg = chaos_cosched_scenario(seed);
+        let submitted = cfg.workload.generate(cfg.horizon).len();
+        // run_cosched itself asserts the lease partition and page
+        // custody at drain; the checks below are the cross-tenant view
+        let rep = run_cosched(&cfg);
+        assert_tenant_isolation(&rep);
+        assert_eq!(
+            rep.serving.serving.outcomes.len() + rep.serving.serving.rejected as usize,
+            submitted,
+            "seed {seed}: requests lost"
+        );
+        assert!(rep.train.steps_lost <= rep.train.device_fails);
+        assert_eq!(ledger(&rep), COSCHED_POOL_DEVICES, "seed {seed}: ledger");
+        rows.push(vec![
+            format!("{seed}"),
+            format!("{}", cfg.cluster.faults.link_windows.len()),
+            format!("{}", rep.train.device_fails),
+            format!("{}", rep.serving.crashes),
+            format!(
+                "{}/{}",
+                rep.serving.serving.outcomes.len(),
+                submitted
+            ),
+            format!("{}", rep.train.steps_lost),
+            format!("{}", rep.serving.retries_scheduled),
+            format!("{}", rep.serving.hedged),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &[
+                "seed", "windows", "fails", "crashes", "served", "lost steps", "retries",
+                "hedged",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "\n  all {seeds} schedule(s) conserved requests, pages, and leases — the pool \
+         stays one logical computer under chaos"
+    );
+}

@@ -1,0 +1,333 @@
+//! Fleet-wide fault injection (ISSUE 6).
+//!
+//! The supernode-as-one-computer premise only survives contact with a
+//! 384-accelerator pool if the framework reacts to the faults such a
+//! pool makes routine: links that degrade or flap, and training
+//! devices that die mid-step. This module is the single, deterministic
+//! description of *what goes wrong when* — a [`FaultPlan`] scheduled
+//! on the shared virtual clock — consumed by every layer:
+//!
+//! - **fabric faults** ([`LinkDegrade`], [`FaultPlan::link_flap`]) —
+//!   windowed bandwidth/latency scaling of one [`LinkTier`], priced
+//!   through [`FaultPlan::effective_topology`] so KV migrations,
+//!   warm-up weight loads, resharding all-to-alls and gradient
+//!   all-reduces all slow down for real;
+//! - **training-device failures** ([`DeviceFail`]) — revoke a leased
+//!   device mid-step; `hypermpmd::coschedule` aborts the step and
+//!   recovers via checkpoint-restore (MTTR and steps-lost land in the
+//!   train report);
+//! - **serving resilience** ([`RetryPolicy`]) — router-level retry
+//!   with timeout + backoff, plus straggler-aware hedging away from
+//!   destinations on degraded links (`serving::cluster`);
+//! - **chaos harness** ([`chaos`]) — seeded random fault schedules
+//!   with global invariants asserted under every one.
+//!
+//! Pricing is *at dispatch*: a transfer in flight when a window opens
+//! keeps the price it was quoted, exactly like the Python mirrors
+//! (`tools/cluster_simcheck.py` / `tools/cosched_simcheck.py`), which
+//! keep fault-free runs bit-identical to the pre-fault code paths.
+
+use crate::supernode::{Fabric, LinkSpec, LinkTier, Topology};
+
+pub mod chaos;
+
+/// One windowed degradation of a link tier: over `[start, end)` the
+/// tier's bandwidth is multiplied by `bandwidth_scale` (< 1 slows it
+/// down) and its per-hop latency by `latency_scale` (> 1 slows it
+/// down). Overlapping windows on the same tier compose
+/// multiplicatively.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkDegrade {
+    pub tier: LinkTier,
+    /// Window start (inclusive), seconds of virtual time.
+    pub start: f64,
+    /// Window end (exclusive).
+    pub end: f64,
+    /// Multiplier on the tier's bandwidth (0 < scale ≤ 1 degrades).
+    pub bandwidth_scale: f64,
+    /// Multiplier on the tier's per-hop latency (≥ 1 degrades).
+    pub latency_scale: f64,
+}
+
+impl LinkDegrade {
+    /// Does this window cover virtual time `t`? Half-open `[start, end)`.
+    pub fn covers(&self, t: f64) -> bool {
+        self.start <= t && t < self.end
+    }
+}
+
+/// Kill one *training* device at `time`. Like `InstanceCrash`, the
+/// target is ordinal over the trainer's lease at fail time (absolute
+/// ids would race against elastic lease churn); a fail landing on an
+/// empty lease is a no-op — free and serving-held devices are covered
+/// by the serving tenant's own crash model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceFail {
+    pub time: f64,
+    pub ordinal: u64,
+}
+
+/// A deterministic fault schedule on the shared virtual clock.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub link_windows: Vec<LinkDegrade>,
+    pub device_fails: Vec<DeviceFail>,
+}
+
+impl FaultPlan {
+    /// The fault-free plan.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.link_windows.is_empty() && self.device_fails.is_empty()
+    }
+
+    /// A flapping link: `count` equal degrade windows of length `down`
+    /// separated by `up` seconds of clean fabric, starting at
+    /// `first_start`. Latency is left alone — a flap starves
+    /// bandwidth; pair with explicit [`LinkDegrade`] windows when the
+    /// latency should spike too.
+    pub fn link_flap(
+        tier: LinkTier,
+        first_start: f64,
+        up: f64,
+        down: f64,
+        count: usize,
+        bandwidth_scale: f64,
+    ) -> Self {
+        let mut plan = Self::empty();
+        let mut start = first_start;
+        for _ in 0..count {
+            plan.link_windows.push(LinkDegrade {
+                tier,
+                start,
+                end: start + down,
+                bandwidth_scale,
+                latency_scale: 1.0,
+            });
+            start += down + up;
+        }
+        plan
+    }
+
+    /// The `(bandwidth, latency)` multipliers in force on `tier` at
+    /// time `t`: the product over every covering window, in plan
+    /// order. `(1.0, 1.0)` on clean fabric.
+    pub fn scale_at(&self, tier: LinkTier, t: f64) -> (f64, f64) {
+        let mut bw = 1.0;
+        let mut lat = 1.0;
+        for w in &self.link_windows {
+            if w.tier == tier && w.covers(t) {
+                bw *= w.bandwidth_scale;
+                lat *= w.latency_scale;
+            }
+        }
+        (bw, lat)
+    }
+
+    /// Is *any* tier degraded at `t`? Gates the fault pricing path (and
+    /// router hedging) so fault-free runs never construct an effective
+    /// fabric — bit-identical to the pre-fault code.
+    pub fn degraded_at(&self, t: f64) -> bool {
+        self.link_windows.iter().any(|w| w.covers(t))
+    }
+
+    /// `base` with the scales in force on `tier` at `t` applied.
+    pub fn effective_spec(&self, base: LinkSpec, tier: LinkTier, t: f64) -> LinkSpec {
+        let (bw, lat) = self.scale_at(tier, t);
+        LinkSpec {
+            bandwidth: base.bandwidth * bw,
+            hop_latency: base.hop_latency * lat,
+            hops: base.hops,
+        }
+    }
+
+    /// The fabric as degraded at time `t`. The name is preserved so
+    /// algorithm selection (`collectives::cost` offers the mesh
+    /// algorithm on supernode fabrics only) is unchanged by faults.
+    pub fn effective_fabric(&self, base: &Fabric, t: f64) -> Fabric {
+        Fabric {
+            name: base.name,
+            local: self.effective_spec(base.local, LinkTier::Local, t),
+            board: self.effective_spec(base.board, LinkTier::Board, t),
+            rack: self.effective_spec(base.rack, LinkTier::Rack, t),
+            cross_rack: self.effective_spec(base.cross_rack, LinkTier::CrossRack, t),
+        }
+    }
+
+    /// The topology as degraded at time `t` — same geometry and
+    /// devices, fabric swapped for [`FaultPlan::effective_fabric`].
+    /// Feed this to `collectives::cost` / `Topology::p2p_time` to
+    /// price a transfer dispatched at `t`.
+    pub fn effective_topology(&self, base: &Topology, t: f64) -> Topology {
+        Topology {
+            geometry: base.geometry,
+            fabric: self.effective_fabric(&base.fabric, t),
+            devices: base.devices.clone(),
+        }
+    }
+}
+
+/// Serving-side resilience knobs (ISSUE 6 tentpole #3): how the
+/// cluster reacts when a KV migration is priced over a degraded link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// A migration whose priced transfer exceeds this is parked and
+    /// re-routed instead of dispatched, seconds.
+    pub timeout: f64,
+    /// Extra wait per prior attempt before the re-route fires.
+    pub backoff: f64,
+    /// Re-routes before the slow path is accepted as-is.
+    pub max_attempts: u32,
+    /// Hedging: prefer destinations whose degraded path is within
+    /// `hedge`× their clean transfer time (≤ 0 disables hedging).
+    pub hedge: f64,
+}
+
+impl RetryPolicy {
+    /// The preset the checked-in fault scenarios run with: park a
+    /// migration slower than 5 ms, back off 2.5 ms per attempt, accept
+    /// the slow path after 2 re-routes, hedge away from destinations
+    /// >2× their clean path.
+    pub fn degraded_fabric() -> Self {
+        Self {
+            timeout: 0.005,
+            backoff: 0.0025,
+            max_attempts: 2,
+            hedge: 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_degrades() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        for t in [0.0, 1.0, 1e6] {
+            assert!(!p.degraded_at(t));
+            assert_eq!(p.scale_at(LinkTier::Rack, t), (1.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn window_is_half_open() {
+        let w = LinkDegrade {
+            tier: LinkTier::Rack,
+            start: 2.0,
+            end: 5.0,
+            bandwidth_scale: 0.1,
+            latency_scale: 10.0,
+        };
+        let p = FaultPlan {
+            link_windows: vec![w],
+            device_fails: vec![],
+        };
+        assert!(!p.degraded_at(1.999));
+        assert!(p.degraded_at(2.0));
+        assert!(p.degraded_at(4.999));
+        assert!(!p.degraded_at(5.0));
+        assert_eq!(p.scale_at(LinkTier::Rack, 3.0), (0.1, 10.0));
+        // other tiers untouched
+        assert_eq!(p.scale_at(LinkTier::Board, 3.0), (1.0, 1.0));
+    }
+
+    #[test]
+    fn overlapping_windows_compose_multiplicatively() {
+        let p = FaultPlan {
+            link_windows: vec![
+                LinkDegrade {
+                    tier: LinkTier::Board,
+                    start: 0.0,
+                    end: 10.0,
+                    bandwidth_scale: 0.5,
+                    latency_scale: 2.0,
+                },
+                LinkDegrade {
+                    tier: LinkTier::Board,
+                    start: 5.0,
+                    end: 15.0,
+                    bandwidth_scale: 0.5,
+                    latency_scale: 3.0,
+                },
+            ],
+            device_fails: vec![],
+        };
+        assert_eq!(p.scale_at(LinkTier::Board, 7.0), (0.25, 6.0));
+        assert_eq!(p.scale_at(LinkTier::Board, 12.0), (0.5, 3.0));
+    }
+
+    #[test]
+    fn link_flap_alternates_windows() {
+        let p = FaultPlan::link_flap(LinkTier::CrossRack, 1.0, 2.0, 0.5, 3, 0.05);
+        assert_eq!(p.link_windows.len(), 3);
+        // down [1.0,1.5), up, down [3.5,4.0), up, down [6.0,6.5)
+        assert!(p.degraded_at(1.2));
+        assert!(!p.degraded_at(2.0));
+        assert!(p.degraded_at(3.7));
+        assert!(!p.degraded_at(5.0));
+        assert!(p.degraded_at(6.4));
+        assert!(!p.degraded_at(6.5));
+        let (bw, lat) = p.scale_at(LinkTier::CrossRack, 1.2);
+        assert_eq!((bw, lat), (0.05, 1.0));
+    }
+
+    #[test]
+    fn effective_fabric_scales_only_covered_tiers() {
+        let base = Fabric::supernode();
+        let p = FaultPlan {
+            link_windows: vec![LinkDegrade {
+                tier: LinkTier::Rack,
+                start: 0.0,
+                end: 1.0,
+                bandwidth_scale: 0.1,
+                latency_scale: 10.0,
+            }],
+            device_fails: vec![],
+        };
+        let eff = p.effective_fabric(&base, 0.5);
+        assert_eq!(eff.name, base.name);
+        assert_eq!(eff.rack.bandwidth, base.rack.bandwidth * 0.1);
+        assert_eq!(eff.rack.hop_latency, base.rack.hop_latency * 10.0);
+        assert_eq!(eff.rack.hops, base.rack.hops);
+        assert_eq!(eff.board, base.board);
+        assert_eq!(eff.cross_rack, base.cross_rack);
+        // outside the window the fabric is bitwise the base
+        assert_eq!(p.effective_fabric(&base, 1.0), base);
+    }
+
+    #[test]
+    fn effective_topology_prices_transfers_slower() {
+        let topo = Topology::tiny();
+        let p = FaultPlan {
+            link_windows: vec![LinkDegrade {
+                tier: LinkTier::Board,
+                start: 0.0,
+                end: 1.0,
+                bandwidth_scale: 0.1,
+                latency_scale: 1.0,
+            }],
+            device_fails: vec![],
+        };
+        let eff = p.effective_topology(&topo, 0.5);
+        let a = topo.devices[0].id;
+        let b = topo.devices[1].id;
+        let clean = topo.p2p_time(a, b, 1e9);
+        let slow = eff.p2p_time(a, b, 1e9);
+        assert!(slow > 5.0 * clean, "slow={slow} clean={clean}");
+    }
+
+    #[test]
+    fn degraded_fabric_preset() {
+        let r = RetryPolicy::degraded_fabric();
+        assert_eq!(r.timeout, 0.005);
+        assert_eq!(r.backoff, 0.0025);
+        assert_eq!(r.max_attempts, 2);
+        assert_eq!(r.hedge, 2.0);
+    }
+}

@@ -46,6 +46,9 @@
 //! `tools/cosched_simcheck.py`, demoed in
 //! `examples/train_and_serve.rs`.
 
+use crate::collectives;
+use crate::faults::{chaos, DeviceFail, FaultPlan, RetryPolicy};
+use crate::graph::CollectiveKind;
 use crate::serving::cluster::{
     autoscale_device, autoscale_preset, autoscale_slo, autoscale_workload, spread_placement,
     ClusterConfig, ClusterFabric, ClusterReport, ClusterSim, DeviceLessor, InstanceRole,
@@ -89,6 +92,9 @@ pub struct LeaseBroker {
     /// reserveless broker would never preempt the trainer and serving
     /// could starve against a full trainer lease.
     demand: bool,
+    /// Devices revoked by a training [`DeviceFail`]: out of the pool
+    /// for good (the fault analogue of a serving instance crash).
+    pub failed: Vec<DeviceId>,
 }
 
 impl LeaseBroker {
@@ -100,6 +106,7 @@ impl LeaseBroker {
             leases_granted: 0,
             leases_returned: 0,
             demand: false,
+            failed: Vec::new(),
         }
     }
 
@@ -186,6 +193,9 @@ enum TrainPhase {
 struct TrainerSim<'a> {
     topo: &'a Topology,
     cfg: &'a TrainTenantConfig,
+    /// The fault plan steps and reshards are priced against: a link
+    /// window covering the dispatch instant scales the fabric term.
+    plan: &'a FaultPlan,
     devices: Vec<DeviceId>,
     /// Shard count the training state currently lives in (1 = the
     /// gathered checkpoint; 0 = no state materialized yet).
@@ -209,15 +219,31 @@ struct TrainerSim<'a> {
     /// DeviceId.0 → trace resource index, assigned on first use.
     resource_of: BTreeMap<usize, usize>,
     resources: Vec<DeviceId>,
+    // fault accounting (ISSUE 6)
+    device_fails: u64,
+    steps_lost: u64,
+    restores: u64,
+    restore_seconds: f64,
+    mttr_seconds: f64,
+    /// Time of the oldest unrecovered fail; cleared (into
+    /// `mttr_seconds`) at the first step start after recovery.
+    last_fail: Option<f64>,
+    /// A fail revoked part of the lease: checkpoint-restore before the
+    /// next step.
+    restore_pending: bool,
+    /// The Resharding phase in flight is a checkpoint-restore (traced
+    /// `restore`, not `reshard`).
+    restoring: bool,
 }
 
 impl<'a> TrainerSim<'a> {
-    fn new(topo: &'a Topology, cfg: &'a TrainTenantConfig) -> Self {
+    fn new(topo: &'a Topology, cfg: &'a TrainTenantConfig, plan: &'a FaultPlan) -> Self {
         assert!(cfg.min_devices >= 1, "trainer needs min_devices >= 1");
         assert!(cfg.grow_cooldown >= 0.0);
         Self {
             topo,
             cfg,
+            plan,
             devices: Vec::new(),
             last_shards: 0,
             phase: TrainPhase::Idle,
@@ -235,6 +261,26 @@ impl<'a> TrainerSim<'a> {
             tasks: 0,
             resource_of: BTreeMap::new(),
             resources: Vec::new(),
+            device_fails: 0,
+            steps_lost: 0,
+            restores: 0,
+            restore_seconds: 0.0,
+            mttr_seconds: 0.0,
+            last_fail: None,
+            restore_pending: false,
+            restoring: false,
+        }
+    }
+
+    /// The fabric a transfer dispatched at `now` is priced over: the
+    /// clean topology unless a fault window covers `now` (gated so a
+    /// fault-free run never constructs an effective topology and stays
+    /// bit-identical to pre-fault builds).
+    fn topo_at(&self, now: f64) -> std::borrow::Cow<'a, Topology> {
+        if self.plan.degraded_at(now) {
+            std::borrow::Cow::Owned(self.plan.effective_topology(self.topo, now))
+        } else {
+            std::borrow::Cow::Borrowed(self.topo)
         }
     }
 
@@ -269,7 +315,7 @@ impl<'a> TrainerSim<'a> {
         }
     }
 
-    fn step_time(&mut self) -> f64 {
+    fn step_time(&mut self, now: f64) -> f64 {
         let d = self.devices.len();
         let compute = match self.compute_cache.get(&d) {
             Some(&t) => t,
@@ -279,7 +325,8 @@ impl<'a> TrainerSim<'a> {
                 t
             }
         };
-        compute + self.cfg.job.sync_time(self.topo, &self.devices)
+        // the gradient all-reduce pays the (possibly degraded) fabric
+        compute + self.cfg.job.sync_time(&self.topo_at(now), &self.devices)
     }
 
     /// Process the phase-end event at `t` (step or reshard finished).
@@ -304,7 +351,13 @@ impl<'a> TrainerSim<'a> {
                 union,
             } => {
                 debug_assert_eq!(end.to_bits(), t.to_bits());
-                self.record(&union, start, end, tags::RESHARD);
+                let tag = if self.restoring {
+                    tags::RESTORE
+                } else {
+                    tags::RESHARD
+                };
+                self.restoring = false;
+                self.record(&union, start, end, tag);
                 self.last_shards = if self.devices.is_empty() {
                     1
                 } else {
@@ -321,6 +374,32 @@ impl<'a> TrainerSim<'a> {
         }
     }
 
+    /// Post-fail checkpoint-restore: redistribute the last
+    /// checkpointed state onto the surviving lease. Unlike a normal
+    /// reconfig this is never free — the victim's in-HBM shard died
+    /// with it — and it pays the (possibly degraded) fabric.
+    fn begin_restore(&mut self, now: f64) {
+        let group = self.devices.clone();
+        let src = self.last_shards.max(1);
+        let rt = collectives::cost(
+            &self.topo_at(now),
+            CollectiveKind::AllToAll,
+            self.cfg.job.state_bytes / src as f64,
+            &group,
+        )
+        .time;
+        self.restores += 1;
+        self.restore_seconds += rt;
+        self.peak_devices = self.peak_devices.max(self.devices.len());
+        self.restoring = true;
+        self.phase = TrainPhase::Resharding {
+            start: now,
+            end: now + rt,
+            leaving: Vec::new(),
+            union: group,
+        };
+    }
+
     /// Reconfigure to `next` devices (a superset or subset of the
     /// current lease), paying the reshard over the union group.
     /// Zero-cost transitions (first materialization, equal shard
@@ -330,7 +409,7 @@ impl<'a> TrainerSim<'a> {
         let rt = self
             .cfg
             .job
-            .reconfig_time(self.topo, &old, &next, self.last_shards);
+            .reconfig_time(&self.topo_at(now), &old, &next, self.last_shards);
         let mut union = old;
         for &d in &next {
             if !union.contains(&d) {
@@ -395,7 +474,20 @@ pub struct TrainTenantReport {
     /// Σ devices-held × step-duration: harvested device-seconds.
     pub device_step_seconds: f64,
     pub peak_devices: usize,
-    /// `train_step`/`reshard` intervals, one resource per device.
+    /// Training devices revoked by the fault plan.
+    pub device_fails: u64,
+    /// Steps aborted mid-flight by a fail (work redone from the last
+    /// checkpoint; the ≤-1-per-fail bound is the recovery guarantee).
+    pub steps_lost: u64,
+    /// Checkpoint-restores run after fails.
+    pub restores: u64,
+    /// Total fabric time spent in checkpoint-restores, seconds.
+    pub restore_seconds: f64,
+    /// Σ (first post-recovery step start − fail instant): mean time to
+    /// recovery summed over fail episodes, seconds.
+    pub mttr_seconds: f64,
+    /// `train_step`/`reshard`/`restore`/`device_fail` intervals, one
+    /// resource per device.
     pub trace: SimResult,
     /// Device of each trace resource.
     pub trace_devices: Vec<DeviceId>,
@@ -408,6 +500,10 @@ pub struct BrokerReport {
     pub leases_returned: u64,
     pub lease_misses: u64,
     pub free_at_end: Vec<DeviceId>,
+    /// Devices lost to training [`DeviceFail`]s — a third terminal
+    /// state in the lease-conservation partition, next to the serving
+    /// report's crashed devices.
+    pub failed_at_end: Vec<DeviceId>,
 }
 
 /// Everything a co-scheduled run produced.
@@ -437,7 +533,10 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
     let requests = cfg.workload.generate(cfg.horizon);
     let mut serving = ClusterSim::new(&cfg.cluster, &requests);
     let mut broker = LeaseBroker::new(cfg.broker_devices.clone(), cfg.reserve);
-    let mut trainer = TrainerSim::new(&cfg.cluster.topology, &cfg.train);
+    let mut trainer = TrainerSim::new(&cfg.cluster.topology, &cfg.train, &cfg.cluster.faults);
+    let mut fails: Vec<DeviceFail> = cfg.cluster.faults.device_fails.clone();
+    fails.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.ordinal.cmp(&b.ordinal)));
+    let mut fli = 0usize;
     let initial: BTreeSet<usize> = cfg
         .broker_devices
         .iter()
@@ -455,6 +554,15 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
         mediate(now, &mut broker, &mut trainer);
         let se = serving.next_event();
         let tt = trainer.next_time();
+        // device-fail events win ties, then serving, then the trainer
+        if let Some(f) = fails.get(fli) {
+            if se.map_or(true, |ev| f.time <= ev.0) && tt.map_or(true, |t| f.time <= t) {
+                now = f.time;
+                device_fail(now, f.ordinal, &mut broker, &mut trainer);
+                fli += 1;
+                continue;
+            }
+        }
         match (se, tt) {
             (None, None) => break,
             (Some(ev), None) => {
@@ -484,13 +592,15 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
 
     let serving_report = serving.into_report();
     // Lease conservation: at drain every device is free, still held by
-    // a live serving instance, or lost to a crash — exactly once.
+    // a live serving instance, lost to a crash, or revoked by a
+    // training device fail — exactly once.
     let mut seen: BTreeSet<usize> = BTreeSet::new();
     for d in broker
         .free
         .iter()
         .chain(serving_report.held_devices_at_end.iter())
         .chain(serving_report.crashed_devices.iter())
+        .chain(broker.failed.iter())
     {
         assert!(seen.insert(d.0), "device {} accounted twice at drain", d.0);
     }
@@ -511,6 +621,11 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
             reshard_seconds: trainer.reshard_seconds,
             device_step_seconds: trainer.device_step_seconds,
             peak_devices: trainer.peak_devices,
+            device_fails: trainer.device_fails,
+            steps_lost: trainer.steps_lost,
+            restores: trainer.restores,
+            restore_seconds: trainer.restore_seconds,
+            mttr_seconds: trainer.mttr_seconds,
             trace: SimResult::from_intervals(makespan, n_res, trainer.intervals),
             trace_devices: trainer.resources,
         },
@@ -519,6 +634,7 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
             leases_returned: broker.leases_returned,
             lease_misses: broker.lease_misses,
             free_at_end: broker.free_devices(),
+            failed_at_end: broker.failed,
         },
     }
 }
@@ -574,6 +690,17 @@ fn mediate(now: f64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
             trainer.begin_reconfig(now, next, leaving);
             continue;
         }
+        if trainer.restore_pending {
+            // a DeviceFail revoked part of the lease: re-shard the
+            // checkpoint onto the survivors before stepping again (an
+            // empty lease restores through the normal resume-from-
+            // checkpoint pricing when it regrows)
+            trainer.restore_pending = false;
+            if !trainer.devices.is_empty() {
+                trainer.begin_restore(now);
+                continue;
+            }
+        }
         let min_run = trainer.cfg.min_devices.max(1);
         let harvest = broker.harvestable();
         let cooled = now - trainer.last_grow >= trainer.cfg.grow_cooldown;
@@ -586,7 +713,12 @@ fn mediate(now: f64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
             continue;
         }
         if trainer.devices.len() >= min_run {
-            let st = trainer.step_time();
+            let st = trainer.step_time(now);
+            if let Some(failed_at) = trainer.last_fail.take() {
+                // MTTR: fail instant to the first step start after
+                // recovery (restore + any regrow waits included)
+                trainer.mttr_seconds += now - failed_at;
+            }
             trainer.phase = TrainPhase::Stepping {
                 start: now,
                 end: now + st,
@@ -603,6 +735,51 @@ fn mediate(now: f64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
         }
         break; // idle, no devices, nothing to harvest
     }
+}
+
+/// Revoke one held training device ([`DeviceFail`]; `ordinal` indexes
+/// the current lease modulo its size), abort the phase in flight, and
+/// arm checkpoint-restore. A fail landing on an empty lease is a
+/// no-op: free and serving-held devices are covered by the serving
+/// tenant's own crash model ([`crate::serving::InstanceCrash`]).
+fn device_fail(now: f64, ordinal: u64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
+    if trainer.devices.is_empty() {
+        return;
+    }
+    let victim = trainer.devices[ordinal as usize % trainer.devices.len()];
+    trainer.device_fails += 1;
+    if trainer.last_fail.is_none() {
+        trainer.last_fail = Some(now);
+    }
+    match std::mem::replace(&mut trainer.phase, TrainPhase::Idle) {
+        TrainPhase::Stepping { start, .. } => {
+            // the step aborts: work since `start` is lost and will be
+            // redone from the last checkpointed step
+            trainer.steps_lost += 1;
+            let devs = trainer.devices.clone();
+            trainer.record(&devs, start, now, tags::DEVICE_FAIL);
+        }
+        TrainPhase::Resharding {
+            start,
+            leaving,
+            union,
+            ..
+        } => {
+            trainer.record(&union, start, now, tags::DEVICE_FAIL);
+            // the in-flight redistribution is void: leaving devices
+            // still hold their checkpointed shards, so they rejoin the
+            // lease and the broker's claim is re-armed
+            trainer.pending_preempt += leaving.len();
+            trainer.devices.extend(leaving);
+            trainer.restoring = false;
+        }
+        TrainPhase::Idle | TrainPhase::Finished => {
+            trainer.record(&[victim], now, now, tags::DEVICE_FAIL);
+        }
+    }
+    trainer.devices.retain(|&d| d != victim);
+    broker.failed.push(victim);
+    trainer.restore_pending = true;
 }
 
 // ---- static-partition baseline and presets ----------------------------
@@ -694,6 +871,8 @@ pub fn cosched_scenario(fabric: ClusterFabric, mode: CoschedMode) -> CoschedConf
         route: RoutePolicy::LeastOutstandingKv,
         autoscale,
         failures: vec![],
+        faults: FaultPlan::empty(),
+        retry: None,
     };
     CoschedConfig {
         cluster,
@@ -721,6 +900,32 @@ pub fn cosched_scenario(fabric: ClusterFabric, mode: CoschedMode) -> CoschedConf
 /// diurnal scenario).
 pub fn cosched_slo() -> Slo {
     autoscale_slo()
+}
+
+/// The checked-in ISSUE 6 fault acceptance scenario: the supernode
+/// co-scheduled setup with the seed-42 fault plan layered on — one
+/// training `DeviceFail` at t=18 s plus a 10× rack-tier degrade over
+/// `[20, 26)` s — and the degraded-fabric retry policy armed.
+pub fn fault_cosched_scenario() -> CoschedConfig {
+    let mut cfg = cosched_scenario(ClusterFabric::Supernode, CoschedMode::Cosched);
+    cfg.cluster.faults = chaos::fault_scenario_plan();
+    cfg.cluster.retry = Some(RetryPolicy::degraded_fabric());
+    cfg
+}
+
+/// One chaos-suite cell: the supernode co-scheduled setup shortened to
+/// [`chaos::CHAOS_HORIZON`] with the seeded random fault schedule —
+/// link windows, training-device fails *and* serving-instance crashes
+/// — layered on.
+pub fn chaos_cosched_scenario(seed: u64) -> CoschedConfig {
+    let mut cfg = cosched_scenario(ClusterFabric::Supernode, CoschedMode::Cosched);
+    cfg.horizon = chaos::CHAOS_HORIZON;
+    cfg.train.train_until = chaos::CHAOS_HORIZON;
+    let (plan, crashes) = chaos::random_plan(seed, chaos::CHAOS_HORIZON);
+    cfg.cluster.faults = plan;
+    cfg.cluster.failures = crashes;
+    cfg.cluster.retry = Some(RetryPolicy::degraded_fabric());
+    cfg
 }
 
 /// Co-scheduled vs static-partition comparison on one fabric.
@@ -930,7 +1135,91 @@ mod tests {
         // ledger's totals must be self-consistent too
         let free = rep.broker.free_at_end.len()
             + rep.serving.held_devices_at_end.len()
-            + rep.serving.crashed_devices.len();
+            + rep.serving.crashed_devices.len()
+            + rep.broker.failed_at_end.len();
         assert_eq!(free, COSCHED_POOL_DEVICES);
+    }
+
+    #[test]
+    fn device_fail_loses_at_most_one_step_and_restores() {
+        use crate::faults::DeviceFail;
+        let mut cfg = tiny_cosched(true, 4.0);
+        // by t=1.5 the light-load trainer holds most of the pool
+        cfg.cluster.faults.device_fails.push(DeviceFail {
+            time: 1.5,
+            ordinal: 2,
+        });
+        let rep = run_cosched(&cfg);
+        assert_eq!(rep.train.device_fails, 1);
+        assert_eq!(rep.broker.failed_at_end.len(), 1);
+        assert!(rep.train.steps_lost <= 1, "lost {}", rep.train.steps_lost);
+        assert!(rep.train.restores >= 1, "fail must force a restore");
+        assert!(rep.train.restore_seconds > 0.0, "a restore is never free");
+        assert!(
+            rep.train.mttr_seconds > 0.0,
+            "recovery takes at least the restore"
+        );
+        assert!(rep.train.trace.tagged_count(tags::DEVICE_FAIL) > 0);
+        assert!(rep.train.trace.tagged_count(tags::RESTORE) > 0);
+        // the failed device is out of every other terminal state
+        let failed = rep.broker.failed_at_end[0];
+        assert!(!rep.broker.free_at_end.contains(&failed));
+        assert!(!rep.serving.held_devices_at_end.contains(&failed));
+        assert_tenant_isolation(&rep);
+    }
+
+    #[test]
+    fn fault_plan_outside_the_run_changes_nothing() {
+        use crate::faults::LinkDegrade;
+        use crate::supernode::LinkTier;
+        let clean = tiny_cosched(true, 3.0);
+        let mut dormant = clean.clone();
+        // a window entirely past the horizon: degraded_at(now) stays
+        // false for every dispatch, so no effective topology is ever
+        // built and the run is bit-identical to the fault-free one
+        dormant.cluster.faults.link_windows.push(LinkDegrade {
+            tier: LinkTier::Rack,
+            start: 100.0,
+            end: 101.0,
+            bandwidth_scale: 0.1,
+            latency_scale: 10.0,
+        });
+        let a = run_cosched(&clean);
+        let b = run_cosched(&dormant);
+        assert_eq!(a.train.steps, b.train.steps);
+        assert_eq!(
+            a.train.reshard_seconds.to_bits(),
+            b.train.reshard_seconds.to_bits()
+        );
+        assert_eq!(
+            a.serving.serving.makespan.to_bits(),
+            b.serving.serving.makespan.to_bits()
+        );
+    }
+
+    #[test]
+    fn active_link_window_slows_training_reshards() {
+        use crate::faults::LinkDegrade;
+        use crate::supernode::LinkTier;
+        let clean = tiny_cosched(true, 3.0);
+        let mut degraded = clean.clone();
+        for tier in [LinkTier::Board, LinkTier::Rack, LinkTier::CrossRack] {
+            degraded.cluster.faults.link_windows.push(LinkDegrade {
+                tier,
+                start: 0.0,
+                end: 3.5,
+                bandwidth_scale: 0.05,
+                latency_scale: 10.0,
+            });
+        }
+        let a = run_cosched(&clean);
+        let b = run_cosched(&degraded);
+        assert!(
+            b.train.reshard_seconds > a.train.reshard_seconds,
+            "degraded fabric must slow state redistribution: {} vs {}",
+            b.train.reshard_seconds,
+            a.train.reshard_seconds
+        );
+        assert!(b.train.steps_by_deadline <= a.train.steps_by_deadline);
     }
 }

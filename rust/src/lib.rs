@@ -21,7 +21,8 @@
 //! ([`collectives`]), a PJRT runtime that executes the AOT-compiled
 //! JAX/Pallas artifacts ([`runtime`]), a training/RL workload layer
 //! ([`trainer`]), the coordinator ([`coordinator`]), a request-level
-//! inference serving simulator ([`serving`]), and the paper's
+//! inference serving simulator ([`serving`]), deterministic
+//! fleet-wide fault injection ([`faults`]), and the paper's
 //! baselines ([`baselines`]).
 //!
 //! See `DESIGN.md` for the substitution table (paper hardware → this
@@ -31,6 +32,7 @@ pub mod baselines;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod graph;
 pub mod hypermpmd;
 pub mod hyperoffload;

@@ -91,6 +91,7 @@
 //! max-QPS-under-SLO search across `sim::sweep` workers.
 
 use crate::collectives;
+use crate::faults::{FaultPlan, RetryPolicy};
 use crate::graph::CollectiveKind;
 use crate::hyperoffload::kvcache::KvCacheConfig;
 use crate::serving::autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleObservation, ScalingPolicy};
@@ -209,6 +210,14 @@ pub struct ClusterConfig {
     pub autoscale: Option<AutoscaleConfig>,
     /// Crash events to inject, any order (sorted by time internally).
     pub failures: Vec<InstanceCrash>,
+    /// Fabric fault schedule (ISSUE 6): transfers *dispatched* inside
+    /// a degrade window are priced over the degraded fabric (in-flight
+    /// transfers keep their quote). `FaultPlan::empty()` keeps every
+    /// path bit-identical to the fault-free code.
+    pub faults: FaultPlan,
+    /// Retry/hedging policy for migrations priced over a degraded
+    /// link. `None` = dispatch at whatever the fabric costs.
+    pub retry: Option<RetryPolicy>,
 }
 
 /// Everything a cluster run produced: the standard serving report
@@ -237,6 +246,11 @@ pub struct ClusterReport {
     pub drain_migrations: u64,
     /// Total model-load transfer time paid by scale-ups, seconds.
     pub warmup_time: f64,
+    /// KV migrations parked and re-routed by the retry policy because
+    /// their priced transfer exceeded the timeout (ISSUE 6).
+    pub retries_scheduled: u64,
+    /// Migrations steered away from a degraded destination by hedging.
+    pub hedged: u64,
     /// Σ over instances of (death-or-makespan − birth): the
     /// provisioning cost the autoscaler is minimizing.
     pub instance_seconds: f64,
@@ -311,6 +325,21 @@ struct IngestJob {
     entry: Queued,
     /// Fabric transfer time, fixed when the migration was issued.
     xfer: f64,
+}
+
+/// A migration parked by the [`RetryPolicy`]: the pages stay in
+/// custody at `entry.kv_src` until the re-route dispatches (or
+/// rejects) it at `due`.
+#[derive(Debug)]
+struct RetryEntry {
+    /// When the re-route fires: park time + timeout + backoff·attempts.
+    due: f64,
+    entry: Queued,
+    /// Attempts spent, counting the dispatch that parked this entry.
+    attempts: u32,
+    drain: bool,
+    /// The slow destination this retry is hedging away from.
+    exclude: usize,
 }
 
 #[derive(Debug)]
@@ -405,6 +434,8 @@ struct Stats {
     scale_downs: u64,
     drain_migrations: u64,
     warmup_time: f64,
+    retries_scheduled: u64,
+    hedged: u64,
     /// (sequence, source instance) page handoffs pending release —
     /// drained at the cluster level after every event.
     handoffs: Vec<(u64, usize)>,
@@ -488,8 +519,9 @@ fn grow_active(inst: &mut Instance, cfg: &ClusterConfig, stats: &mut Stats) {
 }
 
 /// Strict less-than over (time, event-class, index) — the total event
-/// order: arrival < work-end < crash < autoscale tick at equal times,
-/// lowest instance index first among simultaneous work-ends.
+/// order: arrival < work-end < crash < autoscale tick < retry-due at
+/// equal times, lowest instance index first among simultaneous
+/// work-ends.
 fn event_lt(a: (f64, u8, usize), b: (f64, u8, usize)) -> bool {
     a.0.total_cmp(&b.0)
         .then(a.1.cmp(&b.1))
@@ -530,6 +562,11 @@ pub(crate) struct ClusterSim<'a> {
     next_arrival: usize,
     next_failure: usize,
     next_tick: Option<f64>,
+    /// Virtual time of the event being processed — the dispatch
+    /// timestamp fault pricing reads.
+    now: f64,
+    /// Migrations parked by the retry policy (class-4 events).
+    retries: Vec<RetryEntry>,
 }
 
 impl<'a> ClusterSim<'a> {
@@ -579,12 +616,51 @@ impl<'a> ClusterSim<'a> {
             .expect("non-empty candidate set")
     }
 
+    /// Straggler-aware hedging: when some destination's path from the
+    /// source is degraded beyond `retry.hedge`× its clean transfer
+    /// time and a clean destination exists, drop the slow ones.
+    fn hedge_filter(&mut self, src_dev: DeviceId, cands: Vec<usize>, bytes: f64) -> Vec<usize> {
+        let Some(rp) = self.cfg.retry else {
+            return cands;
+        };
+        if rp.hedge <= 0.0 || !self.cfg.faults.degraded_at(self.now) {
+            return cands;
+        }
+        let eff_topo = self.cfg.faults.effective_topology(&self.cfg.topology, self.now);
+        let mut clean = Vec::new();
+        for &c in &cands {
+            let pair = [src_dev, self.insts[c].device];
+            let base = collectives::cost(&self.cfg.topology, CollectiveKind::P2p, bytes, &pair).time;
+            let eff = collectives::cost(&eff_topo, CollectiveKind::P2p, bytes, &pair).time;
+            if eff <= rp.hedge * base {
+                clean.push(c);
+            }
+        }
+        if !clean.is_empty() {
+            if clean.len() < cands.len() {
+                self.stats.hedged += 1;
+            }
+            return clean;
+        }
+        cands
+    }
+
     /// Send a migrating entry (pages parked at `entry.kv_src`) to a
     /// serving scaled-role instance; limbo it if capacity is warming
     /// up; reject it (releasing the parked pages) if it can never be
-    /// served.
-    fn dispatch_migration(&mut self, entry: Queued, drain: bool) {
-        let cands = self.serving_ids(self.scaled_role);
+    /// served. Transfers are priced over the degraded fabric at
+    /// dispatch time; the retry policy parks the entry (pages stay in
+    /// custody at the source) and re-routes after a backoff instead of
+    /// starting a transfer that would blow the timeout — after
+    /// `max_attempts` it accepts the slow path, so no request is ever
+    /// lost to a fault window.
+    fn dispatch_migration(&mut self, entry: Queued, drain: bool, attempts: u32, exclude: Option<usize>) {
+        let mut cands = self.serving_ids(self.scaled_role);
+        if let Some(x) = exclude {
+            if cands.len() > 1 {
+                cands.retain(|&c| c != x);
+            }
+        }
         if cands.is_empty() {
             if self.warming_count(self.scaled_role) > 0 {
                 self.limbo.push_back(entry);
@@ -596,17 +672,39 @@ impl<'a> ClusterSim<'a> {
             }
             return;
         }
-        let dst = self.pick_dst(&cands);
         let src = entry.kv_src.expect("migration entry must have a source");
+        let src_dev = self.insts[src].device;
         let ctx = entry.prompt_len + entry.produced;
         let bytes = ctx as f64 * self.cfg.cost.kv.kv_bytes_per_token as f64;
-        let xfer = collectives::cost(
-            &self.cfg.topology,
-            CollectiveKind::P2p,
-            bytes,
-            &[self.insts[src].device, self.insts[dst].device],
-        )
-        .time;
+        let cands = self.hedge_filter(src_dev, cands, bytes);
+        let dst = self.pick_dst(&cands);
+        let pair = [src_dev, self.insts[dst].device];
+        let base = collectives::cost(&self.cfg.topology, CollectiveKind::P2p, bytes, &pair).time;
+        let xfer = if self.cfg.faults.degraded_at(self.now) {
+            let eff = self.cfg.faults.effective_topology(&self.cfg.topology, self.now);
+            collectives::cost(&eff, CollectiveKind::P2p, bytes, &pair).time
+        } else {
+            base
+        };
+        if let Some(rp) = self.cfg.retry {
+            if xfer > rp.timeout && attempts < rp.max_attempts {
+                self.stats.retries_scheduled += 1;
+                self.push_marker(dst, self.now, tags::RETRY);
+                self.retries.push(RetryEntry {
+                    due: self.now + rp.timeout + rp.backoff * attempts as f64,
+                    entry,
+                    attempts: attempts + 1,
+                    drain,
+                    exclude: dst,
+                });
+                return;
+            }
+        }
+        if xfer > base {
+            // retries exhausted (or no policy): the slow transfer goes
+            // out anyway, flagged in the trace
+            self.push_marker(dst, self.now, tags::LINK_DEGRADE);
+        }
         self.stats.kv_migrations += 1;
         self.stats.kv_bytes += bytes;
         self.stats.kv_xfer_time += xfer;
@@ -617,28 +715,47 @@ impl<'a> ClusterSim<'a> {
         self.stats.kick.insert(dst);
     }
 
+    /// Zero-length tagged marker on instance `k`'s trace track.
+    fn push_marker(&mut self, k: usize, t: f64, tag: u64) {
+        self.stats.intervals.push(Interval {
+            task: TaskId(self.stats.tasks),
+            resource: ResourceId(k),
+            start: t,
+            finish: t,
+            tag,
+        });
+        self.stats.tasks += 1;
+    }
+
     /// Put a pageless entry back through the front-end router.
-    fn route_requeue(&mut self, entry: Queued) {
+    /// `exclude` is the slow/dead instance a retry is hedging away
+    /// from (dropped only if another candidate exists).
+    fn route_requeue(&mut self, entry: Queued, exclude: Option<usize>) {
         let cands = self.serving_ids(self.entry_role);
         if cands.is_empty() {
             if self.warming_count(self.entry_role) > 0 {
                 self.limbo.push_back(entry);
             } else {
+                // release pages still parked for this entry: a rejected
+                // re-queue of a migrating sequence must not leak custody
+                if let Some(src) = entry.kv_src {
+                    self.stats.handoffs.push((entry.req.id, src));
+                }
                 self.stats.rejected += 1;
             }
             return;
         }
         let loads = self.candidate_loads(&cands);
-        let k = self.router.route(&entry.req, &loads);
+        let k = self.router.route_excluding(&entry.req, &loads, exclude);
         self.insts[k].queue.push_back(entry);
         self.stats.kick.insert(k);
     }
 
     fn redispatch(&mut self, entry: Queued, drain: bool) {
         if entry.kv_src.is_some() {
-            self.dispatch_migration(entry, drain);
+            self.dispatch_migration(entry, drain, 0, None);
         } else {
-            self.route_requeue(entry);
+            self.route_requeue(entry, None);
         }
     }
 
@@ -667,13 +784,26 @@ impl<'a> ClusterSim<'a> {
             .find(|i| i.state == InstanceState::Serving)
             .map(|i| i.device)
             .unwrap_or(dev);
-        let xfer = collectives::cost(
-            &cfg.topology,
-            CollectiveKind::P2p,
-            cfg.cost.kv.weight_bytes as f64,
-            &[src_dev, dev],
-        )
-        .time;
+        let xfer = if cfg.faults.degraded_at(t) {
+            // the model load pays the degraded fabric: a scale-up
+            // inside a fault window warms up slower for real
+            let eff = cfg.faults.effective_topology(&cfg.topology, t);
+            collectives::cost(
+                &eff,
+                CollectiveKind::P2p,
+                cfg.cost.kv.weight_bytes as f64,
+                &[src_dev, dev],
+            )
+            .time
+        } else {
+            collectives::cost(
+                &cfg.topology,
+                CollectiveKind::P2p,
+                cfg.cost.kv.weight_bytes as f64,
+                &[src_dev, dev],
+            )
+            .time
+        };
         let k = self.insts.len();
         self.stats.intervals.push(Interval {
             task: TaskId(self.stats.tasks),
@@ -878,14 +1008,17 @@ impl<'a> ClusterSim<'a> {
                 continue;
             };
             self.stats.crash_requeues += 1;
-            self.route_requeue(Queued {
-                req: seq.req,
-                prompt_len: seq.prompt_len,
-                produced: 0,
-                first_token: seq.first_token,
-                preemptions: seq.preemptions,
-                kv_src: None,
-            });
+            self.route_requeue(
+                Queued {
+                    req: seq.req,
+                    prompt_len: seq.prompt_len,
+                    produced: 0,
+                    first_token: seq.first_token,
+                    preemptions: seq.preemptions,
+                    kv_src: None,
+                },
+                None,
+            );
         }
         let q: Vec<Queued> = self.insts[k].queue.drain(..).collect();
         for e in q {
@@ -920,6 +1053,15 @@ impl<'a> ClusterSim<'a> {
             if e.kv_src == Some(k) {
                 e.kv_src = None;
                 e.produced = 0;
+            }
+        }
+        // entries parked for a retry lose their source the same way:
+        // without this, the retry would later "hand off" pages against
+        // a wiped pool and resume decoding from KV that no longer exists
+        for r in self.retries.iter_mut() {
+            if r.entry.kv_src == Some(k) {
+                r.entry.kv_src = None;
+                r.entry.produced = 0;
             }
         }
         self.insts[k].mem.pool.release_all();
@@ -977,6 +1119,8 @@ impl<'a> ClusterSim<'a> {
                         kv_src: Some(k),
                     },
                     draining,
+                    0,
+                    None,
                 );
             } else if done {
                 let seq = self.insts[k].active[slot].take().expect("slot checked above");
@@ -1154,10 +1298,10 @@ impl<'a> ClusterSim<'a> {
 
     /// Time/class/index of the next internal event, or `None` when the
     /// run is complete. Class breaks ties at equal times — arrival <
-    /// work-end < crash < autoscale tick, lowest instance index first
-    /// among simultaneous work-ends. A pending tick alone never keeps
-    /// the sim alive (ticks are cancelled once nothing can generate
-    /// further work).
+    /// work-end < crash < autoscale tick < retry-due, lowest instance
+    /// index first among simultaneous work-ends. A pending tick alone
+    /// never keeps the sim alive (ticks are cancelled once nothing can
+    /// generate further work) — but a parked retry does.
     pub(crate) fn next_event(&self) -> Option<(f64, u8, usize)> {
         let mut best: Option<(f64, u8, usize)> = None;
         if let Some(r) = self.requests.get(self.next_arrival) {
@@ -1173,6 +1317,12 @@ impl<'a> ClusterSim<'a> {
         }
         if let Some(f) = self.failures.get(self.next_failure) {
             let cand = (f.time, 2u8, self.next_failure);
+            if best.map_or(true, |b| event_lt(cand, b)) {
+                best = Some(cand);
+            }
+        }
+        for (i, r) in self.retries.iter().enumerate() {
+            let cand = (r.due, 4u8, i);
             if best.map_or(true, |b| event_lt(cand, b)) {
                 best = Some(cand);
             }
@@ -1195,6 +1345,7 @@ impl<'a> ClusterSim<'a> {
     pub(crate) fn process(&mut self, ev: (f64, u8, usize), lessor: &mut dyn DeviceLessor) {
         let cfg = self.cfg;
         let (t, cls, idx) = ev;
+        self.now = t;
         match cls {
             0 => {
                 let req = self.requests[self.next_arrival];
@@ -1207,14 +1358,17 @@ impl<'a> ClusterSim<'a> {
                 // instance (the kick-drain below wakes it), wait
                 // in limbo while capacity warms, or reject if no
                 // capacity can ever come
-                self.route_requeue(Queued {
-                    req,
-                    prompt_len: req.prompt_tokens,
-                    produced: 0,
-                    first_token: None,
-                    preemptions: 0,
-                    kv_src: None,
-                });
+                self.route_requeue(
+                    Queued {
+                        req,
+                        prompt_len: req.prompt_tokens,
+                        produced: 0,
+                        first_token: None,
+                        preemptions: 0,
+                        kv_src: None,
+                    },
+                    None,
+                );
             }
             1 => {
                 let k = idx;
@@ -1233,6 +1387,17 @@ impl<'a> ClusterSim<'a> {
                 let sel = self.failures[idx].instance;
                 self.crash_instance(sel, t, lessor);
             }
+            4 => {
+                let r = self.retries.remove(idx);
+                if r.entry.kv_src.is_some() {
+                    self.dispatch_migration(r.entry, r.drain, r.attempts, Some(r.exclude));
+                } else {
+                    // the source crashed while we waited: nothing is
+                    // parked anymore, go back through the front-end
+                    // router (which still avoids the slow instance)
+                    self.route_requeue(r.entry, Some(r.exclude));
+                }
+            }
             _ => {
                 self.autoscale_tick(t, lessor);
                 let aus = cfg.autoscale.as_ref().expect("tick requires autoscale");
@@ -1244,6 +1409,10 @@ impl<'a> ClusterSim<'a> {
         while !self.stats.handoffs.is_empty() || !self.stats.kick.is_empty() {
             let handoffs = std::mem::take(&mut self.stats.handoffs);
             for (seq, src) in handoffs {
+                debug_assert!(
+                    self.insts[src].state != InstanceState::Crashed,
+                    "page handoff against a crashed source"
+                );
                 self.insts[src].mem.pool.release(seq);
                 self.stats.kick.insert(src);
             }
@@ -1298,6 +1467,7 @@ impl<'a> ClusterSim<'a> {
         if self.next_tick.is_some()
             && self.next_arrival >= self.requests.len()
             && self.next_failure >= self.failures.len()
+            && self.retries.is_empty()
             && self.insts.iter().all(|i| i.work_end.is_none())
         {
             self.next_tick = None;
@@ -1387,6 +1557,8 @@ impl<'a> ClusterSim<'a> {
             next_arrival: 0,
             next_failure: 0,
             next_tick: cfg.autoscale.as_ref().map(|a| a.eval_interval),
+            now: 0.0,
+            retries: Vec::new(),
         }
     }
 
@@ -1421,6 +1593,7 @@ impl<'a> ClusterSim<'a> {
                 .unwrap_or_else(|e| panic!("instance {i}: {e}"));
         }
         assert!(self.limbo.is_empty(), "limbo entries leaked");
+        assert!(self.retries.is_empty(), "retry entries leaked");
 
         let demotions = self.insts.iter().map(|i| i.mem.pool.demotions).sum();
         let instance_seconds: f64 = self
@@ -1466,6 +1639,8 @@ impl<'a> ClusterSim<'a> {
             scale_downs,
             drain_migrations,
             warmup_time,
+            retries_scheduled,
+            hedged,
             ..
         } = self.stats;
         ClusterReport {
@@ -1490,6 +1665,8 @@ impl<'a> ClusterSim<'a> {
             scale_downs,
             drain_migrations,
             warmup_time,
+            retries_scheduled,
+            hedged,
             instance_seconds,
             peak_instances,
             instance_devices,
@@ -1696,6 +1873,8 @@ pub fn crossover_cluster(fabric: ClusterFabric, mode: ClusterMode) -> ClusterCon
         route: RoutePolicy::LeastOutstandingKv,
         autoscale: None,
         failures: vec![],
+        faults: FaultPlan::empty(),
+        retry: None,
     }
 }
 
@@ -1872,6 +2051,8 @@ pub fn autoscale_cluster(
         route: RoutePolicy::LeastOutstandingKv,
         autoscale,
         failures: vec![],
+        faults: FaultPlan::empty(),
+        retry: None,
     }
 }
 
@@ -1978,6 +2159,8 @@ mod tests {
             route: RoutePolicy::LeastOutstandingKv,
             autoscale: None,
             failures: vec![],
+            faults: FaultPlan::empty(),
+            retry: None,
         }
     }
 

@@ -33,6 +33,12 @@
 //!   provisioning on the supernode fabric, and blowing the SLO on the
 //!   legacy fabric (the model-load warm-up is a fabric term).
 //!
+//! Fault injection (`crate::faults`, ISSUE 6) threads through all of
+//! it: `ClusterConfig::faults` prices KV migrations and warm-ups over
+//! degraded link tiers, and `ClusterConfig::retry` arms router-level
+//! retry/backoff + hedging so serving rides out fault windows without
+//! shedding load.
+//!
 //! Everything is deterministic, so CI gates on the sweeps' virtual-time
 //! metrics (`BENCH_serving.json` vs the committed baseline).
 
@@ -63,6 +69,7 @@ pub use metrics::{
     max_qps_under_slo, rate_sweep, run_scenario, smoke_device, smoke_scenario, smoke_slo,
     OperatingPoint, RequestOutcome, Scenario, ServingReport, Slo, SMOKE_RATES,
 };
+pub use crate::faults::{FaultPlan, RetryPolicy};
 pub use router::{least_outstanding, CandidateLoad, RoutePolicy, Router};
 pub use workload::{
     diurnal_two_tenant, ArrivalProcess, LengthDist, Request, TenantProfile, WorkloadConfig,

@@ -72,6 +72,35 @@ impl Router {
         self.policy
     }
 
+    /// Pick an instance for `req` among `candidates`, avoiding
+    /// `exclude` — the instance a retry is steering away from (slow
+    /// degraded path, draining, or just crashed). The exclusion is
+    /// dropped when it would empty the candidate set: a lone slow
+    /// instance still beats rejecting the request. `SessionAffinity`
+    /// re-hashes over the filtered set, failing the pinned session
+    /// over exactly the way a consistent-hashing front-end rebalances
+    /// on membership change.
+    pub fn route_excluding(
+        &mut self,
+        req: &Request,
+        candidates: &[CandidateLoad],
+        exclude: Option<usize>,
+    ) -> usize {
+        if let Some(x) = exclude {
+            if candidates.len() > 1 {
+                let filtered: Vec<CandidateLoad> = candidates
+                    .iter()
+                    .copied()
+                    .filter(|c| c.instance != x)
+                    .collect();
+                if !filtered.is_empty() {
+                    return self.route(req, &filtered);
+                }
+            }
+        }
+        self.route(req, candidates)
+    }
+
     /// Pick an instance for `req` among `candidates` (non-empty).
     pub fn route(&mut self, req: &Request, candidates: &[CandidateLoad]) -> usize {
         assert!(!candidates.is_empty(), "router needs at least one candidate");
@@ -167,5 +196,51 @@ mod tests {
         let mut lk = Router::new(RoutePolicy::LeastOutstandingKv);
         assert_eq!(lk.route(&req(0, 0), &cands(&[5, 9])), 0);
         assert_eq!(lk.route(&req(1, 0), &cands(&[12, 9])), 1);
+    }
+
+    #[test]
+    fn retry_reroute_skips_the_excluded_instance() {
+        // regression (ISSUE 6): a retried request must not land back
+        // on the instance it is retrying away from — even when that
+        // instance still looks best by load — unless it is the only
+        // candidate left
+        let mut r = Router::new(RoutePolicy::LeastOutstandingKv);
+        let c = cands(&[0, 10, 20]);
+        assert_eq!(r.route(&req(0, 0), &c), 0, "0 wins on load");
+        assert_eq!(r.route_excluding(&req(0, 0), &c, Some(0)), 1);
+        // a sole candidate is never excluded: slow beats rejected
+        let only = cands(&[50]);
+        assert_eq!(r.route_excluding(&req(0, 0), &only, Some(0)), 0);
+        // no exclusion behaves exactly like route()
+        assert_eq!(r.route_excluding(&req(0, 0), &c, None), 0);
+    }
+
+    #[test]
+    fn session_affinity_fails_over_from_an_excluded_instance() {
+        let mut r = Router::new(RoutePolicy::SessionAffinity);
+        let c = cands(&[0, 0, 0, 0]);
+        for tenant in 0..16 {
+            let pinned = r.route(&req(0, tenant), &c);
+            let rerouted = r.route_excluding(&req(0, tenant), &c, Some(pinned));
+            assert_ne!(
+                rerouted, pinned,
+                "tenant {tenant} must fail over off its pinned instance"
+            );
+            // and the fail-over itself is deterministic
+            assert_eq!(
+                r.route_excluding(&req(0, tenant), &c, Some(pinned)),
+                rerouted
+            );
+        }
+    }
+
+    #[test]
+    fn round_robin_exclusion_cycles_over_the_filtered_set() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let c = cands(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..4)
+            .map(|i| r.route_excluding(&req(i, 0), &c, Some(1)))
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "instance 1 never picked");
     }
 }

@@ -43,4 +43,19 @@ pub mod tags {
     /// Co-scheduling: the trainer redistributing its sharded state
     /// after a lease change (devices in the union group are busy).
     pub const RESHARD: u64 = 15;
+    /// Faults: zero-length marker on a destination instance at the
+    /// instant a KV migration was priced over a degraded link (and
+    /// dispatched anyway — retries exhausted or no policy set).
+    pub const LINK_DEGRADE: u64 = 16;
+    /// Faults: a training device revoked mid-phase; the truncated
+    /// in-flight interval on every device of the aborted group (a
+    /// zero-length marker on the victim if the trainer was idle).
+    pub const DEVICE_FAIL: u64 = 17;
+    /// Faults: post-fail checkpoint-restore — the surviving lease
+    /// re-sharding the last checkpointed state (never free, unlike a
+    /// plain reshard).
+    pub const RESTORE: u64 = 18;
+    /// Faults: zero-length marker on the destination a migration was
+    /// parked *away from* when the retry policy re-routed it.
+    pub const RETRY: u64 = 19;
 }

@@ -8,7 +8,7 @@ use super::engine::{Engine, SimResult};
 use crate::util::json::{Json, JsonObj};
 
 /// Tag names for trace events; index = tag value used in `add_task`.
-pub const TAG_NAMES: [&str; 16] = [
+pub const TAG_NAMES: [&str; 20] = [
     "compute",
     "comm",
     "prefetch",
@@ -25,6 +25,10 @@ pub const TAG_NAMES: [&str; 16] = [
     "drain",
     "train_step",
     "reshard",
+    "link_degrade",
+    "device_fail",
+    "restore",
+    "retry",
 ];
 
 /// Human-readable name for a task tag.

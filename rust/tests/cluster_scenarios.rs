@@ -151,8 +151,9 @@ use hyperparallel::serving::{
     WorkloadConfig, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
 };
 use hyperparallel::serving::{spread_placement, ArrivalProcess};
+use hyperparallel::faults::{FaultPlan, LinkDegrade, RetryPolicy};
 use hyperparallel::hyperoffload::kvcache::KvCacheConfig;
-use hyperparallel::supernode::Topology;
+use hyperparallel::supernode::{LinkTier, Topology};
 use std::collections::BTreeSet;
 
 /// The ISSUE 4 acceptance scenario: across a ≥4x diurnal swing, the
@@ -287,7 +288,32 @@ fn grid_device() -> KvCacheConfig {
     }
 }
 
-fn grid_cluster(disagg: bool, route: RoutePolicy, inject: bool) -> ClusterConfig {
+/// A fault plan sized to the 0.5 s grid runs: every non-local tier
+/// degraded hard over the middle of the window, with a retry policy
+/// whose timeout is tight enough that migrations inside the window
+/// actually park and re-route (the machinery conservation must hold
+/// under, not around).
+fn grid_faults() -> (FaultPlan, RetryPolicy) {
+    let mut plan = FaultPlan::empty();
+    for tier in [LinkTier::Board, LinkTier::Rack, LinkTier::CrossRack] {
+        plan.link_windows.push(LinkDegrade {
+            tier,
+            start: 0.1,
+            end: 0.3,
+            bandwidth_scale: 0.001,
+            latency_scale: 10.0,
+        });
+    }
+    let retry = RetryPolicy {
+        timeout: 1e-5,
+        backoff: 1e-5,
+        max_attempts: 2,
+        hedge: 2.0,
+    };
+    (plan, retry)
+}
+
+fn grid_cluster(disagg: bool, route: RoutePolicy, inject: bool, faulted: bool) -> ClusterConfig {
     let topology = Topology::matrix384();
     let places = spread_placement(&topology, 8);
     let instances = if disagg {
@@ -329,6 +355,12 @@ fn grid_cluster(disagg: bool, route: RoutePolicy, inject: bool) -> ClusterConfig
     } else {
         vec![]
     };
+    let (faults, retry) = if faulted {
+        let (p, r) = grid_faults();
+        (p, Some(r))
+    } else {
+        (FaultPlan::empty(), None)
+    };
     ClusterConfig {
         topology,
         instances,
@@ -340,13 +372,16 @@ fn grid_cluster(disagg: bool, route: RoutePolicy, inject: bool) -> ClusterConfig
         route,
         autoscale,
         failures,
+        faults,
+        retry,
     }
 }
 
 /// Property: across the full router-policy × cluster-mode × seed grid
-/// — with and without crashes and elastic scale-downs injected — every
-/// generated request is completed or rejected exactly once, never lost
-/// or duplicated.
+/// — with and without crashes, elastic scale-downs, and a fault plan
+/// (degraded links + retry/hedge machinery) injected — every generated
+/// request is completed or rejected exactly once, never lost or
+/// duplicated.
 #[test]
 fn request_conservation_across_policy_mode_seed_grid() {
     let policies = [
@@ -357,7 +392,8 @@ fn request_conservation_across_policy_mode_seed_grid() {
     for disagg in [false, true] {
         for &route in &policies {
             for seed in [1u64, 2, 3] {
-                for inject in [false, true] {
+                for (inject, faulted) in [(false, false), (true, false), (false, true), (true, true)]
+                {
                     let wl = WorkloadConfig {
                         arrival: ArrivalProcess::Poisson { rate: 400.0 },
                         prompt: LengthDist::Uniform { lo: 24, hi: 72 },
@@ -365,10 +401,10 @@ fn request_conservation_across_policy_mode_seed_grid() {
                         seed,
                     };
                     let reqs = wl.generate(0.5);
-                    let cfg = grid_cluster(disagg, route, inject);
+                    let cfg = grid_cluster(disagg, route, inject, faulted);
                     let rep = simulate_cluster(&cfg, &reqs);
                     let cell = format!(
-                        "disagg={disagg} route={route:?} seed={seed} inject={inject}"
+                        "disagg={disagg} route={route:?} seed={seed} inject={inject} faulted={faulted}"
                     );
                     let ids: BTreeSet<u64> =
                         rep.serving.outcomes.iter().map(|o| o.id).collect();

@@ -14,6 +14,7 @@
 //! the harvested trough time — and the warm-up lag blows the serving
 //! SLO anyway, exactly as PR 4's elastic scenario showed.
 
+use hyperparallel::faults::{DeviceFail, LinkDegrade, RetryPolicy};
 use hyperparallel::hypermpmd::coschedule::{
     assert_tenant_isolation, cosched_comparison, cosched_scenario, cosched_slo, run_cosched,
     CoschedMode, COSCHED_POOL_DEVICES, COSCHED_RESERVE, COSCHED_STATIC_SERVING,
@@ -22,7 +23,7 @@ use hyperparallel::serving::{
     ArrivalProcess, ClusterFabric, LengthDist, WorkloadConfig, AUTOSCALE_MEAN_RATE,
 };
 use hyperparallel::sim::tags;
-use hyperparallel::supernode::DeviceId;
+use hyperparallel::supernode::{DeviceId, LinkTier};
 
 #[test]
 fn cosched_beats_static_partition_on_supernode_at_the_serving_slo() {
@@ -135,45 +136,70 @@ fn the_advantage_collapses_on_legacy_roce() {
 
 // ---- ISSUE 5 satellite: broker conservation property ------------------
 
-/// Property: across reserve sizes and both modes, every device is
-/// leased to exactly one tenant at any instant, and every lease is
-/// back at the broker (or held by a live serving instance) at drain.
-/// `run_cosched` itself asserts the set-partition invariant; this test
-/// adds the interval-overlap view and the ledger totals.
+/// Property: across reserve sizes, both modes, and with/without the
+/// ISSUE 6 fault plan layered on, every device is leased to exactly
+/// one tenant at any instant, and every lease is back at the broker
+/// (or held by a live serving instance, or revoked by a device fail)
+/// at drain. `run_cosched` itself asserts the set-partition invariant;
+/// this test adds the interval-overlap view and the ledger totals.
 #[test]
 fn broker_conservation_across_reserve_and_mode_grid() {
     for mode in [CoschedMode::Cosched, CoschedMode::StaticPartition] {
         for reserve in [0usize, 1, 2] {
             for seed in [7u64, 11] {
-                let mut cfg = cosched_scenario(ClusterFabric::Supernode, mode);
-                cfg.reserve = reserve;
-                cfg.horizon = 6.0;
-                cfg.train.train_until = 6.0;
-                cfg.workload = WorkloadConfig {
-                    arrival: ArrivalProcess::Poisson { rate: 30.0 },
-                    prompt: LengthDist::Uniform { lo: 200, hi: 600 },
-                    output: LengthDist::Uniform { lo: 16, hi: 48 },
-                    seed,
-                };
-                let rep = run_cosched(&cfg);
-                let cell = format!("mode={mode:?} reserve={reserve} seed={seed}");
-                assert_tenant_isolation(&rep);
-                // ledger: free + held-by-serving + crashed covers the
-                // pool exactly (no crashes are injected here)
-                let accounted = rep.broker.free_at_end.len()
-                    + rep.serving.held_devices_at_end.len()
-                    + rep.serving.crashed_devices.len();
-                assert_eq!(accounted, COSCHED_POOL_DEVICES, "{cell}");
-                assert!(rep.serving.crashed_devices.is_empty(), "{cell}");
-                // nothing lost on the serving side either
-                let submitted = cfg.workload.generate(cfg.horizon).len();
-                assert_eq!(
-                    rep.serving.serving.outcomes.len() + rep.serving.serving.rejected as usize,
-                    submitted,
-                    "{cell}"
-                );
-                if mode == CoschedMode::StaticPartition {
-                    assert_eq!(rep.broker.lease_misses, 0, "{cell}");
+                for faulted in [false, true] {
+                    let mut cfg = cosched_scenario(ClusterFabric::Supernode, mode);
+                    cfg.reserve = reserve;
+                    cfg.horizon = 6.0;
+                    cfg.train.train_until = 6.0;
+                    cfg.workload = WorkloadConfig {
+                        arrival: ArrivalProcess::Poisson { rate: 30.0 },
+                        prompt: LengthDist::Uniform { lo: 200, hi: 600 },
+                        output: LengthDist::Uniform { lo: 16, hi: 48 },
+                        seed,
+                    };
+                    if faulted {
+                        cfg.cluster.faults.link_windows.push(LinkDegrade {
+                            tier: LinkTier::Rack,
+                            start: 1.0,
+                            end: 3.0,
+                            bandwidth_scale: 0.05,
+                            latency_scale: 5.0,
+                        });
+                        cfg.cluster
+                            .faults
+                            .device_fails
+                            .push(DeviceFail { time: 2.0, ordinal: 1 });
+                        cfg.cluster.retry = Some(RetryPolicy::degraded_fabric());
+                    }
+                    let rep = run_cosched(&cfg);
+                    let cell =
+                        format!("mode={mode:?} reserve={reserve} seed={seed} faulted={faulted}");
+                    assert_tenant_isolation(&rep);
+                    // ledger: free + held-by-serving + crashed + failed
+                    // covers the pool exactly (no crashes are injected
+                    // here, so that term is always empty)
+                    let accounted = rep.broker.free_at_end.len()
+                        + rep.serving.held_devices_at_end.len()
+                        + rep.serving.crashed_devices.len()
+                        + rep.broker.failed_at_end.len();
+                    assert_eq!(accounted, COSCHED_POOL_DEVICES, "{cell}");
+                    assert!(rep.serving.crashed_devices.is_empty(), "{cell}");
+                    assert!(rep.broker.failed_at_end.len() <= 1, "{cell}");
+                    assert!(
+                        rep.train.steps_lost <= rep.train.device_fails,
+                        "{cell}: checkpoint-restore loses at most a step per fail"
+                    );
+                    // nothing lost on the serving side either
+                    let submitted = cfg.workload.generate(cfg.horizon).len();
+                    assert_eq!(
+                        rep.serving.serving.outcomes.len() + rep.serving.serving.rejected as usize,
+                        submitted,
+                        "{cell}"
+                    );
+                    if mode == CoschedMode::StaticPartition {
+                        assert_eq!(rep.broker.lease_misses, 0, "{cell}");
+                    }
                 }
             }
         }

@@ -1,16 +1,19 @@
-//! Determinism regression (ISSUE 4 satellite, extended by ISSUE 5):
-//! `cluster_rate_sweep` over the crossover scenario AND the
+//! Determinism regression (ISSUE 4 satellite, extended by ISSUEs 5
+//! and 6): `cluster_rate_sweep` over the crossover scenario AND the
 //! elastic-autoscale scenario AND `cosched_rate_sweep` over the
-//! co-scheduled scenario produce bit-identical reports whether the
-//! sweep runs sequentially (`HP_SWEEP_THREADS=1`) or fanned across 8
-//! workers.
+//! co-scheduled scenario — fault-free and with the ISSUE 6 fault plan
+//! (link degrades, device fails, retry/hedge machinery) injected —
+//! produce bit-identical reports whether the sweep runs sequentially
+//! (`HP_SWEEP_THREADS=1`) or fanned across 8 workers.
 //!
 //! Like `sweep_env.rs`, this binary holds exactly one test: the
 //! assertions mutate a process-global environment variable, and
 //! concurrent setenv/getenv from parallel tests is undefined behavior
 //! in glibc — an isolated binary is the only safe home.
 
-use hyperparallel::hypermpmd::coschedule::{cosched_rate_sweep, cosched_scenario, CoschedMode};
+use hyperparallel::hypermpmd::coschedule::{
+    cosched_rate_sweep, cosched_scenario, fault_cosched_scenario, CoschedMode,
+};
 use hyperparallel::serving::{
     autoscale_scenario, autoscale_slo, cluster_rate_sweep, cluster_slo, crossover_scenario,
     ClusterFabric, ClusterMode, ClusterScenario, OperatingPoint, Slo, CLUSTER_RATES,
@@ -85,5 +88,18 @@ fn cluster_sweeps_bit_identical_across_worker_counts() {
     let (par_ops, par_steps): (Vec<OperatingPoint>, Vec<u64>) = par.into_iter().unzip();
     assert_bit_identical("cosched supernode", &seq_ops, &par_ops);
     assert_eq!(seq_steps, par_steps, "cosched: training step counts");
+    // ...and the ISSUE 6 fault-injected path: retry parks, hedged
+    // re-routes, device-fail aborts and checkpoint-restores must all
+    // land on the same virtual-clock instants regardless of sweep
+    // parallelism
+    let faulted = fault_cosched_scenario();
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let fseq = cosched_rate_sweep(&faulted, &[18.0, 24.0], &slo);
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let fpar = cosched_rate_sweep(&faulted, &[18.0, 24.0], &slo);
+    let (fseq_ops, fseq_steps): (Vec<OperatingPoint>, Vec<u64>) = fseq.into_iter().unzip();
+    let (fpar_ops, fpar_steps): (Vec<OperatingPoint>, Vec<u64>) = fpar.into_iter().unzip();
+    assert_bit_identical("cosched faulted", &fseq_ops, &fpar_ops);
+    assert_eq!(fseq_steps, fpar_steps, "faulted cosched: training step counts");
     std::env::remove_var("HP_SWEEP_THREADS");
 }

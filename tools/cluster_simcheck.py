@@ -172,6 +172,41 @@ def p2p_time(fabric, tier, nbytes):
     return lat * hops + nbytes / bw
 
 
+# ---- fault model (mirror of rust/src/faults/mod.rs) --------------------
+# A fault plan is dict(links=[(tier, start, end, bw_scale, lat_scale)],
+#                      fails=[(time, ordinal)]).
+# Link windows multiply a tier's bandwidth/latency for [start, end);
+# transfers are priced at dispatch time (an in-flight transfer keeps
+# the price it started with). `fails` only concern the co-scheduled
+# trainer (see cosched_simcheck.device_fail).
+
+def fault_scale_at(plan, tier, t):
+    """Multiplicative (bandwidth, latency) scales from every link
+    window covering virtual time t on `tier`."""
+    bw, lat = 1.0, 1.0
+    if plan:
+        for wt, s, e, bs, ls in plan.get("links", ()):
+            if wt == tier and s <= t < e:
+                bw *= bs
+                lat *= ls
+    return bw, lat
+
+
+def fault_degraded_at(plan, t):
+    """Any link window covering t (cheap gate: the un-degraded path
+    must stay bit-identical to a run with no plan at all)."""
+    if not plan:
+        return False
+    return any(s <= t < e for _, s, e, _, _ in plan.get("links", ()))
+
+
+def p2p_time_at(fabric, tier, nbytes, plan, t):
+    """p2p_time over the degraded fabric at virtual time t."""
+    bw, lat, hops = FABRICS[fabric][tier]
+    bs, ls = fault_scale_at(plan, tier, t)
+    return lat * ls * hops + nbytes / (bw * bs)
+
+
 # ---- cost model --------------------------------------------------------
 
 class Cost:
@@ -322,7 +357,8 @@ def policy_decide(policy, obs):
 
 class Cluster:
     def __init__(self, cost, insts, max_seq, fabric, route="least_kv",
-                 max_preemptions=4, autoscale=None, failures=()):
+                 max_preemptions=4, autoscale=None, failures=(),
+                 faults=None, retry=None):
         self.cost = cost
         self.insts = insts
         self.max_seq = max_seq
@@ -361,6 +397,13 @@ class Cluster:
         self.last_action = -1e18
         self.recent_arrivals = deque()
         self.outcome_ptr = 0
+        # fault plan + retry policy (mirror of FaultPlan / RetryPolicy)
+        self.faults = faults
+        self.retry = retry  # dict(timeout, backoff, max_attempts, hedge)
+        self.now = 0.0
+        self.retries = []   # dicts: due, entry, attempts, drain, exclude
+        self.retries_scheduled = 0
+        self.hedged = 0
 
     # -- candidate sets ---------------------------------------------------
 
@@ -438,11 +481,40 @@ class Cluster:
 
     # -- migration / requeue machinery -----------------------------------
 
-    def dispatch_migration(self, entry, drain):
+    def hedge_filter(self, src_dev, cands, nbytes):
+        """Straggler-aware hedging: when some destination's path from
+        the source is degraded beyond retry.hedge x its clean transfer
+        time and a clean destination exists, drop the slow ones."""
+        rp = self.retry
+        if rp is None or rp["hedge"] <= 0.0 or \
+                not fault_degraded_at(self.faults, self.now):
+            return cands
+        clean = []
+        for c in cands:
+            tier = tier_between(src_dev, self.insts[c].device)
+            base = p2p_time(self.fabric, tier, nbytes)
+            eff = p2p_time_at(self.fabric, tier, nbytes, self.faults,
+                              self.now)
+            if eff <= rp["hedge"] * base:
+                clean.append(c)
+        if clean:
+            if len(clean) < len(cands):
+                self.hedged += 1
+            return clean
+        return cands
+
+    def dispatch_migration(self, entry, drain, attempts=0, exclude=None):
         """Send `entry` (whose pages are parked at entry.kv_src) to a
         serving scaled-role instance; limbo if capacity is on the way;
-        reject if it can never be served."""
+        reject if it can never be served. Transfers are priced over the
+        degraded fabric at dispatch time; the retry policy parks the
+        entry (pages stay in custody at the source) and re-routes after
+        a backoff instead of starting a transfer that would blow the
+        timeout — after max_attempts it accepts the slow path, so no
+        request is ever lost to a fault window."""
         cands = self.serving_ids(self.scaled_role)
+        if exclude is not None and len(cands) > 1:
+            cands = [c for c in cands if c != exclude]
         if not cands:
             if self.warming_count(self.scaled_role) > 0:
                 self.limbo.append(entry)
@@ -451,13 +523,30 @@ class Cluster:
                     self.handoffs.append((entry["id"], entry["kv_src"]))
                 self.rejected += 1
             return
-        dst = self.pick_dst(cands)
         src = self.insts[entry["kv_src"]]
         ctx = entry["prompt_len"] + entry["produced"]
         nbytes = ctx * self.cost.kvb
-        xfer = p2p_time(self.fabric,
-                        tier_between(src.device, self.insts[dst].device),
-                        nbytes)
+        cands = self.hedge_filter(src.device, cands, nbytes)
+        dst = self.pick_dst(cands)
+        tier = tier_between(src.device, self.insts[dst].device)
+        base = p2p_time(self.fabric, tier, nbytes)
+        if fault_degraded_at(self.faults, self.now):
+            xfer = p2p_time_at(self.fabric, tier, nbytes, self.faults,
+                               self.now)
+        else:
+            xfer = base
+        rp = self.retry
+        if rp is not None and xfer > rp["timeout"] and \
+                attempts < rp["max_attempts"]:
+            self.retries_scheduled += 1
+            self.intervals.append([dst, self.now, self.now, "retry"])
+            self.retries.append(dict(
+                due=self.now + rp["timeout"] + rp["backoff"] * attempts,
+                entry=entry, attempts=attempts + 1, drain=drain,
+                exclude=dst))
+            return
+        if xfer > base:
+            self.intervals.append([dst, self.now, self.now, "link_degrade"])
         self.migrations += 1
         self.xfer_time += xfer
         if drain:
@@ -465,13 +554,21 @@ class Cluster:
         self.insts[dst].ingest.append((entry, xfer))
         self.kick.add(dst)
 
-    def route_requeue(self, entry):
-        """Put a pageless entry back through the front-end router."""
+    def route_requeue(self, entry, exclude=None):
+        """Put a pageless entry back through the front-end router.
+        `exclude` is the slow/dead instance a retry is hedging away
+        from (dropped only if another candidate exists)."""
         cands = self.serving_ids(self.entry_role)
+        if exclude is not None and len(cands) > 1:
+            cands = [c for c in cands if c != exclude]
         if not cands:
             if self.warming_count(self.entry_role) > 0:
                 self.limbo.append(entry)
             else:
+                # release pages still parked for this entry: a rejected
+                # re-queue of a migrating sequence must not leak custody
+                if entry["kv_src"] is not None:
+                    self.handoffs.append((entry["id"], entry["kv_src"]))
                 self.rejected += 1
             return
         req = dict(id=entry["id"], tenant=entry["tenant"])
@@ -513,8 +610,12 @@ class Cluster:
         aus = self.autoscale
         serving_any = [i for i in self.insts if i.state == SERVING]
         src_dev = serving_any[0].device if serving_any else dev
-        xfer = p2p_time(self.fabric, tier_between(src_dev, dev),
-                        float(self.cost.weight))
+        tier = tier_between(src_dev, dev)
+        if fault_degraded_at(self.faults, t):
+            xfer = p2p_time_at(self.fabric, tier, float(self.cost.weight),
+                               self.faults, t)
+        else:
+            xfer = p2p_time(self.fabric, tier, float(self.cost.weight))
         k = len(self.insts)
         inst = Instance(self.scaled_role, aus["slots"], self.cost.hbm_pages(),
                         dev, state=WARMING, born=t)
@@ -653,6 +754,13 @@ class Cluster:
             if e["kv_src"] == k:
                 e["kv_src"] = None
                 e["produced"] = 0
+        # entries parked for a retry lose their source the same way:
+        # without this, the retry would later "hand off" pages against
+        # a wiped pool and resume decoding from KV that no longer exists
+        for r in self.retries:
+            if r["entry"]["kv_src"] == k:
+                r["entry"]["kv_src"] = None
+                r["entry"]["produced"] = 0
         inst.release_all()
         inst.active = [None] * inst.slots
         inst.queue.clear()
@@ -806,6 +914,10 @@ class Cluster:
             cand = (self.failures[self.fi][0], 2, self.fi)
             if best is None or cand < best:
                 best = cand
+        for i, r in enumerate(self.retries):
+            cand = (r["due"], 4, i)
+            if best is None or cand < best:
+                best = cand
         if best is None:
             return None
         if self.next_tick is not None and (self.next_tick, 3, 0) < best:
@@ -815,6 +927,7 @@ class Cluster:
     def process_event(self, ev, lessor=None):
         aus = self.autoscale
         t, cls, idx = ev
+        self.now = t
         if cls == 0:
             req = self.requests[self.ni]
             self.ni += 1
@@ -841,6 +954,16 @@ class Cluster:
         elif cls == 2:
             self.fi += 1
             self.crash_instance(self.failures[idx][1], t, lessor)
+        elif cls == 4:
+            r = self.retries.pop(idx)
+            if r["entry"]["kv_src"] is not None:
+                self.dispatch_migration(r["entry"], r["drain"],
+                                        r["attempts"], r["exclude"])
+            else:
+                # the source crashed while we waited: nothing is parked
+                # anymore, go back through the front-end router (which
+                # still avoids the slow instance)
+                self.route_requeue(r["entry"], exclude=r["exclude"])
         else:
             self.autoscale_tick(t, lessor)
             self.next_tick = t + aus["eval_interval"]
@@ -849,6 +972,8 @@ class Cluster:
         while self.handoffs or self.kick:
             hs, self.handoffs = self.handoffs, []
             for sid, src in hs:
+                assert self.insts[src].state != CRASHED, \
+                    "page handoff against a crashed source"
                 self.insts[src].release(sid)
                 self.kick.add(src)
             ks, self.kick = sorted(self.kick), set()
@@ -873,7 +998,7 @@ class Cluster:
         self.peak_alive = max(self.peak_alive, alive)
         # ticks stop once nothing can generate further work
         if self.next_tick is not None and self.ni >= len(self.requests) and \
-                self.fi >= len(self.failures) and \
+                self.fi >= len(self.failures) and not self.retries and \
                 all(i.work_end is None for i in self.insts):
             self.next_tick = None
 
@@ -891,6 +1016,7 @@ class Cluster:
             assert not inst.ledger, f"inst {k} leaked {inst.ledger}"
             assert inst.hbm_free == inst.hbm_capacity
         assert not self.limbo, "limbo entries leaked"
+        assert not self.retries, "retry entries leaked"
 
     def run(self, requests):
         self.bind(requests)

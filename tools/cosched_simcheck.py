@@ -18,8 +18,9 @@ import math
 from collections import deque
 
 from cluster_simcheck import (
-    AUTOSCALE_CFG, Cluster, Cost, FABRICS, Instance, COLOCATED,
-    autoscale_requests, operating_point, spread_device, tier_between,
+    AUTOSCALE_CFG, Cluster, Cost, FABRICS, Instance, COLOCATED, Rng,
+    autoscale_requests, fault_scale_at, operating_point, spread_device,
+    tier_between,
 )
 
 # ---- presets (mirror of coschedule.rs constants) -----------------------
@@ -142,12 +143,19 @@ def _mesh(kind, b, p, bw, lat, hops):
     return alpha + b * beta
 
 
-def coll_cost(fabric, kind, b, group):
+def coll_cost(fabric, kind, b, group, plan=None, t=None):
+    """collectives::cost over the (possibly fault-degraded) fabric:
+    a link window covering t scales the bottleneck tier's spec exactly
+    as FaultPlan::effective_topology does on the Rust side."""
     p = max(len(group), 1)
     if p <= 1:
         return 0.0
     tier = bottleneck_tier(group)
     bw, lat, hops = FABRICS[fabric][tier]
+    if plan is not None and t is not None:
+        bs, ls = fault_scale_at(plan, tier, t)
+        bw *= bs
+        lat *= ls
     cands = [_ring(kind, b, p, bw, lat, hops), _tree(kind, b, p, bw, lat, hops)]
     if fabric == "supernode":
         cands.append(_mesh(kind, b, p, bw, lat, hops))
@@ -160,7 +168,8 @@ def coll_cost(fabric, kind, b, group):
     return best
 
 
-def reconfig_time(fabric, job, old, new, checkpoint_shards):
+def reconfig_time(fabric, job, old, new, checkpoint_shards, plan=None,
+                  t=None):
     """ElasticTrainJob::reconfig_time: all-to-all of the sharded state
     over the union group when the shard count changes."""
     src = checkpoint_shards if not old else len(old)
@@ -171,7 +180,8 @@ def reconfig_time(fabric, job, old, new, checkpoint_shards):
     for d in new:
         if d not in union:
             union.append(d)
-    return coll_cost(fabric, "all_to_all", job["state"] / max(src, 1), union)
+    return coll_cost(fabric, "all_to_all", job["state"] / max(src, 1),
+                     union, plan, t)
 
 
 # ---- the device-lease broker -------------------------------------------
@@ -186,6 +196,8 @@ class Broker:
         # a lease failed since the last mediation: serving wants a
         # device now (raises the free target even with reserve == 0)
         self.demand = False
+        # devices revoked by a DeviceFail: out of the pool for good
+        self.failed = []
 
     def lease(self):
         if self.free:
@@ -238,18 +250,29 @@ class Trainer:
         self.peak = 0
         self.cache = {}
         self.intervals = []   # (device, start, end, tag)
+        # fault accounting (mirror of coschedule.rs device-fail path)
+        self.plan = None
+        self.device_fails = 0
+        self.steps_lost = 0
+        self.restores = 0
+        self.restore_sec = 0.0
+        self.mttr_sec = 0.0
+        self.last_fail = None
+        self.restore_pending = False
+        self.restoring = False
 
     def next_time(self):
         if self.phase in (STEPPING, RESHARDING):
             return self.phase_end
         return None
 
-    def step_time(self):
+    def step_time(self, now):
         d = len(self.devices)
         if d not in self.cache:
             self.cache[d] = schedule_dynamic_makespan(d)
         return self.cache[d] + coll_cost(self.fabric, "all_reduce",
-                                         self.job["grad"], self.devices)
+                                         self.job["grad"], self.devices,
+                                         self.plan, now)
 
     def advance(self, t):
         if self.phase == STEPPING:
@@ -262,9 +285,11 @@ class Trainer:
                                        "train_step"))
             self.phase = IDLE
         elif self.phase == RESHARDING:
+            tag = "restore" if self.restoring else "reshard"
+            self.restoring = False
             for d in self.union:
                 self.intervals.append((d, self.phase_start, self.phase_end,
-                                       "reshard"))
+                                       tag))
             self.last_shards = 1 if not self.devices else len(self.devices)
             self.released.extend(self.leaving)
             self.leaving = []
@@ -273,9 +298,29 @@ class Trainer:
         else:
             raise AssertionError("no trainer event was due")
 
+    def begin_restore(self, now):
+        """Post-fail checkpoint-restore: redistribute the last
+        checkpointed state onto the surviving lease. Unlike a normal
+        reconfig this is never free — the victim's in-HBM shard died
+        with it — and it pays the (possibly degraded) fabric."""
+        group = list(self.devices)
+        src = max(self.last_shards, 1)
+        rt = coll_cost(self.fabric, "all_to_all", self.job["state"] / src,
+                       group, self.plan, now)
+        self.restores += 1
+        self.restore_sec += rt
+        self.peak = max(self.peak, len(self.devices))
+        self.restoring = True
+        self.phase = RESHARDING
+        self.phase_start = now
+        self.phase_end = now + rt
+        self.leaving = []
+        self.union = group
+
     def begin_reconfig(self, now, nxt, leaving):
         old = list(self.devices)
-        rt = reconfig_time(self.fabric, self.job, old, nxt, self.last_shards)
+        rt = reconfig_time(self.fabric, self.job, old, nxt, self.last_shards,
+                           self.plan, now)
         union = list(old)
         for d in nxt:
             if d not in union:
@@ -333,6 +378,15 @@ def mediate(now, broker, trainer):
             trainer.pending = 0
             trainer.begin_reconfig(now, nxt, leaving)
             continue
+        if trainer.restore_pending:
+            # a DeviceFail revoked part of the lease: re-shard the
+            # checkpoint onto the survivors before stepping again (an
+            # empty lease restores through the normal resume-from-
+            # checkpoint pricing when it regrows)
+            trainer.restore_pending = False
+            if trainer.devices:
+                trainer.begin_restore(now)
+                continue
         min_run = max(trainer.min_devices, 1)
         harvest = broker.harvestable()
         cooled = now - trainer.last_grow >= trainer.grow_cooldown
@@ -343,7 +397,11 @@ def mediate(now, broker, trainer):
             trainer.begin_reconfig(now, nxt, [])
             continue
         if len(trainer.devices) >= min_run:
-            st = trainer.step_time()
+            st = trainer.step_time(now)
+            if trainer.last_fail is not None:
+                # MTTR: fail to the first step start after recovery
+                trainer.mttr_sec += now - trainer.last_fail
+                trainer.last_fail = None
             trainer.phase = STEPPING
             trainer.phase_start = now
             trainer.phase_end = now + st
@@ -355,9 +413,52 @@ def mediate(now, broker, trainer):
         break
 
 
+# ---- device failures (mirror of coschedule.rs device-fail path) -------
+
+def device_fail(now, ordinal, broker, trainer):
+    """Revoke one held training device (ordinal over the current
+    lease), abort the phase in flight, and arm checkpoint-restore. A
+    fail landing on an empty lease is a no-op: free and serving-held
+    devices are covered by the serving tenant's own crash model."""
+    if not trainer.devices:
+        return
+    victim = trainer.devices[ordinal % len(trainer.devices)]
+    trainer.device_fails += 1
+    if trainer.last_fail is None:
+        trainer.last_fail = now
+    if trainer.phase == STEPPING:
+        # the step aborts: work since phase_start is lost and will be
+        # redone from the last checkpointed step
+        trainer.steps_lost += 1
+        for d in trainer.devices:
+            trainer.intervals.append((d, trainer.phase_start, now,
+                                      "device_fail"))
+    elif trainer.phase == RESHARDING:
+        for d in trainer.union:
+            trainer.intervals.append((d, trainer.phase_start, now,
+                                      "device_fail"))
+        # the in-flight redistribution is void: leaving devices still
+        # hold their checkpointed shards, so they rejoin the lease and
+        # the broker's claim is re-armed
+        trainer.pending += len(trainer.leaving)
+        trainer.devices = list(trainer.devices) + trainer.leaving
+        trainer.leaving = []
+        trainer.union = []
+        trainer.restoring = False
+    else:
+        trainer.intervals.append((victim, now, now, "device_fail"))
+    trainer.phase = IDLE
+    trainer.phase_start = None
+    trainer.phase_end = None
+    trainer.devices = [d for d in trainer.devices if d != victim]
+    broker.failed.append(victim)
+    trainer.restore_pending = True
+
+
 # ---- the co-scheduled run ----------------------------------------------
 
-def cosched_cluster(fabric, elastic, cfg=AUTOSCALE_CFG):
+def cosched_cluster(fabric, elastic, cfg=AUTOSCALE_CFG, faults=None,
+                    retry=None, failures=()):
     """Serving tenant of the co-scheduled scenario: PR 4's elastic
     diurnal cluster leasing from the broker (no private pool), or the
     static half of the half/half partition baseline."""
@@ -374,11 +475,14 @@ def cosched_cluster(fabric, elastic, cfg=AUTOSCALE_CFG):
                          slots=cfg["slots"], up_cooldown=cfg["up_cooldown"],
                          down_cooldown=cfg["down_cooldown"],
                          lookback=cfg["lookback"], pool=[])
-    return Cluster(cost, insts, cfg["max_seq"], fabric, autoscale=autoscale), n0
+    return Cluster(cost, insts, cfg["max_seq"], fabric, autoscale=autoscale,
+                   failures=failures, faults=faults, retry=retry), n0
 
 
-def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG):
-    cluster, n0 = cosched_cluster(fabric, elastic, cfg)
+def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG, faults=None, retry=None,
+                failures=()):
+    cluster, n0 = cosched_cluster(fabric, elastic, cfg, faults, retry,
+                                  failures)
     reqs = autoscale_requests(cfg)
     cluster.bind(reqs)
     pool = [spread_device(fabric, i) for i in range(n0, COSCHED_POOL)]
@@ -387,11 +491,22 @@ def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG):
     trainer = Trainer(fabric, TRAIN_JOB, TRAIN_MIN_DEVICES,
                       TRAIN_GROW_COOLDOWN if elastic else 0.0,
                       cfg["horizon"])
+    trainer.plan = faults
+    fails = sorted((faults or {}).get("fails", ()))
+    fli = 0
     now = 0.0
     while True:
         mediate(now, broker, trainer)
         se = cluster.next_event()
         tt = trainer.next_time()
+        ft = fails[fli][0] if fli < len(fails) else None
+        # device-fail events win ties, then serving, then the trainer
+        if ft is not None and (se is None or ft <= se[0]) and \
+                (tt is None or ft <= tt):
+            now = ft
+            device_fail(now, fails[fli][1], broker, trainer)
+            fli += 1
+            continue
         if se is None and tt is None:
             break
         if tt is None or (se is not None and se[0] <= tt):
@@ -405,12 +520,12 @@ def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG):
     assert not trainer.devices, "trainer must return its lease at drain"
 
     # lease conservation: every pool device is exactly one of
-    # broker-free / serving-held / crashed at drain
+    # broker-free / serving-held / crashed / failed at drain
     from cluster_simcheck import CRASHED, DRAINING, RELEASED, SERVING, WARMING
     held = [i.device for i in cluster.insts
             if i.state in (SERVING, WARMING, DRAINING)]
     crashed = [i.device for i in cluster.insts if i.state == CRASHED]
-    accounted = list(broker.free) + held + crashed
+    accounted = list(broker.free) + held + crashed + list(broker.failed)
     assert len(accounted) == len(set(accounted)) == COSCHED_POOL, \
         f"lease conservation violated: {len(accounted)} accounted"
 
@@ -434,6 +549,47 @@ def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG):
                 f"device {dev}: {other} overlaps {tenant} ({max_fin[other]} > {s})"
             max_fin[tenant] = max(max_fin[tenant], f)
     return cluster, trainer, broker
+
+
+# ---- fault presets (mirror of faults::chaos) ---------------------------
+
+# Retry policy the fault scenarios run with (RetryPolicy::degraded_fabric):
+# park a migration whose priced transfer exceeds 5 ms, back off 2.5 ms
+# per attempt, accept the slow path after 2 re-routes; hedge away from
+# destinations whose path is >2x its clean transfer time.
+RETRY = dict(timeout=0.005, backoff=0.0025, max_attempts=2, hedge=2.0)
+
+# The checked-in seed-42 scenario (ISSUE 6 acceptance): one DeviceFail
+# at t=18 during training, plus a 10x rack-tier degrade over [20, 26).
+CHAOS_PLAN = dict(
+    links=[("rack", 20.0, 26.0, 0.1, 10.0)],
+    fails=[(18.0, 3)],
+)
+
+
+def random_plan(seed, horizon):
+    """Seeded chaos schedule — mirror of faults::chaos::random_plan
+    (identical Rng draw order, so the Rust suite sees the same plans):
+    1-3 link windows, 0-2 training-device fails, 0-1 serving crashes."""
+    rng = Rng(seed)
+    tiers = ["board", "rack", "cross_rack"]
+    links = []
+    for _ in range(1 + rng.below(3)):
+        tier = tiers[rng.below(3)]
+        start = rng.next_f64() * 0.6 * horizon
+        dur = (0.05 + 0.25 * rng.next_f64()) * horizon
+        bw_scale = 0.02 + 0.18 * rng.next_f64()
+        lat_scale = 1.0 + 9.0 * rng.next_f64()
+        links.append((tier, start, start + dur, bw_scale, lat_scale))
+    fails = []
+    for _ in range(rng.below(3)):
+        t = (0.1 + 0.8 * rng.next_f64()) * horizon
+        fails.append((t, rng.below(64)))
+    crashes = []
+    for _ in range(rng.below(2)):
+        t = (0.1 + 0.8 * rng.next_f64()) * horizon
+        crashes.append((t, rng.below(8)))
+    return dict(links=links, fails=fails), crashes
 
 
 def describe(fabric, elastic, cfg=AUTOSCALE_CFG):
@@ -482,3 +638,53 @@ if __name__ == "__main__":
     assert lg_co[1].reshard_sec > 10.0 * sn_co[1].reshard_sec, \
         "legacy resharding must dwarf supernode resharding"
     print("co-scheduling crossover bounds hold")
+
+    # ---- ISSUE 6: fault injection + recovery ---------------------------
+    print("\n=== faults (seed 42): DeviceFail @18s + 10x rack degrade "
+          "[20,26)s ===")
+    n_req = len(autoscale_requests(cfg))
+    cl_f, tr_f, br_f = run_cosched("supernode", True, faults=CHAOS_PLAN,
+                                   retry=RETRY)
+    opf = operating_point(cl_f, cfg["mean_rate"], *cfg["slo"])
+    base_p99 = sn_co[0]["p99_ttft"]
+    ratio = opf["p99_ttft"] / base_p99
+    print(f"  done {opf['completed']} rej {opf['rejected']} "
+          f"p99ttft {opf['p99_ttft']:.4f} ({ratio:.2f}x fault-free) | "
+          f"steps {tr_f.steps_dl} lost {tr_f.steps_lost} "
+          f"fails {tr_f.device_fails} restores {tr_f.restores} "
+          f"({tr_f.restore_sec * 1e3:.1f}ms) mttr {tr_f.mttr_sec:.3f}s | "
+          f"retries {cl_f.retries_scheduled} hedged {cl_f.hedged} "
+          f"failed-dev {len(br_f.failed)}")
+    assert opf["completed"] + opf["rejected"] == n_req, "requests lost"
+    assert opf["rejected"] == 0, "faults must not shed serving load"
+    assert tr_f.device_fails == 1 and len(br_f.failed) == 1
+    assert tr_f.steps_lost <= 1, "checkpoint-restore loses at most a step"
+    assert tr_f.restores >= 1 and tr_f.mttr_sec > 0.0
+    assert ratio <= 2.0, f"faulted p99 TTFT {ratio:.2f}x over fault-free"
+    assert tr_f.steps_dl >= sn_co[1].steps_dl - 5, \
+        f"fault must cost a few steps at most: {tr_f.steps_dl}"
+
+    # ---- ISSUE 6: chaos property suite ---------------------------------
+    chaos_cfg = dict(cfg, horizon=12.0)
+    n_chaos = len(autoscale_requests(chaos_cfg))
+    seeds = range(16)
+    print(f"\n=== chaos property suite ({len(seeds)} schedules, "
+          f"{n_chaos} requests / 12s each) ===")
+    for seed in seeds:
+        plan, crashes = random_plan(seed, chaos_cfg["horizon"])
+        cl_c, tr_c, br_c = run_cosched("supernode", True, chaos_cfg,
+                                       faults=plan, retry=RETRY,
+                                       failures=crashes)
+        opc = operating_point(cl_c, chaos_cfg["mean_rate"],
+                              *chaos_cfg["slo"])
+        # run_cosched already asserted lease partition, page custody,
+        # and tenant overlap-freedom; request conservation closes it
+        assert opc["completed"] + opc["rejected"] == n_chaos, \
+            f"seed {seed}: requests lost"
+        assert tr_c.steps_lost <= tr_c.device_fails, f"seed {seed}"
+        print(f"  seed {seed:>2}: links {len(plan['links'])} "
+              f"fails {len(plan['fails'])} crashes {len(crashes)} | "
+              f"done {opc['completed']:>4} rej {opc['rejected']:>2} "
+              f"steps {tr_c.steps_dl:>3} lost {tr_c.steps_lost} "
+              f"retries {cl_c.retries_scheduled:>2} hedged {cl_c.hedged:>2}")
+    print("fault-injection and chaos bounds hold")
