@@ -21,10 +21,11 @@
 
 use hyperparallel::faults::{LinkDegrade, RetryPolicy};
 use hyperparallel::serving::{
-    autoscale_comparison, autoscale_crash_scenario, autoscale_slo, cluster_slo,
-    crossover_comparison, crossover_scenario, max_qps_under_slo, rate_sweep, run_cluster_scenario,
-    run_scenario, smoke_scenario, smoke_slo, ArrivalProcess, ClusterFabric, ClusterMode,
-    OperatingPoint, AUTOSCALE_MEAN_RATE, CLUSTER_RATES, SMOKE_RATES,
+    agentic_comparison, agentic_scenario, autoscale_comparison, autoscale_crash_scenario,
+    autoscale_slo, cluster_slo, crossover_comparison, crossover_scenario, max_qps_under_slo,
+    rate_sweep, run_agentic_scenario, run_cluster_scenario, run_scenario, smoke_scenario,
+    smoke_slo, ArrivalProcess, ClusterFabric, ClusterMode, ClusterReport, OperatingPoint,
+    AUTOSCALE_MEAN_RATE, CLUSTER_RATES, SMOKE_RATES,
 };
 use hyperparallel::supernode::LinkTier;
 use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
@@ -69,6 +70,16 @@ fn main() {
         iters,
         || {
             std::hint::black_box(run_cluster_scenario(&elastic).completed());
+        },
+    ));
+    let agentic = agentic_scenario(ClusterFabric::Supernode, true);
+    let n_agentic = agentic.workload.generate(agentic.horizon).len();
+    results.push(run(
+        &format!("serve sim agentic multiturn {n_agentic} turns (radix prefix store)"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_agentic_scenario(&agentic).completed());
         },
     ));
 
@@ -279,6 +290,55 @@ fn main() {
         "faults.degraded.hedged",
         Json::from(degr_rep.hedged as f64),
     );
+
+    section("agentic prefix cache (virtual time — deterministic, CI-gated)");
+    // ISSUE 7: every gated number flows through the same summary_kv
+    // rows the reports print everywhere else — the gate and the
+    // human-readable surfaces can never drift apart.
+    let kv_of = |rep: &ClusterReport, key: &str| -> f64 {
+        rep.summary_kv()
+            .into_iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .unwrap_or_else(|| panic!("summary_kv misses {key}"))
+    };
+    let sn = agentic_comparison(ClusterFabric::Supernode);
+    let lg = agentic_comparison(ClusterFabric::Legacy);
+    for (fabric, s) in [("supernode", &sn), ("legacy", &lg)] {
+        println!(
+            "  {fabric:<9} cache-aware {:.0} vs cache-blind {:.0} req/s ({:.2}x)  hit rate \
+             {:.3}  recomputed ratio {:.3}  fetch {}",
+            s.aware.rate,
+            s.blind.rate,
+            s.qps_gain(),
+            kv_of(&s.aware_report, "prefix_hit_rate"),
+            kv_of(&s.aware_report, "tokens_recomputed_ratio"),
+            fmt_secs(kv_of(&s.aware_report, "prefix_fetch_time")),
+        );
+    }
+    println!(
+        "  headline: {:.2}x on supernode (gate >= 1.3x), collapsing to {:.2}x on legacy",
+        sn.qps_gain(),
+        lg.qps_gain()
+    );
+    metrics.insert(
+        "serving.prefix.supernode.aware.max_qps_under_slo",
+        Json::from(sn.aware.rate),
+    );
+    metrics.insert(
+        "serving.prefix.supernode.blind.max_qps_under_slo",
+        Json::from(sn.blind.rate),
+    );
+    metrics.insert("serving.prefix.supernode.qps_gain", Json::from(sn.qps_gain()));
+    metrics.insert(
+        "serving.prefix.supernode.tokens_recomputed_ratio",
+        Json::from(kv_of(&sn.aware_report, "tokens_recomputed_ratio")),
+    );
+    metrics.insert(
+        "serving.prefix.supernode.hit_rate",
+        Json::from(kv_of(&sn.aware_report, "prefix_hit_rate")),
+    );
+    metrics.insert("serving.prefix.legacy.qps_gain", Json::from(lg.qps_gain()));
 
     // Combined artifact: wall-clock benches + gated virtual-time
     // metrics. Written directly (not via util::bench::maybe_write_json)

@@ -54,9 +54,7 @@ use crate::serving::cluster::{
     ClusterConfig, ClusterFabric, ClusterReport, ClusterSim, DeviceLessor, InstanceRole,
     InstanceSpec,
 };
-use crate::serving::memory::MemoryPolicy;
 use crate::serving::metrics::{OperatingPoint, Slo};
-use crate::serving::router::RoutePolicy;
 use crate::serving::workload::WorkloadConfig;
 use crate::serving::{
     batcher::CostModel, AUTOSCALE_INITIAL_INSTANCES, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
@@ -493,6 +491,28 @@ pub struct TrainTenantReport {
     pub trace_devices: Vec<DeviceId>,
 }
 
+impl TrainTenantReport {
+    /// The training-tenant summary rows, same contract as
+    /// `ServingReport::summary_kv` / `ClusterReport::summary_kv`:
+    /// every bench/example emission flows through this one key set.
+    pub fn summary_kv(&self) -> Vec<(String, f64)> {
+        let push = |k: &str, v: f64| (k.to_string(), v);
+        vec![
+            push("steps", self.steps as f64),
+            push("steps_by_deadline", self.steps_by_deadline as f64),
+            push("reshards", self.reshards as f64),
+            push("reshard_seconds", self.reshard_seconds),
+            push("device_step_seconds", self.device_step_seconds),
+            push("peak_devices", self.peak_devices as f64),
+            push("device_fails", self.device_fails as f64),
+            push("steps_lost", self.steps_lost as f64),
+            push("restores", self.restores as f64),
+            push("restore_seconds", self.restore_seconds),
+            push("mttr_seconds", self.mttr_seconds),
+        ]
+    }
+}
+
 /// Broker ledger of a co-scheduled run.
 #[derive(Debug, Clone)]
 pub struct BrokerReport {
@@ -860,20 +880,15 @@ pub fn cosched_scenario(fabric: ClusterFabric, mode: CoschedMode) -> CoschedConf
             slots: AUTOSCALE_SLOTS,
         })
         .collect();
-    let cluster = ClusterConfig {
+    let mut b = ClusterConfig::builder(
         topology,
         instances,
-        max_seq: 4096,
-        cost: CostModel::new(autoscale_device(), 0.0),
-        policy: MemoryPolicy::NoOffload,
-        pool_pages: 0,
-        max_preemptions: 4,
-        route: RoutePolicy::LeastOutstandingKv,
-        autoscale,
-        failures: vec![],
-        faults: FaultPlan::empty(),
-        retry: None,
-    };
+        CostModel::new(autoscale_device(), 0.0),
+    );
+    if let Some(aus) = autoscale {
+        b = b.autoscale(aus);
+    }
+    let cluster = b.build();
     CoschedConfig {
         cluster,
         workload: autoscale_workload(AUTOSCALE_MEAN_RATE),

@@ -8,14 +8,21 @@
 //!   compute.
 //! - [`kvcache`] — paged KV cache with HBM↔DRAM swapping for the
 //!   inference claim (71K → 123K context).
+//! - [`prefix`] — fleet-wide radix-style prefix store deduplicating
+//!   shared KV runs across sessions, with tiered HBM → pooled DRAM →
+//!   host placement for agentic multi-turn serving.
 
 pub mod kvcache;
 pub mod orchestrator;
 pub mod policy;
 pub mod prefetcher;
+pub mod prefix;
 pub mod recompute;
 
 pub use kvcache::{KvCacheConfig, PagedKvCache};
+pub use prefix::{
+    PrefixCacheConfig, PrefixKey, PrefixOp, PrefixSegment, PrefixStore, PrefixTier,
+};
 pub use recompute::{
     plan_recompute, sqrt_checkpointing, ActDecision, LayerActs, RecomputeConfig, RecomputePlan,
 };

@@ -1,0 +1,761 @@
+//! Fleet-wide radix-style prefix store with tiered KV placement
+//! (ISSUE 7).
+//!
+//! Agentic multi-turn serving re-sends the same leading tokens over
+//! and over: every session of a tenant starts with the tenant's
+//! system prompt, and every turn of a session re-sends the whole
+//! conversation so far. The `PrefixStore` deduplicates the KV pages
+//! backing those shared runs *fleet-wide*, the radix way: one
+//! canonical run per token-prefix key, never one copy per request.
+//! The simulator does not materialize token content, so the radix
+//! path is keyed structurally — a per-tenant run for the system
+//! prompt (`[0, split)`) and a per-session run for the conversation
+//! history beyond it (`[split, …)`), where `split` is learned from
+//! the first shared prefix a tenant ever presents (a session's first
+//! turn shares exactly the system prompt).
+//!
+//! Each run lives in exactly one tier of the HyperOffload hierarchy —
+//! an instance's HBM, the pooled supernode DRAM, or host memory —
+//! and demotes down that chain under LRU pressure, driven by
+//! [`OffloadPolicy`]: the policy's HBM reserve fraction shrinks the
+//! per-instance HBM budget, and a disabled policy collapses the
+//! hierarchy to HBM-only (overflow evicts instead of demoting,
+//! mirroring `MemoryPolicy::NoOffload`). The store is pure
+//! deterministic bookkeeping; *pricing* a fetch, promotion, or
+//! demotion over the fabric is the cluster's job (it owns the
+//! `Topology` and the fault plan), which is why mutating operations
+//! return [`PrefixOp`]s for the caller to price and trace.
+//!
+//! Conservation invariant (property-tested like `PagePool`): per
+//! tier, the tracked page counters equal the sum over runs, every
+//! run's pages match its token count, and no budget is exceeded
+//! after a rebalance. An instance crash drops every run homed there
+//! except host-tier ones — HBM and pooled leases die with the
+//! instance, so no shared run may dangle.
+
+use crate::hyperoffload::policy::OffloadPolicy;
+use std::collections::BTreeMap;
+
+/// Where a cached prefix run currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixTier {
+    /// In the HBM of its home instance — hit for free locally.
+    Hbm,
+    /// In the pooled supernode DRAM slice of its home instance.
+    Pool,
+    /// In host memory (fleet-level; survives instance crashes).
+    Host,
+}
+
+/// Identity of a cached run: the structural radix key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PrefixKey {
+    /// The tenant's shared system prompt, tokens `[0, split)`.
+    Tenant(usize),
+    /// One session's conversation history, tokens `[split, …)`.
+    Session(usize, u64),
+}
+
+/// One reusable piece of a request's shared prefix, as `lookup`
+/// reports it: `tokens`/`pages` are already clipped to what the
+/// request actually shares.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixSegment {
+    pub key: PrefixKey,
+    pub tokens: usize,
+    pub pages: usize,
+    pub tier: PrefixTier,
+    /// Home instance (meaningful for `Hbm`/`Pool`; host runs keep
+    /// their last home only for bookkeeping).
+    pub home: usize,
+}
+
+/// A placement change the store performed; the caller prices it over
+/// the fabric and records the trace marker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrefixOp {
+    /// A used run moved (back) into the admitting instance's HBM.
+    Promote {
+        key: PrefixKey,
+        pages: usize,
+        from: PrefixTier,
+        from_home: usize,
+    },
+    /// LRU pressure pushed a run one tier down.
+    Demote {
+        key: PrefixKey,
+        pages: usize,
+        from: PrefixTier,
+        to: PrefixTier,
+        home: usize,
+    },
+    /// A run fell off the end of the hierarchy.
+    Evict {
+        key: PrefixKey,
+        pages: usize,
+        from: PrefixTier,
+    },
+}
+
+/// Capacity/policy knobs of the fleet-wide prefix store.
+#[derive(Debug, Clone)]
+pub struct PrefixCacheConfig {
+    /// HBM pages carved out per instance for cached prefixes (on top
+    /// of the `PagePool` working set). The offload policy's reserve
+    /// fraction shrinks this further.
+    pub hbm_pages_per_instance: usize,
+    /// Pooled supernode DRAM pages, fleet-wide. Zero on fabrics with
+    /// no pooled memory (legacy clusters): demotions then skip
+    /// straight to host.
+    pub pool_pages: usize,
+    /// Host-memory pages, fleet-wide; runs evicted past this are
+    /// gone.
+    pub host_pages: usize,
+    /// Host-memory streaming bandwidth, bytes/s — the price of a
+    /// host-tier fetch (fabric-independent; this is the PCIe-class
+    /// path recompute races against).
+    pub host_bw: f64,
+    /// Drives the tiering: the reserve fraction shrinks the HBM
+    /// budget, and a disabled policy turns demotion into eviction.
+    pub policy: OffloadPolicy,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Run {
+    tokens: usize,
+    pages: usize,
+    tier: PrefixTier,
+    home: usize,
+    last_use: u64,
+}
+
+/// The fleet-wide store. All state is `BTreeMap`-ordered and every
+/// decision is LRU-by-logical-clock, so runs replay bit-identically.
+#[derive(Debug, Clone)]
+pub struct PrefixStore {
+    cfg: PrefixCacheConfig,
+    tokens_per_page: usize,
+    tenant_runs: BTreeMap<usize, Run>,
+    session_runs: BTreeMap<(usize, u64), Run>,
+    /// Learned per-tenant system-prompt length (the first shared
+    /// prefix a tenant presents is exactly its system prompt).
+    tenant_split: BTreeMap<usize, usize>,
+    clock: u64,
+    hbm_used: BTreeMap<usize, usize>,
+    pool_used: usize,
+    host_used: usize,
+}
+
+impl PrefixStore {
+    pub fn new(cfg: PrefixCacheConfig, tokens_per_page: usize) -> Self {
+        Self {
+            cfg,
+            tokens_per_page: tokens_per_page.max(1),
+            tenant_runs: BTreeMap::new(),
+            session_runs: BTreeMap::new(),
+            tenant_split: BTreeMap::new(),
+            clock: 0,
+            hbm_used: BTreeMap::new(),
+            pool_used: 0,
+            host_used: 0,
+        }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    /// Per-instance HBM page budget after the policy's reserve.
+    pub fn hbm_budget_pages(&self) -> usize {
+        if self.cfg.policy.enabled {
+            (self.cfg.hbm_pages_per_instance as f64 * (1.0 - self.cfg.policy.hbm_reserve_frac))
+                as usize
+        } else {
+            self.cfg.hbm_pages_per_instance
+        }
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.tokens_per_page)
+    }
+
+    /// The reusable segments of a request's shared prefix, tenant run
+    /// first. Read-only; the caller prices each segment and decides
+    /// fetch vs recompute.
+    pub fn lookup(
+        &self,
+        tenant: usize,
+        session: u64,
+        shared_prefix_tokens: usize,
+    ) -> Vec<PrefixSegment> {
+        let mut segs = Vec::new();
+        let split = self.tenant_split.get(&tenant).copied().unwrap_or(0);
+        if let Some(run) = self.tenant_runs.get(&tenant) {
+            let tokens = run.tokens.min(shared_prefix_tokens);
+            if tokens > 0 {
+                segs.push(PrefixSegment {
+                    key: PrefixKey::Tenant(tenant),
+                    tokens,
+                    pages: self.pages_for(tokens),
+                    tier: run.tier,
+                    home: run.home,
+                });
+            }
+        }
+        if shared_prefix_tokens > split {
+            if let Some(run) = self.session_runs.get(&(tenant, session)) {
+                let tokens = run.tokens.min(shared_prefix_tokens - split);
+                if tokens > 0 {
+                    segs.push(PrefixSegment {
+                        key: PrefixKey::Session(tenant, session),
+                        tokens,
+                        pages: self.pages_for(tokens),
+                        tier: run.tier,
+                        home: run.home,
+                    });
+                }
+            }
+        }
+        segs
+    }
+
+    /// Pages of the request's shared prefix resident in `instance`'s
+    /// HBM — the router's `expected_prefix_hit_pages` signal.
+    pub fn local_hit_pages(
+        &self,
+        tenant: usize,
+        session: u64,
+        shared_prefix_tokens: usize,
+        instance: usize,
+    ) -> usize {
+        self.lookup(tenant, session, shared_prefix_tokens)
+            .iter()
+            .filter(|s| s.tier == PrefixTier::Hbm && s.home == instance)
+            .map(|s| s.pages)
+            .sum()
+    }
+
+    /// Record an admission on `instance`: bump + promote the runs the
+    /// cluster chose to reuse (`used`), learn the tenant split, and
+    /// insert/extend runs so the whole prompt `[0, prompt_tokens)` is
+    /// cached here, then rebalance the tiers. Returns the placement
+    /// changes for pricing/tracing.
+    pub fn admit(
+        &mut self,
+        tenant: usize,
+        session: u64,
+        shared_prefix_tokens: usize,
+        prompt_tokens: usize,
+        instance: usize,
+        used: &[PrefixKey],
+    ) -> Vec<PrefixOp> {
+        self.clock += 1;
+        let mut ops = Vec::new();
+        if shared_prefix_tokens > 0 {
+            self.tenant_split.entry(tenant).or_insert(shared_prefix_tokens);
+        }
+        for &key in used {
+            self.touch(key, instance, &mut ops);
+        }
+        let split = self.tenant_split.get(&tenant).copied().unwrap_or(0);
+        let tenant_cover = split.min(prompt_tokens);
+        if tenant_cover > 0 {
+            self.upsert(PrefixKey::Tenant(tenant), tenant_cover, instance);
+        }
+        if prompt_tokens > split {
+            self.upsert(PrefixKey::Session(tenant, session), prompt_tokens - split, instance);
+        }
+        self.rebalance(&mut ops);
+        ops
+    }
+
+    /// Record a completion on `instance`: the session's history now
+    /// includes the produced output, so extend its run to cover
+    /// `total_history_tokens` (prompt + output).
+    pub fn extend(
+        &mut self,
+        tenant: usize,
+        session: u64,
+        total_history_tokens: usize,
+        instance: usize,
+    ) -> Vec<PrefixOp> {
+        self.clock += 1;
+        let mut ops = Vec::new();
+        let split = self.tenant_split.get(&tenant).copied().unwrap_or(0);
+        if total_history_tokens > split {
+            self.upsert(
+                PrefixKey::Session(tenant, session),
+                total_history_tokens - split,
+                instance,
+            );
+            self.rebalance(&mut ops);
+        }
+        ops
+    }
+
+    /// Drop every run homed at a crashed or released instance, except
+    /// host-tier runs (host memory outlives instances). Returns the
+    /// pages dropped.
+    pub fn invalidate_instance(&mut self, instance: usize) -> usize {
+        let mut dropped = 0;
+        let tenant_keys: Vec<usize> = self
+            .tenant_runs
+            .iter()
+            .filter(|(_, r)| r.home == instance && r.tier != PrefixTier::Host)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in tenant_keys {
+            let run = self.tenant_runs.remove(&k).unwrap();
+            self.untrack(&run);
+            dropped += run.pages;
+        }
+        let session_keys: Vec<(usize, u64)> = self
+            .session_runs
+            .iter()
+            .filter(|(_, r)| r.home == instance && r.tier != PrefixTier::Host)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in session_keys {
+            let run = self.session_runs.remove(&k).unwrap();
+            self.untrack(&run);
+            dropped += run.pages;
+        }
+        dropped
+    }
+
+    /// Non-host runs homed at `instance` — zero after an
+    /// invalidation (the "no dangling shared runs" invariant).
+    pub fn runs_homed_at(&self, instance: usize) -> usize {
+        self.all_runs()
+            .filter(|(_, r)| r.home == instance && r.tier != PrefixTier::Host)
+            .count()
+    }
+
+    pub fn run_count(&self) -> usize {
+        self.tenant_runs.len() + self.session_runs.len()
+    }
+
+    pub fn hbm_used(&self, instance: usize) -> usize {
+        self.hbm_used.get(&instance).copied().unwrap_or(0)
+    }
+
+    pub fn pool_used(&self) -> usize {
+        self.pool_used
+    }
+
+    pub fn host_used(&self) -> usize {
+        self.host_used
+    }
+
+    /// Per tier: tracked counters equal the per-run sums, page counts
+    /// match token counts, and no budget is exceeded.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let mut hbm: BTreeMap<usize, usize> = BTreeMap::new();
+        let (mut pool, mut host) = (0usize, 0usize);
+        for (key, run) in self.all_runs() {
+            if run.tokens == 0 || run.pages != self.pages_for(run.tokens) {
+                return Err(format!(
+                    "{key:?}: pages {} inconsistent with tokens {}",
+                    run.pages, run.tokens
+                ));
+            }
+            match run.tier {
+                PrefixTier::Hbm => *hbm.entry(run.home).or_insert(0) += run.pages,
+                PrefixTier::Pool => pool += run.pages,
+                PrefixTier::Host => host += run.pages,
+            }
+        }
+        let tracked: BTreeMap<usize, usize> = self
+            .hbm_used
+            .iter()
+            .filter(|(_, &v)| v > 0)
+            .map(|(&k, &v)| (k, v))
+            .collect();
+        if tracked != hbm {
+            return Err(format!("hbm ledger drift: tracked {tracked:?} vs runs {hbm:?}"));
+        }
+        if self.pool_used != pool || self.host_used != host {
+            return Err(format!(
+                "pool/host ledger drift: tracked {}/{} vs runs {pool}/{host}",
+                self.pool_used, self.host_used
+            ));
+        }
+        let budget = self.hbm_budget_pages();
+        for (&inst, &used) in &self.hbm_used {
+            if used > budget {
+                return Err(format!("instance {inst} over HBM budget: {used} > {budget}"));
+            }
+        }
+        if self.pool_used > self.cfg.pool_pages {
+            return Err(format!(
+                "pool over budget: {} > {}",
+                self.pool_used, self.cfg.pool_pages
+            ));
+        }
+        if self.host_used > self.cfg.host_pages {
+            return Err(format!(
+                "host over budget: {} > {}",
+                self.host_used, self.cfg.host_pages
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    fn all_runs(&self) -> impl Iterator<Item = (PrefixKey, &Run)> {
+        self.tenant_runs
+            .iter()
+            .map(|(&t, r)| (PrefixKey::Tenant(t), r))
+            .chain(
+                self.session_runs
+                    .iter()
+                    .map(|(&(t, s), r)| (PrefixKey::Session(t, s), r)),
+            )
+    }
+
+    fn run_mut(&mut self, key: PrefixKey) -> Option<&mut Run> {
+        match key {
+            PrefixKey::Tenant(t) => self.tenant_runs.get_mut(&t),
+            PrefixKey::Session(t, s) => self.session_runs.get_mut(&(t, s)),
+        }
+    }
+
+    fn track(&mut self, run: &Run) {
+        match run.tier {
+            PrefixTier::Hbm => *self.hbm_used.entry(run.home).or_insert(0) += run.pages,
+            PrefixTier::Pool => self.pool_used += run.pages,
+            PrefixTier::Host => self.host_used += run.pages,
+        }
+    }
+
+    fn untrack(&mut self, run: &Run) {
+        match run.tier {
+            PrefixTier::Hbm => {
+                let u = self.hbm_used.entry(run.home).or_insert(0);
+                *u -= run.pages;
+            }
+            PrefixTier::Pool => self.pool_used -= run.pages,
+            PrefixTier::Host => self.host_used -= run.pages,
+        }
+    }
+
+    /// A reused run moves (back) into the admitting instance's HBM.
+    fn touch(&mut self, key: PrefixKey, instance: usize, ops: &mut Vec<PrefixOp>) {
+        let clock = self.clock;
+        let Some(run) = self.run_mut(key) else { return };
+        let (tier, home, pages) = (run.tier, run.home, run.pages);
+        if tier != PrefixTier::Hbm || home != instance {
+            let mut moved = *run;
+            self.untrack(&moved);
+            moved.tier = PrefixTier::Hbm;
+            moved.home = instance;
+            self.track(&moved);
+            let run = self.run_mut(key).unwrap();
+            run.tier = PrefixTier::Hbm;
+            run.home = instance;
+            ops.push(PrefixOp::Promote {
+                key,
+                pages,
+                from: tier,
+                from_home: home,
+            });
+        }
+        self.run_mut(key).unwrap().last_use = clock;
+    }
+
+    /// Insert the run, or grow it to `tokens` — the fresh KV was just
+    /// (re)computed at `instance`, so a grown run re-homes there.
+    fn upsert(&mut self, key: PrefixKey, tokens: usize, instance: usize) {
+        let clock = self.clock;
+        let pages = self.pages_for(tokens);
+        match self.run_mut(key) {
+            None => {
+                let run = Run {
+                    tokens,
+                    pages,
+                    tier: PrefixTier::Hbm,
+                    home: instance,
+                    last_use: clock,
+                };
+                match key {
+                    PrefixKey::Tenant(t) => {
+                        self.tenant_runs.insert(t, run);
+                    }
+                    PrefixKey::Session(t, s) => {
+                        self.session_runs.insert((t, s), run);
+                    }
+                }
+                self.track(&run);
+            }
+            Some(run) => {
+                if tokens > run.tokens {
+                    let old = *run;
+                    self.untrack(&old);
+                    let run = self.run_mut(key).unwrap();
+                    run.tokens = tokens;
+                    run.pages = pages;
+                    run.tier = PrefixTier::Hbm;
+                    run.home = instance;
+                    let new = *run;
+                    self.track(&new);
+                }
+                self.run_mut(key).unwrap().last_use = clock;
+            }
+        }
+    }
+
+    /// Coldest run in `tier` (and, for HBM, at `home`) — ties break
+    /// toward tenant runs, then key order, so replay is exact.
+    fn lru_in(&self, tier: PrefixTier, home: Option<usize>) -> Option<PrefixKey> {
+        self.all_runs()
+            .filter(|(_, r)| r.tier == tier && home.map_or(true, |h| r.home == h))
+            .min_by_key(|(key, r)| (r.last_use, *key))
+            .map(|(key, _)| key)
+    }
+
+    fn remove(&mut self, key: PrefixKey) -> Run {
+        let run = match key {
+            PrefixKey::Tenant(t) => self.tenant_runs.remove(&t).unwrap(),
+            PrefixKey::Session(t, s) => self.session_runs.remove(&(t, s)).unwrap(),
+        };
+        self.untrack(&run);
+        run
+    }
+
+    /// Demote LRU runs down the HBM → pool → host chain until every
+    /// budget holds. A disabled offload policy skips the intermediate
+    /// tiers: overflow evicts, exactly like `MemoryPolicy::NoOffload`
+    /// recompute-preemption.
+    fn rebalance(&mut self, ops: &mut Vec<PrefixOp>) {
+        let budget = self.hbm_budget_pages();
+        while let Some(inst) = self
+            .hbm_used
+            .iter()
+            .find(|(_, &u)| u > budget)
+            .map(|(&k, _)| k)
+        {
+            let key = self
+                .lru_in(PrefixTier::Hbm, Some(inst))
+                .expect("over-budget instance must hold a run");
+            let run = self.remove(key);
+            if self.cfg.policy.enabled && self.cfg.pool_pages > 0 {
+                let mut moved = run;
+                moved.tier = PrefixTier::Pool;
+                self.reinsert(key, moved);
+                ops.push(PrefixOp::Demote {
+                    key,
+                    pages: run.pages,
+                    from: PrefixTier::Hbm,
+                    to: PrefixTier::Pool,
+                    home: run.home,
+                });
+            } else if self.cfg.policy.enabled && self.cfg.host_pages > 0 {
+                let mut moved = run;
+                moved.tier = PrefixTier::Host;
+                self.reinsert(key, moved);
+                ops.push(PrefixOp::Demote {
+                    key,
+                    pages: run.pages,
+                    from: PrefixTier::Hbm,
+                    to: PrefixTier::Host,
+                    home: run.home,
+                });
+            } else {
+                ops.push(PrefixOp::Evict {
+                    key,
+                    pages: run.pages,
+                    from: PrefixTier::Hbm,
+                });
+            }
+        }
+        while self.pool_used > self.cfg.pool_pages {
+            let key = self
+                .lru_in(PrefixTier::Pool, None)
+                .expect("pool over budget must hold a run");
+            let run = self.remove(key);
+            if self.cfg.host_pages > 0 {
+                let mut moved = run;
+                moved.tier = PrefixTier::Host;
+                self.reinsert(key, moved);
+                ops.push(PrefixOp::Demote {
+                    key,
+                    pages: run.pages,
+                    from: PrefixTier::Pool,
+                    to: PrefixTier::Host,
+                    home: run.home,
+                });
+            } else {
+                ops.push(PrefixOp::Evict {
+                    key,
+                    pages: run.pages,
+                    from: PrefixTier::Pool,
+                });
+            }
+        }
+        while self.host_used > self.cfg.host_pages {
+            let key = self
+                .lru_in(PrefixTier::Host, None)
+                .expect("host over budget must hold a run");
+            let run = self.remove(key);
+            ops.push(PrefixOp::Evict {
+                key,
+                pages: run.pages,
+                from: PrefixTier::Host,
+            });
+        }
+    }
+
+    fn reinsert(&mut self, key: PrefixKey, run: Run) {
+        match key {
+            PrefixKey::Tenant(t) => {
+                self.tenant_runs.insert(t, run);
+            }
+            PrefixKey::Session(t, s) => {
+                self.session_runs.insert((t, s), run);
+            }
+        }
+        self.track(&run);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(hbm: usize, pool: usize, host: usize, enabled: bool) -> PrefixCacheConfig {
+        let mut policy = OffloadPolicy::new(1 << 30);
+        policy.hbm_reserve_frac = 0.0;
+        policy.enabled = enabled;
+        PrefixCacheConfig {
+            hbm_pages_per_instance: hbm,
+            pool_pages: pool,
+            host_pages: host,
+            host_bw: 16e9,
+            policy,
+        }
+    }
+
+    #[test]
+    fn first_turn_learns_the_split_and_later_sessions_hit_it() {
+        let mut s = PrefixStore::new(cfg(64, 64, 64, true), 16);
+        // tenant 0, session 0, turn 1: shared = 100-token system prompt
+        assert!(s.lookup(0, 0, 100).is_empty(), "cold store has nothing");
+        s.admit(0, 0, 100, 148, 2, &[]);
+        s.check_conservation().unwrap();
+        // a *different* session of the same tenant shares the system
+        // prompt even though it never ran
+        let segs = s.lookup(0, 1, 100);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].key, PrefixKey::Tenant(0));
+        assert_eq!(segs[0].tokens, 100);
+        assert_eq!(segs[0].home, 2);
+        // session 0's own next turn additionally hits its history
+        let segs = s.lookup(0, 0, 148);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[1].key, PrefixKey::Session(0, 0));
+        assert_eq!(segs[1].tokens, 48);
+        assert_eq!(s.local_hit_pages(0, 0, 148, 2), segs[0].pages + segs[1].pages);
+        assert_eq!(s.local_hit_pages(0, 0, 148, 3), 0);
+    }
+
+    #[test]
+    fn completion_extend_covers_the_output_tokens() {
+        let mut s = PrefixStore::new(cfg(64, 64, 64, true), 16);
+        s.admit(0, 0, 100, 148, 0, &[]);
+        s.extend(0, 0, 148 + 32, 0);
+        s.check_conservation().unwrap();
+        let segs = s.lookup(0, 0, 180);
+        assert_eq!(segs[1].tokens, 80, "history covers prompt + output");
+    }
+
+    #[test]
+    fn hbm_pressure_demotes_lru_down_the_chain_and_use_promotes_back() {
+        // 4-page HBM budget, 4-page pool, 4-page host, 16-token pages
+        let mut s = PrefixStore::new(cfg(4, 4, 4, true), 16);
+        let ops = s.admit(0, 0, 0, 64, 0, &[]); // 4 pages, fills HBM
+        assert!(ops.is_empty());
+        let ops = s.admit(1, 1, 0, 64, 0, &[]); // next 4 pages push out the first
+        s.check_conservation().unwrap();
+        assert!(ops.iter().any(|op| matches!(
+            op,
+            PrefixOp::Demote {
+                key: PrefixKey::Session(0, 0),
+                from: PrefixTier::Hbm,
+                to: PrefixTier::Pool,
+                ..
+            }
+        )));
+        assert_eq!(s.hbm_used(0), 4);
+        assert_eq!(s.pool_used(), 4);
+        // a third run cascades the second into pool and the first to host
+        let ops = s.admit(2, 2, 0, 64, 0, &[]);
+        s.check_conservation().unwrap();
+        assert!(ops.iter().any(|op| matches!(
+            op,
+            PrefixOp::Demote {
+                from: PrefixTier::Pool,
+                to: PrefixTier::Host,
+                ..
+            }
+        )));
+        assert_eq!(s.host_used(), 4);
+        // using the host run promotes it back into HBM (and pushes the
+        // LRU HBM resident down)
+        let ops = s.admit(0, 0, 64, 64, 1, &[PrefixKey::Session(0, 0)]);
+        s.check_conservation().unwrap();
+        assert!(ops.iter().any(|op| matches!(
+            op,
+            PrefixOp::Promote {
+                key: PrefixKey::Session(0, 0),
+                from: PrefixTier::Host,
+                ..
+            }
+        )));
+        let segs = s.lookup(0, 0, 64);
+        assert_eq!(segs[0].tier, PrefixTier::Hbm);
+        assert_eq!(segs[0].home, 1);
+    }
+
+    #[test]
+    fn disabled_policy_evicts_instead_of_demoting() {
+        let mut s = PrefixStore::new(cfg(4, 64, 64, false), 16);
+        s.admit(0, 0, 0, 64, 0, &[]);
+        let ops = s.admit(1, 1, 0, 64, 0, &[]);
+        s.check_conservation().unwrap();
+        assert!(ops
+            .iter()
+            .any(|op| matches!(op, PrefixOp::Evict { from: PrefixTier::Hbm, .. })));
+        assert_eq!(s.pool_used(), 0, "no pool tier without offload");
+        assert_eq!(s.run_count(), 1);
+    }
+
+    #[test]
+    fn crash_invalidation_leaves_no_dangling_runs() {
+        let mut s = PrefixStore::new(cfg(8, 4, 4, true), 16);
+        s.admit(0, 0, 100, 164, 0, &[]);
+        s.admit(0, 1, 100, 132, 1, &[]);
+        s.admit(1, 2, 0, 200, 0, &[]); // overflows instance 0 into pool
+        s.check_conservation().unwrap();
+        assert!(s.runs_homed_at(0) > 0);
+        let dropped = s.invalidate_instance(0);
+        assert!(dropped > 0);
+        s.check_conservation().unwrap();
+        assert_eq!(s.runs_homed_at(0), 0, "no dangling runs after crash");
+        // instance 1's runs survive untouched
+        assert!(s.runs_homed_at(1) > 0);
+        // and the tenant prefix re-learns/re-caches on the next admit
+        s.admit(0, 3, 100, 150, 1, &[]);
+        s.check_conservation().unwrap();
+        assert!(!s.lookup(0, 4, 100).is_empty());
+    }
+
+    #[test]
+    fn budget_zero_hbm_pushes_everything_to_pool() {
+        let mut s = PrefixStore::new(cfg(0, 8, 8, true), 16);
+        s.admit(0, 0, 0, 64, 0, &[]);
+        s.check_conservation().unwrap();
+        assert_eq!(s.hbm_used(0), 0);
+        assert_eq!(s.pool_used(), 4);
+    }
+}

@@ -583,8 +583,10 @@ mod tests {
             .map(|id| Request {
                 id,
                 tenant: 0,
+                session: 0,
                 arrival: id as f64 * spacing,
                 prompt_tokens: prompt,
+                shared_prefix_tokens: 0,
                 output_tokens: output,
             })
             .collect()

@@ -94,6 +94,10 @@ use crate::collectives;
 use crate::faults::{FaultPlan, RetryPolicy};
 use crate::graph::CollectiveKind;
 use crate::hyperoffload::kvcache::KvCacheConfig;
+use crate::hyperoffload::policy::OffloadPolicy;
+use crate::hyperoffload::prefix::{
+    PrefixCacheConfig, PrefixKey, PrefixOp, PrefixSegment, PrefixStore, PrefixTier,
+};
 use crate::serving::autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleObservation, ScalingPolicy};
 use crate::serving::batcher::{plan_refill, CostModel};
 use crate::serving::memory::{MemoryPolicy, ServingMemory};
@@ -102,7 +106,8 @@ use crate::serving::metrics::{
 };
 use crate::serving::router::{CandidateLoad, RoutePolicy, Router};
 use crate::serving::workload::{
-    diurnal_two_tenant, ArrivalProcess, LengthDist, Request, WorkloadConfig,
+    agentic_multiturn, diurnal_two_tenant, AgenticWorkload, ArrivalProcess, LengthDist, Request,
+    WorkloadConfig,
 };
 use crate::sim::{parallel_map, tags, Interval, ResourceId, SimResult, TaskId};
 use crate::supernode::{DeviceId, Topology};
@@ -218,6 +223,104 @@ pub struct ClusterConfig {
     /// Retry/hedging policy for migrations priced over a degraded
     /// link. `None` = dispatch at whatever the fabric costs.
     pub retry: Option<RetryPolicy>,
+    /// Fleet-wide prefix cache for agentic multi-turn workloads
+    /// (ISSUE 7). `None` keeps every path bit-identical to the
+    /// cache-less cluster.
+    pub prefix: Option<PrefixCacheConfig>,
+}
+
+impl ClusterConfig {
+    /// Typed builder over the required knobs; everything else
+    /// defaults to the plain static cluster (no offload, no
+    /// autoscaler, no faults, no prefix cache). The struct stays
+    /// plainly constructible — the builder just spares call sites
+    /// from spelling out `None`/empty for every optional subsystem.
+    pub fn builder(
+        topology: Topology,
+        instances: Vec<InstanceSpec>,
+        cost: CostModel,
+    ) -> ClusterConfigBuilder {
+        ClusterConfigBuilder {
+            cfg: ClusterConfig {
+                topology,
+                instances,
+                max_seq: 4096,
+                cost,
+                policy: MemoryPolicy::NoOffload,
+                pool_pages: 0,
+                max_preemptions: 4,
+                route: RoutePolicy::LeastOutstandingKv,
+                autoscale: None,
+                failures: vec![],
+                faults: FaultPlan::empty(),
+                retry: None,
+                prefix: None,
+            },
+        }
+    }
+}
+
+/// Builder returned by [`ClusterConfig::builder`]; each setter
+/// overrides one default, `build` hands the config back.
+#[derive(Debug, Clone)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    pub fn max_seq(mut self, max_seq: usize) -> Self {
+        self.cfg.max_seq = max_seq;
+        self
+    }
+
+    pub fn policy(mut self, policy: MemoryPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn pool_pages(mut self, pool_pages: usize) -> Self {
+        self.cfg.pool_pages = pool_pages;
+        self
+    }
+
+    pub fn max_preemptions(mut self, max_preemptions: u32) -> Self {
+        self.cfg.max_preemptions = max_preemptions;
+        self
+    }
+
+    pub fn route(mut self, route: RoutePolicy) -> Self {
+        self.cfg.route = route;
+        self
+    }
+
+    pub fn autoscale(mut self, autoscale: AutoscaleConfig) -> Self {
+        self.cfg.autoscale = Some(autoscale);
+        self
+    }
+
+    pub fn failures(mut self, failures: Vec<InstanceCrash>) -> Self {
+        self.cfg.failures = failures;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultPlan) -> Self {
+        self.cfg.faults = faults;
+        self
+    }
+
+    pub fn retry(mut self, retry: RetryPolicy) -> Self {
+        self.cfg.retry = Some(retry);
+        self
+    }
+
+    pub fn prefix(mut self, prefix: PrefixCacheConfig) -> Self {
+        self.cfg.prefix = Some(prefix);
+        self
+    }
+
+    pub fn build(self) -> ClusterConfig {
+        self.cfg
+    }
 }
 
 /// Everything a cluster run produced: the standard serving report
@@ -266,6 +369,28 @@ pub struct ClusterReport {
     pub held_devices_at_end: Vec<DeviceId>,
     /// Devices lost to crashes (never returned to any pool or broker).
     pub crashed_devices: Vec<DeviceId>,
+    /// Fresh admissions that reused at least one cached prefix run.
+    pub prefix_hits: u64,
+    /// Fresh admissions that found nothing reusable.
+    pub prefix_misses: u64,
+    /// Prompt tokens served from the prefix cache instead of prefill.
+    pub prefix_hit_tokens: u64,
+    /// Prompt tokens of every fresh admission (the ratio denominator).
+    pub prefix_prompt_tokens: u64,
+    /// Prompt tokens actually prefilled (cache misses + segments where
+    /// recompute beat the fetch price).
+    pub prefix_recomputed_tokens: u64,
+    /// Engine seconds stalled fetching cached runs over the fabric.
+    pub prefix_fetch_time: f64,
+    /// Background DMA seconds pricing tier demotions (HBM → pool →
+    /// host); not engine-blocking.
+    pub prefix_demote_time: f64,
+    /// Cached runs promoted (back) into an admitting instance's HBM.
+    pub prefix_promotions: u64,
+    /// Cached runs demoted one tier by LRU pressure.
+    pub prefix_demotions: u64,
+    /// Cached runs evicted off the end of the tier chain.
+    pub prefix_evictions: u64,
 }
 
 impl ClusterReport {
@@ -276,6 +401,52 @@ impl ClusterReport {
     /// Condense the run into a sweep row (fleet-wide percentiles).
     pub fn operating_point(&self, rate: f64, slo: &Slo) -> OperatingPoint {
         self.serving.operating_point(rate, slo)
+    }
+
+    /// Fraction of fresh-admission prompt tokens that were actually
+    /// prefilled. 1.0 without a prefix store (everything recomputes);
+    /// the agentic gate drives this toward 0 on the supernode fabric.
+    pub fn tokens_recomputed_ratio(&self) -> f64 {
+        if self.prefix_prompt_tokens == 0 {
+            1.0
+        } else {
+            self.prefix_recomputed_tokens as f64 / self.prefix_prompt_tokens as f64
+        }
+    }
+
+    /// Fraction of fresh-admission prompt tokens served from cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_prompt_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.prefix_prompt_tokens as f64
+        }
+    }
+
+    /// The cluster-level summary rows: the fleet-wide serving rows
+    /// plus the migration, elasticity, and prefix-cache ledgers. Every
+    /// bench/example emission of a cluster run flows through this, so
+    /// the key set can't drift between consumers.
+    pub fn summary_kv(&self) -> Vec<(String, f64)> {
+        let mut kv = self.serving.summary_kv();
+        let mut push = |k: &str, v: f64| kv.push((k.to_string(), v));
+        push("kv_migrations", self.kv_migrations as f64);
+        push("kv_bytes_migrated", self.kv_bytes_migrated);
+        push("kv_xfer_time", self.kv_xfer_time);
+        push("crashes", self.crashes as f64);
+        push("crash_requeues", self.crash_requeues as f64);
+        push("scale_ups", self.scale_ups as f64);
+        push("scale_downs", self.scale_downs as f64);
+        push("warmup_time", self.warmup_time);
+        push("instance_seconds", self.instance_seconds);
+        push("peak_instances", self.peak_instances as f64);
+        push("prefix_hit_rate", self.prefix_hit_rate());
+        push("tokens_recomputed_ratio", self.tokens_recomputed_ratio());
+        push("prefix_fetch_time", self.prefix_fetch_time);
+        push("prefix_promotions", self.prefix_promotions as f64);
+        push("prefix_demotions", self.prefix_demotions as f64);
+        push("prefix_evictions", self.prefix_evictions as f64);
+        kv
     }
 }
 
@@ -436,11 +607,166 @@ struct Stats {
     warmup_time: f64,
     retries_scheduled: u64,
     hedged: u64,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_hit_tokens: u64,
+    prefix_prompt_tokens: u64,
+    prefix_recomputed_tokens: u64,
+    prefix_fetch_time: f64,
+    prefix_demote_time: f64,
+    prefix_promotions: u64,
+    prefix_demotions: u64,
+    prefix_evictions: u64,
     /// (sequence, source instance) page handoffs pending release —
     /// drained at the cluster level after every event.
     handoffs: Vec<(u64, usize)>,
     /// Instances to wake after releases/migrations/requeues.
     kick: BTreeSet<usize>,
+}
+
+/// Zero-length tagged marker on instance `k`'s trace track (free
+/// variant of [`ClusterSim::push_marker`] for split-borrow contexts).
+fn push_marker_stats(stats: &mut Stats, k: usize, t: f64, tag: u64) {
+    stats.intervals.push(Interval {
+        task: TaskId(stats.tasks),
+        resource: ResourceId(k),
+        start: t,
+        finish: t,
+        tag,
+    });
+    stats.tasks += 1;
+}
+
+/// P2p transfer time between two devices quoted at dispatch time `t`,
+/// honoring the fault plan — the same quote-at-dispatch rule KV
+/// migrations use.
+fn p2p_at(cfg: &ClusterConfig, t: f64, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
+    if cfg.faults.degraded_at(t) {
+        let eff = cfg.faults.effective_topology(&cfg.topology, t);
+        collectives::cost(&eff, CollectiveKind::P2p, bytes, &[a, b]).time
+    } else {
+        collectives::cost(&cfg.topology, CollectiveKind::P2p, bytes, &[a, b]).time
+    }
+}
+
+/// Price fetching one cached segment into instance `k` at time `t`:
+/// free from local HBM, a fabric P2p from a remote instance's HBM, a
+/// pooled-memory stream (plus the P2p hop when remote) from the pool
+/// tier, and a host-bandwidth stream from host memory.
+fn segment_fetch_time(
+    cfg: &ClusterConfig,
+    pcfg: &PrefixCacheConfig,
+    devices: &[DeviceId],
+    k: usize,
+    t: f64,
+    seg: &PrefixSegment,
+) -> f64 {
+    let bytes = seg.tokens as f64 * cfg.cost.kv.kv_bytes_per_token as f64;
+    match seg.tier {
+        PrefixTier::Hbm => {
+            if seg.home == k {
+                0.0
+            } else {
+                p2p_at(cfg, t, devices[seg.home], devices[k], bytes)
+            }
+        }
+        PrefixTier::Pool => {
+            let stream = bytes / cfg.cost.kv.pool_bw;
+            if seg.home == k {
+                stream
+            } else {
+                stream + p2p_at(cfg, t, devices[seg.home], devices[k], bytes)
+            }
+        }
+        PrefixTier::Host => bytes / pcfg.host_bw,
+    }
+}
+
+/// Record the store's placement changes: trace markers, counters, and
+/// the background DMA price of each demotion.
+fn apply_prefix_ops(cfg: &ClusterConfig, stats: &mut Stats, k: usize, t: f64, ops: &[PrefixOp]) {
+    let Some(pcfg) = cfg.prefix.as_ref() else {
+        return;
+    };
+    let page_bytes = cfg.cost.kv.tokens_per_page as f64 * cfg.cost.kv.kv_bytes_per_token as f64;
+    for op in ops {
+        match op {
+            PrefixOp::Promote { .. } => {
+                stats.prefix_promotions += 1;
+                push_marker_stats(stats, k, t, tags::PREFIX_PROMOTE);
+            }
+            PrefixOp::Demote { pages, to, .. } => {
+                stats.prefix_demotions += 1;
+                let bytes = *pages as f64 * page_bytes;
+                stats.prefix_demote_time += match to {
+                    PrefixTier::Pool => bytes / cfg.cost.kv.pool_bw,
+                    PrefixTier::Host => bytes / pcfg.host_bw,
+                    PrefixTier::Hbm => 0.0,
+                };
+                push_marker_stats(stats, k, t, tags::PREFIX_DEMOTE);
+            }
+            PrefixOp::Evict { .. } => stats.prefix_evictions += 1,
+        }
+    }
+}
+
+/// One fresh admission against the prefix store: look up the shared
+/// runs, keep each segment only when fetching beats recomputing it
+/// (on legacy fabrics the remote/host price loses that race, which is
+/// what collapses the cache's gain there), then commit the admission.
+/// Returns `(cached_tokens, fetch_seconds)` — the caller subtracts
+/// the cached tokens from the iteration's prefill and stalls it by
+/// the fetch.
+#[allow(clippy::too_many_arguments)]
+fn prefix_admit(
+    cfg: &ClusterConfig,
+    store: &mut PrefixStore,
+    stats: &mut Stats,
+    devices: &[DeviceId],
+    k: usize,
+    t: f64,
+    req: &Request,
+    prompt_len: usize,
+) -> (usize, f64) {
+    let pcfg = cfg.prefix.as_ref().expect("prefix store without config");
+    stats.prefix_prompt_tokens += prompt_len as u64;
+    let shared = req.shared_prefix_tokens.min(prompt_len);
+    if shared == 0 {
+        // single-shot requests neither hit nor populate the store
+        stats.prefix_misses += 1;
+        stats.prefix_recomputed_tokens += prompt_len as u64;
+        return (0, 0.0);
+    }
+    let mut cached = 0usize;
+    let mut fetch = 0.0f64;
+    let mut fetched_remote = false;
+    let mut used: Vec<PrefixKey> = Vec::new();
+    for seg in store.lookup(req.tenant, req.session, shared) {
+        let xfer = segment_fetch_time(cfg, pcfg, devices, k, t, &seg);
+        let recompute = seg.tokens as f64 / cfg.cost.prefill_tokens_per_s;
+        if xfer < recompute {
+            cached += seg.tokens;
+            fetch += xfer;
+            used.push(seg.key);
+            if xfer > 0.0 {
+                fetched_remote = true;
+            }
+        }
+    }
+    if fetched_remote {
+        push_marker_stats(stats, k, t, tags::PREFIX_FETCH);
+    }
+    if cached > 0 {
+        stats.prefix_hits += 1;
+    } else {
+        stats.prefix_misses += 1;
+    }
+    stats.prefix_hit_tokens += cached as u64;
+    stats.prefix_recomputed_tokens += (prompt_len - cached) as u64;
+    stats.prefix_fetch_time += fetch;
+    let ops = store.admit(req.tenant, req.session, shared, prompt_len, k, &used);
+    apply_prefix_ops(cfg, stats, k, t, &ops);
+    (cached, fetch)
 }
 
 fn cold_order(inst: &Instance) -> Vec<u64> {
@@ -567,6 +893,8 @@ pub(crate) struct ClusterSim<'a> {
     now: f64,
     /// Migrations parked by the retry policy (class-4 events).
     retries: Vec<RetryEntry>,
+    /// The fleet-wide prefix store, when `cfg.prefix` is set.
+    prefix: Option<PrefixStore>,
 }
 
 impl<'a> ClusterSim<'a> {
@@ -596,11 +924,14 @@ impl<'a> ClusterSim<'a> {
             .count()
     }
 
-    fn candidate_loads(&self, ids: &[usize]) -> Vec<CandidateLoad> {
+    fn candidate_loads(&self, ids: &[usize], req: &Request) -> Vec<CandidateLoad> {
         ids.iter()
             .map(|&i| CandidateLoad {
                 instance: i,
                 outstanding_kv_pages: self.insts[i].outstanding_kv(),
+                expected_prefix_hit_pages: self.prefix.as_ref().map_or(0, |s| {
+                    s.local_hit_pages(req.tenant, req.session, req.shared_prefix_tokens, i)
+                }),
             })
             .collect()
     }
@@ -717,14 +1048,7 @@ impl<'a> ClusterSim<'a> {
 
     /// Zero-length tagged marker on instance `k`'s trace track.
     fn push_marker(&mut self, k: usize, t: f64, tag: u64) {
-        self.stats.intervals.push(Interval {
-            task: TaskId(self.stats.tasks),
-            resource: ResourceId(k),
-            start: t,
-            finish: t,
-            tag,
-        });
-        self.stats.tasks += 1;
+        push_marker_stats(&mut self.stats, k, t, tag);
     }
 
     /// Put a pageless entry back through the front-end router.
@@ -745,8 +1069,12 @@ impl<'a> ClusterSim<'a> {
             }
             return;
         }
-        let loads = self.candidate_loads(&cands);
-        let k = self.router.route_excluding(&entry.req, &loads, exclude);
+        let loads = self.candidate_loads(&cands, &entry.req);
+        let excluded: &[usize] = match &exclude {
+            Some(x) => std::slice::from_ref(x),
+            None => &[],
+        };
+        let k = self.router.route(&entry.req, &loads, excluded);
         self.insts[k].queue.push_back(entry);
         self.stats.kick.insert(k);
     }
@@ -1065,6 +1393,11 @@ impl<'a> ClusterSim<'a> {
             }
         }
         self.insts[k].mem.pool.release_all();
+        // cached prefix runs homed on the dead instance are gone with
+        // its HBM and pooled memory; host-tier copies survive
+        if let Some(store) = self.prefix.as_mut() {
+            store.invalidate_instance(k);
+        }
         self.insts[k].work_end = None;
         self.insts[k].cur_iv = None;
         self.insts[k].cur_ctx_tokens = 0;
@@ -1136,6 +1469,22 @@ impl<'a> ClusterSim<'a> {
                 });
                 self.stats.per_instance_completed[k] += 1;
                 self.insts[k].mem.pool.release(seq.req.id);
+                // a completed agentic turn leaves its full context in
+                // the prefix store for the session's next turn;
+                // single-shot requests (no shared prefix) don't insert
+                if seq.req.shared_prefix_tokens > 0 {
+                    let ops = self.prefix.as_mut().map(|s| {
+                        s.extend(
+                            seq.req.tenant,
+                            seq.req.session,
+                            seq.prompt_len + seq.produced,
+                            k,
+                        )
+                    });
+                    if let Some(ops) = ops {
+                        apply_prefix_ops(self.cfg, &mut self.stats, k, t, &ops);
+                    }
+                }
             }
         }
     }
@@ -1171,9 +1520,20 @@ impl<'a> ClusterSim<'a> {
     /// Schedule the instance's next unit of work at `t`: a pending KV
     /// ingest if any (the transfer occupies the engine), else a batcher
     /// iteration through the shared `plan_refill` admission core. Only
-    /// serving instances start work.
+    /// serving instances start work. With a prefix store configured,
+    /// each fresh admission first consults the cache: reused tokens
+    /// drop out of the iteration's prefill term and the fetch time
+    /// stalls the iteration instead.
     fn start_work(&mut self, k: usize, t: f64) {
         let cfg = self.cfg;
+        // device map snapshot: remote prefix fetches price the fabric
+        // between a run's home device and this instance
+        let devices: Vec<DeviceId> = if self.prefix.is_some() {
+            self.insts.iter().map(|i| i.device).collect()
+        } else {
+            Vec::new()
+        };
+        let prefix = &mut self.prefix;
         let stats = &mut self.stats;
         let inst = &mut self.insts[k];
         debug_assert!(inst.work_end.is_none(), "work already in flight");
@@ -1196,6 +1556,8 @@ impl<'a> ClusterSim<'a> {
         }
         grow_active(inst, cfg, stats);
         let mut total_prefill = 0usize;
+        let mut cached_prefill = 0usize;
+        let mut fetch_time = 0.0f64;
         loop {
             let occupied: Vec<bool> = inst.active.iter().map(Option::is_some).collect();
             let empty = occupied.iter().filter(|o| !**o).count();
@@ -1221,6 +1583,12 @@ impl<'a> ClusterSim<'a> {
                 let q = inst.queue.pop_front().expect("refill plan exceeds queue");
                 if q.produced == 0 {
                     total_prefill += adm.prompt_len;
+                    if let Some(store) = prefix.as_mut() {
+                        let (cached, ft) =
+                            prefix_admit(cfg, store, stats, &devices, k, t, &q.req, adm.prompt_len);
+                        cached_prefill += cached;
+                        fetch_time += ft;
+                    }
                 }
                 if let Some(src) = q.kv_src {
                     // pages now live here; the parked copy at the source
@@ -1276,17 +1644,23 @@ impl<'a> ClusterSim<'a> {
         if inst.active_count() == 0 {
             return;
         }
-        stats.prefill_tokens += total_prefill as u64;
-        let finish = t + cfg
-            .cost
-            .iteration_latency(hbm_tokens, pool_tokens, total_prefill);
+        // cache-hit tokens skip recompute; their fetch stalls the
+        // iteration instead (fetch_time == 0.0 without a prefix store,
+        // keeping the cache-disabled schedule bit-identical)
+        let compute_prefill = total_prefill - cached_prefill;
+        stats.prefill_tokens += compute_prefill as u64;
+        let finish = t
+            + fetch_time
+            + cfg
+                .cost
+                .iteration_latency(hbm_tokens, pool_tokens, compute_prefill);
         inst.cur_iv = Some(stats.intervals.len());
         stats.intervals.push(Interval {
             task: TaskId(stats.tasks),
             resource: ResourceId(k),
             start: t,
             finish,
-            tag: if total_prefill > 0 {
+            tag: if compute_prefill > 0 {
                 tags::PREFILL
             } else {
                 tags::DECODE
@@ -1436,6 +1810,11 @@ impl<'a> ClusterSim<'a> {
             {
                 self.insts[k2].state = InstanceState::Released;
                 self.insts[k2].died = Some(t);
+                // the released device's memory goes back to the pool:
+                // prefix runs homed there (HBM or pooled) are lost
+                if let Some(store) = self.prefix.as_mut() {
+                    store.invalidate_instance(k2);
+                }
                 self.stats.intervals.push(Interval {
                     task: TaskId(self.stats.tasks),
                     resource: ResourceId(k2),
@@ -1559,6 +1938,10 @@ impl<'a> ClusterSim<'a> {
             next_tick: cfg.autoscale.as_ref().map(|a| a.eval_interval),
             now: 0.0,
             retries: Vec::new(),
+            prefix: cfg
+                .prefix
+                .as_ref()
+                .map(|p| PrefixStore::new(p.clone(), cfg.cost.kv.tokens_per_page)),
         }
     }
 
@@ -1594,6 +1977,11 @@ impl<'a> ClusterSim<'a> {
         }
         assert!(self.limbo.is_empty(), "limbo entries leaked");
         assert!(self.retries.is_empty(), "retry entries leaked");
+        if let Some(store) = &self.prefix {
+            store
+                .check_conservation()
+                .unwrap_or_else(|e| panic!("prefix store: {e}"));
+        }
 
         let demotions = self.insts.iter().map(|i| i.mem.pool.demotions).sum();
         let instance_seconds: f64 = self
@@ -1641,6 +2029,16 @@ impl<'a> ClusterSim<'a> {
             warmup_time,
             retries_scheduled,
             hedged,
+            prefix_hits,
+            prefix_misses,
+            prefix_hit_tokens,
+            prefix_prompt_tokens,
+            prefix_recomputed_tokens,
+            prefix_fetch_time,
+            prefix_demote_time,
+            prefix_promotions,
+            prefix_demotions,
+            prefix_evictions,
             ..
         } = self.stats;
         ClusterReport {
@@ -1672,6 +2070,16 @@ impl<'a> ClusterSim<'a> {
             instance_devices,
             held_devices_at_end,
             crashed_devices,
+            prefix_hits,
+            prefix_misses,
+            prefix_hit_tokens,
+            prefix_prompt_tokens,
+            prefix_recomputed_tokens,
+            prefix_fetch_time,
+            prefix_demote_time,
+            prefix_promotions,
+            prefix_demotions,
+            prefix_evictions,
         }
     }
 }
@@ -1862,20 +2270,7 @@ pub fn crossover_cluster(fabric: ClusterFabric, mode: ClusterMode) -> ClusterCon
             },
         ],
     };
-    ClusterConfig {
-        topology,
-        instances,
-        max_seq: 4096,
-        cost: CostModel::new(cluster_device(), 0.0),
-        policy: MemoryPolicy::NoOffload,
-        pool_pages: 0,
-        max_preemptions: 4,
-        route: RoutePolicy::LeastOutstandingKv,
-        autoscale: None,
-        failures: vec![],
-        faults: FaultPlan::empty(),
-        retry: None,
-    }
+    ClusterConfig::builder(topology, instances, CostModel::new(cluster_device(), 0.0)).build()
 }
 
 /// The checked-in crossover scenario for one (fabric, mode) cell.
@@ -2039,21 +2434,15 @@ pub fn autoscale_cluster(
             slots: AUTOSCALE_SLOTS,
         })
         .collect();
-    let autoscale = elastic.then(|| autoscale_preset(places[n0..].to_vec()));
-    ClusterConfig {
+    let mut b = ClusterConfig::builder(
         topology,
         instances,
-        max_seq: 4096,
-        cost: CostModel::new(autoscale_device(), 0.0),
-        policy: MemoryPolicy::NoOffload,
-        pool_pages: 0,
-        max_preemptions: 4,
-        route: RoutePolicy::LeastOutstandingKv,
-        autoscale,
-        failures: vec![],
-        faults: FaultPlan::empty(),
-        retry: None,
+        CostModel::new(autoscale_device(), 0.0),
+    );
+    if let Some(aus) = elastic.then(|| autoscale_preset(places[n0..].to_vec())) {
+        b = b.autoscale(aus);
     }
+    b.build()
 }
 
 /// The checked-in diurnal scenario for one (fabric, elastic) cell.
@@ -2105,6 +2494,146 @@ pub fn autoscale_comparison(fabric: ClusterFabric) -> AutoscaleSummary {
     }
 }
 
+// ---- the checked-in agentic prefix-cache presets (ISSUE 7) ------------
+
+/// The fixed rate grid of the agentic comparison (cluster-wide
+/// request QPS).
+pub const AGENTIC_RATES: [f64; 8] = [10.0, 15.0, 20.0, 25.0, 30.0, 40.0, 50.0, 60.0];
+
+/// The rate where the hit-rate / recompute-ratio numbers are read —
+/// low enough that both routers attain the SLO on both fabrics, so
+/// the ratio compares like with like.
+pub const AGENTIC_COMPARE_RATE: f64 = 10.0;
+
+/// Prefix-cache capacity of the agentic scenario on one fabric. The
+/// HBM carve-out is deliberately small (64 pages = 4K tokens, ~0.6%
+/// of an instance's HBM; the offload policy's 30% reserve shrinks it
+/// to 44): barely two system prompts fit, so session histories
+/// overflow almost immediately. Where they overflow is the fabric
+/// story — the supernode demotes into pooled DRAM at 392 GB/s (a
+/// fetch beats recompute ~30x), the legacy cluster has no pooled
+/// tier (`pool_pages: 0`) and spills straight to host at 8 GB/s,
+/// where a fetch *loses* to recompute and the cache stops paying.
+pub fn agentic_prefix(fabric: ClusterFabric) -> PrefixCacheConfig {
+    PrefixCacheConfig {
+        hbm_pages_per_instance: 64,
+        pool_pages: match fabric {
+            ClusterFabric::Supernode => 8192,
+            ClusterFabric::Legacy => 0,
+        },
+        host_pages: 8192,
+        host_bw: 8e9,
+        policy: OffloadPolicy::new(cluster_device().hbm_usable),
+    }
+}
+
+/// Four colocated instances spread across racks, as in the crossover
+/// scenario. `cache_aware` flips both halves of the tentpole at
+/// once: the fleet-wide prefix store and the router that exploits
+/// it. The baseline is cache-blind [`RoutePolicy::SessionAffinity`]
+/// with no store at all — its recomputed-token ratio is 1.0 by
+/// construction.
+pub fn agentic_cluster(fabric: ClusterFabric, cache_aware: bool) -> ClusterConfig {
+    let topology = fabric.topology();
+    let instances = spread_placement(&topology, 4)
+        .into_iter()
+        .map(|device| InstanceSpec {
+            device,
+            role: InstanceRole::Colocated,
+            slots: 12,
+        })
+        .collect();
+    let mut b = ClusterConfig::builder(topology, instances, CostModel::new(cluster_device(), 0.0));
+    b = if cache_aware {
+        b.route(RoutePolicy::CacheAware).prefix(agentic_prefix(fabric))
+    } else {
+        b.route(RoutePolicy::SessionAffinity)
+    };
+    b.build()
+}
+
+/// Agentic deployment + multi-turn workload + arrival window.
+#[derive(Debug, Clone)]
+pub struct AgenticScenario {
+    pub cluster: ClusterConfig,
+    pub workload: AgenticWorkload,
+    /// Arrival window, virtual seconds (the run drains afterwards).
+    pub horizon: f64,
+}
+
+/// The checked-in agentic scenario for one (fabric, router) cell.
+pub fn agentic_scenario(fabric: ClusterFabric, cache_aware: bool) -> AgenticScenario {
+    AgenticScenario {
+        cluster: agentic_cluster(fabric, cache_aware),
+        workload: agentic_multiturn(AGENTIC_RATES[0]),
+        horizon: 8.0,
+    }
+}
+
+/// Generate the multi-turn workload and run the cluster simulator.
+pub fn run_agentic_scenario(sc: &AgenticScenario) -> ClusterReport {
+    simulate_cluster(&sc.cluster, &sc.workload.generate(sc.horizon))
+}
+
+/// Sweep offered request rate over the agentic scenario, fanned
+/// across `sim::sweep` workers (bit-identical to a sequential loop).
+pub fn agentic_rate_sweep(
+    base: &AgenticScenario,
+    rates: &[f64],
+    slo: &Slo,
+) -> Vec<OperatingPoint> {
+    parallel_map(rates, |&rate| {
+        let mut sc = base.clone();
+        sc.workload = sc.workload.with_mean_rate(rate);
+        run_agentic_scenario(&sc).operating_point(rate, slo)
+    })
+}
+
+/// Cache-aware vs cache-blind on one fabric: the headline numbers the
+/// scenario test, bench gate, and example all read.
+#[derive(Debug, Clone)]
+pub struct AgenticSummary {
+    /// Max-QPS-under-SLO operating point, `CacheAware` + prefix store.
+    pub aware: OperatingPoint,
+    /// Max-QPS-under-SLO operating point, cache-blind `SessionAffinity`.
+    pub blind: OperatingPoint,
+    /// Full report of the aware cell at [`AGENTIC_COMPARE_RATE`].
+    pub aware_report: ClusterReport,
+    /// Full report of the blind cell at [`AGENTIC_COMPARE_RATE`].
+    pub blind_report: ClusterReport,
+}
+
+impl AgenticSummary {
+    /// Max-QPS-under-SLO gain of cache-aware over cache-blind.
+    pub fn qps_gain(&self) -> f64 {
+        self.aware.rate / self.blind.rate
+    }
+}
+
+/// Run the cache-aware vs cache-blind comparison on one fabric.
+pub fn agentic_comparison(fabric: ClusterFabric) -> AgenticSummary {
+    let cell = |aware: bool| {
+        let points = agentic_rate_sweep(
+            &agentic_scenario(fabric, aware),
+            &AGENTIC_RATES,
+            &cluster_slo(),
+        );
+        max_qps_under_slo(&points)
+            .unwrap_or_else(|| panic!("{fabric:?}/aware={aware} must attain at the lowest rate"))
+    };
+    let report = |aware: bool| {
+        let mut sc = agentic_scenario(fabric, aware);
+        sc.workload = sc.workload.with_mean_rate(AGENTIC_COMPARE_RATE);
+        run_agentic_scenario(&sc)
+    };
+    AgenticSummary {
+        aware: cell(true),
+        blind: cell(false),
+        aware_report: report(true),
+        blind_report: report(false),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2128,8 +2657,10 @@ mod tests {
             .map(|id| Request {
                 id,
                 tenant: (id % 3) as usize,
+                session: id % 3,
                 arrival: id as f64 * spacing,
                 prompt_tokens: prompt,
+                shared_prefix_tokens: 0,
                 output_tokens: output,
             })
             .collect()
@@ -2148,20 +2679,13 @@ mod tests {
     }
 
     fn tiny_cluster(instances: Vec<InstanceSpec>, pages: u64) -> ClusterConfig {
-        ClusterConfig {
-            topology: tiny_topology(Fabric::supernode()),
+        ClusterConfig::builder(
+            tiny_topology(Fabric::supernode()),
             instances,
-            max_seq: 512,
-            cost: CostModel::new(tiny_kv(pages), 0.0),
-            policy: MemoryPolicy::NoOffload,
-            pool_pages: 0,
-            max_preemptions: 4,
-            route: RoutePolicy::LeastOutstandingKv,
-            autoscale: None,
-            failures: vec![],
-            faults: FaultPlan::empty(),
-            retry: None,
-        }
+            CostModel::new(tiny_kv(pages), 0.0),
+        )
+        .max_seq(512)
+        .build()
     }
 
     fn colocated_spec(slots: usize) -> Vec<InstanceSpec> {
@@ -2676,8 +3200,10 @@ mod tests {
         reqs.push(Request {
             id: 80,
             tenant: 0,
+            session: 0,
             arrival: 0.5,
             prompt_tokens: 32,
+            shared_prefix_tokens: 0,
             output_tokens: 8,
         });
         let rep = simulate_cluster(&cfg, &reqs);

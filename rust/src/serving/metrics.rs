@@ -165,6 +165,29 @@ impl ServingReport {
         self.trace.mean_utilization(&rs)
     }
 
+    /// The serving summary rows every bench/example emission flows
+    /// through — one definition of the key set, shared (and extended)
+    /// by the cluster and co-schedule reports, so emitted metric names
+    /// can't drift between consumers.
+    pub fn summary_kv(&self) -> Vec<(String, f64)> {
+        let push = |k: &str, v: f64| (k.to_string(), v);
+        vec![
+            push("completed", self.completed() as f64),
+            push("rejected", self.rejected as f64),
+            push("preemptions", self.preemptions as f64),
+            push("demotions", self.demotions as f64),
+            push("decoded_tokens", self.decoded_tokens as f64),
+            push("prefill_tokens", self.prefill_tokens as f64),
+            push("peak_context_tokens", self.peak_context_tokens as f64),
+            push("makespan", self.makespan),
+            push("admitted_qps", self.admitted_qps()),
+            push("p50_ttft", self.ttft_pct(50.0)),
+            push("p99_ttft", self.ttft_pct(99.0)),
+            push("p99_tpot", self.tpot_pct(99.0)),
+            push("mean_utilization", self.mean_utilization()),
+        ]
+    }
+
     /// Condense the run into a sweep row. Builds each latency
     /// distribution once and reads every percentile (and the SLO
     /// verdict) from it, instead of re-sorting per query.

@@ -18,7 +18,8 @@
 //! - [`metrics`] — TTFT/TPOT/goodput percentiles, SLO attainment, and
 //!   parallel sweeps locating the max-QPS-under-SLO operating point;
 //! - [`router`] — the front-end request router (round-robin /
-//!   least-outstanding-KV / session-affinity policies);
+//!   least-outstanding-KV / session-affinity / cache-aware policies,
+//!   one unified `route(req, candidates, excluded)` entry point);
 //! - [`cluster`] — N instances placed on a `supernode::Topology`,
 //!   colocated or prefill/decode-disaggregated, with KV-cache
 //!   migration costed over the actual fabric tiers — the checked-in
@@ -39,6 +40,16 @@
 //! retry/backoff + hedging so serving rides out fault windows without
 //! shedding load.
 //!
+//! The fleet-wide prefix cache (`hyperoffload::prefix`, ISSUE 7)
+//! plugs in via `ClusterConfig::prefix`: the [`workload`] module's
+//! agentic multi-turn preset re-sends growing shared prefixes, the
+//! store deduplicates their KV fleet-wide with HBM → pooled-DRAM →
+//! host tiering, and the `CacheAware` router sends sessions where
+//! their cached runs live — the checked-in comparison shows ≥1.3×
+//! max-QPS-under-SLO over cache-blind session affinity on the
+//! supernode fabric, with the gap collapsing on legacy RoCE where
+//! fetching a cached run loses the bandwidth race against recompute.
+//!
 //! Everything is deterministic, so CI gates on the sweeps' virtual-time
 //! metrics (`BENCH_serving.json` vs the committed baseline).
 
@@ -53,16 +64,17 @@ pub mod workload;
 pub use autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleObservation, ScalingPolicy};
 pub use batcher::{plan_refill, simulate, Admission, CostModel, ServingConfig};
 pub use cluster::{
+    agentic_cluster, agentic_comparison, agentic_prefix, agentic_rate_sweep, agentic_scenario,
     autoscale_cluster, autoscale_comparison, autoscale_crash_scenario, autoscale_device,
     autoscale_policy, autoscale_preset, autoscale_scenario, autoscale_slo, autoscale_workload,
-    cluster_device,
-    cluster_rate_sweep, cluster_slo, crossover_cluster, crossover_comparison, crossover_scenario,
-    long_prompt_workload, run_cluster_scenario, simulate_cluster, spread_placement,
-    try_spread_placement, AutoscaleSummary, ClusterConfig, ClusterFabric, ClusterMode,
+    cluster_device, cluster_rate_sweep, cluster_slo, crossover_cluster, crossover_comparison,
+    crossover_scenario, long_prompt_workload, run_agentic_scenario, run_cluster_scenario,
+    simulate_cluster, spread_placement, try_spread_placement, AgenticScenario, AgenticSummary,
+    AutoscaleSummary, ClusterConfig, ClusterConfigBuilder, ClusterFabric, ClusterMode,
     ClusterReport, ClusterScenario, CrossoverSummary, DeviceLessor, InstanceCrash, InstanceRole,
-    InstanceSpec, NullLessor, AUTOSCALE_INITIAL_INSTANCES, AUTOSCALE_MAX_INSTANCES,
-    AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD, AUTOSCALE_SLOTS, AUTOSCALE_STATIC_INSTANCES,
-    CLUSTER_RATES,
+    InstanceSpec, NullLessor, AGENTIC_COMPARE_RATE, AGENTIC_RATES, AUTOSCALE_INITIAL_INSTANCES,
+    AUTOSCALE_MAX_INSTANCES, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD, AUTOSCALE_SLOTS,
+    AUTOSCALE_STATIC_INSTANCES, CLUSTER_RATES,
 };
 pub use memory::{migrate_pages, MemoryPolicy, PagePool, SeqPages, ServingMemory};
 pub use metrics::{
@@ -72,5 +84,6 @@ pub use metrics::{
 pub use crate::faults::{FaultPlan, RetryPolicy};
 pub use router::{least_outstanding, CandidateLoad, RoutePolicy, Router};
 pub use workload::{
-    diurnal_two_tenant, ArrivalProcess, LengthDist, Request, TenantProfile, WorkloadConfig,
+    agentic_multiturn, diurnal_two_tenant, AgenticWorkload, ArrivalProcess, LengthDist, Request,
+    TenantProfile, WorkloadConfig,
 };

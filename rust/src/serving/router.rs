@@ -10,11 +10,19 @@
 //!   `PagePool` plus pages the queued requests will need). Serving
 //!   load is KV-page pressure, not request count, so this beats
 //!   least-requests when prompt lengths are heavy-tailed;
-//! - **SessionAffinity** — hash the session (tenant) to a fixed
-//!   instance, the prefix-cache-friendly policy: all turns of one
-//!   session land where its KV prefix already lives. Only sensible
-//!   for many-tenant workloads — a single hot session saturates its
-//!   pinned instance by design.
+//! - **SessionAffinity** — hash the session to a fixed instance, the
+//!   prefix-cache-friendly policy: all turns of one session land
+//!   where its KV prefix already lives. Only sensible for
+//!   many-session workloads — a single hot session saturates its
+//!   pinned instance by design;
+//! - **CacheAware** — SessionAffinity extended with the fleet-wide
+//!   prefix store's knowledge: candidates are scored by expected
+//!   prefix-hit pages *net of* outstanding-KV load, so a request
+//!   follows its cached prefix unless that instance is swamped.
+//!   Sessions with no cached prefix anywhere fall back to the
+//!   session-affinity hash, and exclusions (drains, crashes, retry
+//!   re-routes) filter the candidate set exactly like every other
+//!   policy.
 //!
 //! The same `Router` is reused for decode-target selection in
 //! disaggregated mode (there the policy is always
@@ -41,8 +49,13 @@ pub enum RoutePolicy {
     RoundRobin,
     /// Fewest outstanding KV pages (held + queued demand).
     LeastOutstandingKv,
-    /// Pin each session (tenant) to one instance by hash.
+    /// Pin each session to one instance by hash.
     SessionAffinity,
+    /// Expected prefix-hit pages net of load; session-affinity hash
+    /// when nothing is cached. Requires the cluster's prefix store to
+    /// fill `CandidateLoad::expected_prefix_hit_pages` — with no
+    /// store the policy degenerates to `SessionAffinity`.
+    CacheAware,
 }
 
 /// One routing candidate as the router sees it.
@@ -53,6 +66,10 @@ pub struct CandidateLoad {
     /// KV pages held in the instance's pool plus pages its queued
     /// requests will need at admission.
     pub outstanding_kv_pages: usize,
+    /// Prefix-cache pages of the request's shared prefix resident in
+    /// this instance's HBM tier (zero when no prefix store is
+    /// configured). Only `CacheAware` reads this.
+    pub expected_prefix_hit_pages: usize,
 }
 
 /// Deterministic router: identical call sequences produce identical
@@ -72,38 +89,36 @@ impl Router {
         self.policy
     }
 
-    /// Pick an instance for `req` among `candidates`, avoiding
-    /// `exclude` — the instance a retry is steering away from (slow
-    /// degraded path, draining, or just crashed). The exclusion is
-    /// dropped when it would empty the candidate set: a lone slow
-    /// instance still beats rejecting the request. `SessionAffinity`
-    /// re-hashes over the filtered set, failing the pinned session
-    /// over exactly the way a consistent-hashing front-end rebalances
-    /// on membership change.
-    pub fn route_excluding(
+    /// Pick an instance for `req` among `candidates` (non-empty),
+    /// avoiding the `excluded` instances — the instances a retry is
+    /// steering away from (slow degraded path, draining, or just
+    /// crashed); an empty slice means no exclusions. The exclusions
+    /// are dropped when they would empty the candidate set: a lone
+    /// slow instance still beats rejecting the request.
+    /// `SessionAffinity` re-hashes over the filtered set, failing the
+    /// pinned session over exactly the way a consistent-hashing
+    /// front-end rebalances on membership change.
+    pub fn route(
         &mut self,
         req: &Request,
         candidates: &[CandidateLoad],
-        exclude: Option<usize>,
+        excluded: &[usize],
     ) -> usize {
-        if let Some(x) = exclude {
-            if candidates.len() > 1 {
-                let filtered: Vec<CandidateLoad> = candidates
-                    .iter()
-                    .copied()
-                    .filter(|c| c.instance != x)
-                    .collect();
-                if !filtered.is_empty() {
-                    return self.route(req, &filtered);
-                }
+        assert!(!candidates.is_empty(), "router needs at least one candidate");
+        if !excluded.is_empty() && candidates.len() > 1 {
+            let filtered: Vec<CandidateLoad> = candidates
+                .iter()
+                .copied()
+                .filter(|c| !excluded.contains(&c.instance))
+                .collect();
+            if !filtered.is_empty() {
+                return self.pick(req, &filtered);
             }
         }
-        self.route(req, candidates)
+        self.pick(req, candidates)
     }
 
-    /// Pick an instance for `req` among `candidates` (non-empty).
-    pub fn route(&mut self, req: &Request, candidates: &[CandidateLoad]) -> usize {
-        assert!(!candidates.is_empty(), "router needs at least one candidate");
+    fn pick(&mut self, req: &Request, candidates: &[CandidateLoad]) -> usize {
         match self.policy {
             RoutePolicy::RoundRobin => {
                 let c = candidates[self.rr % candidates.len()].instance;
@@ -111,11 +126,26 @@ impl Router {
                 c
             }
             RoutePolicy::LeastOutstandingKv => least_outstanding(candidates),
-            RoutePolicy::SessionAffinity => {
-                let h = (req.tenant as u64)
-                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    .wrapping_add(0x1234);
-                candidates[(h % candidates.len() as u64) as usize].instance
+            RoutePolicy::SessionAffinity => session_pick(req, candidates),
+            RoutePolicy::CacheAware => {
+                let best = candidates
+                    .iter()
+                    .max_by_key(|c| {
+                        let score = c.expected_prefix_hit_pages as i64
+                            - c.outstanding_kv_pages as i64;
+                        (
+                            score,
+                            std::cmp::Reverse((c.outstanding_kv_pages, c.instance)),
+                        )
+                    })
+                    .expect("non-empty candidate set");
+                if best.expected_prefix_hit_pages == 0 {
+                    // nothing cached anywhere: stay sticky so the
+                    // session's *next* turn has a home to hit
+                    session_pick(req, candidates)
+                } else {
+                    best.instance
+                }
             }
         }
     }
@@ -131,6 +161,17 @@ pub fn least_outstanding(candidates: &[CandidateLoad]) -> usize {
         .instance
 }
 
+/// The session-affinity hash pick. Single-shot workloads set
+/// `session = tenant`, so this is bit-compatible with the historical
+/// tenant-affinity behaviour.
+fn session_pick(req: &Request, candidates: &[CandidateLoad]) -> usize {
+    let h = req
+        .session
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(0x1234);
+    candidates[(h % candidates.len() as u64) as usize].instance
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,8 +180,10 @@ mod tests {
         Request {
             id,
             tenant,
+            session: tenant as u64,
             arrival: 0.0,
             prompt_tokens: 8,
+            shared_prefix_tokens: 0,
             output_tokens: 4,
         }
     }
@@ -152,7 +195,22 @@ mod tests {
             .map(|(instance, &outstanding_kv_pages)| CandidateLoad {
                 instance,
                 outstanding_kv_pages,
+                expected_prefix_hit_pages: 0,
             })
+            .collect()
+    }
+
+    fn cands_with_hits(loads: &[(usize, usize)]) -> Vec<CandidateLoad> {
+        loads
+            .iter()
+            .enumerate()
+            .map(
+                |(instance, &(outstanding_kv_pages, expected_prefix_hit_pages))| CandidateLoad {
+                    instance,
+                    outstanding_kv_pages,
+                    expected_prefix_hit_pages,
+                },
+            )
             .collect()
     }
 
@@ -160,15 +218,15 @@ mod tests {
     fn round_robin_cycles() {
         let mut r = Router::new(RoutePolicy::RoundRobin);
         let c = cands(&[100, 0, 50]);
-        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 0), &c)).collect();
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 0), &c, &[])).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2], "load-oblivious cycle");
     }
 
     #[test]
     fn least_kv_picks_minimum_ties_to_lowest_index() {
         let mut r = Router::new(RoutePolicy::LeastOutstandingKv);
-        assert_eq!(r.route(&req(0, 0), &cands(&[30, 10, 20])), 1);
-        assert_eq!(r.route(&req(1, 0), &cands(&[10, 10, 20])), 0);
+        assert_eq!(r.route(&req(0, 0), &cands(&[30, 10, 20]), &[]), 1);
+        assert_eq!(r.route(&req(1, 0), &cands(&[10, 10, 20]), &[]), 0);
     }
 
     #[test]
@@ -176,17 +234,18 @@ mod tests {
         let mut r = Router::new(RoutePolicy::SessionAffinity);
         let c = cands(&[0, 0, 0, 0]);
         for tenant in 0..16 {
-            let first = r.route(&req(0, tenant), &c);
+            let first = r.route(&req(0, tenant), &c, &[]);
             for id in 1..8 {
                 assert_eq!(
-                    r.route(&req(id, tenant), &c),
+                    r.route(&req(id, tenant), &c, &[]),
                     first,
                     "tenant {tenant} must stay pinned"
                 );
             }
         }
-        let assigned: std::collections::BTreeSet<usize> =
-            (0..64).map(|tenant| r.route(&req(0, tenant), &c)).collect();
+        let assigned: std::collections::BTreeSet<usize> = (0..64)
+            .map(|tenant| r.route(&req(0, tenant), &c, &[]))
+            .collect();
         assert!(assigned.len() > 1, "many tenants must spread out");
     }
 
@@ -194,8 +253,8 @@ mod tests {
     fn routing_ignores_load_only_for_oblivious_policies() {
         // least-kv reacts to a load change, round-robin does not
         let mut lk = Router::new(RoutePolicy::LeastOutstandingKv);
-        assert_eq!(lk.route(&req(0, 0), &cands(&[5, 9])), 0);
-        assert_eq!(lk.route(&req(1, 0), &cands(&[12, 9])), 1);
+        assert_eq!(lk.route(&req(0, 0), &cands(&[5, 9]), &[]), 0);
+        assert_eq!(lk.route(&req(1, 0), &cands(&[12, 9]), &[]), 1);
     }
 
     #[test]
@@ -206,13 +265,13 @@ mod tests {
         // candidate left
         let mut r = Router::new(RoutePolicy::LeastOutstandingKv);
         let c = cands(&[0, 10, 20]);
-        assert_eq!(r.route(&req(0, 0), &c), 0, "0 wins on load");
-        assert_eq!(r.route_excluding(&req(0, 0), &c, Some(0)), 1);
+        assert_eq!(r.route(&req(0, 0), &c, &[]), 0, "0 wins on load");
+        assert_eq!(r.route(&req(0, 0), &c, &[0]), 1);
         // a sole candidate is never excluded: slow beats rejected
         let only = cands(&[50]);
-        assert_eq!(r.route_excluding(&req(0, 0), &only, Some(0)), 0);
-        // no exclusion behaves exactly like route()
-        assert_eq!(r.route_excluding(&req(0, 0), &c, None), 0);
+        assert_eq!(r.route(&req(0, 0), &only, &[0]), 0);
+        // excluding everything degenerates to no exclusion
+        assert_eq!(r.route(&req(0, 0), &c, &[0, 1, 2]), 0);
     }
 
     #[test]
@@ -220,17 +279,14 @@ mod tests {
         let mut r = Router::new(RoutePolicy::SessionAffinity);
         let c = cands(&[0, 0, 0, 0]);
         for tenant in 0..16 {
-            let pinned = r.route(&req(0, tenant), &c);
-            let rerouted = r.route_excluding(&req(0, tenant), &c, Some(pinned));
+            let pinned = r.route(&req(0, tenant), &c, &[]);
+            let rerouted = r.route(&req(0, tenant), &c, &[pinned]);
             assert_ne!(
                 rerouted, pinned,
                 "tenant {tenant} must fail over off its pinned instance"
             );
             // and the fail-over itself is deterministic
-            assert_eq!(
-                r.route_excluding(&req(0, tenant), &c, Some(pinned)),
-                rerouted
-            );
+            assert_eq!(r.route(&req(0, tenant), &c, &[pinned]), rerouted);
         }
     }
 
@@ -238,9 +294,41 @@ mod tests {
     fn round_robin_exclusion_cycles_over_the_filtered_set() {
         let mut r = Router::new(RoutePolicy::RoundRobin);
         let c = cands(&[0, 0, 0]);
-        let picks: Vec<usize> = (0..4)
-            .map(|i| r.route_excluding(&req(i, 0), &c, Some(1)))
-            .collect();
+        let picks: Vec<usize> = (0..4).map(|i| r.route(&req(i, 0), &c, &[1])).collect();
         assert_eq!(picks, vec![0, 2, 0, 2], "instance 1 never picked");
+    }
+
+    #[test]
+    fn cache_aware_follows_the_prefix_unless_swamped() {
+        let mut r = Router::new(RoutePolicy::CacheAware);
+        // instance 2 holds 20 cached pages and modest load: it wins
+        let c = cands_with_hits(&[(0, 0), (5, 0), (8, 20)]);
+        assert_eq!(r.route(&req(0, 3), &c, &[]), 2);
+        // same hit, but instance 2 is now swamped: the idle instance's
+        // net score wins (0 - 0 > 20 - 40)
+        let swamped = cands_with_hits(&[(0, 0), (5, 0), (40, 20)]);
+        assert_eq!(r.route(&req(0, 3), &swamped, &[]), 0);
+    }
+
+    #[test]
+    fn cache_aware_cold_sessions_fall_back_to_session_affinity() {
+        let mut aware = Router::new(RoutePolicy::CacheAware);
+        let mut affinity = Router::new(RoutePolicy::SessionAffinity);
+        let c = cands(&[3, 1, 4, 1]);
+        for tenant in 0..16 {
+            assert_eq!(
+                aware.route(&req(0, tenant), &c, &[]),
+                affinity.route(&req(0, tenant), &c, &[]),
+                "no cached prefix anywhere: stay sticky, not least-loaded"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_aware_fails_over_under_exclusion() {
+        let mut r = Router::new(RoutePolicy::CacheAware);
+        let c = cands_with_hits(&[(0, 0), (2, 9)]);
+        assert_eq!(r.route(&req(0, 0), &c, &[]), 1, "follow the cache");
+        assert_eq!(r.route(&req(0, 0), &c, &[1]), 0, "excluded: fail over");
     }
 }

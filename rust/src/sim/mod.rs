@@ -58,4 +58,15 @@ pub mod tags {
     /// Faults: zero-length marker on the destination a migration was
     /// parked *away from* when the retry policy re-routed it.
     pub const RETRY: u64 = 19;
+    /// Prefix cache: zero-length marker on the admitting instance at
+    /// the instant a cached prefix run was fetched from another tier
+    /// or instance (the fetch time itself stalls the admission
+    /// iteration and is priced over the fabric).
+    pub const PREFIX_FETCH: u64 = 20;
+    /// Prefix cache: zero-length marker when a fetched run was
+    /// promoted back to the admitting instance's HBM tier.
+    pub const PREFIX_PROMOTE: u64 = 21;
+    /// Prefix cache: zero-length marker when a cached run was demoted
+    /// a tier (HBM → pooled supernode memory → host) to make room.
+    pub const PREFIX_DEMOTE: u64 = 22;
 }

@@ -8,7 +8,7 @@ use super::engine::{Engine, SimResult};
 use crate::util::json::{Json, JsonObj};
 
 /// Tag names for trace events; index = tag value used in `add_task`.
-pub const TAG_NAMES: [&str; 20] = [
+pub const TAG_NAMES: [&str; 23] = [
     "compute",
     "comm",
     "prefetch",
@@ -29,6 +29,9 @@ pub const TAG_NAMES: [&str; 20] = [
     "device_fail",
     "restore",
     "retry",
+    "prefix_fetch",
+    "prefix_promote",
+    "prefix_demote",
 ];
 
 /// Human-readable name for a task tag.

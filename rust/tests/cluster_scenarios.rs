@@ -147,8 +147,8 @@ fn disaggregated_overload_backpressures_instead_of_dropping() {
 use hyperparallel::serving::{
     autoscale_comparison, autoscale_crash_scenario, autoscale_scenario, autoscale_slo,
     autoscale_workload, simulate_cluster, AutoscaleConfig, AutoscalePolicy, ClusterConfig,
-    CostModel, InstanceCrash, InstanceRole, InstanceSpec, LengthDist, MemoryPolicy, RoutePolicy,
-    WorkloadConfig, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
+    CostModel, InstanceCrash, InstanceRole, InstanceSpec, LengthDist, RoutePolicy, WorkloadConfig,
+    AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
 };
 use hyperparallel::serving::{spread_placement, ArrivalProcess};
 use hyperparallel::faults::{FaultPlan, LinkDegrade, RetryPolicy};
@@ -361,20 +361,18 @@ fn grid_cluster(disagg: bool, route: RoutePolicy, inject: bool, faulted: bool) -
     } else {
         (FaultPlan::empty(), None)
     };
-    ClusterConfig {
-        topology,
-        instances,
-        max_seq: 512,
-        cost: CostModel::new(grid_device(), 0.0),
-        policy: MemoryPolicy::NoOffload,
-        pool_pages: 0,
-        max_preemptions: 4,
-        route,
-        autoscale,
-        failures,
-        faults,
-        retry,
+    let mut b = ClusterConfig::builder(topology, instances, CostModel::new(grid_device(), 0.0))
+        .max_seq(512)
+        .route(route)
+        .failures(failures)
+        .faults(faults);
+    if let Some(aus) = autoscale {
+        b = b.autoscale(aus);
     }
+    if let Some(r) = retry {
+        b = b.retry(r);
+    }
+    b.build()
 }
 
 /// Property: across the full router-policy × cluster-mode × seed grid
@@ -388,6 +386,9 @@ fn request_conservation_across_policy_mode_seed_grid() {
         RoutePolicy::RoundRobin,
         RoutePolicy::LeastOutstandingKv,
         RoutePolicy::SessionAffinity,
+        // without a prefix store, CacheAware must degrade to session
+        // affinity and conserve identically
+        RoutePolicy::CacheAware,
     ];
     for disagg in [false, true] {
         for &route in &policies {
@@ -432,4 +433,84 @@ fn request_conservation_across_policy_mode_seed_grid() {
             }
         }
     }
+}
+
+// ---- ISSUE 7 acceptance: the agentic prefix-cache gate ----------------
+//
+// On the checked-in seed-42 agentic multi-turn scenario, cache-aware
+// routing + the fleet-wide prefix store beat cache-blind session
+// affinity by >= 1.3x max-QPS-under-SLO with <= 0.5x the recomputed
+// tokens on the supernode fabric, and the gap collapses on legacy
+// RoCE where a host-tier fetch loses the bandwidth race against
+// recompute. tools/cluster_simcheck.py mirrors these cells
+// bit-identically (supernode 60 vs 40 QPS, ratio 0.140; legacy 50 vs
+// 40, ratio 0.500).
+
+use hyperparallel::serving::agentic_comparison;
+
+#[test]
+fn prefix_cache_lifts_agentic_qps_on_supernode_fabric() {
+    let s = agentic_comparison(ClusterFabric::Supernode);
+
+    assert!(
+        s.qps_gain() >= 1.3,
+        "cache-aware must win >= 1.3x on supernode: {} vs {}",
+        s.aware.rate,
+        s.blind.rate
+    );
+    assert!(s.aware.rate >= 55.0, "aware operating point too low: {}", s.aware.rate);
+
+    let ratio = s.aware_report.tokens_recomputed_ratio();
+    assert!(ratio <= 0.5, "recomputed-token ratio too high: {ratio}");
+    assert!(
+        s.aware_report.prefix_hit_rate() >= 0.9,
+        "agentic sessions must hit the cache: {}",
+        s.aware_report.prefix_hit_rate()
+    );
+    // the supernode path actually exercises the tier chain: histories
+    // overflow the tiny HBM carve-out into pooled DRAM and promote
+    // back on reuse, and the engine pays real (but winning) fetch time
+    assert!(s.aware_report.prefix_demotions > 0, "HBM carve-out must overflow");
+    assert!(s.aware_report.prefix_promotions > 0, "reuse must promote runs back");
+    assert!(s.aware_report.prefix_fetch_time > 0.0);
+
+    // cache-blind session affinity recomputes everything by
+    // construction: no store, no hits, ratio exactly 1.0
+    assert_eq!(s.blind_report.tokens_recomputed_ratio(), 1.0);
+    assert_eq!(
+        s.blind_report.prefix_hits + s.blind_report.prefix_misses,
+        0,
+        "the blind cell must not consult a store"
+    );
+}
+
+#[test]
+fn prefix_cache_gain_collapses_on_legacy_fabric() {
+    let sn = agentic_comparison(ClusterFabric::Supernode);
+    let lg = agentic_comparison(ClusterFabric::Legacy);
+
+    // no pooled tier + 8 GB/s host fetches: the cache still dedups
+    // pages, but fetches lose to recompute and the QPS edge shrinks
+    assert!(
+        lg.qps_gain() < sn.qps_gain(),
+        "legacy gain {} must trail supernode gain {}",
+        lg.qps_gain(),
+        sn.qps_gain()
+    );
+    assert!(lg.qps_gain() < 1.3, "legacy gain must fall below the supernode gate");
+    assert!(
+        lg.aware_report.tokens_recomputed_ratio() > sn.aware_report.tokens_recomputed_ratio(),
+        "legacy must recompute more: {} vs {}",
+        lg.aware_report.tokens_recomputed_ratio(),
+        sn.aware_report.tokens_recomputed_ratio()
+    );
+    // without pooled DRAM nothing is ever promoted back over the
+    // fabric — demotions go straight to host and stay there
+    assert_eq!(lg.aware_report.prefix_promotions, 0);
+    // the blind cells never touch the fabric or the store, so they are
+    // bit-identical across fabrics
+    assert_eq!(
+        sn.blind_report.serving.outcomes, lg.blind_report.serving.outcomes,
+        "cache-blind colocated runs must not depend on the fabric"
+    );
 }

@@ -25,8 +25,7 @@ use hyperparallel::hypermpmd::coschedule::{
 use hyperparallel::hyperoffload::kvcache::KvCacheConfig;
 use hyperparallel::serving::{
     simulate_cluster, ArrivalProcess, ClusterConfig, ClusterFabric, CostModel, InstanceCrash,
-    InstanceRole, InstanceSpec, LengthDist, MemoryPolicy, RoutePolicy, WorkloadConfig,
-    AUTOSCALE_MEAN_RATE,
+    InstanceRole, InstanceSpec, LengthDist, WorkloadConfig, AUTOSCALE_MEAN_RATE,
 };
 use hyperparallel::serving::{spread_placement, ClusterReport};
 use hyperparallel::sim::tags;
@@ -181,20 +180,14 @@ fn custody_cluster(
             slots: 4,
         });
     }
-    ClusterConfig {
-        topology,
-        instances,
-        max_seq: 512,
-        cost: CostModel::new(fault_device(), 0.0),
-        policy: MemoryPolicy::NoOffload,
-        pool_pages: 0,
-        max_preemptions: 4,
-        route: RoutePolicy::LeastOutstandingKv,
-        autoscale: None,
-        failures,
-        faults,
-        retry,
+    let mut b = ClusterConfig::builder(topology, instances, CostModel::new(fault_device(), 0.0))
+        .max_seq(512)
+        .failures(failures)
+        .faults(faults);
+    if let Some(r) = retry {
+        b = b.retry(r);
     }
+    b.build()
 }
 
 fn custody_workload(seed: u64) -> Vec<hyperparallel::serving::Request> {

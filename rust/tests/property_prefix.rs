@@ -1,0 +1,198 @@
+//! Property tests for the fleet-wide prefix store (ISSUE 7
+//! satellite), in the style of `property_kvcache.rs`: random
+//! admit/extend/crash sequences against `hyperoffload::prefix::
+//! PrefixStore` never break page conservation — per tier, the tracked
+//! counters equal the per-run sums, page counts match token counts,
+//! and no budget is exceeded after any rebalance. Instance
+//! invalidation leaves no dangling non-host run, and a cluster run
+//! with the cache disabled (`prefix: None`) is bit-identical to one
+//! that never carried prefix metadata at all — the "PR 6 behavior is
+//! untouched" guarantee behind the checked-in crossover numbers.
+
+use hyperparallel::hyperoffload::policy::OffloadPolicy;
+use hyperparallel::hyperoffload::prefix::{PrefixCacheConfig, PrefixStore, PrefixTier};
+use hyperparallel::serving::{agentic_scenario, simulate_cluster, ClusterFabric, Request};
+use hyperparallel::util::prop::{forall, pair_of, usize_in, vec_of, Check};
+
+const FLEET: usize = 3;
+const TOKENS_PER_PAGE: usize = 16;
+
+fn small_cfg(hbm: usize, pool: usize, host: usize, enabled: bool) -> PrefixCacheConfig {
+    let mut policy = OffloadPolicy::new(1 << 30);
+    policy.hbm_reserve_frac = 0.25;
+    policy.enabled = enabled;
+    PrefixCacheConfig {
+        hbm_pages_per_instance: hbm,
+        pool_pages: pool,
+        host_pages: host,
+        host_bw: 8e9,
+        policy,
+    }
+}
+
+/// One random store operation:
+/// (op selector, (tenant, (session, (tokens, instance)))).
+type Op = (usize, (usize, (usize, (usize, usize))));
+
+fn ops_gen(max_ops: usize) -> hyperparallel::util::prop::Gen<Vec<Op>> {
+    vec_of(
+        pair_of(
+            usize_in(0, 9),
+            pair_of(
+                usize_in(0, 2),
+                pair_of(
+                    usize_in(0, 3),
+                    pair_of(usize_in(1, 320), usize_in(0, FLEET - 1)),
+                ),
+            ),
+        ),
+        0,
+        max_ops,
+    )
+}
+
+/// Drive one op against the store the way the cluster does: admissions
+/// pass the keys `lookup` reported as `used` (that is the only way the
+/// cluster ever calls `admit`), completions extend the session run,
+/// and a rare op crashes an instance.
+fn apply(store: &mut PrefixStore, op: &Op) -> Result<(), String> {
+    let &(sel, (tenant, (session, (tokens, instance)))) = op;
+    let session = session as u64;
+    match sel {
+        // crash/release: every non-host run homed there must vanish
+        0 => {
+            store.invalidate_instance(instance);
+            if store.runs_homed_at(instance) != 0 {
+                return Err(format!("dangling runs at instance {instance} after crash"));
+            }
+        }
+        // completion: history grows to prompt + output
+        1 | 2 => {
+            store.extend(tenant, session, tokens, instance);
+        }
+        // fresh admission: shared = what the workload would re-send
+        _ => {
+            let shared = if sel % 2 == 0 { tokens / 2 } else { 0 };
+            let segs = store.lookup(tenant, session, shared);
+            // the router signal must agree with the segments it is
+            // derived from
+            let want: usize = segs
+                .iter()
+                .filter(|s| s.tier == PrefixTier::Hbm && s.home == instance)
+                .map(|s| s.pages)
+                .sum();
+            if store.local_hit_pages(tenant, session, shared, instance) != want {
+                return Err("local_hit_pages disagrees with lookup".into());
+            }
+            let used: Vec<_> = segs.iter().map(|s| s.key).collect();
+            store.admit(tenant, session, shared, tokens, instance, &used);
+        }
+    }
+    store.check_conservation()
+}
+
+#[test]
+fn prefix_store_conserves_pages_under_random_ops() {
+    forall("prefix-conservation", 250, ops_gen(120), |ops| {
+        // tight budgets so demotion chains fire constantly
+        let mut store = PrefixStore::new(small_cfg(8, 12, 10, true), TOKENS_PER_PAGE);
+        for (step, op) in ops.iter().enumerate() {
+            if let Err(e) = apply(&mut store, op) {
+                return Check::Fail(format!("step {step}: {e}"));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn disabled_policy_conserves_by_evicting() {
+    forall("prefix-conservation-disabled", 150, ops_gen(80), |ops| {
+        let mut store = PrefixStore::new(small_cfg(8, 12, 10, false), TOKENS_PER_PAGE);
+        for (step, op) in ops.iter().enumerate() {
+            if let Err(e) = apply(&mut store, op) {
+                return Check::Fail(format!("step {step}: {e}"));
+            }
+            // the disabled hierarchy never touches the lower tiers
+            if store.pool_used() != 0 || store.host_used() != 0 {
+                return Check::Fail(format!(
+                    "step {step}: disabled policy spilled below HBM: pool {}, host {}",
+                    store.pool_used(),
+                    store.host_used()
+                ));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn crash_of_every_instance_leaves_only_host_runs() {
+    forall("prefix-crash-dangling", 150, ops_gen(100), |ops| {
+        let mut store = PrefixStore::new(small_cfg(8, 12, 10, true), TOKENS_PER_PAGE);
+        for (step, op) in ops.iter().enumerate() {
+            if let Err(e) = apply(&mut store, op) {
+                return Check::Fail(format!("step {step}: {e}"));
+            }
+        }
+        // total loss of the fleet: only host-tier runs may survive
+        for inst in 0..FLEET {
+            store.invalidate_instance(inst);
+            if let Err(e) = store.check_conservation() {
+                return Check::Fail(format!("after crash of {inst}: {e}"));
+            }
+            if store.runs_homed_at(inst) != 0 {
+                return Check::Fail(format!("dangling runs at {inst}"));
+            }
+        }
+        let survivors = store.run_count();
+        if survivors > 0 && store.host_used() == 0 {
+            return Check::Fail(format!(
+                "{survivors} runs survived a full-fleet crash outside host memory"
+            ));
+        }
+        if store.pool_used() != 0 {
+            return Check::Fail("pooled pages survived the instances that leased them".into());
+        }
+        Check::Pass
+    });
+}
+
+/// With `prefix: None` the session/shared-prefix request metadata is
+/// inert: zeroing `shared_prefix_tokens` on every request changes
+/// nothing about a cache-blind run. This is the compatibility
+/// guarantee that keeps the checked-in crossover/autoscale numbers
+/// (whose generators emit `shared_prefix_tokens: 0`) bit-identical to
+/// their pre-prefix-cache values.
+#[test]
+fn cache_disabled_run_ignores_prefix_metadata_bit_identically() {
+    let sc = agentic_scenario(ClusterFabric::Supernode, false);
+    let reqs = sc.workload.generate(sc.horizon);
+    assert!(
+        reqs.iter().any(|r| r.shared_prefix_tokens > 0),
+        "the agentic workload must actually carry shared prefixes"
+    );
+    let stripped: Vec<Request> = reqs
+        .iter()
+        .map(|r| Request {
+            shared_prefix_tokens: 0,
+            ..*r
+        })
+        .collect();
+    let a = simulate_cluster(&sc.cluster, &reqs);
+    let b = simulate_cluster(&sc.cluster, &stripped);
+    assert_eq!(a.serving.outcomes, b.serving.outcomes, "outcome streams diverge");
+    assert_eq!(a.serving.rejected, b.serving.rejected);
+    assert_eq!(a.serving.prefill_tokens, b.serving.prefill_tokens);
+    assert_eq!(a.serving.decoded_tokens, b.serving.decoded_tokens);
+    assert_eq!(a.serving.makespan.to_bits(), b.serving.makespan.to_bits());
+    assert_eq!(a.per_instance_completed, b.per_instance_completed);
+    // and the blind run's prefix instrumentation is all zeros
+    for rep in [&a, &b] {
+        assert_eq!(rep.prefix_hits + rep.prefix_misses, 0);
+        assert_eq!(rep.prefix_prompt_tokens, 0);
+        assert_eq!(rep.prefix_fetch_time.to_bits(), 0.0f64.to_bits());
+        assert_eq!(rep.tokens_recomputed_ratio(), 1.0);
+        assert_eq!(rep.prefix_hit_rate(), 0.0);
+    }
+}

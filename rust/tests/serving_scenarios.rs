@@ -121,8 +121,10 @@ fn demotion_path_beats_preemption_thrash() {
         .map(|id| Request {
             id,
             tenant: 0,
+            session: 0,
             arrival: id as f64 * 1e-5,
             prompt_tokens: 48,
+            shared_prefix_tokens: 0,
             output_tokens: 12,
         })
         .collect();

@@ -17,6 +17,15 @@ Expected output on the checked-in presets (seed 42):
                        than static peak provisioning
     legacy elastic:    p99 TTFT blows the SLO (warm-up lag over RoCE)
     crash run:         zero requests lost, TTFT re-converges under SLO
+  agentic prefix cache (ISSUE 7, multi-turn at rate 10 over 8s):
+    supernode cache-aware: max-QPS-under-SLO 60, recomputed ratio
+                           0.140, hit-rate 0.945 (gain 1.50x >= 1.3x,
+                           ratio <= 0.5 vs cache-blind session
+                           affinity at ratio 1.0 / max-QPS 40)
+    legacy    cache-aware: max-QPS-under-SLO 50, recomputed ratio
+                           0.500 (gain collapses to 1.25x — host
+                           fetch at 8 GB/s loses the bandwidth race
+                           against recompute, no supernode pool tier)
 """
 import math
 from collections import deque
@@ -128,12 +137,111 @@ def gen_requests_diurnal(tenants, horizon, seed, plo, phi, olo, ohi):
 
 
 def _attach_lengths(ts, rng, plo, phi, olo, ohi):
+    # single-shot generators: session = tenant (so session-affinity
+    # routing degenerates to tenant affinity), no shared prefix
     reqs = []
     for i, (at, tenant) in enumerate(ts):
         prompt = rng.range(max(plo, 1), max(phi, plo) + 1)
         output = rng.range(max(olo, 1), max(ohi, olo) + 1)
-        reqs.append(dict(id=i, tenant=tenant, arrival=at, prompt=prompt,
-                         output=output))
+        reqs.append(dict(id=i, tenant=tenant, session=tenant, arrival=at,
+                         prompt=prompt, shared=0, output=output))
+    return reqs
+
+
+def bursty_arrival_times(rng, rate_on, rate_off, mean_on, mean_off, horizon):
+    """Mirror of ArrivalProcess::Bursty arrival_times (two-state MMPP)."""
+    ts = []
+    t = 0.0
+    on = True
+    state_end = rng.exponential(1.0 / max(mean_on, 1e-9))
+    while t < horizon:
+        rate = rate_on if on else rate_off
+        nxt = t + rng.exponential(rate) if rate > 0.0 else math.inf
+        if nxt < state_end:
+            t = nxt
+            if t < horizon:
+                ts.append((t, 0))
+        else:
+            t = state_end
+            on = not on
+            mean = mean_on if on else mean_off
+            state_end = t + rng.exponential(1.0 / max(mean, 1e-9))
+    return ts
+
+
+# ---- agentic multi-turn workload (mirror of AgenticWorkload) -----------
+# wl = dict(rate_on, rate_off, mean_on, mean_off, tenants,
+#           system_prompt, turns=(lo,hi), turn_tokens=(lo,hi),
+#           output=(lo,hi), mean_turn_gap, seed)
+
+def uniform_mean(lo, hi):
+    lo = max(lo, 1)
+    return (lo + max(hi, lo)) / 2.0
+
+
+def bursty_mean_rate(wl):
+    total = wl["mean_on"] + wl["mean_off"]
+    return (wl["rate_on"] * wl["mean_on"] + wl["rate_off"] * wl["mean_off"]) / total
+
+
+def agentic_mean_rate(wl):
+    return bursty_mean_rate(wl) * uniform_mean(*wl["turns"])
+
+
+def agentic_with_mean_rate(wl, target):
+    """Exact float mirror of AgenticWorkload::with_mean_rate: the
+    request-rate target passes through the session-arrival rescale."""
+    mean = agentic_mean_rate(wl)
+    if mean <= 0.0:
+        return dict(wl)
+    target2 = bursty_mean_rate(wl) * target / mean
+    k = target2 / bursty_mean_rate(wl)
+    out = dict(wl)
+    out["rate_on"] = wl["rate_on"] * k
+    out["rate_off"] = wl["rate_off"] * k
+    return out
+
+
+def agentic_multiturn(mean_rate):
+    """Mirror of workload::agentic_multiturn (the ISSUE 7 preset)."""
+    wl = dict(rate_on=3.0, rate_off=0.5, mean_on=1.0, mean_off=2.0,
+              tenants=6, system_prompt=1200, turns=(2, 5),
+              turn_tokens=(96, 192), output=(24, 48),
+              mean_turn_gap=0.4, seed=42)
+    return agentic_with_mean_rate(wl, mean_rate)
+
+
+def sample_uniform(rng, lo, hi):
+    lo = max(lo, 1)
+    return rng.range(lo, max(hi, lo) + 1)
+
+
+def agentic_generate(wl, horizon):
+    """Mirror of AgenticWorkload::generate — same draw order: all
+    session start times first; per session in start order: turn count,
+    then per turn fresh tokens, output tokens, think-time gap."""
+    rng = Rng(wl["seed"])
+    starts = bursty_arrival_times(rng, wl["rate_on"], wl["rate_off"],
+                                  wl["mean_on"], wl["mean_off"], horizon)
+    reqs = []
+    for sid, (start, _) in enumerate(starts):
+        tenant = sid % max(wl["tenants"], 1)
+        turns = sample_uniform(rng, *wl["turns"])
+        t = start
+        history = wl["system_prompt"]
+        for _ in range(turns):
+            if t >= horizon:
+                break
+            fresh = sample_uniform(rng, *wl["turn_tokens"])
+            output = sample_uniform(rng, *wl["output"])
+            reqs.append(dict(id=0, tenant=tenant, session=sid, arrival=t,
+                             prompt=history + fresh, shared=history,
+                             output=output))
+            history += fresh + output
+            t += rng.exponential(1.0 / max(wl["mean_turn_gap"], 1e-9))
+    reqs.sort(key=lambda r: (r["arrival"], r["session"]))
+    for i, r in enumerate(reqs):
+        r["id"] = i
     return reqs
 
 
@@ -239,6 +347,242 @@ class Cost:
         pool_num = self.frac * w + pool_ctx * self.kvb
         pool_side = 0.0 if pool_num == 0.0 else pool_num / self.pool_bw
         return self.overhead + max(hbm_side, pool_side)
+
+
+# ---- fleet-wide prefix store (mirror of hyperoffload/prefix.rs) --------
+# Keys: ("t", tenant) sorts before ("s", ...) via the numeric encoding
+# (0, tenant) / (1, tenant, session), matching PrefixKey's derive(Ord).
+# Ops: ("promote", key, pages, from_tier, from_home)
+#      ("demote", key, pages, from_tier, to_tier, home)
+#      ("evict", key, pages, from_tier)
+
+HBM_T, POOL_T, HOST_T = "hbm", "pool", "host"
+
+
+class PrefixStore:
+    def __init__(self, hbm_pages, pool_pages, host_pages, host_bw, tpp,
+                 enabled=True, reserve=0.3):
+        self.hbm_pages = hbm_pages
+        self.pool_pages = pool_pages
+        self.host_pages = host_pages
+        self.host_bw = host_bw
+        self.tpp = max(tpp, 1)
+        self.enabled = enabled
+        self.reserve = reserve
+        self.tenant_runs = {}   # tenant -> run dict
+        self.session_runs = {}  # (tenant, session) -> run dict
+        self.tenant_split = {}
+        self.clock = 0
+        self.hbm_used = {}      # instance -> pages
+        self.pool_used = 0
+        self.host_used = 0
+
+    def hbm_budget(self):
+        if self.enabled:
+            return int(self.hbm_pages * (1.0 - self.reserve))
+        return self.hbm_pages
+
+    def pages_for(self, tokens):
+        return -(-tokens // self.tpp)
+
+    def all_runs(self):
+        """(key, run) pairs, tenant runs first, BTreeMap order."""
+        for t in sorted(self.tenant_runs):
+            yield (0, t), self.tenant_runs[t]
+        for ts in sorted(self.session_runs):
+            yield (1,) + ts, self.session_runs[ts]
+
+    def get_run(self, key):
+        if key[0] == 0:
+            return self.tenant_runs.get(key[1])
+        return self.session_runs.get((key[1], key[2]))
+
+    def put_run(self, key, run):
+        if key[0] == 0:
+            self.tenant_runs[key[1]] = run
+        else:
+            self.session_runs[(key[1], key[2])] = run
+
+    def pop_run(self, key):
+        if key[0] == 0:
+            run = self.tenant_runs.pop(key[1])
+        else:
+            run = self.session_runs.pop((key[1], key[2]))
+        self.untrack(run)
+        return run
+
+    def track(self, run):
+        if run["tier"] == HBM_T:
+            self.hbm_used[run["home"]] = \
+                self.hbm_used.get(run["home"], 0) + run["pages"]
+        elif run["tier"] == POOL_T:
+            self.pool_used += run["pages"]
+        else:
+            self.host_used += run["pages"]
+
+    def untrack(self, run):
+        if run["tier"] == HBM_T:
+            self.hbm_used[run["home"]] -= run["pages"]
+        elif run["tier"] == POOL_T:
+            self.pool_used -= run["pages"]
+        else:
+            self.host_used -= run["pages"]
+
+    def lookup(self, tenant, session, shared):
+        segs = []
+        split = self.tenant_split.get(tenant, 0)
+        run = self.tenant_runs.get(tenant)
+        if run is not None:
+            tokens = min(run["tokens"], shared)
+            if tokens > 0:
+                segs.append(dict(key=(0, tenant), tokens=tokens,
+                                 pages=self.pages_for(tokens),
+                                 tier=run["tier"], home=run["home"]))
+        if shared > split:
+            run = self.session_runs.get((tenant, session))
+            if run is not None:
+                tokens = min(run["tokens"], shared - split)
+                if tokens > 0:
+                    segs.append(dict(key=(1, tenant, session), tokens=tokens,
+                                     pages=self.pages_for(tokens),
+                                     tier=run["tier"], home=run["home"]))
+        return segs
+
+    def local_hit_pages(self, tenant, session, shared, instance):
+        return sum(s["pages"] for s in self.lookup(tenant, session, shared)
+                   if s["tier"] == HBM_T and s["home"] == instance)
+
+    def touch(self, key, instance, ops):
+        run = self.get_run(key)
+        if run is None:
+            return
+        if run["tier"] != HBM_T or run["home"] != instance:
+            self.untrack(run)
+            ops.append(("promote", key, run["pages"], run["tier"],
+                        run["home"]))
+            run["tier"] = HBM_T
+            run["home"] = instance
+            self.track(run)
+        run["last_use"] = self.clock
+
+    def upsert(self, key, tokens, instance):
+        run = self.get_run(key)
+        if run is None:
+            run = dict(tokens=tokens, pages=self.pages_for(tokens),
+                       tier=HBM_T, home=instance, last_use=self.clock)
+            self.put_run(key, run)
+            self.track(run)
+        else:
+            if tokens > run["tokens"]:
+                self.untrack(run)
+                run["tokens"] = tokens
+                run["pages"] = self.pages_for(tokens)
+                run["tier"] = HBM_T
+                run["home"] = instance
+                self.track(run)
+            run["last_use"] = self.clock
+
+    def lru_in(self, tier, home=None):
+        best = None
+        for key, run in self.all_runs():
+            if run["tier"] != tier or (home is not None and run["home"] != home):
+                continue
+            cand = (run["last_use"], key)
+            if best is None or cand < best:
+                best = cand
+        return None if best is None else best[1]
+
+    def rebalance(self, ops):
+        budget = self.hbm_budget()
+        while True:
+            over = [k for k in sorted(self.hbm_used)
+                    if self.hbm_used[k] > budget]
+            if not over:
+                break
+            inst = over[0]
+            key = self.lru_in(HBM_T, inst)
+            run = self.pop_run(key)
+            if self.enabled and self.pool_pages > 0:
+                ops.append(("demote", key, run["pages"], HBM_T, POOL_T,
+                            run["home"]))
+                run["tier"] = POOL_T
+                self.put_run(key, run)
+                self.track(run)
+            elif self.enabled and self.host_pages > 0:
+                ops.append(("demote", key, run["pages"], HBM_T, HOST_T,
+                            run["home"]))
+                run["tier"] = HOST_T
+                self.put_run(key, run)
+                self.track(run)
+            else:
+                ops.append(("evict", key, run["pages"], HBM_T))
+        while self.pool_used > self.pool_pages:
+            key = self.lru_in(POOL_T)
+            run = self.pop_run(key)
+            if self.host_pages > 0:
+                ops.append(("demote", key, run["pages"], POOL_T, HOST_T,
+                            run["home"]))
+                run["tier"] = HOST_T
+                self.put_run(key, run)
+                self.track(run)
+            else:
+                ops.append(("evict", key, run["pages"], POOL_T))
+        while self.host_used > self.host_pages:
+            key = self.lru_in(HOST_T)
+            run = self.pop_run(key)
+            ops.append(("evict", key, run["pages"], HOST_T))
+
+    def admit(self, tenant, session, shared, prompt_tokens, instance, used):
+        self.clock += 1
+        ops = []
+        if shared > 0 and tenant not in self.tenant_split:
+            self.tenant_split[tenant] = shared
+        for key in used:
+            self.touch(key, instance, ops)
+        split = self.tenant_split.get(tenant, 0)
+        tenant_cover = min(split, prompt_tokens)
+        if tenant_cover > 0:
+            self.upsert((0, tenant), tenant_cover, instance)
+        if prompt_tokens > split:
+            self.upsert((1, tenant, session), prompt_tokens - split, instance)
+        self.rebalance(ops)
+        return ops
+
+    def extend(self, tenant, session, total_history, instance):
+        self.clock += 1
+        ops = []
+        split = self.tenant_split.get(tenant, 0)
+        if total_history > split:
+            self.upsert((1, tenant, session), total_history - split, instance)
+            self.rebalance(ops)
+        return ops
+
+    def invalidate_instance(self, instance):
+        dropped = 0
+        for key in [k for k, r in self.all_runs()
+                    if r["home"] == instance and r["tier"] != HOST_T]:
+            run = self.pop_run(key)
+            dropped += run["pages"]
+        return dropped
+
+    def check(self):
+        hbm, pool, host = {}, 0, 0
+        for key, run in self.all_runs():
+            assert run["tokens"] > 0 and \
+                run["pages"] == self.pages_for(run["tokens"]), key
+            if run["tier"] == HBM_T:
+                hbm[run["home"]] = hbm.get(run["home"], 0) + run["pages"]
+            elif run["tier"] == POOL_T:
+                pool += run["pages"]
+            else:
+                host += run["pages"]
+        tracked = {k: v for k, v in self.hbm_used.items() if v > 0}
+        assert tracked == hbm, f"hbm drift {tracked} vs {hbm}"
+        assert self.pool_used == pool and self.host_used == host
+        budget = self.hbm_budget()
+        assert all(v <= budget for v in self.hbm_used.values())
+        assert self.pool_used <= self.pool_pages
+        assert self.host_used <= self.host_pages
 
 
 # ---- cluster DES -------------------------------------------------------
@@ -358,7 +702,7 @@ def policy_decide(policy, obs):
 class Cluster:
     def __init__(self, cost, insts, max_seq, fabric, route="least_kv",
                  max_preemptions=4, autoscale=None, failures=(),
-                 faults=None, retry=None):
+                 faults=None, retry=None, prefix=None):
         self.cost = cost
         self.insts = insts
         self.max_seq = max_seq
@@ -366,6 +710,18 @@ class Cluster:
         self.route = route
         self.max_preemptions = max_preemptions
         self.rr = 0
+        # fleet-wide prefix store (ISSUE 7) + its counters
+        self.prefix = prefix
+        self.px_hits = 0
+        self.px_misses = 0
+        self.px_hit_tokens = 0
+        self.px_prompt_tokens = 0
+        self.px_recomputed = 0
+        self.px_fetch_time = 0.0
+        self.px_demote_time = 0.0
+        self.px_promotions = 0
+        self.px_demotions = 0
+        self.px_evictions = 0
         # autoscale: None or dict(policy, eval_interval, min, max, slots,
         #                         cooldown, lookback, pool=[device..])
         self.autoscale = autoscale
@@ -415,14 +771,28 @@ class Cluster:
         return sum(1 for i in self.insts
                    if i.role == role and i.state == WARMING)
 
+    def session_pick(self, req, cands):
+        h = (req["session"] * 0x9E3779B97F4A7C15 + 0x1234) & MASK
+        return cands[h % len(cands)]
+
     def route_arrival(self, req, cands):
         if self.route == "round_robin":
             k = cands[self.rr % len(cands)]
             self.rr += 1
             return k
         if self.route == "session":
-            h = (req["tenant"] * 0x9E3779B97F4A7C15 + 0x1234) & MASK
-            return cands[h % len(cands)]
+            return self.session_pick(req, cands)
+        if self.route == "cache_aware":
+            # expected prefix-hit pages net of load; session hash when
+            # nothing is cached anywhere (mirror of RoutePolicy::CacheAware)
+            loads = [(k, self.insts[k].outstanding_kv(self.cost.tpp),
+                      0 if self.prefix is None else self.prefix.local_hit_pages(
+                          req["tenant"], req["session"], req["shared"], k))
+                     for k in cands]
+            best = max(loads, key=lambda c: (c[2] - c[1], (-c[1], -c[0])))
+            if best[2] == 0:
+                return self.session_pick(req, cands)
+            return best[0]
         # least outstanding kv
         return min(cands, key=lambda k: (self.insts[k].outstanding_kv(self.cost.tpp), k))
 
@@ -456,7 +826,8 @@ class Cluster:
             self.rejected += 1
             return
         inst.queue.appendleft(dict(
-            id=seq["id"], tenant=seq["tenant"], arrival=seq["arrival"],
+            id=seq["id"], tenant=seq["tenant"], session=seq["session"],
+            shared=seq["shared"], arrival=seq["arrival"],
             prompt_len=seq["prompt_len"], output=seq["output"],
             produced=0, first=seq["first"], preemptions=pre, kv_src=None))
 
@@ -571,8 +942,7 @@ class Cluster:
                     self.handoffs.append((entry["id"], entry["kv_src"]))
                 self.rejected += 1
             return
-        req = dict(id=entry["id"], tenant=entry["tenant"])
-        k = self.route_arrival(req, cands)
+        k = self.route_arrival(entry, cands)
         self.insts[k].queue.append(entry)
         self.kick.add(k)
 
@@ -731,7 +1101,8 @@ class Cluster:
                 continue
             self.crash_requeues += 1
             self.route_requeue(dict(
-                id=s["id"], tenant=s["tenant"], arrival=s["arrival"],
+                id=s["id"], tenant=s["tenant"], session=s["session"],
+                shared=s["shared"], arrival=s["arrival"],
                 prompt_len=s["prompt_len"], output=s["output"],
                 produced=0, first=s["first"], preemptions=s["preemptions"],
                 kv_src=None))
@@ -762,6 +1133,10 @@ class Cluster:
                 r["entry"]["kv_src"] = None
                 r["entry"]["produced"] = 0
         inst.release_all()
+        # cached prefix runs homed on the dead instance die with its
+        # HBM and pooled memory; host-tier copies survive
+        if self.prefix is not None:
+            self.prefix.invalidate_instance(k)
         inst.active = [None] * inst.slots
         inst.queue.clear()
         inst.ingest.clear()
@@ -796,7 +1171,9 @@ class Cluster:
                 # hand the KV pages to a serving instance; pages stay
                 # parked here until the destination admits the sequence
                 inst.active[slot] = None
-                entry = dict(id=s["id"], tenant=s["tenant"], arrival=s["arrival"],
+                entry = dict(id=s["id"], tenant=s["tenant"],
+                             session=s["session"], shared=s["shared"],
+                             arrival=s["arrival"],
                              prompt_len=s["prompt_len"], output=s["output"],
                              produced=s["produced"], first=s["first"],
                              preemptions=s["preemptions"], kv_src=k)
@@ -809,6 +1186,13 @@ class Cluster:
                     inst=k))
                 inst.release(s["id"])
                 inst.active[slot] = None
+                # a completed agentic turn leaves its full context in
+                # the prefix store for the session's next turn
+                if s["shared"] > 0 and self.prefix is not None:
+                    ops = self.prefix.extend(
+                        s["tenant"], s["session"],
+                        s["prompt_len"] + s["produced"], k)
+                    self.apply_prefix_ops(k, t, ops)
 
     def finish_ingest(self, k, t):
         inst = self.insts[k]
@@ -828,6 +1212,81 @@ class Cluster:
         self.resolve_limbo()
         self.kick.add(k)
 
+    # -- prefix-cache pricing (mirror of cluster.rs free helpers) --------
+
+    def p2p(self, a, b, nbytes, t):
+        tier = tier_between(a, b)
+        if fault_degraded_at(self.faults, t):
+            return p2p_time_at(self.fabric, tier, nbytes, self.faults, t)
+        return p2p_time(self.fabric, tier, nbytes)
+
+    def segment_fetch_time(self, k, t, seg, devices):
+        nbytes = seg["tokens"] * self.cost.kvb
+        if seg["tier"] == HBM_T:
+            if seg["home"] == k:
+                return 0.0
+            return self.p2p(devices[seg["home"]], devices[k], nbytes, t)
+        if seg["tier"] == POOL_T:
+            stream = nbytes / self.cost.pool_bw
+            if seg["home"] == k:
+                return stream
+            return stream + self.p2p(devices[seg["home"]], devices[k],
+                                     nbytes, t)
+        return nbytes / self.prefix.host_bw
+
+    def apply_prefix_ops(self, k, t, ops):
+        page_bytes = self.cost.tpp * self.cost.kvb
+        for op in ops:
+            if op[0] == "promote":
+                self.px_promotions += 1
+                self.intervals.append([k, t, t, "prefix_promote"])
+            elif op[0] == "demote":
+                _, _, pages, _, to, _ = op
+                self.px_demotions += 1
+                nbytes = pages * page_bytes
+                if to == POOL_T:
+                    self.px_demote_time += nbytes / self.cost.pool_bw
+                elif to == HOST_T:
+                    self.px_demote_time += nbytes / self.prefix.host_bw
+                self.intervals.append([k, t, t, "prefix_demote"])
+            else:
+                self.px_evictions += 1
+
+    def prefix_admit(self, k, t, entry, plen):
+        """(cached_tokens, fetch_seconds) of one fresh admission — keep
+        a segment only when fetching beats recomputing it."""
+        store = self.prefix
+        self.px_prompt_tokens += plen
+        shared = min(entry["shared"], plen)
+        if shared == 0:
+            self.px_misses += 1
+            self.px_recomputed += plen
+            return 0, 0.0
+        devices = [i.device for i in self.insts]
+        cached, fetch, remote, used = 0, 0.0, False, []
+        for seg in store.lookup(entry["tenant"], entry["session"], shared):
+            xfer = self.segment_fetch_time(k, t, seg, devices)
+            recompute = seg["tokens"] / self.cost.prefill_rate
+            if xfer < recompute:
+                cached += seg["tokens"]
+                fetch += xfer
+                used.append(seg["key"])
+                if xfer > 0.0:
+                    remote = True
+        if remote:
+            self.intervals.append([k, t, t, "prefix_fetch"])
+        if cached > 0:
+            self.px_hits += 1
+        else:
+            self.px_misses += 1
+        self.px_hit_tokens += cached
+        self.px_recomputed += plen - cached
+        self.px_fetch_time += fetch
+        ops = store.admit(entry["tenant"], entry["session"], shared, plen,
+                          k, used)
+        self.apply_prefix_ops(k, t, ops)
+        return cached, fetch
+
     def start_work(self, k, t):
         inst = self.insts[k]
         assert inst.work_end is None
@@ -842,6 +1301,8 @@ class Cluster:
             return
         self.grow_active(k)
         total_prefill = 0
+        cached_prefill = 0
+        fetch_time = 0.0
         while True:
             occupied = [s is not None for s in inst.active]
             empty = occupied.count(False)
@@ -861,10 +1322,15 @@ class Cluster:
                 q = inst.queue.popleft()
                 if q["produced"] == 0:
                     total_prefill += plen
+                    if self.prefix is not None:
+                        c, f = self.prefix_admit(k, t, q, plen)
+                        cached_prefill += c
+                        fetch_time += f
                 if q["kv_src"] is not None:
                     self.handoffs.append((q["id"], q["kv_src"]))
                 inst.active[slot] = dict(
-                    id=q["id"], tenant=q["tenant"], arrival=q["arrival"],
+                    id=q["id"], tenant=q["tenant"], session=q["session"],
+                    shared=q["shared"], arrival=q["arrival"],
                     prompt_len=plen, output=q["output"], produced=q["produced"],
                     admitted_at=t, first=q["first"], preemptions=q["preemptions"])
             if plan or inst.active_count() > 0:
@@ -888,10 +1354,14 @@ class Cluster:
                            for s in inst.active if s)
         if inst.active_count() == 0:
             return
-        finish = t + self.cost.iteration_latency(inst.cur_ctx, 0, total_prefill)
+        # cache-hit tokens skip recompute; their fetch stalls the
+        # iteration instead (both zero without a prefix store)
+        compute_prefill = total_prefill - cached_prefill
+        finish = t + fetch_time \
+            + self.cost.iteration_latency(inst.cur_ctx, 0, compute_prefill)
         inst.cur_iv = len(self.intervals)
         self.intervals.append([k, t, finish,
-                               "prefill" if total_prefill else "decode"])
+                               "prefill" if compute_prefill else "decode"])
         inst.work_end = (finish, "iter")
 
     # -- main loop ---------------------------------------------------------
@@ -937,7 +1407,8 @@ class Cluster:
             # (the kick-drain below wakes it), wait in limbo while
             # capacity warms, or reject if no capacity can ever come
             self.route_requeue(dict(
-                id=req["id"], tenant=req["tenant"], arrival=req["arrival"],
+                id=req["id"], tenant=req["tenant"], session=req["session"],
+                shared=req["shared"], arrival=req["arrival"],
                 prompt_len=req["prompt"], output=req["output"],
                 produced=0, first=None, preemptions=0, kv_src=None))
         elif cls == 1:
@@ -988,6 +1459,10 @@ class Cluster:
                     inst.active_count() == 0 and not inst.ledger:
                 inst.state = RELEASED
                 inst.died = t
+                # the released device's memory goes back to the pool:
+                # prefix runs homed there (HBM or pooled) are lost
+                if self.prefix is not None:
+                    self.prefix.invalidate_instance(k2)
                 self.intervals.append([k2, t, t, "drain"])
                 if lessor is None or not lessor.give_back(inst.device):
                     self.pool_devices.append(inst.device)
@@ -1017,6 +1492,17 @@ class Cluster:
             assert inst.hbm_free == inst.hbm_capacity
         assert not self.limbo, "limbo entries leaked"
         assert not self.retries, "retry entries leaked"
+        if self.prefix is not None:
+            self.prefix.check()
+
+    def tokens_recomputed_ratio(self):
+        if self.px_prompt_tokens == 0:
+            return 1.0
+        return self.px_recomputed / self.px_prompt_tokens
+
+    def prefix_hit_rate(self):
+        total = self.px_hits + self.px_misses
+        return 0.0 if total == 0 else self.px_hits / total
 
     def run(self, requests):
         self.bind(requests)
@@ -1199,6 +1685,56 @@ def run_autoscale(fabric, elastic, failures=(), cfg=AUTOSCALE_CFG):
     return c
 
 
+# ---- agentic prefix-cache presets (ISSUE 7) ----------------------------
+# Mirror of serving::cluster agentic_* presets: four colocated
+# 12-slot instances spread across racks; cache-aware cells add the
+# fleet-wide prefix store, cache-blind cells run bare SessionAffinity.
+# The HBM carve-out is tiny (64 pages, 30% policy reserve -> 44-page
+# budget) so histories overflow immediately: the supernode demotes
+# into pooled DRAM at 392 GB/s where a fetch beats recompute, the
+# legacy cluster has no pooled tier (pool_pages=0) and spills to host
+# at 8 GB/s where a fetch loses the race and the cache stops paying.
+
+AGENTIC_RATES = [10.0, 15.0, 20.0, 25.0, 30.0, 40.0, 50.0, 60.0]
+AGENTIC_COMPARE_RATE = 10.0
+AGENTIC_HORIZON = 8.0
+AGENTIC_SLO = (0.5, 0.013)
+
+
+def agentic_prefix_store(fabric, cost):
+    return PrefixStore(
+        hbm_pages=64,
+        pool_pages=8192 if fabric == "supernode" else 0,
+        host_pages=8192, host_bw=8e9, tpp=cost.tpp,
+        enabled=True, reserve=0.3)
+
+
+def agentic_cluster(fabric, cache_aware):
+    cost = Cost(131072, 64, 8 * (1 << 30), 40960)
+    pages = cost.hbm_pages()
+    insts = [Instance(COLOCATED, 12, pages, spread_device(fabric, i))
+             for i in range(4)]
+    if cache_aware:
+        return Cluster(cost, insts, 4096, fabric, route="cache_aware",
+                       prefix=agentic_prefix_store(fabric, cost))
+    return Cluster(cost, insts, 4096, fabric, route="session")
+
+
+def run_agentic(fabric, cache_aware, rate):
+    wl = agentic_with_mean_rate(agentic_multiturn(AGENTIC_RATES[0]), rate)
+    c = agentic_cluster(fabric, cache_aware)
+    c.run(agentic_generate(wl, AGENTIC_HORIZON))
+    return c
+
+
+def agentic_sweep(fabric, cache_aware):
+    pts = []
+    for r in AGENTIC_RATES:
+        c = run_agentic(fabric, cache_aware, r)
+        pts.append(operating_point(c, r, *AGENTIC_SLO))
+    return pts
+
+
 def describe(c, cfg, label):
     op = operating_point(c, cfg["mean_rate"], *cfg["slo"])
     print(f"  {label:<22} done {op['completed']:>4} rej {op['rejected']:>3} "
@@ -1272,3 +1808,45 @@ if __name__ == "__main__":
     print(f"  post-crash p99 TTFT (arrivals after t+2s): {reconv:.4f}s")
     assert reconv <= slo_ttft, "cluster must re-converge to SLO after crash"
     print("autoscale + crash-recovery bounds hold")
+
+    # ---- ISSUE 7: fleet-wide prefix cache on the agentic workload ------
+    n_agentic = len(agentic_generate(agentic_multiturn(10.0), AGENTIC_HORIZON))
+    print(f"\n=== agentic prefix cache: {n_agentic} turns at rate 10 "
+          f"over {AGENTIC_HORIZON:.0f}s ===")
+    qps = {}
+    for fabric in ["supernode", "legacy"]:
+        for aware in [True, False]:
+            pts = agentic_sweep(fabric, aware)
+            label = "cache-aware" if aware else "cache-blind"
+            print(f"--- {label} on {fabric} ---")
+            for p in pts:
+                print("  rate {rate:>5.0f} done {completed:>4} rej {rejected:>3} "
+                      "p50ttft {p50_ttft:7.4f} p99ttft {p99_ttft:7.4f} "
+                      "p99tpot {p99_tpot:8.5f} slo {attains}".format(**p))
+            op = max_qps(pts)
+            assert op is not None, f"{fabric}/{label} must attain at rate 10"
+            qps[(fabric, aware)] = op["rate"]
+            print("  max-QPS-under-SLO:", op["rate"])
+    reports = {(f, a): run_agentic(f, a, AGENTIC_COMPARE_RATE)
+               for f in ["supernode", "legacy"] for a in [True, False]}
+    for (f, a), c in sorted(reports.items()):
+        label = "aware" if a else "blind"
+        print(f"  {f:<10} {label}: hit-rate {c.prefix_hit_rate():.3f} "
+              f"recomputed-ratio {c.tokens_recomputed_ratio():.3f} "
+              f"promotions {c.px_promotions} demotions {c.px_demotions} "
+              f"evictions {c.px_evictions} fetch {c.px_fetch_time:.4f}s")
+    sn_gain = qps[("supernode", True)] / qps[("supernode", False)]
+    lg_gain = qps[("legacy", True)] / qps[("legacy", False)]
+    sn_ratio = reports[("supernode", True)].tokens_recomputed_ratio()
+    lg_ratio = reports[("legacy", True)].tokens_recomputed_ratio()
+    print(f"\nheadline: supernode cache-aware/blind = {sn_gain:.2f}x "
+          f"(gate >= 1.3), recomputed ratio {sn_ratio:.3f} (gate <= 0.5); "
+          f"legacy gain {lg_gain:.2f}x, ratio {lg_ratio:.3f}")
+    assert sn_gain >= 1.3, f"supernode qps gain {sn_gain:.3f} < 1.3"
+    assert sn_ratio <= 0.5, f"supernode recomputed ratio {sn_ratio:.3f} > 0.5"
+    assert reports[("supernode", False)].tokens_recomputed_ratio() == 1.0, \
+        "cache-blind cell must recompute everything"
+    assert lg_gain < sn_gain, "the legacy fabric must collapse the gain"
+    assert lg_ratio > sn_ratio, \
+        "legacy fetches lose the bandwidth race: more recompute"
+    print("agentic prefix-cache bounds hold")
