@@ -13,8 +13,10 @@
 use hyperparallel::collectives::real::{all_reduce_mean, all_reduce_mean_tree};
 use hyperparallel::hypermpmd::{chunk_sweep, schedule_moe_stack, MoeLayerLoad};
 use hyperparallel::runtime::{literal_f32, literal_i32, Runtime};
-use hyperparallel::sim::{Engine, ResourceId, TaskId};
-use hyperparallel::util::bench::{maybe_write_json, run, section, smoke, BenchResult};
+use hyperparallel::serving::{crossover_scenario, run_cluster_scenario, ClusterFabric, ClusterMode};
+use hyperparallel::sim::{Engine, ResourceId, TaskId, TraceMode};
+use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
+use hyperparallel::util::json::{Json, JsonObj};
 use hyperparallel::util::rng::Rng;
 
 /// The supernode-scale DES workload from the perf acceptance bar:
@@ -173,6 +175,53 @@ fn main() {
         },
     ));
 
+    section("streaming trace sink — event throughput + bounded buffering (CI-gated)");
+    // (a) wall-clock engine-event throughput under the streaming sink:
+    // the city-scale feasibility number. Gated very generously (the
+    // virtual-time metrics below are the tight gates); its job is to
+    // catch an order-of-magnitude event-loop regression, not noise.
+    let (s_res, s_tasks, s_iters) = if smoke() {
+        (128, 50_000, 5)
+    } else {
+        (1_000, 500_000, 10)
+    };
+    let r_stream = run(
+        &format!("sim run streaming, {s_tasks} tasks / {s_res} resources"),
+        1,
+        s_iters,
+        || {
+            let mut e = build_supernode_workload(s_res, s_tasks);
+            std::hint::black_box(e.run_trace(TraceMode::Streaming).makespan());
+        },
+    );
+    let events_per_sec = s_tasks as f64 / r_stream.min_s;
+    println!("  sim.events_per_sec = {events_per_sec:.3e} (min of {} iters, incl. build)", r_stream.iters);
+    results.push(r_stream);
+    // (b) deterministic: a streaming cluster run buffers only the
+    // concurrently-open intervals — bounded by the instance count, no
+    // matter how many events the run produced.
+    let mut ssc = crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated);
+    ssc.cluster.trace_mode = TraceMode::Streaming;
+    let srep = run_cluster_scenario(&ssc);
+    let peak_buffered = srep.serving.trace.peak_buffered();
+    let total_intervals = srep.serving.trace.interval_count();
+    println!(
+        "  streaming cluster crossover: {total_intervals} intervals folded, peak {peak_buffered} \
+         buffered ({} instances)",
+        ssc.cluster.instances.len()
+    );
+
+    let mut metrics = JsonObj::new();
+    metrics.insert("sim.events_per_sec", Json::from(events_per_sec));
+    metrics.insert(
+        "sim.streaming.peak_buffered_intervals",
+        Json::from(peak_buffered),
+    );
+    metrics.insert(
+        "sim.streaming.total_intervals",
+        Json::from(total_intervals as f64),
+    );
+
     section("parallel scenario sweep (sim::sweep over std::thread::scope)");
     let load = MoeLayerLoad::deepseek_like();
     let chunks: Vec<usize> = if smoke() {
@@ -200,5 +249,19 @@ fn main() {
         },
     ));
 
-    maybe_write_json(&results);
+    // Combined artifact: wall-clock benches + the gated metrics above
+    // (same shape as bench_serving's, so tools/bench_regression.py can
+    // merge the "metrics" objects across bench binaries).
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = JsonObj::new();
+        root.insert("benches", to_json(&results));
+        root.insert("metrics", Json::Obj(metrics));
+        match std::fs::write(&path, Json::Obj(root).pretty()) {
+            Ok(()) => println!("\nbench json written to {path}"),
+            Err(e) => {
+                eprintln!("\nbench json write to {path} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

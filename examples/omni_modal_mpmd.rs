@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     // --- traces -----------------------------------------------------------
     let dump = |name: &str, r: &hyperparallel::hypermpmd::ScheduleReport| {
         let mut events = Vec::new();
-        for iv in &r.sim.intervals {
+        for iv in r.sim.intervals() {
             use hyperparallel::util::json::{Json, JsonObj};
             let mut e = JsonObj::new();
             e.insert("name", Json::from(format!("task{}", iv.task.0)));

@@ -60,7 +60,7 @@ use crate::serving::{
     batcher::CostModel, AUTOSCALE_INITIAL_INSTANCES, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
     AUTOSCALE_SLOTS,
 };
-use crate::sim::{parallel_map, tags, Interval, ResourceId, SimResult, TaskId};
+use crate::sim::{parallel_map, tags, ResourceId, Trace, TraceCollector, TraceMode};
 use crate::supernode::{DeviceId, Topology};
 use crate::trainer::elastic::ElasticTrainJob;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -212,8 +212,7 @@ struct TrainerSim<'a> {
     device_step_seconds: f64,
     peak_devices: usize,
     compute_cache: BTreeMap<usize, f64>,
-    intervals: Vec<Interval>,
-    tasks: usize,
+    trace: TraceCollector,
     /// DeviceId.0 → trace resource index, assigned on first use.
     resource_of: BTreeMap<usize, usize>,
     resources: Vec<DeviceId>,
@@ -235,7 +234,12 @@ struct TrainerSim<'a> {
 }
 
 impl<'a> TrainerSim<'a> {
-    fn new(topo: &'a Topology, cfg: &'a TrainTenantConfig, plan: &'a FaultPlan) -> Self {
+    fn new(
+        topo: &'a Topology,
+        cfg: &'a TrainTenantConfig,
+        plan: &'a FaultPlan,
+        mode: TraceMode,
+    ) -> Self {
         assert!(cfg.min_devices >= 1, "trainer needs min_devices >= 1");
         assert!(cfg.grow_cooldown >= 0.0);
         Self {
@@ -255,8 +259,7 @@ impl<'a> TrainerSim<'a> {
             device_step_seconds: 0.0,
             peak_devices: 0,
             compute_cache: BTreeMap::new(),
-            intervals: Vec::new(),
-            tasks: 0,
+            trace: TraceCollector::new(mode),
             resource_of: BTreeMap::new(),
             resources: Vec::new(),
             device_fails: 0,
@@ -299,18 +302,8 @@ impl<'a> TrainerSim<'a> {
     }
 
     fn record(&mut self, devs: &[DeviceId], start: f64, end: f64, tag: u64) {
-        let task = TaskId(self.tasks);
-        self.tasks += 1;
-        for &d in devs {
-            let resource = self.resource(d);
-            self.intervals.push(Interval {
-                task,
-                resource,
-                start,
-                finish: end,
-                tag,
-            });
-        }
+        let rs: Vec<ResourceId> = devs.iter().map(|&d| self.resource(d)).collect();
+        self.trace.push_group(&rs, start, end, tag);
     }
 
     fn step_time(&mut self, now: f64) -> f64 {
@@ -485,8 +478,9 @@ pub struct TrainTenantReport {
     /// recovery summed over fail episodes, seconds.
     pub mttr_seconds: f64,
     /// `train_step`/`reshard`/`restore`/`device_fail` intervals, one
-    /// resource per device.
-    pub trace: SimResult,
+    /// resource per device (indexed or streaming, following the
+    /// cluster's `trace_mode`).
+    pub trace: Trace,
     /// Device of each trace resource.
     pub trace_devices: Vec<DeviceId>,
 }
@@ -553,7 +547,12 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
     let requests = cfg.workload.generate(cfg.horizon);
     let mut serving = ClusterSim::new(&cfg.cluster, &requests);
     let mut broker = LeaseBroker::new(cfg.broker_devices.clone(), cfg.reserve);
-    let mut trainer = TrainerSim::new(&cfg.cluster.topology, &cfg.train, &cfg.cluster.faults);
+    let mut trainer = TrainerSim::new(
+        &cfg.cluster.topology,
+        &cfg.train,
+        &cfg.cluster.faults,
+        cfg.cluster.trace_mode,
+    );
     let mut fails: Vec<DeviceFail> = cfg.cluster.faults.device_fails.clone();
     fails.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.ordinal.cmp(&b.ordinal)));
     let mut fli = 0usize;
@@ -626,11 +625,10 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
     }
     assert_eq!(seen, initial, "device leaked or conjured by the broker");
 
-    let makespan = trainer
-        .intervals
-        .iter()
-        .map(|iv| iv.finish)
-        .fold(0.0f64, f64::max);
+    // max over every recorded finish (markers included), read from the
+    // running accumulators — max is order-independent, so this is
+    // bit-identical to the old interval scan
+    let makespan = trainer.trace.accum().max_finish();
     let n_res = trainer.resources.len();
     CoschedReport {
         serving: serving_report,
@@ -646,7 +644,7 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
             restores: trainer.restores,
             restore_seconds: trainer.restore_seconds,
             mttr_seconds: trainer.mttr_seconds,
-            trace: SimResult::from_intervals(makespan, n_res, trainer.intervals),
+            trace: trainer.trace.finish(makespan, n_res),
             trace_devices: trainer.resources,
         },
         broker: BrokerReport {
@@ -973,7 +971,9 @@ pub fn cosched_comparison(fabric: ClusterFabric) -> CoschedComparison {
 /// scenario tests (and usable as a diagnostic on any report). The
 /// sweep compares each interval against the *running* max finish of
 /// the other tenant, so an overlap cannot hide behind a same-tenant
-/// interval that sorts between the two.
+/// interval that sorts between the two. Needs both interval logs:
+/// call it on `TraceMode::Indexed` runs (the default; streaming runs
+/// keep no log to overlay).
 pub fn assert_tenant_isolation(rep: &CoschedReport) {
     let mut by_dev: BTreeMap<usize, Vec<(f64, f64, bool)>> = BTreeMap::new();
     for (r, dev) in rep.serving.instance_devices.iter().enumerate() {

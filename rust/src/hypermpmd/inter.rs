@@ -16,7 +16,7 @@
 //! *any* idle device group (list scheduling), eliminating the barrier
 //! idles.
 
-use crate::sim::{tags, Engine, SimResult, TaskId};
+use crate::sim::{tags, Engine, SimResult, TaskId, Trace};
 
 /// One sub-module of the omni-modal model.
 #[derive(Debug, Clone)]
@@ -85,7 +85,9 @@ pub struct ScheduleReport {
     pub makespan: f64,
     /// Mean idle fraction across device groups ("pipeline bubbles").
     pub bubble_ratio: f64,
-    pub sim: SimResult,
+    /// Always indexed: these schedules are small and the tests inspect
+    /// individual intervals.
+    pub sim: Trace,
 }
 
 /// Baseline: one fixed device group per sub-module (SPMD + PP). Each
@@ -119,7 +121,7 @@ pub fn schedule_static(w: &OmniModalWorkload) -> ScheduleReport {
     ScheduleReport {
         makespan: sim.makespan,
         bubble_ratio: bubble,
-        sim,
+        sim: Trace::from_indexed(sim),
     }
 }
 
@@ -197,7 +199,7 @@ pub fn schedule_dynamic(w: &OmniModalWorkload, n_groups: usize) -> ScheduleRepor
     ScheduleReport {
         makespan,
         bubble_ratio: bubble,
-        sim: SimResult::from_intervals(makespan, n_groups, intervals),
+        sim: Trace::from_indexed(SimResult::from_intervals(makespan, n_groups, intervals)),
     }
 }
 
@@ -261,7 +263,7 @@ mod tests {
         let nm = w.modules.len();
         let find = |mb: usize, mi: usize| {
             r.sim
-                .intervals
+                .intervals()
                 .iter()
                 .find(|iv| iv.task.0 == mb * nm + mi)
                 .unwrap()

@@ -15,7 +15,7 @@
 //! SPMD baseline, 2 chunks) yields ~60% masking; fine-grained intra-card
 //! MPMD (8–16 chunks + vector co-issue) yields ≥90%.
 
-use crate::sim::{tags, Engine, SimResult, Stream, StreamSet};
+use crate::sim::{tags, Engine, Stream, StreamSet, Trace};
 use crate::supernode::DeviceId;
 
 /// One MoE layer's workload on one device.
@@ -57,7 +57,9 @@ pub struct MaskingReport {
     /// Total comm and compute busy time.
     pub comm_busy: f64,
     pub compute_busy: f64,
-    pub sim: SimResult,
+    /// Always indexed: the masking computation needs the overlap
+    /// merges, which only the CSR index supports.
+    pub sim: Trace,
 }
 
 /// Schedule `layers` consecutive MoE layers with `chunks`-way
@@ -147,7 +149,7 @@ pub fn schedule_moe_stack(
         masking_ratio,
         comm_busy,
         compute_busy,
-        sim,
+        sim: Trace::from_indexed(sim),
     }
 }
 

@@ -23,16 +23,19 @@
 //! math (see [`CostModel`]); KV pages are tracked per sequence by
 //! `serving::memory`, with HyperOffload-style demotion to the DRAM
 //! pool or recompute-style preemption under pressure. Busy intervals
-//! are recorded per replica and assembled into a standard
-//! [`SimResult`], so every indexed metric of the DES substrate
-//! (utilization, overlap, windowed busy) applies to serving traces.
+//! are recorded per replica through a [`TraceCollector`], so every
+//! metric of the DES substrate (utilization, overlap, windowed busy)
+//! applies to serving traces — and under [`TraceMode::Streaming`] the
+//! interval log is never materialized, which is what lets city-scale
+//! fleets (1000+ replicas, 10^7+ iteration events) fit in memory.
 
 use crate::hyperoffload::kvcache::KvCacheConfig;
 use crate::serving::memory::{MemoryPolicy, ServingMemory};
 use crate::serving::metrics::{RequestOutcome, ServingReport};
 use crate::serving::workload::Request;
-use crate::sim::{tags, Interval, ResourceId, SimResult, TaskId};
-use std::collections::VecDeque;
+use crate::sim::{tags, ResourceId, TraceCollector, TraceMode};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// One admission decision from [`plan_refill`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -166,6 +169,11 @@ pub struct ServingConfig {
     pub pool_pages: usize,
     /// Preemptions a request survives before being dropped as rejected.
     pub max_preemptions: u32,
+    /// Trace representation: [`TraceMode::Indexed`] keeps the full
+    /// CSR-indexed interval log (the default; what tests assert on),
+    /// [`TraceMode::Streaming`] folds intervals into accumulators as
+    /// they complete — city-scale fleets run in O(fleet) trace memory.
+    pub trace_mode: TraceMode,
 }
 
 #[derive(Debug, Clone)]
@@ -206,8 +214,7 @@ struct Stats {
     preemptions: u64,
     decoded_tokens: u64,
     prefill_tokens: u64,
-    intervals: Vec<Interval>,
-    tasks: usize,
+    trace: TraceCollector,
     makespan: f64,
 }
 
@@ -432,18 +439,16 @@ impl Replica {
         let finish = t + cfg
             .cost
             .iteration_latency(hbm_tokens, pool_tokens, total_prefill);
-        stats.intervals.push(Interval {
-            task: TaskId(stats.tasks),
-            resource: ResourceId(ridx),
-            start: t,
+        stats.trace.push(
+            ResourceId(ridx),
+            t,
             finish,
-            tag: if total_prefill > 0 {
+            if total_prefill > 0 {
                 tags::PREFILL
             } else {
                 tags::DECODE
             },
-        });
-        stats.tasks += 1;
+        );
         stats.makespan = stats.makespan.max(finish);
         self.iter_end = Some(finish);
     }
@@ -462,17 +467,41 @@ pub fn simulate(cfg: &ServingConfig, requests: &[Request]) -> ServingReport {
     );
 
     let mut replicas: Vec<Replica> = (0..cfg.fleet).map(|_| Replica::new(cfg)).collect();
-    let mut stats = Stats::default();
+    let mut stats = Stats {
+        trace: TraceCollector::new(cfg.trace_mode),
+        ..Default::default()
+    };
     let mut peak_context = 0usize;
     let mut next_arrival = 0usize;
+    // Pending iteration-end events keyed by (finish bits, replica):
+    // non-negative doubles order as their bit patterns, so the heap
+    // pops the same (time, lowest index) the old O(fleet) min-scan
+    // chose — but in O(log fleet), which is what makes 1000+-replica
+    // city-scale fleets tractable. A replica has at most one iteration
+    // in flight, so every entry is current (no lazy deletion needed).
+    let mut iter_heap: BinaryHeap<Reverse<(u64, usize)>> =
+        BinaryHeap::with_capacity(cfg.fleet.min(1 << 16));
+    // Σ cur_ctx_tokens across the fleet, maintained incrementally —
+    // the admitted-context watermark without an O(fleet) sum per event.
+    let mut total_ctx = 0usize;
+
+    // start (or try to start) an iteration on replica `i` at `t`,
+    // keeping the event heap and the running context sum in step
+    macro_rules! kick_replica {
+        ($i:expr, $t:expr) => {{
+            let i = $i;
+            let before = replicas[i].cur_ctx_tokens;
+            replicas[i].start_iteration(i, $t, cfg, &mut stats);
+            total_ctx = total_ctx - before + replicas[i].cur_ctx_tokens;
+            if let Some(f) = replicas[i].iter_end {
+                iter_heap.push(Reverse((f.to_bits(), i)));
+            }
+        }};
+    }
 
     loop {
         let ta = requests.get(next_arrival).map(|r| r.arrival);
-        let te = replicas
-            .iter()
-            .enumerate()
-            .filter_map(|(i, r)| r.iter_end.map(|t| (t, i)))
-            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let te = iter_heap.peek().map(|&Reverse((bits, i))| (f64::from_bits(bits), i));
         let arrival_first = match (ta, te) {
             (None, None) => break,
             (Some(_), None) => true,
@@ -496,14 +525,14 @@ pub fn simulate(cfg: &ServingConfig, requests: &[Request]) -> ServingReport {
                 first_token: None,
             });
             if replicas[target].iter_end.is_none() {
-                replicas[target].start_iteration(target, req.arrival, cfg, &mut stats);
+                kick_replica!(target, req.arrival);
             }
         } else {
+            iter_heap.pop();
             let (t, i) = te.expect("iteration end exists");
             replicas[i].finish_iteration(t, cfg, &mut stats);
-            replicas[i].start_iteration(i, t, cfg, &mut stats);
+            kick_replica!(i, t);
         }
-        let total_ctx: usize = replicas.iter().map(|r| r.cur_ctx_tokens).sum();
         peak_context = peak_context.max(total_ctx);
     }
 
@@ -514,9 +543,8 @@ pub fn simulate(cfg: &ServingConfig, requests: &[Request]) -> ServingReport {
         preemptions,
         decoded_tokens,
         prefill_tokens,
-        intervals,
+        trace,
         makespan,
-        ..
     } = stats;
     ServingReport {
         outcomes,
@@ -527,7 +555,7 @@ pub fn simulate(cfg: &ServingConfig, requests: &[Request]) -> ServingReport {
         prefill_tokens,
         peak_context_tokens: peak_context,
         makespan,
-        trace: SimResult::from_intervals(makespan, cfg.fleet, intervals),
+        trace: trace.finish(makespan, cfg.fleet),
     }
 }
 
@@ -601,6 +629,7 @@ mod tests {
             policy,
             pool_pages: 64,
             max_preemptions: 4,
+            trace_mode: TraceMode::Indexed,
         }
     }
 
@@ -614,7 +643,7 @@ mod tests {
         assert_eq!(rep.preemptions, 0);
         assert_eq!(rep.decoded_tokens, 8 * 8);
         assert!(rep.makespan > 0.0);
-        assert_eq!(rep.trace.resources, 1);
+        assert_eq!(rep.trace.resources(), 1);
         for o in &rep.outcomes {
             assert!(o.first_token > o.arrival);
             assert!(o.finish >= o.first_token);
@@ -738,7 +767,7 @@ mod tests {
         c.fleet = 3;
         let reqs = fixed_requests(60, 32, 10, 0.003);
         let rep = simulate(&c, &reqs);
-        assert_eq!(rep.trace.resources, 3);
+        assert_eq!(rep.trace.resources(), 3);
         for r in 0..3 {
             let bucket = rep.trace.per_resource(ResourceId(r));
             assert!(bucket.windows(2).all(|w| w[0].finish <= w[1].start + 1e-12));
@@ -746,6 +775,40 @@ mod tests {
         // every replica served something under least-loaded routing
         for r in 0..3 {
             assert!(rep.trace.busy_time(ResourceId(r)) > 0.0);
+        }
+    }
+
+    #[test]
+    fn streaming_sink_matches_indexed_bitwise() {
+        // same scenario under both sinks: every report number and the
+        // shared accumulator statistics must agree to the bit
+        let mut c = cfg(tiny_kv(16), 0.1, MemoryPolicy::PoolOffload, 6);
+        c.fleet = 3;
+        let reqs = fixed_requests(60, 48, 12, 1e-4);
+        let a = simulate(&c, &reqs);
+        c.trace_mode = TraceMode::Streaming;
+        let b = simulate(&c, &reqs);
+        assert_eq!(a.trace.mode(), TraceMode::Indexed);
+        assert_eq!(b.trace.mode(), TraceMode::Streaming);
+        assert!(b.trace.indexed().is_none(), "streaming must not keep the log");
+        for ((ka, va), (kb, vb)) in a.summary_kv().iter().zip(&b.summary_kv()) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits(), "summary row {ka} drifted");
+        }
+        assert_eq!(a.trace.interval_count(), b.trace.interval_count());
+        for r in 0..3 {
+            let r = ResourceId(r);
+            assert_eq!(
+                a.trace.busy_time(r).to_bits(),
+                b.trace.busy_time(r).to_bits()
+            );
+        }
+        for tag in a.trace.tag_values() {
+            assert_eq!(a.trace.tagged_count(tag), b.trace.tagged_count(tag));
+            assert_eq!(
+                a.trace.tagged_busy(tag).to_bits(),
+                b.trace.tagged_busy(tag).to_bits()
+            );
         }
     }
 }

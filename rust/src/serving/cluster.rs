@@ -84,7 +84,8 @@
 //! Admission goes through the shared [`plan_refill`] core, iteration
 //! latency through the shared [`CostModel`], and per-instance busy
 //! intervals (prefill / decode / `kv_xfer` / `warmup` / `crash` /
-//! `drain`) compose into one indexed `SimResult`, so the whole cluster
+//! `drain`) compose into one `sim::Trace` (CSR-indexed or streaming,
+//! per `ClusterConfig::trace_mode`), so the whole cluster
 //! report answers every fleet-wide question (TTFT/TPOT/goodput
 //! percentiles, utilization, windowed busy) through the standard
 //! `ServingReport` machinery, and [`cluster_rate_sweep`] fans the
@@ -109,7 +110,8 @@ use crate::serving::workload::{
     agentic_multiturn, diurnal_two_tenant, AgenticWorkload, ArrivalProcess, LengthDist, Request,
     WorkloadConfig,
 };
-use crate::sim::{parallel_map, tags, Interval, ResourceId, SimResult, TaskId};
+use crate::sim::sink::OpenIv;
+use crate::sim::{parallel_map, tags, ResourceId, TraceCollector, TraceMode};
 use crate::supernode::{DeviceId, Topology};
 use crate::util::stats::Percentiles;
 use std::collections::{BTreeSet, VecDeque};
@@ -227,6 +229,11 @@ pub struct ClusterConfig {
     /// (ISSUE 7). `None` keeps every path bit-identical to the
     /// cache-less cluster.
     pub prefix: Option<PrefixCacheConfig>,
+    /// Trace representation of the run: indexed (full log, every
+    /// structural query) or streaming (accumulators only — city-scale
+    /// fleets in bounded memory). Summary reports are bit-identical
+    /// between the two.
+    pub trace_mode: TraceMode,
 }
 
 impl ClusterConfig {
@@ -255,6 +262,7 @@ impl ClusterConfig {
                 faults: FaultPlan::empty(),
                 retry: None,
                 prefix: None,
+                trace_mode: TraceMode::Indexed,
             },
         }
     }
@@ -315,6 +323,11 @@ impl ClusterConfigBuilder {
 
     pub fn prefix(mut self, prefix: PrefixCacheConfig) -> Self {
         self.cfg.prefix = Some(prefix);
+        self
+    }
+
+    pub fn trace_mode(mut self, trace_mode: TraceMode) -> Self {
+        self.cfg.trace_mode = trace_mode;
         self
     }
 
@@ -530,9 +543,11 @@ struct Instance {
     born: f64,
     /// When it stopped (released or crashed); `None` = held to the end.
     died: Option<f64>,
-    /// Index into the interval trace of the in-flight work, so a crash
-    /// can truncate it at the instant of death.
-    cur_iv: Option<usize>,
+    /// Handle to the open trace interval of the in-flight work, so a
+    /// crash can truncate it at the instant of death. Must be closed
+    /// (or truncated) before being dropped so the streaming sink can
+    /// fold and free the slot.
+    cur_iv: Option<OpenIv>,
 }
 
 impl Instance {
@@ -593,8 +608,7 @@ struct Stats {
     preemptions: u64,
     decoded_tokens: u64,
     prefill_tokens: u64,
-    intervals: Vec<Interval>,
-    tasks: usize,
+    trace: TraceCollector,
     kv_migrations: u64,
     kv_bytes: f64,
     kv_xfer_time: f64,
@@ -627,14 +641,7 @@ struct Stats {
 /// Zero-length tagged marker on instance `k`'s trace track (free
 /// variant of [`ClusterSim::push_marker`] for split-borrow contexts).
 fn push_marker_stats(stats: &mut Stats, k: usize, t: f64, tag: u64) {
-    stats.intervals.push(Interval {
-        task: TaskId(stats.tasks),
-        resource: ResourceId(k),
-        start: t,
-        finish: t,
-        tag,
-    });
-    stats.tasks += 1;
+    stats.trace.push(ResourceId(k), t, t, tag);
 }
 
 /// P2p transfer time between two devices quoted at dispatch time `t`,
@@ -1133,14 +1140,10 @@ impl<'a> ClusterSim<'a> {
             .time
         };
         let k = self.insts.len();
-        self.stats.intervals.push(Interval {
-            task: TaskId(self.stats.tasks),
-            resource: ResourceId(k),
-            start: t,
-            finish: t + xfer,
-            tag: tags::WARMUP,
-        });
-        self.stats.tasks += 1;
+        let warmup_iv = self
+            .stats
+            .trace
+            .open(ResourceId(k), t, t + xfer, tags::WARMUP);
         self.stats.per_instance_completed.push(0);
         self.stats.warmup_time += xfer;
         self.stats.scale_ups += 1;
@@ -1161,7 +1164,7 @@ impl<'a> ClusterSim<'a> {
             state: InstanceState::WarmingUp,
             born: t,
             died: None,
-            cur_iv: Some(self.stats.intervals.len() - 1),
+            cur_iv: Some(warmup_iv),
         });
         true
     }
@@ -1308,21 +1311,14 @@ impl<'a> ClusterSim<'a> {
         let k = alive[sel % alive.len()];
         self.stats.crashes += 1;
         if self.insts[k].work_end.is_some() {
-            if let Some(iv) = self.insts[k].cur_iv {
+            if let Some(iv) = self.insts[k].cur_iv.take() {
                 // the in-flight work never finishes: truncate it at the
                 // instant of death and re-tag it as lost
-                self.stats.intervals[iv].finish = t;
-                self.stats.intervals[iv].tag = tags::CRASH;
+                self.stats.trace.truncate(iv, t, tags::CRASH);
+                self.stats.trace.close(iv);
             }
         } else {
-            self.stats.intervals.push(Interval {
-                task: TaskId(self.stats.tasks),
-                resource: ResourceId(k),
-                start: t,
-                finish: t,
-                tag: tags::CRASH,
-            });
-            self.stats.tasks += 1;
+            self.stats.trace.push(ResourceId(k), t, t, tags::CRASH);
         }
         let was_scaled = self.insts[k].role == self.scaled_role
             && self.insts[k].state != InstanceState::WarmingUp;
@@ -1417,7 +1413,9 @@ impl<'a> ClusterSim<'a> {
     /// serving scaled-role instance.
     fn finish_iteration(&mut self, k: usize, t: f64) {
         self.insts[k].work_end = None;
-        self.insts[k].cur_iv = None;
+        if let Some(iv) = self.insts[k].cur_iv.take() {
+            self.stats.trace.close(iv);
+        }
         let draining = self.insts[k].state == InstanceState::Draining;
         let slots = self.insts[k].active.len();
         for slot in 0..slots {
@@ -1495,7 +1493,9 @@ impl<'a> ClusterSim<'a> {
     /// which case the entry bounces to another serving instance.
     fn finish_ingest(&mut self, k: usize, _t: f64) {
         self.insts[k].work_end = None;
-        self.insts[k].cur_iv = None;
+        if let Some(iv) = self.insts[k].cur_iv.take() {
+            self.stats.trace.close(iv);
+        }
         let job = self.insts[k]
             .ingest
             .pop_front()
@@ -1511,7 +1511,9 @@ impl<'a> ClusterSim<'a> {
     /// entries that were waiting for capacity get routed.
     fn finish_warmup(&mut self, k: usize, _t: f64) {
         self.insts[k].work_end = None;
-        self.insts[k].cur_iv = None;
+        if let Some(iv) = self.insts[k].cur_iv.take() {
+            self.stats.trace.close(iv);
+        }
         self.insts[k].state = InstanceState::Serving;
         self.resolve_limbo();
         self.stats.kick.insert(k);
@@ -1542,15 +1544,7 @@ impl<'a> ClusterSim<'a> {
         }
         if let Some(job) = inst.ingest.front() {
             let finish = t + job.xfer;
-            inst.cur_iv = Some(stats.intervals.len());
-            stats.intervals.push(Interval {
-                task: TaskId(stats.tasks),
-                resource: ResourceId(k),
-                start: t,
-                finish,
-                tag: tags::KV_XFER,
-            });
-            stats.tasks += 1;
+            inst.cur_iv = Some(stats.trace.open(ResourceId(k), t, finish, tags::KV_XFER));
             inst.work_end = Some((finish, Work::Ingest));
             return;
         }
@@ -1654,19 +1648,12 @@ impl<'a> ClusterSim<'a> {
             + cfg
                 .cost
                 .iteration_latency(hbm_tokens, pool_tokens, compute_prefill);
-        inst.cur_iv = Some(stats.intervals.len());
-        stats.intervals.push(Interval {
-            task: TaskId(stats.tasks),
-            resource: ResourceId(k),
-            start: t,
-            finish,
-            tag: if compute_prefill > 0 {
-                tags::PREFILL
-            } else {
-                tags::DECODE
-            },
-        });
-        stats.tasks += 1;
+        let tag = if compute_prefill > 0 {
+            tags::PREFILL
+        } else {
+            tags::DECODE
+        };
+        inst.cur_iv = Some(stats.trace.open(ResourceId(k), t, finish, tag));
         inst.work_end = Some((finish, Work::Iteration));
     }
 
@@ -1815,14 +1802,7 @@ impl<'a> ClusterSim<'a> {
                 if let Some(store) = self.prefix.as_mut() {
                     store.invalidate_instance(k2);
                 }
-                self.stats.intervals.push(Interval {
-                    task: TaskId(self.stats.tasks),
-                    resource: ResourceId(k2),
-                    start: t,
-                    finish: t,
-                    tag: tags::DRAIN,
-                });
-                self.stats.tasks += 1;
+                self.stats.trace.push(ResourceId(k2), t, t, tags::DRAIN);
                 let dev = self.insts[k2].device;
                 if !lessor.give_back(dev) {
                     self.pool_devices.push_back(dev);
@@ -1917,6 +1897,7 @@ impl<'a> ClusterSim<'a> {
             router: Router::new(cfg.route),
             stats: Stats {
                 per_instance_completed: vec![0; n0],
+                trace: TraceCollector::new(cfg.trace_mode),
                 ..Default::default()
             },
             limbo: VecDeque::new(),
@@ -1949,13 +1930,9 @@ impl<'a> ClusterSim<'a> {
     /// conservation invariants.
     pub(crate) fn into_report(self) -> ClusterReport {
         // makespan: latest finish of real work (zero-length markers from
-        // crash/drain events don't extend the served timeline)
-        let mut makespan = 0.0f64;
-        for iv in &self.stats.intervals {
-            if iv.finish > iv.start {
-                makespan = makespan.max(iv.finish);
-            }
-        }
+        // crash/drain events don't extend the served timeline) — read
+        // from the running accumulators, no interval scan
+        let makespan = self.stats.trace.accum().real_makespan();
 
         // Conservation: every live pool fully drained — no page leaked
         // across completions, preemptions, migrations, drains, or crashes
@@ -2016,7 +1993,7 @@ impl<'a> ClusterSim<'a> {
             preemptions,
             decoded_tokens,
             prefill_tokens,
-            intervals,
+            trace,
             kv_migrations,
             kv_bytes,
             kv_xfer_time,
@@ -2051,7 +2028,7 @@ impl<'a> ClusterSim<'a> {
                 prefill_tokens,
                 peak_context_tokens: peak_context,
                 makespan,
-                trace: SimResult::from_intervals(makespan, n, intervals),
+                trace: trace.finish(makespan, n),
             },
             kv_migrations,
             kv_bytes_migrated: kv_bytes,
@@ -2726,6 +2703,7 @@ mod tests {
                 policy: MemoryPolicy::NoOffload,
                 pool_pages: 0,
                 max_preemptions: 4,
+                trace_mode: TraceMode::Indexed,
             },
             &reqs,
         );
@@ -2759,7 +2737,7 @@ mod tests {
         assert!(rep.kv_xfer_time > 0.0);
         // trace: prefill work on instance 0, decode + kv_xfer on 1
         let trace = &rep.serving.trace;
-        assert_eq!(trace.resources, 2);
+        assert_eq!(trace.resources(), 2);
         assert!(trace.tagged_count(tags::KV_XFER) >= 12);
         assert!(trace.tagged_count(tags::PREFILL) > 0);
         assert!(trace.tagged_count(tags::DECODE) > 0);
@@ -2857,7 +2835,7 @@ mod tests {
         assert!(rep.serving.decoded_tokens >= produced);
         // per-resource intervals never overlap (engine serializes
         // iterations and staged ingests)
-        for r in 0..rep.serving.trace.resources {
+        for r in 0..rep.serving.trace.resources() {
             let bucket = rep.serving.trace.per_resource(ResourceId(r));
             assert!(bucket.windows(2).all(|w| w[0].finish <= w[1].start + 1e-12));
         }
@@ -2992,7 +2970,7 @@ mod tests {
         assert_eq!(rep.crashes, 0);
         assert!(rep.warmup_time > 0.0);
         let trace = &rep.serving.trace;
-        assert_eq!(trace.resources, 3);
+        assert_eq!(trace.resources(), 3);
         assert_eq!(trace.tagged_count(tags::WARMUP), 2);
         // warmup occupies the new engines before any of their work
         for iv in trace.intervals_tagged(tags::WARMUP) {
@@ -3238,7 +3216,7 @@ mod tests {
         let rep = simulate_cluster(&cfg, &reqs);
         assert_eq!(rep.completed() as u64 + rep.serving.rejected, 40);
         assert_eq!(rep.scale_ups, 1);
-        assert_eq!(rep.serving.trace.resources, 3);
+        assert_eq!(rep.serving.trace.resources(), 3);
         // the new decode instance received migrations and completed work
         assert!(rep.per_instance_completed[2] > 0, "new decode member served");
         assert_eq!(

@@ -23,7 +23,7 @@ use crate::hyperoffload::kvcache::KvCacheConfig;
 use crate::serving::batcher::{simulate, CostModel, ServingConfig};
 use crate::serving::memory::MemoryPolicy;
 use crate::serving::workload::{ArrivalProcess, LengthDist, WorkloadConfig};
-use crate::sim::{parallel_map, ResourceId, SimResult};
+use crate::sim::{parallel_map, Trace, TraceMode};
 use crate::util::stats::Percentiles;
 
 /// One completed request with its timeline.
@@ -89,8 +89,11 @@ pub struct ServingReport {
     /// the fleet — the serving-side "supported context" axis.
     pub peak_context_tokens: usize,
     pub makespan: f64,
-    /// Per-replica busy intervals as a standard indexed trace.
-    pub trace: SimResult,
+    /// Per-replica busy intervals — CSR-indexed under
+    /// [`TraceMode::Indexed`], accumulator-only (no interval log) under
+    /// [`TraceMode::Streaming`]. Every summary statistic below works in
+    /// both modes.
+    pub trace: Trace,
 }
 
 impl ServingReport {
@@ -161,8 +164,7 @@ impl ServingReport {
 
     /// Mean replica utilization over the makespan.
     pub fn mean_utilization(&self) -> f64 {
-        let rs: Vec<ResourceId> = (0..self.trace.resources).map(ResourceId).collect();
-        self.trace.mean_utilization(&rs)
+        self.trace.mean_utilization_all()
     }
 
     /// The serving summary rows every bench/example emission flows
@@ -314,6 +316,7 @@ pub fn smoke_scenario(rate: f64, offload_frac: f64, fleet: usize) -> Scenario {
             policy,
             pool_pages: 4096,
             max_preemptions: 4,
+            trace_mode: TraceMode::Indexed,
         },
         workload: WorkloadConfig {
             arrival: ArrivalProcess::Poisson { rate },
@@ -326,6 +329,40 @@ pub fn smoke_scenario(rate: f64, offload_frac: f64, fleet: usize) -> Scenario {
             seed: 42,
         },
         horizon: 8.0,
+    }
+}
+
+/// City-scale scenario: a 1024-replica fleet under sustained Poisson
+/// load for 60 virtual seconds — ≥10^5 requests and ≥10^7 engine
+/// events (every batcher iteration is one interval). Infeasible on the
+/// in-memory interval log (10^7 × 40-byte intervals plus the CSR
+/// permutation and prefix arrays), so the preset hard-wires
+/// [`TraceMode::Streaming`]; memory stays bounded by the accumulators
+/// (O(fleet + tags)). Run by `tests/scale_smoke.rs` and the CI
+/// `scale-smoke` job in release mode under a wall-clock timeout.
+pub fn city_scale_scenario() -> Scenario {
+    Scenario {
+        serving: ServingConfig {
+            fleet: 1024,
+            slots: 16,
+            max_seq: 2048,
+            cost: CostModel::new(smoke_device(), 0.2),
+            policy: MemoryPolicy::PoolOffload,
+            pool_pages: 4096,
+            max_preemptions: 4,
+            trace_mode: TraceMode::Streaming,
+        },
+        workload: WorkloadConfig {
+            arrival: ArrivalProcess::Poisson { rate: 2400.0 },
+            prompt: LengthDist::LogNormal {
+                mu: 6.2,
+                sigma: 0.35,
+                cap: 1200,
+            },
+            output: LengthDist::Uniform { lo: 96, hi: 160 },
+            seed: 42,
+        },
+        horizon: 60.0,
     }
 }
 

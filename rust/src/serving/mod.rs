@@ -78,8 +78,9 @@ pub use cluster::{
 };
 pub use memory::{migrate_pages, MemoryPolicy, PagePool, SeqPages, ServingMemory};
 pub use metrics::{
-    max_qps_under_slo, rate_sweep, run_scenario, smoke_device, smoke_scenario, smoke_slo,
-    OperatingPoint, RequestOutcome, Scenario, ServingReport, Slo, SMOKE_RATES,
+    city_scale_scenario, max_qps_under_slo, rate_sweep, run_scenario, smoke_device,
+    smoke_scenario, smoke_slo, OperatingPoint, RequestOutcome, Scenario, ServingReport, Slo,
+    SMOKE_RATES,
 };
 pub use crate::faults::{FaultPlan, RetryPolicy};
 pub use router::{least_outstanding, CandidateLoad, RoutePolicy, Router};

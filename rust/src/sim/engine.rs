@@ -28,6 +28,7 @@
 //! identically as unsigned integers — which gives a total order with
 //! no NaN panic path and cheaper comparisons than `partial_cmp`.
 
+use crate::sim::sink::{Trace, TraceCollector, TraceMode, TraceSink};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -39,14 +40,20 @@ pub struct ResourceId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TaskId(pub usize);
 
+/// Sentinel for "no next node" in the dependent arena.
+const DEP_NONE: u32 = u32::MAX;
+
 #[derive(Debug, Clone)]
 struct Task {
     resource: ResourceId,
     duration: f64,
     /// Number of unfinished dependencies.
     pending_deps: usize,
-    /// Tasks unblocked when this one finishes.
-    dependents: Vec<TaskId>,
+    /// Head of this task's dependent chain in `Engine::dep_arena`
+    /// (`DEP_NONE` when empty). Replaces a per-task `Vec<TaskId>`:
+    /// one shared arena instead of one heap allocation per task, so
+    /// city-scale graphs (10⁷ tasks) build without allocator churn.
+    dep_head: u32,
     /// Earliest time this task may start (release time).
     release: f64,
     /// Filled in when scheduled.
@@ -78,11 +85,27 @@ pub struct Engine {
     tasks: Vec<Task>,
     resources: usize,
     resource_names: Vec<String>,
+    /// Intrusive linked-list arena of dependency edges: node i is
+    /// `(dependent task, next node)`. Iteration order per task is
+    /// reversed insertion order — immaterial, because the ready heap's
+    /// `(time bits, task id)` key is a total order.
+    dep_arena: Vec<(u32, u32)>,
 }
 
 impl Engine {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-sized engine for large graphs: reserves the task table,
+    /// resource table, and dependency arena up front so building a
+    /// city-scale graph performs no growth reallocations.
+    pub fn with_capacity(resources: usize, tasks: usize, dep_edges: usize) -> Self {
+        let mut e = Self::default();
+        e.resource_names.reserve(resources);
+        e.tasks.reserve(tasks);
+        e.dep_arena.reserve(dep_edges);
+        e
     }
 
     pub fn add_resource(&mut self, name: impl Into<String>) -> ResourceId {
@@ -124,11 +147,12 @@ impl Engine {
         // pattern would mis-order as the largest u64 heap key)
         let duration = duration + 0.0;
         let id = TaskId(self.tasks.len());
+        assert!(id.0 < DEP_NONE as usize, "task count exceeds u32 arena ids");
         self.tasks.push(Task {
             resource,
             duration,
             pending_deps: deps.len(),
-            dependents: Vec::new(),
+            dep_head: DEP_NONE,
             release: 0.0,
             start: f64::NAN,
             finish: f64::NAN,
@@ -137,7 +161,14 @@ impl Engine {
         });
         for &d in deps {
             assert!(d.0 < id.0, "dependency on later task (cycle)");
-            self.tasks[d.0].dependents.push(id);
+            assert!(
+                self.dep_arena.len() < DEP_NONE as usize,
+                "dependency edge count exceeds u32 arena ids"
+            );
+            // prepend to d's chain: O(1), no per-task allocation
+            let node = self.dep_arena.len() as u32;
+            self.dep_arena.push((id.0 as u32, self.tasks[d.0].dep_head));
+            self.tasks[d.0].dep_head = node;
         }
         id
     }
@@ -158,6 +189,31 @@ impl Engine {
     /// Per-resource FIFO among ready tasks, ties broken by task id —
     /// fully deterministic.
     pub fn run(&mut self) -> SimResult {
+        let mut intervals: Vec<Interval> = Vec::with_capacity(self.tasks.len());
+        let makespan = self.run_with_sink(&mut intervals);
+        // Intervals complete in per-resource start order (a resource's
+        // free time is monotone), so the CSR index needs only the
+        // counting sort inside `from_intervals` — the global
+        // O(N log N) start sort of the old engine is gone.
+        SimResult::from_intervals(makespan, self.resources, intervals)
+    }
+
+    /// Run to completion under an explicit trace mode, producing a
+    /// [`Trace`]: the indexed log under [`TraceMode::Indexed`] (same
+    /// schedule and index as [`Engine::run`], bit-identically),
+    /// accumulators only under [`TraceMode::Streaming`] — city-scale
+    /// graphs complete in O(resources + tags) trace memory.
+    pub fn run_trace(&mut self, mode: TraceMode) -> Trace {
+        let mut collector = TraceCollector::with_capacity(mode, self.tasks.len());
+        let makespan = self.run_with_sink(&mut collector);
+        let resources = self.resources;
+        collector.finish(makespan, resources)
+    }
+
+    /// The event loop, generic over where intervals go. Returns the
+    /// makespan; each completed interval is emitted to `sink` the
+    /// moment it is scheduled (emission is per-resource start-ordered).
+    pub fn run_with_sink(&mut self, sink: &mut impl TraceSink) -> f64 {
         // Ready events ordered by (time, task id). Times are validated
         // non-negative and non-NaN at insertion (`add_task`,
         // `set_release`), and IEEE-754 orders non-negative doubles the
@@ -166,7 +222,6 @@ impl Engine {
         let mut ready_heap: BinaryHeap<Reverse<(u64, usize)>> =
             BinaryHeap::with_capacity(self.tasks.len());
         let mut resource_free_at = vec![0.0f64; self.resources];
-        let mut intervals = Vec::with_capacity(self.tasks.len());
         let mut completed = 0usize;
 
         for (i, t) in self.tasks.iter().enumerate() {
@@ -190,23 +245,25 @@ impl Engine {
             resource_free_at[resource.0] = finish;
             makespan = makespan.max(finish);
             completed += 1;
-            intervals.push(Interval {
+            sink.record(Interval {
                 task: TaskId(idx),
                 resource,
                 start,
                 finish,
                 tag: self.tasks[idx].tag,
             });
-            // move the dependents list out — it is not needed again
-            // (saves a Vec clone per task on the hot loop, §Perf)
-            let dependents = std::mem::take(&mut self.tasks[idx].dependents);
-            for d in dependents {
-                let dep = &mut self.tasks[d.0];
+            // walk idx's dependent chain in the shared arena — no
+            // per-task Vec to move out or clone on the hot loop (§Perf)
+            let mut node = self.tasks[idx].dep_head;
+            while node != DEP_NONE {
+                let (d, next) = self.dep_arena[node as usize];
+                let dep = &mut self.tasks[d as usize];
                 dep.pending_deps -= 1;
                 if dep.pending_deps == 0 {
                     let at = dep.release.max(finish);
-                    ready_heap.push(Reverse((at.to_bits(), d.0)));
+                    ready_heap.push(Reverse((at.to_bits(), d as usize)));
                 }
+                node = next;
             }
         }
 
@@ -217,12 +274,7 @@ impl Engine {
             completed,
             self.tasks.len()
         );
-
-        // Intervals complete in per-resource start order (a resource's
-        // free time is monotone), so the CSR index needs only the
-        // counting sort inside `from_intervals` — the global
-        // O(N log N) start sort of the old engine is gone.
-        SimResult::from_intervals(makespan, self.resources, intervals)
+        makespan
     }
 
     pub fn task_finish(&self, t: TaskId) -> f64 {
@@ -676,6 +728,47 @@ mod tests {
         let res = e.run();
         assert!(e.task_start(a) < e.task_start(b));
         assert!((res.makespan - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_trace_modes_agree_with_run_bitwise() {
+        let build = || {
+            let mut e = Engine::with_capacity(4, 40, 160);
+            let rs: Vec<_> = (0..4).map(|i| e.add_resource(format!("r{i}"))).collect();
+            let mut prev: Vec<TaskId> = Vec::new();
+            for layer in 0..10 {
+                let mut cur = Vec::new();
+                for (i, &r) in rs.iter().enumerate() {
+                    cur.push(e.add_task(r, (layer + i + 1) as f64 * 0.1, &prev, i as u64));
+                }
+                prev = cur;
+            }
+            e
+        };
+        let sim = build().run();
+        let indexed = build().run_trace(TraceMode::Indexed);
+        let streaming = build().run_trace(TraceMode::Streaming);
+        assert_eq!(sim.makespan.to_bits(), indexed.makespan().to_bits());
+        assert_eq!(sim.makespan.to_bits(), streaming.makespan().to_bits());
+        for r in 0..4 {
+            let r = ResourceId(r);
+            assert_eq!(sim.busy_time(r).to_bits(), indexed.busy_time(r).to_bits());
+            assert_eq!(sim.busy_time(r).to_bits(), streaming.busy_time(r).to_bits());
+            assert_eq!(
+                indexed.utilization(r).to_bits(),
+                streaming.utilization(r).to_bits()
+            );
+        }
+        for tag in 0..4u64 {
+            assert_eq!(sim.tagged_count(tag), streaming.tagged_count(tag));
+            assert_eq!(
+                indexed.tagged_busy(tag).to_bits(),
+                streaming.tagged_busy(tag).to_bits()
+            );
+        }
+        // the indexed trace carries the identical CSR log
+        assert_eq!(indexed.intervals().len(), sim.intervals.len());
+        assert!(streaming.indexed().is_none());
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //! this substrate (see DESIGN.md substitution table).
 
 pub mod engine;
+pub mod sink;
 pub mod stream;
 pub mod sweep;
 pub mod trace;
 
 pub use engine::{Engine, Interval, ResourceId, SimResult, TaskId};
+pub use sink::{StreamAccum, Trace, TraceCollector, TraceMode, TraceSink};
 pub use stream::{Stream, StreamSet};
 pub use sweep::{parallel_map, parallel_map_indexed};
 

@@ -1,0 +1,819 @@
+//! Trace sinks: where event loops deliver completed intervals.
+//!
+//! Every DES emitter in the repo (the [`Engine`](crate::sim::Engine),
+//! the serving batcher, the cluster sim, the co-scheduled trainer)
+//! historically pushed each busy interval into a `Vec` and built a
+//! CSR-indexed [`SimResult`] at the end — O(N) memory in the event
+//! count, which caps scenarios around a few million events. This
+//! module makes the trace representation a *choice*:
+//!
+//! - [`TraceMode::Indexed`] keeps the full interval log and the CSR
+//!   index — every structural query (`per_resource`, `overlap_time`,
+//!   `busy_in_window`, `intervals_tagged`) keeps working. The default,
+//!   and what every test asserts on.
+//! - [`TraceMode::Streaming`] folds each interval into O(R + T)
+//!   incremental accumulators (per-resource busy/count, per-tag
+//!   busy/count plus a bounded reservoir of durations for approximate
+//!   percentiles) the moment it is final, and never stores the log.
+//!   City-scale runs (10⁷+ intervals) complete in constant trace
+//!   memory.
+//!
+//! ## Bit-identity contract
+//!
+//! [`StreamAccum`] is maintained in **both** modes, folded at exactly
+//! the same points of the event loop, so every accumulator-derived
+//! statistic is bit-identical between modes by construction. On top of
+//! that, per-resource busy sums fold in emission order — the same
+//! order as the CSR prefix sums (engine emitters produce per-resource
+//! intervals in start order, and zero-length markers add exactly
+//! `+0.0`) — so `StreamAccum::busy_time` is bit-identical to
+//! [`SimResult::busy_time`] on every emitter in the tree. The
+//! `property_stream` suite asserts both equalities.
+//!
+//! ## Open intervals
+//!
+//! The cluster sim records work intervals when they are *scheduled*
+//! and may amend them later (a crash truncates the in-flight interval
+//! at the instant of death and re-tags it). [`TraceCollector`]
+//! therefore distinguishes final intervals ([`TraceCollector::record`],
+//! folded immediately) from open ones ([`TraceCollector::open`],
+//! folded at [`TraceCollector::close`] after any amendment). Open
+//! intervals are the only buffered state in streaming mode, bounded by
+//! the number of simultaneously busy resources.
+
+use crate::sim::engine::{Interval, ResourceId, SimResult, TaskId};
+use crate::util::rng::SplitMix64;
+
+/// Which trace representation a run keeps. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// Full interval log + CSR index ([`SimResult`]). O(N) memory.
+    #[default]
+    Indexed,
+    /// Incremental accumulators only. O(R + T) memory.
+    Streaming,
+}
+
+impl TraceMode {
+    /// Intervals up to which the indexed log is considered cheap
+    /// (~40 B/interval ⇒ ≈160 MB at the threshold, transiently ×2
+    /// while the CSR index is built).
+    pub const INDEX_CAPACITY: usize = 4 << 20;
+
+    /// Pick a mode from an expected interval count: indexed below
+    /// [`Self::INDEX_CAPACITY`], streaming above.
+    pub fn auto(expected_intervals: usize) -> Self {
+        if expected_intervals <= Self::INDEX_CAPACITY {
+            Self::Indexed
+        } else {
+            Self::Streaming
+        }
+    }
+}
+
+/// Destination for completed intervals. Implemented by
+/// [`TraceCollector`] (both modes) and by `Vec<Interval>` (raw
+/// collection for code that post-processes its own log).
+pub trait TraceSink {
+    fn record(&mut self, iv: Interval);
+}
+
+impl TraceSink for Vec<Interval> {
+    fn record(&mut self, iv: Interval) {
+        self.push(iv);
+    }
+}
+
+/// Capacity of each per-tag duration reservoir. At 512 uniform
+/// samples the rank error of an estimated percentile concentrates
+/// around 1/√512 ≈ 4.4% (see DESIGN.md §Trace modes for the bound).
+pub const RESERVOIR_CAP: usize = 512;
+
+/// Deterministic reservoir sample of a duration stream (Algorithm R
+/// with a SplitMix64 index sequence). Exact while the stream is no
+/// longer than [`RESERVOIR_CAP`]; an unbiased uniform sample beyond.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: SplitMix64,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Self {
+        Self {
+            samples: Vec::new(),
+            seen: 0,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+            return;
+        }
+        // uniform index in [0, seen): keep-probability cap/seen
+        let j = self.rng.next_u64() % self.seen;
+        if (j as usize) < RESERVOIR_CAP {
+            self.samples[j as usize] = x;
+        }
+    }
+
+    /// Observations folded in (not the retained sample size).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Whether the sample is still exact (no eviction has happened).
+    pub fn is_exact(&self) -> bool {
+        self.seen as usize <= RESERVOIR_CAP
+    }
+
+    /// Approximate percentile (p in [0, 100]) over the retained
+    /// sample, linear interpolation between closest ranks — the same
+    /// convention as `util::stats::Percentiles`.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let rank = (p / 100.0) * (xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            xs[lo] * (1.0 - w) + xs[hi] * w
+        }
+    }
+}
+
+/// Per-resource running totals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResourceAccum {
+    /// Σ duration in emission order — bit-identical to the CSR prefix
+    /// total of the same resource.
+    pub busy: f64,
+    pub count: u64,
+}
+
+/// Per-tag running totals plus the duration reservoir.
+#[derive(Debug, Clone)]
+pub struct TagAccum {
+    pub count: u64,
+    pub busy: f64,
+    pub durations: Reservoir,
+}
+
+/// Incremental per-resource/per-tag statistics of an interval stream.
+/// O(R + T) memory; every fold is O(log T) (tag binary search).
+#[derive(Debug, Clone, Default)]
+pub struct StreamAccum {
+    per_resource: Vec<ResourceAccum>,
+    /// Sorted by tag value.
+    tags: Vec<(u64, TagAccum)>,
+    count: u64,
+    max_finish: f64,
+    /// Max finish over intervals with `finish > start` — the makespan
+    /// convention of the cluster sim (zero-length markers don't extend
+    /// the served timeline).
+    max_real_finish: f64,
+}
+
+impl StreamAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one final interval.
+    pub fn fold(&mut self, iv: &Interval) {
+        let r = iv.resource.0;
+        if r >= self.per_resource.len() {
+            self.per_resource.resize(r + 1, ResourceAccum::default());
+        }
+        let d = iv.duration();
+        self.per_resource[r].busy += d;
+        self.per_resource[r].count += 1;
+        let slot = match self.tags.binary_search_by_key(&iv.tag, |e| e.0) {
+            Ok(i) => i,
+            Err(i) => {
+                self.tags.insert(
+                    i,
+                    (
+                        iv.tag,
+                        TagAccum {
+                            count: 0,
+                            busy: 0.0,
+                            durations: Reservoir::new(iv.tag),
+                        },
+                    ),
+                );
+                i
+            }
+        };
+        let t = &mut self.tags[slot].1;
+        t.count += 1;
+        t.busy += d;
+        t.durations.observe(d);
+        self.count += 1;
+        self.max_finish = self.max_finish.max(iv.finish);
+        if iv.finish > iv.start {
+            self.max_real_finish = self.max_real_finish.max(iv.finish);
+        }
+    }
+
+    /// Total intervals folded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Σ duration on `r`, bit-identical to the CSR prefix total.
+    pub fn busy_time(&self, r: ResourceId) -> f64 {
+        self.per_resource.get(r.0).map_or(0.0, |a| a.busy)
+    }
+
+    pub fn resource_count_at(&self, r: ResourceId) -> u64 {
+        self.per_resource.get(r.0).map_or(0, |a| a.count)
+    }
+
+    /// Latest finish over every interval.
+    pub fn max_finish(&self) -> f64 {
+        self.max_finish
+    }
+
+    /// Latest finish over non-zero-length intervals (cluster makespan
+    /// convention — markers excluded).
+    pub fn real_makespan(&self) -> f64 {
+        self.max_real_finish
+    }
+
+    pub fn tagged_count(&self, tag: u64) -> u64 {
+        match self.tags.binary_search_by_key(&tag, |e| e.0) {
+            Ok(i) => self.tags[i].1.count,
+            Err(_) => 0,
+        }
+    }
+
+    /// Σ duration of intervals carrying `tag`, folded in close order.
+    pub fn tagged_busy(&self, tag: u64) -> f64 {
+        match self.tags.binary_search_by_key(&tag, |e| e.0) {
+            Ok(i) => self.tags[i].1.busy,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Approximate percentile of `tag`'s duration distribution (exact
+    /// while ≤ [`RESERVOIR_CAP`] intervals carry the tag).
+    pub fn duration_pct(&self, tag: u64, p: f64) -> f64 {
+        match self.tags.binary_search_by_key(&tag, |e| e.0) {
+            Ok(i) => self.tags[i].1.durations.pct(p),
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Distinct tags folded, ascending.
+    pub fn tag_values(&self) -> impl Iterator<Item = u64> + '_ {
+        self.tags.iter().map(|e| e.0)
+    }
+}
+
+/// Handle to an open (amendable) interval in a [`TraceCollector`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpenIv(usize);
+
+/// Mode-dispatched interval collector: the one emission API every
+/// event loop records through. Indexed mode keeps the log (and builds
+/// the CSR index at [`TraceCollector::finish`]); streaming mode keeps
+/// only open intervals. [`StreamAccum`] is folded identically in both
+/// modes — see the module docs for the bit-identity contract.
+#[derive(Debug, Clone)]
+pub struct TraceCollector {
+    mode: TraceMode,
+    /// The full log (indexed mode only).
+    ivs: Vec<Interval>,
+    /// Open-interval slab (streaming mode only; free-list reuse).
+    open: Vec<Interval>,
+    free: Vec<usize>,
+    accum: StreamAccum,
+    tasks: usize,
+    peak_buffered: usize,
+}
+
+impl Default for TraceCollector {
+    fn default() -> Self {
+        Self::new(TraceMode::Indexed)
+    }
+}
+
+impl TraceCollector {
+    pub fn new(mode: TraceMode) -> Self {
+        Self {
+            mode,
+            ivs: Vec::new(),
+            open: Vec::new(),
+            free: Vec::new(),
+            accum: StreamAccum::new(),
+            tasks: 0,
+            peak_buffered: 0,
+        }
+    }
+
+    pub fn with_capacity(mode: TraceMode, intervals: usize) -> Self {
+        let mut c = Self::new(mode);
+        if mode == TraceMode::Indexed {
+            c.ivs.reserve(intervals);
+        }
+        c
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        self.mode
+    }
+
+    /// Intervals recorded so far (final + open).
+    pub fn tasks(&self) -> usize {
+        self.tasks
+    }
+
+    /// Next task id, consuming it (keeps emitters' `TaskId` numbering
+    /// identical to the old `stats.tasks` counter).
+    fn next_task(&mut self) -> TaskId {
+        let t = TaskId(self.tasks);
+        self.tasks += 1;
+        t
+    }
+
+    /// High-water mark of intervals materialized in memory: the log
+    /// length in indexed mode, the open-slab occupancy in streaming
+    /// mode. The scale bench gates on this staying O(resources) under
+    /// streaming.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// Record a final interval on `resource` (task id assigned
+    /// internally). Folds immediately.
+    pub fn push(&mut self, resource: ResourceId, start: f64, finish: f64, tag: u64) {
+        let task = self.next_task();
+        self.record(Interval {
+            task,
+            resource,
+            start,
+            finish,
+            tag,
+        });
+    }
+
+    /// Record one final interval per resource in `rs`, all sharing one
+    /// task id (the co-scheduled trainer's group-phase convention).
+    pub fn push_group(&mut self, rs: &[ResourceId], start: f64, finish: f64, tag: u64) {
+        let task = self.next_task();
+        for &resource in rs {
+            self.record(Interval {
+                task,
+                resource,
+                start,
+                finish,
+                tag,
+            });
+        }
+    }
+
+    /// Open an amendable interval; fold happens at [`Self::close`].
+    pub fn open(&mut self, resource: ResourceId, start: f64, finish: f64, tag: u64) -> OpenIv {
+        let task = self.next_task();
+        let iv = Interval {
+            task,
+            resource,
+            start,
+            finish,
+            tag,
+        };
+        match self.mode {
+            TraceMode::Indexed => {
+                self.ivs.push(iv);
+                self.peak_buffered = self.peak_buffered.max(self.ivs.len());
+                OpenIv(self.ivs.len() - 1)
+            }
+            TraceMode::Streaming => {
+                let slot = match self.free.pop() {
+                    Some(s) => {
+                        self.open[s] = iv;
+                        s
+                    }
+                    None => {
+                        self.open.push(iv);
+                        self.open.len() - 1
+                    }
+                };
+                self.peak_buffered = self.peak_buffered.max(self.open.len() - self.free.len());
+                OpenIv(slot)
+            }
+        }
+    }
+
+    /// Truncate an open interval to `finish` and re-tag it (the crash
+    /// path: in-flight work that never completes).
+    pub fn truncate(&mut self, h: OpenIv, finish: f64, tag: u64) {
+        let iv = match self.mode {
+            TraceMode::Indexed => &mut self.ivs[h.0],
+            TraceMode::Streaming => &mut self.open[h.0],
+        };
+        iv.finish = finish;
+        iv.tag = tag;
+    }
+
+    /// Finalize an open interval: fold it into the accumulators and
+    /// (streaming) release its slot.
+    pub fn close(&mut self, h: OpenIv) {
+        match self.mode {
+            TraceMode::Indexed => {
+                let iv = self.ivs[h.0];
+                self.accum.fold(&iv);
+            }
+            TraceMode::Streaming => {
+                let iv = self.open[h.0];
+                self.accum.fold(&iv);
+                self.free.push(h.0);
+            }
+        }
+    }
+
+    /// Read-only view of the running accumulators.
+    pub fn accum(&self) -> &StreamAccum {
+        &self.accum
+    }
+
+    /// Finalize into a [`Trace`]. `resources` is the final resource
+    /// count (indexed mode builds the CSR index over it). Every open
+    /// interval must have been closed.
+    pub fn finish(self, makespan: f64, resources: usize) -> Trace {
+        debug_assert_eq!(
+            self.open.len(),
+            self.free.len(),
+            "open intervals left unclosed at finish"
+        );
+        let index = match self.mode {
+            TraceMode::Indexed => Some(SimResult::from_intervals(makespan, resources, self.ivs)),
+            TraceMode::Streaming => None,
+        };
+        Trace {
+            makespan,
+            resources,
+            accum: self.accum,
+            index,
+            peak_buffered: self.peak_buffered,
+        }
+    }
+}
+
+impl TraceSink for TraceCollector {
+    /// Record a pre-built final interval (caller-assigned task id, as
+    /// the engine does). Folds immediately.
+    fn record(&mut self, iv: Interval) {
+        self.tasks = self.tasks.max(iv.task.0 + 1);
+        self.accum.fold(&iv);
+        if self.mode == TraceMode::Indexed {
+            self.ivs.push(iv);
+            self.peak_buffered = self.peak_buffered.max(self.ivs.len());
+        }
+    }
+}
+
+/// A finished trace: streaming accumulators (always), plus the CSR
+/// index in [`TraceMode::Indexed`] runs.
+///
+/// Summary statistics (`busy_time`, `utilization`, `mean_utilization`,
+/// tag totals) answer from the index when present — the exact legacy
+/// code path — and from the accumulators otherwise; the two agree
+/// bit-identically (module docs). Structural queries (`per_resource`,
+/// `intervals_tagged`, `overlap_*`, `busy_in_window`) need the full
+/// log and panic in streaming mode: migrate such consumers to an
+/// accumulator statistic or keep them on indexed runs.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    makespan: f64,
+    resources: usize,
+    accum: StreamAccum,
+    index: Option<SimResult>,
+    peak_buffered: usize,
+}
+
+impl Trace {
+    /// Wrap an existing [`SimResult`] (accumulators are re-folded from
+    /// its CSR log, preserving per-resource emission order).
+    pub fn from_indexed(sim: SimResult) -> Self {
+        let mut accum = StreamAccum::new();
+        let mut tasks = 0usize;
+        for iv in &sim.intervals {
+            accum.fold(iv);
+            tasks = tasks.max(iv.task.0 + 1);
+        }
+        Self {
+            makespan: sim.makespan,
+            resources: sim.resources,
+            peak_buffered: sim.intervals.len(),
+            accum,
+            index: Some(sim),
+        }
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    pub fn resources(&self) -> usize {
+        self.resources
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        if self.index.is_some() {
+            TraceMode::Indexed
+        } else {
+            TraceMode::Streaming
+        }
+    }
+
+    /// Total intervals the run emitted (exact in both modes).
+    pub fn interval_count(&self) -> u64 {
+        self.accum.count()
+    }
+
+    /// High-water mark of intervals materialized in memory during the
+    /// run (log length when indexed; open-slab occupancy when
+    /// streaming).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// The streaming accumulators (maintained in both modes).
+    pub fn accum(&self) -> &StreamAccum {
+        &self.accum
+    }
+
+    /// The CSR index, if this is an indexed trace.
+    pub fn indexed(&self) -> Option<&SimResult> {
+        self.index.as_ref()
+    }
+
+    /// The CSR index, panicking with a migration hint when absent.
+    pub fn expect_indexed(&self) -> &SimResult {
+        self.index.as_ref().expect(
+            "structural trace query needs TraceMode::Indexed — this run used the streaming \
+             sink; query the accumulators instead (busy_time/tagged_count/duration_pct) or \
+             run with TraceMode::Indexed",
+        )
+    }
+
+    /// Total busy time on `r`. O(1) in both modes, bit-identical
+    /// between them.
+    pub fn busy_time(&self, r: ResourceId) -> f64 {
+        match &self.index {
+            Some(sim) => sim.busy_time(r),
+            None => self.accum.busy_time(r),
+        }
+    }
+
+    /// Utilization of `r` over the makespan. O(1).
+    pub fn utilization(&self, r: ResourceId) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.busy_time(r) / self.makespan
+        }
+    }
+
+    /// Mean utilization over a set of resources.
+    pub fn mean_utilization(&self, rs: &[ResourceId]) -> f64 {
+        if rs.is_empty() {
+            return 0.0;
+        }
+        rs.iter().map(|&r| self.utilization(r)).sum::<f64>() / rs.len() as f64
+    }
+
+    /// Mean utilization over every resource of the trace.
+    pub fn mean_utilization_all(&self) -> f64 {
+        if self.resources == 0 {
+            return 0.0;
+        }
+        (0..self.resources)
+            .map(|r| self.utilization(ResourceId(r)))
+            .sum::<f64>()
+            / self.resources as f64
+    }
+
+    /// Idle fraction of `r` within [0, makespan]. O(1).
+    pub fn bubble_ratio(&self, r: ResourceId) -> f64 {
+        1.0 - self.utilization(r)
+    }
+
+    /// Intervals carrying `tag`. O(1) in both modes.
+    pub fn tagged_count(&self, tag: u64) -> usize {
+        match &self.index {
+            Some(sim) => sim.tagged_count(tag),
+            None => self.accum.tagged_count(tag) as usize,
+        }
+    }
+
+    /// Σ duration of intervals carrying `tag` (accumulator statistic,
+    /// identical in both modes).
+    pub fn tagged_busy(&self, tag: u64) -> f64 {
+        self.accum.tagged_busy(tag)
+    }
+
+    /// Approximate percentile of `tag`'s duration distribution (exact
+    /// below [`RESERVOIR_CAP`] observations; ~4% rank error beyond).
+    pub fn duration_pct(&self, tag: u64, p: f64) -> f64 {
+        self.accum.duration_pct(tag, p)
+    }
+
+    /// Distinct tags present, ascending. Works in both modes.
+    pub fn tag_values(&self) -> impl Iterator<Item = u64> + '_ {
+        self.accum.tag_values()
+    }
+
+    // ---- structural queries (indexed mode only) ----------------------
+
+    /// All intervals of one resource, start-sorted. Indexed mode only.
+    pub fn per_resource(&self, r: ResourceId) -> &[Interval] {
+        self.expect_indexed().per_resource(r)
+    }
+
+    /// The full CSR-ordered interval log. Indexed mode only.
+    pub fn intervals(&self) -> &[Interval] {
+        &self.expect_indexed().intervals
+    }
+
+    /// Intervals carrying `tag`. Indexed mode only.
+    pub fn intervals_tagged(&self, tag: u64) -> impl Iterator<Item = &Interval> + '_ {
+        self.expect_indexed().intervals_tagged(tag)
+    }
+
+    /// Busy time of `r` inside `[t0, t1)`. Indexed mode only.
+    pub fn busy_in_window(&self, r: ResourceId, t0: f64, t1: f64) -> f64 {
+        self.expect_indexed().busy_in_window(r, t0, t1)
+    }
+
+    /// Seconds of `a`'s busy time overlapping `b`'s. Indexed mode only.
+    pub fn overlap_time(&self, a: ResourceId, b: ResourceId) -> f64 {
+        self.expect_indexed().overlap_time(a, b)
+    }
+
+    /// Fraction of `a`'s busy time overlapping `b`'s. Indexed only.
+    pub fn overlap_ratio(&self, a: ResourceId, b: ResourceId) -> f64 {
+        self.expect_indexed().overlap_ratio(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(task: usize, r: usize, start: f64, finish: f64, tag: u64) -> Interval {
+        Interval {
+            task: TaskId(task),
+            resource: ResourceId(r),
+            start,
+            finish,
+            tag,
+        }
+    }
+
+    #[test]
+    fn both_modes_fold_identically() {
+        let ivs = [
+            iv(0, 0, 0.0, 1.5, 3),
+            iv(1, 1, 0.5, 2.0, 3),
+            iv(2, 0, 1.5, 1.5, 7), // zero-length marker
+            iv(3, 0, 2.0, 3.25, 4),
+        ];
+        let mut a = TraceCollector::new(TraceMode::Indexed);
+        let mut b = TraceCollector::new(TraceMode::Streaming);
+        for x in &ivs {
+            a.record(*x);
+            b.record(*x);
+        }
+        let ta = a.finish(3.25, 2);
+        let tb = b.finish(3.25, 2);
+        for r in 0..2 {
+            assert_eq!(
+                ta.busy_time(ResourceId(r)).to_bits(),
+                tb.busy_time(ResourceId(r)).to_bits()
+            );
+            assert_eq!(
+                ta.utilization(ResourceId(r)).to_bits(),
+                tb.utilization(ResourceId(r)).to_bits()
+            );
+        }
+        assert_eq!(ta.mean_utilization_all().to_bits(), tb.mean_utilization_all().to_bits());
+        for tag in [3, 4, 7, 99] {
+            assert_eq!(ta.tagged_count(tag), tb.tagged_count(tag));
+            assert_eq!(ta.tagged_busy(tag).to_bits(), tb.tagged_busy(tag).to_bits());
+        }
+        assert_eq!(ta.interval_count(), 4);
+        assert_eq!(tb.interval_count(), 4);
+        assert_eq!(ta.tag_values().collect::<Vec<_>>(), vec![3, 4, 7]);
+        assert_eq!(tb.tag_values().collect::<Vec<_>>(), vec![3, 4, 7]);
+    }
+
+    #[test]
+    fn accum_busy_matches_csr_prefix_bitwise() {
+        // per-resource emission order == CSR bucket order, so the
+        // running sums see the same addition sequence
+        let mut c = TraceCollector::new(TraceMode::Indexed);
+        let mut t = [0.0f64; 3];
+        for i in 0..200usize {
+            let r = i % 3;
+            let d = 0.013 * (i as f64) + 0.1;
+            c.record(iv(i, r, t[r], t[r] + d, (i % 5) as u64));
+            t[r] += d + 0.001;
+        }
+        let tr = c.finish(10.0, 3);
+        let sim = tr.indexed().unwrap();
+        for r in 0..3 {
+            assert_eq!(
+                tr.accum().busy_time(ResourceId(r)).to_bits(),
+                sim.busy_time(ResourceId(r)).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn open_truncate_close_folds_amended_value() {
+        for mode in [TraceMode::Indexed, TraceMode::Streaming] {
+            let mut c = TraceCollector::new(mode);
+            let h = c.open(ResourceId(0), 1.0, 5.0, 2);
+            c.truncate(h, 2.5, 9);
+            c.close(h);
+            c.push(ResourceId(0), 3.0, 3.0, 7); // marker after the crash
+            let tr = c.finish(2.5, 1);
+            assert_eq!(tr.tagged_count(9), 1);
+            assert_eq!(tr.tagged_count(2), 0);
+            assert_eq!(tr.busy_time(ResourceId(0)).to_bits(), 1.5f64.to_bits());
+            assert_eq!(tr.accum().real_makespan().to_bits(), 2.5f64.to_bits());
+            assert_eq!(tr.accum().max_finish().to_bits(), 3.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_buffers_only_open_intervals() {
+        let mut c = TraceCollector::new(TraceMode::Streaming);
+        for i in 0..10_000usize {
+            let h = c.open(ResourceId(0), i as f64, i as f64 + 0.5, 0);
+            c.close(h);
+        }
+        assert_eq!(c.peak_buffered(), 1);
+        let tr = c.finish(10_000.0, 1);
+        assert_eq!(tr.interval_count(), 10_000);
+        assert!(tr.indexed().is_none());
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        let mut res = Reservoir::new(42);
+        for i in 0..100 {
+            res.observe(i as f64);
+        }
+        assert!(res.is_exact());
+        assert_eq!(res.pct(0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(res.pct(100.0).to_bits(), 99.0f64.to_bits());
+        assert_eq!(res.pct(50.0).to_bits(), 49.5f64.to_bits());
+    }
+
+    #[test]
+    fn reservoir_bounded_and_deterministic_beyond_capacity() {
+        let run = || {
+            let mut res = Reservoir::new(7);
+            for i in 0..10_000 {
+                res.observe((i % 97) as f64);
+            }
+            (res.samples.len(), res.pct(50.0).to_bits())
+        };
+        let (len, p50a) = run();
+        let (_, p50b) = run();
+        assert_eq!(len, RESERVOIR_CAP);
+        assert_eq!(p50a, p50b);
+        // the sampled median of a uniform 0..97 stream lands near 48
+        let mid = f64::from_bits(p50a);
+        assert!((20.0..=76.0).contains(&mid), "median {mid} implausible");
+    }
+
+    #[test]
+    fn auto_mode_thresholds() {
+        assert_eq!(TraceMode::auto(1000), TraceMode::Indexed);
+        assert_eq!(TraceMode::auto(TraceMode::INDEX_CAPACITY), TraceMode::Indexed);
+        assert_eq!(TraceMode::auto(TraceMode::INDEX_CAPACITY + 1), TraceMode::Streaming);
+    }
+
+    #[test]
+    #[should_panic(expected = "TraceMode::Indexed")]
+    fn structural_query_panics_in_streaming_mode() {
+        let c = TraceCollector::new(TraceMode::Streaming);
+        let tr = c.finish(0.0, 1);
+        let _ = tr.per_resource(ResourceId(0));
+    }
+}

@@ -4,8 +4,10 @@
 //! Perfetto JSON array format, one track per resource, so scheduling
 //! decisions (masking, bubbles, stragglers) can be inspected visually.
 
-use super::engine::{Engine, SimResult};
+use super::engine::{Engine, Interval, SimResult};
+use super::sink::Trace;
 use crate::util::json::{Json, JsonObj};
+use std::io::Write;
 
 /// Tag names for trace events; index = tag value used in `add_task`.
 pub const TAG_NAMES: [&str; 23] = [
@@ -39,48 +41,96 @@ pub fn tag_name(tag: u64) -> &'static str {
     TAG_NAMES.get(tag as usize).copied().unwrap_or("other")
 }
 
-/// Convert a result to Chrome trace JSON (µs timebase).
-pub fn to_chrome_trace(engine: &Engine, result: &SimResult) -> Json {
-    let mut events = Vec::with_capacity(result.intervals.len());
-    for iv in &result.intervals {
-        let mut e = JsonObj::new();
-        e.insert("name", Json::from(tag_name(iv.tag)));
-        e.insert("cat", Json::from(tag_name(iv.tag)));
-        e.insert("ph", Json::from("X"));
-        e.insert("ts", Json::from(iv.start * 1e6));
-        e.insert("dur", Json::from((iv.finish - iv.start) * 1e6));
-        e.insert("pid", Json::from(0usize));
-        e.insert("tid", Json::from(iv.resource.0));
-        let mut args = JsonObj::new();
-        args.insert("task", Json::from(iv.task.0));
-        args.insert("resource", Json::from(engine.resource_name(iv.resource)));
-        e.insert("args", Json::Obj(args));
-        events.push(Json::Obj(e));
-    }
-    Json::Arr(events)
+/// One interval as a Chrome trace "complete" (`ph: X`) event.
+fn chrome_event(engine: &Engine, iv: &Interval) -> Json {
+    let mut e = JsonObj::new();
+    e.insert("name", Json::from(tag_name(iv.tag)));
+    e.insert("cat", Json::from(tag_name(iv.tag)));
+    e.insert("ph", Json::from("X"));
+    e.insert("ts", Json::from(iv.start * 1e6));
+    e.insert("dur", Json::from((iv.finish - iv.start) * 1e6));
+    e.insert("pid", Json::from(0usize));
+    e.insert("tid", Json::from(iv.resource.0));
+    let mut args = JsonObj::new();
+    args.insert("task", Json::from(iv.task.0));
+    args.insert("resource", Json::from(engine.resource_name(iv.resource)));
+    e.insert("args", Json::Obj(args));
+    Json::Obj(e)
 }
 
-/// Write a trace file; returns the path.
+/// Convert a result to Chrome trace JSON (µs timebase).
+pub fn to_chrome_trace(engine: &Engine, result: &SimResult) -> Json {
+    Json::Arr(
+        result
+            .intervals
+            .iter()
+            .map(|iv| chrome_event(engine, iv))
+            .collect(),
+    )
+}
+
+/// Stream a result to a writer as Chrome trace JSON, one event at a
+/// time — memory stays O(1) in the interval count instead of
+/// materializing the whole event array (and its dumped string) first.
+pub fn stream_chrome_trace(
+    engine: &Engine,
+    result: &SimResult,
+    out: &mut impl Write,
+) -> std::io::Result<()> {
+    out.write_all(b"[")?;
+    for (i, iv) in result.intervals.iter().enumerate() {
+        if i > 0 {
+            out.write_all(b",")?;
+        }
+        out.write_all(chrome_event(engine, iv).dump().as_bytes())?;
+    }
+    out.write_all(b"]")
+}
+
+/// Write a trace file; returns the path. Events are streamed to a
+/// buffered writer, never collected into one in-memory document.
 pub fn write_trace(
     engine: &Engine,
     result: &SimResult,
     path: &str,
 ) -> std::io::Result<String> {
-    let json = to_chrome_trace(engine, result);
-    std::fs::write(path, json.dump())?;
+    let file = std::fs::File::create(path)?;
+    let mut out = std::io::BufWriter::new(file);
+    stream_chrome_trace(engine, result, &mut out)?;
+    out.flush()?;
     Ok(path.to_string())
 }
 
 /// Per-tag rollup of a trace: `(tag name, interval count, busy
-/// seconds)` for each tag present, ascending by tag value. Uses the
-/// result's tag index — no full-trace scan per tag.
+/// seconds)` for each tag present, ascending by tag value. One pass
+/// over the CSR log — O(N + tags log tags), not O(tags × N); each
+/// tag's busy sum folds in CSR order, bit-identical to summing
+/// `intervals_tagged(tag)` per tag.
 pub fn tag_summary(result: &SimResult) -> Vec<(&'static str, usize, f64)> {
-    result
+    let mut rows: Vec<(u64, usize, f64)> = Vec::new();
+    for iv in &result.intervals {
+        let slot = match rows.binary_search_by_key(&iv.tag, |e| e.0) {
+            Ok(i) => i,
+            Err(i) => {
+                rows.insert(i, (iv.tag, 0, 0.0));
+                i
+            }
+        };
+        rows[slot].1 += 1;
+        rows[slot].2 += iv.duration();
+    }
+    rows.into_iter()
+        .map(|(tag, count, busy)| (tag_name(tag), count, busy))
+        .collect()
+}
+
+/// [`tag_summary`] for a [`Trace`] in either mode, answered from the
+/// streaming accumulators alone (per-tag sums fold in emission order;
+/// identical between indexed and streaming runs of one scenario).
+pub fn tag_summary_trace(trace: &Trace) -> Vec<(&'static str, usize, f64)> {
+    trace
         .tag_values()
-        .map(|tag| {
-            let busy: f64 = result.intervals_tagged(tag).map(|iv| iv.duration()).sum();
-            (tag_name(tag), result.tagged_count(tag), busy)
-        })
+        .map(|tag| (tag_name(tag), trace.tagged_count(tag), trace.tagged_busy(tag)))
         .collect()
 }
 
@@ -103,6 +153,47 @@ mod tests {
         assert_eq!(arr[1].get_path("name").unwrap().as_str(), Some("comm"));
         // ts of second event = 1s = 1e6 µs
         assert_eq!(arr[1].get_path("ts").unwrap().as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn streamed_trace_matches_materialized_dump() {
+        let mut e = Engine::new();
+        let r0 = e.add_resource("npu0.cube");
+        let r1 = e.add_resource("npu0.comm");
+        let a = e.add_task(r0, 1.0, &[], 0);
+        e.add_task(r1, 2.0, &[a], 1);
+        e.add_task(r0, 0.5, &[a], 2);
+        let res = e.run();
+        let mut streamed: Vec<u8> = Vec::new();
+        stream_chrome_trace(&e, &res, &mut streamed).unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), to_chrome_trace(&e, &res).dump());
+    }
+
+    #[test]
+    fn single_pass_tag_summary_matches_per_tag_scan_bitwise() {
+        let mut e = Engine::new();
+        let rs: Vec<_> = (0..3).map(|i| e.add_resource(format!("r{i}"))).collect();
+        let mut prev = None;
+        for i in 0..60usize {
+            let deps: Vec<_> = prev.iter().copied().collect();
+            prev = Some(e.add_task(rs[i % 3], 0.1 + i as f64 * 0.017, &deps, (i % 4) as u64));
+        }
+        let res = e.run();
+        let fast = tag_summary(&res);
+        // reference: the old O(tags × intervals) rollup
+        let slow: Vec<(&'static str, usize, f64)> = res
+            .tag_values()
+            .map(|tag| {
+                let busy: f64 = res.intervals_tagged(tag).map(|iv| iv.duration()).sum();
+                (tag_name(tag), res.tagged_count(tag), busy)
+            })
+            .collect();
+        assert_eq!(fast.len(), slow.len());
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.0, s.0);
+            assert_eq!(f.1, s.1);
+            assert_eq!(f.2.to_bits(), s.2.to_bits(), "tag {} busy drifted", f.0);
+        }
     }
 
     #[test]

@@ -104,7 +104,7 @@ fn crossover_sweep_is_deterministic_and_composed() {
     // kv_xfer staged on the decode engines only
     let rep = run_cluster_scenario(&sc);
     let trace = &rep.serving.trace;
-    assert_eq!(trace.resources, 4);
+    assert_eq!(trace.resources(), 4);
     assert!(trace.tagged_count(tags::KV_XFER) > 0);
     assert!(trace.tagged_count(tags::PREFILL) > 0);
     assert!(trace.tagged_count(tags::DECODE) > 0);

@@ -240,6 +240,6 @@ fn trace_resources_map_to_distinct_pool_devices() {
     let distinct: std::collections::BTreeSet<DeviceId> =
         rep.train.trace_devices.iter().copied().collect();
     assert_eq!(distinct.len(), rep.train.trace_devices.len());
-    assert_eq!(rep.train.trace.resources, rep.train.trace_devices.len());
+    assert_eq!(rep.train.trace.resources(), rep.train.trace_devices.len());
     assert!(rep.train.trace_devices.len() <= COSCHED_POOL_DEVICES);
 }

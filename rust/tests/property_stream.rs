@@ -1,0 +1,291 @@
+//! Streaming-sink equivalence properties (ISSUE 8 satellite): the
+//! incremental accumulators of [`TraceMode::Streaming`] must agree
+//! *bitwise* with the CSR-indexed `SimResult` answers of
+//! [`TraceMode::Indexed`] — over randomized interval sets, randomized
+//! engine DAGs, and the checked-in PR 5–7 scenario presets at seed 42.
+//!
+//! The identity is by construction, not by tolerance: both modes fold
+//! every interval into the same `StreamAccum` at the same execution
+//! point (push → immediately, open → at close), so the floating-point
+//! summation order is identical and the comparisons below use
+//! `to_bits()`, never an epsilon.
+
+use hyperparallel::hypermpmd::coschedule::{
+    cosched_scenario, fault_cosched_scenario, run_cosched, CoschedMode,
+};
+use hyperparallel::serving::{
+    agentic_scenario, crossover_scenario, run_agentic_scenario, run_cluster_scenario, run_scenario,
+    smoke_scenario, ClusterFabric, ClusterMode,
+};
+use hyperparallel::sim::{tags, Engine, ResourceId, Trace, TraceCollector, TraceMode};
+use hyperparallel::util::prop::{forall, usize_in, vec_of, Check};
+use hyperparallel::util::rng::Rng;
+
+/// One randomized sink operation: a final push or an open/truncate/
+/// close pair (the cluster sim's two call shapes). Starts are derived
+/// from a per-resource clock (`gap` seconds after the previous
+/// interval on the same resource): the simulators serialize work per
+/// resource, and that invariant is what makes the accumulator's fold
+/// order coincide with the CSR index's start-sorted order — the
+/// domain where the bitwise busy-time identity is guaranteed.
+#[derive(Debug, Clone)]
+struct Op {
+    resource: usize,
+    gap: f64,
+    dur: f64,
+    tag: u64,
+    /// open + (optionally truncated) close instead of a plain push
+    amend: bool,
+    /// when amending: fraction of `dur` kept by the truncate
+    keep: f64,
+}
+
+fn drive(mode: TraceMode, ops: &[Op], resources: usize) -> Trace {
+    let mut tc = TraceCollector::new(mode);
+    let mut clock = vec![0.0f64; resources];
+    let mut makespan = 0.0f64;
+    for op in ops {
+        let start = clock[op.resource] + op.gap;
+        let finish = start + op.dur;
+        let end = if op.amend {
+            let h = tc.open(ResourceId(op.resource), start, finish, op.tag);
+            let kept = start + op.dur * op.keep;
+            tc.truncate(h, kept, op.tag + 1);
+            tc.close(h);
+            kept
+        } else {
+            tc.push(ResourceId(op.resource), start, finish, op.tag);
+            finish
+        };
+        clock[op.resource] = end;
+        makespan = makespan.max(end);
+    }
+    tc.finish(makespan, resources)
+}
+
+#[test]
+fn randomized_interval_sets_agree_bitwise_across_modes() {
+    const RESOURCES: usize = 7;
+    let gen_op = usize_in(0, u32::MAX as usize).map(|seed| {
+        let mut r = Rng::new(seed as u64 ^ 0x9e37);
+        Op {
+            resource: r.range(0, RESOURCES),
+            gap: r.uniform(0.0, 0.5),
+            // zero-length markers (the DRAIN/CRASH shape) must stay
+            // bitwise neutral for busy sums, so generate some
+            dur: if r.below(5) == 0 {
+                0.0
+            } else {
+                r.uniform(1e-6, 2.0)
+            },
+            tag: r.below(6),
+            amend: r.below(3) == 0,
+            keep: r.uniform(0.0, 1.0),
+        }
+    });
+    forall(
+        "stream accum == CSR index, bitwise",
+        200,
+        vec_of(gen_op, 0, 400),
+        |ops| {
+            let a = drive(TraceMode::Indexed, ops, RESOURCES);
+            let b = drive(TraceMode::Streaming, ops, RESOURCES);
+            if b.indexed().is_some() {
+                return Check::Fail("streaming run kept an interval log".into());
+            }
+            if a.interval_count() != b.interval_count() {
+                return Check::Fail(format!(
+                    "count {} != {}",
+                    a.interval_count(),
+                    b.interval_count()
+                ));
+            }
+            for r in 0..RESOURCES {
+                let (x, y) = (a.busy_time(ResourceId(r)), b.busy_time(ResourceId(r)));
+                if x.to_bits() != y.to_bits() {
+                    return Check::Fail(format!("busy_time({r}): {x} != {y}"));
+                }
+            }
+            if a.makespan().to_bits() != b.makespan().to_bits() {
+                return Check::Fail(format!("makespan {} != {}", a.makespan(), b.makespan()));
+            }
+            let tags_a: Vec<u64> = a.accum().tag_values().collect();
+            let tags_b: Vec<u64> = b.accum().tag_values().collect();
+            if tags_a != tags_b {
+                return Check::Fail(format!("tag sets differ: {tags_a:?} vs {tags_b:?}"));
+            }
+            for &t in &tags_a {
+                if a.tagged_count(t) != b.tagged_count(t) {
+                    return Check::Fail(format!("tagged_count({t}) differs"));
+                }
+                if a.tagged_busy(t).to_bits() != b.tagged_busy(t).to_bits() {
+                    return Check::Fail(format!(
+                        "tagged_busy({t}): {} != {}",
+                        a.tagged_busy(t),
+                        b.tagged_busy(t)
+                    ));
+                }
+                for &p in &[0.0, 0.5, 0.99, 1.0] {
+                    let (x, y) = (a.duration_pct(t, p), b.duration_pct(t, p));
+                    if x.to_bits() != y.to_bits() {
+                        return Check::Fail(format!("duration_pct({t},{p}): {x} != {y}"));
+                    }
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn randomized_engine_dags_agree_bitwise_across_modes() {
+    forall(
+        "engine run_trace(Indexed) == run_trace(Streaming)",
+        40,
+        usize_in(0, u32::MAX as usize),
+        |&seed| {
+            let mut r = Rng::new(seed as u64 ^ 0xda7a);
+            let n_res = r.range(1, 9);
+            let n_tasks = r.range(1, 300);
+            let build = |rng_seed: u64| {
+                let mut rng = Rng::new(rng_seed);
+                let mut e = Engine::new();
+                let rs: Vec<_> = (0..n_res).map(|i| e.add_resource(format!("r{i}"))).collect();
+                let mut ids = Vec::with_capacity(n_tasks);
+                for i in 0..n_tasks {
+                    let mut deps = Vec::new();
+                    if i > 0 {
+                        for _ in 0..rng.range(0, 3.min(i)) {
+                            deps.push(ids[rng.range(0, i)]);
+                        }
+                        deps.dedup();
+                    }
+                    let dur = rng.uniform(0.0, 1e-3);
+                    ids.push(e.add_task(rs[i % n_res], dur, &deps, rng.below(4)));
+                }
+                e
+            };
+            let ta = build(seed as u64).run_trace(TraceMode::Indexed);
+            let tb = build(seed as u64).run_trace(TraceMode::Streaming);
+            if ta.makespan().to_bits() != tb.makespan().to_bits() {
+                return Check::Fail("makespan differs".into());
+            }
+            for ri in 0..n_res {
+                let (x, y) = (ta.busy_time(ResourceId(ri)), tb.busy_time(ResourceId(ri)));
+                if x.to_bits() != y.to_bits() {
+                    return Check::Fail(format!("busy_time({ri}): {x} != {y}"));
+                }
+            }
+            for t in 0..4u64 {
+                if ta.tagged_count(t) != tb.tagged_count(t) {
+                    return Check::Fail("tagged_count differs".into());
+                }
+                if ta.tagged_busy(t).to_bits() != tb.tagged_busy(t).to_bits() {
+                    return Check::Fail("tagged_busy differs".into());
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Compare two summary_kv row sets bitwise (same keys, same order,
+/// same bit patterns).
+fn assert_kv_bitwise(label: &str, a: &[(String, f64)], b: &[(String, f64)]) {
+    assert_eq!(a.len(), b.len(), "{label}: row count differs");
+    for ((ka, va), (kb, vb)) in a.iter().zip(b) {
+        assert_eq!(ka, kb, "{label}: key order diverged");
+        assert_eq!(
+            va.to_bits(),
+            vb.to_bits(),
+            "{label}: {ka} = {va} (indexed) vs {vb} (streaming)"
+        );
+    }
+}
+
+#[test]
+fn smoke_scenario_reports_are_bit_identical_across_modes() {
+    let mut sc = smoke_scenario(45.0, 0.2, 2);
+    let a = run_scenario(&sc);
+    sc.serving.trace_mode = TraceMode::Streaming;
+    let b = run_scenario(&sc);
+    assert_kv_bitwise("smoke_scenario", &a.summary_kv(), &b.summary_kv());
+    assert_eq!(a.trace.interval_count(), b.trace.interval_count());
+    assert!(b.trace.indexed().is_none());
+    assert!(a.trace.indexed().is_some());
+}
+
+#[test]
+fn cluster_crossover_reports_are_bit_identical_across_modes() {
+    for mode in [ClusterMode::Colocated, ClusterMode::Disaggregated] {
+        let mut sc = crossover_scenario(ClusterFabric::Supernode, mode);
+        let a = run_cluster_scenario(&sc);
+        sc.cluster.trace_mode = TraceMode::Streaming;
+        let b = run_cluster_scenario(&sc);
+        assert_kv_bitwise(
+            &format!("crossover/{mode:?}"),
+            &a.summary_kv(),
+            &b.summary_kv(),
+        );
+        assert_eq!(
+            a.serving.trace.interval_count(),
+            b.serving.trace.interval_count()
+        );
+        // streaming buffers only the concurrently-open intervals —
+        // bounded by the instance count, not the interval count
+        assert!(b.serving.trace.peak_buffered() <= sc.cluster.instances.len() + 1);
+    }
+}
+
+#[test]
+fn cosched_reports_are_bit_identical_across_modes() {
+    let mut cfg = cosched_scenario(ClusterFabric::Supernode, CoschedMode::Cosched);
+    cfg.horizon = 4.0;
+    cfg.train.train_until = 4.0;
+    let a = run_cosched(&cfg);
+    cfg.cluster.trace_mode = TraceMode::Streaming;
+    let b = run_cosched(&cfg);
+    assert_kv_bitwise(
+        "cosched/serving",
+        &a.serving.summary_kv(),
+        &b.serving.summary_kv(),
+    );
+    assert_kv_bitwise("cosched/train", &a.train.summary_kv(), &b.train.summary_kv());
+    assert_eq!(
+        a.train.trace.makespan().to_bits(),
+        b.train.trace.makespan().to_bits()
+    );
+    assert!(b.train.trace.indexed().is_none());
+}
+
+#[test]
+fn fault_cosched_reports_are_bit_identical_across_modes() {
+    let mut cfg = fault_cosched_scenario();
+    let a = run_cosched(&cfg);
+    cfg.cluster.trace_mode = TraceMode::Streaming;
+    let b = run_cosched(&cfg);
+    assert_kv_bitwise(
+        "faults/serving",
+        &a.serving.summary_kv(),
+        &b.serving.summary_kv(),
+    );
+    assert_kv_bitwise("faults/train", &a.train.summary_kv(), &b.train.summary_kv());
+    // the crash/truncate path folds the truncated span in both modes
+    assert_eq!(
+        a.serving.trace.tagged_count(tags::CRASH),
+        b.serving.trace.tagged_count(tags::CRASH)
+    );
+    assert_eq!(
+        a.train.trace.tagged_busy(tags::DEVICE_FAIL).to_bits(),
+        b.train.trace.tagged_busy(tags::DEVICE_FAIL).to_bits()
+    );
+}
+
+#[test]
+fn agentic_reports_are_bit_identical_across_modes() {
+    let mut sc = agentic_scenario(ClusterFabric::Supernode, true);
+    let a = run_agentic_scenario(&sc);
+    sc.cluster.trace_mode = TraceMode::Streaming;
+    let b = run_agentic_scenario(&sc);
+    assert_kv_bitwise("agentic", &a.summary_kv(), &b.summary_kv());
+}

@@ -1,0 +1,61 @@
+//! Bit-exact report snapshots of the checked-in PR 2–7 scenarios.
+//!
+//! Writes every `summary_kv()` value of the seed scenarios as raw
+//! f64 bit patterns to the path in `HP_REPORT_BITS` (skipped when the
+//! variable is unset). Used to prove refactors of the trace path keep
+//! indexed-sink reports bit-identical: dump before, dump after, diff.
+
+use std::fmt::Write as _;
+
+use hyperparallel::hypermpmd::coschedule::{
+    cosched_scenario, fault_cosched_scenario, run_cosched, CoschedMode,
+};
+use hyperparallel::serving::cluster::{
+    agentic_scenario, autoscale_crash_scenario, autoscale_scenario, crossover_scenario,
+    run_agentic_scenario, run_cluster_scenario, ClusterFabric, ClusterMode,
+};
+use hyperparallel::serving::metrics::{run_scenario, smoke_scenario};
+
+fn dump(out: &mut String, name: &str, kv: &[(String, f64)]) {
+    for (k, v) in kv {
+        writeln!(out, "{name}.{k} = {:#018x}", v.to_bits()).unwrap();
+    }
+}
+
+#[test]
+fn report_bits_snapshot() {
+    let path = match std::env::var("HP_REPORT_BITS") {
+        Ok(p) if !p.is_empty() => p,
+        _ => return, // snapshot dump is opt-in
+    };
+    let mut out = String::new();
+
+    let rep = run_scenario(&smoke_scenario(20.0, 0.2, 4));
+    dump(&mut out, "smoke", &rep.summary_kv());
+
+    for (label, fabric, mode) in [
+        ("xover.sn.disagg", ClusterFabric::Supernode, ClusterMode::Disaggregated),
+        ("xover.legacy.coloc", ClusterFabric::Legacy, ClusterMode::Colocated),
+    ] {
+        let rep = run_cluster_scenario(&crossover_scenario(fabric, mode));
+        dump(&mut out, label, &rep.summary_kv());
+    }
+
+    let rep = run_cluster_scenario(&autoscale_scenario(ClusterFabric::Supernode, true));
+    dump(&mut out, "autoscale.elastic", &rep.summary_kv());
+    let rep = run_cluster_scenario(&autoscale_crash_scenario(ClusterFabric::Supernode));
+    dump(&mut out, "autoscale.crash", &rep.summary_kv());
+
+    let rep = run_cosched(&cosched_scenario(ClusterFabric::Supernode, CoschedMode::Cosched));
+    dump(&mut out, "cosched.serving", &rep.serving.summary_kv());
+    dump(&mut out, "cosched.train", &rep.train.summary_kv());
+
+    let rep = run_cosched(&fault_cosched_scenario());
+    dump(&mut out, "faultco.serving", &rep.serving.summary_kv());
+    dump(&mut out, "faultco.train", &rep.train.summary_kv());
+
+    let rep = run_agentic_scenario(&agentic_scenario(ClusterFabric::Supernode, true));
+    dump(&mut out, "agentic.aware", &rep.summary_kv());
+
+    std::fs::write(&path, out).expect("write report bits");
+}

@@ -1,0 +1,49 @@
+//! City-scale streaming smoke (ISSUE 8 tentpole acceptance): the
+//! checked-in 1024-replica scenario must push ≥10^7 engine events and
+//! ≥10^5 requests through the streaming sink with memory bounded by
+//! the accumulators, not the event count.
+//!
+//! The full run is `#[ignore]`d so `cargo test` stays fast; the CI
+//! `scale-smoke` job runs it in release mode under a hard wall-clock
+//! timeout (`cargo test --release --test scale_smoke -- --include-ignored`).
+
+use hyperparallel::serving::{city_scale_scenario, run_scenario};
+use hyperparallel::sim::TraceMode;
+
+#[test]
+fn city_scale_preset_shape() {
+    let sc = city_scale_scenario();
+    assert!(sc.serving.fleet >= 1000, "city scale means 1000+ devices");
+    assert_eq!(sc.serving.trace_mode, TraceMode::Streaming);
+    assert!(sc.horizon >= 60.0);
+}
+
+#[test]
+#[ignore = "release-mode CI scale-smoke job only: ~10^7 events"]
+fn city_scale_run_streams_ten_million_events_bounded() {
+    let sc = city_scale_scenario();
+    let rep = run_scenario(&sc);
+
+    assert!(
+        rep.outcomes.len() >= 100_000,
+        "city scale means >=1e5 requests, got {}",
+        rep.outcomes.len()
+    );
+    assert!(
+        rep.trace.interval_count() >= 10_000_000,
+        "city scale means >=1e7 engine events, got {}",
+        rep.trace.interval_count()
+    );
+    // the whole point: no interval log materialized, and the open-
+    // interval buffer never grew with the event count
+    assert!(rep.trace.indexed().is_none());
+    assert!(
+        rep.trace.peak_buffered() <= sc.serving.fleet,
+        "peak buffered {} exceeds fleet {}",
+        rep.trace.peak_buffered(),
+        sc.serving.fleet
+    );
+    // sanity: the fleet actually worked the horizon
+    assert!(rep.makespan >= sc.horizon);
+    assert!(rep.completed() >= 90_000, "completed={}", rep.completed());
+}

@@ -13,6 +13,7 @@ use hyperparallel::serving::{
     ArrivalProcess, CostModel, MemoryPolicy, Request, ServingConfig, TenantProfile,
     SMOKE_RATES,
 };
+use hyperparallel::sim::TraceMode;
 
 #[test]
 fn offload_sustains_higher_max_qps_under_p99_slo() {
@@ -136,6 +137,7 @@ fn demotion_path_beats_preemption_thrash() {
         policy,
         pool_pages: 64,
         max_preemptions: 4,
+        trace_mode: TraceMode::Indexed,
     };
     let off = simulate(&mk(0.1, MemoryPolicy::PoolOffload), &reqs);
     let base = simulate(&mk(0.0, MemoryPolicy::NoOffload), &reqs);
@@ -197,13 +199,13 @@ fn bursty_and_diurnal_traffic_flow_end_to_end() {
 fn serving_trace_is_a_first_class_sim_result() {
     let rep = run_scenario(&smoke_scenario(45.0, 0.2, 2));
     let trace = &rep.trace;
-    assert_eq!(trace.resources, 2);
+    assert_eq!(trace.resources(), 2);
     // prefill + decode tags present, and per-replica busy time is
     // bounded by the makespan
     use hyperparallel::sim::{tags, ResourceId};
     assert!(trace.tagged_count(tags::PREFILL) > 0);
     assert!(trace.tagged_count(tags::DECODE) > 0);
-    for r in 0..trace.resources {
+    for r in 0..trace.resources() {
         let busy = trace.busy_time(ResourceId(r));
         assert!(busy > 0.0 && busy <= rep.makespan + 1e-9);
     }

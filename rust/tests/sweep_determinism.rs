@@ -101,5 +101,23 @@ fn cluster_sweeps_bit_identical_across_worker_counts() {
     let (fpar_ops, fpar_steps): (Vec<OperatingPoint>, Vec<u64>) = fpar.into_iter().unzip();
     assert_bit_identical("cosched faulted", &fseq_ops, &fpar_ops);
     assert_eq!(fseq_steps, fpar_steps, "faulted cosched: training step counts");
+    // ...and the ISSUE 8 streaming-sink path: the same crossover sweep
+    // with the incremental accumulators instead of the interval log —
+    // the sink choice must not perturb the sweep's determinism, and
+    // the streaming rows must match the indexed rows bitwise too
+    let mut streaming = crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated);
+    streaming.cluster.trace_mode = hyperparallel::sim::TraceMode::Streaming;
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let sseq = cluster_rate_sweep(&streaming, &CLUSTER_RATES[..4], &cluster_slo());
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let spar = cluster_rate_sweep(&streaming, &CLUSTER_RATES[..4], &cluster_slo());
+    assert_bit_identical("crossover streaming-sink", &sseq, &spar);
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let indexed = cluster_rate_sweep(
+        &crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated),
+        &CLUSTER_RATES[..4],
+        &cluster_slo(),
+    );
+    assert_bit_identical("streaming vs indexed sink", &indexed, &sseq);
     std::env::remove_var("HP_SWEEP_THREADS");
 }

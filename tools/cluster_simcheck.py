@@ -592,6 +592,37 @@ SERVING, WARMING, DRAINING, RELEASED, CRASHED = \
     "serving", "warming", "draining", "released", "crashed"
 
 
+class StreamAccum:
+    """Mirror of rust/src/sim/sink.rs StreamAccum: the incremental
+    per-resource / per-tag fold the streaming trace sink keeps instead
+    of the interval log. Folded over the recorded intervals in
+    emission order and checked against a direct scan in
+    Cluster.finalize() — the Python twin of the Rust streaming-vs-
+    indexed bit-identity property tests."""
+
+    def __init__(self):
+        self.count = 0
+        self.busy = []             # per-instance [busy_seconds, intervals]
+        self.tags = {}             # tag -> [intervals, busy_seconds]
+        self.max_finish = 0.0      # trainer makespan convention
+        self.max_real_finish = 0.0 # cluster makespan convention (f > s only)
+
+    def fold(self, inst, start, finish, tag):
+        while len(self.busy) <= inst:
+            self.busy.append([0.0, 0])
+        d = finish - start
+        self.count += 1
+        b = self.busy[inst]
+        b[0] += d
+        b[1] += 1
+        t = self.tags.setdefault(tag, [0, 0.0])
+        t[0] += 1
+        t[1] += d
+        self.max_finish = max(self.max_finish, finish)
+        if finish > start:
+            self.max_real_finish = max(self.max_real_finish, finish)
+
+
 class Instance:
     def __init__(self, role, slots, pages, device, state=SERVING, born=0.0):
         self.role = role
@@ -1494,6 +1525,36 @@ class Cluster:
         assert not self.retries, "retry entries leaked"
         if self.prefix is not None:
             self.prefix.check()
+        self.stream_accum_check()
+
+    def stream_accum_check(self):
+        """Fold the interval log through the StreamAccum mirror and
+        assert it agrees exactly with a direct scan. Per-instance work
+        is serialized and zero-length markers contribute exactly +0.0,
+        so every comparison is == on floats, no tolerance — the same
+        by-construction identity the Rust property suite asserts
+        between TraceMode::Streaming and TraceMode::Indexed."""
+        acc = StreamAccum()
+        for inst, s, f, tag in self.intervals:
+            acc.fold(inst, s, f, tag)
+        assert acc.count == len(self.intervals)
+        assert acc.max_real_finish == self.makespan, \
+            f"accum makespan {acc.max_real_finish} != scan {self.makespan}"
+        for k in range(len(self.insts)):
+            busy, n = 0.0, 0
+            for i2, s, f, _ in self.intervals:
+                if i2 == k:
+                    busy += f - s
+                    n += 1
+            got = acc.busy[k] if k < len(acc.busy) else [0.0, 0]
+            assert got == [busy, n], \
+                f"stream accum diverged on inst {k}: {got} vs {[busy, n]}"
+        tags = {}
+        for _, s, f, tag in self.intervals:
+            t = tags.setdefault(tag, [0, 0.0])
+            t[0] += 1
+            t[1] += f - s
+        assert acc.tags == tags, "stream accum tag table diverged"
 
     def tokens_recomputed_ratio(self):
         if self.px_prompt_tokens == 0:
