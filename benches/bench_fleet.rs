@@ -1,0 +1,161 @@
+//! Fleet heterogeneity bench (ISSUE 9) — wall-clock throughput of the
+//! fleet-priced two-tenant DES, plus the deterministic virtual-time
+//! heterogeneity metrics CI gates on.
+//!
+//! Two result classes go into `BENCH_fleet.json` (`BENCH_JSON=<path>`):
+//! `"benches"` (wall-clock timings, archived, not gated) and
+//! `"metrics"` — the three checked-in seed-42 heterogeneity scenarios,
+//! each compared heterogeneity-aware vs naive-uniform on identical
+//! hardware:
+//!
+//!   - mixed generations: aware/naive steps-by-deadline gain
+//!     (calibrated 1.33×, gated at 1.15) and the aware/naive reshard
+//!     ratio (the crossing rule only pays the DCN when it's worth it);
+//!   - slow rack: the straggler-aware partitioning gain (calibrated
+//!     1.67×, gated at 1.25);
+//!   - cross-supernode prefill: naive/aware KV-transfer-seconds ratio
+//!     (calibrated 3.9×, gated at 2.0).
+//!
+//! The simulators are deterministic, so the metrics are bit-identical
+//! on every machine; `tools/bench_regression.py` gates them against
+//! the `fleet.*` entries of `BENCH_baseline.json`. The same presets
+//! are asserted (more tightly) by `rust/tests/fleet_scenarios.rs`, so
+//! a green test suite implies a green gate.
+
+use hyperparallel::hypermpmd::coschedule::{
+    cosched_slo, fleet_cosched_scenario, run_cosched, CoschedReport, FleetScenario,
+};
+use hyperparallel::serving::{fleet_prefill_scenario, run_cluster_scenario, AUTOSCALE_MEAN_RATE};
+use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
+use hyperparallel::util::json::{Json, JsonObj};
+use hyperparallel::util::stats::fmt_secs;
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    section("fleet co-scheduled DES wall-clock (64-device mixed fleet)");
+    let iters = if smoke() { 2 } else { 5 };
+    let sc = fleet_cosched_scenario(FleetScenario::MixedGenerations, true);
+    let n_reqs = sc.workload.generate(sc.horizon).len();
+    results.push(run(
+        &format!("fleet cosched sim mixed {n_reqs} reqs + weighted trainer"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_cosched(&sc).train.steps);
+        },
+    ));
+    let psc = fleet_prefill_scenario(true);
+    results.push(run(
+        "fleet prefill sim dual-supernode aware placement",
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_cluster_scenario(&psc).kv_migrations);
+        },
+    ));
+
+    section("heterogeneity gates (virtual time — deterministic, CI-gated)");
+    let slo = cosched_slo();
+    let mut metrics = JsonObj::new();
+    let cell = |which: FleetScenario, aware: bool| -> CoschedReport {
+        run_cosched(&fleet_cosched_scenario(which, aware))
+    };
+    for (name, which) in [
+        ("mixed", FleetScenario::MixedGenerations),
+        ("slow_rack", FleetScenario::SlowRack),
+    ] {
+        let aware = cell(which, true);
+        let naive = cell(which, false);
+        let gain = aware.train.steps_by_deadline as f64 / naive.train.steps_by_deadline as f64;
+        let op = aware.serving.operating_point(AUTOSCALE_MEAN_RATE, &slo);
+        println!(
+            "  {name:<10} aware {:>3} vs naive {:>3} steps ({gain:.2}x)  \
+             serving p99 ttft {:>10}  reshards {:>3} ({:>8} on fabric)  slo {}",
+            aware.train.steps_by_deadline,
+            naive.train.steps_by_deadline,
+            fmt_secs(op.p99_ttft),
+            aware.train.reshards,
+            fmt_secs(aware.train.reshard_seconds),
+            if op.attains_slo { "yes" } else { "no" }
+        );
+        metrics.insert(format!("fleet.{name}.steps_gain"), Json::from(gain));
+        metrics.insert(
+            format!("fleet.{name}.serving_p99_ttft_s"),
+            Json::from(op.p99_ttft),
+        );
+        // archived (not gated): the raw per-cell trajectory
+        metrics.insert(
+            format!("fleet.{name}.steps_by_deadline"),
+            Json::from(aware.train.steps_by_deadline as f64),
+        );
+        metrics.insert(
+            format!("fleet.{name}.naive_steps_by_deadline"),
+            Json::from(naive.train.steps_by_deadline as f64),
+        );
+        metrics.insert(
+            format!("fleet.{name}.peak_devices"),
+            Json::from(aware.train.peak_devices as f64),
+        );
+        if which == FleetScenario::MixedGenerations {
+            // the crossing rule: the aware trainer's inter-supernode
+            // reshard bill must stay at or below the blind harvester's
+            let ratio = aware.train.reshard_seconds / naive.train.reshard_seconds;
+            println!(
+                "  {name:<10} reshard bill aware {:>8} vs naive {:>8} ({ratio:.2}x)",
+                fmt_secs(aware.train.reshard_seconds),
+                fmt_secs(naive.train.reshard_seconds),
+            );
+            metrics.insert(
+                "fleet.mixed.reshard_seconds",
+                Json::from(aware.train.reshard_seconds),
+            );
+            metrics.insert("fleet.mixed.reshard_ratio", Json::from(ratio));
+        }
+    }
+
+    section("cross-supernode prefill (virtual time — deterministic, CI-gated)");
+    let aware = run_cluster_scenario(&fleet_prefill_scenario(true));
+    let naive = run_cluster_scenario(&fleet_prefill_scenario(false));
+    let xfer_ratio = naive.kv_xfer_time / aware.kv_xfer_time;
+    println!(
+        "  per-supernode pipelines: {:>4} reqs, {:>3} migrations, kv xfer {:>8}",
+        aware.completed(),
+        aware.kv_migrations,
+        fmt_secs(aware.kv_xfer_time),
+    );
+    println!(
+        "  role-per-supernode:      {:>4} reqs, {:>3} migrations, kv xfer {:>8}  \
+         ({xfer_ratio:.2}x the aware bill)",
+        naive.completed(),
+        naive.kv_migrations,
+        fmt_secs(naive.kv_xfer_time),
+    );
+    metrics.insert("fleet.prefill.xfer_ratio", Json::from(xfer_ratio));
+    // archived (not gated)
+    metrics.insert(
+        "fleet.prefill.aware_kv_xfer_s",
+        Json::from(aware.kv_xfer_time),
+    );
+    metrics.insert(
+        "fleet.prefill.naive_kv_xfer_s",
+        Json::from(naive.kv_xfer_time),
+    );
+    metrics.insert(
+        "fleet.prefill.kv_migrations",
+        Json::from(aware.kv_migrations as f64),
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = JsonObj::new();
+        root.insert("benches", to_json(&results));
+        root.insert("metrics", Json::Obj(metrics));
+        match std::fs::write(&path, Json::Obj(root).pretty()) {
+            Ok(()) => println!("\nbench json written to {path}"),
+            Err(e) => {
+                eprintln!("\nbench json write to {path} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -13,7 +13,7 @@
 //!   the fabric-level reason MoE EP dispatch becomes cheap (§2.3/§3.3).
 
 use crate::graph::CollectiveKind;
-use crate::supernode::{DeviceId, LinkSpec, Topology};
+use crate::supernode::{DeviceId, Fleet, LinkSpec, Topology};
 
 /// Which algorithm a collective uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,6 +75,67 @@ pub fn cost(
     CollectiveCost {
         algorithm,
         time,
+        bytes_on_wire: wire_bytes(kind, bytes, p),
+    }
+}
+
+/// Cost of a collective over a *fleet-global* group.
+///
+/// A group confined to one pool is priced by [`cost`] on that pool's
+/// topology with translated local ids — bitwise identical to the
+/// pre-fleet path, so the degenerate single-pool fleet changes
+/// nothing. A group spanning pools runs hierarchically:
+///
+/// 1. **Intra phase** — each pool's subgroup runs the collective on
+///    its own fabric; the phase completes when the *slowest pool*
+///    finishes (straggler-aware: group time = slowest member).
+/// 2. **Inter phase** — one leader per participating pool exchanges
+///    the payload over the fleet's inter-supernode link. The DCN tier
+///    is switched, not full-mesh, so only ring and tree are
+///    candidates there.
+///
+/// The reported bottleneck algorithm is the inter phase's choice (the
+/// inter hop dominates any realistic fleet).
+pub fn cost_fleet(
+    fleet: &Fleet,
+    kind: CollectiveKind,
+    bytes: f64,
+    group: &[DeviceId],
+) -> CollectiveCost {
+    let p = group.len().max(1);
+    if p <= 1 {
+        return CollectiveCost {
+            algorithm: Algorithm::FullMeshDirect,
+            time: 0.0,
+            bytes_on_wire: 0.0,
+        };
+    }
+    // split the group into per-pool subgroups (pool-local ids),
+    // preserving order
+    let mut by_pool: Vec<Vec<DeviceId>> = vec![Vec::new(); fleet.pool_count()];
+    for &d in group {
+        let (pool, local) = fleet.locate(d);
+        by_pool[pool].push(local);
+    }
+    let active: Vec<usize> = (0..by_pool.len()).filter(|&i| !by_pool[i].is_empty()).collect();
+    if active.len() == 1 {
+        return cost(&fleet.pools[active[0]].topo, kind, bytes, &by_pool[active[0]]);
+    }
+    let intra = active
+        .iter()
+        .map(|&i| cost(&fleet.pools[i].topo, kind, bytes, &by_pool[i]).time)
+        .fold(0.0f64, f64::max);
+    let leaders = active.len();
+    let ring = ring_time(kind, bytes, leaders, fleet.inter);
+    let tree = tree_time(kind, bytes, leaders, fleet.inter);
+    let (algorithm, inter) = if tree < ring {
+        (Algorithm::Tree, tree)
+    } else {
+        (Algorithm::Ring, ring)
+    };
+    CollectiveCost {
+        algorithm,
+        time: intra + inter,
         bytes_on_wire: wire_bytes(kind, bytes, p),
     }
 }
@@ -198,6 +259,44 @@ mod tests {
         let t_sn = cost(&sn, CollectiveKind::AllToAll, b, &group).time;
         let t_lg = cost(&lg, CollectiveKind::AllToAll, b, &group).time;
         assert!(t_lg / t_sn > 5.0, "speedup={}", t_lg / t_sn);
+    }
+
+    #[test]
+    fn single_pool_fleet_cost_is_bit_identical() {
+        let topo = Topology::matrix384();
+        let fleet = Fleet::single(Topology::matrix384());
+        let group: Vec<DeviceId> = (0..48).map(DeviceId).collect();
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllToAll,
+            CollectiveKind::AllGather,
+            CollectiveKind::Broadcast,
+            CollectiveKind::P2p,
+        ] {
+            let a = cost(&topo, kind, 96e6, &group);
+            let b = cost_fleet(&fleet, kind, 96e6, &group);
+            assert_eq!(a.algorithm, b.algorithm, "{kind:?}");
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{kind:?}");
+            assert_eq!(
+                a.bytes_on_wire.to_bits(),
+                b.bytes_on_wire.to_bits(),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn cross_pool_group_pays_the_inter_tier() {
+        let fleet = Fleet::dual_supernode();
+        let intra: Vec<DeviceId> = (0..16).map(DeviceId).collect();
+        let spanning: Vec<DeviceId> = (0..8).chain(32..40).map(DeviceId).collect();
+        let b = 256e6;
+        let t_intra = cost_fleet(&fleet, CollectiveKind::AllReduce, b, &intra).time;
+        let t_span = cost_fleet(&fleet, CollectiveKind::AllReduce, b, &spanning).time;
+        assert!(
+            t_span / t_intra > 3.0,
+            "inter hop should dominate: intra={t_intra} span={t_span}"
+        );
     }
 
     #[test]

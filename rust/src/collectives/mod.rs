@@ -5,4 +5,4 @@
 pub mod algorithms;
 pub mod real;
 
-pub use algorithms::{cost, wire_bytes, Algorithm, CollectiveCost};
+pub use algorithms::{cost, cost_fleet, wire_bytes, Algorithm, CollectiveCost};

@@ -49,12 +49,41 @@ pub const CHAOS_SEEDS: u64 = 16;
 /// and 0–1 serving-instance crashes in the middle 80%. Returns the
 /// [`FaultPlan`] plus the crash list for `ClusterConfig::failures`.
 pub fn random_plan(seed: u64, horizon: f64) -> (FaultPlan, Vec<InstanceCrash>) {
+    random_plan_with_tiers(
+        seed,
+        horizon,
+        &[LinkTier::Board, LinkTier::Rack, LinkTier::CrossRack],
+    )
+}
+
+/// [`random_plan`] extended with the fleet dimension (ISSUE 9): the
+/// tier draw includes [`LinkTier::InterNode`], so a schedule can
+/// degrade the inter-supernode link itself. Same draw order, one more
+/// face on the tier die — mirrored by `tools/cosched_simcheck.py`'s
+/// `random_fleet_plan`.
+pub fn random_fleet_plan(seed: u64, horizon: f64) -> (FaultPlan, Vec<InstanceCrash>) {
+    random_plan_with_tiers(
+        seed,
+        horizon,
+        &[
+            LinkTier::Board,
+            LinkTier::Rack,
+            LinkTier::CrossRack,
+            LinkTier::InterNode,
+        ],
+    )
+}
+
+fn random_plan_with_tiers(
+    seed: u64,
+    horizon: f64,
+    tiers: &[LinkTier],
+) -> (FaultPlan, Vec<InstanceCrash>) {
     let mut rng = Rng::new(seed);
-    let tiers = [LinkTier::Board, LinkTier::Rack, LinkTier::CrossRack];
     let mut plan = FaultPlan::empty();
     let n_links = 1 + rng.below(3);
     for _ in 0..n_links {
-        let tier = tiers[rng.below(3) as usize];
+        let tier = tiers[rng.below(tiers.len() as u64) as usize];
         let start = rng.next_f64() * 0.6 * horizon;
         let dur = (0.05 + 0.25 * rng.next_f64()) * horizon;
         let bandwidth_scale = 0.02 + 0.18 * rng.next_f64();
@@ -121,6 +150,29 @@ mod tests {
                 assert!(c.instance < 8);
             }
         }
+    }
+
+    #[test]
+    fn fleet_plan_adds_the_inter_node_face() {
+        // deterministic per seed, and across the suite's seed range the
+        // extra die face actually lands: some schedule degrades the
+        // inter-supernode link
+        let (a, ca) = random_fleet_plan(7, CHAOS_HORIZON);
+        let (b, cb) = random_fleet_plan(7, CHAOS_HORIZON);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+        let mut saw_inter = false;
+        for seed in 0..CHAOS_SEEDS {
+            let (plan, crashes) = random_fleet_plan(seed, CHAOS_HORIZON);
+            assert!((1..=3).contains(&plan.link_windows.len()));
+            assert!(plan.device_fails.len() <= 2);
+            assert!(crashes.len() <= 1);
+            saw_inter |= plan
+                .link_windows
+                .iter()
+                .any(|w| w.tier == LinkTier::InterNode);
+        }
+        assert!(saw_inter, "no seed in 0..{CHAOS_SEEDS} drew InterNode");
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! (`tools/cluster_simcheck.py` / `tools/cosched_simcheck.py`), which
 //! keep fault-free runs bit-identical to the pre-fault code paths.
 
-use crate::supernode::{Fabric, LinkSpec, LinkTier, Topology};
+use crate::supernode::{Fabric, Fleet, FleetPool, LinkSpec, LinkTier, Topology};
 
 pub mod chaos;
 
@@ -167,6 +167,24 @@ impl FaultPlan {
             fabric: self.effective_fabric(&base.fabric, t),
             devices: base.devices.clone(),
         }
+    }
+
+    /// The fleet as degraded at time `t`: every pool's fabric gets its
+    /// tier windows applied, and the inter-supernode link its
+    /// [`LinkTier::InterNode`] windows — so a DCN brownout is one more
+    /// scheduled fault, priced through `collectives::cost_fleet` like
+    /// everything else.
+    pub fn effective_fleet(&self, base: &Fleet, t: f64) -> Fleet {
+        Fleet::new(
+            base.pools
+                .iter()
+                .map(|p| FleetPool {
+                    name: p.name.clone(),
+                    topo: self.effective_topology(&p.topo, t),
+                })
+                .collect(),
+            self.effective_spec(base.inter, LinkTier::InterNode, t),
+        )
     }
 }
 

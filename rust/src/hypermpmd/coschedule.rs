@@ -61,7 +61,7 @@ use crate::serving::{
     AUTOSCALE_SLOTS,
 };
 use crate::sim::{parallel_map, tags, ResourceId, Trace, TraceCollector, TraceMode};
-use crate::supernode::{DeviceId, Topology};
+use crate::supernode::{DeviceId, Fleet, Topology};
 use crate::trainer::elastic::ElasticTrainJob;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
@@ -93,6 +93,13 @@ pub struct LeaseBroker {
     /// Devices revoked by a training [`DeviceFail`]: out of the pool
     /// for good (the fault analogue of a serving instance crash).
     pub failed: Vec<DeviceId>,
+    /// Serving leases only devices with id below this bound. On a
+    /// multi-pool [`Fleet`] the serving cluster lives in pool 0 (that
+    /// is where its placement geometry and cost model come from), so
+    /// `run_cosched` sets this to pool 0's size; the default
+    /// `usize::MAX` disables the filter and leaves `lease` exactly
+    /// pop-front.
+    pub serving_limit: usize,
 }
 
 impl LeaseBroker {
@@ -105,6 +112,7 @@ impl LeaseBroker {
             leases_returned: 0,
             demand: false,
             failed: Vec::new(),
+            serving_limit: usize::MAX,
         }
     }
 
@@ -122,6 +130,25 @@ impl LeaseBroker {
         self.free.drain(..n).collect()
     }
 
+    /// Remove and return the free devices whose ids are in `picks`,
+    /// preserving queue order (the fleet-aware harvest path).
+    fn take_matching(&mut self, picks: &BTreeSet<usize>) -> Vec<DeviceId> {
+        if picks.is_empty() {
+            return Vec::new();
+        }
+        let mut taken = Vec::with_capacity(picks.len());
+        let mut kept = VecDeque::with_capacity(self.free.len());
+        for d in std::mem::take(&mut self.free) {
+            if picks.contains(&d.0) {
+                taken.push(d);
+            } else {
+                kept.push_back(d);
+            }
+        }
+        self.free = kept;
+        taken
+    }
+
     fn accept(&mut self, dev: DeviceId) {
         self.free.push_back(dev);
         self.leases_returned += 1;
@@ -130,10 +157,12 @@ impl LeaseBroker {
 
 impl DeviceLessor for LeaseBroker {
     fn lease(&mut self) -> Option<DeviceId> {
-        match self.free.pop_front() {
-            Some(d) => {
+        // first serving-eligible device in queue order; with the
+        // default limit this is exactly pop_front
+        match self.free.iter().position(|d| d.0 < self.serving_limit) {
+            Some(i) => {
                 self.leases_granted += 1;
-                Some(d)
+                Some(self.free.remove(i).expect("position is in range"))
             }
             None => {
                 self.lease_misses += 1;
@@ -165,6 +194,18 @@ pub struct TrainTenantConfig {
     /// Stop starting new steps at this virtual time (the scenario
     /// horizon); the lease is returned at the next boundary.
     pub train_until: f64,
+    /// The fleet this trainer's lease lives in. `None` (the
+    /// homogeneous single-supernode case) prices everything on the
+    /// cluster topology — the pre-fleet behavior, bit for bit. `Some`
+    /// lifts step, sync, restore, and reshard pricing to fleet-global
+    /// device ids (ISSUE 9).
+    pub fleet: Option<Fleet>,
+    /// `true`: compute-proportional step partitioning plus the
+    /// pay-for-itself supernode-crossing rule at harvest time.
+    /// `false`: the naive-uniform baseline the heterogeneity gates
+    /// compare against — plan as if every device were equal, stretch
+    /// on the stragglers, cross blindly. Ignored without a fleet.
+    pub heterogeneity_aware: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -212,6 +253,9 @@ struct TrainerSim<'a> {
     device_step_seconds: f64,
     peak_devices: usize,
     compute_cache: BTreeMap<usize, f64>,
+    /// Fleet-path compute cache, keyed by the group's speed vector
+    /// bits (heterogeneous groups of equal size differ in cost).
+    fleet_compute_cache: BTreeMap<Vec<u64>, f64>,
     trace: TraceCollector,
     /// DeviceId.0 → trace resource index, assigned on first use.
     resource_of: BTreeMap<usize, usize>,
@@ -259,6 +303,7 @@ impl<'a> TrainerSim<'a> {
             device_step_seconds: 0.0,
             peak_devices: 0,
             compute_cache: BTreeMap::new(),
+            fleet_compute_cache: BTreeMap::new(),
             trace: TraceCollector::new(mode),
             resource_of: BTreeMap::new(),
             resources: Vec::new(),
@@ -285,6 +330,48 @@ impl<'a> TrainerSim<'a> {
         }
     }
 
+    /// The fleet a transfer dispatched at `now` is priced over, with
+    /// the same fault gating as [`Self::topo_at`]. `None` when the
+    /// trainer runs on a bare topology.
+    fn fleet_at(&self, now: f64) -> Option<std::borrow::Cow<'a, Fleet>> {
+        let fleet = self.cfg.fleet.as_ref()?;
+        Some(if self.plan.degraded_at(now) {
+            std::borrow::Cow::Owned(self.plan.effective_fleet(fleet, now))
+        } else {
+            std::borrow::Cow::Borrowed(fleet)
+        })
+    }
+
+    /// When co-scheduling on a multi-pool fleet, serving leases stay
+    /// in pool 0 (ids below the returned bound): that pool's topology
+    /// is where the serving cluster's placement geometry lives.
+    fn serving_eligible_limit(&self) -> Option<usize> {
+        let f = self.cfg.fleet.as_ref()?;
+        if f.pool_count() > 1 {
+            Some(f.pools[0].topo.device_count())
+        } else {
+            None
+        }
+    }
+
+    /// Fleet-path compute time for a group's speed vector: weighted
+    /// (compute-proportional) when aware, uniform-planned-then-
+    /// replayed otherwise. Cached by speed bits, the fleet analogue of
+    /// the device-count cache.
+    fn fleet_compute(&mut self, speeds: &[f64]) -> f64 {
+        let bits: Vec<u64> = speeds.iter().map(|s| s.to_bits()).collect();
+        if let Some(&t) = self.fleet_compute_cache.get(&bits) {
+            return t;
+        }
+        let t = if self.cfg.heterogeneity_aware {
+            self.cfg.job.compute_time_weighted(speeds)
+        } else {
+            self.cfg.job.compute_time_naive(speeds)
+        };
+        self.fleet_compute_cache.insert(bits, t);
+        t
+    }
+
     fn next_time(&self) -> Option<f64> {
         match self.phase {
             TrainPhase::Stepping { end, .. } | TrainPhase::Resharding { end, .. } => Some(end),
@@ -307,6 +394,11 @@ impl<'a> TrainerSim<'a> {
     }
 
     fn step_time(&mut self, now: f64) -> f64 {
+        if let Some(fleet) = self.fleet_at(now) {
+            let speeds = fleet.speeds(&self.devices);
+            let compute = self.fleet_compute(&speeds);
+            return compute + self.cfg.job.sync_time_fleet(&fleet, &self.devices);
+        }
         let d = self.devices.len();
         let compute = match self.compute_cache.get(&d) {
             Some(&t) => t,
@@ -372,13 +464,16 @@ impl<'a> TrainerSim<'a> {
     fn begin_restore(&mut self, now: f64) {
         let group = self.devices.clone();
         let src = self.last_shards.max(1);
-        let rt = collectives::cost(
-            &self.topo_at(now),
-            CollectiveKind::AllToAll,
-            self.cfg.job.state_bytes / src as f64,
-            &group,
-        )
-        .time;
+        let per_rank = self.cfg.job.state_bytes / src as f64;
+        let rt = match self.fleet_at(now) {
+            Some(fleet) => {
+                collectives::cost_fleet(&fleet, CollectiveKind::AllToAll, per_rank, &group).time
+            }
+            None => {
+                collectives::cost(&self.topo_at(now), CollectiveKind::AllToAll, per_rank, &group)
+                    .time
+            }
+        };
         self.restores += 1;
         self.restore_seconds += rt;
         self.peak_devices = self.peak_devices.max(self.devices.len());
@@ -397,10 +492,16 @@ impl<'a> TrainerSim<'a> {
     /// counts) apply immediately.
     fn begin_reconfig(&mut self, now: f64, next: Vec<DeviceId>, leaving: Vec<DeviceId>) {
         let old = self.devices.clone();
-        let rt = self
-            .cfg
-            .job
-            .reconfig_time(&self.topo_at(now), &old, &next, self.last_shards);
+        let rt = match self.fleet_at(now) {
+            Some(fleet) => self
+                .cfg
+                .job
+                .reconfig_time_fleet(&fleet, &old, &next, self.last_shards),
+            None => self
+                .cfg
+                .job
+                .reconfig_time(&self.topo_at(now), &old, &next, self.last_shards),
+        };
         let mut union = old;
         for &d in &next {
             if !union.contains(&d) {
@@ -553,6 +654,11 @@ pub fn run_cosched(cfg: &CoschedConfig) -> CoschedReport {
         &cfg.cluster.faults,
         cfg.cluster.trace_mode,
     );
+    if let Some(limit) = trainer.serving_eligible_limit() {
+        // on a multi-pool fleet the serving tenant never leases a
+        // cross-supernode device: its placement geometry is pool 0's
+        broker.serving_limit = limit;
+    }
     let mut fails: Vec<DeviceFail> = cfg.cluster.faults.device_fails.clone();
     fails.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.ordinal.cmp(&b.ordinal)));
     let mut fli = 0usize;
@@ -701,6 +807,15 @@ fn mediate(now: f64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
         }
         if trainer.pending_preempt > 0 && !trainer.devices.is_empty() {
             let k = trainer.pending_preempt.min(trainer.devices.len());
+            if let Some(limit) = trainer.serving_eligible_limit() {
+                // hand serving-eligible (pool-0) devices back first: a
+                // cross-supernode device returned to the broker cannot
+                // serve the lease this preemption is for
+                let (mut reordered, eligible): (Vec<DeviceId>, Vec<DeviceId>) =
+                    trainer.devices.iter().copied().partition(|d| d.0 >= limit);
+                reordered.extend(eligible);
+                trainer.devices = reordered;
+            }
             let split = trainer.devices.len() - k;
             let mut next = trainer.devices.clone();
             let leaving = next.split_off(split);
@@ -723,12 +838,18 @@ fn mediate(now: f64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
         let harvest = broker.harvestable();
         let cooled = now - trainer.last_grow >= trainer.cfg.grow_cooldown;
         if harvest > 0 && cooled && trainer.devices.len() + harvest >= min_run {
-            let taken = broker.take(harvest);
-            let mut next = trainer.devices.clone();
-            next.extend(taken);
-            trainer.last_grow = now;
-            trainer.begin_reconfig(now, next, Vec::new());
-            continue;
+            let taken = harvest_take(now, broker, trainer);
+            if !taken.is_empty() {
+                let mut next = trainer.devices.clone();
+                next.extend(taken);
+                trainer.last_grow = now;
+                trainer.begin_reconfig(now, next, Vec::new());
+                continue;
+            }
+            // every candidate was cross-pool and the inter-node
+            // reshard doesn't pay: leave them free and step on the
+            // current lease (taken is only empty when the held lease
+            // already meets min_devices, so this cannot loop)
         }
         if trainer.devices.len() >= min_run {
             let st = trainer.step_time(now);
@@ -753,6 +874,98 @@ fn mediate(now: f64, broker: &mut LeaseBroker, trainer: &mut TrainerSim<'_>) {
         }
         break; // idle, no devices, nothing to harvest
     }
+}
+
+/// The harvest decision: which free devices the trainer takes at a
+/// step boundary. Homogeneous setups (no fleet, a single pool, or the
+/// naive-uniform baseline) grab everything beyond the reserve — the
+/// pre-fleet behavior, bit for bit. A heterogeneity-aware trainer on
+/// a multi-pool fleet harvests its *home* pool unconditionally but
+/// crosses supernodes only when the step-time win over the remaining
+/// horizon pays for the extra inter-node reshard — or when it cannot
+/// reach `min_devices` without crossing.
+fn harvest_take(
+    now: f64,
+    broker: &mut LeaseBroker,
+    trainer: &mut TrainerSim<'_>,
+) -> Vec<DeviceId> {
+    let harvest = broker.harvestable();
+    let crossing_applies = trainer
+        .cfg
+        .fleet
+        .as_ref()
+        .map_or(false, |f| f.pool_count() > 1 && trainer.cfg.heterogeneity_aware);
+    if !crossing_applies {
+        return broker.take(harvest);
+    }
+    let fleet = trainer.fleet_at(now).expect("fleet checked above");
+    // home pool: where the held lease lives; an empty lease homes on
+    // the pool with the most free devices (lowest index wins ties)
+    let home = if let Some(&d) = trainer.devices.first() {
+        fleet.pool_of(d)
+    } else {
+        let mut counts = vec![0usize; fleet.pool_count()];
+        for d in &broker.free {
+            counts[fleet.pool_of(*d)] += 1;
+        }
+        let mut best = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > counts[best] {
+                best = i;
+            }
+        }
+        best
+    };
+    let mut home_ids: Vec<DeviceId> = Vec::new();
+    let mut cross_ids: Vec<DeviceId> = Vec::new();
+    for &d in &broker.free {
+        if fleet.pool_of(d) == home {
+            if home_ids.len() < harvest {
+                home_ids.push(d);
+            }
+        } else {
+            cross_ids.push(d);
+        }
+    }
+    cross_ids.truncate(harvest - home_ids.len());
+    let min_run = trainer.cfg.min_devices.max(1);
+    let take_cross = if cross_ids.is_empty() {
+        false
+    } else if trainer.devices.len() + home_ids.len() < min_run {
+        true // cannot run at all without crossing
+    } else {
+        let mut group_home = trainer.devices.clone();
+        group_home.extend(&home_ids);
+        let mut group_all = group_home.clone();
+        group_all.extend(&cross_ids);
+        let speeds_home = fleet.speeds(&group_home);
+        let speeds_all = fleet.speeds(&group_all);
+        let st_home = trainer.fleet_compute(&speeds_home)
+            + trainer.cfg.job.sync_time_fleet(&fleet, &group_home);
+        let st_all = trainer.fleet_compute(&speeds_all)
+            + trainer.cfg.job.sync_time_fleet(&fleet, &group_all);
+        let r_home = trainer.cfg.job.reconfig_time_fleet(
+            &fleet,
+            &trainer.devices,
+            &group_home,
+            trainer.last_shards,
+        );
+        let r_all = trainer.cfg.job.reconfig_time_fleet(
+            &fleet,
+            &trainer.devices,
+            &group_all,
+            trainer.last_shards,
+        );
+        let remaining = (trainer.cfg.train_until - now).max(0.0);
+        // per-step win integrated over the horizon vs the extra
+        // inter-node reshard bill
+        remaining * (1.0 - st_all / st_home) > r_all - r_home
+    };
+    let mut picks: BTreeSet<usize> = home_ids.iter().map(|d| d.0).collect();
+    if take_cross {
+        picks.extend(cross_ids.iter().map(|d| d.0));
+    }
+    broker.take_matching(&picks)
 }
 
 /// Revoke one held training device ([`DeviceFail`]; `ordinal` indexes
@@ -905,6 +1118,85 @@ pub fn cosched_scenario(fabric: ClusterFabric, mode: CoschedMode) -> CoschedConf
                 CoschedMode::StaticPartition => 0.0,
             },
             train_until: AUTOSCALE_PERIOD,
+            fleet: None,
+            heterogeneity_aware: true,
+        },
+    }
+}
+
+/// The checked-in heterogeneity scenarios (ISSUE 9) that run through
+/// the co-scheduler. (Scenario 3, cross-supernode disaggregated
+/// prefill, lives in `serving::cluster::fleet_prefill_scenario` — it
+/// is a serving-only setting.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetScenario {
+    /// Scenario 1: a current-generation 910C pool next to a
+    /// previous-generation 910B pool bridged by the DCN — the mixed
+    /// fleet where compute-proportional partitioning and the crossing
+    /// rule both matter.
+    MixedGenerations,
+    /// Scenario 2: one supernode with a thermally derated rack —
+    /// heterogeneity inside a single pool, no crossing decision, the
+    /// gain comes purely from straggler-aware step partitioning.
+    SlowRack,
+}
+
+/// Rack-0 compute/HBM derate of the [`FleetScenario::SlowRack`]
+/// scenario (a thermally throttled rack at half throughput).
+pub const FLEET_SLOW_RACK_DERATE: f64 = 0.5;
+
+/// The checked-in fleet co-scheduling scenario for one (scenario,
+/// awareness) cell: the PR 5 diurnal serving workload (seed 42) with
+/// the trainer's lease priced on a heterogeneous fleet. `aware ==
+/// false` runs the naive-uniform baseline on *identical hardware* —
+/// the pair of runs is what the step-time and goodput gates compare.
+pub fn fleet_cosched_scenario(which: FleetScenario, aware: bool) -> CoschedConfig {
+    let fleet = match which {
+        FleetScenario::MixedGenerations => Fleet::mixed_generations(),
+        FleetScenario::SlowRack => Fleet::slow_rack(FLEET_SLOW_RACK_DERATE),
+    };
+    // serving lives in pool 0; a multi-pool fleet flattens into one
+    // placement topology so instance and broker ids are fleet-global
+    let topology = if fleet.pool_count() > 1 {
+        fleet.flatten()
+    } else {
+        fleet.pools[0].topo.clone()
+    };
+    let places = spread_placement(&fleet.pools[0].topo, COSCHED_POOL_DEVICES);
+    let n_serving = AUTOSCALE_INITIAL_INSTANCES;
+    let instances = places[..n_serving]
+        .iter()
+        .map(|&device| InstanceSpec {
+            device,
+            role: InstanceRole::Colocated,
+            slots: AUTOSCALE_SLOTS,
+        })
+        .collect();
+    // broker pool: the rest of pool 0, then every other pool whole
+    let mut broker_devices: Vec<DeviceId> = places[n_serving..].to_vec();
+    for p in 1..fleet.pool_count() {
+        broker_devices.extend(fleet.pool_devices(p));
+    }
+    let cluster = ClusterConfig::builder(
+        topology,
+        instances,
+        CostModel::new(autoscale_device(), 0.0),
+    )
+    .autoscale(autoscale_preset(vec![]))
+    .build();
+    CoschedConfig {
+        cluster,
+        workload: autoscale_workload(AUTOSCALE_MEAN_RATE),
+        horizon: AUTOSCALE_PERIOD,
+        broker_devices,
+        reserve: COSCHED_RESERVE,
+        train: TrainTenantConfig {
+            job: cosched_train_job(),
+            min_devices: 2,
+            grow_cooldown: 1.0,
+            train_until: AUTOSCALE_PERIOD,
+            fleet: Some(fleet),
+            heterogeneity_aware: aware,
         },
     }
 }
@@ -1209,6 +1501,84 @@ mod tests {
         assert_eq!(
             a.serving.serving.makespan.to_bits(),
             b.serving.serving.makespan.to_bits()
+        );
+    }
+
+    #[test]
+    fn single_pool_uniform_fleet_cosched_is_bit_identical() {
+        // the degenerate fleet must not perturb a single bit of the
+        // pre-fleet co-scheduler, whichever awareness flag is set
+        let base = tiny_cosched(true, 3.0);
+        let a = run_cosched(&base);
+        for aware in [true, false] {
+            let mut cfg = base.clone();
+            cfg.train.fleet = Some(Fleet::single(cfg.cluster.topology.clone()));
+            cfg.train.heterogeneity_aware = aware;
+            let b = run_cosched(&cfg);
+            assert_eq!(a.train.steps, b.train.steps, "aware={aware}");
+            assert_eq!(
+                a.train.reshard_seconds.to_bits(),
+                b.train.reshard_seconds.to_bits()
+            );
+            assert_eq!(
+                a.train.device_step_seconds.to_bits(),
+                b.train.device_step_seconds.to_bits()
+            );
+            assert_eq!(
+                a.serving.serving.makespan.to_bits(),
+                b.serving.serving.makespan.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn aware_fleet_cosched_beats_naive_on_mixed_generations() {
+        let mut aware_cfg = fleet_cosched_scenario(FleetScenario::MixedGenerations, true);
+        let mut naive_cfg = fleet_cosched_scenario(FleetScenario::MixedGenerations, false);
+        for cfg in [&mut aware_cfg, &mut naive_cfg] {
+            cfg.horizon = 8.0;
+            cfg.train.train_until = 8.0;
+        }
+        let a = run_cosched(&aware_cfg);
+        let n = run_cosched(&naive_cfg);
+        assert!(a.train.steps_by_deadline > 0);
+        assert!(
+            a.train.steps_by_deadline >= n.train.steps_by_deadline,
+            "aware {} must be at least naive {}",
+            a.train.steps_by_deadline,
+            n.train.steps_by_deadline
+        );
+        assert_tenant_isolation(&a);
+        assert_tenant_isolation(&n);
+    }
+
+    #[test]
+    fn serving_leases_stay_in_pool_zero_on_a_fleet() {
+        let mut cfg = fleet_cosched_scenario(FleetScenario::MixedGenerations, true);
+        cfg.horizon = 10.0;
+        cfg.train.train_until = 10.0;
+        let rep = run_cosched(&cfg);
+        let limit = cfg.train.fleet.as_ref().unwrap().pools[0].topo.device_count();
+        for d in &rep.serving.instance_devices {
+            assert!(d.0 < limit, "serving touched cross-pool device {}", d.0);
+        }
+        for d in &rep.serving.held_devices_at_end {
+            assert!(d.0 < limit);
+        }
+    }
+
+    #[test]
+    fn slow_rack_fleet_cosched_runs_and_is_deterministic() {
+        let mut cfg = fleet_cosched_scenario(FleetScenario::SlowRack, true);
+        cfg.horizon = 6.0;
+        cfg.train.train_until = 6.0;
+        let a = run_cosched(&cfg);
+        let b = run_cosched(&cfg);
+        assert!(a.train.steps_by_deadline > 0);
+        assert_eq!(a.train.steps, b.train.steps);
+        assert_eq!(
+            a.train.device_step_seconds.to_bits(),
+            b.train.device_step_seconds.to_bits()
         );
     }
 

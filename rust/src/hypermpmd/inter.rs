@@ -128,14 +128,30 @@ pub fn schedule_static(w: &OmniModalWorkload) -> ScheduleReport {
 /// HyperMPMD: the same `n_groups` device groups, but every (microbatch,
 /// module) task may run on *any* group; a greedy list scheduler assigns
 /// ready tasks to the earliest-free group (longest-processing-time
-/// first among ready tasks).
+/// first among ready tasks). Uniform-speed convenience wrapper around
+/// [`schedule_dynamic_weighted`] — `x / 1.0` is bitwise identity, so
+/// this is exactly the pre-fleet scheduler.
 pub fn schedule_dynamic(w: &OmniModalWorkload, n_groups: usize) -> ScheduleReport {
+    schedule_dynamic_weighted(w, &vec![1.0; n_groups])
+}
+
+/// Heterogeneity-aware dynamic scheduling: group `g` runs at relative
+/// speed `speeds[g]` (1.0 = nominal), so a task of nominal length `t`
+/// occupies it for `t / speeds[g]`. The list scheduler keeps the exact
+/// selection rule of [`schedule_dynamic`] — LPT among ready tasks,
+/// earliest-*free* group, first index on ties — which makes the
+/// assignment *compute-proportional*: slow groups accumulate busy time
+/// faster, so the earliest-free rule hands proportionally more tasks
+/// to fast groups. With all speeds at 1.0 the plan is bit-identical to
+/// the uniform scheduler.
+pub fn schedule_dynamic_weighted(w: &OmniModalWorkload, speeds: &[f64]) -> ScheduleReport {
     // deterministic list scheduling (no Engine needed: we control
     // placement, so compute start/finish directly).
     #[derive(Clone, Copy)]
     struct T {
         finish: f64,
     }
+    let n_groups = speeds.len();
     let nm = w.modules.len();
     let total = w.microbatches * nm;
     let mut done: Vec<Option<T>> = vec![None; total];
@@ -179,10 +195,11 @@ pub fn schedule_dynamic(w: &OmniModalWorkload, n_groups: usize) -> ScheduleRepor
             let g = (0..n_groups)
                 .min_by(|&a, &b| group_free[a].partial_cmp(&group_free[b]).unwrap())
                 .unwrap();
+            let duration = m.time_per_microbatch / speeds[g];
             let start = group_free[g].max(dep_ready);
-            let finish = start + m.time_per_microbatch;
+            let finish = start + duration;
             group_free[g] = finish;
-            busy[g] += m.time_per_microbatch;
+            busy[g] += duration;
             done[idx(mb, mi)] = Some(T { finish });
             scheduled += 1;
             intervals.push(crate::sim::Interval {
@@ -193,6 +210,63 @@ pub fn schedule_dynamic(w: &OmniModalWorkload, n_groups: usize) -> ScheduleRepor
                 tag: tags::COMPUTE,
             });
         }
+    }
+    let makespan = group_free.iter().cloned().fold(0.0f64, f64::max);
+    let bubble = 1.0 - busy.iter().sum::<f64>() / (n_groups as f64 * makespan);
+    ScheduleReport {
+        makespan,
+        bubble_ratio: bubble,
+        sim: Trace::from_indexed(SimResult::from_intervals(makespan, n_groups, intervals)),
+    }
+}
+
+/// The naive-uniform baseline for heterogeneous groups: plan the
+/// schedule *as if* every group ran at nominal speed (exactly the
+/// uniform scheduler's assignment), then replay that fixed assignment
+/// at the groups' real speeds. Slow groups stretch their share and the
+/// barrier waits on the straggler — the cost of sizing partitions by
+/// count instead of by roofline. With all speeds at 1.0 this is
+/// bit-identical to [`schedule_dynamic`].
+pub fn schedule_uniform_replay(w: &OmniModalWorkload, speeds: &[f64]) -> ScheduleReport {
+    let n_groups = speeds.len();
+    let planned = schedule_dynamic(w, n_groups);
+    let nm = w.modules.len();
+    // replay the planned placement in planned-start order: a task's
+    // dependencies always precede it there, so their actual finishes
+    // are known when we reach it.
+    let mut order: Vec<crate::sim::Interval> = planned.sim.intervals().to_vec();
+    order.sort_by(|a, b| {
+        a.start
+            .partial_cmp(&b.start)
+            .unwrap()
+            .then(a.task.0.cmp(&b.task.0))
+    });
+    let mut group_free = vec![0.0f64; n_groups];
+    let mut busy = vec![0.0f64; n_groups];
+    let mut finish_of: Vec<f64> = vec![0.0; w.microbatches * nm];
+    let mut intervals = Vec::with_capacity(order.len());
+    for iv in &order {
+        let (mb, mi) = (iv.task.0 / nm, iv.task.0 % nm);
+        let m = &w.modules[mi];
+        let g = iv.resource.0;
+        let dep_ready = m
+            .inputs
+            .iter()
+            .map(|&i| finish_of[mb * nm + i])
+            .fold(0.0f64, f64::max);
+        let duration = m.time_per_microbatch / speeds[g];
+        let start = group_free[g].max(dep_ready);
+        let finish = start + duration;
+        group_free[g] = finish;
+        busy[g] += duration;
+        finish_of[iv.task.0] = finish;
+        intervals.push(crate::sim::Interval {
+            task: iv.task,
+            resource: iv.resource,
+            start,
+            finish,
+            tag: tags::COMPUTE,
+        });
     }
     let makespan = group_free.iter().cloned().fold(0.0f64, f64::max);
     let bubble = 1.0 - busy.iter().sum::<f64>() / (n_groups as f64 * makespan);
@@ -276,6 +350,36 @@ mod tests {
             let dec = find(mb, 4);
             assert!(fusion.finish <= dec.start + 1e-12);
         }
+    }
+
+    #[test]
+    fn uniform_speeds_are_bit_identical_to_unweighted() {
+        let w = OmniModalWorkload::paper_shape(16);
+        let base = schedule_dynamic(&w, 5);
+        let ones = vec![1.0; 5];
+        for r in [
+            schedule_dynamic_weighted(&w, &ones),
+            schedule_uniform_replay(&w, &ones),
+        ] {
+            assert_eq!(base.makespan.to_bits(), r.makespan.to_bits());
+            assert_eq!(base.bubble_ratio.to_bits(), r.bubble_ratio.to_bits());
+            assert_eq!(base.sim.intervals().len(), r.sim.intervals().len());
+        }
+    }
+
+    #[test]
+    fn aware_schedule_beats_uniform_replay_on_stragglers() {
+        let w = OmniModalWorkload::paper_shape(24);
+        // two groups at half speed (the 910B pool next to 910C)
+        let speeds = [1.0, 1.0, 1.0, 0.5, 0.5];
+        let aware = schedule_dynamic_weighted(&w, &speeds);
+        let naive = schedule_uniform_replay(&w, &speeds);
+        assert!(
+            naive.makespan / aware.makespan > 1.10,
+            "aware={} naive={}",
+            aware.makespan,
+            naive.makespan
+        );
     }
 
     #[test]

@@ -25,17 +25,18 @@ pub mod process_group;
 
 pub use coschedule::{
     assert_tenant_isolation, cosched_comparison, cosched_rate_sweep, cosched_scenario,
-    cosched_slo, cosched_train_job, run_cosched, BrokerReport, CoschedComparison, CoschedConfig,
-    CoschedMode, CoschedReport, LeaseBroker, TrainTenantConfig, TrainTenantReport,
-    COSCHED_MICROBATCHES, COSCHED_POOL_DEVICES, COSCHED_RESERVE, COSCHED_STATIC_SERVING,
+    cosched_slo, cosched_train_job, fleet_cosched_scenario, run_cosched, BrokerReport,
+    CoschedComparison, CoschedConfig, CoschedMode, CoschedReport, FleetScenario, LeaseBroker,
+    TrainTenantConfig, TrainTenantReport, COSCHED_MICROBATCHES, COSCHED_POOL_DEVICES,
+    COSCHED_RESERVE, COSCHED_STATIC_SERVING, FLEET_SLOW_RACK_DERATE,
 };
 pub use cross::{
     schedule_gang, schedule_single_controller, seed_sweep, ModelTasks, RlReport, RlTask,
     RlWorkload,
 };
 pub use inter::{
-    microbatch_sweep, schedule_dynamic, schedule_static, OmniModalWorkload, ScheduleReport,
-    SubModule,
+    microbatch_sweep, schedule_dynamic, schedule_dynamic_weighted, schedule_static,
+    schedule_uniform_replay, OmniModalWorkload, ScheduleReport, SubModule,
 };
 pub use intra::{
     baseline_masking, chunk_sweep, comm_ratio_sweep, hypermpmd_masking, schedule_moe_stack,

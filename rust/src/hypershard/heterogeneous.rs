@@ -1,0 +1,166 @@
+//! Compute-proportional partitioning for heterogeneous fleets.
+//!
+//! H2 (PAPERS.md) shows that on mixed-generation fleets the win is in
+//! sizing each device's share of the model by its *roofline*, not by
+//! headcount: a 910B next to a 910C should hold roughly half the
+//! layers/experts, or it stalls every synchronous step. This module
+//! turns a fleet-global device group into integer partition sizes:
+//!
+//! - [`compute_weights`] — per-device throughput shares.
+//! - [`proportional_partition`] — largest-remainder apportionment of
+//!   `total` indivisible items (layers, experts) over those weights,
+//!   with optional per-device capacity caps (HBM).
+//! - [`memory_caps`] — caps derived from each device's HBM spec.
+//!
+//! Everything is deterministic: ties break on the lowest device index,
+//! and a uniform group always yields the same sizes as count-based
+//! splitting (`total / n` each, remainder to the lowest indices) — the
+//! degenerate case changes nothing.
+
+use crate::supernode::{DeviceId, Fleet};
+
+/// Per-device compute weight over a fleet-global group: cube FLOPs,
+/// normalized so the weights sum to 1.
+pub fn compute_weights(fleet: &Fleet, group: &[DeviceId]) -> Vec<f64> {
+    let raw: Vec<f64> = group.iter().map(|&d| fleet.spec(d).cube_flops).collect();
+    let sum: f64 = raw.iter().sum();
+    raw.iter().map(|w| w / sum).collect()
+}
+
+/// Per-device item caps from HBM capacity: how many `bytes_per_item`
+/// items (layers, expert shards) fit in each device's HBM.
+pub fn memory_caps(fleet: &Fleet, group: &[DeviceId], bytes_per_item: f64) -> Vec<usize> {
+    group
+        .iter()
+        .map(|&d| (fleet.spec(d).hbm_bytes as f64 / bytes_per_item).floor() as usize)
+        .collect()
+}
+
+/// Apportion `total` indivisible items over `weights` by the largest-
+/// remainder method, honoring optional per-slot `caps`.
+///
+/// Invariants (property-tested):
+/// - the returned sizes sum to exactly `total`;
+/// - no slot exceeds its cap;
+/// - uniform weights reproduce count-based splitting (`total / n`
+///   plus remainder to the lowest indices).
+///
+/// Panics if the caps cannot hold `total` items at all.
+pub fn proportional_partition(total: usize, weights: &[f64], caps: Option<&[usize]>) -> Vec<usize> {
+    let n = weights.len();
+    assert!(n > 0, "cannot partition over an empty group");
+    if let Some(c) = caps {
+        assert_eq!(c.len(), n, "caps length must match weights");
+        assert!(
+            c.iter().sum::<usize>() >= total,
+            "memory caps cannot hold {total} items"
+        );
+    }
+    let wsum: f64 = weights.iter().sum();
+    let cap_of = |i: usize| caps.map_or(usize::MAX, |c| c[i]);
+
+    // integer floors of the exact quotas, clamped to caps
+    let quotas: Vec<f64> = weights.iter().map(|w| total as f64 * w / wsum).collect();
+    let mut sizes: Vec<usize> = quotas
+        .iter()
+        .enumerate()
+        .map(|(i, q)| (q.floor() as usize).min(cap_of(i)))
+        .collect();
+
+    // hand out the remainder by largest fractional part (ties: lowest
+    // index), skipping slots at their cap; repeat passes until placed
+    // (a pass can stall only when every slot capped out, which the
+    // feasibility assert above excludes).
+    let mut rest = total - sizes.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    while rest > 0 {
+        let mut placed = false;
+        for &i in &order {
+            if rest == 0 {
+                break;
+            }
+            if sizes[i] < cap_of(i) {
+                sizes[i] += 1;
+                rest -= 1;
+                placed = true;
+            }
+        }
+        assert!(placed, "memory caps cannot hold {total} items");
+    }
+    sizes
+}
+
+/// Convenience: compute-proportional sizes for a fleet group with HBM
+/// caps at `bytes_per_item` per item.
+pub fn partition_for_group(
+    fleet: &Fleet,
+    group: &[DeviceId],
+    total: usize,
+    bytes_per_item: f64,
+) -> Vec<usize> {
+    let weights = compute_weights(fleet, group);
+    let caps = memory_caps(fleet, group, bytes_per_item);
+    proportional_partition(total, &weights, Some(&caps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::supernode::Topology;
+
+    #[test]
+    fn uniform_weights_reproduce_count_split() {
+        let sizes = proportional_partition(10, &[1.0, 1.0, 1.0], None);
+        assert_eq!(sizes, vec![4, 3, 3]);
+        let sizes = proportional_partition(12, &[1.0; 4], None);
+        assert_eq!(sizes, vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn proportional_split_follows_weights() {
+        // 2:1 compute → 2:1 layers
+        let sizes = proportional_partition(9, &[2.0, 1.0], None);
+        assert_eq!(sizes, vec![6, 3]);
+    }
+
+    #[test]
+    fn caps_redirect_overflow() {
+        // the fast slot can only hold 4; the rest spills over
+        let sizes = proportional_partition(9, &[2.0, 1.0], Some(&[4, 9]));
+        assert_eq!(sizes.iter().sum::<usize>(), 9);
+        assert_eq!(sizes[0], 4);
+        assert_eq!(sizes[1], 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "memory caps cannot hold")]
+    fn infeasible_caps_panic() {
+        proportional_partition(10, &[1.0, 1.0], Some(&[4, 4]));
+    }
+
+    #[test]
+    fn mixed_generation_group_is_roofline_proportional() {
+        let fleet = Fleet::mixed_generations();
+        let group = fleet.all_devices();
+        let w = compute_weights(&fleet, &group);
+        // 910C weight / 910B weight = 350/176
+        assert!((w[0] / w[32] - 350.0 / 176.0).abs() < 1e-9);
+        let sizes = partition_for_group(&fleet, &group, 256, 512e6);
+        assert_eq!(sizes.iter().sum::<usize>(), 256);
+        assert!(sizes[0] > sizes[32], "910C should hold more: {sizes:?}");
+    }
+
+    #[test]
+    fn single_pool_fleet_partitions_like_counts() {
+        let fleet = Fleet::single(Topology::tiny());
+        let group = fleet.all_devices();
+        let sizes = partition_for_group(&fleet, &group, 17, 1e9);
+        // uniform specs → count-based split, remainder to low indices
+        assert_eq!(sizes, vec![3, 2, 2, 2, 2, 2, 2, 2]);
+    }
+}

@@ -9,12 +9,16 @@
 //! - [`planner`] — topology-aware automatic strategy search (Table 2),
 //!   turning "days of manual tuning" into a cost-model sweep.
 
+pub mod heterogeneous;
 pub mod layout;
 pub mod planner;
 pub mod propagation;
 pub mod resharding;
 pub mod strategies;
 
+pub use heterogeneous::{
+    compute_weights, memory_caps, partition_for_group, proportional_partition,
+};
 pub use layout::{DimSharding, Layout, LayoutError, MapDim, ShardSpec};
 pub use planner::{
     assign_ranks, best_plan, evaluate, explain, plan, try_assign_ranks, try_evaluate,
@@ -24,6 +28,7 @@ pub use propagation::{
     elementwise, matmul, moe_dispatch, reduce, replicated_spec, CommRequirement, Propagated,
 };
 pub use resharding::{
-    actor_weight_sync_time, plan_reshard, reshard_time, ReshardPlan, ReshardStep,
+    actor_weight_sync_time, plan_reshard, reshard_time, reshard_time_fleet, ReshardPlan,
+    ReshardStep,
 };
 pub use strategies::{dimensions_for, template_for, ParallelStrategy};

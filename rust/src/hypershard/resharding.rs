@@ -10,7 +10,7 @@
 use super::layout::{DimSharding, ShardSpec};
 use crate::collectives;
 use crate::graph::CollectiveKind;
-use crate::supernode::{DeviceId, Topology};
+use crate::supernode::{DeviceId, Fleet, Topology};
 
 /// One step of a resharding plan.
 #[derive(Debug, Clone, PartialEq)]
@@ -116,6 +116,26 @@ pub fn reshard_time(
         .sum()
 }
 
+/// [`reshard_time`] over a *fleet-global* group: same plan walk, each
+/// comm step priced by [`collectives::cost_fleet`] — so a group
+/// confined to one pool costs bit-identically to the bare topology
+/// path, and a group spanning supernodes pays the inter-node
+/// all-to-all (the price the `LeaseBroker` weighs before crossing).
+pub fn reshard_time_fleet(
+    plan: &ReshardPlan,
+    fleet: &Fleet,
+    group: &[DeviceId],
+    tensor_bytes: f64,
+    src_shards: usize,
+) -> f64 {
+    let per_rank = tensor_bytes / src_shards.max(1) as f64;
+    plan.steps
+        .iter()
+        .filter(|s| s.kind != CollectiveKind::P2p)
+        .map(|s| collectives::cost_fleet(fleet, s.kind, per_rank, group).time)
+        .sum()
+}
+
 /// The RL actor-learner weight-sync scenario (E9 companion): the
 /// learner trains with one spec; `actors` rollout replicas each need a
 /// full copy — an all-gather to the learner group plus a broadcast to
@@ -207,6 +227,22 @@ mod tests {
         let t2 = reshard_time(&plan, &topo, &group, 2e9, 8);
         assert!(t1 > 0.0);
         assert!(t2 > t1 * 1.5);
+    }
+
+    #[test]
+    fn fleet_reshard_single_pool_bit_identical_and_crossing_costs_more() {
+        let l = layout();
+        let src = l.apply(&[MapDim::Axis("tp"), MapDim::None]).unwrap();
+        let dst = l.apply(&[MapDim::Axis("dp"), MapDim::None]).unwrap();
+        let plan = plan_reshard(&src, &dst);
+        let fleet = crate::supernode::Fleet::dual_supernode();
+        let intra: Vec<_> = (0..16).map(crate::supernode::DeviceId).collect();
+        let t_topo = reshard_time(&plan, &fleet.pools[0].topo, &intra, 96e9, 16);
+        let t_fleet = reshard_time_fleet(&plan, &fleet, &intra, 96e9, 16);
+        assert_eq!(t_topo.to_bits(), t_fleet.to_bits());
+        let spanning: Vec<_> = (0..8).chain(32..40).map(crate::supernode::DeviceId).collect();
+        let t_span = reshard_time_fleet(&plan, &fleet, &spanning, 96e9, 16);
+        assert!(t_span > t_fleet * 2.0, "intra={t_fleet} span={t_span}");
     }
 
     #[test]

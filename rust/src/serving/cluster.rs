@@ -112,7 +112,7 @@ use crate::serving::workload::{
 };
 use crate::sim::sink::OpenIv;
 use crate::sim::{parallel_map, tags, ResourceId, TraceCollector, TraceMode};
-use crate::supernode::{DeviceId, Topology};
+use crate::supernode::{DeviceId, Fleet, Topology};
 use crate::util::stats::Percentiles;
 use std::collections::{BTreeSet, VecDeque};
 
@@ -234,6 +234,19 @@ pub struct ClusterConfig {
     /// fleets in bounded memory). Summary reports are bit-identical
     /// between the two.
     pub trace_mode: TraceMode,
+    /// The fleet this cluster's devices live in (ISSUE 9). `None` —
+    /// and any single-pool fleet — prices every transfer on
+    /// `topology`, bit-identical to the pre-fleet cluster. A
+    /// multi-pool fleet re-prices cross-pool P2p transfers (KV
+    /// migrations, warm-up loads, prefix fetches) on the
+    /// inter-supernode link.
+    pub fleet: Option<Fleet>,
+    /// With a multi-pool fleet: `true` keeps KV handoffs inside the
+    /// source's supernode whenever a same-pool destination is serving
+    /// (crossing the DCN is a last resort); `false` is the naive
+    /// placement baseline that load-balances blindly across pools.
+    /// Ignored without a multi-pool fleet.
+    pub fleet_aware_placement: bool,
 }
 
 impl ClusterConfig {
@@ -263,6 +276,8 @@ impl ClusterConfig {
                 retry: None,
                 prefix: None,
                 trace_mode: TraceMode::Indexed,
+                fleet: None,
+                fleet_aware_placement: true,
             },
         }
     }
@@ -328,6 +343,16 @@ impl ClusterConfigBuilder {
 
     pub fn trace_mode(mut self, trace_mode: TraceMode) -> Self {
         self.cfg.trace_mode = trace_mode;
+        self
+    }
+
+    pub fn fleet(mut self, fleet: Fleet) -> Self {
+        self.cfg.fleet = Some(fleet);
+        self
+    }
+
+    pub fn fleet_aware_placement(mut self, aware: bool) -> Self {
+        self.cfg.fleet_aware_placement = aware;
         self
     }
 
@@ -644,15 +669,39 @@ fn push_marker_stats(stats: &mut Stats, k: usize, t: f64, tag: u64) {
     stats.trace.push(ResourceId(k), t, t, tag);
 }
 
+/// The multi-pool fleet of a config, if any. Single-pool fleets price
+/// on the bare topology (the degenerate case stays bit-identical).
+fn multi_pool_fleet(cfg: &ClusterConfig) -> Option<&Fleet> {
+    cfg.fleet.as_ref().filter(|f| f.pool_count() > 1)
+}
+
+/// Clean (fault-free) P2p price between two devices: fleet-aware —
+/// cross-pool pairs ride the inter-supernode link — and otherwise the
+/// exact pre-fleet `collectives::cost` call.
+fn p2p_clean(cfg: &ClusterConfig, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
+    match multi_pool_fleet(cfg) {
+        Some(fleet) => collectives::cost_fleet(fleet, CollectiveKind::P2p, bytes, &[a, b]).time,
+        None => collectives::cost(&cfg.topology, CollectiveKind::P2p, bytes, &[a, b]).time,
+    }
+}
+
 /// P2p transfer time between two devices quoted at dispatch time `t`,
 /// honoring the fault plan — the same quote-at-dispatch rule KV
 /// migrations use.
 fn p2p_at(cfg: &ClusterConfig, t: f64, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
     if cfg.faults.degraded_at(t) {
-        let eff = cfg.faults.effective_topology(&cfg.topology, t);
-        collectives::cost(&eff, CollectiveKind::P2p, bytes, &[a, b]).time
+        match multi_pool_fleet(cfg) {
+            Some(fleet) => {
+                let eff = cfg.faults.effective_fleet(fleet, t);
+                collectives::cost_fleet(&eff, CollectiveKind::P2p, bytes, &[a, b]).time
+            }
+            None => {
+                let eff = cfg.faults.effective_topology(&cfg.topology, t);
+                collectives::cost(&eff, CollectiveKind::P2p, bytes, &[a, b]).time
+            }
+        }
     } else {
-        collectives::cost(&cfg.topology, CollectiveKind::P2p, bytes, &[a, b]).time
+        p2p_clean(cfg, a, b, bytes)
     }
 }
 
@@ -954,6 +1003,32 @@ impl<'a> ClusterSim<'a> {
             .expect("non-empty candidate set")
     }
 
+    /// Same-supernode preference (ISSUE 9): with a multi-pool fleet
+    /// and aware placement, a KV handoff stays inside the source's
+    /// pool whenever any same-pool candidate is serving — crossing
+    /// the DCN is a last resort, not a load-balancing option. The
+    /// naive baseline (and every fleet-less cluster) passes the
+    /// candidate set through untouched.
+    fn pool_filter(&self, src_dev: DeviceId, cands: Vec<usize>) -> Vec<usize> {
+        let Some(fleet) = multi_pool_fleet(self.cfg) else {
+            return cands;
+        };
+        if !self.cfg.fleet_aware_placement {
+            return cands;
+        }
+        let home = fleet.pool_of(src_dev);
+        let same: Vec<usize> = cands
+            .iter()
+            .copied()
+            .filter(|&c| fleet.pool_of(self.insts[c].device) == home)
+            .collect();
+        if same.is_empty() {
+            cands
+        } else {
+            same
+        }
+    }
+
     /// Straggler-aware hedging: when some destination's path from the
     /// source is degraded beyond `retry.hedge`× its clean transfer
     /// time and a clean destination exists, drop the slow ones.
@@ -964,12 +1039,11 @@ impl<'a> ClusterSim<'a> {
         if rp.hedge <= 0.0 || !self.cfg.faults.degraded_at(self.now) {
             return cands;
         }
-        let eff_topo = self.cfg.faults.effective_topology(&self.cfg.topology, self.now);
         let mut clean = Vec::new();
         for &c in &cands {
-            let pair = [src_dev, self.insts[c].device];
-            let base = collectives::cost(&self.cfg.topology, CollectiveKind::P2p, bytes, &pair).time;
-            let eff = collectives::cost(&eff_topo, CollectiveKind::P2p, bytes, &pair).time;
+            let dst_dev = self.insts[c].device;
+            let base = p2p_clean(self.cfg, src_dev, dst_dev, bytes);
+            let eff = p2p_at(self.cfg, self.now, src_dev, dst_dev, bytes);
             if eff <= rp.hedge * base {
                 clean.push(c);
             }
@@ -1014,16 +1088,12 @@ impl<'a> ClusterSim<'a> {
         let src_dev = self.insts[src].device;
         let ctx = entry.prompt_len + entry.produced;
         let bytes = ctx as f64 * self.cfg.cost.kv.kv_bytes_per_token as f64;
+        let cands = self.pool_filter(src_dev, cands);
         let cands = self.hedge_filter(src_dev, cands, bytes);
         let dst = self.pick_dst(&cands);
-        let pair = [src_dev, self.insts[dst].device];
-        let base = collectives::cost(&self.cfg.topology, CollectiveKind::P2p, bytes, &pair).time;
-        let xfer = if self.cfg.faults.degraded_at(self.now) {
-            let eff = self.cfg.faults.effective_topology(&self.cfg.topology, self.now);
-            collectives::cost(&eff, CollectiveKind::P2p, bytes, &pair).time
-        } else {
-            base
-        };
+        let dst_dev = self.insts[dst].device;
+        let base = p2p_clean(self.cfg, src_dev, dst_dev, bytes);
+        let xfer = p2p_at(self.cfg, self.now, src_dev, dst_dev, bytes);
         if let Some(rp) = self.cfg.retry {
             if xfer > rp.timeout && attempts < rp.max_attempts {
                 self.stats.retries_scheduled += 1;
@@ -1119,26 +1189,10 @@ impl<'a> ClusterSim<'a> {
             .find(|i| i.state == InstanceState::Serving)
             .map(|i| i.device)
             .unwrap_or(dev);
-        let xfer = if cfg.faults.degraded_at(t) {
-            // the model load pays the degraded fabric: a scale-up
-            // inside a fault window warms up slower for real
-            let eff = cfg.faults.effective_topology(&cfg.topology, t);
-            collectives::cost(
-                &eff,
-                CollectiveKind::P2p,
-                cfg.cost.kv.weight_bytes as f64,
-                &[src_dev, dev],
-            )
-            .time
-        } else {
-            collectives::cost(
-                &cfg.topology,
-                CollectiveKind::P2p,
-                cfg.cost.kv.weight_bytes as f64,
-                &[src_dev, dev],
-            )
-            .time
-        };
+        // the model load pays the (possibly degraded) fabric — and on
+        // a multi-pool fleet, the inter-supernode link if the weight
+        // source sits in another pool
+        let xfer = p2p_at(cfg, t, src_dev, dev, cfg.cost.kv.weight_bytes as f64);
         let k = self.insts.len();
         let warmup_iv = self
             .stats
@@ -2303,6 +2357,64 @@ pub fn crossover_comparison() -> CrossoverSummary {
     }
 }
 
+// ---- the checked-in fleet disaggregated-prefill preset (ISSUE 9) ------
+
+/// Cross-supernode disaggregated prefill on [`Fleet::dual_supernode`]:
+/// eight instances split over two 32-device supernodes joined by a
+/// DCN-class inter-node link.
+///
+/// `aware = true` gives each supernode a complete prefill→decode
+/// pipeline (2 Prefill + 2 Decode per pool), so the fleet-aware
+/// migration policy keeps every ~260 MB KV handoff on the local UB
+/// fabric. `aware = false` is the naive role-per-supernode split —
+/// all prefill on sn0, all decode on sn1 — which forces every handoff
+/// across the inter-supernode link (and disables the same-pool
+/// destination preference). Same device budget, same workload; only
+/// the placement and routing policy differ.
+pub fn fleet_prefill_scenario(aware: bool) -> ClusterScenario {
+    let fleet = Fleet::dual_supernode();
+    let topology = fleet.flatten();
+    let p0 = spread_placement(&fleet.pools[0].topo, 4);
+    let p1: Vec<DeviceId> = spread_placement(&fleet.pools[1].topo, 4)
+        .into_iter()
+        .map(|d| fleet.global(1, d))
+        .collect();
+    let spec = |device, role, slots| InstanceSpec { device, role, slots };
+    let instances = if aware {
+        vec![
+            spec(p0[0], InstanceRole::Prefill, 4),
+            spec(p0[1], InstanceRole::Prefill, 4),
+            spec(p0[2], InstanceRole::Decode, 16),
+            spec(p0[3], InstanceRole::Decode, 16),
+            spec(p1[0], InstanceRole::Prefill, 4),
+            spec(p1[1], InstanceRole::Prefill, 4),
+            spec(p1[2], InstanceRole::Decode, 16),
+            spec(p1[3], InstanceRole::Decode, 16),
+        ]
+    } else {
+        vec![
+            spec(p0[0], InstanceRole::Prefill, 4),
+            spec(p0[1], InstanceRole::Prefill, 4),
+            spec(p0[2], InstanceRole::Prefill, 4),
+            spec(p0[3], InstanceRole::Prefill, 4),
+            spec(p1[0], InstanceRole::Decode, 16),
+            spec(p1[1], InstanceRole::Decode, 16),
+            spec(p1[2], InstanceRole::Decode, 16),
+            spec(p1[3], InstanceRole::Decode, 16),
+        ]
+    };
+    let cluster =
+        ClusterConfig::builder(topology, instances, CostModel::new(cluster_device(), 0.0))
+            .fleet(fleet)
+            .fleet_aware_placement(aware)
+            .build();
+    ClusterScenario {
+        cluster,
+        workload: long_prompt_workload(2.0 * CLUSTER_RATES[0]),
+        horizon: 8.0,
+    }
+}
+
 // ---- the checked-in elastic-autoscaling presets (ISSUE 4) -------------
 
 /// Mean offered rate of the diurnal autoscale scenario, requests/s.
@@ -3222,6 +3334,37 @@ mod tests {
         assert_eq!(
             rep.per_instance_completed[0], 0,
             "prefill pool still completes nothing"
+        );
+    }
+
+    #[test]
+    fn single_pool_fleet_cluster_is_bit_identical() {
+        // wrapping the crossover topology in a degenerate one-pool
+        // fleet must not perturb a single bit of the report
+        let base = crossover_scenario(ClusterFabric::Supernode, ClusterMode::Disaggregated);
+        let mut with_fleet = base.clone();
+        with_fleet.cluster.fleet = Some(Fleet::single(base.cluster.topology.clone()));
+        let a = run_cluster_scenario(&base);
+        let b = run_cluster_scenario(&with_fleet);
+        assert_eq!(a.kv_xfer_time.to_bits(), b.kv_xfer_time.to_bits());
+        assert_eq!(a.serving.makespan.to_bits(), b.serving.makespan.to_bits());
+        assert_eq!(a.summary_kv(), b.summary_kv());
+    }
+
+    #[test]
+    fn fleet_aware_prefill_beats_cross_supernode_split() {
+        let aware = run_cluster_scenario(&fleet_prefill_scenario(true));
+        let naive = run_cluster_scenario(&fleet_prefill_scenario(false));
+        assert!(aware.completed() > 0, "aware cell must serve traffic");
+        assert!(naive.completed() > 0, "naive cell must serve traffic");
+        assert!(aware.kv_migrations > 0 && naive.kv_migrations > 0);
+        // every naive handoff crosses the DCN link (~5.2 ms vs
+        // ~1.3 ms local); expected ratio ≈ 3.9x, gated with margin
+        assert!(
+            naive.kv_xfer_time > 2.0 * aware.kv_xfer_time,
+            "aware={} naive={}",
+            aware.kv_xfer_time,
+            naive.kv_xfer_time
         );
     }
 }

@@ -68,7 +68,8 @@ pub use cluster::{
     autoscale_cluster, autoscale_comparison, autoscale_crash_scenario, autoscale_device,
     autoscale_policy, autoscale_preset, autoscale_scenario, autoscale_slo, autoscale_workload,
     cluster_device, cluster_rate_sweep, cluster_slo, crossover_cluster, crossover_comparison,
-    crossover_scenario, long_prompt_workload, run_agentic_scenario, run_cluster_scenario,
+    crossover_scenario, fleet_prefill_scenario, long_prompt_workload, run_agentic_scenario,
+    run_cluster_scenario,
     simulate_cluster, spread_placement, try_spread_placement, AgenticScenario, AgenticSummary,
     AutoscaleSummary, ClusterConfig, ClusterConfigBuilder, ClusterFabric, ClusterMode,
     ClusterReport, ClusterScenario, CrossoverSummary, DeviceLessor, InstanceCrash, InstanceRole,

@@ -49,6 +49,21 @@ impl DeviceSpec {
         }
     }
 
+    /// Ascend-910B-class accelerator: the *previous* generation kept in
+    /// service next to 910C pools (the H2 mixed-generation fleet). About
+    /// half the cube throughput and half the HBM of the 910C — a strong
+    /// straggler under naive-uniform partitioning.
+    pub fn ascend_910b() -> Self {
+        Self {
+            cube_flops: 176e12,
+            vector_flops: 11e12,
+            hbm_bytes: 32 * (1 << 30),
+            hbm_bw: 0.8e12,
+            dram_bytes: 2 * (1 << 30) as u64 * 256, // 512 GiB pooled share
+            dma_engines: 1,
+        }
+    }
+
     /// A100-80G-class GPU, used when modeling the paper's PCIe/Ethernet
     /// baseline clusters.
     pub fn a100_80g() -> Self {

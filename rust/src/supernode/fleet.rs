@@ -1,0 +1,405 @@
+//! Fleet of supernodes: N topology pools bridged by a DCN tier.
+//!
+//! H2 (PAPERS.md) trains across 1,000+ chips of *mixed generations*;
+//! a single homogeneous [`Topology`] cannot express that. A [`Fleet`]
+//! composes several pools — each its own `Topology` with its own
+//! per-device [`DeviceSpec`]s — behind one flat *fleet-global* device
+//! id space, plus one [`LinkSpec`] for the inter-supernode hop
+//! ([`LinkTier::InterNode`]).
+//!
+//! Addressing: pool `p`'s local device `i` is global id
+//! `offset[p] + i`, with pool 0 at offset 0 — so a single-pool fleet's
+//! global ids coincide with the pool's local ids and every existing
+//! call site keeps meaning exactly what it meant. `tier_between`,
+//! `p2p_time`, and `bottleneck_tier` are lifted to global ids:
+//! same-pool pairs delegate to the pool's topology; cross-pool pairs
+//! resolve to `InterNode` priced on the fleet's own inter link.
+//!
+//! Heterogeneity enters the cost model through [`Fleet::speeds`]:
+//! per-device relative throughput (cube FLOPs over the group max), so
+//! any uniform group yields exactly 1.0 per member and the degenerate
+//! fleet stays bit-identical to the topology it wraps.
+
+use super::device::{Device, DeviceId, DeviceSpec};
+use super::topology::{Fabric, Geometry, LinkSpec, LinkTier, Topology};
+
+/// One supernode pool inside a fleet.
+#[derive(Debug, Clone)]
+pub struct FleetPool {
+    /// Human-readable pool name ("910c", "910b", "legacy", ...).
+    pub name: String,
+    pub topo: Topology,
+}
+
+/// A fleet: supernode pools + the inter-supernode link.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub pools: Vec<FleetPool>,
+    /// The inter-supernode (DCN) link spec, priced for every
+    /// cross-pool transfer.
+    pub inter: LinkSpec,
+    /// Global-id offset of each pool (`offsets[0] == 0`).
+    offsets: Vec<usize>,
+}
+
+impl Fleet {
+    pub fn new(pools: Vec<FleetPool>, inter: LinkSpec) -> Self {
+        assert!(!pools.is_empty(), "fleet needs at least one pool");
+        let mut offsets = Vec::with_capacity(pools.len());
+        let mut off = 0;
+        for p in &pools {
+            offsets.push(off);
+            off += p.topo.device_count();
+        }
+        Self {
+            pools,
+            inter,
+            offsets,
+        }
+    }
+
+    /// Wrap a single topology as a one-pool fleet (the degenerate case
+    /// that must stay bit-identical to the bare `Topology`).
+    pub fn single(topo: Topology) -> Self {
+        Self::new(
+            vec![FleetPool {
+                name: "pool0".to_string(),
+                topo,
+            }],
+            Self::inter_dcn(),
+        )
+    }
+
+    /// The default inter-supernode link: datacenter network between
+    /// supernodes — far below even the legacy rack tier in bandwidth,
+    /// with multi-hop switch latency.
+    pub fn inter_dcn() -> LinkSpec {
+        LinkSpec {
+            bandwidth: 50e9,
+            hop_latency: 5e-6,
+            hops: 4,
+        }
+    }
+
+    pub fn pool_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.offsets.last().unwrap() + self.pools.last().unwrap().topo.device_count()
+    }
+
+    /// Resolve a global id to (pool index, pool-local id).
+    pub fn locate(&self, id: DeviceId) -> (usize, DeviceId) {
+        let p = match self.offsets.binary_search(&id.0) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let local = id.0 - self.offsets[p];
+        assert!(
+            local < self.pools[p].topo.device_count(),
+            "device id {} out of fleet range",
+            id.0
+        );
+        (p, DeviceId(local))
+    }
+
+    /// Pool index of a global id.
+    pub fn pool_of(&self, id: DeviceId) -> usize {
+        self.locate(id).0
+    }
+
+    /// Global id of pool `p`'s local device.
+    pub fn global(&self, pool: usize, local: DeviceId) -> DeviceId {
+        DeviceId(self.offsets[pool] + local.0)
+    }
+
+    /// All global ids of one pool.
+    pub fn pool_devices(&self, pool: usize) -> Vec<DeviceId> {
+        let off = self.offsets[pool];
+        (0..self.pools[pool].topo.device_count())
+            .map(|i| DeviceId(off + i))
+            .collect()
+    }
+
+    /// All global ids, pool-major.
+    pub fn all_devices(&self) -> Vec<DeviceId> {
+        (0..self.device_count()).map(DeviceId).collect()
+    }
+
+    /// The device behind a global id.
+    pub fn device(&self, id: DeviceId) -> &Device {
+        let (p, local) = self.locate(id);
+        self.pools[p].topo.device(local)
+    }
+
+    /// The spec behind a global id.
+    pub fn spec(&self, id: DeviceId) -> &DeviceSpec {
+        &self.device(id).spec
+    }
+
+    /// Link tier between two global ids: cross-pool pairs ride the
+    /// inter-supernode tier; same-pool pairs delegate to the pool.
+    pub fn tier_between(&self, a: DeviceId, b: DeviceId) -> LinkTier {
+        let (pa, la) = self.locate(a);
+        let (pb, lb) = self.locate(b);
+        if pa != pb {
+            LinkTier::InterNode
+        } else {
+            self.pools[pa].topo.tier_between(la, lb)
+        }
+    }
+
+    /// The link spec a tier resolves to *within pool `pool`* — the
+    /// inter tier is fleet-global, everything else is the pool's own
+    /// fabric.
+    pub fn link(&self, pool: usize, tier: LinkTier) -> LinkSpec {
+        match tier {
+            LinkTier::InterNode => self.inter,
+            t => self.pools[pool].topo.fabric.tier(t),
+        }
+    }
+
+    /// Point-to-point transfer time between two global ids.
+    pub fn p2p_time(&self, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
+        let (pa, la) = self.locate(a);
+        let (pb, lb) = self.locate(b);
+        if pa != pb {
+            self.inter.transfer_time(bytes)
+        } else {
+            self.pools[pa].topo.p2p_time(la, lb, bytes)
+        }
+    }
+
+    /// The slowest tier inside a fleet-global group. Empty/singleton
+    /// groups bottleneck on the local tier by specification; a group
+    /// spanning pools bottlenecks on the inter-supernode hop.
+    pub fn bottleneck_tier(&self, group: &[DeviceId]) -> LinkTier {
+        if group.len() <= 1 {
+            return LinkTier::Local;
+        }
+        let first_pool = self.pool_of(group[0]);
+        if group.iter().any(|&d| self.pool_of(d) != first_pool) {
+            return LinkTier::InterNode;
+        }
+        let local: Vec<DeviceId> = group.iter().map(|&d| self.locate(d).1).collect();
+        self.pools[first_pool].topo.bottleneck_tier(&local)
+    }
+
+    /// Per-device relative compute speed over a group: cube FLOPs
+    /// divided by the group's fastest member. Any uniform group yields
+    /// exactly `1.0` per member (x / x), so homogeneous fleets keep
+    /// bit-identical cost arithmetic.
+    pub fn speeds(&self, group: &[DeviceId]) -> Vec<f64> {
+        let max = group
+            .iter()
+            .map(|&d| self.spec(d).cube_flops)
+            .fold(0.0f64, f64::max);
+        group
+            .iter()
+            .map(|&d| self.spec(d).cube_flops / max)
+            .collect()
+    }
+
+    /// Collapse the fleet into one flat `Topology` sharing the fleet's
+    /// global id space (pools become consecutive rack blocks). Used
+    /// where an API still wants a `Topology` for *placement geometry*
+    /// (e.g. the serving cluster); fleet-aware cost paths keep pricing
+    /// cross-pool traffic on the real inter link. Requires every pool
+    /// to share a (boards_per_rack, dies_per_board) shape so global
+    /// ids survive the flattening unchanged.
+    pub fn flatten(&self) -> Topology {
+        let g0 = self.pools[0].topo.geometry;
+        let mut racks = 0;
+        let mut devices = Vec::with_capacity(self.device_count());
+        for p in &self.pools {
+            let g = p.topo.geometry;
+            assert_eq!(
+                (g.boards_per_rack, g.dies_per_board),
+                (g0.boards_per_rack, g0.dies_per_board),
+                "flatten requires uniform rack shape across pools"
+            );
+            for d in &p.topo.devices {
+                devices.push(Device {
+                    id: DeviceId(devices.len()),
+                    rack: racks + d.rack,
+                    board: d.board,
+                    die: d.die,
+                    spec: d.spec.clone(),
+                });
+            }
+            racks += g.racks;
+        }
+        Topology {
+            geometry: Geometry {
+                racks,
+                boards_per_rack: g0.boards_per_rack,
+                dies_per_board: g0.dies_per_board,
+            },
+            fabric: self.pools[0].topo.fabric.clone(),
+            devices,
+        }
+    }
+
+    // ---- checked-in scenario presets (seed-42 heterogeneity battery) --
+
+    /// Scenario 1 fleet: a current-generation 910C pool next to a
+    /// previous-generation 910B pool (the H2 mixed-generation setting),
+    /// 32 devices each, bridged by the DCN tier.
+    pub fn mixed_generations() -> Self {
+        let shape = Geometry {
+            racks: 4,
+            boards_per_rack: 1,
+            dies_per_board: 8,
+        };
+        Self::new(
+            vec![
+                FleetPool {
+                    name: "910c".to_string(),
+                    topo: Topology::new(shape, Fabric::supernode(), DeviceSpec::ascend_910c()),
+                },
+                FleetPool {
+                    name: "910b".to_string(),
+                    topo: Topology::new(shape, Fabric::supernode(), DeviceSpec::ascend_910b()),
+                },
+            ],
+            Self::inter_dcn(),
+        )
+    }
+
+    /// Scenario 2 fleet: one supernode whose rack 0 runs derated (a
+    /// thermally throttled / partially failed rack) — heterogeneity
+    /// *inside* a pool, expressed purely through per-device specs.
+    pub fn slow_rack(derate: f64) -> Self {
+        let shape = Geometry {
+            racks: 4,
+            boards_per_rack: 1,
+            dies_per_board: 8,
+        };
+        let mut topo = Topology::new(shape, Fabric::supernode(), DeviceSpec::ascend_910c());
+        for d in &mut topo.devices {
+            if d.rack == 0 {
+                d.spec.cube_flops *= derate;
+                d.spec.vector_flops *= derate;
+                d.spec.hbm_bw *= derate;
+            }
+        }
+        Self::new(
+            vec![FleetPool {
+                name: "throttled".to_string(),
+                topo,
+            }],
+            Self::inter_dcn(),
+        )
+    }
+
+    /// Scenario 3 fleet: two identical 910C supernodes — the
+    /// cross-supernode disaggregated-prefill setting, where placement
+    /// (not specs) decides whether KV migrations pay the inter tier.
+    pub fn dual_supernode() -> Self {
+        let shape = Geometry {
+            racks: 4,
+            boards_per_rack: 1,
+            dies_per_board: 8,
+        };
+        let pool = |name: &str| FleetPool {
+            name: name.to_string(),
+            topo: Topology::new(shape, Fabric::supernode(), DeviceSpec::ascend_910c()),
+        };
+        Self::new(vec![pool("sn0"), pool("sn1")], Self::inter_dcn())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_pool_global_ids_are_local_ids() {
+        let f = Fleet::single(Topology::tiny());
+        assert_eq!(f.device_count(), 8);
+        for i in 0..8 {
+            let (p, local) = f.locate(DeviceId(i));
+            assert_eq!(p, 0);
+            assert_eq!(local, DeviceId(i));
+        }
+        let t = Topology::tiny();
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(
+                    f.tier_between(DeviceId(a), DeviceId(b)),
+                    t.tier_between(DeviceId(a), DeviceId(b))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_pool_pairs_ride_inter_node() {
+        let f = Fleet::mixed_generations();
+        assert_eq!(f.device_count(), 64);
+        assert_eq!(f.tier_between(DeviceId(0), DeviceId(32)), LinkTier::InterNode);
+        assert_eq!(f.tier_between(DeviceId(0), DeviceId(31)), LinkTier::CrossRack);
+        assert_eq!(f.bottleneck_tier(&[DeviceId(0), DeviceId(40)]), LinkTier::InterNode);
+        let inter = f.inter;
+        assert_eq!(
+            f.p2p_time(DeviceId(0), DeviceId(63), 1e9),
+            inter.transfer_time(1e9)
+        );
+    }
+
+    #[test]
+    fn fleet_bottleneck_empty_singleton_local() {
+        let f = Fleet::dual_supernode();
+        assert_eq!(f.bottleneck_tier(&[]), LinkTier::Local);
+        assert_eq!(f.bottleneck_tier(&[DeviceId(63)]), LinkTier::Local);
+    }
+
+    #[test]
+    fn speeds_uniform_group_is_exactly_one() {
+        let f = Fleet::dual_supernode();
+        let group = f.all_devices();
+        for s in f.speeds(&group) {
+            assert_eq!(s.to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn speeds_mixed_generations_show_the_gap() {
+        let f = Fleet::mixed_generations();
+        let s = f.speeds(&f.all_devices());
+        assert_eq!(s[0].to_bits(), 1.0f64.to_bits()); // 910C
+        let expected = 176e12 / 350e12;
+        assert!((s[32] - expected).abs() < 1e-12); // 910B straggler
+    }
+
+    #[test]
+    fn flatten_preserves_ids_and_specs() {
+        let f = Fleet::mixed_generations();
+        let flat = f.flatten();
+        assert_eq!(flat.device_count(), f.device_count());
+        for id in f.all_devices() {
+            assert_eq!(flat.device(id).spec, *f.spec(id));
+        }
+        // cross-pool pairs land on distinct racks (cross-rack locally;
+        // fleet-aware paths re-price them on the inter tier)
+        assert_eq!(
+            flat.tier_between(DeviceId(0), DeviceId(32)),
+            LinkTier::CrossRack
+        );
+    }
+
+    #[test]
+    fn slow_rack_derates_rack_zero_only() {
+        let f = Fleet::slow_rack(0.55);
+        let full = DeviceSpec::ascend_910c().cube_flops;
+        for id in f.all_devices() {
+            let d = f.device(id);
+            if d.rack == 0 {
+                assert!((d.spec.cube_flops - full * 0.55).abs() < 1.0);
+            } else {
+                assert_eq!(d.spec.cube_flops, full);
+            }
+        }
+    }
+}

@@ -7,7 +7,9 @@
 //! one-line change — exactly the comparison the paper draws.
 
 pub mod device;
+pub mod fleet;
 pub mod topology;
 
 pub use device::{Device, DeviceId, DeviceSpec};
+pub use fleet::{Fleet, FleetPool};
 pub use topology::{Fabric, Geometry, LinkSpec, LinkTier, Topology};

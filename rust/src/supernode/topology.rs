@@ -28,6 +28,10 @@ pub enum LinkTier {
     Rack,
     /// Across racks (UB cross-rack mesh; Ethernet/RoCE on legacy).
     CrossRack,
+    /// Across supernodes (the fleet DCN tier). A bare [`Fabric`] prices
+    /// this as its cross-rack link; a [`super::Fleet`] substitutes its
+    /// own inter-supernode [`LinkSpec`].
+    InterNode,
 }
 
 /// Bandwidth/latency of one tier.
@@ -122,6 +126,10 @@ impl Fabric {
             LinkTier::Board => self.board,
             LinkTier::Rack => self.rack,
             LinkTier::CrossRack => self.cross_rack,
+            // A single-supernode fabric has no inter-node link table;
+            // fall back to the worst tier it knows. Fleet-aware cost
+            // paths never hit this arm (Fleet carries the real spec).
+            LinkTier::InterNode => self.cross_rack,
         }
     }
 }
@@ -246,11 +254,19 @@ impl Topology {
     /// The *slowest* tier present within a device group — collective
     /// algorithms are bound by it.
     pub fn bottleneck_tier(&self, group: &[DeviceId]) -> LinkTier {
+        // An empty or singleton group has no fabric link at all: its
+        // bottleneck is the local tier, explicitly. (Fleet-global
+        // groups of size 1 are common; before this guard the answer
+        // fell out of the fold's initial value by accident.)
+        if group.len() <= 1 {
+            return LinkTier::Local;
+        }
         let mut worst = LinkTier::Local;
         for (i, &a) in group.iter().enumerate() {
             for &b in &group[i + 1..] {
                 let t = self.tier_between(a, b);
                 worst = match (worst, t) {
+                    (LinkTier::InterNode, _) | (_, LinkTier::InterNode) => LinkTier::InterNode,
                     (LinkTier::CrossRack, _) | (_, LinkTier::CrossRack) => LinkTier::CrossRack,
                     (LinkTier::Rack, _) | (_, LinkTier::Rack) => LinkTier::Rack,
                     (LinkTier::Board, _) | (_, LinkTier::Board) => LinkTier::Board,
@@ -332,6 +348,22 @@ mod tests {
         assert_eq!(t.bottleneck_tier(&rack), LinkTier::Rack);
         let all = t.all_devices();
         assert_eq!(t.bottleneck_tier(&all[..64]), LinkTier::CrossRack);
+    }
+
+    #[test]
+    fn bottleneck_tier_empty_and_singleton_are_local() {
+        // Regression (ISSUE 9 satellite): fleet-global groups of size
+        // 0/1 are common; the answer must be the local tier by
+        // specification, not by accident of the fold's initial value.
+        let t = Topology::matrix384();
+        assert_eq!(t.bottleneck_tier(&[]), LinkTier::Local);
+        assert_eq!(t.bottleneck_tier(&[DeviceId(100)]), LinkTier::Local);
+    }
+
+    #[test]
+    fn bare_fabric_prices_inter_node_as_cross_rack() {
+        let f = Fabric::supernode();
+        assert_eq!(f.tier(LinkTier::InterNode), f.cross_rack);
     }
 
     #[test]

@@ -25,10 +25,12 @@
 
 use crate::collectives;
 use crate::graph::CollectiveKind;
-use crate::hypermpmd::{schedule_dynamic, OmniModalWorkload};
+use crate::hypermpmd::{
+    schedule_dynamic, schedule_dynamic_weighted, schedule_uniform_replay, OmniModalWorkload,
+};
 use crate::hypershard::layout::{DimSharding, ShardSpec};
-use crate::hypershard::resharding::{plan_reshard, reshard_time};
-use crate::supernode::{DeviceId, Topology};
+use crate::hypershard::resharding::{plan_reshard, reshard_time, reshard_time_fleet};
+use crate::supernode::{DeviceId, Fleet, Topology};
 
 /// The scaled-down training job the co-scheduled scenarios run: an
 /// omni-modal step shape plus the two byte counts that touch the
@@ -111,6 +113,77 @@ impl ElasticTrainJob {
         }
         reshard_time(&plan, topo, &group, self.state_bytes, src_shards)
     }
+
+    // ---- fleet-global variants (ISSUE 9) -----------------------------
+    //
+    // Same three prices lifted to a heterogeneous [`Fleet`]: compute
+    // becomes speed-weighted (aware) or uniform-planned-then-replayed
+    // (the naive baseline), sync and reshard price through
+    // `cost_fleet`. On a uniform single-pool fleet every one of these
+    // is bit-identical to its topology counterpart: speeds are exactly
+    // 1.0 (x / x) and `cost_fleet` delegates to `cost`.
+
+    /// Compute time of one step with per-device relative `speeds`,
+    /// partitioned compute-proportionally (heterogeneity-aware).
+    pub fn compute_time_weighted(&self, speeds: &[f64]) -> f64 {
+        assert!(!speeds.is_empty(), "a training step needs at least one device");
+        schedule_dynamic_weighted(&self.workload, speeds).makespan
+    }
+
+    /// Compute time of one step when the plan pretends every device is
+    /// equal and the stragglers stretch it (naive-uniform baseline).
+    pub fn compute_time_naive(&self, speeds: &[f64]) -> f64 {
+        assert!(!speeds.is_empty(), "a training step needs at least one device");
+        schedule_uniform_replay(&self.workload, speeds).makespan
+    }
+
+    /// Gradient-sync time over a fleet-global group (straggler-aware:
+    /// the slowest pool bounds the intra phase, the inter-node hop
+    /// prices the rest).
+    pub fn sync_time_fleet(&self, fleet: &Fleet, group: &[DeviceId]) -> f64 {
+        collectives::cost_fleet(fleet, CollectiveKind::AllReduce, self.grad_bytes, group).time
+    }
+
+    /// Wall time of one step on a fleet lease. `aware` picks the
+    /// compute-proportional plan; `false` prices the naive-uniform
+    /// baseline on the same devices.
+    pub fn step_time_fleet(&self, fleet: &Fleet, group: &[DeviceId], aware: bool) -> f64 {
+        let speeds = fleet.speeds(group);
+        let compute = if aware {
+            self.compute_time_weighted(&speeds)
+        } else {
+            self.compute_time_naive(&speeds)
+        };
+        compute + self.sync_time_fleet(fleet, group)
+    }
+
+    /// [`Self::reconfig_time`] over a fleet-global group: lease changes
+    /// that cross supernodes pay the inter-node all-to-all.
+    pub fn reconfig_time_fleet(
+        &self,
+        fleet: &Fleet,
+        old: &[DeviceId],
+        new: &[DeviceId],
+        checkpoint_shards: usize,
+    ) -> f64 {
+        let src_shards = if old.is_empty() {
+            checkpoint_shards
+        } else {
+            old.len()
+        };
+        let dst_shards = if new.is_empty() { 1 } else { new.len() };
+        if src_shards == 0 || src_shards == dst_shards {
+            return 0.0;
+        }
+        let plan = plan_reshard(&dp_spec(src_shards), &dp_spec(dst_shards));
+        let mut group: Vec<DeviceId> = old.to_vec();
+        for &d in new {
+            if !group.contains(&d) {
+                group.push(d);
+            }
+        }
+        reshard_time_fleet(&plan, fleet, &group, self.state_bytes, src_shards)
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +239,38 @@ mod tests {
         assert_eq!(j.reconfig_time(&sn, &old_sn, &old_sn, 0), 0.0);
         // first-ever configuration: nothing to move yet
         assert_eq!(j.reconfig_time(&sn, &[], &new_sn, 0), 0.0);
+    }
+
+    #[test]
+    fn uniform_fleet_step_is_bit_identical() {
+        let j = job();
+        let fleet = Fleet::single(Topology::matrix384());
+        let g = group(&fleet.pools[0].topo, 8);
+        let bare = j.step_time(&fleet.pools[0].topo, &g);
+        for aware in [true, false] {
+            assert_eq!(
+                bare.to_bits(),
+                j.step_time_fleet(&fleet, &g, aware).to_bits(),
+                "aware={aware}"
+            );
+        }
+        let old = group(&fleet.pools[0].topo, 8);
+        let new = group(&fleet.pools[0].topo, 12);
+        assert_eq!(
+            j.reconfig_time(&fleet.pools[0].topo, &old, &new, 0).to_bits(),
+            j.reconfig_time_fleet(&fleet, &old, &new, 0).to_bits()
+        );
+    }
+
+    #[test]
+    fn aware_fleet_step_beats_naive_on_mixed_generations() {
+        let j = job();
+        let fleet = Fleet::mixed_generations();
+        // 8 fast + 8 slow devices
+        let g: Vec<DeviceId> = (0..8).chain(32..40).map(DeviceId).collect();
+        let aware = j.step_time_fleet(&fleet, &g, true);
+        let naive = j.step_time_fleet(&fleet, &g, false);
+        assert!(naive / aware > 1.10, "aware={aware} naive={naive}");
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Fleet property suite (ISSUE 9 satellites).
+//!
+//! Three families of guarantees around the fleet generalization:
+//!
+//! 1. **Degenerate bit-identity.** Wrapping a scenario's topology in a
+//!    one-pool uniform [`Fleet`] must change *nothing*: every PR 2–8
+//!    seed-42 preset (crossover, autoscale, crash-recovery, agentic,
+//!    co-scheduled, faulted, chaos) reruns with `Fleet::single` and
+//!    every `summary_kv` row — and the broker ledger — compares equal
+//!    to the bit. This is the contract that lets the fleet code ride
+//!    in every path without perturbing seven PRs of calibrated
+//!    numbers: uniform speeds are exactly 1.0 (`x / x`), single-pool
+//!    collectives delegate to the topology pricer, and the serving
+//!    cluster's `multi_pool_fleet` guard turns the whole feature off.
+//!
+//! 2. **Partition conservation.** Compute-proportional partitions
+//!    (`hypershard::heterogeneous`) conserve the total item count,
+//!    never exceed a device's HBM cap, and reproduce count-based
+//!    splitting on uniform groups — fuzzed over seeded random weight
+//!    vectors and checked on both heterogeneity-battery fleets.
+//!
+//! 3. **Chaos × heterogeneity.** The PR 6 chaos grid extended with a
+//!    heterogeneous-pool dimension: seeded `random_fleet_plan`
+//!    schedules (which can degrade the inter-supernode link itself)
+//!    run against the mixed-generation and slow-rack fleet scenarios,
+//!    and the global invariants hold under every one — request
+//!    conservation, ≤-one-step-lost-per-fail, tenant isolation, and
+//!    the lease ledger staying a *partition* (each fleet device in
+//!    exactly one terminal state). Mirrored by the fleet chaos suite
+//!    in `tools/cosched_simcheck.py`.
+
+use std::collections::BTreeSet;
+
+use hyperparallel::faults::chaos::{random_fleet_plan, CHAOS_HORIZON};
+use hyperparallel::faults::RetryPolicy;
+use hyperparallel::hypermpmd::coschedule::{
+    assert_tenant_isolation, chaos_cosched_scenario, cosched_scenario, fault_cosched_scenario,
+    fleet_cosched_scenario, run_cosched, CoschedConfig, CoschedMode, FleetScenario,
+    FLEET_SLOW_RACK_DERATE,
+};
+use hyperparallel::hypershard::{
+    compute_weights, memory_caps, partition_for_group, proportional_partition,
+};
+use hyperparallel::serving::{
+    agentic_scenario, autoscale_crash_scenario, autoscale_scenario, crossover_scenario,
+    run_agentic_scenario, run_cluster_scenario, ClusterFabric, ClusterMode, ClusterScenario,
+};
+use hyperparallel::supernode::Fleet;
+use hyperparallel::util::rng::Rng;
+
+// ---- 1. degenerate bit-identity ---------------------------------------
+
+/// Compare two `summary_kv` emissions to the bit: same keys, same
+/// order, bitwise-equal values.
+fn assert_rows_identical(label: &str, base: &[(String, f64)], fleet: &[(String, f64)]) {
+    assert_eq!(base.len(), fleet.len(), "{label}: row count drifted");
+    for ((kb, vb), (kf, vf)) in base.iter().zip(fleet) {
+        assert_eq!(kb, kf, "{label}: key order drifted");
+        assert_eq!(
+            vb.to_bits(),
+            vf.to_bits(),
+            "{label}: {kb} perturbed by the uniform fleet ({vb} vs {vf})"
+        );
+    }
+}
+
+/// Run a serving preset bare and wrapped in a one-pool fleet; the
+/// reports must match to the bit (both placement-policy settings —
+/// the flag is defined to be inert without a multi-pool fleet).
+fn assert_serving_degenerate(label: &str, sc: &ClusterScenario) {
+    let base = run_cluster_scenario(sc);
+    for aware in [true, false] {
+        let mut wrapped = sc.clone();
+        wrapped.cluster.fleet = Some(Fleet::single(sc.cluster.topology.clone()));
+        wrapped.cluster.fleet_aware_placement = aware;
+        let rep = run_cluster_scenario(&wrapped);
+        assert_rows_identical(
+            &format!("{label}/aware={aware}"),
+            &base.summary_kv(),
+            &rep.summary_kv(),
+        );
+    }
+}
+
+#[test]
+fn uniform_fleet_is_bit_identical_on_crossover_presets() {
+    for fabric in [ClusterFabric::Supernode, ClusterFabric::Legacy] {
+        for mode in [ClusterMode::Colocated, ClusterMode::Disaggregated] {
+            assert_serving_degenerate(
+                &format!("crossover/{fabric:?}/{mode:?}"),
+                &crossover_scenario(fabric, mode),
+            );
+        }
+    }
+}
+
+#[test]
+fn uniform_fleet_is_bit_identical_on_autoscale_presets() {
+    for fabric in [ClusterFabric::Supernode, ClusterFabric::Legacy] {
+        for elastic in [true, false] {
+            assert_serving_degenerate(
+                &format!("autoscale/{fabric:?}/elastic={elastic}"),
+                &autoscale_scenario(fabric, elastic),
+            );
+        }
+        assert_serving_degenerate(
+            &format!("autoscale-crash/{fabric:?}"),
+            &autoscale_crash_scenario(fabric),
+        );
+    }
+}
+
+#[test]
+fn uniform_fleet_is_bit_identical_on_agentic_presets() {
+    for fabric in [ClusterFabric::Supernode, ClusterFabric::Legacy] {
+        for cache_aware in [true, false] {
+            let sc = agentic_scenario(fabric, cache_aware);
+            let base = run_agentic_scenario(&sc);
+            let mut wrapped = sc.clone();
+            wrapped.cluster.fleet = Some(Fleet::single(sc.cluster.topology.clone()));
+            let rep = run_agentic_scenario(&wrapped);
+            assert_rows_identical(
+                &format!("agentic/{fabric:?}/cache={cache_aware}"),
+                &base.summary_kv(),
+                &rep.summary_kv(),
+            );
+        }
+    }
+}
+
+/// Run a co-scheduled preset bare and with a one-pool fleet installed
+/// on *both* tenants (the trainer's lease pricing and the serving
+/// cluster's migration pricing); serving rows, training rows, and the
+/// broker ledger must all match.
+fn assert_cosched_degenerate(label: &str, cfg: &CoschedConfig) {
+    let base = run_cosched(cfg);
+    let mut wrapped = cfg.clone();
+    let single = Fleet::single(cfg.cluster.topology.clone());
+    wrapped.train.fleet = Some(single.clone());
+    wrapped.cluster.fleet = Some(single);
+    let rep = run_cosched(&wrapped);
+    assert_rows_identical(
+        &format!("{label}/serving"),
+        &base.serving.summary_kv(),
+        &rep.serving.summary_kv(),
+    );
+    assert_rows_identical(
+        &format!("{label}/train"),
+        &base.train.summary_kv(),
+        &rep.train.summary_kv(),
+    );
+    assert_eq!(base.broker.leases_granted, rep.broker.leases_granted, "{label}");
+    assert_eq!(base.broker.leases_returned, rep.broker.leases_returned, "{label}");
+    assert_eq!(base.broker.lease_misses, rep.broker.lease_misses, "{label}");
+    assert_eq!(base.broker.free_at_end, rep.broker.free_at_end, "{label}");
+    assert_eq!(base.broker.failed_at_end, rep.broker.failed_at_end, "{label}");
+}
+
+#[test]
+fn uniform_fleet_is_bit_identical_on_cosched_presets() {
+    for fabric in [ClusterFabric::Supernode, ClusterFabric::Legacy] {
+        assert_cosched_degenerate(
+            &format!("cosched/{fabric:?}"),
+            &cosched_scenario(fabric, CoschedMode::Cosched),
+        );
+    }
+    assert_cosched_degenerate(
+        "cosched/static-partition",
+        &cosched_scenario(ClusterFabric::Supernode, CoschedMode::StaticPartition),
+    );
+    assert_cosched_degenerate("cosched/seed42-faults", &fault_cosched_scenario());
+    assert_cosched_degenerate("cosched/chaos-seed7", &chaos_cosched_scenario(7));
+}
+
+// ---- 2. partition conservation ----------------------------------------
+
+#[test]
+fn proportional_partition_conserves_total_under_random_caps() {
+    let mut rng = Rng::new(42);
+    for round in 0..64 {
+        let n = 1 + rng.below(8) as usize;
+        let weights: Vec<f64> = (0..n).map(|_| 0.05 + rng.next_f64()).collect();
+        let total = rng.below(200) as usize;
+        let mut caps: Vec<usize> = (0..n).map(|_| rng.below(64) as usize).collect();
+        // keep the draw feasible: grow the first cap by any shortfall
+        let shortfall = total.saturating_sub(caps.iter().sum::<usize>());
+        caps[0] += shortfall;
+        let sizes = proportional_partition(total, &weights, Some(caps.as_slice()));
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            total,
+            "round {round}: items created or destroyed"
+        );
+        for (i, (&s, &c)) in sizes.iter().zip(&caps).enumerate() {
+            assert!(s <= c, "round {round}: slot {i} over cap ({s} > {c})");
+        }
+    }
+}
+
+#[test]
+fn fleet_partitions_fit_every_memory_spec() {
+    let fleets = [
+        ("mixed", Fleet::mixed_generations()),
+        ("slow_rack", Fleet::slow_rack(FLEET_SLOW_RACK_DERATE)),
+    ];
+    // a 512 MB layer shard: caps bind at ~128 items per 64 GiB device
+    let bytes_per_item = 512e6;
+    for (label, fleet) in &fleets {
+        let group = fleet.all_devices();
+        let weights = compute_weights(fleet, &group);
+        assert!(
+            (weights.iter().sum::<f64>() - 1.0).abs() < 1e-9,
+            "{label}: weights must normalize"
+        );
+        let caps = memory_caps(fleet, &group, bytes_per_item);
+        for &total in &[64usize, 256, 1024] {
+            let sizes = partition_for_group(fleet, &group, total, bytes_per_item);
+            assert_eq!(
+                sizes.iter().sum::<usize>(),
+                total,
+                "{label}/{total}: layer count not conserved"
+            );
+            for (i, (&s, &c)) in sizes.iter().zip(&caps).enumerate() {
+                assert!(
+                    s <= c,
+                    "{label}/{total}: device {i} assigned {s} items over its HBM cap {c}"
+                );
+            }
+        }
+    }
+    // roofline monotonicity: on the mixed fleet no 910B device ever
+    // holds more than a 910C device; on the slow-rack fleet no derated
+    // device holds more than a healthy one
+    let mixed = &fleets[0].1;
+    let sizes = partition_for_group(mixed, &mixed.all_devices(), 256, bytes_per_item);
+    assert!(
+        sizes[..32].iter().min() >= sizes[32..].iter().max(),
+        "910C share must dominate 910B share: {sizes:?}"
+    );
+}
+
+#[test]
+fn uniform_fleet_partition_matches_count_split() {
+    let fleet = Fleet::single(ClusterFabric::Supernode.topology());
+    let group = fleet.all_devices();
+    let weights = compute_weights(&fleet, &group);
+    let total = 100usize;
+    let sizes = proportional_partition(total, &weights, None);
+    // uniform specs: total / n each, remainder to the lowest indices
+    let n = group.len();
+    for (i, &s) in sizes.iter().enumerate() {
+        let expect = total / n + usize::from(i < total % n);
+        assert_eq!(s, expect, "device {i}");
+    }
+}
+
+// ---- 3. chaos x heterogeneity -----------------------------------------
+
+/// One cell of the extended chaos grid: a heterogeneity-battery fleet
+/// scenario shortened to the chaos horizon with a seeded
+/// `random_fleet_plan` (link windows — inter-node face included —
+/// training-device fails, serving crashes) layered on, retries armed.
+fn fleet_chaos_scenario(which: FleetScenario, seed: u64) -> CoschedConfig {
+    let mut cfg = fleet_cosched_scenario(which, true);
+    cfg.horizon = CHAOS_HORIZON;
+    cfg.train.train_until = CHAOS_HORIZON;
+    let (plan, crashes) = random_fleet_plan(seed, CHAOS_HORIZON);
+    cfg.cluster.faults = plan;
+    cfg.cluster.failures = crashes;
+    cfg.cluster.retry = Some(RetryPolicy::degraded_fabric());
+    cfg
+}
+
+#[test]
+fn chaos_grid_with_heterogeneous_pools_keeps_lease_ledger_a_partition() {
+    let grid = [
+        (
+            FleetScenario::MixedGenerations,
+            Fleet::mixed_generations().device_count(),
+        ),
+        (
+            FleetScenario::SlowRack,
+            Fleet::slow_rack(FLEET_SLOW_RACK_DERATE).device_count(),
+        ),
+    ];
+    for (which, fleet_devices) in grid {
+        for seed in 0..8u64 {
+            let cfg = fleet_chaos_scenario(which, seed);
+            let submitted = cfg.workload.generate(cfg.horizon).len();
+            // run_cosched itself asserts pool drain and lease return;
+            // the ledger partition below is the fleet-global extension
+            let rep = run_cosched(&cfg);
+            assert_tenant_isolation(&rep);
+            assert_eq!(
+                rep.serving.serving.outcomes.len() + rep.serving.serving.rejected as usize,
+                submitted,
+                "{which:?}/seed {seed}: requests lost"
+            );
+            assert!(
+                rep.train.steps_lost <= rep.train.device_fails,
+                "{which:?}/seed {seed}: more steps lost than fails"
+            );
+            assert_eq!(
+                rep.broker.failed_at_end.len() as u64,
+                rep.train.device_fails,
+                "{which:?}/seed {seed}: failed-device ledger out of sync"
+            );
+            // every fleet device lands in exactly one terminal state:
+            // broker-free, serving-held, crashed, or failed
+            let mut seen = BTreeSet::new();
+            for d in rep
+                .broker
+                .free_at_end
+                .iter()
+                .chain(&rep.serving.held_devices_at_end)
+                .chain(&rep.serving.crashed_devices)
+                .chain(&rep.broker.failed_at_end)
+            {
+                assert!(
+                    seen.insert(d.0),
+                    "{which:?}/seed {seed}: device {} in two ledgers",
+                    d.0
+                );
+            }
+            assert_eq!(
+                seen.len(),
+                fleet_devices,
+                "{which:?}/seed {seed}: ledger does not cover the fleet"
+            );
+        }
+    }
+}

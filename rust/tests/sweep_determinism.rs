@@ -1,9 +1,10 @@
-//! Determinism regression (ISSUE 4 satellite, extended by ISSUEs 5
-//! and 6): `cluster_rate_sweep` over the crossover scenario AND the
-//! elastic-autoscale scenario AND `cosched_rate_sweep` over the
-//! co-scheduled scenario — fault-free and with the ISSUE 6 fault plan
-//! (link degrades, device fails, retry/hedge machinery) injected —
-//! produce bit-identical reports whether the sweep runs sequentially
+//! Determinism regression (ISSUE 4 satellite, extended by ISSUEs 5,
+//! 6, and 9): `cluster_rate_sweep` over the crossover scenario AND
+//! the elastic-autoscale scenario AND `cosched_rate_sweep` over the
+//! co-scheduled scenario — fault-free, with the ISSUE 6 fault plan
+//! (link degrades, device fails, retry/hedge machinery) injected, and
+//! on the ISSUE 9 heterogeneous mixed-generation fleet — produce
+//! bit-identical reports whether the sweep runs sequentially
 //! (`HP_SWEEP_THREADS=1`) or fanned across 8 workers.
 //!
 //! Like `sweep_env.rs`, this binary holds exactly one test: the
@@ -12,7 +13,8 @@
 //! in glibc — an isolated binary is the only safe home.
 
 use hyperparallel::hypermpmd::coschedule::{
-    cosched_rate_sweep, cosched_scenario, fault_cosched_scenario, CoschedMode,
+    cosched_rate_sweep, cosched_scenario, fault_cosched_scenario, fleet_cosched_scenario,
+    CoschedMode, FleetScenario,
 };
 use hyperparallel::serving::{
     autoscale_scenario, autoscale_slo, cluster_rate_sweep, cluster_slo, crossover_scenario,
@@ -101,6 +103,38 @@ fn cluster_sweeps_bit_identical_across_worker_counts() {
     let (fpar_ops, fpar_steps): (Vec<OperatingPoint>, Vec<u64>) = fpar.into_iter().unzip();
     assert_bit_identical("cosched faulted", &fseq_ops, &fpar_ops);
     assert_eq!(fseq_steps, fpar_steps, "faulted cosched: training step counts");
+    // ...and the ISSUE 9 heterogeneous-fleet path: compute-weighted
+    // step planning, pool-aware harvesting, the crossing rule, and
+    // DCN-priced reshards must replay identically across sweep worker
+    // counts
+    let fleet = fleet_cosched_scenario(FleetScenario::MixedGenerations, true);
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let hseq = cosched_rate_sweep(&fleet, &[18.0, 24.0], &slo);
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let hpar = cosched_rate_sweep(&fleet, &[18.0, 24.0], &slo);
+    let (hseq_ops, hseq_steps): (Vec<OperatingPoint>, Vec<u64>) = hseq.into_iter().unzip();
+    let (hpar_ops, hpar_steps): (Vec<OperatingPoint>, Vec<u64>) = hpar.into_iter().unzip();
+    assert_bit_identical("cosched fleet", &hseq_ops, &hpar_ops);
+    assert_eq!(hseq_steps, hpar_steps, "fleet cosched: training step counts");
+    // one streaming-sink row of the same fleet cell: the sink choice
+    // and the fleet pricing compose — determinism across worker
+    // counts, and the streaming row matches the indexed row bitwise
+    let mut fleet_stream = fleet.clone();
+    fleet_stream.cluster.trace_mode = hyperparallel::sim::TraceMode::Streaming;
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let fs_seq = cosched_rate_sweep(&fleet_stream, &[18.0], &slo);
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let fs_par = cosched_rate_sweep(&fleet_stream, &[18.0], &slo);
+    let (fs_seq_ops, fs_seq_steps): (Vec<OperatingPoint>, Vec<u64>) = fs_seq.into_iter().unzip();
+    let (fs_par_ops, fs_par_steps): (Vec<OperatingPoint>, Vec<u64>) = fs_par.into_iter().unzip();
+    assert_bit_identical("cosched fleet streaming-sink", &fs_seq_ops, &fs_par_ops);
+    assert_eq!(fs_seq_steps, fs_par_steps, "fleet streaming: step counts");
+    assert_bit_identical(
+        "fleet streaming vs indexed sink",
+        &hseq_ops[..1],
+        &fs_seq_ops,
+    );
+    assert_eq!(hseq_steps[..1], fs_seq_steps[..], "fleet sinks: steps");
     // ...and the ISSUE 8 streaming-sink path: the same crossover sweep
     // with the incremental accumulators instead of the interval log —
     // the sink choice must not perturb the sweep's determinism, and

@@ -280,6 +280,22 @@ def p2p_time(fabric, tier, nbytes):
     return lat * hops + nbytes / bw
 
 
+# ---- fleet layout (ISSUE 9, mirror of supernode/fleet.rs) --------------
+# A fleet is N supernode pools of Geometry{4 racks x 1 board x 8 dies}
+# behind one DCN-class inter-supernode link; a fleet device is
+# (global_rack, die) with pool = global_rack // 4 (Fleet::flatten's
+# layout). Same-pool pairs price on the supernode fabric exactly as
+# before; cross-pool pairs ride INTER_DCN and take "inter_node" fault
+# windows.
+
+FLEET_POOL_RACKS = 4
+INTER_DCN = (50e9, 5e-6, 4)       # Fleet::inter_dcn: bw, hop latency, hops
+
+
+def fleet_pool(dev):
+    return dev[0] // FLEET_POOL_RACKS
+
+
 # ---- fault model (mirror of rust/src/faults/mod.rs) --------------------
 # A fault plan is dict(links=[(tier, start, end, bw_scale, lat_scale)],
 #                      fails=[(time, ordinal)]).
@@ -733,11 +749,18 @@ def policy_decide(policy, obs):
 class Cluster:
     def __init__(self, cost, insts, max_seq, fabric, route="least_kv",
                  max_preemptions=4, autoscale=None, failures=(),
-                 faults=None, retry=None, prefix=None):
+                 faults=None, retry=None, prefix=None, fleet=False,
+                 fleet_aware=True):
         self.cost = cost
         self.insts = insts
         self.max_seq = max_seq
         self.fabric = fabric
+        # fleet=True: devices follow the fleet layout and cross-pool
+        # transfers ride INTER_DCN; fleet_aware gates the same-pool
+        # migration preference (mirror of ClusterConfig::fleet +
+        # fleet_aware_placement)
+        self.fleet = fleet
+        self.fleet_aware = fleet_aware
         self.route = route
         self.max_preemptions = max_preemptions
         self.rr = 0
@@ -883,6 +906,38 @@ class Cluster:
 
     # -- migration / requeue machinery -----------------------------------
 
+    def mig_base(self, a, b, nbytes):
+        """Clean P2p price between devices (mirror of p2p_clean):
+        cross-pool pairs on a fleet ride the inter-supernode link."""
+        if self.fleet and fleet_pool(a) != fleet_pool(b):
+            bw, lat, hops = INTER_DCN
+            return lat * hops + nbytes / bw
+        return p2p_time(self.fabric, tier_between(a, b), nbytes)
+
+    def mig_at(self, a, b, nbytes, t):
+        """P2p price quoted at dispatch time t, honoring the fault
+        plan (mirror of p2p_at)."""
+        if not fault_degraded_at(self.faults, t):
+            return self.mig_base(a, b, nbytes)
+        if self.fleet and fleet_pool(a) != fleet_pool(b):
+            bw, lat, hops = INTER_DCN
+            bs, ls = fault_scale_at(self.faults, "inter_node", t)
+            return lat * ls * hops + nbytes / (bw * bs)
+        return p2p_time_at(self.fabric, tier_between(a, b), nbytes,
+                           self.faults, t)
+
+    def pool_filter(self, src_dev, cands):
+        """Same-supernode preference (ISSUE 9): with a fleet and aware
+        placement, a KV handoff stays inside the source's pool whenever
+        any same-pool candidate is serving; the naive baseline passes
+        the candidate set through untouched."""
+        if not self.fleet or not self.fleet_aware:
+            return cands
+        home = fleet_pool(src_dev)
+        same = [c for c in cands
+                if fleet_pool(self.insts[c].device) == home]
+        return same if same else cands
+
     def hedge_filter(self, src_dev, cands, nbytes):
         """Straggler-aware hedging: when some destination's path from
         the source is degraded beyond retry.hedge x its clean transfer
@@ -893,9 +948,8 @@ class Cluster:
             return cands
         clean = []
         for c in cands:
-            tier = tier_between(src_dev, self.insts[c].device)
-            base = p2p_time(self.fabric, tier, nbytes)
-            eff = p2p_time_at(self.fabric, tier, nbytes, self.faults,
+            base = self.mig_base(src_dev, self.insts[c].device, nbytes)
+            eff = self.mig_at(src_dev, self.insts[c].device, nbytes,
                               self.now)
             if eff <= rp["hedge"] * base:
                 clean.append(c)
@@ -928,15 +982,12 @@ class Cluster:
         src = self.insts[entry["kv_src"]]
         ctx = entry["prompt_len"] + entry["produced"]
         nbytes = ctx * self.cost.kvb
+        cands = self.pool_filter(src.device, cands)
         cands = self.hedge_filter(src.device, cands, nbytes)
         dst = self.pick_dst(cands)
-        tier = tier_between(src.device, self.insts[dst].device)
-        base = p2p_time(self.fabric, tier, nbytes)
-        if fault_degraded_at(self.faults, self.now):
-            xfer = p2p_time_at(self.fabric, tier, nbytes, self.faults,
-                               self.now)
-        else:
-            xfer = base
+        base = self.mig_base(src.device, self.insts[dst].device, nbytes)
+        xfer = self.mig_at(src.device, self.insts[dst].device, nbytes,
+                           self.now)
         rp = self.retry
         if rp is not None and xfer > rp["timeout"] and \
                 attempts < rp["max_attempts"]:
@@ -1011,12 +1062,7 @@ class Cluster:
         aus = self.autoscale
         serving_any = [i for i in self.insts if i.state == SERVING]
         src_dev = serving_any[0].device if serving_any else dev
-        tier = tier_between(src_dev, dev)
-        if fault_degraded_at(self.faults, t):
-            xfer = p2p_time_at(self.fabric, tier, float(self.cost.weight),
-                               self.faults, t)
-        else:
-            xfer = p2p_time(self.fabric, tier, float(self.cost.weight))
+        xfer = self.mig_at(src_dev, dev, float(self.cost.weight), t)
         k = len(self.insts)
         inst = Instance(self.scaled_role, aus["slots"], self.cost.hbm_pages(),
                         dev, state=WARMING, born=t)
@@ -1246,10 +1292,7 @@ class Cluster:
     # -- prefix-cache pricing (mirror of cluster.rs free helpers) --------
 
     def p2p(self, a, b, nbytes, t):
-        tier = tier_between(a, b)
-        if fault_degraded_at(self.faults, t):
-            return p2p_time_at(self.fabric, tier, nbytes, self.faults, t)
-        return p2p_time(self.fabric, tier, nbytes)
+        return self.mig_at(a, b, nbytes, t)
 
     def segment_fetch_time(self, k, t, seg, devices):
         nbytes = seg["tokens"] * self.cost.kvb
@@ -1806,6 +1849,52 @@ def describe(c, cfg, label):
     return op
 
 
+# ---- fleet disaggregated-prefill preset (ISSUE 9) ----------------------
+# Mirror of serving::cluster::fleet_prefill_scenario: a dual-supernode
+# fleet serving long prompts disaggregated. aware = a complete
+# prefill+decode pipeline per supernode so every KV handoff stays on
+# the in-pool fabric; naive = all prefill in pool 0, all decode in
+# pool 1, so every handoff crosses the DCN.
+
+FLEET_PREFILL_RATE = 20.0
+
+
+def fleet_device(pool, i):
+    """spread_placement index i inside one fleet pool, fleet-global."""
+    return (pool * FLEET_POOL_RACKS + i % FLEET_POOL_RACKS,
+            (i // FLEET_POOL_RACKS) % 8)
+
+
+def fleet_prefill_cluster(aware, cfg=CFG):
+    cost = Cost(cfg["kvb"], cfg["tpp"], cfg["weight"], cfg["hbm_tokens"])
+    pages = cost.hbm_pages()
+    p0 = [fleet_device(0, i) for i in range(4)]
+    p1 = [fleet_device(1, i) for i in range(4)]
+    pre, dec = cfg["pre_slots"], cfg["dec_slots"]
+    if aware:
+        insts = [Instance(PREFILL, pre, pages, p0[0]),
+                 Instance(PREFILL, pre, pages, p0[1]),
+                 Instance(DECODE, dec, pages, p0[2]),
+                 Instance(DECODE, dec, pages, p0[3]),
+                 Instance(PREFILL, pre, pages, p1[0]),
+                 Instance(PREFILL, pre, pages, p1[1]),
+                 Instance(DECODE, dec, pages, p1[2]),
+                 Instance(DECODE, dec, pages, p1[3])]
+    else:
+        insts = [Instance(PREFILL, pre, pages, d) for d in p0] + \
+                [Instance(DECODE, dec, pages, d) for d in p1]
+    return Cluster(cost, insts, cfg["max_seq"], "supernode", fleet=True,
+                   fleet_aware=aware)
+
+
+def run_fleet_prefill(aware, cfg=CFG):
+    c = fleet_prefill_cluster(aware, cfg)
+    reqs = gen_requests(FLEET_PREFILL_RATE, cfg["horizon"], cfg["seed"],
+                        cfg["plo"], cfg["phi"], cfg["olo"], cfg["ohi"])
+    c.run(reqs)
+    return c
+
+
 if __name__ == "__main__":
     rates = [10, 20, 30, 40, 50, 60, 70, 80]
     best = {}
@@ -1911,3 +2000,32 @@ if __name__ == "__main__":
     assert lg_ratio > sn_ratio, \
         "legacy fetches lose the bandwidth race: more recompute"
     print("agentic prefix-cache bounds hold")
+
+    # ---- ISSUE 9: cross-supernode disaggregated prefill ----------------
+    n_fleet = len(gen_requests(FLEET_PREFILL_RATE, CFG["horizon"],
+                               CFG["seed"], CFG["plo"], CFG["phi"],
+                               CFG["olo"], CFG["ohi"]))
+    print(f"\n=== fleet disaggregated prefill: dual supernode, "
+          f"{n_fleet} requests at rate {FLEET_PREFILL_RATE:.0f} ===")
+    fleet_cells = {}
+    for aware in [True, False]:
+        c = run_fleet_prefill(aware)
+        op = operating_point(c, FLEET_PREFILL_RATE, *CFG["slo"])
+        fleet_cells[aware] = (c, op)
+        label = "aware" if aware else "naive"
+        print(f"  {label:<6} done {op['completed']:>4} rej {op['rejected']:>3} "
+              f"mig {c.migrations:>4} xfer {c.xfer_time:8.4f}s "
+              f"p99ttft {op['p99_ttft']:7.4f} p99tpot {op['p99_tpot']:8.5f} "
+              f"slo {op['attains']}")
+    ca, oa = fleet_cells[True]
+    cn, on = fleet_cells[False]
+    ratio = cn.xfer_time / max(ca.xfer_time, 1e-12)
+    print(f"\nfleet headline: naive/aware KV transfer seconds = "
+          f"{ratio:.2f}x")
+    assert oa["completed"] > 0 and on["completed"] > 0
+    assert ca.migrations > 0 and cn.migrations > 0
+    assert oa["completed"] + oa["rejected"] == n_fleet
+    assert on["completed"] + on["rejected"] == n_fleet
+    assert ratio >= 2.0, f"fleet xfer ratio {ratio:.2f} < 2.0"
+    assert oa["attains"], "aware fleet cell must hold the serving SLO"
+    print("fleet disaggregated-prefill bounds hold")

@@ -184,6 +184,162 @@ def reconfig_time(fabric, job, old, new, checkpoint_shards, plan=None,
                      union, plan, t)
 
 
+# ---- fleet mirror (supernode/fleet.rs + ISSUE 9 cost paths) ------------
+#
+# Fleet preset pools all share the Geometry{4 racks x 1 board x 8 dies}
+# shape; a device is a (global_rack, die) tuple (pool p rack r sits at
+# global rack p*4+r, exactly Fleet::flatten's layout), so the existing
+# tier_between/FABRICS pricing applies verbatim to same-pool pairs: the
+# supernode fabric's board and rack tiers share one spec, so the
+# (rack, die) "board index" reading of the tuple prices identically to
+# the Rust Board/CrossRack tiers.
+
+INTER_DCN = (50e9, 5e-6, 4)       # Fleet::inter_dcn: bw, hop latency, hops
+POOL_RACKS = 4
+POOL_DIES = 8
+POOL_DEVS = POOL_RACKS * POOL_DIES
+
+SPEED_910C = 350e12
+SPEED_910B = 176e12
+FLEET_SLOW_RACK_DERATE = 0.5
+
+
+def fleet_mixed():
+    """Fleet::mixed_generations: 910C pool 0 + 910B pool 1."""
+    return dict(pools=2, speed=lambda d: SPEED_910C if d[0] < POOL_RACKS
+                else SPEED_910B)
+
+
+def fleet_slow_rack(derate=FLEET_SLOW_RACK_DERATE):
+    """Fleet::slow_rack: one pool, rack 0 derated."""
+    return dict(pools=1, speed=lambda d: SPEED_910C * (derate if d[0] == 0
+                                                       else 1.0))
+
+
+def fleet_pool_of(dev):
+    return dev[0] // POOL_RACKS
+
+
+def fleet_spread(i):
+    """spread_placement over one fleet pool's (4,1,8) topology."""
+    return (i % POOL_RACKS, (i // POOL_RACKS) % POOL_DIES)
+
+
+def fleet_speeds(fleet, group):
+    """Fleet::speeds: cube FLOPs over the group max (uniform -> 1.0)."""
+    mx = max(fleet["speed"](d) for d in group)
+    return [fleet["speed"](d) / mx for d in group]
+
+
+def _schedule_weighted(speeds, microbatches=None):
+    """schedule_dynamic_weighted: the schedule_dynamic_makespan list
+    scheduler with per-group speeds; returns (makespan, intervals) with
+    intervals = [(task, group, start, finish)] for the replay."""
+    if microbatches is None:
+        microbatches = COSCHED_MICROBATCHES
+    nm = len(MODULES)
+    total = microbatches * nm
+    done = [None] * total
+
+    def idx(mb, mi):
+        return mb * nm + mi
+
+    n_groups = len(speeds)
+    group_free = [0.0] * n_groups
+    scheduled = 0
+    intervals = []
+    while scheduled < total:
+        ready = []
+        for mb in range(microbatches):
+            for mi, (_, inputs) in enumerate(MODULES):
+                if done[idx(mb, mi)] is not None:
+                    continue
+                if all(done[idx(mb, i)] is not None for i in inputs):
+                    ready.append((mb, mi))
+        assert ready, "deadlock in weighted schedule"
+        ready.sort(key=lambda x: (-MODULES[x[1]][0], x[0], x[1]))
+        for mb, mi in ready:
+            t, inputs = MODULES[mi]
+            dep_ready = 0.0
+            for i in inputs:
+                dep_ready = max(dep_ready, done[idx(mb, i)])
+            g = min(range(n_groups), key=lambda k: group_free[k])
+            start = max(group_free[g], dep_ready)
+            finish = start + t / speeds[g]
+            group_free[g] = finish
+            done[idx(mb, mi)] = finish
+            intervals.append((idx(mb, mi), g, start, finish))
+            scheduled += 1
+    return max(group_free), intervals
+
+
+def schedule_weighted_makespan(speeds, microbatches=None):
+    return _schedule_weighted(speeds, microbatches)[0]
+
+
+def schedule_replay_makespan(speeds, microbatches=None):
+    """schedule_uniform_replay: plan at uniform speed, replay the fixed
+    placement at the real speeds (the naive-uniform baseline)."""
+    n = len(speeds)
+    _, plan = _schedule_weighted([1.0] * n, microbatches)
+    nm = len(MODULES)
+    order = sorted(plan, key=lambda iv: (iv[2], iv[0]))
+    group_free = [0.0] * n
+    finish_of = [0.0] * len(plan)
+    for task, g, _s, _f in order:
+        mb, mi = divmod(task, nm)
+        t, inputs = MODULES[mi]
+        dep_ready = 0.0
+        for i in inputs:
+            dep_ready = max(dep_ready, finish_of[mb * nm + i])
+        start = max(group_free[g], dep_ready)
+        finish = start + t / speeds[g]
+        group_free[g] = finish
+        finish_of[task] = finish
+    return max(group_free)
+
+
+def coll_cost_fleet(fleet, kind, b, group, plan=None, t=None):
+    """collectives::cost_fleet: single-pool groups delegate to the pool
+    cost (bit-identical to coll_cost); spanning groups run the intra
+    phase per pool (slowest pool bounds it) plus a ring/tree inter
+    phase over one leader per pool on the DCN link."""
+    if len(group) <= 1:
+        return 0.0
+    pools = {}
+    for d in group:
+        pools.setdefault(fleet_pool_of(d), []).append(d)
+    if len(pools) == 1:
+        return coll_cost("supernode", kind, b, group, plan, t)
+    intra = max(coll_cost("supernode", kind, b, sub, plan, t)
+                for sub in pools.values())
+    bw, lat, hops = INTER_DCN
+    if plan is not None and t is not None:
+        bs, ls = fault_scale_at(plan, "inter_node", t)
+        bw *= bs
+        lat *= ls
+    leaders = len(pools)
+    ring = _ring(kind, b, leaders, bw, lat, hops)
+    tree = _tree(kind, b, leaders, bw, lat, hops)
+    return intra + min(ring, tree)
+
+
+def reconfig_time_fleet(fleet, job, old, new, checkpoint_shards, plan=None,
+                        t=None):
+    """ElasticTrainJob::reconfig_time_fleet: the state all-to-all priced
+    over the fleet-global union group."""
+    src = checkpoint_shards if not old else len(old)
+    dst = 1 if not new else len(new)
+    if src == 0 or src == dst:
+        return 0.0
+    union = list(old)
+    for d in new:
+        if d not in union:
+            union.append(d)
+    return coll_cost_fleet(fleet, "all_to_all", job["state"] / max(src, 1),
+                           union, plan, t)
+
+
 # ---- the device-lease broker -------------------------------------------
 
 class Broker:
@@ -198,8 +354,21 @@ class Broker:
         self.demand = False
         # devices revoked by a DeviceFail: out of the pool for good
         self.failed = []
+        # serving leases only pool-0 devices when set (mirror of
+        # LeaseBroker::serving_limit on a multi-pool fleet; the default
+        # False leaves lease exactly popleft)
+        self.pool0_only = False
 
     def lease(self):
+        if self.pool0_only:
+            for i, d in enumerate(self.free):
+                if fleet_pool_of(d) == 0:
+                    self.granted += 1
+                    del self.free[i]
+                    return d
+            self.misses += 1
+            self.demand = True
+            return None
         if self.free:
             self.granted += 1
             return self.free.popleft()
@@ -219,6 +388,18 @@ class Broker:
         n = min(n, len(self.free))
         return [self.free.popleft() for _ in range(n)]
 
+    def take_matching(self, picks):
+        """LeaseBroker::take_matching: remove and return the free
+        devices in `picks`, preserving queue order."""
+        if not picks:
+            return []
+        taken = []
+        kept = deque()
+        for d in self.free:
+            (taken if d in picks else kept).append(d)
+        self.free = kept
+        return taken
+
 
 # ---- the elastic training tenant ---------------------------------------
 
@@ -226,12 +407,20 @@ IDLE, STEPPING, RESHARDING, FINISHED = "idle", "step", "reshard", "fin"
 
 
 class Trainer:
-    def __init__(self, fabric, job, min_devices, grow_cooldown, train_until):
+    def __init__(self, fabric, job, min_devices, grow_cooldown, train_until,
+                 fleet=None, aware=True):
         self.fabric = fabric
         self.job = job
         self.min_devices = min_devices
         self.grow_cooldown = grow_cooldown
         self.train_until = train_until
+        # fleet=None keeps every price on the bare fabric (pre-fleet
+        # behavior); a fleet lifts step/sync/restore/reshard pricing to
+        # fleet-global groups, aware picking the compute-proportional
+        # plan vs the naive-uniform replay
+        self.fleet = fleet
+        self.aware = aware
+        self.wcache = {}
         self.devices = []
         self.last_shards = 0
         self.phase = IDLE
@@ -266,7 +455,25 @@ class Trainer:
             return self.phase_end
         return None
 
+    def fleet_compute(self, speeds):
+        """TrainerSim::fleet_compute: weighted (aware) or replayed
+        (naive) makespan, cached by the speed vector."""
+        key = tuple(speeds)
+        if key not in self.wcache:
+            fn = (schedule_weighted_makespan if self.aware
+                  else schedule_replay_makespan)
+            self.wcache[key] = fn(speeds)
+        return self.wcache[key]
+
+    def sync_time_fleet(self, group, now):
+        return coll_cost_fleet(self.fleet, "all_reduce", self.job["grad"],
+                               group, self.plan, now)
+
     def step_time(self, now):
+        if self.fleet is not None:
+            speeds = fleet_speeds(self.fleet, self.devices)
+            return self.fleet_compute(speeds) + \
+                self.sync_time_fleet(self.devices, now)
         d = len(self.devices)
         if d not in self.cache:
             self.cache[d] = schedule_dynamic_makespan(d)
@@ -305,8 +512,13 @@ class Trainer:
         with it — and it pays the (possibly degraded) fabric."""
         group = list(self.devices)
         src = max(self.last_shards, 1)
-        rt = coll_cost(self.fabric, "all_to_all", self.job["state"] / src,
-                       group, self.plan, now)
+        if self.fleet is not None:
+            rt = coll_cost_fleet(self.fleet, "all_to_all",
+                                 self.job["state"] / src, group,
+                                 self.plan, now)
+        else:
+            rt = coll_cost(self.fabric, "all_to_all",
+                           self.job["state"] / src, group, self.plan, now)
         self.restores += 1
         self.restore_sec += rt
         self.peak = max(self.peak, len(self.devices))
@@ -319,8 +531,12 @@ class Trainer:
 
     def begin_reconfig(self, now, nxt, leaving):
         old = list(self.devices)
-        rt = reconfig_time(self.fabric, self.job, old, nxt, self.last_shards,
-                           self.plan, now)
+        if self.fleet is not None:
+            rt = reconfig_time_fleet(self.fleet, self.job, old, nxt,
+                                     self.last_shards, self.plan, now)
+        else:
+            rt = reconfig_time(self.fabric, self.job, old, nxt,
+                               self.last_shards, self.plan, now)
         union = list(old)
         for d in nxt:
             if d not in union:
@@ -373,6 +589,13 @@ def mediate(now, broker, trainer):
             break
         if trainer.pending > 0 and trainer.devices:
             k = min(trainer.pending, len(trainer.devices))
+            if trainer.fleet is not None and trainer.fleet["pools"] > 1:
+                # hand serving-eligible (pool-0) devices back first: a
+                # cross-supernode device returned to the broker cannot
+                # serve the lease this preemption is for
+                trainer.devices = \
+                    [d for d in trainer.devices if fleet_pool_of(d) != 0] + \
+                    [d for d in trainer.devices if fleet_pool_of(d) == 0]
             nxt = list(trainer.devices[:len(trainer.devices) - k])
             leaving = list(trainer.devices[len(trainer.devices) - k:])
             trainer.pending = 0
@@ -391,11 +614,16 @@ def mediate(now, broker, trainer):
         harvest = broker.harvestable()
         cooled = now - trainer.last_grow >= trainer.grow_cooldown
         if harvest > 0 and cooled and len(trainer.devices) + harvest >= min_run:
-            taken = broker.take(harvest)
-            nxt = list(trainer.devices) + taken
-            trainer.last_grow = now
-            trainer.begin_reconfig(now, nxt, [])
-            continue
+            taken = harvest_take(now, broker, trainer)
+            if taken:
+                nxt = list(trainer.devices) + taken
+                trainer.last_grow = now
+                trainer.begin_reconfig(now, nxt, [])
+                continue
+            # every candidate was cross-pool and the inter-node reshard
+            # doesn't pay: leave them free and step on the current lease
+            # (taken is only empty when the held lease already meets
+            # min_devices, so this cannot loop)
         if len(trainer.devices) >= min_run:
             st = trainer.step_time(now)
             if trainer.last_fail is not None:
@@ -411,6 +639,62 @@ def mediate(now, broker, trainer):
             trainer.begin_reconfig(now, [], leaving)
             continue
         break
+
+
+def harvest_take(now, broker, trainer):
+    """Mirror of coschedule::harvest_take: homogeneous setups (no
+    fleet, one pool, or the naive baseline) grab everything beyond the
+    reserve; a heterogeneity-aware trainer on a multi-pool fleet takes
+    its home pool unconditionally but crosses supernodes only when the
+    step-time win over the remaining horizon pays for the extra
+    inter-node reshard — or when it cannot reach min_devices at home."""
+    harvest = broker.harvestable()
+    crossing = (trainer.fleet is not None and trainer.fleet["pools"] > 1
+                and trainer.aware)
+    if not crossing:
+        return broker.take(harvest)
+    fleet = trainer.fleet
+    if trainer.devices:
+        home = fleet_pool_of(trainer.devices[0])
+    else:
+        counts = [0] * fleet["pools"]
+        for d in broker.free:
+            counts[fleet_pool_of(d)] += 1
+        home = max(range(len(counts)), key=lambda i: counts[i])
+    home_ids, cross_ids = [], []
+    for d in broker.free:
+        if fleet_pool_of(d) == home:
+            if len(home_ids) < harvest:
+                home_ids.append(d)
+        else:
+            cross_ids.append(d)
+    cross_ids = cross_ids[:harvest - len(home_ids)]
+    min_run = max(trainer.min_devices, 1)
+    if not cross_ids:
+        take_cross = False
+    elif len(trainer.devices) + len(home_ids) < min_run:
+        take_cross = True    # cannot run at all without crossing
+    else:
+        group_home = list(trainer.devices) + home_ids
+        group_all = group_home + cross_ids
+        st_home = trainer.fleet_compute(fleet_speeds(fleet, group_home)) + \
+            trainer.sync_time_fleet(group_home, now)
+        st_all = trainer.fleet_compute(fleet_speeds(fleet, group_all)) + \
+            trainer.sync_time_fleet(group_all, now)
+        r_home = reconfig_time_fleet(fleet, trainer.job, trainer.devices,
+                                     group_home, trainer.last_shards,
+                                     trainer.plan, now)
+        r_all = reconfig_time_fleet(fleet, trainer.job, trainer.devices,
+                                    group_all, trainer.last_shards,
+                                    trainer.plan, now)
+        remaining = max(trainer.train_until - now, 0.0)
+        # per-step win integrated over the horizon vs the extra
+        # inter-node reshard bill
+        take_cross = remaining * (1.0 - st_all / st_home) > r_all - r_home
+    picks = set(home_ids)
+    if take_cross:
+        picks.update(cross_ids)
+    return broker.take_matching(picks)
 
 
 # ---- device failures (mirror of coschedule.rs device-fail path) -------
@@ -492,6 +776,46 @@ def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG, faults=None, retry=None,
                       TRAIN_GROW_COOLDOWN if elastic else 0.0,
                       cfg["horizon"])
     trainer.plan = faults
+    return _drive(cluster, trainer, broker, faults, COSCHED_POOL)
+
+
+def run_fleet_cosched(which, aware, cfg=AUTOSCALE_CFG, faults=None,
+                      retry=None, failures=()):
+    """Mirror of fleet_cosched_scenario + run_cosched: serving (the
+    elastic colocated cell) lives in pool 0 of the fleet; the broker
+    pool is the rest of pool 0 plus every other pool's devices in
+    fleet-global id order, and the trainer prices its lease on the
+    heterogeneous fleet (aware vs naive-uniform)."""
+    fleet = fleet_mixed() if which == "mixed" else fleet_slow_rack()
+    cost = Cost(cfg["kvb"], cfg["tpp"], cfg["weight"], cfg["hbm_tokens"])
+    pages = cost.hbm_pages()
+    insts = [Instance(COLOCATED, cfg["slots"], pages, fleet_spread(i))
+             for i in range(cfg["init_i"])]
+    autoscale = dict(policy=cfg["policy"],
+                     eval_interval=cfg["eval_interval"],
+                     min=cfg["min_i"], max=cfg["max_i"],
+                     slots=cfg["slots"], up_cooldown=cfg["up_cooldown"],
+                     down_cooldown=cfg["down_cooldown"],
+                     lookback=cfg["lookback"], pool=[])
+    cluster = Cluster(cost, insts, cfg["max_seq"], "supernode",
+                      autoscale=autoscale, failures=failures, faults=faults,
+                      retry=retry)
+    cluster.bind(autoscale_requests(cfg))
+    pool = [fleet_spread(i) for i in range(cfg["init_i"], POOL_DEVS)]
+    for p in range(1, fleet["pools"]):
+        pool.extend((p * POOL_RACKS + r, d) for r in range(POOL_RACKS)
+                    for d in range(POOL_DIES))
+    broker = Broker(pool, COSCHED_RESERVE)
+    broker.pool0_only = fleet["pools"] > 1
+    trainer = Trainer("supernode", TRAIN_JOB, TRAIN_MIN_DEVICES,
+                      TRAIN_GROW_COOLDOWN, cfg["horizon"],
+                      fleet=fleet, aware=aware)
+    trainer.plan = faults
+    n_total = POOL_DEVS * fleet["pools"]
+    return _drive(cluster, trainer, broker, faults, n_total)
+
+
+def _drive(cluster, trainer, broker, faults, n_total):
     fails = sorted((faults or {}).get("fails", ()))
     fli = 0
     now = 0.0
@@ -526,7 +850,7 @@ def run_cosched(fabric, elastic, cfg=AUTOSCALE_CFG, faults=None, retry=None,
             if i.state in (SERVING, WARMING, DRAINING)]
     crashed = [i.device for i in cluster.insts if i.state == CRASHED]
     accounted = list(broker.free) + held + crashed + list(broker.failed)
-    assert len(accounted) == len(set(accounted)) == COSCHED_POOL, \
+    assert len(accounted) == len(set(accounted)) == n_total, \
         f"lease conservation violated: {len(accounted)} accounted"
 
     # no device serves and trains at once: overlay both tenants'
@@ -571,11 +895,21 @@ def random_plan(seed, horizon):
     """Seeded chaos schedule — mirror of faults::chaos::random_plan
     (identical Rng draw order, so the Rust suite sees the same plans):
     1-3 link windows, 0-2 training-device fails, 0-1 serving crashes."""
+    return _random_plan(seed, horizon, ["board", "rack", "cross_rack"])
+
+
+def random_fleet_plan(seed, horizon):
+    """Mirror of faults::chaos::random_fleet_plan: same draw order,
+    one more face on the tier die — the inter-supernode link."""
+    return _random_plan(seed, horizon,
+                        ["board", "rack", "cross_rack", "inter_node"])
+
+
+def _random_plan(seed, horizon, tiers):
     rng = Rng(seed)
-    tiers = ["board", "rack", "cross_rack"]
     links = []
     for _ in range(1 + rng.below(3)):
-        tier = tiers[rng.below(3)]
+        tier = tiers[rng.below(len(tiers))]
         start = rng.next_f64() * 0.6 * horizon
         dur = (0.05 + 0.25 * rng.next_f64()) * horizon
         bw_scale = 0.02 + 0.18 * rng.next_f64()
@@ -688,3 +1022,70 @@ if __name__ == "__main__":
               f"steps {tr_c.steps_dl:>3} lost {tr_c.steps_lost} "
               f"retries {cl_c.retries_scheduled:>2} hedged {cl_c.hedged:>2}")
     print("fault-injection and chaos bounds hold")
+
+    # ---- ISSUE 9: hyper-heterogeneous fleet scenarios -------------------
+    # uniform-speed degenerates first: the weighted planner and the
+    # replay both collapse to the plain dynamic schedule, bit for bit
+    for d in [2, 8, 16]:
+        ms = schedule_dynamic_makespan(d)
+        assert schedule_weighted_makespan([1.0] * d) == ms
+        assert schedule_replay_makespan([1.0] * d) == ms
+
+    print("\n=== fleet scenarios (seed 42): heterogeneity-aware vs "
+          "naive-uniform ===")
+    fleet_res = {}
+    for which in ["mixed", "slow_rack"]:
+        for aware in [True, False]:
+            cl, tr, br = run_fleet_cosched(which, aware)
+            op = operating_point(cl, cfg["mean_rate"], *cfg["slo"])
+            fleet_res[(which, aware)] = (op, tr, br)
+            label = f"{which} {'aware' if aware else 'naive'}"
+            print(f"  {label:<16} done {op['completed']:>4} "
+                  f"rej {op['rejected']:>3} p99ttft {op['p99_ttft']:7.4f} "
+                  f"slo {op['attains']!s:<5} | steps {tr.steps_dl:>4} "
+                  f"reshards {tr.reshards:>3} ({tr.reshard_sec:6.2f}s) "
+                  f"peak-dev {tr.peak:>2} misses {br.misses}")
+
+    mx_a, mx_n = fleet_res[("mixed", True)], fleet_res[("mixed", False)]
+    sr_a, sr_n = fleet_res[("slow_rack", True)], fleet_res[("slow_rack", False)]
+    gain_mx = mx_a[1].steps_dl / mx_n[1].steps_dl
+    gain_sr = sr_a[1].steps_dl / sr_n[1].steps_dl
+    print(f"\nfleet headline: mixed-generations aware/naive steps = "
+          f"{gain_mx:.2f}x, slow-rack = {gain_sr:.2f}x")
+    # serving lives in pool 0 either way: the SLO must hold in every cell
+    for (which, aware), (op, tr, br) in fleet_res.items():
+        assert op["attains"], f"{which}/{aware}: serving must hold the SLO"
+        assert op["rejected"] == 0, f"{which}/{aware}: serving shed load"
+        assert tr.steps_dl > 0
+    assert gain_mx >= 1.15, f"mixed-generations gain {gain_mx:.3f} < 1.15"
+    assert gain_sr >= 1.10, f"slow-rack gain {gain_sr:.3f} < 1.10"
+    # the aware trainer crosses only when the reshard pays: its
+    # inter-node reshard bill stays at or below the blind harvester's
+    assert mx_a[1].reshard_sec <= mx_n[1].reshard_sec + 1e-9, \
+        f"aware reshard {mx_a[1].reshard_sec:.2f}s > naive {mx_n[1].reshard_sec:.2f}s"
+    print("fleet scenario bounds hold")
+
+    # ---- ISSUE 9: chaos grid gains a heterogeneous-pool dimension ------
+    print(f"\n=== fleet chaos suite (8 schedules x mixed fleet, "
+          f"{n_chaos} requests / 12s each) ===")
+    saw_inter = False
+    for seed in range(16):
+        plan, crashes = random_fleet_plan(seed, chaos_cfg["horizon"])
+        saw_inter = saw_inter or any(l[0] == "inter_node"
+                                     for l in plan["links"])
+        if seed >= 8:
+            continue
+        cl_c, tr_c, br_c = run_fleet_cosched("mixed", True, chaos_cfg,
+                                             faults=plan, retry=RETRY,
+                                             failures=crashes)
+        opc = operating_point(cl_c, chaos_cfg["mean_rate"],
+                              *chaos_cfg["slo"])
+        assert opc["completed"] + opc["rejected"] == n_chaos, \
+            f"fleet seed {seed}: requests lost"
+        assert tr_c.steps_lost <= tr_c.device_fails, f"fleet seed {seed}"
+        print(f"  seed {seed:>2}: links {len(plan['links'])} "
+              f"fails {len(plan['fails'])} crashes {len(crashes)} | "
+              f"done {opc['completed']:>4} rej {opc['rejected']:>2} "
+              f"steps {tr_c.steps_dl:>3} lost {tr_c.steps_lost}")
+    assert saw_inter, "no seed in 0..16 drew an inter_node window"
+    print("fleet chaos bounds hold (and the inter_node face landed)")
