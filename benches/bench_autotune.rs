@@ -1,0 +1,144 @@
+//! Auto-tuner bench (ISSUE 10) — wall-clock cost of the generate →
+//! prune → simulate → refine loop, plus the deterministic acceptance
+//! ratios CI gates on.
+//!
+//! Two result classes go into `BENCH_autotune.json` (`BENCH_JSON=`):
+//! `"benches"` (wall-clock timings, archived, not gated) and
+//! `"metrics"` — virtual-time ratios of the tuned strategy against the
+//! hand-written presets on the checked-in seed-42 scenarios:
+//!
+//!   - planner: best *predicted* cost over the Matrix384 MoE lattice
+//!     vs `plan()`'s best step time (identical lattice + cost model,
+//!     so the ratio is exactly 1.0);
+//!   - cosched pool: tuned lease vs the full 32-device broker lease on
+//!     the homogeneous pool (nothing can beat the full lease → 1.0);
+//!   - mixed-generation / slow-rack fleets: tuned lease vs the best
+//!     hand preset (the preset group is in the tuner's seed ladder and
+//!     lowers to the identical device group, so the ratio is <= 1.0).
+//!
+//! Every ratio is guaranteed by construction — prune_ratio >= 1.0
+//! keeps the best-predicted candidate alive, and the budget truncation
+//! keeps the lowest-predicted prefix — so the `autotune.*` gates in
+//! `BENCH_baseline.json` pin them with zero tolerance. The same bounds
+//! are asserted (more tightly) by `rust/tests/autotune_scenarios.rs`.
+
+use hyperparallel::config::ModelDesc;
+use hyperparallel::hypermpmd::{cosched_train_job, COSCHED_POOL_DEVICES, FLEET_SLOW_RACK_DERATE};
+use hyperparallel::hypershard::{
+    autotune, plan, AutoTuneConfig, ElasticObjective, PlannerConfig, PlannerObjective,
+};
+use hyperparallel::supernode::{DeviceSpec, Fabric, Fleet, Geometry, Topology};
+use hyperparallel::util::bench::{run, section, smoke, to_json, BenchResult};
+use hyperparallel::util::json::{Json, JsonObj};
+use hyperparallel::util::summary::insert_summary;
+
+/// The co-scheduled training pool as a single-pool fleet (the same
+/// shape `rust/tests/autotune_scenarios.rs` checks).
+fn cosched_pool_fleet() -> Fleet {
+    let topo = Topology::new(
+        Geometry {
+            racks: 4,
+            boards_per_rack: 1,
+            dies_per_board: 8,
+        },
+        Fabric::supernode(),
+        DeviceSpec::ascend_910c(),
+    );
+    assert_eq!(topo.device_count(), COSCHED_POOL_DEVICES);
+    Fleet::single(topo)
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics = JsonObj::new();
+    let cfg = AutoTuneConfig::default();
+    let iters = if smoke() { 1 } else { 3 };
+    let mut all_within_budget = true;
+
+    // --- planner objective: Matrix384 MoE lattice -----------------------
+    section("planner auto-search (matrix384, moe-671b)");
+    // the Table 2 planner setting bench_hypershard uses for this cell
+    let pcfg = PlannerConfig {
+        allow_offload: true,
+        max_tp: 16,
+        ..Default::default()
+    };
+    let pobj = PlannerObjective::new(ModelDesc::deepseek_v3_like(), Topology::matrix384(), pcfg);
+    results.push(run("autotune planner lattice (matrix384 moe)", 1, iters, || {
+        std::hint::black_box(autotune(&pobj, &cfg).ranked.len());
+    }));
+    let preport = autotune(&pobj, &cfg);
+    let plan_best = plan(&pobj.model, &pobj.topo, &pobj.cfg)
+        .iter()
+        .map(|c| c.step_time)
+        .fold(f64::INFINITY, f64::min);
+    let best_pred = preport
+        .ranked
+        .iter()
+        .map(|c| c.predicted)
+        .fold(f64::INFINITY, f64::min);
+    let best = preport.best().expect("planner search found no candidate");
+    println!(
+        "  best '{}' predicted {:.3}s simulated {:.3}s; plan() best {:.3}s; \
+         {} simulated / {} generated",
+        best.label, best.predicted, best.simulated, plan_best, preport.simulated, preport.generated
+    );
+    metrics.insert(
+        "autotune.planner.best_predicted_vs_plan_ratio",
+        Json::from(best_pred / plan_best),
+    );
+    insert_summary(&mut metrics, "autotune.planner", &preport);
+    all_within_budget &= preport.simulated <= preport.budget;
+
+    // --- elastic objective: the three fleet lease scenarios -------------
+    section("elastic lease auto-search (cosched pool + PR 9 fleets)");
+    let cells: Vec<(&str, Fleet)> = vec![
+        ("cosched", cosched_pool_fleet()),
+        ("fleet_mixed", Fleet::mixed_generations()),
+        ("fleet_slow_rack", Fleet::slow_rack(FLEET_SLOW_RACK_DERATE)),
+    ];
+    for (name, fleet) in cells {
+        let job = cosched_train_job();
+        // hand-written preset leases: the full fleet, and (for the
+        // multi-pool fleet) the fast pool alone
+        let full = job.step_time_fleet(&fleet, &fleet.all_devices(), true);
+        let mut preset = full;
+        if fleet.pool_count() > 1 {
+            preset = preset.min(job.step_time_fleet(&fleet, &fleet.pool_devices(0), true));
+        }
+        let obj = ElasticObjective::new(job, fleet, true);
+        results.push(run(&format!("autotune elastic lease ({name})"), 1, iters, || {
+            std::hint::black_box(autotune(&obj, &cfg).ranked.len());
+        }));
+        let report = autotune(&obj, &cfg);
+        let best = report.best().expect("elastic search found no candidate");
+        println!(
+            "  {name:<16} best '{}' {:.4}s vs preset {:.4}s ({} simulated)",
+            best.label, best.simulated, preset, report.simulated
+        );
+        let key = if name == "cosched" {
+            "autotune.cosched.best_vs_full_lease_ratio".to_string()
+        } else {
+            format!("autotune.{name}.best_vs_preset_ratio")
+        };
+        metrics.insert(key, Json::from(best.simulated / preset));
+        insert_summary(&mut metrics, &format!("autotune.{name}"), &report);
+        all_within_budget &= report.simulated <= report.budget;
+    }
+
+    let within = if all_within_budget { 1.0 } else { 0.0 };
+    metrics.insert("autotune.budget_respected", Json::from(within));
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = JsonObj::new();
+        root.insert("benches", to_json(&results));
+        root.insert("metrics", Json::Obj(metrics));
+        match std::fs::write(&path, Json::Obj(root).pretty()) {
+            Ok(()) => println!("\nbench json written to {path}"),
+            Err(e) => {
+                eprintln!("\nbench json write to {path} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

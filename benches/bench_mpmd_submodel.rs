@@ -7,6 +7,7 @@
 use hyperparallel::hypermpmd::{
     microbatch_sweep, schedule_dynamic, schedule_static, OmniModalWorkload, SubModule,
 };
+use hyperparallel::sim::SweepSpec;
 use hyperparallel::trainer::{gpipe_sweep, one_f_one_b_bubble};
 use hyperparallel::util::bench::{run, section};
 use hyperparallel::util::stats::{fmt_secs, render_table};
@@ -50,7 +51,7 @@ fn main() {
         "{:>12} {:>14} {:>14} {:>8}",
         "imbalance", "static bubbles", "dyn bubbles", "gain"
     );
-    for spread in [0.0, 0.2, 0.4, 0.6, 0.8] {
+    let spreads = SweepSpec::over("imbalance", vec![0.0, 0.2, 0.4, 0.6, 0.8]).run(|&spread| {
         let base = 60e-3;
         let w = OmniModalWorkload {
             modules: vec![
@@ -62,10 +63,13 @@ fn main() {
             ],
             microbatches: 16,
         };
-        let s = schedule_static(&w);
-        let d = schedule_dynamic(&w, 5);
+        (schedule_static(&w), schedule_dynamic(&w, 5))
+    });
+    for row in spreads {
+        let (s, d) = row.value;
         println!(
-            "{spread:>12.1} {:>13.1}% {:>13.1}% {:>7.1}%",
+            "{:>12.1} {:>13.1}% {:>13.1}% {:>7.1}%",
+            row.point,
             s.bubble_ratio * 100.0,
             d.bubble_ratio * 100.0,
             (s.makespan / d.makespan - 1.0) * 100.0

@@ -8,6 +8,7 @@
 use hyperparallel::baselines::{offload_policy_comparison, zero_offload_step};
 use hyperparallel::hyperoffload::OffloadPolicy;
 use hyperparallel::memory::TransferEngine;
+use hyperparallel::sim::SweepSpec;
 use hyperparallel::trainer::scenarios::OffloadTrainingScenario;
 use hyperparallel::util::bench::{run, section};
 use hyperparallel::util::stats::{fmt_secs, render_table};
@@ -59,14 +60,15 @@ fn main() {
     }
 
     section("fabric sweep (same schedule, different pool link)");
-    for (name, engine) in [
-        ("pcie-sync  (ZeRO-Offload)", (1, TransferEngine::legacy_pcie())),
-        ("pcie-pipe", (2, TransferEngine::legacy_pcie())),
-        ("ub-sync", (1, TransferEngine::supernode())),
-        ("ub-pipe    (HyperOffload)", (2, TransferEngine::supernode())),
-    ] {
-        let t = s.step_time(engine.0, engine.1);
-        println!("  {name:<28} {}", fmt_secs(t));
+    let cases: Vec<(String, (usize, TransferEngine))> = vec![
+        ("pcie-sync (ZeRO-Offload)".into(), (1, TransferEngine::legacy_pcie())),
+        ("pcie-pipe".into(), (2, TransferEngine::legacy_pcie())),
+        ("ub-sync".into(), (1, TransferEngine::supernode())),
+        ("ub-pipe (HyperOffload)".into(), (2, TransferEngine::supernode())),
+    ];
+    let rows = SweepSpec::with_labels("pool_link", cases).run(|case| s.step_time(case.0, case.1));
+    for row in rows {
+        println!("  {:<38} {}", row.label, fmt_secs(row.value));
     }
 
     section("harness timing (simulation cost itself)");

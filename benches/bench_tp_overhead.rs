@@ -5,6 +5,7 @@
 //! the bottleneck the supernode removes. We regenerate the fraction on
 //! both fabrics and sweep TP degree.
 
+use hyperparallel::sim::SweepSpec;
 use hyperparallel::supernode::Topology;
 use hyperparallel::trainer::scenarios::TpOverheadScenario;
 use hyperparallel::util::bench::section;
@@ -46,14 +47,18 @@ fn main() {
     section("TP-degree sweep (share of step time, both fabrics in parallel)");
     let fabrics = [("legacy", legacy), ("supernode", supernode)];
     println!("{:>6} {:>12} {:>12}", "tp", "legacy", "supernode");
-    for tp in [2, 4, 8, 16, 32] {
+    let rows = SweepSpec::over("tp", vec![2usize, 4, 8, 16, 32]).run(|&tp| {
         let s = TpOverheadScenario {
             tp,
             ..TpOverheadScenario::paper_setting()
         };
-        let fracs = s.fabric_sweep(&fabrics);
+        s.fabric_sweep(&fabrics)
+    });
+    for row in rows {
+        let fracs = row.value;
         println!(
-            "{tp:>6} {:>11.1}% {:>11.1}%",
+            "{:>6} {:>11.1}% {:>11.1}%",
+            row.point,
             fracs[0].1 * 100.0,
             fracs[1].1 * 100.0
         );

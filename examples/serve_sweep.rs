@@ -11,7 +11,7 @@
 //!      `cargo run --release --example serve_sweep -- --fleets 1,2,4 --offload 0,0.1,0.2`
 
 use hyperparallel::serving::{max_qps_under_slo, rate_sweep, smoke_scenario, smoke_slo};
-use hyperparallel::sim::parallel_map;
+use hyperparallel::sim::SweepSpec;
 use hyperparallel::util::args::Args;
 use hyperparallel::util::stats::{fmt_secs, render_table};
 
@@ -47,16 +47,22 @@ fn main() {
 
     // One grid cell = one (fleet, frac) sweep over the rate axis; the
     // rate sweep itself already fans out via sim::sweep, so the outer
-    // grid runs sequentially over parallel inner sweeps.
-    let grid: Vec<(usize, f64)> = fleets
+    // grid runs parallel cells over parallel inner sweeps.
+    let cells: Vec<(String, (usize, f64))> = fleets
         .iter()
-        .flat_map(|&fleet| fracs.iter().map(move |&frac| (fleet, frac)))
+        .flat_map(|&fleet| {
+            fracs
+                .iter()
+                .map(move |&frac| (format!("fleet{fleet}/offload{frac}"), (fleet, frac)))
+        })
         .collect();
-    let sweeps = parallel_map(&grid, |&(fleet, frac)| {
+    let sweeps = SweepSpec::with_labels("cell", cells).run(|&(fleet, frac)| {
         rate_sweep(&smoke_scenario(rates[0], frac, fleet), &rates, &slo)
     });
 
-    for ((fleet, frac), points) in grid.iter().zip(&sweeps) {
+    for row in &sweeps {
+        let (fleet, frac) = row.point;
+        let points = &row.value;
         println!("--- fleet={fleet} offload_frac={frac} ---");
         let rows: Vec<Vec<String>> = points
             .iter()
@@ -100,9 +106,10 @@ fn main() {
     if fracs.len() >= 2 {
         let fleet = *fleets.last().unwrap();
         let find = |frac: f64| {
-            grid.iter()
-                .position(|&(f, fr)| f == fleet && fr == frac)
-                .and_then(|i| max_qps_under_slo(&sweeps[i]))
+            sweeps
+                .iter()
+                .find(|r| r.point == (fleet, frac))
+                .and_then(|r| max_qps_under_slo(&r.value))
         };
         let base = find(fracs[0]);
         let best = fracs[1..]

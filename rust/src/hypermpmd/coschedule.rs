@@ -60,7 +60,7 @@ use crate::serving::{
     batcher::CostModel, AUTOSCALE_INITIAL_INSTANCES, AUTOSCALE_MEAN_RATE, AUTOSCALE_PERIOD,
     AUTOSCALE_SLOTS,
 };
-use crate::sim::{parallel_map, tags, ResourceId, Trace, TraceCollector, TraceMode};
+use crate::sim::{tags, ResourceId, Trace, TraceCollector, TraceMode};
 use crate::supernode::{DeviceId, Fleet, Topology};
 use crate::trainer::elastic::ElasticTrainJob;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -605,6 +605,15 @@ impl TrainTenantReport {
             push("restore_seconds", self.restore_seconds),
             push("mttr_seconds", self.mttr_seconds),
         ]
+    }
+}
+
+/// Route the inherent rows through the shared bench-emission trait
+/// (the inherent method stays for direct callers; inherent methods
+/// take precedence, so this delegation does not recurse).
+impl crate::util::summary::SummaryKv for TrainTenantReport {
+    fn summary_kv(&self) -> Vec<(String, f64)> {
+        TrainTenantReport::summary_kv(self)
     }
 }
 
@@ -1304,13 +1313,14 @@ pub fn assert_tenant_isolation(rep: &CoschedReport) {
 /// Sweep offered serving load over the co-scheduled scenario, fanned
 /// across `sim::sweep` workers. Returns `(serving operating point,
 /// training steps by deadline)` per rate, in input order and
-/// bit-identical to a sequential loop.
+/// bit-identical to a sequential loop. Thin wrapper over the `rate`
+/// [`SweepSpec`](crate::sim::SweepSpec) axis.
 pub fn cosched_rate_sweep(
     base: &CoschedConfig,
     rates: &[f64],
     slo: &Slo,
 ) -> Vec<(OperatingPoint, u64)> {
-    parallel_map(rates, |&rate| {
+    crate::sim::SweepSpec::over("rate", rates.to_vec()).values(|&rate| {
         let mut sc = base.clone();
         sc.workload.arrival = sc.workload.arrival.with_mean_rate(rate);
         let rep = run_cosched(&sc);

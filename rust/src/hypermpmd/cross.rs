@@ -265,7 +265,8 @@ pub fn schedule_single_controller(
 /// schedules are independent). Returns `(gang, single_controller)`
 /// reports in seed order — identical to the sequential loop. Validates
 /// the device/width arguments once up front (same errors as the two
-/// schedulers).
+/// schedulers), then delegates to the `seed`
+/// [`SweepSpec`](crate::sim::SweepSpec) axis.
 pub fn seed_sweep(
     w: &RlWorkload,
     seeds: &[u64],
@@ -284,14 +285,16 @@ pub fn seed_sweep(
     if update_width == 0 {
         return Err("seed_sweep: update_width must be >= 1".into());
     }
-    Ok(crate::sim::sweep::parallel_map(seeds, |&seed| {
-        let tasks = w.generate(seed);
-        (
-            schedule_gang(&tasks, devices).expect("arguments validated above"),
-            schedule_single_controller(&tasks, devices, update_width)
-                .expect("arguments validated above"),
-        )
-    }))
+    Ok(
+        crate::sim::SweepSpec::over("seed", seeds.to_vec()).values(|&seed| {
+            let tasks = w.generate(seed);
+            (
+                schedule_gang(&tasks, devices).expect("arguments validated above"),
+                schedule_single_controller(&tasks, devices, update_width)
+                    .expect("arguments validated above"),
+            )
+        }),
+    )
 }
 
 #[cfg(test)]

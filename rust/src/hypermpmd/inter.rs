@@ -277,14 +277,28 @@ pub fn schedule_uniform_replay(w: &OmniModalWorkload, speeds: &[f64]) -> Schedul
     }
 }
 
+/// Schedule selection for a lowered strategy term (ISSUE 10): MPMD
+/// terms take the dynamic list scheduler (Fig 4b), plain terms replay
+/// the static module order (which ignores `groups` — one stream per
+/// module).
+pub fn schedule_for(w: &OmniModalWorkload, groups: usize, dynamic: bool) -> ScheduleReport {
+    if dynamic {
+        schedule_dynamic(w, groups)
+    } else {
+        schedule_static(w)
+    }
+}
+
 /// Sweep microbatch counts for one workload shape, static vs dynamic,
 /// fanned across `sim::sweep` workers. Returns
 /// `(microbatches, static_report, dynamic_report)` in input order.
+/// Thin wrapper over the `microbatches`
+/// [`SweepSpec`](crate::sim::SweepSpec) axis.
 pub fn microbatch_sweep(
     shape: impl Fn(usize) -> OmniModalWorkload + Sync,
     microbatch_counts: &[usize],
 ) -> Vec<(usize, ScheduleReport, ScheduleReport)> {
-    crate::sim::sweep::parallel_map(microbatch_counts, |&mb| {
+    crate::sim::SweepSpec::over("microbatches", microbatch_counts.to_vec()).values(|&mb| {
         let w = shape(mb);
         let stat = schedule_static(&w);
         let dyn_ = schedule_dynamic(&w, w.modules.len());

@@ -163,29 +163,31 @@ pub fn hypermpmd_masking(load: MoeLayerLoad, layers: usize, chunks: usize) -> Ma
     schedule_moe_stack(load, layers, chunks.max(8), true)
 }
 
-/// Sweep chunk granularities in parallel (`sim::sweep`); one schedule
-/// per chunk count, reports in input order.
+/// Sweep chunk granularities in parallel; one schedule per chunk
+/// count, reports in input order. Thin wrapper over the typed
+/// [`SweepSpec`](crate::sim::SweepSpec) grid (`chunks` axis).
 pub fn chunk_sweep(
     load: MoeLayerLoad,
     layers: usize,
     chunk_counts: &[usize],
     co_issue_vector: bool,
 ) -> Vec<MaskingReport> {
-    crate::sim::sweep::parallel_map(chunk_counts, |&chunks| {
-        schedule_moe_stack(load, layers, chunks, co_issue_vector)
-    })
+    crate::sim::SweepSpec::over("chunks", chunk_counts.to_vec())
+        .values(|&chunks| schedule_moe_stack(load, layers, chunks, co_issue_vector))
 }
 
 /// Sweep comm:compute ratios in parallel: for each `frac`, dispatch and
 /// combine comm are `base_comm * frac` seconds. Returns
-/// `(frac, baseline_report, hypermpmd_report)` in input order.
+/// `(frac, baseline_report, hypermpmd_report)` in input order. Thin
+/// wrapper over the `comm_frac` [`SweepSpec`](crate::sim::SweepSpec)
+/// axis.
 pub fn comm_ratio_sweep(
     base: MoeLayerLoad,
     base_comm: f64,
     layers: usize,
     fracs: &[f64],
 ) -> Vec<(f64, MaskingReport, MaskingReport)> {
-    crate::sim::sweep::parallel_map(fracs, |&frac| {
+    crate::sim::SweepSpec::over("comm_frac", fracs.to_vec()).values(|&frac| {
         let l = MoeLayerLoad {
             dispatch_comm: base_comm * frac,
             combine_comm: base_comm * frac,

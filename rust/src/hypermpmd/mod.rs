@@ -35,8 +35,8 @@ pub use cross::{
     RlWorkload,
 };
 pub use inter::{
-    microbatch_sweep, schedule_dynamic, schedule_dynamic_weighted, schedule_static,
-    schedule_uniform_replay, OmniModalWorkload, ScheduleReport, SubModule,
+    microbatch_sweep, schedule_dynamic, schedule_dynamic_weighted, schedule_for,
+    schedule_static, schedule_uniform_replay, OmniModalWorkload, ScheduleReport, SubModule,
 };
 pub use intra::{
     baseline_masking, chunk_sweep, comm_ratio_sweep, hypermpmd_masking, schedule_moe_stack,

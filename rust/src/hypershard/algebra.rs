@@ -1,0 +1,595 @@
+//! Composable strategy algebra (ISSUE 10).
+//!
+//! The planner (`hypershard::planner`) *enumerates* strategies; this
+//! module lets callers *write* them: a small expression language over
+//! the paper's Table 1 dimensions, closed under composition, with a
+//! normalizer that lowers every well-formed term to the concrete
+//! artifacts the rest of the framework prices —
+//!
+//! - a [`ParallelStrategy`] (the normal form's dimension sizes),
+//! - a [`RankGrid`] via `planner::try_assign_ranks` (device ranks),
+//! - a [`PipelineSchedule`] for the `Pp` term (GPipe vs 1F1B),
+//! - for fleets, a compute-proportional device *placement* honoring
+//!   `OnPool` constraints (via `heterogeneous::try_proportional_partition`).
+//!
+//! Grammar (see DESIGN.md "Strategy algebra" for the lowering rules):
+//!
+//! ```text
+//! expr ::= Dp(n) | Tp(n) | Pp(n) | Ep(n) | Cp(n)   sized atoms
+//!        | Sp | Fsdp | Mpmd                         flag atoms
+//!        | Seq([expr, ...])                         composition
+//!        | Nest(expr, expr)                         outer(inner) nesting
+//!        | OnPool("name[,name...]", expr)           placement constraint
+//! ```
+//!
+//! Seq and Nest both lower by *dimension product* (sizes multiply per
+//! dimension, flags OR) — the rank-grid layout is fixed by
+//! `try_assign_ranks` (TP innermost), so nesting order affects the
+//! surface syntax and `describe()` only, never the priced plan. This
+//! is deliberate: the algebra's laws (`Seq` is associative with
+//! identity `Seq([])`, `Nest(a, b) ≡ Seq([a, b])` after lowering) are
+//! what make auto-search over terms tractable.
+//!
+//! Malformed terms — zero-sized dims, `usize` overflow, unknown or
+//! conflicting pool names, a strategy that does not cover the cluster
+//! — normalize or lower to `Err(String)`, never a panic
+//! (property-tested in `rust/tests/property_algebra.rs`).
+
+use super::heterogeneous::try_proportional_partition;
+use super::planner::{try_assign_ranks, try_evaluate, PlanCandidate, PlannerConfig, RankGrid};
+use super::strategies::ParallelStrategy;
+use crate::config::ModelDesc;
+use crate::supernode::{DeviceId, Fleet, Topology};
+use crate::trainer::PipelineSchedule;
+
+/// A composable strategy expression. See the module docs for the
+/// grammar and DESIGN.md for the lowering rules.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StrategyExpr {
+    /// Data parallelism of the given degree.
+    Dp(usize),
+    /// Tensor parallelism of the given degree.
+    Tp(usize),
+    /// Pipeline parallelism of the given degree.
+    Pp(usize),
+    /// Expert parallelism (DeepSeek-style EP ⊆ DP: does not multiply
+    /// the device count).
+    Ep(usize),
+    /// Context parallelism of the given degree.
+    Cp(usize),
+    /// Sequence parallelism (piggybacks on the TP group).
+    Sp,
+    /// ZeRO-3-style fully sharded data parallelism.
+    Fsdp,
+    /// Task-level MPMD parallelism.
+    Mpmd,
+    /// Sequential composition: dimension sizes multiply, flags OR.
+    /// `Seq([])` is the identity strategy (all dims 1).
+    Seq(Vec<StrategyExpr>),
+    /// Nested composition `outer(inner)` — same normal form as
+    /// `Seq([outer, inner])`; kept in the surface syntax so terms read
+    /// the way strategies are spoken ("DP over TP8 boards").
+    Nest(Box<StrategyExpr>, Box<StrategyExpr>),
+    /// Constrain the sub-expression's devices to the named fleet pools
+    /// (comma-separated pool names, e.g. `"910c"` or `"910c,910b"`).
+    OnPool(String, Box<StrategyExpr>),
+}
+
+impl StrategyExpr {
+    /// Convenience constructor for [`StrategyExpr::Nest`].
+    pub fn nest(outer: StrategyExpr, inner: StrategyExpr) -> Self {
+        Self::Nest(Box::new(outer), Box::new(inner))
+    }
+
+    /// Convenience constructor for [`StrategyExpr::OnPool`].
+    pub fn on_pool(pools: &str, expr: StrategyExpr) -> Self {
+        Self::OnPool(pools.to_string(), Box::new(expr))
+    }
+
+    /// Syntactic rendering of the term (pre-normalization).
+    pub fn render(&self) -> String {
+        match self {
+            Self::Dp(n) => format!("Dp({n})"),
+            Self::Tp(n) => format!("Tp({n})"),
+            Self::Pp(n) => format!("Pp({n})"),
+            Self::Ep(n) => format!("Ep({n})"),
+            Self::Cp(n) => format!("Cp({n})"),
+            Self::Sp => "Sp".to_string(),
+            Self::Fsdp => "Fsdp".to_string(),
+            Self::Mpmd => "Mpmd".to_string(),
+            Self::Seq(xs) => {
+                let parts: Vec<String> = xs.iter().map(Self::render).collect();
+                format!("Seq[{}]", parts.join(", "))
+            }
+            Self::Nest(a, b) => format!("{}({})", a.render(), b.render()),
+            Self::OnPool(p, e) => format!("OnPool({p}, {})", e.render()),
+        }
+    }
+}
+
+/// The normal form of a well-formed expression: concrete dimension
+/// sizes plus the (possibly empty) pool-placement constraint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NormalForm {
+    pub strategy: ParallelStrategy,
+    /// Pool names the term is constrained to; empty = whole fleet
+    /// (or a bare topology).
+    pub pools: Vec<String>,
+}
+
+impl NormalForm {
+    /// Canonical label: equal normal forms render equally, so the
+    /// auto-tuner dedups candidate terms by this string.
+    pub fn describe(&self) -> String {
+        if self.pools.is_empty() {
+            self.strategy.describe()
+        } else {
+            format!("{} @{}", self.strategy.describe(), self.pools.join(","))
+        }
+    }
+}
+
+fn parse_pools(pattern: &str) -> Result<Vec<String>, String> {
+    let names: Vec<String> = pattern
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        return Err(format!("empty pool pattern {pattern:?}"));
+    }
+    Ok(names)
+}
+
+fn mul_dim(name: &str, a: usize, b: usize) -> Result<usize, String> {
+    a.checked_mul(b)
+        .ok_or_else(|| format!("{name} degree overflows usize ({a} x {b})"))
+}
+
+fn combine(a: NormalForm, b: NormalForm) -> Result<NormalForm, String> {
+    if !a.pools.is_empty() && !b.pools.is_empty() && a.pools != b.pools {
+        return Err(format!(
+            "conflicting pool placements {:?} and {:?} in one term",
+            a.pools, b.pools
+        ));
+    }
+    let pools = if a.pools.is_empty() { b.pools } else { a.pools };
+    let (sa, sb) = (a.strategy, b.strategy);
+    let strategy = ParallelStrategy {
+        dp: mul_dim("dp", sa.dp, sb.dp)?,
+        tp: mul_dim("tp", sa.tp, sb.tp)?,
+        pp: mul_dim("pp", sa.pp, sb.pp)?,
+        ep: mul_dim("ep", sa.ep, sb.ep)?,
+        cp: mul_dim("cp", sa.cp, sb.cp)?,
+        sp: sa.sp || sb.sp,
+        fsdp: sa.fsdp || sb.fsdp,
+        mpmd: sa.mpmd || sb.mpmd,
+    };
+    // the total device count must stay representable too
+    strategy
+        .dp
+        .checked_mul(strategy.tp)
+        .and_then(|x| x.checked_mul(strategy.pp))
+        .and_then(|x| x.checked_mul(strategy.cp))
+        .ok_or_else(|| "device count overflows usize".to_string())?;
+    Ok(NormalForm { strategy, pools })
+}
+
+fn sized(
+    name: &str,
+    n: usize,
+    set: impl FnOnce(&mut ParallelStrategy),
+) -> Result<NormalForm, String> {
+    if n == 0 {
+        return Err(format!("{name}(0) is malformed: dimension degrees are >= 1"));
+    }
+    let mut strategy = ParallelStrategy::default();
+    set(&mut strategy);
+    Ok(NormalForm {
+        strategy,
+        pools: Vec::new(),
+    })
+}
+
+/// Normalize an expression: fold every combinator down to one
+/// [`ParallelStrategy`] plus the pool constraint. Malformed terms
+/// (zero dims, overflow, empty/conflicting pool patterns) are `Err`.
+pub fn normalize(expr: &StrategyExpr) -> Result<NormalForm, String> {
+    match expr {
+        StrategyExpr::Dp(n) => sized("Dp", *n, |s| s.dp = *n),
+        StrategyExpr::Tp(n) => sized("Tp", *n, |s| s.tp = *n),
+        StrategyExpr::Pp(n) => sized("Pp", *n, |s| s.pp = *n),
+        StrategyExpr::Ep(n) => sized("Ep", *n, |s| s.ep = *n),
+        StrategyExpr::Cp(n) => sized("Cp", *n, |s| s.cp = *n),
+        StrategyExpr::Sp => sized("Sp", 1, |s| s.sp = true),
+        StrategyExpr::Fsdp => sized("Fsdp", 1, |s| s.fsdp = true),
+        StrategyExpr::Mpmd => sized("Mpmd", 1, |s| s.mpmd = true),
+        StrategyExpr::Seq(xs) => {
+            let mut acc = NormalForm {
+                strategy: ParallelStrategy::default(),
+                pools: Vec::new(),
+            };
+            for x in xs {
+                acc = combine(acc, normalize(x)?)?;
+            }
+            Ok(acc)
+        }
+        StrategyExpr::Nest(a, b) => combine(normalize(a)?, normalize(b)?),
+        StrategyExpr::OnPool(pattern, e) => {
+            let pools = parse_pools(pattern)?;
+            let inner = normalize(e)?;
+            if !inner.pools.is_empty() && inner.pools != pools {
+                return Err(format!(
+                    "conflicting pool placements {:?} and {:?} in one term",
+                    pools, inner.pools
+                ));
+            }
+            Ok(NormalForm {
+                strategy: inner.strategy,
+                pools,
+            })
+        }
+    }
+}
+
+/// A term lowered against a bare [`Topology`]: the normal form plus
+/// the rank grid and the pipeline schedule its `Pp` term runs.
+#[derive(Debug, Clone)]
+pub struct LoweredPlan {
+    pub strategy: ParallelStrategy,
+    pub grid: RankGrid,
+    pub schedule: PipelineSchedule,
+    pub microbatches: usize,
+}
+
+/// Lower a term onto a topology: normalize, check the strategy covers
+/// the cluster exactly (`try_assign_ranks`), and select the pipeline
+/// schedule for the `Pp` term. `OnPool` terms need a fleet — they are
+/// an `Err` here, pointing at [`lower_fleet`].
+pub fn lower(
+    expr: &StrategyExpr,
+    topo: &Topology,
+    cfg: &PlannerConfig,
+) -> Result<LoweredPlan, String> {
+    let nf = normalize(expr)?;
+    if !nf.pools.is_empty() {
+        return Err(format!(
+            "term is pool-constrained to {:?}; lower it over a Fleet with lower_fleet",
+            nf.pools
+        ));
+    }
+    let grid = try_assign_ranks(&nf.strategy, topo.device_count())?;
+    let schedule = PipelineSchedule::select(nf.strategy.pp, cfg.microbatches);
+    Ok(LoweredPlan {
+        strategy: nf.strategy,
+        grid,
+        schedule,
+        microbatches: cfg.microbatches,
+    })
+}
+
+/// Price a term over a topology through the planner's cost model:
+/// lower, then `planner::try_evaluate` the normal form. This is what
+/// makes every well-formed term exactly as priceable as a hand-built
+/// [`ParallelStrategy`].
+pub fn evaluate_expr(
+    model: &ModelDesc,
+    topo: &Topology,
+    expr: &StrategyExpr,
+    cfg: &PlannerConfig,
+) -> Result<PlanCandidate, String> {
+    let plan = lower(expr, topo, cfg)?;
+    try_evaluate(model, topo, &plan.strategy, cfg)
+}
+
+/// A term lowered against a [`Fleet`]: the normal form plus a concrete
+/// fleet-global device group, apportioned compute-proportionally over
+/// the placed pools.
+#[derive(Debug, Clone)]
+pub struct FleetLoweredPlan {
+    pub strategy: ParallelStrategy,
+    /// Indices of the pools the term was placed on.
+    pub pool_indices: Vec<usize>,
+    /// Devices taken from each placed pool (same order as
+    /// `pool_indices`; sums to the strategy's device count).
+    pub per_pool: Vec<usize>,
+    /// The fleet-global device group, ascending id order — so a term
+    /// spanning a whole pool (or fleet) yields *exactly* the group the
+    /// hand-written presets use, keeping their costs bit-identical.
+    pub group: Vec<DeviceId>,
+    pub schedule: PipelineSchedule,
+    pub microbatches: usize,
+}
+
+/// Lower a term onto a fleet. The strategy's device count is
+/// apportioned over the placed pools by compute weight (largest-
+/// remainder, capped by pool sizes — `try_proportional_partition`);
+/// within each pool the fastest devices are taken (ties to the lowest
+/// id) and the group is emitted in ascending global-id order. Unknown
+/// pool names and infeasible device counts are `Err`.
+pub fn lower_fleet(
+    expr: &StrategyExpr,
+    fleet: &Fleet,
+    cfg: &PlannerConfig,
+) -> Result<FleetLoweredPlan, String> {
+    let nf = normalize(expr)?;
+    let pool_indices: Vec<usize> = if nf.pools.is_empty() {
+        (0..fleet.pool_count()).collect()
+    } else {
+        let known: Vec<&str> = fleet.pools.iter().map(|p| p.name.as_str()).collect();
+        let mut idx = Vec::with_capacity(nf.pools.len());
+        for name in &nf.pools {
+            match known.iter().position(|k| k == name) {
+                Some(i) => {
+                    if idx.contains(&i) {
+                        return Err(format!("pool {name:?} named twice in placement"));
+                    }
+                    idx.push(i);
+                }
+                None => {
+                    return Err(format!(
+                        "unknown pool {name:?}; fleet pools are {known:?}"
+                    ))
+                }
+            }
+        }
+        idx
+    };
+
+    let n = nf.strategy.device_count();
+    let available: usize = pool_indices
+        .iter()
+        .map(|&p| fleet.pools[p].topo.device_count())
+        .sum();
+    // sub-pool groups are legitimate for elastic tenants (the fastest
+    // subset is taken), so unlike try_assign_ranks only
+    // over-subscription is rejected here
+    if n > available {
+        return Err(format!(
+            "strategy covers {n} devices but the placed pools have only {available}"
+        ));
+    }
+    // apportion over pools by aggregate compute (cube FLOPs), capped
+    // by each pool's device count
+    let weights: Vec<f64> = pool_indices
+        .iter()
+        .map(|&p| {
+            fleet.pools[p]
+                .topo
+                .devices
+                .iter()
+                .map(|d| d.spec.cube_flops)
+                .sum()
+        })
+        .collect();
+    let caps: Vec<usize> = pool_indices
+        .iter()
+        .map(|&p| fleet.pools[p].topo.device_count())
+        .collect();
+    let per_pool = try_proportional_partition(n, &weights, Some(&caps))?;
+
+    let mut group: Vec<DeviceId> = Vec::with_capacity(n);
+    for (k, &p) in pool_indices.iter().enumerate() {
+        let devices = fleet.pool_devices(p);
+        let take = per_pool[k];
+        // fastest `take` devices of the pool; ties break to the lowest
+        // global id, and the chosen subset is emitted in ascending id
+        // order so full-pool groups equal the preset groups exactly
+        let mut order: Vec<usize> = (0..devices.len()).collect();
+        order.sort_by(|&a, &b| {
+            fleet
+                .spec(devices[b])
+                .cube_flops
+                .total_cmp(&fleet.spec(devices[a]).cube_flops)
+                .then(a.cmp(&b))
+        });
+        let mut chosen: Vec<DeviceId> = order[..take].iter().map(|&i| devices[i]).collect();
+        chosen.sort();
+        group.extend(chosen);
+    }
+    let schedule = PipelineSchedule::select(nf.strategy.pp, cfg.microbatches);
+    Ok(FleetLoweredPlan {
+        strategy: nf.strategy,
+        pool_indices,
+        per_pool,
+        group,
+        schedule,
+        microbatches: cfg.microbatches,
+    })
+}
+
+/// Price a term's gradient-sync collective over a fleet: lower, then
+/// `collectives::cost_fleet` an all-reduce of `bytes` over the placed
+/// group — the fleet-side analogue of [`evaluate_expr`]'s comm terms.
+pub fn fleet_sync_time(
+    expr: &StrategyExpr,
+    fleet: &Fleet,
+    cfg: &PlannerConfig,
+    bytes: f64,
+) -> Result<f64, String> {
+    let plan = lower_fleet(expr, fleet, cfg)?;
+    if plan.group.len() <= 1 {
+        return Ok(0.0);
+    }
+    Ok(crate::collectives::cost_fleet(
+        fleet,
+        crate::graph::CollectiveKind::AllReduce,
+        bytes,
+        &plan.group,
+    )
+    .time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use StrategyExpr::*;
+
+    #[test]
+    fn atoms_normalize_to_single_dims() {
+        let nf = normalize(&Dp(8)).unwrap();
+        assert_eq!(nf.strategy.dp, 8);
+        assert_eq!(nf.strategy.device_count(), 8);
+        let nf = normalize(&Sp).unwrap();
+        assert!(nf.strategy.sp);
+        assert_eq!(nf.strategy.device_count(), 1);
+    }
+
+    #[test]
+    fn seq_and_nest_share_a_normal_form() {
+        let seq = normalize(&Seq(vec![Dp(4), Tp(8), Sp])).unwrap();
+        let nest = normalize(&StrategyExpr::nest(Dp(4), Seq(vec![Tp(8), Sp]))).unwrap();
+        assert_eq!(seq, nest);
+        assert_eq!(seq.strategy.dp, 4);
+        assert_eq!(seq.strategy.tp, 8);
+        assert!(seq.strategy.sp);
+        assert_eq!(seq.strategy.device_count(), 32);
+    }
+
+    #[test]
+    fn empty_seq_is_the_identity() {
+        let nf = normalize(&Seq(vec![])).unwrap();
+        assert_eq!(nf.strategy, ParallelStrategy::default());
+        // identity law: Seq([e, Seq([])]) == e
+        let e = Seq(vec![Tp(8), Pp(2)]);
+        let with_id = Seq(vec![e.clone(), Seq(vec![])]);
+        assert_eq!(normalize(&e).unwrap(), normalize(&with_id).unwrap());
+    }
+
+    #[test]
+    fn repeated_dims_multiply() {
+        let nf = normalize(&Seq(vec![Dp(2), Dp(3)])).unwrap();
+        assert_eq!(nf.strategy.dp, 6);
+    }
+
+    #[test]
+    fn zero_dims_and_overflow_are_errors_not_panics() {
+        assert!(normalize(&Dp(0)).is_err());
+        assert!(normalize(&Seq(vec![Tp(4), Cp(0)])).is_err());
+        let big = usize::MAX / 2;
+        assert!(normalize(&Seq(vec![Dp(big), Dp(3)])).is_err());
+        // overflow across dims (total device count) is caught too
+        assert!(normalize(&Seq(vec![Dp(big), Tp(3)])).is_err());
+    }
+
+    #[test]
+    fn pool_constraints_propagate_and_conflict() {
+        let nf = normalize(&StrategyExpr::on_pool("910c", Dp(32))).unwrap();
+        assert_eq!(nf.pools, vec!["910c".to_string()]);
+        let nf = normalize(&StrategyExpr::on_pool("910c, 910b", Dp(64))).unwrap();
+        assert_eq!(nf.pools, vec!["910c".to_string(), "910b".to_string()]);
+        // same constraint twice is fine
+        let same = StrategyExpr::on_pool("910c", StrategyExpr::on_pool("910c", Dp(8)));
+        assert!(normalize(&same).is_ok());
+        // conflicting constraints are malformed
+        let conflict = StrategyExpr::on_pool("910c", StrategyExpr::on_pool("910b", Dp(8)));
+        assert!(normalize(&conflict).is_err());
+        let split = Seq(vec![
+            StrategyExpr::on_pool("910c", Dp(2)),
+            StrategyExpr::on_pool("910b", Tp(2)),
+        ]);
+        assert!(normalize(&split).is_err());
+        assert!(normalize(&OnPool(" , ".to_string(), Box::new(Dp(2)))).is_err());
+    }
+
+    #[test]
+    fn lower_selects_pipeline_schedule_and_grid() {
+        let topo = Topology::tiny(); // 8 devices
+        let cfg = PlannerConfig::default(); // 16 microbatches
+        let plan = lower(&Seq(vec![Dp(2), Tp(2), Pp(2)]), &topo, &cfg).unwrap();
+        assert_eq!(plan.grid.tp, 2);
+        assert_eq!(plan.grid.dp, 2);
+        assert_eq!(plan.grid.pp, 2);
+        assert_eq!(plan.schedule, PipelineSchedule::OneFOneB);
+        let flat = lower(&Dp(8), &topo, &cfg).unwrap();
+        assert_eq!(flat.schedule, PipelineSchedule::Gpipe);
+        // non-covering terms error through try_assign_ranks
+        assert!(lower(&Dp(3), &topo, &cfg).is_err());
+        // pool constraints need a fleet
+        let err = lower(&StrategyExpr::on_pool("910c", Dp(8)), &topo, &cfg).unwrap_err();
+        assert!(err.contains("lower_fleet"), "err: {err}");
+    }
+
+    #[test]
+    fn evaluate_expr_matches_hand_built_strategy() {
+        let topo = Topology::tiny();
+        let cfg = PlannerConfig {
+            allow_offload: true,
+            ..Default::default()
+        };
+        let model = ModelDesc::tiny_moe();
+        let expr = Seq(vec![Dp(4), Tp(2), Sp]);
+        let c = evaluate_expr(&model, &topo, &expr, &cfg).unwrap();
+        let s = ParallelStrategy {
+            dp: 4,
+            tp: 2,
+            sp: true,
+            ..Default::default()
+        };
+        let direct = try_evaluate(&model, &topo, &s, &cfg).unwrap();
+        assert_eq!(c.step_time.to_bits(), direct.step_time.to_bits());
+    }
+
+    #[test]
+    fn fleet_lowering_full_fleet_matches_all_devices() {
+        let fleet = Fleet::mixed_generations();
+        let cfg = PlannerConfig::default();
+        let plan = lower_fleet(&Dp(64), &fleet, &cfg).unwrap();
+        assert_eq!(plan.group, fleet.all_devices());
+        assert_eq!(plan.per_pool, vec![32, 32]);
+    }
+
+    #[test]
+    fn fleet_lowering_single_pool_matches_pool_devices() {
+        let fleet = Fleet::mixed_generations();
+        let cfg = PlannerConfig::default();
+        let expr = StrategyExpr::on_pool("910b", Dp(32));
+        let plan = lower_fleet(&expr, &fleet, &cfg).unwrap();
+        assert_eq!(plan.group, fleet.pool_devices(1));
+    }
+
+    #[test]
+    fn fleet_lowering_prefers_fast_devices() {
+        // slow_rack derates rack 0 (ids 0..8); a 24-device term must
+        // take ids 8..32, in ascending order
+        let fleet = Fleet::slow_rack(0.5);
+        let cfg = PlannerConfig::default();
+        let plan = lower_fleet(&Dp(24), &fleet, &cfg).unwrap();
+        let expected: Vec<DeviceId> = (8..32).map(DeviceId).collect();
+        assert_eq!(plan.group, expected);
+    }
+
+    #[test]
+    fn fleet_lowering_rejects_unknown_pools_and_oversubscription() {
+        let fleet = Fleet::mixed_generations();
+        let cfg = PlannerConfig::default();
+        let unknown = StrategyExpr::on_pool("gb200", Dp(8));
+        let err = lower_fleet(&unknown, &fleet, &cfg).unwrap_err();
+        assert!(err.contains("910c"), "err should list pools: {err}");
+        assert!(lower_fleet(&Dp(65), &fleet, &cfg).is_err());
+        let too_big = StrategyExpr::on_pool("910c", Dp(33));
+        assert!(lower_fleet(&too_big, &fleet, &cfg).is_err());
+        let twice = StrategyExpr::on_pool("910c,910c", Dp(8));
+        assert!(lower_fleet(&twice, &fleet, &cfg).is_err());
+    }
+
+    #[test]
+    fn fleet_sync_time_prices_the_group() {
+        let fleet = Fleet::mixed_generations();
+        let cfg = PlannerConfig::default();
+        let one_pool = StrategyExpr::on_pool("910c", Dp(32));
+        let intra = fleet_sync_time(&one_pool, &fleet, &cfg, 1e9).unwrap();
+        let cross = fleet_sync_time(&Dp(64), &fleet, &cfg, 1e9).unwrap();
+        assert!(intra > 0.0);
+        assert!(cross > intra, "cross-pool {cross} vs intra {intra}");
+        assert_eq!(fleet_sync_time(&Dp(1), &fleet, &cfg, 1e9).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn render_and_describe_are_stable() {
+        let e = StrategyExpr::on_pool("910c", Seq(vec![Dp(4), Tp(8), Sp]));
+        assert_eq!(e.render(), "OnPool(910c, Seq[Dp(4), Tp(8), Sp])");
+        let nf = normalize(&e).unwrap();
+        assert_eq!(nf.describe(), "dp4 tp8 pp1 ep1 cp1 +sp @910c");
+    }
+}

@@ -45,16 +45,38 @@ pub fn memory_caps(fleet: &Fleet, group: &[DeviceId], bytes_per_item: f64) -> Ve
 /// - uniform weights reproduce count-based splitting (`total / n`
 ///   plus remainder to the lowest indices).
 ///
-/// Panics if the caps cannot hold `total` items at all.
+/// Panics if the caps cannot hold `total` items at all. Strategy-
+/// algebra lowering, which must turn infeasibility into `Err` rather
+/// than a panic, goes through [`try_proportional_partition`].
 pub fn proportional_partition(total: usize, weights: &[f64], caps: Option<&[usize]>) -> Vec<usize> {
+    match try_proportional_partition(total, weights, caps) {
+        Ok(sizes) => sizes,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Non-panicking [`proportional_partition`]: empty groups, mismatched
+/// cap lengths, and infeasible caps come back as `Err` (ISSUE 10 —
+/// malformed strategy expressions must not panic the normalizer).
+pub fn try_proportional_partition(
+    total: usize,
+    weights: &[f64],
+    caps: Option<&[usize]>,
+) -> Result<Vec<usize>, String> {
     let n = weights.len();
-    assert!(n > 0, "cannot partition over an empty group");
+    if n == 0 {
+        return Err("cannot partition over an empty group".to_string());
+    }
     if let Some(c) = caps {
-        assert_eq!(c.len(), n, "caps length must match weights");
-        assert!(
-            c.iter().sum::<usize>() >= total,
-            "memory caps cannot hold {total} items"
-        );
+        if c.len() != n {
+            return Err(format!(
+                "caps length {} must match weights length {n}",
+                c.len()
+            ));
+        }
+        if c.iter().sum::<usize>() < total {
+            return Err(format!("memory caps cannot hold {total} items"));
+        }
     }
     let wsum: f64 = weights.iter().sum();
     let cap_of = |i: usize| caps.map_or(usize::MAX, |c| c[i]);
@@ -90,9 +112,11 @@ pub fn proportional_partition(total: usize, weights: &[f64], caps: Option<&[usiz
                 placed = true;
             }
         }
-        assert!(placed, "memory caps cannot hold {total} items");
+        if !placed {
+            return Err(format!("memory caps cannot hold {total} items"));
+        }
     }
-    sizes
+    Ok(sizes)
 }
 
 /// Convenience: compute-proportional sizes for a fleet group with HBM
@@ -141,6 +165,15 @@ mod tests {
     #[should_panic(expected = "memory caps cannot hold")]
     fn infeasible_caps_panic() {
         proportional_partition(10, &[1.0, 1.0], Some(&[4, 4]));
+    }
+
+    #[test]
+    fn try_variant_errors_instead_of_panicking() {
+        assert!(try_proportional_partition(10, &[1.0, 1.0], Some(&[4, 4])).is_err());
+        assert!(try_proportional_partition(3, &[], None).is_err());
+        assert!(try_proportional_partition(3, &[1.0, 1.0], Some(&[3])).is_err());
+        let ok = try_proportional_partition(9, &[2.0, 1.0], None).unwrap();
+        assert_eq!(ok, proportional_partition(9, &[2.0, 1.0], None));
     }
 
     #[test]

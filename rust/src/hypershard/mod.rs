@@ -8,7 +8,14 @@
 //!   (Table 1).
 //! - [`planner`] — topology-aware automatic strategy search (Table 2),
 //!   turning "days of manual tuning" into a cost-model sweep.
+//! - [`algebra`] — composable strategy expressions (`Seq`/`Nest`/
+//!   `OnPool` over the Table 1 atoms) with a normalizer that lowers any
+//!   well-formed term to a priced plan (ISSUE 10).
+//! - [`autotune`] — generate → prune → parallel-simulate → refine
+//!   auto-search over algebra terms under a bounded budget (ISSUE 10).
 
+pub mod algebra;
+pub mod autotune;
 pub mod heterogeneous;
 pub mod layout;
 pub mod planner;
@@ -16,19 +23,28 @@ pub mod propagation;
 pub mod resharding;
 pub mod strategies;
 
+pub use algebra::{
+    evaluate_expr, fleet_sync_time, lower, lower_fleet, normalize, FleetLoweredPlan,
+    LoweredPlan, NormalForm, StrategyExpr,
+};
+pub use autotune::{
+    autotune, AutoTuneConfig, AutoTuneConfigBuilder, ElasticObjective, PlannerObjective,
+    StrategyObjective, TuneReport, TunedCandidate,
+};
 pub use heterogeneous::{
     compute_weights, memory_caps, partition_for_group, proportional_partition,
+    try_proportional_partition,
 };
 pub use layout::{DimSharding, Layout, LayoutError, MapDim, ShardSpec};
 pub use planner::{
     assign_ranks, best_plan, evaluate, explain, plan, try_assign_ranks, try_evaluate,
-    PlanCandidate, PlannerConfig, RankGrid,
+    PlanCandidate, PlannerConfig, PlannerConfigBuilder, RankGrid,
 };
 pub use propagation::{
     elementwise, matmul, moe_dispatch, reduce, replicated_spec, CommRequirement, Propagated,
 };
 pub use resharding::{
-    actor_weight_sync_time, plan_reshard, reshard_time, reshard_time_fleet, ReshardPlan,
-    ReshardStep,
+    actor_weight_sync_time, dp_shard_spec, plan_reshard, reshard_time, reshard_time_fleet,
+    ReshardPlan, ReshardStep,
 };
 pub use strategies::{dimensions_for, template_for, ParallelStrategy};

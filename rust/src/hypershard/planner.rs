@@ -61,6 +61,59 @@ impl Default for PlannerConfig {
     }
 }
 
+impl PlannerConfig {
+    /// Builder over the defaults (PR 7 `ClusterConfig::builder`
+    /// convention).
+    pub fn builder() -> PlannerConfigBuilder {
+        PlannerConfigBuilder {
+            cfg: Self::default(),
+        }
+    }
+}
+
+/// Builder returned by [`PlannerConfig::builder`]; each setter
+/// overrides one default, `build` hands the config back.
+#[derive(Debug, Clone)]
+pub struct PlannerConfigBuilder {
+    cfg: PlannerConfig,
+}
+
+impl PlannerConfigBuilder {
+    pub fn cube_efficiency(mut self, cube_efficiency: f64) -> Self {
+        self.cfg.cube_efficiency = cube_efficiency;
+        self
+    }
+
+    pub fn microbatches(mut self, microbatches: usize) -> Self {
+        self.cfg.microbatches = microbatches;
+        self
+    }
+
+    pub fn allow_offload(mut self, allow_offload: bool) -> Self {
+        self.cfg.allow_offload = allow_offload;
+        self
+    }
+
+    pub fn max_tp(mut self, max_tp: usize) -> Self {
+        self.cfg.max_tp = max_tp;
+        self
+    }
+
+    pub fn max_pp(mut self, max_pp: usize) -> Self {
+        self.cfg.max_pp = max_pp;
+        self
+    }
+
+    pub fn build(self) -> PlannerConfig {
+        assert!(
+            self.cfg.cube_efficiency > 0.0 && self.cfg.cube_efficiency <= 1.0,
+            "cube_efficiency must be in (0, 1]"
+        );
+        assert!(self.cfg.microbatches >= 1, "need at least one microbatch");
+        self.cfg
+    }
+}
+
 /// Assign devices to a (pp, dp, tp) grid with TP innermost so TP groups
 /// are contiguous ranks — i.e. land within a board whenever tp ≤
 /// dies_per_board. This *is* the topology awareness: the same strategy
@@ -394,6 +447,28 @@ mod tests {
         for c in plan(&ModelDesc::tiny_moe(), &topo, &cfg_offload()) {
             assert_eq!(c.strategy.device_count(), topo.device_count());
         }
+    }
+
+    #[test]
+    fn builder_overrides_defaults() {
+        let cfg = PlannerConfig::builder()
+            .cube_efficiency(0.5)
+            .microbatches(32)
+            .allow_offload(true)
+            .max_tp(16)
+            .max_pp(8)
+            .build();
+        assert_eq!(cfg.cube_efficiency, 0.5);
+        assert_eq!(cfg.microbatches, 32);
+        assert!(cfg.allow_offload);
+        assert_eq!(cfg.max_tp, 16);
+        assert_eq!(cfg.max_pp, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "cube_efficiency")]
+    fn builder_rejects_nonsense_efficiency() {
+        let _ = PlannerConfig::builder().cube_efficiency(0.0).build();
     }
 
     #[test]

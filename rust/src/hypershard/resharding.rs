@@ -99,6 +99,24 @@ pub fn plan_reshard(src: &ShardSpec, dst: &ShardSpec) -> ReshardPlan {
     plan
 }
 
+/// The pure-DP partitioning of a training state over `shards` devices.
+/// Axis names encode the shard count so two different counts compare
+/// as different axes — exactly the re-shard (all-to-all) case of
+/// [`plan_reshard`]. Shared by `trainer::elastic` (lease changes) and
+/// `hypershard::autotune` (pricing strategy transitions).
+pub fn dp_shard_spec(shards: usize) -> ShardSpec {
+    ShardSpec {
+        dims: vec![
+            DimSharding::Split(vec![format!("dp{shards}")]),
+            DimSharding::Replicated,
+        ],
+        shard_counts: vec![shards, 1],
+        replicated_axes: vec![],
+        num_shards: shards,
+        replication: 1,
+    }
+}
+
 /// Estimated wall time of a plan on a topology: each comm step costed
 /// over `group`, moving `tensor_bytes / num_src_shards` per rank.
 pub fn reshard_time(

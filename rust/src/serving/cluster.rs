@@ -111,7 +111,7 @@ use crate::serving::workload::{
     WorkloadConfig,
 };
 use crate::sim::sink::OpenIv;
-use crate::sim::{parallel_map, tags, ResourceId, TraceCollector, TraceMode};
+use crate::sim::{tags, ResourceId, TraceCollector, TraceMode};
 use crate::supernode::{DeviceId, Fleet, Topology};
 use crate::util::stats::Percentiles;
 use std::collections::{BTreeSet, VecDeque};
@@ -485,6 +485,15 @@ impl ClusterReport {
         push("prefix_demotions", self.prefix_demotions as f64);
         push("prefix_evictions", self.prefix_evictions as f64);
         kv
+    }
+}
+
+/// Route the inherent rows through the shared bench-emission trait
+/// (the inherent method stays for direct callers; inherent methods
+/// take precedence, so this delegation does not recurse).
+impl crate::util::summary::SummaryKv for ClusterReport {
+    fn summary_kv(&self) -> Vec<(String, f64)> {
+        ClusterReport::summary_kv(self)
     }
 }
 
@@ -2147,13 +2156,14 @@ pub fn run_cluster_scenario(sc: &ClusterScenario) -> ClusterReport {
 
 /// Sweep offered load over the cluster, fanned across `sim::sweep`
 /// workers. Results are in input order and bit-identical to a
-/// sequential loop.
+/// sequential loop. Thin wrapper over the `rate`
+/// [`SweepSpec`](crate::sim::SweepSpec) axis.
 pub fn cluster_rate_sweep(
     base: &ClusterScenario,
     rates: &[f64],
     slo: &Slo,
 ) -> Vec<OperatingPoint> {
-    parallel_map(rates, |&rate| {
+    crate::sim::SweepSpec::over("rate", rates.to_vec()).values(|&rate| {
         let mut sc = base.clone();
         sc.workload.arrival = sc.workload.arrival.with_mean_rate(rate);
         run_cluster_scenario(&sc).operating_point(rate, slo)
@@ -2666,12 +2676,14 @@ pub fn run_agentic_scenario(sc: &AgenticScenario) -> ClusterReport {
 
 /// Sweep offered request rate over the agentic scenario, fanned
 /// across `sim::sweep` workers (bit-identical to a sequential loop).
+/// Thin wrapper over the `rate` [`SweepSpec`](crate::sim::SweepSpec)
+/// axis.
 pub fn agentic_rate_sweep(
     base: &AgenticScenario,
     rates: &[f64],
     slo: &Slo,
 ) -> Vec<OperatingPoint> {
-    parallel_map(rates, |&rate| {
+    crate::sim::SweepSpec::over("rate", rates.to_vec()).values(|&rate| {
         let mut sc = base.clone();
         sc.workload = sc.workload.with_mean_rate(rate);
         run_agentic_scenario(&sc).operating_point(rate, slo)

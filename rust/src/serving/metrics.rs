@@ -23,7 +23,7 @@ use crate::hyperoffload::kvcache::KvCacheConfig;
 use crate::serving::batcher::{simulate, CostModel, ServingConfig};
 use crate::serving::memory::MemoryPolicy;
 use crate::serving::workload::{ArrivalProcess, LengthDist, WorkloadConfig};
-use crate::sim::{parallel_map, Trace, TraceMode};
+use crate::sim::{Trace, TraceMode};
 use crate::util::stats::Percentiles;
 
 /// One completed request with its timeline.
@@ -224,6 +224,15 @@ impl ServingReport {
     }
 }
 
+/// Route the inherent rows through the shared bench-emission trait
+/// (the inherent method stays for direct callers; inherent methods
+/// take precedence, so this delegation does not recurse).
+impl crate::util::summary::SummaryKv for ServingReport {
+    fn summary_kv(&self) -> Vec<(String, f64)> {
+        ServingReport::summary_kv(self)
+    }
+}
+
 /// One row of a rate sweep.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OperatingPoint {
@@ -259,9 +268,10 @@ pub fn run_scenario(sc: &Scenario) -> ServingReport {
 
 /// Sweep offered load: rescale the scenario's arrival process to each
 /// rate and simulate, fanned across `sim::sweep` workers. Results are
-/// in input order and bit-identical to a sequential loop.
+/// in input order and bit-identical to a sequential loop. Thin
+/// wrapper over the `rate` [`SweepSpec`](crate::sim::SweepSpec) axis.
 pub fn rate_sweep(base: &Scenario, rates: &[f64], slo: &Slo) -> Vec<OperatingPoint> {
-    parallel_map(rates, |&rate| {
+    crate::sim::SweepSpec::over("rate", rates.to_vec()).values(|&rate| {
         let mut sc = base.clone();
         sc.workload.arrival = sc.workload.arrival.with_mean_rate(rate);
         run_scenario(&sc).operating_point(rate, slo)

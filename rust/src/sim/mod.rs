@@ -11,7 +11,7 @@ pub mod trace;
 pub use engine::{Engine, Interval, ResourceId, SimResult, TaskId};
 pub use sink::{StreamAccum, Trace, TraceCollector, TraceMode, TraceSink};
 pub use stream::{Stream, StreamSet};
-pub use sweep::{parallel_map, parallel_map_indexed};
+pub use sweep::{parallel_map, parallel_map_indexed, SweepRow, SweepSpec};
 
 /// Task tags shared across modules (index into trace::TAG_NAMES).
 pub mod tags {

@@ -12,6 +12,11 @@
 //! to the sequential loop it replaces; `HP_SWEEP_THREADS=1` forces the
 //! sequential path (useful on contended CI machines where the bench
 //! harness itself must not be perturbed).
+//!
+//! [`SweepSpec`] (ISSUE 10) is the typed grid API the domain-specific
+//! sweep functions (`rate_sweep`, `chunk_sweep`, `microbatch_sweep`,
+//! ...) delegate to: one named axis of points, fanned through
+//! [`parallel_map`], returning labeled [`SweepRow`]s in input order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -106,6 +111,94 @@ pub fn labeled<'a, R: Send>(
         .collect()
 }
 
+/// One labeled row of a [`SweepSpec`] grid: the axis point, its
+/// rendered `"axis=point"` label, and the evaluated value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow<P, R> {
+    /// `"axis=point"` (or the explicit label of
+    /// [`SweepSpec::with_labels`]) — stable across runs, suitable for
+    /// report keys and bench JSON.
+    pub label: String,
+    pub point: P,
+    pub value: R,
+}
+
+/// A typed sweep grid: one named axis plus its points. Running the
+/// spec fans the evaluation closure across [`parallel_map`] workers,
+/// so rows come back in input order and bit-identical to the
+/// sequential loop — the single entry point behind every legacy
+/// `*_sweep` function (see the DESIGN.md migration table).
+#[derive(Debug, Clone)]
+pub struct SweepSpec<P> {
+    axis: &'static str,
+    points: Vec<P>,
+    labels: Vec<String>,
+}
+
+impl<P: Sync> SweepSpec<P> {
+    /// A grid over `points`, labeled `"axis=point"` via `Display`.
+    pub fn over(axis: &'static str, points: impl Into<Vec<P>>) -> Self
+    where
+        P: std::fmt::Display,
+    {
+        let points = points.into();
+        let labels = points.iter().map(|p| format!("{axis}={p}")).collect();
+        Self {
+            axis,
+            points,
+            labels,
+        }
+    }
+
+    /// A grid over explicitly labeled points — for axes whose points
+    /// have no canonical rendering (topologies, scenario presets).
+    pub fn with_labels(axis: &'static str, cases: Vec<(String, P)>) -> Self {
+        let mut points = Vec::with_capacity(cases.len());
+        let mut labels = Vec::with_capacity(cases.len());
+        for (label, p) in cases {
+            labels.push(format!("{axis}={label}"));
+            points.push(p);
+        }
+        Self {
+            axis,
+            points,
+            labels,
+        }
+    }
+
+    /// The axis name this grid sweeps.
+    pub fn axis(&self) -> &'static str {
+        self.axis
+    }
+
+    /// The points of the grid, in input order.
+    pub fn points(&self) -> &[P] {
+        &self.points
+    }
+
+    /// Evaluate `f` at every point in parallel; labeled rows in input
+    /// order, bit-identical regardless of `HP_SWEEP_THREADS`.
+    pub fn run<R: Send>(self, f: impl Fn(&P) -> R + Sync) -> Vec<SweepRow<P, R>> {
+        let values = parallel_map(&self.points, f);
+        self.labels
+            .into_iter()
+            .zip(self.points)
+            .zip(values)
+            .map(|((label, point), value)| SweepRow {
+                label,
+                point,
+                value,
+            })
+            .collect()
+    }
+
+    /// [`Self::run`], keeping only the values — the shape the thin
+    /// legacy wrappers return.
+    pub fn values<R: Send>(self, f: impl Fn(&P) -> R + Sync) -> Vec<R> {
+        parallel_map(&self.points, f)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +260,42 @@ mod tests {
         assert_eq!(worker_count(0), 1);
         assert_eq!(worker_count(1), 1);
         assert!(worker_count(64) >= 1);
+    }
+
+    #[test]
+    fn spec_rows_are_labeled_and_ordered() {
+        let rows = SweepSpec::over("rate", vec![10.0, 20.5]).run(|&r| r * 2.0);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].label, "rate=10");
+        assert_eq!(rows[1].label, "rate=20.5");
+        assert_eq!(rows[0].point, 10.0);
+        assert_eq!(rows[1].value, 41.0);
+    }
+
+    #[test]
+    fn spec_values_match_parallel_map() {
+        let pts: Vec<usize> = (0..50).collect();
+        let via_spec = SweepSpec::over("n", pts.clone()).values(|&n| n * n);
+        let direct = parallel_map(&pts, |&n| n * n);
+        assert_eq!(via_spec, direct);
+    }
+
+    #[test]
+    fn spec_explicit_labels() {
+        let rows = SweepSpec::with_labels(
+            "fabric",
+            vec![("supernode".to_string(), 1u32), ("legacy".to_string(), 2)],
+        )
+        .run(|&x| x + 1);
+        assert_eq!(rows[0].label, "fabric=supernode");
+        assert_eq!(rows[1].label, "fabric=legacy");
+        assert_eq!(rows[1].value, 3);
+    }
+
+    #[test]
+    fn spec_empty_grid_is_empty() {
+        let rows = SweepSpec::over("n", Vec::<usize>::new()).run(|&n| n);
+        assert!(rows.is_empty());
     }
 
     // HP_SWEEP_THREADS override behavior is covered by

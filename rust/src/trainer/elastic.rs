@@ -28,8 +28,10 @@ use crate::graph::CollectiveKind;
 use crate::hypermpmd::{
     schedule_dynamic, schedule_dynamic_weighted, schedule_uniform_replay, OmniModalWorkload,
 };
-use crate::hypershard::layout::{DimSharding, ShardSpec};
-use crate::hypershard::resharding::{plan_reshard, reshard_time, reshard_time_fleet};
+use crate::hypershard::layout::ShardSpec;
+use crate::hypershard::resharding::{
+    dp_shard_spec, plan_reshard, reshard_time, reshard_time_fleet,
+};
 use crate::supernode::{DeviceId, Fleet, Topology};
 
 /// The scaled-down training job the co-scheduled scenarios run: an
@@ -47,20 +49,10 @@ pub struct ElasticTrainJob {
 }
 
 /// The pure-DP partitioning of the training state over `shards`
-/// devices. Axis names encode the shard count so two different counts
-/// compare as different axes — exactly the re-shard (all-to-all) case
-/// of [`plan_reshard`].
+/// devices — now shared with the strategy auto-tuner via
+/// [`dp_shard_spec`] in `hypershard::resharding`.
 fn dp_spec(shards: usize) -> ShardSpec {
-    ShardSpec {
-        dims: vec![
-            DimSharding::Split(vec![format!("dp{shards}")]),
-            DimSharding::Replicated,
-        ],
-        shard_counts: vec![shards, 1],
-        replicated_axes: vec![],
-        num_shards: shards,
-        replication: 1,
-    }
+    dp_shard_spec(shards)
 }
 
 impl ElasticTrainJob {

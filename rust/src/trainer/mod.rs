@@ -13,5 +13,7 @@ pub use data::{bigram_entropy, Corpus};
 pub use driver::{render_curve, train, LossPoint, TrainOptions, TrainReport};
 pub use elastic::ElasticTrainJob;
 pub use moe::RoutingStats;
-pub use pipeline::{gpipe, gpipe_sweep, one_f_one_b_bubble, PipelineReport};
+pub use pipeline::{
+    gpipe, gpipe_sweep, one_f_one_b, one_f_one_b_bubble, PipelineReport, PipelineSchedule,
+};
 pub use scenarios::{OffloadTrainingScenario, TpOverheadScenario};

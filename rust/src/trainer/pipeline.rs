@@ -72,6 +72,87 @@ pub fn gpipe(fwd: &[f64], microbatches: usize) -> PipelineReport {
     }
 }
 
+/// Simulate 1F1B: after the warm-up ramp each stage alternates one
+/// forward with one backward, so at most `stages` microbatches are in
+/// flight (the memory win over GPipe) and the steady state carries no
+/// flush bubble. `fwd[s]` is stage s's forward time per microbatch;
+/// backward costs 2×.
+pub fn one_f_one_b(fwd: &[f64], microbatches: usize) -> PipelineReport {
+    let stages = fwd.len();
+    let mut engine = Engine::new();
+    let res: Vec<_> = (0..stages)
+        .map(|s| engine.add_resource(format!("stage{s}")))
+        .collect();
+    let mut fwd_ids: Vec<Vec<Option<TaskId>>> = vec![vec![None; stages]; microbatches];
+    let mut bwd_ids: Vec<Vec<Option<TaskId>>> = vec![vec![None; stages]; microbatches];
+    // per-stage issue order: the 1F1B interleave is enforced by chaining
+    // each stage's tasks in schedule order, not by the engine's tie-break
+    let mut last: Vec<Option<TaskId>> = vec![None; stages];
+    let mut issue = |engine: &mut Engine, s: usize, time: f64, mut deps: Vec<TaskId>| {
+        if let Some(d) = last[s] {
+            deps.push(d);
+        }
+        let t = engine.add_task(res[s], time, &deps, tags::COMPUTE);
+        last[s] = Some(t);
+        t
+    };
+    for s in 0..stages {
+        // warm-up: stage s runs (stages - s) forwards before its first
+        // backward, then steady-state 1F1B, then drains backwards
+        let warmup = (stages - s).min(microbatches);
+        for mb in 0..warmup {
+            let deps: Vec<TaskId> = if s > 0 {
+                vec![fwd_ids[mb][s - 1].expect("fwd issued stage-major")]
+            } else {
+                Vec::new()
+            };
+            fwd_ids[mb][s] = Some(issue(&mut engine, s, fwd[s], deps));
+        }
+    }
+    // steady state + drain, microbatch-major so cross-stage deps exist
+    for mb in 0..microbatches {
+        for s in (0..stages).rev() {
+            if bwd_ids[mb][s].is_some() {
+                continue;
+            }
+            // backward of mb at stage s needs: fwd of mb at s, bwd of
+            // mb at s+1
+            let mut deps = Vec::new();
+            if fwd_ids[mb][s].is_none() {
+                let d: Vec<TaskId> = if s > 0 {
+                    vec![fwd_ids[mb][s - 1].expect("fwd issued in order")]
+                } else {
+                    Vec::new()
+                };
+                fwd_ids[mb][s] = Some(issue(&mut engine, s, fwd[s], d));
+            }
+            deps.push(fwd_ids[mb][s].expect("just issued"));
+            if s < stages - 1 {
+                deps.push(bwd_ids[mb][s + 1].expect("bwd issued in reverse stage order"));
+            }
+            bwd_ids[mb][s] = Some(issue(&mut engine, s, fwd[s] * 2.0, deps));
+            // 1F1B: issuing mb's backward at stage s admits the next
+            // forward (mb + stages - s) at stage s — modeled by the
+            // per-stage chain: issue that forward right after
+            let next_fwd = mb + (stages - s);
+            if next_fwd < microbatches && fwd_ids[next_fwd][s].is_none() {
+                let d: Vec<TaskId> = if s > 0 {
+                    vec![fwd_ids[next_fwd][s - 1].expect("fwd issued in order")]
+                } else {
+                    Vec::new()
+                };
+                fwd_ids[next_fwd][s] = Some(issue(&mut engine, s, fwd[s], d));
+            }
+        }
+    }
+    let sim = engine.run();
+    let bubble = 1.0 - sim.mean_utilization(&res);
+    PipelineReport {
+        makespan: sim.makespan,
+        bubble_ratio: bubble,
+    }
+}
+
 /// Analytic 1F1B bubble fraction: (p−1)/(m+p−1).
 pub fn one_f_one_b_bubble(stages: usize, microbatches: usize) -> f64 {
     let p = stages as f64;
@@ -79,10 +160,46 @@ pub fn one_f_one_b_bubble(stages: usize, microbatches: usize) -> f64 {
     (p - 1.0) / (m + p - 1.0)
 }
 
-/// Simulate GPipe for several microbatch counts in parallel
-/// (`sim::sweep`); reports come back in input order.
+/// Which reference pipeline schedule a lowered strategy term runs
+/// (ISSUE 10: part of the algebra's normal form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineSchedule {
+    /// All forwards, flush, all backwards — the O(m) activation-memory
+    /// schedule.
+    Gpipe,
+    /// One-forward-one-backward steady state — O(p) activation memory,
+    /// same analytic bubble.
+    OneFOneB,
+}
+
+impl PipelineSchedule {
+    /// Schedule selection for a `Pp(stages)` term: 1F1B whenever the
+    /// steady state exists (`microbatches >= stages`, the activation-
+    /// memory win), GPipe for the short-ramp regime where 1F1B never
+    /// leaves warm-up.
+    pub fn select(stages: usize, microbatches: usize) -> Self {
+        if stages > 1 && microbatches >= stages {
+            Self::OneFOneB
+        } else {
+            Self::Gpipe
+        }
+    }
+
+    /// Simulate this schedule over balanced stages.
+    pub fn simulate(self, fwd: &[f64], microbatches: usize) -> PipelineReport {
+        match self {
+            Self::Gpipe => gpipe(fwd, microbatches),
+            Self::OneFOneB => one_f_one_b(fwd, microbatches),
+        }
+    }
+}
+
+/// Simulate GPipe for several microbatch counts in parallel; reports
+/// come back in input order. Thin wrapper over the `microbatches`
+/// [`SweepSpec`](crate::sim::SweepSpec) axis.
 pub fn gpipe_sweep(fwd: &[f64], microbatch_counts: &[usize]) -> Vec<PipelineReport> {
-    crate::sim::sweep::parallel_map(microbatch_counts, |&m| gpipe(fwd, m))
+    crate::sim::SweepSpec::over("microbatches", microbatch_counts.to_vec())
+        .values(|&m| gpipe(fwd, m))
 }
 
 #[cfg(test)]

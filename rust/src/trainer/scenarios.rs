@@ -117,10 +117,11 @@ impl OffloadTrainingScenario {
     /// depth (1 = synchronous swaps, ≥2 = pipelined HyperOffload),
     /// with the independent simulations fanned across `sim::sweep`
     /// workers. Returns `(lookahead, step_seconds)` in input order.
+    /// Thin wrapper over the `lookahead`
+    /// [`SweepSpec`](crate::sim::SweepSpec) axis.
     pub fn lookahead_sweep(&self, lookaheads: &[usize]) -> Vec<(usize, f64)> {
-        crate::sim::sweep::parallel_map(lookaheads, |&la| {
-            (la, self.step_time(la.max(1), TransferEngine::supernode()))
-        })
+        crate::sim::SweepSpec::over("lookahead", lookaheads.to_vec())
+            .values(|&la| (la, self.step_time(la.max(1), TransferEngine::supernode())))
     }
 }
 
@@ -160,11 +161,15 @@ impl TpOverheadScenario {
     }
 
     /// Measure the TP-comm fraction on several fabrics in parallel.
-    /// Returns `(label, fraction_of_step)` in input order.
+    /// Returns `(label, fraction_of_step)` in input order. Thin
+    /// wrapper over the `fabric` [`SweepSpec`](crate::sim::SweepSpec)
+    /// axis (explicit labels).
     pub fn fabric_sweep<'a>(&self, topos: &'a [(&'a str, Topology)]) -> Vec<(&'a str, f64)> {
-        crate::sim::sweep::parallel_map(topos, |(name, topo)| {
-            let (_, _, frac) = self.measure(topo);
-            (*name, frac)
+        let cases: Vec<(String, &'a (&'a str, Topology))> =
+            topos.iter().map(|t| (t.0.to_string(), t)).collect();
+        crate::sim::SweepSpec::with_labels("fabric", cases).values(|case| {
+            let (_, _, frac) = self.measure(&case.1);
+            (case.0, frac)
         })
     }
 

@@ -9,3 +9,4 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod summary;

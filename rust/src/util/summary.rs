@@ -1,0 +1,44 @@
+//! A shared `summary_kv` trait (ISSUE 10): every report type that
+//! exposes flat `(key, value)` metric rows — serving, cluster,
+//! co-scheduled training, auto-tuning — implements [`SummaryKv`], so
+//! benches and tools can route *any* report into the gated
+//! `BENCH_*.json` metrics object through one code path instead of
+//! per-type glue.
+
+use crate::util::json::{Json, JsonObj};
+
+/// Flat metric rows for bench JSON / regression gating.
+pub trait SummaryKv {
+    /// `(key, value)` rows; keys are stable identifiers, values are
+    /// finite floats (deterministic in virtual time).
+    fn summary_kv(&self) -> Vec<(String, f64)>;
+}
+
+/// Insert every `summary_kv` row of `report` into `metrics`, key
+/// prefixed with `prefix.` — the one-liner benches use to archive a
+/// report.
+pub fn insert_summary(metrics: &mut JsonObj, prefix: &str, report: &dyn SummaryKv) {
+    for (k, v) in report.summary_kv() {
+        metrics.insert(format!("{prefix}.{k}"), Json::from(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fake;
+    impl SummaryKv for Fake {
+        fn summary_kv(&self) -> Vec<(String, f64)> {
+            vec![("a".to_string(), 1.0), ("b".to_string(), 2.5)]
+        }
+    }
+
+    #[test]
+    fn insert_summary_prefixes_keys() {
+        let mut m = JsonObj::new();
+        insert_summary(&mut m, "x", &Fake);
+        assert_eq!(m.get("x.a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("x.b").unwrap().as_f64(), Some(2.5));
+    }
+}

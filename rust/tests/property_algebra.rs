@@ -1,0 +1,205 @@
+//! Property suite for the strategy algebra (ISSUE 10 satellite):
+//! under randomly generated well-formed expressions, normalization
+//! preserves the device count and the evaluated cost is bit-identical
+//! to pricing the hand-built [`ParallelStrategy`] directly; malformed
+//! terms (zero dims, degree overflow, unknown or over-subscribed
+//! pools) come back as `Err`, never a panic.
+
+use hyperparallel::config::ModelDesc;
+use hyperparallel::hypershard::{
+    evaluate_expr, lower_fleet, normalize, try_evaluate, PlannerConfig, StrategyExpr,
+};
+use hyperparallel::supernode::{DeviceSpec, Fabric, Fleet, Geometry, Topology};
+use hyperparallel::util::prop::{forall, Check, Gen};
+use hyperparallel::util::rng::Rng;
+
+/// A random well-formed expression: atoms with small degrees, `Seq`
+/// and `Nest` combinators up to the given depth, no `OnPool` (the
+/// pool-constrained terms get their own fleet-path cases below).
+fn random_expr(rng: &mut Rng, depth: usize) -> StrategyExpr {
+    use StrategyExpr::*;
+    let pick = if depth == 0 {
+        rng.range(0, 8)
+    } else {
+        rng.range(0, 10)
+    };
+    match pick {
+        0 => Dp(rng.range(1, 4)),
+        1 => Tp(rng.range(1, 4)),
+        2 => Pp(rng.range(1, 4)),
+        3 => Ep(rng.range(1, 4)),
+        4 => Cp(rng.range(1, 4)),
+        5 => Sp,
+        6 => Fsdp,
+        7 => Mpmd,
+        8 => {
+            let n = rng.range(0, 4);
+            Seq((0..n).map(|_| random_expr(rng, depth - 1)).collect())
+        }
+        _ => StrategyExpr::nest(random_expr(rng, depth - 1), random_expr(rng, depth - 1)),
+    }
+}
+
+/// Structural shrinker: children of a combinator, elements dropped
+/// from a `Seq`, degrees decremented toward 1 — every step is a
+/// strictly smaller term, so `forall`'s greedy shrink terminates.
+fn shrink_expr(e: &StrategyExpr) -> Vec<StrategyExpr> {
+    use StrategyExpr::*;
+    match e {
+        Dp(n) if *n > 1 => vec![Dp(n - 1)],
+        Tp(n) if *n > 1 => vec![Tp(n - 1)],
+        Pp(n) if *n > 1 => vec![Pp(n - 1)],
+        Ep(n) if *n > 1 => vec![Ep(n - 1)],
+        Cp(n) if *n > 1 => vec![Cp(n - 1)],
+        Seq(xs) => {
+            let mut out: Vec<StrategyExpr> = xs.clone();
+            for i in 0..xs.len() {
+                let mut fewer = xs.clone();
+                fewer.remove(i);
+                out.push(Seq(fewer));
+            }
+            out
+        }
+        Nest(a, b) => vec![(**a).clone(), (**b).clone()],
+        _ => Vec::new(),
+    }
+}
+
+fn expr_gen(depth: usize) -> Gen<StrategyExpr> {
+    Gen::new(move |r| random_expr(r, depth), shrink_expr)
+}
+
+/// The product a well-formed term must normalize to: sized atoms
+/// multiply (`Ep` is DeepSeek-style EP ⊆ DP and does not), flags and
+/// the empty `Seq` are the identity.
+fn expected_devices(e: &StrategyExpr) -> u128 {
+    use StrategyExpr::*;
+    match e {
+        Dp(n) | Tp(n) | Pp(n) | Cp(n) => *n as u128,
+        Ep(_) | Sp | Fsdp | Mpmd => 1,
+        Seq(xs) => xs.iter().map(expected_devices).product(),
+        Nest(a, b) => expected_devices(a) * expected_devices(b),
+        OnPool(_, inner) => expected_devices(inner),
+    }
+}
+
+#[test]
+fn normalization_preserves_device_count() {
+    forall("algebra-device-count", 400, expr_gen(3), |e| {
+        let nf = match normalize(e) {
+            Ok(nf) => nf,
+            Err(msg) => return Check::Fail(format!("well-formed term rejected: {msg}")),
+        };
+        let got = nf.strategy.device_count() as u128;
+        let want = expected_devices(e);
+        Check::from_bool(
+            got == want,
+            &format!("device_count {got} != atom product {want}"),
+        )
+    });
+}
+
+#[test]
+fn seq_and_nest_share_a_normal_form() {
+    let gen = Gen::new(
+        |r| (random_expr(r, 2), random_expr(r, 2)),
+        |(a, b)| {
+            let mut out = Vec::new();
+            for x in shrink_expr(a) {
+                out.push((x, b.clone()));
+            }
+            for y in shrink_expr(b) {
+                out.push((a.clone(), y));
+            }
+            out
+        },
+    );
+    forall("algebra-seq-nest-law", 400, gen, |(a, b)| {
+        let seq = normalize(&StrategyExpr::Seq(vec![a.clone(), b.clone()]));
+        let nest = normalize(&StrategyExpr::nest(a.clone(), b.clone()));
+        Check::from_bool(
+            seq == nest,
+            "Seq[a, b] and a(b) disagree on the normal form",
+        )
+    });
+}
+
+#[test]
+fn evaluated_cost_matches_hand_built_strategy() {
+    let model = ModelDesc::tiny_moe();
+    let cfg = PlannerConfig::default();
+    forall("algebra-cost-parity", 300, expr_gen(3), |e| {
+        let nf = normalize(e).expect("generator only emits well-formed terms");
+        let n = nf.strategy.device_count();
+        if n > 128 {
+            // keep the per-case device table small; the count property
+            // above already covers the large products
+            return Check::Pass;
+        }
+        // a topology sized exactly to the term, so the grid covers it
+        let topo = Topology::new(
+            Geometry {
+                racks: 1,
+                boards_per_rack: 1,
+                dies_per_board: n,
+            },
+            Fabric::supernode(),
+            DeviceSpec::ascend_910c(),
+        );
+        let via_expr = match evaluate_expr(&model, &topo, e, &cfg) {
+            Ok(c) => c,
+            Err(msg) => return Check::Fail(format!("expr failed to lower: {msg}")),
+        };
+        let direct = try_evaluate(&model, &topo, &nf.strategy, &cfg)
+            .expect("normal form covers the topology by construction");
+        let same = via_expr.step_time.to_bits() == direct.step_time.to_bits()
+            && via_expr.state_bytes_per_device == direct.state_bytes_per_device
+            && via_expr.fits_hbm == direct.fits_hbm;
+        Check::from_bool(same, "expr cost differs from the hand-built strategy cost")
+    });
+}
+
+#[test]
+fn zero_dims_error_anywhere_in_a_term() {
+    forall("algebra-zero-dim", 300, expr_gen(2), |e| {
+        // graft a malformed atom into an otherwise well-formed tree:
+        // the whole term must be rejected, not silently repaired
+        let poisoned = StrategyExpr::Seq(vec![e.clone(), StrategyExpr::Cp(0)]);
+        let nested = StrategyExpr::nest(StrategyExpr::Dp(0), e.clone());
+        Check::from_bool(
+            normalize(&poisoned).is_err() && normalize(&nested).is_err(),
+            "a zero-degree atom normalized instead of erroring",
+        )
+    });
+}
+
+#[test]
+fn malformed_terms_error_instead_of_panicking() {
+    // degree overflow: the product of two huge dims exceeds usize
+    let big = usize::MAX / 2;
+    let overflow = StrategyExpr::Seq(vec![StrategyExpr::Dp(big), StrategyExpr::Dp(4)]);
+    assert!(normalize(&overflow).is_err(), "dp overflow accepted");
+    // ...and a device-count overflow across *different* dims
+    let cross = StrategyExpr::Seq(vec![StrategyExpr::Dp(big), StrategyExpr::Tp(4)]);
+    assert!(normalize(&cross).is_err(), "device-count overflow accepted");
+
+    // empty pool pattern and conflicting pool placements
+    assert!(normalize(&StrategyExpr::on_pool("", StrategyExpr::Dp(2))).is_err());
+    let conflict = StrategyExpr::on_pool(
+        "910c",
+        StrategyExpr::on_pool("910b", StrategyExpr::Dp(2)),
+    );
+    assert!(normalize(&conflict).is_err(), "conflicting pools accepted");
+
+    let fleet = Fleet::mixed_generations();
+    let cfg = PlannerConfig::default();
+    // unknown pool name
+    let unknown = StrategyExpr::on_pool("no-such-pool", StrategyExpr::Dp(8));
+    assert!(lower_fleet(&unknown, &fleet, &cfg).is_err(), "unknown pool");
+    // over-subscribing one pool (32 devices per pool in this fleet)
+    let over = StrategyExpr::on_pool("910c", StrategyExpr::Dp(33));
+    assert!(lower_fleet(&over, &fleet, &cfg).is_err(), "oversubscribed");
+    // ...and the whole fleet (64 devices total)
+    let over_fleet = StrategyExpr::Dp(65);
+    assert!(lower_fleet(&over_fleet, &fleet, &cfg).is_err(), "over fleet");
+}

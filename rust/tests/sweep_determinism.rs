@@ -1,5 +1,5 @@
 //! Determinism regression (ISSUE 4 satellite, extended by ISSUEs 5,
-//! 6, and 9): `cluster_rate_sweep` over the crossover scenario AND
+//! 6, 9, and 10): `cluster_rate_sweep` over the crossover scenario AND
 //! the elastic-autoscale scenario AND `cosched_rate_sweep` over the
 //! co-scheduled scenario — fault-free, with the ISSUE 6 fault plan
 //! (link degrades, device fails, retry/hedge machinery) injected, and
@@ -13,9 +13,10 @@
 //! in glibc — an isolated binary is the only safe home.
 
 use hyperparallel::hypermpmd::coschedule::{
-    cosched_rate_sweep, cosched_scenario, fault_cosched_scenario, fleet_cosched_scenario,
-    CoschedMode, FleetScenario,
+    cosched_rate_sweep, cosched_scenario, cosched_train_job, fault_cosched_scenario,
+    fleet_cosched_scenario, CoschedMode, FleetScenario,
 };
+use hyperparallel::hypershard::{autotune, AutoTuneConfig, ElasticObjective};
 use hyperparallel::serving::{
     autoscale_scenario, autoscale_slo, cluster_rate_sweep, cluster_slo, crossover_scenario,
     ClusterFabric, ClusterMode, ClusterScenario, OperatingPoint, Slo, CLUSTER_RATES,
@@ -153,5 +154,27 @@ fn cluster_sweeps_bit_identical_across_worker_counts() {
         &cluster_slo(),
     );
     assert_bit_identical("streaming vs indexed sink", &indexed, &sseq);
+    // ...and the ISSUE 10 auto-tuner: the generate → prune → simulate
+    // → refine loop fans its predict and simulate waves through the
+    // same sweep workers, so its ranked report must come back
+    // bit-identical across worker counts too
+    let fleet = hyperparallel::supernode::Fleet::mixed_generations();
+    let obj = ElasticObjective::new(cosched_train_job(), fleet, true);
+    let tune_cfg = AutoTuneConfig::default();
+    std::env::set_var("HP_SWEEP_THREADS", "1");
+    let tseq = autotune(&obj, &tune_cfg);
+    std::env::set_var("HP_SWEEP_THREADS", "8");
+    let tpar = autotune(&obj, &tune_cfg);
+    assert_eq!(tseq.ranked.len(), tpar.ranked.len(), "autotune: ranked rows");
+    for (i, (a, b)) in tseq.ranked.iter().zip(&tpar.ranked).enumerate() {
+        let row = format!("autotune row {i}");
+        assert_eq!(a.label, b.label, "{row}: label");
+        assert_eq!(a.predicted.to_bits(), b.predicted.to_bits(), "{row}: predicted");
+        assert_eq!(a.simulated.to_bits(), b.simulated.to_bits(), "{row}: simulated");
+    }
+    assert_eq!(tseq.generated, tpar.generated, "autotune: generated");
+    assert_eq!(tseq.infeasible, tpar.infeasible, "autotune: infeasible");
+    assert_eq!(tseq.pruned, tpar.pruned, "autotune: pruned");
+    assert_eq!(tseq.simulated, tpar.simulated, "autotune: simulated");
     std::env::remove_var("HP_SWEEP_THREADS");
 }

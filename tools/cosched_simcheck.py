@@ -926,6 +926,252 @@ def _random_plan(seed, horizon, tiers):
     return dict(links=links, fails=fails), crashes
 
 
+# ---- ISSUE 10: strategy algebra + auto-tuner mirror --------------------
+#
+# Mirror of rust/src/hypershard/algebra.rs normalization and fleet
+# lowering (dimension sizes multiply across Seq/Nest, flags OR, OnPool
+# constrains placement; EP rides the DP dimension; malformed terms are
+# errors, never crashes) plus autotune.rs's generate ->
+# prune-by-predicted-cost -> simulate -> refine loop. The pruning
+# bound: a candidate is simulated only if predicted <=
+# round_best_predicted * prune_ratio, so with prune_ratio >= 1 the
+# best-predicted candidate always survives and the tuned lease can
+# never lose to a preset term in the seed set.
+
+DIMS = ("dp", "tp", "pp", "ep", "cp")
+EXPR_FLAGS = ("sp", "fsdp", "mpmd")
+
+
+def normalize_expr(expr):
+    """algebra::normalize: fold a term to (dims, flags, pools)."""
+    kind = expr[0]
+    dims = {d: 1 for d in DIMS}
+    if kind in DIMS:
+        if expr[1] == 0:
+            raise ValueError(f"{kind}(0) is malformed")
+        dims[kind] = expr[1]
+        return dims, set(), []
+    if kind in EXPR_FLAGS:
+        return dims, {kind}, []
+    if kind == "seq":
+        acc = (dims, set(), [])
+        for sub in expr[1]:
+            acc = _combine_nf(acc, normalize_expr(sub))
+        return acc
+    if kind == "nest":
+        return _combine_nf(normalize_expr(expr[1]), normalize_expr(expr[2]))
+    if kind == "pool":
+        names = [s.strip() for s in expr[1].split(",") if s.strip()]
+        if not names:
+            raise ValueError(f"empty pool pattern {expr[1]!r}")
+        dims, flags, inner = normalize_expr(expr[2])
+        if inner and inner != names:
+            raise ValueError("conflicting pool placements")
+        return dims, flags, names
+    raise ValueError(f"unknown term {kind!r}")
+
+
+def _combine_nf(a, b):
+    (da, fa, pa), (db, fb, pb) = a, b
+    if pa and pb and pa != pb:
+        raise ValueError("conflicting pool placements")
+    return ({d: da[d] * db[d] for d in DIMS}, fa | fb, pa or pb)
+
+
+def device_count_of(dims):
+    """ParallelStrategy::device_count: EP does not multiply."""
+    return dims["dp"] * dims["tp"] * dims["pp"] * dims["cp"]
+
+
+def label_of(expr):
+    """NormalForm::describe: the canonical dedup / tie-break label."""
+    dims, flags, pools = normalize_expr(expr)
+    base = " ".join(f"{d}{dims[d]}" for d in DIMS)
+    for f in EXPR_FLAGS:
+        if f in flags:
+            base += f" +{f}"
+    return base + (f" @{','.join(pools)}" if pools else "")
+
+
+def partition_mirror(total, weights, caps):
+    """heterogeneous::try_proportional_partition: largest-remainder
+    apportioning, capped per slot; remainder ties to the lowest index,
+    repeated passes while slots have headroom."""
+    n = len(weights)
+    if n == 0:
+        raise ValueError("cannot partition over an empty group")
+    if sum(caps) < total:
+        raise ValueError(f"memory caps cannot hold {total} items")
+    wsum = sum(weights)
+    quotas = [total * w / wsum for w in weights]
+    sizes = [min(int(math.floor(q)), c) for q, c in zip(quotas, caps)]
+    rest = total - sum(sizes)
+    order = sorted(range(n),
+                   key=lambda i: (-(quotas[i] - math.floor(quotas[i])), i))
+    while rest > 0:
+        placed = False
+        for i in order:
+            if rest == 0:
+                break
+            if sizes[i] < caps[i]:
+                sizes[i] += 1
+                rest -= 1
+                placed = True
+        if not placed:
+            raise ValueError(f"memory caps cannot hold {total} items")
+    return sizes
+
+
+def fleet_all_devices(fleet):
+    """Fleet::all_devices in ascending fleet-global order."""
+    return [(p * POOL_RACKS + r, d) for p in range(fleet["pools"])
+            for r in range(POOL_RACKS) for d in range(POOL_DIES)]
+
+
+def lower_fleet_expr(fleet, expr, pool_names):
+    """algebra::lower_fleet: apportion the term's device count over the
+    placed pools by aggregate compute, take the fastest devices of each
+    pool (ties to the lowest id), emit ascending fleet-global order —
+    so full-pool terms produce exactly the preset groups."""
+    dims, _flags, pools = normalize_expr(expr)
+    n = device_count_of(dims)
+    if pools:
+        idxs = []
+        for nm in pools:
+            if nm not in pool_names:
+                raise ValueError(f"unknown pool {nm!r}")
+            i = pool_names.index(nm)
+            if i in idxs:
+                raise ValueError(f"pool {nm!r} named twice")
+            idxs.append(i)
+    else:
+        idxs = list(range(fleet["pools"]))
+    pool_devs = [[(p * POOL_RACKS + r, d) for r in range(POOL_RACKS)
+                  for d in range(POOL_DIES)] for p in idxs]
+    available = sum(len(ds) for ds in pool_devs)
+    if n > available:
+        raise ValueError(f"placement needs {n} of {available} devices")
+    weights = [sum(fleet["speed"](d) for d in ds) for ds in pool_devs]
+    caps = [len(ds) for ds in pool_devs]
+    group = []
+    for ds, take in zip(pool_devs, partition_mirror(n, weights, caps)):
+        order = sorted(range(len(ds)),
+                       key=lambda i: (-fleet["speed"](ds[i]), i))
+        group.extend(sorted(ds[i] for i in order[:take]))
+    return group
+
+
+def make_elastic_objective(fleet, pool_names):
+    """autotune::ElasticObjective: OnPool Dp-ladder seeds, speed-sum
+    throughput + fleet all-reduce as the predictor, the aware
+    step_time_fleet as the simulator, dp +/- {1,2,4} neighborhoods."""
+    total_work = sum(t for t, _ in MODULES) * COSCHED_MICROBATCHES
+    wcache = {}
+
+    def capacity(pools):
+        return POOL_DEVS * (len(pools) if pools else fleet["pools"])
+
+    def wrap(pools, dp):
+        atom = ("dp", dp)
+        return ("pool", ",".join(pools), atom) if pools else atom
+
+    def seeds():
+        patterns = [[nm] for nm in pool_names]
+        if fleet["pools"] > 1:
+            patterns.append([])
+        out = []
+        for pools in patterns:
+            cap = capacity(pools)
+            sizes = []
+            p = 1
+            while p < cap:
+                sizes.append(p)
+                p *= 2
+            sizes.append(cap)
+            out.extend(wrap(pools, dp) for dp in sizes)
+        return out
+
+    def predict(expr):
+        g = lower_fleet_expr(fleet, expr, pool_names)
+        thr = sum(fleet_speeds(fleet, g))
+        sync = coll_cost_fleet(fleet, "all_reduce", TRAIN_JOB["grad"], g) \
+            if len(g) > 1 else 0.0
+        return total_work / thr + sync
+
+    def simulate(expr):
+        g = lower_fleet_expr(fleet, expr, pool_names)
+        key = tuple(fleet_speeds(fleet, g))
+        if key not in wcache:
+            wcache[key] = schedule_weighted_makespan(list(key))
+        return wcache[key] + coll_cost_fleet(fleet, "all_reduce",
+                                             TRAIN_JOB["grad"], g)
+
+    def neighbors(expr):
+        dims, _flags, pools = normalize_expr(expr)
+        cap = capacity(pools)
+        out = []
+        for delta in (-4, -2, -1, 1, 2, 4):
+            nxt = dims["dp"] + delta
+            if 1 <= nxt <= cap and nxt != dims["dp"]:
+                out.append(wrap(pools, nxt))
+        return out
+
+    return seeds, predict, simulate, neighbors
+
+
+def autotune_mirror(seeds, predict, simulate, neighbors,
+                    budget=256, prune_ratio=2.0, top_k=8, refine_rounds=2):
+    """autotune::autotune: the generate -> prune -> simulate -> refine
+    loop; asserts the pruning bound (the round's best-predicted
+    candidate is never pruned) on every round it runs."""
+    seen = set()
+    ranked = []                     # (simulated, label, expr, predicted)
+    simulated = generated = pruned = infeasible = 0
+    candidates = list(seeds())
+    for _ in range(refine_rounds + 1):
+        if not candidates or simulated >= budget:
+            break
+        generated += len(candidates)
+        fresh = []
+        for e in candidates:
+            try:
+                lb = label_of(e)
+            except ValueError:
+                infeasible += 1
+                continue
+            if lb not in seen:
+                seen.add(lb)
+                fresh.append((e, lb))
+        if not fresh:
+            break
+        scored = []
+        for e, lb in fresh:
+            try:
+                scored.append((e, lb, predict(e)))
+            except ValueError:
+                infeasible += 1
+        if not scored:
+            break
+        scored.sort(key=lambda x: (x[2], x[1]))
+        bound = scored[0][2] * prune_ratio
+        kept = [s for s in scored if s[2] <= bound]
+        pruned += len(scored) - len(kept)
+        room = budget - simulated
+        if len(kept) > room:
+            pruned += len(kept) - room
+            kept = kept[:room]
+        assert kept and kept[0][1] == scored[0][1], \
+            "pruning bound violated: best-predicted candidate dropped"
+        for e, lb, p in kept:
+            ranked.append((simulate(e), lb, e, p))
+        simulated += len(kept)
+        ranked.sort(key=lambda x: (x[0], x[1]))
+        candidates = [nb for _s, _l, e, _p in ranked[:top_k]
+                      for nb in neighbors(e)]
+    return ranked, dict(simulated=simulated, generated=generated,
+                        pruned=pruned, infeasible=infeasible)
+
+
 def describe(fabric, elastic, cfg=AUTOSCALE_CFG):
     cluster, trainer, broker = run_cosched(fabric, elastic, cfg)
     op = operating_point(cluster, cfg["mean_rate"], *cfg["slo"])
@@ -1089,3 +1335,93 @@ if __name__ == "__main__":
               f"steps {tr_c.steps_dl:>3} lost {tr_c.steps_lost}")
     assert saw_inter, "no seed in 0..16 drew an inter_node window"
     print("fleet chaos bounds hold (and the inter_node face landed)")
+
+    # ---- ISSUE 10: strategy algebra + auto-tuner ------------------------
+    print("\n=== strategy algebra + auto-tuner (lowering and pruning "
+          "bounds) ===")
+    # normalization: dims multiply across Seq/Nest, flags OR, EP rides DP
+    nf = normalize_expr(("seq", [("dp", 4), ("nest", ("tp", 2), ("pp", 2)),
+                                 ("ep", 8), ("sp",)]))
+    assert nf[0] == dict(dp=4, tp=2, pp=2, ep=8, cp=1)
+    assert nf[1] == {"sp"} and nf[2] == []
+    assert device_count_of(nf[0]) == 16, "EP must not multiply devices"
+    # Seq and Nest share a normal form (the algebra's core law)
+    assert normalize_expr(("seq", [("dp", 2), ("tp", 3)])) == \
+        normalize_expr(("nest", ("dp", 2), ("tp", 3)))
+    # malformed terms raise, never crash or mis-lower
+    for bad in [("dp", 0), ("seq", [("tp", 4), ("cp", 0)]),
+                ("pool", " , ", ("dp", 2)),
+                ("pool", "910c", ("pool", "910b", ("dp", 2)))]:
+        try:
+            normalize_expr(bad)
+            raise AssertionError(f"malformed term accepted: {bad!r}")
+        except ValueError:
+            pass
+
+    # lowering: full-capacity terms reproduce the preset groups exactly
+    mixed = fleet_mixed()
+    MIXED_POOLS = ["910c", "910b"]
+    assert lower_fleet_expr(mixed, ("dp", 2 * POOL_DEVS), MIXED_POOLS) \
+        == fleet_all_devices(mixed)
+    pool0 = lower_fleet_expr(mixed, ("pool", "910c", ("dp", POOL_DEVS)),
+                             MIXED_POOLS)
+    assert pool0 == [d for d in fleet_all_devices(mixed)
+                     if fleet_pool_of(d) == 0]
+    # whole-fleet sub-capacity terms apportion by aggregate compute:
+    # 910C pool (350e12) gets the larger share of a Dp(48) lease
+    per_pool = [sum(1 for d in lower_fleet_expr(mixed, ("dp", 48),
+                                                MIXED_POOLS)
+                    if fleet_pool_of(d) == p) for p in (0, 1)]
+    assert sum(per_pool) == 48 and per_pool[0] == POOL_DEVS, \
+        f"compute-weighted apportioning broke: {per_pool}"
+    # slow-rack: fastest-first selection leaves the derated rack for last
+    sr = fleet_slow_rack()
+    fast24 = lower_fleet_expr(sr, ("dp", 3 * POOL_DIES), ["throttled"])
+    assert all(d[0] != 0 for d in fast24), "derated rack leased too early"
+    for bad in [("pool", "910c", ("dp", POOL_DEVS + 1)),
+                ("dp", 2 * POOL_DEVS + 1),
+                ("pool", "no-such-pool", ("dp", 8)),
+                ("pool", "910c,910c", ("dp", 8))]:
+        try:
+            lower_fleet_expr(mixed, bad, MIXED_POOLS)
+            raise AssertionError(f"bad placement accepted: {bad!r}")
+        except ValueError:
+            pass
+
+    # auto-search: on each fleet the tuned lease must match or beat the
+    # hand presets (they sit in the seed ladder), inside the budget
+    print(f"{'scenario':<14} {'best lease':<28} {'tuned':>8} "
+          f"{'preset':>8} {'sims':>5}")
+    for name, fl, pool_names in [
+            ("cosched-pool", dict(pools=1, speed=lambda d: SPEED_910C),
+             ["pool0"]),
+            ("mixed", mixed, MIXED_POOLS),
+            ("slow-rack", sr, ["throttled"])]:
+        seeds, predict, simulate, neighbors = \
+            make_elastic_objective(fl, pool_names)
+        ranked, stats = autotune_mirror(seeds, predict, simulate,
+                                        neighbors)
+        assert stats["simulated"] <= 256, stats
+        assert stats["infeasible"] == 0, stats
+        best_t, best_label = ranked[0][0], ranked[0][1]
+        full = simulate(("dp", fl["pools"] * POOL_DEVS))
+        preset = full
+        if fl["pools"] > 1:
+            preset = min(preset, simulate(("pool", pool_names[0],
+                                           ("dp", POOL_DEVS))))
+        print(f"{name:<14} {best_label:<28} {best_t:8.4f} "
+              f"{preset:8.4f} {stats['simulated']:>5}")
+        assert best_t <= preset * (1.0 + 1e-9), \
+            f"{name}: tuned {best_t} lost to preset {preset}"
+        if name == "cosched-pool":
+            # homogeneous pool: nothing beats the full lease, bit-equal
+            assert best_t == full, f"{best_t} != {full}"
+        if name == "slow-rack":
+            # the naive-uniform replay of the full lease must lose
+            # strictly (the derated rack straggles every microbatch)
+            g = fleet_all_devices(sr)
+            naive = schedule_replay_makespan(fleet_speeds(sr, g)) \
+                + coll_cost_fleet(sr, "all_reduce", TRAIN_JOB["grad"], g)
+            assert best_t < naive, f"tuned {best_t} >= naive {naive}"
+    print("algebra + auto-tuner bounds hold (pruning kept every "
+          "best-predicted candidate)")
